@@ -1,0 +1,256 @@
+//! End-to-end online-learning driver (experiment E8 + the DESIGN.md
+//! mandated full-system validation).
+//!
+//! Trains a DeepFM CTR model online against a drifting synthetic feed
+//! through the complete WeiPS stack — exposure/feedback joining with
+//! delayed clicks, sharded pull/push, server-side FTRL (AOT Pallas kernel
+//! on the hot path), streaming synchronization to serving replicas,
+//! periodic checkpoints — and compares **fused online serving** (WeiPS)
+//! against a **frozen snapshot** baseline (the traditional offline-export
+//! deployment) on the same future request stream while the online model
+//! keeps learning. Logs the loss curve; results go in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example online_ctr_e2e [steps] [ids_per_field]
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use weips::config::{ClusterConfig, GatherMode, ModelKind};
+use weips::coordinator::{ClusterOpts, LocalCluster};
+use weips::joiner::{Exposure, Feedback, Joiner};
+use weips::monitor::StreamingAuc;
+use weips::sample::{Sample, Workload, WorkloadConfig};
+
+const DRIFT: f64 = 0.02; // rad/s of ground-truth rotation
+const CLICK_DELAY_MS: u64 = 300;
+const JOIN_WINDOW_MS: u64 = 2_000;
+const MS_PER_EXPOSURE: u64 = 4;
+
+/// Streams exposures through the joiner with realistically delayed clicks,
+/// producing labeled samples in event-time order.
+struct JoinedFeed {
+    feed: Workload,
+    joiner: Joiner,
+    pending_clicks: VecDeque<(u64, u64)>, // (deliver_at_ms, exposure_id)
+    ready: VecDeque<Sample>,
+    sim_ms: u64,
+    next_exposure: u64,
+}
+
+impl JoinedFeed {
+    fn new(cfg: WorkloadConfig) -> JoinedFeed {
+        JoinedFeed {
+            feed: Workload::new(cfg),
+            joiner: Joiner::new(JOIN_WINDOW_MS),
+            pending_clicks: VecDeque::new(),
+            ready: VecDeque::new(),
+            sim_ms: 0,
+            next_exposure: 0,
+        }
+    }
+
+    fn next_batch(&mut self, n: usize) -> Vec<Sample> {
+        while self.ready.len() < n {
+            self.sim_ms += MS_PER_EXPOSURE;
+            let s = self.feed.sample(self.sim_ms);
+            self.next_exposure += 1;
+            self.joiner.on_exposure(Exposure {
+                exposure_id: self.next_exposure,
+                ts_ms: self.sim_ms,
+                ids: s.ids.clone(),
+            });
+            if s.label > 0.5 {
+                self.pending_clicks
+                    .push_back((self.sim_ms + CLICK_DELAY_MS, self.next_exposure));
+            }
+            while let Some(&(at, exp)) = self.pending_clicks.front() {
+                if at > self.sim_ms {
+                    break;
+                }
+                self.pending_clicks.pop_front();
+                if let Some(joined) =
+                    self.joiner.on_feedback(Feedback { exposure_id: exp, ts_ms: at })
+                {
+                    self.ready.push_back(joined);
+                }
+            }
+            self.ready.extend(self.joiner.advance(self.sim_ms));
+        }
+        self.ready.drain(..n).collect()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // Exercise the AOT Pallas FTRL path end-to-end (the TPU-representative
+    // architecture). On CPU-interpret PJRT the scalar loop is faster below
+    // a full kernel block, so the default crossover would bypass it — see
+    // EXPERIMENTS.md §Perf for the measured tradeoff.
+    if std::env::var("WEIPS_BATCHED_MIN_ROWS").is_err() {
+        // Post-dedup a 256-sample batch leaves ~400-600 unique rows per
+        // shard; 256 keeps them on the kernel path.
+        std::env::set_var("WEIPS_BATCHED_MIN_ROWS", "256");
+    }
+    let args: Vec<String> = std::env::args().collect();
+    // Defaults chosen so the freshness comparison is meaningful: the
+    // training epoch stays under half a drift period (longer runs wrap the
+    // ground-truth phase back toward the frozen snapshot), and the id
+    // universe is small enough that per-id weights actually train.
+    let steps: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let ids_per_field: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(5_000);
+
+    let workload_cfg = WorkloadConfig {
+        ids_per_field,
+        drift_per_sec: DRIFT,
+        seed: 2026,
+        ..Default::default()
+    };
+    let cluster = Arc::new(LocalCluster::new(ClusterOpts {
+        cluster: ClusterConfig {
+            model_kind: ModelKind::DeepFm,
+            master_shards: 4,
+            slave_shards: 2,
+            slave_replicas: 2,
+            queue_partitions: 4,
+            gather_mode: GatherMode::Threshold(4096),
+            ckpt_interval_ms: 15_000,
+            ..Default::default()
+        },
+        workload: workload_cfg.clone(),
+        ..Default::default()
+    })?);
+    let spec = cluster.spec.clone();
+    println!(
+        "model: DeepFM F={} K={} H={} — id universe {} (≈{:.1}M sparse params at saturation) + {} dense",
+        spec.fields,
+        spec.dim,
+        spec.hidden,
+        ids_per_field * spec.fields as u64,
+        (ids_per_field * spec.fields as u64 * (1 + spec.dim as u64)) as f64 / 1e6,
+        spec.dense.iter().map(|d| d.len).sum::<usize>(),
+    );
+
+    let mut feed = JoinedFeed::new(WorkloadConfig { fields: spec.fields, ..workload_cfg.clone() });
+
+    println!("\n== phase 1: online training ({steps} steps) ==");
+    println!(
+        "{:>6} {:>9} {:>9} {:>9} {:>9} {:>7} {:>10}",
+        "step", "loss", "auc", "win_auc", "logloss", "ctr", "rows"
+    );
+    let mut losses = Vec::new();
+    let mut frozen_version = None;
+    for step in 0..steps {
+        let batch = feed.next_batch(spec.batch_train);
+        let out = cluster.trainer.train_batch(&batch)?;
+        losses.push(out.loss);
+        cluster.sync_tick()?;
+        if step % 10 == 0 {
+            cluster.control_tick()?;
+        }
+        // Freeze a snapshot 25% in: the offline-deployment baseline.
+        if step == steps / 4 && frozen_version.is_none() {
+            cluster.flush_sync()?;
+            frozen_version = Some(cluster.checkpoint()?);
+            println!("  [frozen-baseline snapshot taken at step {step}]");
+        }
+        if step % (steps / 10).max(1) == 0 {
+            let snap = cluster.monitor.snapshot();
+            let rows: usize = cluster.masters.iter().map(|m| m.total_rows()).sum();
+            let ctr: f32 =
+                batch.iter().map(|s| s.label).sum::<f32>() / batch.len() as f32;
+            println!(
+                "{:>6} {:>9.4} {:>9.4} {:>9.4} {:>9.4} {:>7.3} {:>10}",
+                step, out.loss, snap.auc, snap.window_auc, snap.logloss, ctr, rows
+            );
+        }
+    }
+    cluster.flush_sync()?;
+    let final_version = cluster.checkpoint()?;
+    let k = losses.len().min(20);
+    let first_avg: f32 = losses[..k].iter().sum::<f32>() / k as f32;
+    let last_avg: f32 = losses[losses.len() - k..].iter().sum::<f32>() / k as f32;
+    println!(
+        "loss curve: first-{k} avg {first_avg:.4} -> last-{k} avg {last_avg:.4} (frozen v{}, final v{final_version})",
+        frozen_version.unwrap()
+    );
+
+    // == phase 2: freshness comparison (E8) ==================================
+    // The frozen baseline serves the 25%-mark snapshot and never updates;
+    // the fused cluster keeps training online. Both are evaluated on the
+    // same future traffic as the ground truth keeps drifting.
+    println!("\n== phase 2: fused-online vs frozen-snapshot serving (drift {DRIFT} rad/s) ==");
+    let frozen = LocalCluster::new(ClusterOpts {
+        cluster: ClusterConfig {
+            model_kind: ModelKind::DeepFm,
+            master_shards: 4,
+            slave_shards: 2,
+            slave_replicas: 2,
+            queue_partitions: 4,
+            gather_mode: GatherMode::Realtime,
+            ..Default::default()
+        },
+        workload: workload_cfg.clone(),
+        ..Default::default()
+    })?;
+    for (i, m) in frozen.masters.iter().enumerate() {
+        let snap =
+            cluster.store.load_shard(&cluster.cfg.model_name, frozen_version.unwrap(), i as u32)?;
+        m.restore(&snap, None)?;
+        for shard in &frozen.slaves {
+            for replica in shard {
+                replica.full_sync_from_snapshot(&m.snapshot())?;
+            }
+        }
+    }
+
+    let mut fused_auc = StreamingAuc::new();
+    let mut frozen_auc = StreamingAuc::new();
+    println!("{:>6} {:>12} {:>12}", "chunk", "fused_auc", "frozen_auc");
+    for chunk in 0..40u64 {
+        // Evaluate both on the next slice of (future) traffic.
+        let eval: Vec<Sample> = feed.next_batch(64);
+        let reqs: Vec<Vec<u64>> = eval.iter().map(|s| s.ids.clone()).collect();
+        let fused_preds = cluster.predict(&reqs)?;
+        let frozen_preds = frozen.predict(&reqs)?;
+        for ((s, fp), zp) in eval.iter().zip(&fused_preds).zip(&frozen_preds) {
+            fused_auc.add(*fp, s.label);
+            frozen_auc.add(*zp, s.label);
+        }
+        // The fused system keeps learning on the stream it just served
+        // (including those very samples, via progressive validation).
+        for _ in 0..2 {
+            let batch = feed.next_batch(spec.batch_train);
+            cluster.trainer.train_batch(&batch)?;
+            cluster.sync_tick()?;
+        }
+        if chunk % 10 == 9 {
+            println!("{:>6} {:>12.4} {:>12.4}", chunk + 1, fused_auc.auc(), frozen_auc.auc());
+        }
+    }
+    println!(
+        "\n  fused online serving : auc = {:.4}\n  frozen snapshot      : auc = {:.4}\n  freshness gain       : {:+.4} auc over {} eval samples",
+        fused_auc.auc(),
+        frozen_auc.auc(),
+        fused_auc.auc() - frozen_auc.auc(),
+        fused_auc.count()
+    );
+
+    println!(
+        "\njoiner: {} exposures, {} positives joined, {} expired negative, {} orphans",
+        feed.joiner.stats.exposures,
+        feed.joiner.stats.joined_positive,
+        feed.joiner.stats.expired_negative,
+        feed.joiner.stats.orphan_feedback
+    );
+    let kernel_rows: u64 = cluster
+        .masters
+        .iter()
+        .map(|m| m.metrics.batched_kernel_rows.load(std::sync::atomic::Ordering::Relaxed))
+        .sum();
+    let scalar_rows: u64 = cluster
+        .masters
+        .iter()
+        .map(|m| m.metrics.scalar_rows.load(std::sync::atomic::Ordering::Relaxed))
+        .sum();
+    println!("ftrl path: {kernel_rows} rows via AOT Pallas kernel, {scalar_rows} scalar");
+    Ok(())
+}

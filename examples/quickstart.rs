@@ -1,0 +1,67 @@
+//! Quickstart: bring up a full in-process WeiPS cluster, train an FM CTR
+//! model on the synthetic feed, stream updates to the serving replicas,
+//! and issue predictions against the freshly synced slaves.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Requires `make artifacts` (the AOT-compiled model graphs) first.
+
+use weips::config::{ClusterConfig, GatherMode, ModelKind};
+use weips::coordinator::{ClusterOpts, LocalCluster};
+use weips::sample::WorkloadConfig;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Assemble the cluster: 4 master shards (training-facing), 2 slave
+    //    shards x 2 replicas (serving-facing), streaming sync between them.
+    let cluster = LocalCluster::new(ClusterOpts {
+        cluster: ClusterConfig {
+            model_kind: ModelKind::Fm,
+            master_shards: 4,
+            slave_shards: 2,
+            slave_replicas: 2,
+            queue_partitions: 4,
+            gather_mode: GatherMode::Threshold(2048),
+            ..Default::default()
+        },
+        workload: WorkloadConfig { ids_per_field: 5_000, seed: 42, ..Default::default() },
+        ..Default::default()
+    })?;
+
+    // 2. Online training: every step pulls weights from the masters, runs
+    //    the AOT-compiled train graph through PJRT, pushes gradients back,
+    //    and drives the sync pipeline toward the slaves.
+    println!("training 120 steps of {} samples...", cluster.spec.batch_train);
+    for step in 1..=120u32 {
+        let loss = cluster.train_step()?;
+        cluster.sync_tick()?;
+        if step % 20 == 0 {
+            let snap = cluster.monitor.snapshot();
+            println!(
+                "  step {step:>4}: loss={loss:.4}  streaming-auc={:.4}  logloss={:.4}",
+                snap.window_auc, snap.logloss
+            );
+        }
+    }
+
+    // 3. Make sure every update has reached the serving side, then take a
+    //    checkpoint (cold backup for the masters).
+    cluster.flush_sync()?;
+    let version = cluster.checkpoint()?;
+    println!("checkpoint v{version} written; sync lag = {}", cluster.sync_lag());
+
+    // 4. Serve: requests hit slave replicas through the load balancer and
+    //    run the AOT predict graph.
+    let requests = cluster.serving_requests(16);
+    let preds = cluster.predict(&requests)?;
+    println!("served {} predictions:", preds.len());
+    for (i, p) in preds.iter().take(8).enumerate() {
+        println!("  request {i}: ctr = {p:.4}");
+    }
+
+    let snap = cluster.monitor.snapshot();
+    println!(
+        "\ndone: {} samples trained, cumulative auc {:.4}, window auc {:.4}",
+        snap.samples, snap.auc, snap.window_auc
+    );
+    Ok(())
+}

@@ -1,0 +1,144 @@
+"""AOT pipeline: lower every L2/L1 module to HLO text + write the manifest.
+
+Usage (from the ``python/`` directory, as the Makefile does)::
+
+    python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<module>.hlo.txt`` per (model, stage) variant plus
+``manifest.json`` describing input/output shapes, dtypes and the model
+hyper-parameters — the Rust runtime (``rust/src/runtime``) loads executables
+and validates its buffers against this manifest.
+
+Interchange format is HLO *text*, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ftrl
+from .kernels.ref import ftrl_weight_ref
+
+# FTRL hyper-parameters baked into the AOT kernels. The Rust side reads
+# these from the manifest so both paths agree in structure (and to float
+# tolerance in value). Tuned for the synthetic CTR workload scale: a large
+# l1 would keep most of the small id universe in the dead zone for the
+# few-hundred-step experiment horizons.
+FTRL_HYPERS = {"alpha": 0.1, "beta": 1.0, "l1": 0.01, "l2": 1.0}
+
+_DTYPE_NAMES = {jnp.float32.dtype: "f32", jnp.int32.dtype: "s32", jnp.uint32.dtype: "u32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax-lowered computation to XLA HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_entry(s) -> dict:
+    return {"shape": list(s.shape), "dtype": _DTYPE_NAMES.get(s.dtype, str(s.dtype))}
+
+
+def lower_module(fn, arg_specs):
+    """Lower ``fn(*arg_specs)``; return (hlo_text, input_meta, output_meta)."""
+    lowered = jax.jit(fn).lower(*arg_specs)
+    out_shapes = jax.eval_shape(fn, *arg_specs)
+    # Normalize: functions return tuples; eval_shape mirrors that.
+    if not isinstance(out_shapes, (tuple, list)):
+        out_shapes = (out_shapes,)
+    inputs = [_shape_entry(s) for s in arg_specs]
+    outputs = [_shape_entry(s) for s in jax.tree_util.tree_leaves(out_shapes)]
+    return to_hlo_text(lowered), inputs, outputs
+
+
+def ftrl_modules(block_rows, dims):
+    """Standalone optimizer/transform modules applied by the master/slave.
+
+    ``ftrl_update_d{D}``: (g, z, n) -> (z', n', w')   [master push path]
+    ``ftrl_weight_d{D}``: (z, n) -> (w,)              [slave transform path]
+    """
+    f32 = jnp.float32
+    mods = {}
+    for d in dims:
+        spec = jax.ShapeDtypeStruct((block_rows, d), f32)
+
+        def upd(g, z, n, _d=d):
+            return ftrl.ftrl_update(g, z, n, **FTRL_HYPERS)
+
+        def wgt(z, n, _d=d):
+            return (ftrl_weight_ref(z, n, **FTRL_HYPERS),)
+
+        mods[f"ftrl_update_d{d}"] = (upd, [spec, spec, spec])
+        mods[f"ftrl_weight_d{d}"] = (wgt, [spec, spec])
+    return mods
+
+
+def build(out_dir, batch_train, batch_predict, fields, dim, hidden, block_rows):
+    os.makedirs(out_dir, exist_ok=True)
+    modules = {}
+    modules.update(M.model_specs(batch_train, batch_predict, fields, dim, hidden))
+    modules.update(ftrl_modules(block_rows, dims=sorted({1, dim})))
+
+    manifest = {
+        "version": 1,
+        "config": {
+            "batch_train": batch_train,
+            "batch_predict": batch_predict,
+            "fields": fields,
+            "dim": dim,
+            "hidden": hidden,
+            "ftrl_block_rows": block_rows,
+            "ftrl": FTRL_HYPERS,
+        },
+        "modules": {},
+    }
+
+    for name, (fn, specs) in sorted(modules.items()):
+        hlo, inputs, outputs = lower_module(fn, specs)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(hlo)
+        manifest["modules"][name] = {"path": path, "inputs": inputs, "outputs": outputs}
+        print(f"  lowered {name}: {len(hlo)} chars, {len(inputs)} in / {len(outputs)} out")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(modules)} modules + manifest to {out_dir}")
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--batch-train", type=int, default=int(os.environ.get("WEIPS_BATCH_TRAIN", 256)))
+    p.add_argument("--batch-predict", type=int, default=int(os.environ.get("WEIPS_BATCH_PREDICT", 16)))
+    p.add_argument("--fields", type=int, default=int(os.environ.get("WEIPS_FIELDS", 16)))
+    p.add_argument("--dim", type=int, default=int(os.environ.get("WEIPS_DIM", 8)))
+    p.add_argument("--hidden", type=int, default=int(os.environ.get("WEIPS_HIDDEN", 64)))
+    p.add_argument("--ftrl-block-rows", type=int, default=int(os.environ.get("WEIPS_FTRL_BLOCK", 8192)))
+    args = p.parse_args()
+    build(
+        args.out_dir,
+        args.batch_train,
+        args.batch_predict,
+        args.fields,
+        args.dim,
+        args.hidden,
+        args.ftrl_block_rows,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""L1: Pallas kernels for the WeiPS compute hot-spots + pure-jnp oracles."""
+
+from .fm import fm_interaction
+from .ftrl import ftrl_update
+
+__all__ = ["fm_interaction", "ftrl_update"]

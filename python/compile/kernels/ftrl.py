@@ -1,0 +1,109 @@
+"""Pallas kernel: batched FTRL-proximal update (the master-server hot spot).
+
+WeiPS applies the optimizer on the server (§2.1, §4.1.2): every trainer
+push lands a gradient block on a master shard which must update the FTRL
+accumulators (z, n) and derive the serving weight w for the block of
+touched ids. At production push rates this elementwise 10-op update over
+(ids x dim) blocks dominates master CPU, so it is implemented as the L1
+Pallas kernel and AOT-lowered into the HLO module the Rust master executes.
+
+TPU shaping (DESIGN.md §Hardware-Adaptation): the (N, D) block is tiled by
+``BlockSpec`` into VMEM-resident (BLOCK_N, D) tiles — D is padded Rust-side
+to a lane multiple for the wide tables — and the update is pure VPU
+elementwise work (no MXU), so the roofline is HBM bandwidth: 4 streams in
+(g, z, n) + 3 out (z, n, w) of 4 bytes each. On CPU we lower with
+``interpret=True`` (a real TPU lowering emits a Mosaic custom-call the CPU
+PJRT plugin cannot execute).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per VMEM tile. At D=8 fp32 this is 3 x 2048 x 8 x 4 B = 192 KiB of
+# input tiles + 3 output tiles => ~384 KiB << 16 MiB VMEM, leaving room for
+# double-buffering the HBM->VMEM pipeline.
+BLOCK_N = 2048
+
+
+def _ftrl_kernel(g_ref, z_ref, n_ref, zo_ref, no_ref, wo_ref, *, alpha, beta, l1, l2):
+    """Per-tile FTRL-proximal update (runs once per grid step)."""
+    g = g_ref[...]
+    z = z_ref[...]
+    n = n_ref[...]
+
+    sqrt_n = jnp.sqrt(n)
+    denom_old = (beta + sqrt_n) / alpha + l2
+    w_old = jnp.where(
+        jnp.abs(z) <= l1, jnp.zeros_like(z), -(z - jnp.sign(z) * l1) / denom_old
+    )
+
+    g2 = g * g
+    n_new = n + g2
+    sqrt_n_new = jnp.sqrt(n_new)
+    sigma = (sqrt_n_new - sqrt_n) / alpha
+    z_new = z + g - sigma * w_old
+
+    denom_new = (beta + sqrt_n_new) / alpha + l2
+    w_new = jnp.where(
+        jnp.abs(z_new) <= l1,
+        jnp.zeros_like(z_new),
+        -(z_new - jnp.sign(z_new) * l1) / denom_new,
+    )
+
+    zo_ref[...] = z_new
+    no_ref[...] = n_new
+    wo_ref[...] = w_new
+
+
+def ftrl_update(g, z, n, alpha=0.05, beta=1.0, l1=1.0, l2=1.0, block_n=BLOCK_N):
+    """Batched FTRL update via Pallas.
+
+    Args:
+      g, z, n: (N, D) float32 blocks (gradient, z-, n- accumulators).
+      alpha, beta, l1, l2: FTRL hyper-parameters (static).
+      block_n: rows per VMEM tile; N is padded to a multiple internally.
+
+    Returns:
+      (z_new, n_new, w_new), each (N, D) float32.
+    """
+    g = jnp.asarray(g, jnp.float32)
+    z = jnp.asarray(z, jnp.float32)
+    n = jnp.asarray(n, jnp.float32)
+    assert g.shape == z.shape == n.shape and g.ndim == 2, (g.shape, z.shape, n.shape)
+    n_rows, dim = g.shape
+
+    bn = min(block_n, max(n_rows, 1))
+    pad = (-n_rows) % bn if bn else 0
+    if pad:
+        g = jnp.pad(g, ((0, pad), (0, 0)))
+        z = jnp.pad(z, ((0, pad), (0, 0)))
+        # Pad n with 1.0 so padded lanes have a well-defined sqrt/denominator.
+        n = jnp.pad(n, ((0, pad), (0, 0)), constant_values=1.0)
+    padded_rows = n_rows + pad
+
+    kernel = functools.partial(_ftrl_kernel, alpha=alpha, beta=beta, l1=l1, l2=l2)
+    spec = pl.BlockSpec((bn, dim), lambda i: (i, 0))
+    out_shape = jax.ShapeDtypeStruct((padded_rows, dim), jnp.float32)
+    z_new, n_new, w_new = pl.pallas_call(
+        kernel,
+        grid=(padded_rows // bn,),
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[out_shape, out_shape, out_shape],
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(g, z, n)
+    if pad:
+        z_new = z_new[:n_rows]
+        n_new = n_new[:n_rows]
+        w_new = w_new[:n_rows]
+    return z_new, n_new, w_new
+
+
+def vmem_bytes(block_n=BLOCK_N, dim=8, dtype_bytes=4):
+    """Static VMEM footprint estimate for one grid step (6 tiles)."""
+    return 6 * block_n * dim * dtype_bytes

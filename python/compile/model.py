@@ -1,0 +1,185 @@
+"""L2: JAX model definitions (forward / loss / grads) for the WeiPS workers.
+
+The models are the CTR family the paper names (§4.1.2): LR-FTRL, FM-FTRL
+and a DeepFM-style DNN. Crucially for a parameter server, the *embedding
+lookup is not part of the graph*: the Rust trainer pulls the rows for the
+ids in the batch from the master shards and feeds the already-gathered
+per-field matrices as graph inputs; the graph returns gradients w.r.t.
+those gathered inputs and Rust scatter-adds them back into push requests.
+This keeps every AOT module shape-static.
+
+``train_step`` outputs follow the paper's progressive-validation design
+(§4.3.1): the returned predictions are computed from the *pre-update*
+parameters — they are the model-metrics monitoring signal — and the same
+samples then produce the gradients, so no sample is lost to evaluation.
+
+All public functions are pure and jit-lowerable; ``aot.py`` lowers each
+(model, batch) variant once to HLO text.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fm_interaction
+
+
+def _sigmoid(x):
+    return jax.nn.sigmoid(x)
+
+
+def _bce_loss(logit, label):
+    """Mean binary cross-entropy from logits (numerically stable).
+
+    ``softplus(x) - x*y``: softplus carries a smooth custom JVP, so the
+    gradient is exactly ``sigmoid(x) - y`` everywhere (a hand-rolled
+    ``max(x,0)+log1p(exp(-|x|))`` form has degenerate subgradients at
+    ``x == 0``, which a zero-initialized sparse model hits on every new id).
+    """
+    return jnp.mean(jax.nn.softplus(logit) - logit * label)
+
+
+# ---------------------------------------------------------------------------
+# LR: logit = sum_f w_f + b
+# ---------------------------------------------------------------------------
+
+def lr_forward(w, b):
+    """LR logit from gathered per-field weights.
+
+    Args:
+      w: (B, F) gathered weights for the batch's ids.
+      b: (1,) dense bias.
+    Returns:
+      (B,) logits.
+    """
+    return jnp.sum(w, axis=1) + b[0]
+
+
+def lr_predict(w, b):
+    """Serving graph: (B,) CTR probabilities."""
+    return (_sigmoid(lr_forward(w, b)),)
+
+
+def lr_train_step(w, b, label):
+    """Training graph.
+
+    Returns:
+      pred:   (B,) pre-update probabilities (progressive validation).
+      loss:   () mean BCE.
+      grad_w: (B, F) gradient w.r.t. gathered weights.
+      grad_b: (1,) gradient w.r.t. bias.
+    """
+    def loss_fn(w_, b_):
+        return _bce_loss(lr_forward(w_, b_), label)
+
+    pred = _sigmoid(lr_forward(w, b))
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1))(w, b)
+    return pred, loss, grads[0], grads[1]
+
+
+# ---------------------------------------------------------------------------
+# FM: logit = sum_f w_f + b + 0.5 sum_k((sum_f v)^2 - sum_f v^2)
+# ---------------------------------------------------------------------------
+
+def fm_forward(w, v, b):
+    """FM logit from gathered first-order weights and factors.
+
+    Args:
+      w: (B, F) first-order weights.
+      v: (B, F, K) factors.
+      b: (1,) bias.
+    """
+    return jnp.sum(w, axis=1) + b[0] + fm_interaction(v)
+
+
+def fm_predict(w, v, b):
+    """Serving graph: (B,) CTR probabilities."""
+    return (_sigmoid(fm_forward(w, v, b)),)
+
+
+def fm_train_step(w, v, b, label):
+    """Training graph. Returns (pred, loss, grad_w, grad_v, grad_b)."""
+
+    def loss_fn(w_, v_, b_):
+        return _bce_loss(fm_forward(w_, v_, b_), label)
+
+    pred = _sigmoid(fm_forward(w, v, b))
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1, 2))(w, v, b)
+    return pred, loss, grads[0], grads[1], grads[2]
+
+
+# ---------------------------------------------------------------------------
+# DeepFM: FM + two-layer MLP tower over the flattened factors.
+# Dense tower parameters live in the PS dense table and are graph inputs.
+# ---------------------------------------------------------------------------
+
+def deepfm_forward(w, v, b, w1, b1, w2, b2):
+    """DeepFM logit.
+
+    Args:
+      w:  (B, F) first-order weights.
+      v:  (B, F, K) factors (shared between FM term and deep tower).
+      b:  (1,) bias.
+      w1: (F*K, H) tower layer-1 weights.   b1: (H,)
+      w2: (H, 1)  tower layer-2 weights.    b2: (1,)
+    """
+    bsz, f, k = v.shape
+    fm_term = jnp.sum(w, axis=1) + b[0] + fm_interaction(v)
+    h = jnp.maximum(v.reshape(bsz, f * k) @ w1 + b1, 0.0)  # ReLU
+    deep_term = (h @ w2)[:, 0] + b2[0]
+    return fm_term + deep_term
+
+
+def deepfm_predict(w, v, b, w1, b1, w2, b2):
+    """Serving graph: (B,) CTR probabilities."""
+    return (_sigmoid(deepfm_forward(w, v, b, w1, b1, w2, b2)),)
+
+
+def deepfm_train_step(w, v, b, w1, b1, w2, b2, label):
+    """Training graph.
+
+    Returns (pred, loss, grad_w, grad_v, grad_b, grad_w1, grad_b1,
+    grad_w2, grad_b2).
+    """
+
+    def loss_fn(*params):
+        return _bce_loss(deepfm_forward(*params), label)
+
+    pred = _sigmoid(deepfm_forward(w, v, b, w1, b1, w2, b2))
+    loss, grads = jax.value_and_grad(loss_fn, argnums=tuple(range(7)))(
+        w, v, b, w1, b1, w2, b2
+    )
+    return (pred, loss) + tuple(grads)
+
+
+# ---------------------------------------------------------------------------
+# Registry used by aot.py and the tests.
+# ---------------------------------------------------------------------------
+
+def model_specs(batch_train, batch_predict, fields, dim, hidden):
+    """Describe every AOT module variant: name -> (fn, input shapes).
+
+    Shapes use f32 unless noted. The Rust runtime reads the same manifest
+    (artifacts/manifest.json) to know what to feed each executable.
+    """
+    f32 = jnp.float32
+    bt, bp, f, k, h = batch_train, batch_predict, fields, dim, hidden
+
+    def s(*shape):
+        return jax.ShapeDtypeStruct(shape, f32)
+
+    return {
+        "lr_train": (lr_train_step, [s(bt, f), s(1), s(bt)]),
+        "lr_predict": (lr_predict, [s(bp, f), s(1)]),
+        "fm_train": (fm_train_step, [s(bt, f), s(bt, f, k), s(1), s(bt)]),
+        "fm_predict": (fm_predict, [s(bp, f), s(bp, f, k), s(1)]),
+        "deepfm_train": (
+            deepfm_train_step,
+            [s(bt, f), s(bt, f, k), s(1), s(f * k, h), s(h), s(h, 1), s(1), s(bt)],
+        ),
+        "deepfm_predict": (
+            deepfm_predict,
+            [s(bp, f), s(bp, f, k), s(1), s(f * k, h), s(h), s(h, 1), s(1)],
+        ),
+    }

@@ -1,0 +1,101 @@
+"""AOT pipeline: lowering produces loadable HLO text + a consistent manifest."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+def test_to_hlo_text_smoke():
+    import jax
+
+    def fn(x):
+        return (x * 2.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[4]" in text
+
+
+def test_lower_module_reports_shapes():
+    import jax
+
+    specs = [jax.ShapeDtypeStruct((8, 3), jnp.float32), jax.ShapeDtypeStruct((8,), jnp.float32)]
+
+    def fn(w, label):
+        return (jnp.sum(w, axis=1) - label, jnp.mean(label))
+
+    hlo, inputs, outputs = aot.lower_module(fn, specs)
+    assert inputs == [
+        {"shape": [8, 3], "dtype": "f32"},
+        {"shape": [8], "dtype": "f32"},
+    ]
+    assert outputs[0] == {"shape": [8], "dtype": "f32"}
+    assert outputs[1] == {"shape": [], "dtype": "f32"}
+    assert "HloModule" in hlo
+
+
+def test_build_writes_all_artifacts(tmp_path):
+    out = str(tmp_path)
+    aot.build(out, batch_train=8, batch_predict=2, fields=4, dim=2, hidden=8, block_rows=64)
+    with open(os.path.join(out, "manifest.json")) as f:
+        manifest = json.load(f)
+    mods = manifest["modules"]
+    expected = {
+        "lr_train",
+        "lr_predict",
+        "fm_train",
+        "fm_predict",
+        "deepfm_train",
+        "deepfm_predict",
+        "ftrl_update_d1",
+        "ftrl_update_d2",
+        "ftrl_weight_d1",
+        "ftrl_weight_d2",
+    }
+    assert set(mods) == expected
+    for name, meta in mods.items():
+        path = os.path.join(out, meta["path"])
+        assert os.path.exists(path), name
+        with open(path) as f:
+            head = f.read(4096)
+        assert "HloModule" in head, name
+    cfg = manifest["config"]
+    assert cfg["batch_train"] == 8 and cfg["dim"] == 2
+    assert cfg["ftrl"]["alpha"] == pytest.approx(aot.FTRL_HYPERS["alpha"])
+    assert cfg["ftrl"]["l1"] == pytest.approx(aot.FTRL_HYPERS["l1"])
+
+
+def test_manifest_shapes_match_model_specs(tmp_path):
+    out = str(tmp_path)
+    aot.build(out, batch_train=8, batch_predict=2, fields=4, dim=2, hidden=8, block_rows=64)
+    with open(os.path.join(out, "manifest.json")) as f:
+        manifest = json.load(f)
+    specs = M.model_specs(8, 2, 4, 2, 8)
+    for name, (fn, args) in specs.items():
+        meta = manifest["modules"][name]
+        got = [tuple(e["shape"]) for e in meta["inputs"]]
+        want = [tuple(a.shape) for a in args]
+        assert got == want, name
+
+
+def test_lowered_fm_train_executes_in_jax(tmp_path):
+    # The lowered module is also executable in-process: compile the jitted
+    # fn and compare against the eager path (guards against lowering the
+    # wrong function into the artifact).
+    import jax
+
+    specs = M.model_specs(4, 2, 3, 2, 8)
+    fn, args = specs["fm_train"]
+    rng = np.random.RandomState(0)
+    concrete = [jnp.asarray(rng.randn(*a.shape), jnp.float32) for a in args]
+    eager = fn(*concrete)
+    jitted = jax.jit(fn)(*concrete)
+    for a, b in zip(eager, jitted):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,186 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fm, ftrl
+from compile.kernels.ref import (
+    adagrad_update_ref,
+    fm_interaction_ref,
+    ftrl_update_ref,
+    ftrl_weight_ref,
+)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(key, shape, lo=-3.0, hi=3.0):
+    return jax.random.uniform(key, shape, jnp.float32, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# FTRL update kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n_rows=st.integers(1, 700),
+    dim=st.integers(1, 16),
+    block=st.sampled_from([8, 64, 256, 2048]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ftrl_matches_ref_across_shapes(n_rows, dim, block, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    g = _rand(keys[0], (n_rows, dim))
+    z = _rand(keys[1], (n_rows, dim), -5.0, 5.0)
+    n = jax.random.uniform(keys[2], (n_rows, dim), jnp.float32, 0.0, 10.0)
+
+    z1, n1, w1 = ftrl.ftrl_update(g, z, n, block_n=block)
+    z2, n2, w2 = ftrl_update_ref(g, z, n)
+    np.testing.assert_allclose(z1, z2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(n1, n2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(w1, w2, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    alpha=st.floats(0.01, 1.0),
+    beta=st.floats(0.1, 2.0),
+    l1=st.floats(0.0, 3.0),
+    l2=st.floats(0.0, 3.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ftrl_matches_ref_across_hypers(alpha, beta, l1, l2, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    g = _rand(keys[0], (37, 4))
+    z = _rand(keys[1], (37, 4), -5.0, 5.0)
+    n = jax.random.uniform(keys[2], (37, 4), jnp.float32, 0.0, 10.0)
+
+    got = ftrl.ftrl_update(g, z, n, alpha=alpha, beta=beta, l1=l1, l2=l2)
+    want = ftrl_update_ref(g, z, n, alpha=alpha, beta=beta, l1=l1, l2=l2)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_ftrl_zero_gradient_is_noop_on_n():
+    z = jnp.ones((16, 2))
+    n = jnp.full((16, 2), 2.0)
+    g = jnp.zeros((16, 2))
+    z1, n1, _ = ftrl.ftrl_update(g, z, n)
+    np.testing.assert_allclose(n1, n)
+    np.testing.assert_allclose(z1, z)
+
+
+def test_ftrl_l1_sparsifies():
+    # Small |z| after update => weight exactly zero (the L1 dead zone).
+    g = jnp.full((8, 1), 1e-4)
+    z = jnp.zeros((8, 1))
+    n = jnp.zeros((8, 1))
+    _, _, w = ftrl.ftrl_update(g, z, n, l1=1.0)
+    np.testing.assert_array_equal(np.asarray(w), np.zeros((8, 1)))
+
+
+def test_ftrl_drives_weight_against_gradient():
+    # Persistent positive gradient should drive w negative once past l1.
+    z = jnp.zeros((4, 1))
+    n = jnp.zeros((4, 1))
+    w = None
+    for _ in range(50):
+        g = jnp.ones((4, 1))
+        z, n, w = ftrl.ftrl_update(g, z, n)
+    assert np.all(np.asarray(w) < 0.0)
+
+
+def test_ftrl_sequential_equals_ref_trajectory():
+    # Multi-step trajectories agree, not just single steps.
+    key = jax.random.PRNGKey(7)
+    zk, nk = jnp.zeros((32, 8)), jnp.zeros((32, 8))
+    zr, nr = jnp.zeros((32, 8)), jnp.zeros((32, 8))
+    for i in range(10):
+        key, sub = jax.random.split(key)
+        g = _rand(sub, (32, 8))
+        zk, nk, wk = ftrl.ftrl_update(g, zk, nk, block_n=16)
+        zr, nr, wr = ftrl_update_ref(g, zr, nr)
+    np.testing.assert_allclose(wk, wr, rtol=1e-4, atol=1e-5)
+
+
+def test_ftrl_rejects_mismatched_shapes():
+    with pytest.raises(AssertionError):
+        ftrl.ftrl_update(jnp.zeros((4, 2)), jnp.zeros((4, 3)), jnp.zeros((4, 2)))
+
+
+# ---------------------------------------------------------------------------
+# FM interaction kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    batch=st.integers(1, 600),
+    fields=st.integers(1, 32),
+    k=st.integers(1, 24),
+    block=st.sampled_from([4, 32, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fm_matches_ref_across_shapes(batch, fields, k, block, seed):
+    v = _rand(jax.random.PRNGKey(seed), (batch, fields, k))
+    got = fm.fm_interaction(v, block_b=block)
+    want = fm_interaction_ref(v)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_fm_single_field_is_zero():
+    # With one field there are no pairwise interactions.
+    v = _rand(jax.random.PRNGKey(0), (16, 1, 8))
+    np.testing.assert_allclose(fm.fm_interaction(v), np.zeros(16), atol=1e-6)
+
+
+def test_fm_matches_explicit_pairwise_sum():
+    # Brute-force sum_{i<j} <v_i, v_j> on a tiny case.
+    v = _rand(jax.random.PRNGKey(3), (4, 5, 3))
+    got = np.asarray(fm.fm_interaction(v))
+    vn = np.asarray(v)
+    want = np.zeros(4, np.float32)
+    for bidx in range(4):
+        for i in range(5):
+            for j in range(i + 1, 5):
+                want[bidx] += float(vn[bidx, i] @ vn[bidx, j])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fm_is_jittable_and_differentiable():
+    v = _rand(jax.random.PRNGKey(4), (8, 6, 4))
+
+    def loss(v_):
+        return jnp.sum(fm.fm_interaction(v_))
+
+    g = jax.jit(jax.grad(loss))(v)
+    # d/dv of 0.5((sum v)^2 - sum v^2) = sum_f v - v
+    want = jnp.sum(v, axis=1, keepdims=True) - v
+    np.testing.assert_allclose(g, want, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Adagrad oracle sanity (used by the Rust scalar implementation tests)
+# ---------------------------------------------------------------------------
+
+
+def test_adagrad_ref_moves_against_gradient():
+    g = jnp.ones((4, 2))
+    acc = jnp.zeros((4, 2))
+    w = jnp.zeros((4, 2))
+    acc1, w1 = adagrad_update_ref(g, acc, w, lr=0.1)
+    assert np.all(np.asarray(w1) < 0)
+    np.testing.assert_allclose(acc1, np.ones((4, 2)))
+
+
+def test_ftrl_weight_ref_dead_zone():
+    z = jnp.array([[0.5], [-0.5], [2.0], [-2.0]])
+    n = jnp.ones((4, 1))
+    w = np.asarray(ftrl_weight_ref(z, n, l1=1.0))
+    assert w[0, 0] == 0.0 and w[1, 0] == 0.0
+    assert w[2, 0] < 0.0 and w[3, 0] > 0.0

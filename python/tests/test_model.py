@@ -1,0 +1,231 @@
+"""L2 correctness: model graphs — shapes, gradient checks, loss semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _batch(seed, b, f, k=None):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    w = jax.random.normal(keys[0], (b, f), jnp.float32) * 0.1
+    label = (jax.random.uniform(keys[1], (b,)) < 0.5).astype(jnp.float32)
+    if k is None:
+        return w, label
+    v = jax.random.normal(keys[2], (b, f, k), jnp.float32) * 0.1
+    return w, v, label
+
+
+def _numerical_grad(fn, x, eps=1e-3):
+    """Central-difference gradient of scalar fn w.r.t. array x."""
+    x = np.asarray(x, np.float64)
+    g = np.zeros_like(x)
+    it = np.nditer(x, flags=["multi_index"])
+    while not it.finished:
+        idx = it.multi_index
+        xp = x.copy()
+        xm = x.copy()
+        xp[idx] += eps
+        xm[idx] -= eps
+        g[idx] = (float(fn(xp)) - float(fn(xm))) / (2 * eps)
+        it.iternext()
+    return g
+
+
+# ---------------------------------------------------------------------------
+# LR
+# ---------------------------------------------------------------------------
+
+
+def test_lr_shapes():
+    w, label = _batch(0, 32, 16)
+    b = jnp.zeros(1)
+    pred, loss, gw, gb = M.lr_train_step(w, b, label)
+    assert pred.shape == (32,) and loss.shape == () and gw.shape == (32, 16)
+    assert gb.shape == (1,)
+    (p,) = M.lr_predict(w, b)
+    assert p.shape == (32,)
+
+
+def test_lr_grad_matches_numerical():
+    w, label = _batch(1, 4, 3)
+    b = jnp.array([0.2])
+    _, _, gw, gb = M.lr_train_step(w, b, label)
+
+    def loss_of_w(wnp):
+        logit = wnp.sum(axis=1) + 0.2
+        lab = np.asarray(label, np.float64)
+        return np.mean(np.clip(logit, 0, None) - logit * lab + np.log1p(np.exp(-np.abs(logit))))
+
+    num = _numerical_grad(loss_of_w, w)
+    np.testing.assert_allclose(gw, num, rtol=1e-3, atol=1e-4)
+
+
+def test_lr_prediction_is_probability():
+    w, label = _batch(2, 64, 8)
+    pred, _, _, _ = M.lr_train_step(w, jnp.zeros(1), label)
+    p = np.asarray(pred)
+    assert np.all(p > 0) and np.all(p < 1)
+
+
+def test_lr_pred_is_pre_update():
+    # Progressive validation: prediction must be a pure function of the
+    # inputs, not of the gradient step (paper §4.3.1).
+    w, label = _batch(3, 8, 4)
+    b = jnp.zeros(1)
+    pred, _, _, _ = M.lr_train_step(w, b, label)
+    (pred2,) = M.lr_predict(w, b)
+    np.testing.assert_allclose(pred, pred2, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# FM
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 64), f=st.integers(1, 12), k=st.integers(1, 8), seed=st.integers(0, 1000))
+def test_fm_shapes_sweep(b, f, k, seed):
+    w, v, label = _batch(seed, b, f, k)
+    bias = jnp.zeros(1)
+    pred, loss, gw, gv, gb = M.fm_train_step(w, v, bias, label)
+    assert pred.shape == (b,) and gw.shape == (b, f) and gv.shape == (b, f, k)
+    assert np.isfinite(float(loss))
+
+
+def test_fm_grad_v_matches_numerical():
+    w, v, label = _batch(5, 3, 4, 2)
+    bias = jnp.array([0.0])
+    _, _, _, gv, _ = M.fm_train_step(w, v, bias, label)
+
+    def loss_of_v(vnp):
+        sum_sq = vnp.sum(axis=1) ** 2
+        sq_sum = (vnp**2).sum(axis=1)
+        inter = 0.5 * (sum_sq - sq_sum).sum(axis=-1)
+        logit = np.asarray(w, np.float64).sum(axis=1) + inter
+        lab = np.asarray(label, np.float64)
+        return np.mean(np.clip(logit, 0, None) - logit * lab + np.log1p(np.exp(-np.abs(logit))))
+
+    num = _numerical_grad(loss_of_v, v)
+    np.testing.assert_allclose(gv, num, rtol=2e-3, atol=1e-4)
+
+
+def test_fm_reduces_to_lr_when_factors_zero():
+    w, v, label = _batch(6, 16, 8, 4)
+    bias = jnp.array([0.3])
+    zero_v = jnp.zeros_like(v)
+    (p_fm,) = M.fm_predict(w, zero_v, bias)
+    (p_lr,) = M.lr_predict(w, bias)
+    np.testing.assert_allclose(p_fm, p_lr, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# DeepFM
+# ---------------------------------------------------------------------------
+
+
+def _deep_params(seed, f, k, h):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    w1 = jax.random.normal(keys[0], (f * k, h), jnp.float32) * 0.1
+    b1 = jnp.zeros(h)
+    w2 = jax.random.normal(keys[1], (h, 1), jnp.float32) * 0.1
+    b2 = jnp.zeros(1)
+    return w1, b1, w2, b2
+
+
+def test_deepfm_shapes():
+    b, f, k, h = 16, 8, 4, 32
+    w, v, label = _batch(7, b, f, k)
+    bias = jnp.zeros(1)
+    w1, b1, w2, b2 = _deep_params(8, f, k, h)
+    out = M.deepfm_train_step(w, v, bias, w1, b1, w2, b2, label)
+    pred, loss, gw, gv, gb, gw1, gb1, gw2, gb2 = out
+    assert pred.shape == (b,)
+    assert gw1.shape == (f * k, h) and gb1.shape == (h,)
+    assert gw2.shape == (h, 1) and gb2.shape == (1,)
+    assert np.isfinite(float(loss))
+
+
+def test_deepfm_reduces_to_fm_when_tower_zero():
+    b, f, k, h = 8, 6, 3, 16
+    w, v, label = _batch(9, b, f, k)
+    bias = jnp.array([0.1])
+    w1 = jnp.zeros((f * k, h))
+    b1 = jnp.zeros(h)
+    w2 = jnp.zeros((h, 1))
+    b2 = jnp.zeros(1)
+    (p_deep,) = M.deepfm_predict(w, v, bias, w1, b1, w2, b2)
+    (p_fm,) = M.fm_predict(w, v, bias)
+    np.testing.assert_allclose(p_deep, p_fm, rtol=1e-6)
+
+
+def test_deepfm_dense_grad_matches_numerical():
+    b, f, k, h = 4, 3, 2, 5
+    w, v, label = _batch(10, b, f, k)
+    bias = jnp.zeros(1)
+    w1, b1, w2, b2 = _deep_params(11, f, k, h)
+    out = M.deepfm_train_step(w, v, bias, w1, b1, w2, b2, label)
+    gw2 = out[7]
+
+    def loss_of_w2(w2np):
+        vn = np.asarray(v, np.float64).reshape(b, f * k)
+        hpre = vn @ np.asarray(w1, np.float64) + np.asarray(b1, np.float64)
+        hact = np.maximum(hpre, 0)
+        deep = (hact @ w2np)[:, 0]
+        wn = np.asarray(w, np.float64)
+        sum_sq = np.asarray(v, np.float64).sum(axis=1) ** 2
+        sq_sum = (np.asarray(v, np.float64) ** 2).sum(axis=1)
+        inter = 0.5 * (sum_sq - sq_sum).sum(axis=-1)
+        logit = wn.sum(axis=1) + inter + deep
+        lab = np.asarray(label, np.float64)
+        return np.mean(np.clip(logit, 0, None) - logit * lab + np.log1p(np.exp(-np.abs(logit))))
+
+    num = _numerical_grad(loss_of_w2, w2)
+    np.testing.assert_allclose(gw2, num, rtol=2e-3, atol=1e-4)
+
+
+def test_training_reduces_loss_full_batch_gd():
+    # A few steps of plain GD on the gathered weights should reduce loss.
+    b, f = 64, 8
+    key = jax.random.PRNGKey(12)
+    w = jnp.zeros((b, f))
+    true_w = jax.random.normal(key, (f,))
+    x_sign = jnp.sign(jax.random.normal(jax.random.PRNGKey(13), (b, f)))
+    label = (jnp.sum(x_sign * true_w, axis=1) > 0).astype(jnp.float32)
+    bias = jnp.zeros(1)
+    # Fold feature signs into the gathered weights (w acts as w_f * x_f).
+    losses = []
+    for _ in range(30):
+        pred, loss, gw, gb = M.lr_train_step(w, bias, label)
+        losses.append(float(loss))
+        w = w - 0.5 * gw
+        bias = bias - 0.5 * gb
+    assert losses[-1] < losses[0] * 0.8, losses[:3] + losses[-3:]
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def test_model_specs_cover_all_variants():
+    specs = M.model_specs(32, 4, 8, 4, 16)
+    assert set(specs) == {
+        "lr_train",
+        "lr_predict",
+        "fm_train",
+        "fm_predict",
+        "deepfm_train",
+        "deepfm_predict",
+    }
+    for name, (fn, args) in specs.items():
+        out = jax.eval_shape(fn, *args)
+        leaves = jax.tree_util.tree_leaves(out)
+        assert leaves, name
+        first = leaves[0]
+        expect_b = 32 if name.endswith("train") else 4
+        assert first.shape == (expect_b,), (name, first.shape)

@@ -1,0 +1,113 @@
+//! E7 — L1/L2 hot path: the AOT Pallas FTRL kernel through PJRT vs the
+//! scalar Rust implementation, and the compiled model graphs' execution
+//! cost (the compute half of every train/predict step).
+
+use std::sync::Arc;
+
+use weips::optim::{BatchedFtrl, Ftrl, FtrlHyper, Optimizer};
+use weips::runtime::{default_artifacts_dir, Engine, Tensor};
+use weips::util::bench;
+use weips::util::Rng;
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let engine = Arc::new(Engine::load(dir).unwrap());
+    let cfg = engine.config().clone();
+    let scalar = Ftrl::new(FtrlHyper {
+        alpha: cfg.ftrl_alpha,
+        beta: cfg.ftrl_beta,
+        l1: cfg.ftrl_l1,
+        l2: cfg.ftrl_l2,
+    });
+
+    bench::header("E7a: FTRL update — scalar Rust vs AOT Pallas kernel (per-row cost)");
+    for dim in [1usize, cfg.dim] {
+        let batched = BatchedFtrl::new(engine.clone(), dim).unwrap();
+        for rows in [1_024usize, 8_192, 32_768] {
+            let mut rng = Rng::new(1);
+            let g: Vec<f32> = (0..rows * dim).map(|_| rng.gen_f32() - 0.5).collect();
+            // Scalar path.
+            let mut scalar_rows: Vec<Vec<f32>> =
+                (0..rows).map(|_| vec![0.0f32; 3 * dim]).collect();
+            bench::run_batched(
+                &format!("scalar  d={dim} rows={rows} (rows/s)"),
+                1,
+                8,
+                rows as u64,
+                || {
+                    for (i, row) in scalar_rows.iter_mut().enumerate() {
+                        scalar.apply(row, &g[i * dim..(i + 1) * dim], dim, 1);
+                    }
+                },
+            );
+            // Batched AOT kernel path.
+            let mut z = vec![0.0f32; rows * dim];
+            let mut n = vec![0.0f32; rows * dim];
+            let mut w = vec![0.0f32; rows * dim];
+            bench::run_batched(
+                &format!("pallas  d={dim} rows={rows} (rows/s)"),
+                1,
+                8,
+                rows as u64,
+                || {
+                    batched.update(&g, &mut z, &mut n, &mut w).unwrap();
+                },
+            );
+        }
+    }
+
+    bench::header("E7b: model graph execution (PJRT, per sample)");
+    let (bt, bp, f, k, h) = (cfg.batch_train, cfg.batch_predict, cfg.fields, cfg.dim, cfg.hidden);
+    let mut rng = Rng::new(2);
+    let mut t = |shape: &[usize]| {
+        let len = shape.iter().product();
+        Tensor::new(shape.to_vec(), (0..len).map(|_| rng.gen_f32() * 0.2 - 0.1).collect())
+    };
+    let label = Tensor::vec1((0..bt).map(|i| (i % 2) as f32).collect());
+
+    let lr_in = vec![t(&[bt, f]), t(&[1]), label.clone()];
+    bench::run_batched(&format!("lr_train      (B={bt}, samples/s)"), 2, 20, bt as u64, || {
+        engine.execute("lr_train", &lr_in).unwrap();
+    });
+    let fm_in = vec![t(&[bt, f]), t(&[bt, f, k]), t(&[1]), label.clone()];
+    bench::run_batched(&format!("fm_train      (B={bt}, samples/s)"), 2, 20, bt as u64, || {
+        engine.execute("fm_train", &fm_in).unwrap();
+    });
+    let deep_in = vec![
+        t(&[bt, f]),
+        t(&[bt, f, k]),
+        t(&[1]),
+        t(&[f * k, h]),
+        t(&[h]),
+        t(&[h, 1]),
+        t(&[1]),
+        label,
+    ];
+    bench::run_batched(&format!("deepfm_train  (B={bt}, samples/s)"), 2, 20, bt as u64, || {
+        engine.execute("deepfm_train", &deep_in).unwrap();
+    });
+    let fm_pred = vec![t(&[bp, f]), t(&[bp, f, k]), t(&[1])];
+    bench::run(&format!("fm_predict    (B={bp}, graph latency)"), 5, 100, || {
+        engine.execute("fm_predict", &fm_pred).unwrap();
+    });
+    let deep_pred = vec![
+        t(&[bp, f]),
+        t(&[bp, f, k]),
+        t(&[1]),
+        t(&[f * k, h]),
+        t(&[h]),
+        t(&[h, 1]),
+        t(&[1]),
+    ];
+    bench::run(&format!("deepfm_predict(B={bp}, graph latency)"), 5, 100, || {
+        engine.execute("deepfm_predict", &deep_pred).unwrap();
+    });
+
+    println!(
+        "\nnote: the Pallas kernel runs interpret=True on CPU PJRT (no TPU here), so\nabsolute numbers measure the CPU lowering; the structural target — one fused\nelementwise pass over (rows x dim) with VMEM-sized tiles — is what transfers\nto TPU (see DESIGN.md §Hardware-Adaptation and EXPERIMENTS.md §Perf)."
+    );
+}

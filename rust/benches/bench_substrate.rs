@@ -1,0 +1,126 @@
+//! E9 — substrate micro-benchmarks supporting the E1/E3 analysis: queue
+//! append/fetch, sparse-table pull/push scaling, codec + compression, RPC
+//! round-trip (local and TCP).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use weips::codec::{maybe_compress, Decode, Encode};
+use weips::net::{Channel, RpcServer, Service};
+use weips::proto::{SparsePush, SyncBatch, SyncEntry, SyncOp};
+use weips::queue::Queue;
+use weips::table::SparseTable;
+use weips::util::bench;
+use weips::Result;
+
+fn main() {
+    // -- queue ---------------------------------------------------------------
+    bench::header("E9a: partitioned queue");
+    let q = Queue::new(1 << 30);
+    let topic = q.create_topic("bench", 4).unwrap();
+    let payload = vec![7u8; 4_096];
+    bench::run("append 4KiB", 100, 20_000, || {
+        topic.partition(0).unwrap().append(0, payload.clone());
+    });
+    let p = topic.partition(0).unwrap();
+    let mut offset = 0u64;
+    bench::run_batched("fetch 256 records", 10, 50, 256, || {
+        let recs = p.fetch(offset, 256, Duration::ZERO).unwrap();
+        offset = if recs.len() < 256 { 0 } else { offset + 256 };
+        std::hint::black_box(recs);
+    });
+
+    // -- sparse table -----------------------------------------------------------
+    bench::header("E9b: sparse table (FTRL rows, dim 8)");
+    let ftrl = Arc::new(weips::optim::Ftrl::new(Default::default()));
+    for n_rows in [10_000u64, 100_000, 1_000_000] {
+        let mut table = SparseTable::new("v", 8, ftrl.clone(), 1);
+        let ids: Vec<u64> = (0..n_rows).collect();
+        let grads = vec![0.1f32; 4096 * 8];
+        let chunk: Vec<u64> = (0..4096u64).map(|i| i * (n_rows / 4096).max(1)).collect();
+        // Populate.
+        for big in ids.chunks(4096) {
+            let g = vec![0.1f32; big.len() * 8];
+            table.apply_grads(big, &g, 0);
+        }
+        bench::run_batched(
+            &format!("apply_grads 4096 ids over {n_rows} rows (ids/s)"),
+            2,
+            20,
+            4096,
+            || {
+                table.apply_grads(&chunk, &grads, 1);
+            },
+        );
+        let mut out = vec![0.0f32; 4096 * 8];
+        bench::run_batched(
+            &format!("pull_slot 4096 ids over {n_rows} rows (ids/s)"),
+            2,
+            20,
+            4096,
+            || {
+                table.pull_slot(&chunk, "w", 2, &mut out).unwrap();
+            },
+        );
+    }
+
+    // -- codec -------------------------------------------------------------------
+    bench::header("E9c: codec + compression (sync batch of 4096 FTRL rows)");
+    let batch = SyncBatch {
+        model: "ctr".into(),
+        table: "v".into(),
+        shard: 0,
+        seq: 1,
+        created_ms: 0,
+        entries: (0..4096u64)
+            .map(|id| SyncEntry {
+                id: id * 37,
+                op: SyncOp::Upsert((0..24).map(|j| (id + j) as f32 * 0.01).collect()),
+            })
+            .collect(),
+        dense: vec![],
+    };
+    let mut encoded = Vec::new();
+    bench::run("encode", 5, 200, || {
+        encoded = batch.to_bytes();
+    });
+    bench::metric("encoded size", format!("{} bytes", encoded.len()));
+    bench::run("decode", 5, 200, || {
+        std::hint::black_box(SyncBatch::from_bytes(&encoded).unwrap());
+    });
+    let mut wire = Vec::new();
+    bench::run("compress (deflate-fast)", 2, 50, || {
+        wire = maybe_compress(&encoded);
+    });
+    bench::metric(
+        "wire size",
+        format!("{} bytes ({:.1}% of raw)", wire.len(), wire.len() as f64 / encoded.len() as f64 * 100.0),
+    );
+
+    // -- rpc ------------------------------------------------------------------------
+    bench::header("E9d: RPC round-trip (SparsePush of 1024 ids)");
+    struct Sink;
+    impl Service for Sink {
+        fn call(&self, _m: u16, payload: &[u8]) -> Result<Vec<u8>> {
+            let req = SparsePush::from_bytes(payload)?;
+            std::hint::black_box(&req);
+            Ok(vec![1])
+        }
+    }
+    let push = SparsePush {
+        model: "ctr".into(),
+        table: "w".into(),
+        ids: (0..1024).collect(),
+        grads: vec![0.01; 1024],
+    }
+    .to_bytes();
+    let local = Channel::local(Arc::new(Sink));
+    bench::run("local channel", 10, 2_000, || {
+        local.call(2, &push).unwrap();
+    });
+    let server = RpcServer::serve("127.0.0.1:0", Arc::new(Sink)).unwrap();
+    let remote = Channel::remote(&server.addr().to_string(), Duration::from_secs(5));
+    bench::run("tcp channel (loopback)", 10, 1_000, || {
+        remote.call(2, &push).unwrap();
+    });
+}

@@ -1,0 +1,148 @@
+//! E1 — "second-level model deployment by streaming update" (abstract,
+//! §4.1): master-write → slave-visible latency under each gather mode,
+//! against the traditional full checkpoint-export-and-load baseline.
+//!
+//! Threshold/period modes are measured *at a traffic rate*: the latency a
+//! sentinel update experiences while regular training traffic fills the
+//! gather window (that traffic is what triggers the flush).
+
+use std::time::{Duration, Instant};
+
+use weips::config::{ClusterConfig, GatherMode, ModelKind};
+use weips::coordinator::{ClusterOpts, LocalCluster};
+use weips::proto::{SparsePull, SparsePush};
+use weips::sample::WorkloadConfig;
+use weips::sync::Router;
+use weips::util::bench;
+use weips::util::histogram::{fmt_ns, Histogram};
+
+fn cluster(gather: GatherMode) -> LocalCluster {
+    LocalCluster::new(ClusterOpts {
+        cluster: ClusterConfig {
+            model_kind: ModelKind::Fm,
+            master_shards: 4,
+            slave_shards: 2,
+            slave_replicas: 2,
+            queue_partitions: 4,
+            gather_mode: gather,
+            ..Default::default()
+        },
+        workload: WorkloadConfig { ids_per_field: 5_000, seed: 61, ..Default::default() },
+        ..Default::default()
+    })
+    .expect("cluster (run `make artifacts` first)")
+}
+
+/// Push one sentinel update, then tick the pipeline (feeding background
+/// traffic so threshold windows fill) until the slave serves the master's
+/// current weight. Returns write→visible latency.
+fn probe_latency(c: &LocalCluster, sentinel: u64, feed_traffic: bool) -> Duration {
+    let master_router = Router::new(c.cfg.master_shards);
+    let slave_router = Router::new(c.cfg.slave_shards);
+    let m = &c.masters[master_router.shard_of(sentinel) as usize];
+    let shard = slave_router.shard_of(sentinel) as usize;
+    let t0 = Instant::now();
+    m.sparse_push(&SparsePush {
+        model: "ctr".into(),
+        table: "w".into(),
+        ids: vec![sentinel],
+        grads: vec![1.0],
+    })
+    .unwrap();
+    loop {
+        c.sync_tick().unwrap();
+        let served = c.slaves[shard][0]
+            .sparse_pull(&SparsePull {
+                model: "ctr".into(),
+                table: "w".into(),
+                ids: vec![sentinel],
+                slot: "w".into(),
+            })
+            .unwrap()
+            .values[0];
+        let master_w = m
+            .sparse_pull(&SparsePull {
+                model: "ctr".into(),
+                table: "w".into(),
+                ids: vec![sentinel],
+                slot: "w".into(),
+            })
+            .unwrap()
+            .values[0];
+        if (served - master_w).abs() < 1e-9 {
+            return t0.elapsed();
+        }
+        if feed_traffic {
+            // Regular traffic is what fills threshold windows; it is part
+            // of the latency a threshold-mode deployment experiences.
+            c.train_step().unwrap();
+        }
+        if t0.elapsed() > Duration::from_secs(30) {
+            panic!("sync never converged");
+        }
+    }
+}
+
+fn main() {
+    bench::header("E1: streaming sync latency (master write -> slave visible)");
+    for (label, gather, feed) in [
+        ("gather=realtime", GatherMode::Realtime, false),
+        ("gather=threshold:1024 (w/ traffic)", GatherMode::Threshold(1024), true),
+        ("gather=threshold:8192 (w/ traffic)", GatherMode::Threshold(8192), true),
+        ("gather=period:100ms", GatherMode::Period(100), false),
+        ("gather=period:1000ms", GatherMode::Period(1000), false),
+    ] {
+        let c = cluster(gather);
+        for _ in 0..6 {
+            c.train_step().unwrap(); // warm tables + modules (unmeasured)
+        }
+        c.flush_sync().unwrap();
+        let sentinel = 0xDEAD_BEEFu64;
+        let hist = Histogram::new();
+        for _ in 0..25 {
+            // Background churn between probes (unmeasured).
+            c.train_step().unwrap();
+            let d = probe_latency(&c, sentinel, feed);
+            hist.record(d.as_nanos() as u64);
+        }
+        println!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12} {:>14}",
+            label,
+            hist.count(),
+            fmt_ns(hist.mean() as u64),
+            fmt_ns(hist.quantile(0.5)),
+            fmt_ns(hist.quantile(0.99)),
+            "-"
+        );
+    }
+
+    // Baseline: the traditional deployment — full checkpoint export from
+    // masters + full load into every slave replica.
+    bench::header("E1 baseline: full checkpoint export + slave reload");
+    let c = cluster(GatherMode::Realtime);
+    for _ in 0..50 {
+        c.train_step().unwrap();
+    }
+    c.flush_sync().unwrap();
+    let rows: usize = c.masters.iter().map(|m| m.total_rows()).sum();
+    bench::metric("model rows at export time", rows);
+    bench::run("checkpoint-export-reload (baseline)", 1, 10, || {
+        let v = c.checkpoint().unwrap();
+        let snaps: Vec<Vec<u8>> = c
+            .masters
+            .iter()
+            .map(|m| c.store.load_shard("ctr", v, m.shard_id).unwrap())
+            .collect();
+        for shard in &c.slaves {
+            for replica in shard {
+                replica.clear();
+                for s in &snaps {
+                    replica.full_sync_from_snapshot(s).unwrap();
+                }
+            }
+        }
+    });
+    println!(
+        "\nshape check: realtime/period streaming stays far under the one-second\nbound; threshold modes are traffic-rate-bound; the export baseline scales\nwith model size (hours at production's 1e11 parameters)."
+    );
+}

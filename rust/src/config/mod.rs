@@ -1,0 +1,376 @@
+//! Configuration: model specs (table layouts per model kind) and cluster
+//! topology, plus a TOML-subset parser for config files (no serde/toml
+//! crates in the offline environment).
+
+mod toml;
+
+pub use toml::TomlDoc;
+
+use crate::optim::{self, FtrlHyper, Optimizer};
+use crate::runtime::ModelConfig;
+use crate::util::Rng;
+use crate::{Error, Result};
+use std::sync::Arc;
+
+/// Which model family a WeiPS deployment trains/serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    Lr,
+    Fm,
+    DeepFm,
+}
+
+impl ModelKind {
+    /// Parse from config string.
+    pub fn parse(s: &str) -> Result<ModelKind> {
+        match s {
+            "lr" => Ok(ModelKind::Lr),
+            "fm" => Ok(ModelKind::Fm),
+            "deepfm" => Ok(ModelKind::DeepFm),
+            other => Err(Error::Config(format!("unknown model kind {other}"))),
+        }
+    }
+
+    /// AOT module names for this model.
+    pub fn train_module(&self) -> &'static str {
+        match self {
+            ModelKind::Lr => "lr_train",
+            ModelKind::Fm => "fm_train",
+            ModelKind::DeepFm => "deepfm_train",
+        }
+    }
+
+    /// Serving-graph module name.
+    pub fn predict_module(&self) -> &'static str {
+        match self {
+            ModelKind::Lr => "lr_predict",
+            ModelKind::Fm => "fm_predict",
+            ModelKind::DeepFm => "deepfm_predict",
+        }
+    }
+}
+
+/// One sparse table's layout.
+#[derive(Debug, Clone)]
+pub struct SparseTableSpec {
+    pub name: String,
+    pub dim: usize,
+    pub optimizer: String,
+}
+
+/// One dense table's layout.
+#[derive(Debug, Clone)]
+pub struct DenseTableSpec {
+    pub name: String,
+    pub len: usize,
+    /// He-style init scale (0.0 = zeros).
+    pub init_scale: f32,
+}
+
+/// Full model specification: what tables exist, how graph inputs assemble.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub kind: ModelKind,
+    pub fields: usize,
+    pub dim: usize,
+    pub hidden: usize,
+    pub batch_train: usize,
+    pub batch_predict: usize,
+    pub sparse: Vec<SparseTableSpec>,
+    /// Dense tables in *graph input order* (after the sparse inputs).
+    pub dense: Vec<DenseTableSpec>,
+    pub ftrl: FtrlHyper,
+}
+
+impl ModelSpec {
+    /// Derive the spec for `kind` from the AOT manifest config.
+    pub fn derive(name: &str, kind: ModelKind, cfg: &ModelConfig) -> ModelSpec {
+        let (f, k, h) = (cfg.fields, cfg.dim, cfg.hidden);
+        let sparse = match kind {
+            ModelKind::Lr => vec![SparseTableSpec { name: "w".into(), dim: 1, optimizer: "ftrl".into() }],
+            ModelKind::Fm | ModelKind::DeepFm => vec![
+                SparseTableSpec { name: "w".into(), dim: 1, optimizer: "ftrl".into() },
+                SparseTableSpec { name: "v".into(), dim: k, optimizer: "ftrl".into() },
+            ],
+        };
+        let dense = match kind {
+            ModelKind::Lr | ModelKind::Fm => {
+                vec![DenseTableSpec { name: "bias".into(), len: 1, init_scale: 0.0 }]
+            }
+            ModelKind::DeepFm => vec![
+                DenseTableSpec { name: "bias".into(), len: 1, init_scale: 0.0 },
+                DenseTableSpec { name: "w1".into(), len: f * k * h, init_scale: (2.0 / (f * k) as f32).sqrt() },
+                DenseTableSpec { name: "b1".into(), len: h, init_scale: 0.0 },
+                DenseTableSpec { name: "w2".into(), len: h, init_scale: (2.0 / h as f32).sqrt() },
+                DenseTableSpec { name: "b2".into(), len: 1, init_scale: 0.0 },
+            ],
+        };
+        ModelSpec {
+            name: name.to_string(),
+            kind,
+            fields: f,
+            dim: k,
+            hidden: h,
+            batch_train: cfg.batch_train,
+            batch_predict: cfg.batch_predict,
+            sparse,
+            dense,
+            ftrl: FtrlHyper {
+                alpha: cfg.ftrl_alpha,
+                beta: cfg.ftrl_beta,
+                l1: cfg.ftrl_l1,
+                l2: cfg.ftrl_l2,
+            },
+        }
+    }
+
+    /// Instantiate a sparse table's optimizer.
+    pub fn optimizer_for(&self, table: &str) -> Result<Arc<dyn Optimizer>> {
+        let spec = self
+            .sparse
+            .iter()
+            .find(|t| t.name == table)
+            .ok_or_else(|| Error::NotFound(format!("sparse table {table}")))?;
+        optim::by_name(&spec.optimizer, &self.ftrl)
+    }
+
+    /// Deterministic initial values for a dense table (seeded by model +
+    /// table name so every master shard / restart agrees).
+    pub fn dense_init(&self, table: &DenseTableSpec) -> Vec<f32> {
+        if table.init_scale == 0.0 {
+            return vec![0.0; table.len];
+        }
+        let seed = crate::util::fxhash64(
+            crate::util::fxhash64(self.name.len() as u64 ^ 0x5eed)
+                ^ table.name.bytes().fold(0u64, |a, b| a.wrapping_mul(31).wrapping_add(b as u64)),
+        );
+        let mut rng = Rng::new(seed);
+        (0..table.len)
+            .map(|_| rng.gen_normal() as f32 * table.init_scale)
+            .collect()
+    }
+
+    /// Sparse-table dims in graph input order (w, then v for FM/DeepFM).
+    pub fn sparse_order(&self) -> Vec<(&str, usize)> {
+        self.sparse.iter().map(|s| (s.name.as_str(), s.dim)).collect()
+    }
+}
+
+/// Gather mode (§4.1.2): when the master flushes collected updates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GatherMode {
+    /// Flush on every push (most fresh, most bandwidth).
+    Realtime,
+    /// Flush when this many distinct dirty ids accumulate.
+    Threshold(usize),
+    /// Flush every `ms` milliseconds.
+    Period(u64),
+}
+
+impl GatherMode {
+    /// Parse "realtime" | "threshold:<n>" | "period:<ms>".
+    pub fn parse(s: &str) -> Result<GatherMode> {
+        if s == "realtime" {
+            return Ok(GatherMode::Realtime);
+        }
+        if let Some(n) = s.strip_prefix("threshold:") {
+            return n
+                .parse()
+                .map(GatherMode::Threshold)
+                .map_err(|_| Error::Config(format!("bad threshold in {s}")));
+        }
+        if let Some(ms) = s.strip_prefix("period:") {
+            return ms
+                .parse()
+                .map(GatherMode::Period)
+                .map_err(|_| Error::Config(format!("bad period in {s}")));
+        }
+        Err(Error::Config(format!("unknown gather mode {s}")))
+    }
+}
+
+/// Cluster topology + policies (defaults suit the examples and benches).
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub model_name: String,
+    pub model_kind: ModelKind,
+    pub master_shards: u32,
+    pub slave_shards: u32,
+    pub slave_replicas: u32,
+    pub queue_partitions: u32,
+    pub gather_mode: GatherMode,
+    /// Feature entry filter threshold (observations before materializing).
+    pub entry_threshold: u32,
+    /// Feature expire TTL in ms (0 = never).
+    pub feature_ttl_ms: u64,
+    /// Checkpoint every ~this many ms (randomly jittered, §4.2.1a).
+    pub ckpt_interval_ms: u64,
+    /// Local checkpoint versions to keep.
+    pub ckpt_keep: usize,
+    /// Replicate every k-th checkpoint to the remote tier.
+    pub remote_every: u64,
+    /// Node heartbeat session TTL.
+    pub session_ttl_ms: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            model_name: "ctr".into(),
+            model_kind: ModelKind::Fm,
+            master_shards: 4,
+            slave_shards: 2,
+            slave_replicas: 2,
+            queue_partitions: 4,
+            gather_mode: GatherMode::Threshold(4096),
+            entry_threshold: 1,
+            feature_ttl_ms: 0,
+            ckpt_interval_ms: 10_000,
+            ckpt_keep: 5,
+            remote_every: 4,
+            session_ttl_ms: 3_000,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Apply `[cluster]` section overrides from a parsed TOML document.
+    pub fn from_toml(doc: &TomlDoc) -> Result<ClusterConfig> {
+        let mut c = ClusterConfig::default();
+        if let Some(v) = doc.get_str("cluster", "model_name") {
+            c.model_name = v.to_string();
+        }
+        if let Some(v) = doc.get_str("cluster", "model_kind") {
+            c.model_kind = ModelKind::parse(v)?;
+        }
+        if let Some(v) = doc.get_int("cluster", "master_shards") {
+            c.master_shards = v as u32;
+        }
+        if let Some(v) = doc.get_int("cluster", "slave_shards") {
+            c.slave_shards = v as u32;
+        }
+        if let Some(v) = doc.get_int("cluster", "slave_replicas") {
+            c.slave_replicas = v as u32;
+        }
+        if let Some(v) = doc.get_int("cluster", "queue_partitions") {
+            c.queue_partitions = v as u32;
+        }
+        if let Some(v) = doc.get_str("cluster", "gather_mode") {
+            c.gather_mode = GatherMode::parse(v)?;
+        }
+        if let Some(v) = doc.get_int("cluster", "entry_threshold") {
+            c.entry_threshold = v as u32;
+        }
+        if let Some(v) = doc.get_int("cluster", "feature_ttl_ms") {
+            c.feature_ttl_ms = v as u64;
+        }
+        if let Some(v) = doc.get_int("cluster", "ckpt_interval_ms") {
+            c.ckpt_interval_ms = v as u64;
+        }
+        if let Some(v) = doc.get_int("cluster", "ckpt_keep") {
+            c.ckpt_keep = v as usize;
+        }
+        if let Some(v) = doc.get_int("cluster", "session_ttl_ms") {
+            c.session_ttl_ms = v as u64;
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model_cfg() -> ModelConfig {
+        ModelConfig {
+            batch_train: 8,
+            batch_predict: 2,
+            fields: 4,
+            dim: 2,
+            hidden: 8,
+            ftrl_block_rows: 64,
+            ftrl_alpha: 0.05,
+            ftrl_beta: 1.0,
+            ftrl_l1: 1.0,
+            ftrl_l2: 1.0,
+        }
+    }
+
+    #[test]
+    fn lr_spec_tables() {
+        let s = ModelSpec::derive("m", ModelKind::Lr, &model_cfg());
+        assert_eq!(s.sparse.len(), 1);
+        assert_eq!(s.sparse[0].dim, 1);
+        assert_eq!(s.dense.len(), 1);
+        assert_eq!(s.kind.train_module(), "lr_train");
+    }
+
+    #[test]
+    fn deepfm_spec_tables() {
+        let s = ModelSpec::derive("m", ModelKind::DeepFm, &model_cfg());
+        assert_eq!(s.sparse.len(), 2);
+        assert_eq!(s.sparse[1].dim, 2);
+        let names: Vec<&str> = s.dense.iter().map(|d| d.name.as_str()).collect();
+        assert_eq!(names, vec!["bias", "w1", "b1", "w2", "b2"]);
+        assert_eq!(s.dense[1].len, 4 * 2 * 8);
+        assert_eq!(s.kind.predict_module(), "deepfm_predict");
+    }
+
+    #[test]
+    fn dense_init_deterministic_and_scaled() {
+        let s = ModelSpec::derive("m", ModelKind::DeepFm, &model_cfg());
+        let w1 = &s.dense[1];
+        let a = s.dense_init(w1);
+        let b = s.dense_init(w1);
+        assert_eq!(a, b);
+        assert!(a.iter().any(|x| *x != 0.0));
+        let rms = (a.iter().map(|x| x * x).sum::<f32>() / a.len() as f32).sqrt();
+        assert!((rms - w1.init_scale).abs() < w1.init_scale * 0.5, "rms {rms}");
+        // Different tables get different values.
+        let w2 = s.dense_init(&s.dense[3]);
+        assert_ne!(a[0], w2[0]);
+        // Zero-scale tables are zeros.
+        assert!(s.dense_init(&s.dense[0]).iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn optimizer_for_resolves() {
+        let s = ModelSpec::derive("m", ModelKind::Fm, &model_cfg());
+        assert_eq!(s.optimizer_for("w").unwrap().name(), "ftrl");
+        assert!(s.optimizer_for("zzz").is_err());
+    }
+
+    #[test]
+    fn gather_mode_parsing() {
+        assert_eq!(GatherMode::parse("realtime").unwrap(), GatherMode::Realtime);
+        assert_eq!(GatherMode::parse("threshold:100").unwrap(), GatherMode::Threshold(100));
+        assert_eq!(GatherMode::parse("period:250").unwrap(), GatherMode::Period(250));
+        assert!(GatherMode::parse("sometimes").is_err());
+        assert!(GatherMode::parse("threshold:x").is_err());
+    }
+
+    #[test]
+    fn model_kind_parse() {
+        assert_eq!(ModelKind::parse("deepfm").unwrap(), ModelKind::DeepFm);
+        assert!(ModelKind::parse("transformer").is_err());
+    }
+
+    #[test]
+    fn cluster_config_from_toml() {
+        let doc = TomlDoc::parse(
+            r#"
+            [cluster]
+            model_kind = "deepfm"
+            master_shards = 8
+            gather_mode = "period:100"
+            "#,
+        )
+        .unwrap();
+        let c = ClusterConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.model_kind, ModelKind::DeepFm);
+        assert_eq!(c.master_shards, 8);
+        assert_eq!(c.gather_mode, GatherMode::Period(100));
+        assert_eq!(c.slave_shards, 2); // default preserved
+    }
+}

@@ -1,0 +1,195 @@
+//! TOML-subset parser for WeiPS config files.
+//!
+//! Supports: `[section]` headers, `key = value` with string / integer /
+//! float / boolean values, `#` comments, and blank lines. That covers the
+//! launcher's needs without a toml crate (offline environment).
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// A parsed config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+/// A parsed document: section -> key -> value. Keys outside any section
+/// land in the "" section.
+#[derive(Debug, Default, Clone)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    /// Parse a document.
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| Error::Config(format!("line {}: unclosed section", lineno + 1)))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| Error::Config(format!("line {}: expected key = value", lineno + 1)))?;
+            let value = parse_value(value.trim())
+                .map_err(|e| Error::Config(format!("line {}: {e}", lineno + 1)))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    /// Load and parse a file.
+    pub fn load(path: &str) -> Result<TomlDoc> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read {path}: {e}")))?;
+        Self::parse(&text)
+    }
+
+    /// Raw value lookup.
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// String value (only for string-typed keys).
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        match self.get(section, key)? {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Integer value.
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        match self.get(section, key)? {
+            TomlValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Float value (ints coerce).
+    pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key)? {
+            TomlValue::Float(v) => Some(*v),
+            TomlValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    /// Boolean value.
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key)? {
+            TomlValue::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Section names.
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(v) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(v));
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(v));
+    }
+    Err(format!("cannot parse value: {s}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let doc = TomlDoc::parse(
+            r#"
+            # top-level
+            name = "weips"          # trailing comment
+            [cluster]
+            master_shards = 8
+            ratio = 0.5
+            enabled = true
+            label = "a # not comment"
+            [paths]
+            root = "/tmp/x"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("", "name"), Some("weips"));
+        assert_eq!(doc.get_int("cluster", "master_shards"), Some(8));
+        assert_eq!(doc.get_float("cluster", "ratio"), Some(0.5));
+        assert_eq!(doc.get_float("cluster", "master_shards"), Some(8.0));
+        assert_eq!(doc.get_bool("cluster", "enabled"), Some(true));
+        assert_eq!(doc.get_str("cluster", "label"), Some("a # not comment"));
+        assert_eq!(doc.get_str("paths", "root"), Some("/tmp/x"));
+        assert_eq!(doc.get("nope", "k"), None);
+        assert_eq!(doc.get_int("cluster", "ratio"), None); // type-checked
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = \"open").is_err());
+    }
+
+    #[test]
+    fn escaped_strings() {
+        let doc = TomlDoc::parse(r#"k = "a\"b\\c""#).unwrap();
+        assert_eq!(doc.get_str("", "k"), Some(r#"a"b\c"#));
+    }
+
+    #[test]
+    fn sections_iterate() {
+        let doc = TomlDoc::parse("[b]\nx=1\n[a]\ny=2").unwrap();
+        let names: Vec<&str> = doc.sections().collect();
+        assert_eq!(names, vec!["a", "b"]);
+    }
+}

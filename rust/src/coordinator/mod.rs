@@ -1,0 +1,621 @@
+//! Coordinator: assembles a full WeiPS deployment.
+//!
+//! [`LocalCluster`] wires every role of Figure 2 — master shards with
+//! their gather→pusher sync pipelines, slave replica groups with scatter
+//! consumers, the scheduler, the monitor, the domino downgrade — inside
+//! one process. Components talk through the same [`Channel`] RPC facade
+//! used in distributed mode, so examples, benches and integration tests
+//! exercise the production code paths; the `weips` CLI launches the same
+//! pieces across processes over TCP.
+//!
+//! The cluster is **tick-driven**: `train_step` / `sync_tick` /
+//! `control_tick` advance it deterministically (benches measure exact
+//! work), and `start_pumps` spawns background threads for wall-clock
+//! operation (examples, CLI).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::config::{ClusterConfig, ModelSpec};
+use crate::downgrade::{Domino, DowngradePlan, SwitchStrategy, VersionManager};
+use crate::meta::MetaStore;
+use crate::monitor::{Monitor, SmoothedThreshold};
+use crate::net::Channel;
+use crate::optim::Optimizer;
+use crate::queue::{Queue, Topic};
+use crate::replica::{BalancePolicy, ReplicaGroup};
+use crate::runtime::Engine;
+use crate::sample::{Workload, WorkloadConfig};
+use crate::scheduler::{CkptPolicy, Scheduler};
+use crate::server::master::{MasterService, MasterShard};
+use crate::server::slave::{SlaveService, SlaveShard};
+use crate::storage::CheckpointStore;
+use crate::sync::{Gather, Pusher, Router, Scatter, ServingWeights};
+use crate::util::clock::{Clock, SystemClock};
+use crate::worker::{Predictor, ShardedClient, SlaveClient, SlaveEndpoint, Trainer};
+use crate::{Error, Result};
+
+/// Options beyond the cluster config.
+pub struct ClusterOpts {
+    pub cluster: ClusterConfig,
+    pub artifacts_dir: std::path::PathBuf,
+    /// Checkpoint root (temp dir when None).
+    pub data_dir: Option<std::path::PathBuf>,
+    pub workload: WorkloadConfig,
+    /// Downgrade trigger: window-AUC threshold + smoothing points.
+    pub trigger_threshold: f64,
+    pub trigger_smooth: usize,
+    pub switch_strategy: SwitchStrategy,
+}
+
+impl Default for ClusterOpts {
+    fn default() -> Self {
+        ClusterOpts {
+            cluster: ClusterConfig::default(),
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            data_dir: None,
+            workload: WorkloadConfig::default(),
+            trigger_threshold: 0.55,
+            trigger_smooth: 3,
+            switch_strategy: SwitchStrategy::LatestStable,
+        }
+    }
+}
+
+/// A fully wired in-process WeiPS cluster.
+pub struct LocalCluster {
+    pub engine: Arc<Engine>,
+    pub spec: ModelSpec,
+    pub cfg: ClusterConfig,
+    pub queue: Arc<Queue>,
+    pub topic: Arc<Topic>,
+    pub meta: MetaStore,
+    pub store: Arc<CheckpointStore>,
+    pub scheduler: Scheduler,
+    pub masters: Vec<Arc<MasterShard>>,
+    gathers: Vec<Mutex<Gather>>,
+    pushers: Vec<Pusher>,
+    /// slaves[shard][replica]
+    pub slaves: Vec<Vec<Arc<SlaveShard>>>,
+    scatters: Vec<Vec<Mutex<Scatter>>>,
+    pub groups: Vec<Arc<ReplicaGroup<SlaveEndpoint>>>,
+    pub monitor: Arc<Monitor>,
+    pub vm: VersionManager,
+    pub domino: Mutex<Domino>,
+    pub trainer: Trainer,
+    pub predictor: Predictor,
+    workload: Mutex<Workload>,
+    clock: Arc<dyn Clock>,
+    data_dir: std::path::PathBuf,
+    owns_data_dir: bool,
+    pumps_running: Arc<AtomicBool>,
+    pump_handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    pub sim_time_ms: std::sync::atomic::AtomicU64,
+}
+
+impl LocalCluster {
+    /// Build and wire the whole cluster.
+    pub fn new(opts: ClusterOpts) -> Result<LocalCluster> {
+        let engine = Arc::new(Engine::load(&opts.artifacts_dir)?);
+        let cfg = opts.cluster.clone();
+        let spec = ModelSpec::derive(&cfg.model_name, cfg.model_kind, engine.config());
+        let clock: Arc<dyn Clock> = Arc::new(SystemClock);
+
+        let (data_dir, owns_data_dir) = match opts.data_dir {
+            Some(d) => (d, false),
+            None => {
+                let d = std::env::temp_dir().join(format!(
+                    "weips-cluster-{}-{:x}",
+                    std::process::id(),
+                    crate::util::mono_ns()
+                ));
+                (d, true)
+            }
+        };
+        let store = Arc::new(CheckpointStore::new(
+            data_dir.join("ckpt-local"),
+            Some(data_dir.join("ckpt-remote")),
+        ));
+        let meta = MetaStore::new(clock.clone());
+        let queue = Arc::new(Queue::default());
+        let topic = queue.create_topic(
+            &format!("sync.{}", cfg.model_name),
+            cfg.queue_partitions as usize,
+        )?;
+
+        // -- masters + sync pipeline -----------------------------------------
+        let mut masters = Vec::new();
+        let mut gathers = Vec::new();
+        let mut pushers = Vec::new();
+        for i in 0..cfg.master_shards {
+            let m = Arc::new(MasterShard::new(
+                i,
+                spec.clone(),
+                Some(engine.clone()),
+                cfg.entry_threshold,
+                clock.clone(),
+            )?);
+            gathers.push(Mutex::new(Gather::new(m.clone(), cfg.gather_mode, clock.clone())));
+            pushers.push(Pusher::new(topic.clone(), i));
+            masters.push(m);
+        }
+
+        // -- slaves + scatter + replica groups --------------------------------
+        let serving_tables: Vec<(String, usize)> =
+            spec.sparse.iter().map(|t| (t.name.clone(), t.dim)).collect();
+        let dense_tables: Vec<(String, usize)> =
+            spec.dense.iter().map(|d| (d.name.clone(), d.len)).collect();
+        let transform_tables: Vec<(String, Arc<dyn Optimizer>, usize)> = spec
+            .sparse
+            .iter()
+            .map(|t| Ok((t.name.clone(), spec.optimizer_for(&t.name)?, t.dim)))
+            .collect::<Result<Vec<_>>>()?;
+        let slave_router = Router::new(cfg.slave_shards);
+
+        let mut slaves = Vec::new();
+        let mut scatters = Vec::new();
+        let mut groups = Vec::new();
+        for s in 0..cfg.slave_shards {
+            let mut replicas = Vec::new();
+            let mut shard_scatters = Vec::new();
+            let mut endpoints = Vec::new();
+            for r in 0..cfg.slave_replicas {
+                let shard = Arc::new(SlaveShard::new(
+                    s,
+                    r,
+                    &cfg.model_name,
+                    serving_tables.clone(),
+                    dense_tables.clone(),
+                    Arc::new(ServingWeights::new(transform_tables.clone())),
+                    slave_router,
+                ));
+                shard_scatters.push(Mutex::new(Scatter::new(
+                    topic.clone(),
+                    shard.clone(),
+                    cfg.master_shards,
+                    cfg.slave_shards,
+                    clock.clone(),
+                )));
+                let ch = Channel::local(Arc::new(SlaveService { shard: shard.clone() }));
+                endpoints.push(Arc::new(SlaveEndpoint::local(ch, shard.clone())));
+                replicas.push(shard);
+            }
+            groups.push(Arc::new(ReplicaGroup::new(endpoints, BalancePolicy::RoundRobin)));
+            slaves.push(replicas);
+            scatters.push(shard_scatters);
+        }
+
+        // -- workers ------------------------------------------------------------
+        let master_channels: Vec<Channel> = masters
+            .iter()
+            .map(|m| {
+                Channel::local(Arc::new(MasterService {
+                    shard: m.clone(),
+                    store: Some(store.clone()),
+                }))
+            })
+            .collect();
+        let monitor = Arc::new(Monitor::new(4 * spec.batch_train as u64 * 8));
+        let trainer = Trainer::new(
+            engine.clone(),
+            spec.clone(),
+            ShardedClient::new(&cfg.model_name, master_channels),
+            monitor.clone(),
+        );
+        let predictor = Predictor::new(
+            engine.clone(),
+            spec.clone(),
+            SlaveClient::new(&cfg.model_name, groups.clone()),
+        );
+
+        // -- control plane --------------------------------------------------------
+        let scheduler = Scheduler::new(
+            meta.clone(),
+            store.clone(),
+            &cfg.model_name,
+            CkptPolicy {
+                interval_ms: cfg.ckpt_interval_ms,
+                jitter: 0.3,
+                keep_local: cfg.ckpt_keep,
+                remote_every: cfg.remote_every,
+            },
+            clock.clone(),
+        );
+        let vm = VersionManager::new(&cfg.model_name, 0);
+        // Cooldown must outlast the monitor window (in control ticks ≈
+        // batches) or post-rollback contamination re-fires the domino and
+        // needlessly quarantines the healthy target.
+        let domino = Mutex::new(Domino::new(
+            Box::new(SmoothedThreshold::new(opts.trigger_threshold, opts.trigger_smooth)),
+            opts.switch_strategy,
+            48,
+        ));
+        let workload = Mutex::new(Workload::new(WorkloadConfig {
+            fields: spec.fields,
+            ..opts.workload
+        }));
+
+        Ok(LocalCluster {
+            engine,
+            spec,
+            cfg,
+            queue,
+            topic,
+            meta,
+            store,
+            scheduler,
+            masters,
+            gathers,
+            pushers,
+            slaves,
+            scatters,
+            groups,
+            monitor,
+            vm,
+            domino,
+            trainer,
+            predictor,
+            workload,
+            clock,
+            data_dir,
+            owns_data_dir,
+            pumps_running: Arc::new(AtomicBool::new(false)),
+            pump_handles: Mutex::new(Vec::new()),
+            sim_time_ms: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    /// Simulated workload timestamp, advanced `ms_per_step` per batch.
+    fn next_sim_time(&self, ms: u64) -> u64 {
+        self.sim_time_ms.fetch_add(ms, Ordering::Relaxed)
+    }
+
+    /// Run one training step on a fresh synthetic batch; returns the loss.
+    pub fn train_step(&self) -> Result<f32> {
+        let t = self.next_sim_time(100);
+        let samples = {
+            let mut w = self.workload.lock().unwrap();
+            w.batch(t, self.spec.batch_train)
+        };
+        Ok(self.trainer.train_batch(&samples)?.loss)
+    }
+
+    /// Drive the sync pipeline once: gather + push on every master, then
+    /// scatter on every slave replica. Returns (batches pushed, applied).
+    pub fn sync_tick(&self) -> Result<(usize, usize)> {
+        let mut pushed = 0;
+        for (i, g) in self.gathers.iter().enumerate() {
+            let batches = g.lock().unwrap().poll();
+            pushed += batches.len();
+            self.pushers[i].push_all(&batches)?;
+        }
+        let mut applied = 0;
+        for shard in &self.scatters {
+            for sc in shard {
+                applied += sc.lock().unwrap().poll(Duration::ZERO)?;
+            }
+        }
+        Ok((pushed, applied))
+    }
+
+    /// Force every pending update through the pipeline until slaves are
+    /// fully caught up.
+    pub fn flush_sync(&self) -> Result<()> {
+        for (i, g) in self.gathers.iter().enumerate() {
+            let batches = g.lock().unwrap().flush_now();
+            self.pushers[i].push_all(&batches)?;
+        }
+        loop {
+            let mut lag = 0;
+            for shard in &self.scatters {
+                for sc in shard {
+                    let mut sc = sc.lock().unwrap();
+                    sc.poll(Duration::ZERO)?;
+                    lag += sc.lag();
+                }
+            }
+            if lag == 0 {
+                return Ok(());
+            }
+        }
+    }
+
+    /// Total scatter lag across replicas (records).
+    pub fn sync_lag(&self) -> u64 {
+        self.scatters
+            .iter()
+            .flat_map(|s| s.iter())
+            .map(|sc| sc.lock().unwrap().lag())
+            .sum()
+    }
+
+    /// Serve predictions for raw feature-id requests via slave replicas.
+    pub fn predict(&self, requests: &[Vec<u64>]) -> Result<Vec<f32>> {
+        self.predictor.predict(requests)
+    }
+
+    /// Generate `n` serving requests from the same workload distribution.
+    pub fn serving_requests(&self, n: usize) -> Vec<Vec<u64>> {
+        let t = self.sim_time_ms.load(Ordering::Relaxed);
+        let mut w = self.workload.lock().unwrap();
+        w.batch(t, n).into_iter().map(|s| s.ids).collect()
+    }
+
+    /// Current queue offsets per partition (recorded into checkpoints).
+    pub fn queue_offsets(&self) -> Vec<u64> {
+        (0..self.topic.partition_count())
+            .map(|p| self.topic.partition(p).map(|x| x.latest_offset()).unwrap_or(0))
+            .collect()
+    }
+
+    /// Take a cluster checkpoint now; returns the version.
+    pub fn checkpoint(&self) -> Result<u64> {
+        let metric = self.monitor.snapshot().window_auc;
+        let v = self
+            .scheduler
+            .checkpoint_now(&self.masters, self.queue_offsets(), metric)?;
+        self.vm.advance(v);
+        for shard in &self.slaves {
+            for replica in shard {
+                replica.set_version(v);
+            }
+        }
+        Ok(v)
+    }
+
+    /// Control tick: jittered checkpoints + feature expire + failure
+    /// detection + downgrade evaluation. Returns an executed downgrade
+    /// plan if one fired.
+    pub fn control_tick(&self) -> Result<Option<DowngradePlan>> {
+        if self.scheduler.checkpoint_due() {
+            self.checkpoint()?;
+        }
+        if self.cfg.feature_ttl_ms > 0 {
+            for m in &self.masters {
+                m.expire_features(self.cfg.feature_ttl_ms);
+            }
+        }
+        let snap = self.monitor.snapshot();
+        let fire = {
+            let mut domino = self.domino.lock().unwrap();
+            snap.samples > 0 && domino.observe(snap.window_auc)
+        };
+        if fire {
+            let strategy = self.domino.lock().unwrap().strategy;
+            match self.vm.plan(&self.store, strategy) {
+                Ok(plan) => {
+                    self.execute_downgrade(&plan)?;
+                    return Ok(Some(plan));
+                }
+                Err(Error::State(_)) => return Ok(None), // nothing to roll to
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(None)
+    }
+
+    /// Execute a downgrade (§4.3.2b): freeze masters, roll master state
+    /// back to the target checkpoint, rebuild every slave replica from the
+    /// same checkpoint (full sync), fast-forward scatters past the stale
+    /// queue tail, unfreeze.
+    pub fn execute_downgrade(&self, plan: &DowngradePlan) -> Result<()> {
+        for m in &self.masters {
+            m.set_frozen(true);
+        }
+        let result = (|| -> Result<()> {
+            for m in &self.masters {
+                m.load_checkpoint(&self.store, plan.target_version)?;
+            }
+            // Slaves: clear + full sync from the rolled-back masters'
+            // checkpoint snapshots, then skip the queue's poisoned tail
+            // (new master state will stream from the current end).
+            let snapshots: Vec<Vec<u8>> = self
+                .masters
+                .iter()
+                .map(|m| self.store.load_shard(&self.cfg.model_name, plan.target_version, m.shard_id))
+                .collect::<Result<Vec<_>>>()?;
+            for (sidx, shard) in self.slaves.iter().enumerate() {
+                for (ridx, replica) in shard.iter().enumerate() {
+                    replica.clear();
+                    for snap in &snapshots {
+                        replica.full_sync_from_snapshot(snap)?;
+                    }
+                    replica.set_version(plan.target_version);
+                    self.scatters[sidx][ridx].lock().unwrap().seek_to_latest()?;
+                }
+            }
+            Ok(())
+        })();
+        for m in &self.masters {
+            m.set_frozen(false);
+        }
+        result?;
+        self.vm.commit(plan);
+        Ok(())
+    }
+
+    /// Manual version switch (the paper's "person can specify the
+    /// appropriate version ... manually").
+    pub fn switch_version(&self, target_version: u64) -> Result<()> {
+        let manifest = self.store.load_manifest(&self.cfg.model_name, target_version)?;
+        let plan = DowngradePlan {
+            from_version: self.vm.current(),
+            target_version,
+            queue_offsets: manifest.queue_offsets,
+            target_metric: manifest.metric,
+        };
+        self.execute_downgrade(&plan)
+    }
+
+    // -- failure injection + recovery (E4) -------------------------------------
+
+    /// Kill a slave replica (serving fails over to its peers).
+    pub fn kill_slave(&self, shard: usize, replica: usize) {
+        self.slaves[shard][replica].set_healthy(false);
+    }
+
+    /// Recover a slave replica: full sync from the newest checkpoint, then
+    /// replay the queue from the checkpoint's recorded offsets (§4.2.1b's
+    /// "external queue as the real-time incremental backup").
+    pub fn recover_slave(&self, shard: usize, replica: usize) -> Result<()> {
+        let version = self
+            .store
+            .latest_version(&self.cfg.model_name)
+            .ok_or_else(|| Error::Checkpoint("no checkpoint to recover from".into()))?;
+        let manifest = self.store.load_manifest(&self.cfg.model_name, version)?;
+        let target = &self.slaves[shard][replica];
+        target.clear();
+        for m in &self.masters {
+            let snap = self.store.load_shard(&self.cfg.model_name, version, m.shard_id)?;
+            target.full_sync_from_snapshot(&snap)?;
+        }
+        target.set_version(version);
+        // Seek the replica's scatter to the checkpoint offsets of its
+        // subscribed partitions, then drain to catch up.
+        {
+            let mut sc = self.scatters[shard][replica].lock().unwrap();
+            let offsets: Vec<u64> = sc
+                .partitions()
+                .iter()
+                .map(|p| manifest.queue_offsets.get(*p as usize).copied().unwrap_or(0))
+                .collect();
+            sc.seek(&offsets)?;
+            sc.poll(Duration::ZERO)?;
+        }
+        target.set_healthy(true);
+        self.groups[shard].reset_failures();
+        Ok(())
+    }
+
+    /// Crash a master shard (replaces it with an empty shard object).
+    /// Returns the dead shard's row count for verification.
+    pub fn crash_master(&mut self, shard: usize) -> Result<usize> {
+        let rows = self.masters[shard].total_rows();
+        let fresh = Arc::new(MasterShard::new(
+            shard as u32,
+            self.spec.clone(),
+            Some(self.engine.clone()),
+            self.cfg.entry_threshold,
+            self.clock.clone(),
+        )?);
+        // Rewire: gather + trainer channels point at the new object.
+        self.gathers[shard] =
+            Mutex::new(Gather::new(fresh.clone(), self.cfg.gather_mode, self.clock.clone()));
+        self.masters[shard] = fresh;
+        self.rewire_trainer();
+        Ok(rows)
+    }
+
+    /// Partial recovery of one master shard from the newest checkpoint +
+    /// replay of its own sync partition (strong-consistency incremental
+    /// backup, §4.2.1b/e).
+    pub fn recover_master(&self, shard: usize) -> Result<u64> {
+        let version = self.scheduler.recover_shard(&self.masters[shard])?;
+        let manifest = self.store.load_manifest(&self.cfg.model_name, version)?;
+        // Replay this shard's partition from the checkpoint offset: sync
+        // batches carry full (z, n, w) rows, so upserting them restores
+        // every post-checkpoint update.
+        let partition_id =
+            crate::sync::router::partition_of_shard(shard as u32, self.topic.partition_count() as u32);
+        let start = manifest.queue_offsets.get(partition_id as usize).copied().unwrap_or(0);
+        let partition = self.topic.partition(partition_id as usize)?;
+        let mut offset = start.max(partition.earliest_offset());
+        let master = &self.masters[shard];
+        loop {
+            let records = partition.fetch(offset, 256, Duration::ZERO)?;
+            if records.is_empty() {
+                break;
+            }
+            for rec in &records {
+                offset = rec.offset + 1;
+                let raw = crate::codec::decompress(&rec.payload)?;
+                let batch =
+                    <crate::proto::SyncBatch as crate::codec::Decode>::from_bytes(&raw)?;
+                if batch.shard != shard as u32 || !batch.dense.is_empty() {
+                    continue;
+                }
+                master.replay_sync_batch(&batch)?;
+            }
+        }
+        Ok(version)
+    }
+
+    fn rewire_trainer(&mut self) {
+        let channels: Vec<Channel> = self
+            .masters
+            .iter()
+            .map(|m| {
+                Channel::local(Arc::new(MasterService {
+                    shard: m.clone(),
+                    store: Some(self.store.clone()),
+                }))
+            })
+            .collect();
+        self.trainer = Trainer::new(
+            self.engine.clone(),
+            self.spec.clone(),
+            ShardedClient::new(&self.cfg.model_name, channels),
+            self.monitor.clone(),
+        );
+    }
+
+    /// Inject parameter corruption into every master shard (E5: the
+    /// "abnormal change" a downgrade must catch): flips the sign and
+    /// inflates all first-order serving weights.
+    pub fn corrupt_model(&self) -> Result<()> {
+        for m in &self.masters {
+            m.corrupt_for_test(8.0)?;
+        }
+        Ok(())
+    }
+
+    // -- background pumps (wall-clock mode) -------------------------------------
+
+    /// Spawn sync + control pump threads (examples / CLI local mode).
+    pub fn start_pumps(self: &Arc<Self>, sync_interval: Duration, control_interval: Duration) {
+        if self.pumps_running.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let me = self.clone();
+        let running = self.pumps_running.clone();
+        let h1 = std::thread::Builder::new()
+            .name("weips-sync-pump".into())
+            .spawn(move || {
+                while running.load(Ordering::Acquire) {
+                    let _ = me.sync_tick();
+                    std::thread::sleep(sync_interval);
+                }
+            })
+            .expect("spawn sync pump");
+        let me = self.clone();
+        let running = self.pumps_running.clone();
+        let h2 = std::thread::Builder::new()
+            .name("weips-control-pump".into())
+            .spawn(move || {
+                while running.load(Ordering::Acquire) {
+                    let _ = me.control_tick();
+                    std::thread::sleep(control_interval);
+                }
+            })
+            .expect("spawn control pump");
+        self.pump_handles.lock().unwrap().extend([h1, h2]);
+    }
+
+    /// Stop the background pumps.
+    pub fn stop_pumps(&self) {
+        self.pumps_running.store(false, Ordering::SeqCst);
+        for h in self.pump_handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for LocalCluster {
+    fn drop(&mut self) {
+        self.stop_pumps();
+        if self.owns_data_dir {
+            let _ = std::fs::remove_dir_all(&self.data_dir);
+        }
+    }
+}

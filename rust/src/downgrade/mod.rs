@@ -1,0 +1,316 @@
+//! Domino downgrade (§4.3.2): automatic version rollback.
+//!
+//! "The downgrade here refers to recover the model to the previous latest
+//! stable version when the model occurs an abnormal change." Split exactly
+//! as the paper does:
+//!
+//! - **trigger**: a [`Trigger`](crate::monitor::Trigger) watches the
+//!   windowed business metric (plain or smoothed threshold);
+//! - **execution**: pick a target version by strategy (latest stable /
+//!   optimal metric), hot-switch the serving version, and resume streaming
+//!   from the queue offsets recorded in that version's checkpoint
+//!   manifest.
+//!
+//! The [`VersionManager`] is the bookkeeping half: which versions exist,
+//! which are marked stable, what the current serving version is. The
+//! actual state movement (master reload + slave full-sync + scatter seek)
+//! is performed by the coordinator through [`DowngradePlan`].
+
+use std::sync::Mutex;
+
+use crate::monitor::Trigger;
+use crate::storage::{CheckpointStore, CkptManifest};
+use crate::{Error, Result};
+
+/// How the execution phase picks the rollback target (§4.3.2b: "the latest
+/// version strategy and the optimal index version strategy").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwitchStrategy {
+    /// Most recent version older than the failing one.
+    LatestStable,
+    /// Version with the best recorded business metric.
+    OptimalMetric,
+}
+
+/// Everything the coordinator needs to execute a downgrade.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DowngradePlan {
+    /// Version being rolled back *from*.
+    pub from_version: u64,
+    /// Target version to load.
+    pub target_version: u64,
+    /// Queue offsets stored in the target's checkpoint (replay start).
+    pub queue_offsets: Vec<u64>,
+    /// Target's recorded metric (for logs).
+    pub target_metric: f64,
+}
+
+/// Version bookkeeping for one model.
+pub struct VersionManager {
+    model: String,
+    state: Mutex<VmState>,
+}
+
+struct VmState {
+    current: u64,
+    /// Versions explicitly marked bad (never roll back onto these).
+    quarantined: Vec<u64>,
+    /// The last version a downgrade landed on (drives the domino cascade:
+    /// a re-fire while still serving it quarantines it and falls further).
+    last_rollback: Option<u64>,
+}
+
+impl VersionManager {
+    /// Manager for `model`, serving `current` initially (0 = none).
+    pub fn new(model: &str, current: u64) -> VersionManager {
+        VersionManager {
+            model: model.to_string(),
+            state: Mutex::new(VmState { current, quarantined: Vec::new(), last_rollback: None }),
+        }
+    }
+
+    /// Currently served version.
+    pub fn current(&self) -> u64 {
+        self.state.lock().unwrap().current
+    }
+
+    /// Record that a new checkpoint version is now being served.
+    pub fn advance(&self, version: u64) {
+        let mut s = self.state.lock().unwrap();
+        if version > s.current {
+            s.current = version;
+        }
+    }
+
+    /// Mark a version as bad (the one we downgraded away from).
+    pub fn quarantine(&self, version: u64) {
+        let mut s = self.state.lock().unwrap();
+        if !s.quarantined.contains(&version) {
+            s.quarantined.push(version);
+        }
+    }
+
+    /// True when the version is quarantined.
+    pub fn is_quarantined(&self, version: u64) -> bool {
+        self.state.lock().unwrap().quarantined.contains(&version)
+    }
+
+    /// Candidate rollback versions: finalized, `<= upto`, not quarantined;
+    /// newest first.
+    pub fn candidates(&self, store: &CheckpointStore, upto: u64) -> Vec<CkptManifest> {
+        let s = self.state.lock().unwrap();
+        let mut out: Vec<CkptManifest> = store
+            .list_versions(&self.model)
+            .into_iter()
+            .filter(|v| *v <= upto && !s.quarantined.contains(v))
+            .filter_map(|v| store.load_manifest(&self.model, v).ok())
+            .collect();
+        out.sort_by(|a, b| b.version.cmp(&a.version));
+        out
+    }
+
+    /// Build a downgrade plan by strategy.
+    ///
+    /// Rolling back *onto the currently served checkpoint* is legal — the
+    /// common failure is live streaming drift past a healthy checkpoint.
+    /// The domino cascade: if the trigger fires again while already serving
+    /// a rollback target, that version is itself quarantined and the next
+    /// older candidate is chosen. Errors when nothing is left to roll to.
+    pub fn plan(
+        &self,
+        store: &CheckpointStore,
+        strategy: SwitchStrategy,
+    ) -> Result<DowngradePlan> {
+        let from = self.current();
+        // Domino step: a repeat fire on the version we already rolled onto
+        // condemns that version too.
+        {
+            let mut s = self.state.lock().unwrap();
+            if s.last_rollback == Some(s.current) && !s.quarantined.contains(&s.current) {
+                let v = s.current;
+                s.quarantined.push(v);
+            }
+        }
+        let candidates = self.candidates(store, from);
+        let target = match strategy {
+            SwitchStrategy::LatestStable => candidates.first(),
+            SwitchStrategy::OptimalMetric => candidates
+                .iter()
+                .max_by(|a, b| a.metric.partial_cmp(&b.metric).unwrap_or(std::cmp::Ordering::Equal)),
+        };
+        let target = target.ok_or_else(|| {
+            Error::State(format!("no rollback candidate at or below v{from} for {}", self.model))
+        })?;
+        Ok(DowngradePlan {
+            from_version: from,
+            target_version: target.version,
+            queue_offsets: target.queue_offsets.clone(),
+            target_metric: target.metric,
+        })
+    }
+
+    /// Commit a completed downgrade: current = target; every version newer
+    /// than the target is lineage-suspect and quarantined.
+    pub fn commit(&self, plan: &DowngradePlan) {
+        let mut s = self.state.lock().unwrap();
+        if plan.from_version > plan.target_version
+            && !s.quarantined.contains(&plan.from_version)
+        {
+            s.quarantined.push(plan.from_version);
+        }
+        s.current = plan.target_version;
+        s.last_rollback = Some(plan.target_version);
+    }
+}
+
+/// Trigger + strategy bundle driven by the coordinator's metric loop.
+pub struct Domino {
+    trigger: Box<dyn Trigger>,
+    pub strategy: SwitchStrategy,
+    /// Suppress re-triggering for this many observations after a fire.
+    cooldown: usize,
+    remaining_cooldown: usize,
+    pub fires: u64,
+}
+
+impl Domino {
+    /// New domino controller.
+    pub fn new(trigger: Box<dyn Trigger>, strategy: SwitchStrategy, cooldown: usize) -> Domino {
+        Domino { trigger, strategy, cooldown, remaining_cooldown: 0, fires: 0 }
+    }
+
+    /// Feed a metric point; true when a downgrade should execute now.
+    pub fn observe(&mut self, metric: f64) -> bool {
+        if self.remaining_cooldown > 0 {
+            self.remaining_cooldown -= 1;
+            // Still feed the trigger so its window stays warm.
+            let _ = self.trigger.observe(metric);
+            return false;
+        }
+        if self.trigger.observe(metric) {
+            self.fires += 1;
+            self.remaining_cooldown = self.cooldown;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::monitor::{PlainThreshold, SmoothedThreshold};
+    use crate::storage::CkptManifest;
+
+    fn store_with_versions(metrics: &[(u64, f64)]) -> (CheckpointStore, std::path::PathBuf) {
+        let base = std::env::temp_dir().join(format!(
+            "weips-dg-{}-{:x}",
+            std::process::id(),
+            crate::util::mono_ns()
+        ));
+        let store = CheckpointStore::new(base.join("local"), None);
+        for (v, metric) in metrics {
+            store.save_shard("ctr", *v, 0, b"state").unwrap();
+            store
+                .write_manifest(&CkptManifest {
+                    model: "ctr".into(),
+                    version: *v,
+                    created_ms: *v * 1000,
+                    num_shards: 1,
+                    queue_offsets: vec![*v * 10],
+                    metric: *metric,
+                })
+                .unwrap();
+        }
+        (store, base)
+    }
+
+    #[test]
+    fn latest_stable_picks_newest_older() {
+        let (store, base) = store_with_versions(&[(1, 0.70), (2, 0.74), (3, 0.72)]);
+        let vm = VersionManager::new("ctr", 4);
+        let plan = vm.plan(&store, SwitchStrategy::LatestStable).unwrap();
+        assert_eq!(plan.target_version, 3);
+        assert_eq!(plan.queue_offsets, vec![30]);
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn optimal_metric_picks_best() {
+        let (store, base) = store_with_versions(&[(1, 0.70), (2, 0.74), (3, 0.72)]);
+        let vm = VersionManager::new("ctr", 4);
+        let plan = vm.plan(&store, SwitchStrategy::OptimalMetric).unwrap();
+        assert_eq!(plan.target_version, 2);
+        assert!((plan.target_metric - 0.74).abs() < 1e-9);
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn quarantined_versions_skipped() {
+        let (store, base) = store_with_versions(&[(1, 0.70), (2, 0.74), (3, 0.72)]);
+        let vm = VersionManager::new("ctr", 4);
+        vm.quarantine(3);
+        let plan = vm.plan(&store, SwitchStrategy::LatestStable).unwrap();
+        assert_eq!(plan.target_version, 2);
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn commit_quarantines_source_and_switches() {
+        let (store, base) = store_with_versions(&[(1, 0.70), (2, 0.74)]);
+        let vm = VersionManager::new("ctr", 3);
+        let plan = vm.plan(&store, SwitchStrategy::LatestStable).unwrap();
+        vm.commit(&plan);
+        assert_eq!(vm.current(), 2);
+        assert!(vm.is_quarantined(3));
+        // Next downgrade from v2 lands on v1.
+        let plan2 = vm.plan(&store, SwitchStrategy::LatestStable).unwrap();
+        assert_eq!(plan2.target_version, 1);
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn no_candidates_is_error() {
+        let (store, base) = store_with_versions(&[]);
+        let vm = VersionManager::new("ctr", 1);
+        assert!(vm.plan(&store, SwitchStrategy::LatestStable).is_err());
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn advance_is_monotonic() {
+        let vm = VersionManager::new("ctr", 5);
+        vm.advance(7);
+        vm.advance(6); // stale advance ignored
+        assert_eq!(vm.current(), 7);
+    }
+
+    #[test]
+    fn domino_cooldown_prevents_thrash() {
+        let mut d = Domino::new(Box::new(PlainThreshold { threshold: 0.7 }), SwitchStrategy::LatestStable, 3);
+        assert!(d.observe(0.5)); // fires
+        assert!(!d.observe(0.5)); // cooldown
+        assert!(!d.observe(0.5));
+        assert!(!d.observe(0.5));
+        assert!(d.observe(0.5)); // cooldown over, still bad -> fires again
+        assert_eq!(d.fires, 2);
+    }
+
+    #[test]
+    fn domino_with_smoothed_trigger_end_to_end() {
+        let mut d = Domino::new(
+            Box::new(SmoothedThreshold::new(0.7, 3)),
+            SwitchStrategy::OptimalMetric,
+            0,
+        );
+        // Noise: no fire.
+        for v in [0.72, 0.65, 0.73, 0.66, 0.74] {
+            assert!(!d.observe(v));
+        }
+        // Regime change: fires after 3 consecutive bad points.
+        assert!(!d.observe(0.6));
+        assert!(!d.observe(0.59));
+        assert!(d.observe(0.58));
+    }
+}

@@ -1,0 +1,69 @@
+//! Crate-wide error type.
+
+/// Errors produced by WeiPS subsystems.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Wire / checkpoint decoding failed.
+    #[error("codec error: {0}")]
+    Codec(String),
+    /// I/O error (sockets, checkpoint files, queue segments).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    /// RPC-level failure (timeout, connection reset, remote fault).
+    #[error("rpc error: {0}")]
+    Rpc(String),
+    /// Request routed to a shard/partition that does not exist.
+    #[error("routing error: {0}")]
+    Routing(String),
+    /// Queue consumer asked for an offset outside the retained range.
+    #[error("offset out of range: {0}")]
+    OffsetOutOfRange(String),
+    /// Metadata store conflict (CAS failure / stale version).
+    #[error("meta conflict: {0}")]
+    MetaConflict(String),
+    /// Checkpoint missing or corrupt.
+    #[error("checkpoint error: {0}")]
+    Checkpoint(String),
+    /// PJRT / XLA runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    /// Configuration file invalid.
+    #[error("config error: {0}")]
+    Config(String),
+    /// Node is not in a state where the operation is legal.
+    #[error("illegal state: {0}")]
+    State(String),
+    /// Referenced model/version/table is unknown.
+    #[error("not found: {0}")]
+    NotFound(String),
+    /// Service deliberately rejecting load (backpressure / degraded).
+    #[error("unavailable: {0}")]
+    Unavailable(String),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::Routing("shard 7 of 4".into());
+        assert!(e.to_string().contains("shard 7 of 4"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::Other, "boom");
+        let e: Error = ioe.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,38 @@
+//! # WeiPS — symmetric fusion parameter server for large-scale online learning
+//!
+//! Reproduction of *WeiPS: a symmetric fusion model framework for large-scale
+//! online learning* (Sina Weibo, 2020) as a three-layer Rust + JAX + Pallas
+//! stack. The Rust layer (this crate) is the entire runtime system: parameter
+//! servers (master/slave), the streaming synchronization pipeline, the
+//! scheduler, workers, and every substrate the paper depends on (partitioned
+//! queue, metadata store, checkpoint storage). Model math is authored in JAX
+//! (+ Pallas kernels) and AOT-compiled to HLO executed through PJRT — Python
+//! is never on the request path.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod cli;
+pub mod codec;
+pub mod config;
+pub mod coordinator;
+pub mod downgrade;
+pub mod error;
+pub mod joiner;
+pub mod meta;
+pub mod monitor;
+pub mod net;
+pub mod optim;
+pub mod proto;
+pub mod queue;
+pub mod replica;
+pub mod runtime;
+pub mod sample;
+pub mod scheduler;
+pub mod server;
+pub mod storage;
+pub mod sync;
+pub mod table;
+pub mod util;
+pub mod worker;
+
+pub use error::{Error, Result};

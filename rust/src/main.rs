@@ -1,0 +1,9 @@
+//! WeiPS launcher — role entrypoint (broker / master / slave / trainer /
+//! predictor) plus an all-in-one `local` mode. Run `weips help`.
+
+fn main() {
+    if let Err(e) = weips::cli::run(std::env::args().skip(1).collect()) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,425 @@
+//! Metadata / coordination store (the ZooKeeper / etcd substitute, §3.3).
+//!
+//! The scheduler keeps all global metadata here: node registry, shard
+//! assignments, model version pointers, migration plans. Primitives match
+//! what ZK/etcd give the paper's scheduler: versioned KV with compare-and-
+//! swap, prefix listing, watches, ephemeral keys bound to heartbeat-kept
+//! sessions, and leader election built on ephemerals.
+//!
+//! Single-process by design (the scheduler embeds one store and exposes it
+//! over RPC); durability comes from the checkpoint store, matching the
+//! paper's "scheduler ... maintains global metadata and is stateless".
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::util::clock::Clock;
+use crate::{Error, Result};
+
+/// A change notification delivered to watchers.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WatchEvent {
+    /// Key created or updated (new version attached).
+    Put { key: String, version: u64 },
+    /// Key removed (explicitly or via session expiry).
+    Delete { key: String },
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    value: Vec<u8>,
+    version: u64,
+    /// Session owning this ephemeral key (None = persistent).
+    ephemeral: Option<u64>,
+}
+
+struct Watcher {
+    prefix: String,
+    tx: Sender<WatchEvent>,
+}
+
+#[derive(Debug, Clone)]
+struct Session {
+    last_seen_ms: u64,
+    ttl_ms: u64,
+}
+
+struct State {
+    entries: BTreeMap<String, Entry>,
+    sessions: BTreeMap<u64, Session>,
+    watchers: Vec<Watcher>,
+    next_session: u64,
+    next_version: u64,
+}
+
+/// The coordination store. Cheap to clone (shared state).
+#[derive(Clone)]
+pub struct MetaStore {
+    state: Arc<Mutex<State>>,
+    clock: Arc<dyn Clock>,
+}
+
+impl MetaStore {
+    /// New empty store on `clock`.
+    pub fn new(clock: Arc<dyn Clock>) -> MetaStore {
+        MetaStore {
+            state: Arc::new(Mutex::new(State {
+                entries: BTreeMap::new(),
+                sessions: BTreeMap::new(),
+                watchers: Vec::new(),
+                next_session: 1,
+                next_version: 1,
+            })),
+            clock,
+        }
+    }
+
+    fn notify(state: &mut State, event: WatchEvent) {
+        let key = match &event {
+            WatchEvent::Put { key, .. } => key.clone(),
+            WatchEvent::Delete { key } => key.clone(),
+        };
+        state
+            .watchers
+            .retain(|w| !key.starts_with(&w.prefix) || w.tx.send(event.clone()).is_ok());
+    }
+
+    /// Unconditional put; returns the new version.
+    pub fn put(&self, key: &str, value: impl Into<Vec<u8>>) -> u64 {
+        let mut s = self.state.lock().unwrap();
+        let version = s.next_version;
+        s.next_version += 1;
+        s.entries
+            .insert(key.to_string(), Entry { value: value.into(), version, ephemeral: None });
+        Self::notify(&mut s, WatchEvent::Put { key: key.to_string(), version });
+        version
+    }
+
+    /// Compare-and-swap: succeeds only if the current version matches
+    /// `expected` (0 = key must not exist). Returns the new version.
+    pub fn cas(&self, key: &str, expected: u64, value: impl Into<Vec<u8>>) -> Result<u64> {
+        let mut s = self.state.lock().unwrap();
+        let current = s.entries.get(key).map(|e| e.version).unwrap_or(0);
+        if current != expected {
+            return Err(Error::MetaConflict(format!(
+                "{key}: version {current} != expected {expected}"
+            )));
+        }
+        let version = s.next_version;
+        s.next_version += 1;
+        let ephemeral = s.entries.get(key).and_then(|e| e.ephemeral);
+        s.entries
+            .insert(key.to_string(), Entry { value: value.into(), version, ephemeral });
+        Self::notify(&mut s, WatchEvent::Put { key: key.to_string(), version });
+        Ok(version)
+    }
+
+    /// Read a key: `(value, version)`.
+    pub fn get(&self, key: &str) -> Option<(Vec<u8>, u64)> {
+        let s = self.state.lock().unwrap();
+        s.entries.get(key).map(|e| (e.value.clone(), e.version))
+    }
+
+    /// Delete a key; true if it existed.
+    pub fn delete(&self, key: &str) -> bool {
+        let mut s = self.state.lock().unwrap();
+        let existed = s.entries.remove(key).is_some();
+        if existed {
+            Self::notify(&mut s, WatchEvent::Delete { key: key.to_string() });
+        }
+        existed
+    }
+
+    /// All keys with `prefix`, with values and versions.
+    pub fn list(&self, prefix: &str) -> Vec<(String, Vec<u8>, u64)> {
+        let s = self.state.lock().unwrap();
+        s.entries
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, e)| (k.clone(), e.value.clone(), e.version))
+            .collect()
+    }
+
+    /// Subscribe to changes under `prefix`. Events arrive on the receiver.
+    pub fn watch(&self, prefix: &str) -> Receiver<WatchEvent> {
+        let (tx, rx) = channel();
+        let mut s = self.state.lock().unwrap();
+        s.watchers.push(Watcher { prefix: prefix.to_string(), tx });
+        rx
+    }
+
+    // -- sessions / ephemerals ------------------------------------------------
+
+    /// Open a session with `ttl_ms`; keep alive via [`MetaStore::heartbeat`].
+    pub fn open_session(&self, ttl_ms: u64) -> u64 {
+        let mut s = self.state.lock().unwrap();
+        let id = s.next_session;
+        s.next_session += 1;
+        let now = self.clock.now_ms();
+        s.sessions.insert(id, Session { last_seen_ms: now, ttl_ms });
+        id
+    }
+
+    /// Refresh a session; errors if it already expired.
+    pub fn heartbeat(&self, session: u64) -> Result<()> {
+        let mut s = self.state.lock().unwrap();
+        let now = self.clock.now_ms();
+        match s.sessions.get_mut(&session) {
+            Some(sess) => {
+                sess.last_seen_ms = now;
+                Ok(())
+            }
+            None => Err(Error::State(format!("session {session} expired or unknown"))),
+        }
+    }
+
+    /// Create a key bound to `session`; it is deleted when the session dies.
+    pub fn put_ephemeral(&self, session: u64, key: &str, value: impl Into<Vec<u8>>) -> Result<u64> {
+        let mut s = self.state.lock().unwrap();
+        if !s.sessions.contains_key(&session) {
+            return Err(Error::State(format!("session {session} expired or unknown")));
+        }
+        let version = s.next_version;
+        s.next_version += 1;
+        s.entries.insert(
+            key.to_string(),
+            Entry { value: value.into(), version, ephemeral: Some(session) },
+        );
+        Self::notify(&mut s, WatchEvent::Put { key: key.to_string(), version });
+        Ok(version)
+    }
+
+    /// Expire overdue sessions, removing their ephemerals. Returns the list
+    /// of expired session ids. Call periodically (the scheduler ticks this).
+    pub fn expire_sessions(&self) -> Vec<u64> {
+        let mut s = self.state.lock().unwrap();
+        let now = self.clock.now_ms();
+        let dead: Vec<u64> = s
+            .sessions
+            .iter()
+            .filter(|(_, sess)| now.saturating_sub(sess.last_seen_ms) > sess.ttl_ms)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in &dead {
+            s.sessions.remove(id);
+            let keys: Vec<String> = s
+                .entries
+                .iter()
+                .filter(|(_, e)| e.ephemeral == Some(*id))
+                .map(|(k, _)| k.clone())
+                .collect();
+            for k in keys {
+                s.entries.remove(&k);
+                Self::notify(&mut s, WatchEvent::Delete { key: k });
+            }
+        }
+        dead
+    }
+
+    /// Close a session explicitly (graceful shutdown), removing ephemerals.
+    pub fn close_session(&self, session: u64) {
+        let mut s = self.state.lock().unwrap();
+        s.sessions.remove(&session);
+        let keys: Vec<String> = s
+            .entries
+            .iter()
+            .filter(|(_, e)| e.ephemeral == Some(session))
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in keys {
+            s.entries.remove(&k);
+            Self::notify(&mut s, WatchEvent::Delete { key: k });
+        }
+    }
+
+    // -- leader election -------------------------------------------------------
+
+    /// Try to become leader for `role` using `session`'s lifetime as the
+    /// lease. Returns true if this session now holds (or already held) the
+    /// leadership key.
+    pub fn try_lead(&self, role: &str, session: u64, node: &str) -> Result<bool> {
+        let key = format!("/election/{role}");
+        {
+            let s = self.state.lock().unwrap();
+            if !s.sessions.contains_key(&session) {
+                return Err(Error::State(format!("session {session} expired or unknown")));
+            }
+            if let Some(e) = s.entries.get(&key) {
+                return Ok(e.ephemeral == Some(session));
+            }
+        }
+        // Vacant: race via ephemeral insert under the same lock.
+        let mut s = self.state.lock().unwrap();
+        if s.entries.contains_key(&key) {
+            return Ok(s.entries.get(&key).unwrap().ephemeral == Some(session));
+        }
+        let version = s.next_version;
+        s.next_version += 1;
+        s.entries.insert(
+            key.clone(),
+            Entry { value: node.as_bytes().to_vec(), version, ephemeral: Some(session) },
+        );
+        Self::notify(&mut s, WatchEvent::Put { key, version });
+        Ok(true)
+    }
+
+    /// Current leader node name for `role`, if any.
+    pub fn leader(&self, role: &str) -> Option<String> {
+        self.get(&format!("/election/{role}"))
+            .map(|(v, _)| String::from_utf8_lossy(&v).into_owned())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::ManualClock;
+
+    fn store() -> (MetaStore, ManualClock) {
+        let clock = ManualClock::new(1_000);
+        (MetaStore::new(Arc::new(clock.clone())), clock)
+    }
+
+    #[test]
+    fn put_get_delete() {
+        let (m, _) = store();
+        let v1 = m.put("/a", b"1".to_vec());
+        let (val, ver) = m.get("/a").unwrap();
+        assert_eq!(val, b"1");
+        assert_eq!(ver, v1);
+        let v2 = m.put("/a", b"2".to_vec());
+        assert!(v2 > v1);
+        assert!(m.delete("/a"));
+        assert!(!m.delete("/a"));
+        assert!(m.get("/a").is_none());
+    }
+
+    #[test]
+    fn cas_enforces_versions() {
+        let (m, _) = store();
+        // Create-if-absent via expected=0.
+        let v1 = m.cas("/k", 0, b"x".to_vec()).unwrap();
+        assert!(m.cas("/k", 0, b"y".to_vec()).is_err());
+        let v2 = m.cas("/k", v1, b"y".to_vec()).unwrap();
+        assert!(v2 > v1);
+        assert!(m.cas("/k", v1, b"z".to_vec()).is_err());
+        assert_eq!(m.get("/k").unwrap().0, b"y");
+    }
+
+    #[test]
+    fn list_by_prefix_sorted() {
+        let (m, _) = store();
+        m.put("/nodes/m1", b"".to_vec());
+        m.put("/nodes/m0", b"".to_vec());
+        m.put("/other", b"".to_vec());
+        let keys: Vec<String> = m.list("/nodes/").into_iter().map(|(k, _, _)| k).collect();
+        assert_eq!(keys, vec!["/nodes/m0".to_string(), "/nodes/m1".to_string()]);
+    }
+
+    #[test]
+    fn watch_delivers_puts_and_deletes() {
+        let (m, _) = store();
+        let rx = m.watch("/models/");
+        m.put("/models/ctr/version", b"1".to_vec());
+        m.put("/nodes/x", b"".to_vec()); // outside prefix
+        m.delete("/models/ctr/version");
+        let e1 = rx.recv().unwrap();
+        assert!(matches!(e1, WatchEvent::Put { ref key, .. } if key == "/models/ctr/version"));
+        let e2 = rx.recv().unwrap();
+        assert_eq!(e2, WatchEvent::Delete { key: "/models/ctr/version".into() });
+        assert!(rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn dropped_watcher_is_pruned() {
+        let (m, _) = store();
+        drop(m.watch("/x/"));
+        m.put("/x/1", b"".to_vec()); // must not panic / leak
+        m.put("/x/2", b"".to_vec());
+    }
+
+    #[test]
+    fn ephemeral_dies_with_session_expiry() {
+        let (m, clock) = store();
+        let s = m.open_session(500);
+        m.put_ephemeral(s, "/nodes/w0", b"alive".to_vec()).unwrap();
+        assert!(m.get("/nodes/w0").is_some());
+
+        clock.advance(400);
+        assert_eq!(m.expire_sessions(), Vec::<u64>::new());
+        m.heartbeat(s).unwrap();
+        clock.advance(400);
+        assert_eq!(m.expire_sessions(), Vec::<u64>::new()); // refreshed
+        clock.advance(600);
+        assert_eq!(m.expire_sessions(), vec![s]);
+        assert!(m.get("/nodes/w0").is_none());
+        assert!(m.heartbeat(s).is_err());
+        assert!(m.put_ephemeral(s, "/nodes/w0", b"".to_vec()).is_err());
+    }
+
+    #[test]
+    fn close_session_removes_ephemerals() {
+        let (m, _) = store();
+        let s = m.open_session(10_000);
+        m.put_ephemeral(s, "/nodes/a", b"".to_vec()).unwrap();
+        m.put_ephemeral(s, "/nodes/b", b"".to_vec()).unwrap();
+        m.put("/nodes/keep", b"".to_vec());
+        m.close_session(s);
+        assert!(m.get("/nodes/a").is_none());
+        assert!(m.get("/nodes/b").is_none());
+        assert!(m.get("/nodes/keep").is_some());
+    }
+
+    #[test]
+    fn leader_election_failover() {
+        let (m, clock) = store();
+        let s1 = m.open_session(500);
+        let s2 = m.open_session(10_000);
+        assert!(m.try_lead("scheduler", s1, "node1").unwrap());
+        assert!(!m.try_lead("scheduler", s2, "node2").unwrap());
+        assert!(m.try_lead("scheduler", s1, "node1").unwrap()); // idempotent
+        assert_eq!(m.leader("scheduler").unwrap(), "node1");
+        // node1's session dies -> node2 can take over.
+        clock.advance(1_000);
+        m.expire_sessions();
+        assert_eq!(m.leader("scheduler"), None);
+        assert!(m.try_lead("scheduler", s2, "node2").unwrap());
+        assert_eq!(m.leader("scheduler").unwrap(), "node2");
+    }
+
+    #[test]
+    fn watch_sees_session_expiry_deletes() {
+        let (m, clock) = store();
+        let rx = m.watch("/nodes/");
+        let s = m.open_session(100);
+        m.put_ephemeral(s, "/nodes/w1", b"".to_vec()).unwrap();
+        clock.advance(500);
+        m.expire_sessions();
+        let events: Vec<WatchEvent> = rx.try_iter().collect();
+        assert!(events.contains(&WatchEvent::Delete { key: "/nodes/w1".into() }));
+    }
+
+    #[test]
+    fn concurrent_cas_single_winner() {
+        let (m, _) = store();
+        m.put("/ctr", 0u64.to_le_bytes().to_vec());
+        let (_, base) = m.get("/ctr").unwrap();
+        let m = Arc::new(m);
+        let wins = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let m = m.clone();
+            let wins = wins.clone();
+            handles.push(std::thread::spawn(move || {
+                if m.cas("/ctr", base, b"mine".to_vec()).is_ok() {
+                    wins.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(wins.load(std::sync::atomic::Ordering::SeqCst), 1);
+    }
+}

@@ -1,0 +1,362 @@
+//! Model metrics monitoring via progressive validation (§4.3.1).
+//!
+//! The paper's trick: "WeiPS uses the predicted result of the training
+//! samples as the estimated result of the current model parameters, this
+//! happens before the training sample data update gradients." The trainer
+//! therefore feeds every batch's *pre-update* predictions here — fresh
+//! evaluation data, with no samples withheld from training.
+//!
+//! Metrics: streaming AUC (fixed-bin rank estimator), logloss and CTR
+//! calibration, in both cumulative and sliding-window form; the sliding
+//! window is what the downgrade trigger watches (§4.3.2a: the smoothed
+//! threshold compares windowed metric levels, not single points).
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+const BINS: usize = 1024;
+
+/// Fixed-bin streaming AUC estimator: O(1) update, O(bins) read.
+#[derive(Debug, Clone)]
+pub struct StreamingAuc {
+    pos: Vec<u64>,
+    neg: Vec<u64>,
+    n_pos: u64,
+    n_neg: u64,
+}
+
+impl Default for StreamingAuc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StreamingAuc {
+    /// Empty estimator.
+    pub fn new() -> StreamingAuc {
+        StreamingAuc { pos: vec![0; BINS], neg: vec![0; BINS], n_pos: 0, n_neg: 0 }
+    }
+
+    /// Record one (prediction in [0,1], binary label) pair.
+    pub fn add(&mut self, pred: f32, label: f32) {
+        let bin = ((pred.clamp(0.0, 1.0) * (BINS - 1) as f32) as usize).min(BINS - 1);
+        if label > 0.5 {
+            self.pos[bin] += 1;
+            self.n_pos += 1;
+        } else {
+            self.neg[bin] += 1;
+            self.n_neg += 1;
+        }
+    }
+
+    /// Samples observed.
+    pub fn count(&self) -> u64 {
+        self.n_pos + self.n_neg
+    }
+
+    /// AUC estimate (0.5 when degenerate).
+    pub fn auc(&self) -> f64 {
+        if self.n_pos == 0 || self.n_neg == 0 {
+            return 0.5;
+        }
+        // P(score_pos > score_neg) + 0.5 P(equal), via bin sweep.
+        let mut neg_below = 0u64;
+        let mut auc_sum = 0.0f64;
+        for b in 0..BINS {
+            let p = self.pos[b] as f64;
+            let n = self.neg[b] as f64;
+            auc_sum += p * (neg_below as f64 + n / 2.0);
+            neg_below += self.neg[b];
+        }
+        auc_sum / (self.n_pos as f64 * self.n_neg as f64)
+    }
+
+    /// Merge another estimator into this one.
+    pub fn merge(&mut self, other: &StreamingAuc) {
+        for b in 0..BINS {
+            self.pos[b] += other.pos[b];
+            self.neg[b] += other.neg[b];
+        }
+        self.n_pos += other.n_pos;
+        self.n_neg += other.n_neg;
+    }
+
+    /// Reset to empty.
+    pub fn clear(&mut self) {
+        self.pos.iter_mut().for_each(|x| *x = 0);
+        self.neg.iter_mut().for_each(|x| *x = 0);
+        self.n_pos = 0;
+        self.n_neg = 0;
+    }
+}
+
+/// A point-in-time metrics snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MonitorSnapshot {
+    pub samples: u64,
+    /// Cumulative AUC since start.
+    pub auc: f64,
+    /// Sliding-window AUC (the downgrade trigger input).
+    pub window_auc: f64,
+    /// Cumulative mean logloss.
+    pub logloss: f64,
+    /// Mean prediction / mean label (1.0 = perfectly calibrated).
+    pub calibration: f64,
+}
+
+struct MonitorState {
+    cumulative: StreamingAuc,
+    window: VecDeque<StreamingAuc>,
+    window_chunk: StreamingAuc,
+    chunk_size: u64,
+    max_chunks: usize,
+    loss_sum: f64,
+    pred_sum: f64,
+    label_sum: f64,
+    samples: u64,
+}
+
+/// Progressive-validation monitor. Thread-safe; one per model.
+pub struct Monitor {
+    state: Mutex<MonitorState>,
+}
+
+impl Monitor {
+    /// `window_samples` ≈ sliding window size (rounded to 8 chunks).
+    pub fn new(window_samples: u64) -> Monitor {
+        let max_chunks = 8;
+        Monitor {
+            state: Mutex::new(MonitorState {
+                cumulative: StreamingAuc::new(),
+                window: VecDeque::new(),
+                window_chunk: StreamingAuc::new(),
+                chunk_size: (window_samples / max_chunks as u64).max(1),
+                max_chunks,
+                loss_sum: 0.0,
+                pred_sum: 0.0,
+                label_sum: 0.0,
+                samples: 0,
+            }),
+        }
+    }
+
+    /// Feed one batch of pre-update predictions + labels.
+    pub fn observe_batch(&self, preds: &[f32], labels: &[f32]) {
+        debug_assert_eq!(preds.len(), labels.len());
+        let mut s = self.state.lock().unwrap();
+        for (&p, &y) in preds.iter().zip(labels) {
+            let p64 = (p as f64).clamp(1e-7, 1.0 - 1e-7);
+            s.loss_sum -= if y > 0.5 { p64.ln() } else { (1.0 - p64).ln() };
+            s.pred_sum += p as f64;
+            s.label_sum += y as f64;
+            s.samples += 1;
+            s.cumulative.add(p, y);
+            s.window_chunk.add(p, y);
+            if s.window_chunk.count() >= s.chunk_size {
+                let full = std::mem::take(&mut s.window_chunk);
+                s.window.push_back(full);
+                if s.window.len() > s.max_chunks {
+                    s.window.pop_front();
+                }
+            }
+        }
+    }
+
+    /// Current metrics.
+    pub fn snapshot(&self) -> MonitorSnapshot {
+        let s = self.state.lock().unwrap();
+        let mut win = StreamingAuc::new();
+        for chunk in &s.window {
+            win.merge(chunk);
+        }
+        win.merge(&s.window_chunk);
+        MonitorSnapshot {
+            samples: s.samples,
+            auc: s.cumulative.auc(),
+            window_auc: win.auc(),
+            logloss: if s.samples == 0 { 0.0 } else { s.loss_sum / s.samples as f64 },
+            calibration: if s.label_sum == 0.0 { 1.0 } else { s.pred_sum / s.label_sum },
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Downgrade triggers (§4.3.2a)
+// ---------------------------------------------------------------------------
+
+/// A trigger decides, metric point by metric point, whether the model has
+/// degraded enough to roll back.
+pub trait Trigger: Send {
+    /// Feed one metric observation (higher = better, e.g. window AUC);
+    /// returns true when a downgrade should fire.
+    fn observe(&mut self, value: f64) -> bool;
+}
+
+/// Naive threshold: fire the moment the metric dips below `threshold`.
+/// Kept as the baseline the paper criticizes ("this may occur false
+/// alarms in action") — E5 quantifies the false-alarm rate.
+pub struct PlainThreshold {
+    pub threshold: f64,
+}
+
+impl Trigger for PlainThreshold {
+    fn observe(&mut self, value: f64) -> bool {
+        value < self.threshold
+    }
+}
+
+/// Smoothed threshold (§4.3.2a): "a smoothing threshold strategy that
+/// sample a few more contrast points can be used, and the threshold after
+/// smoothing can better catch the true change of the data distribution."
+/// Fires only when the mean of the last `smooth_k` points is below
+/// `threshold` AND each of those points individually dipped.
+pub struct SmoothedThreshold {
+    pub threshold: f64,
+    pub smooth_k: usize,
+    recent: VecDeque<f64>,
+}
+
+impl SmoothedThreshold {
+    /// New trigger over `smooth_k` contrast points.
+    pub fn new(threshold: f64, smooth_k: usize) -> SmoothedThreshold {
+        SmoothedThreshold { threshold, smooth_k: smooth_k.max(1), recent: VecDeque::new() }
+    }
+}
+
+impl Trigger for SmoothedThreshold {
+    fn observe(&mut self, value: f64) -> bool {
+        self.recent.push_back(value);
+        if self.recent.len() > self.smooth_k {
+            self.recent.pop_front();
+        }
+        if self.recent.len() < self.smooth_k {
+            return false;
+        }
+        let mean: f64 = self.recent.iter().sum::<f64>() / self.recent.len() as f64;
+        mean < self.threshold && self.recent.iter().all(|v| *v < self.threshold)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn auc_perfect_and_random() {
+        let mut a = StreamingAuc::new();
+        for i in 0..500 {
+            a.add(0.9 + (i % 10) as f32 * 0.01, 1.0);
+            a.add(0.1 - (i % 10) as f32 * 0.01, 0.0);
+        }
+        assert!(a.auc() > 0.99, "{}", a.auc());
+
+        let mut r = StreamingAuc::new();
+        let mut rng = Rng::new(1);
+        for _ in 0..20_000 {
+            r.add(rng.gen_f32(), if rng.gen_bool(0.5) { 1.0 } else { 0.0 });
+        }
+        assert!((r.auc() - 0.5).abs() < 0.02, "{}", r.auc());
+    }
+
+    #[test]
+    fn auc_degenerate_cases() {
+        let a = StreamingAuc::new();
+        assert_eq!(a.auc(), 0.5);
+        let mut only_pos = StreamingAuc::new();
+        only_pos.add(0.8, 1.0);
+        assert_eq!(only_pos.auc(), 0.5);
+    }
+
+    #[test]
+    fn auc_matches_exact_computation() {
+        // Compare against the O(n^2) pairwise definition on a small set.
+        let preds = [0.1f32, 0.4, 0.35, 0.8, 0.65, 0.2, 0.9, 0.5];
+        let labels = [0.0f32, 0.0, 1.0, 1.0, 1.0, 0.0, 1.0, 0.0];
+        let mut a = StreamingAuc::new();
+        for (p, y) in preds.iter().zip(&labels) {
+            a.add(*p, *y);
+        }
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for i in 0..preds.len() {
+            for j in 0..preds.len() {
+                if labels[i] > 0.5 && labels[j] < 0.5 {
+                    den += 1.0;
+                    if preds[i] > preds[j] {
+                        num += 1.0;
+                    } else if preds[i] == preds[j] {
+                        num += 0.5;
+                    }
+                }
+            }
+        }
+        assert!((a.auc() - num / den).abs() < 0.01, "{} vs {}", a.auc(), num / den);
+    }
+
+    #[test]
+    fn monitor_tracks_quality_shift() {
+        // Good predictions, then inverted ones: window AUC collapses while
+        // cumulative AUC degrades slowly — exactly why the trigger watches
+        // the window.
+        let m = Monitor::new(1_000);
+        let mut rng = Rng::new(7);
+        for _ in 0..3_000 {
+            let y = rng.gen_bool(0.5);
+            let p = if y { 0.6 + 0.3 * rng.gen_f32() } else { 0.1 + 0.3 * rng.gen_f32() };
+            m.observe_batch(&[p], &[y as u8 as f32]);
+        }
+        let good = m.snapshot();
+        assert!(good.auc > 0.9 && good.window_auc > 0.9);
+        for _ in 0..1_500 {
+            let y = rng.gen_bool(0.5);
+            let p = if y { 0.1 + 0.3 * rng.gen_f32() } else { 0.6 + 0.3 * rng.gen_f32() };
+            m.observe_batch(&[p], &[y as u8 as f32]);
+        }
+        let bad = m.snapshot();
+        assert!(bad.window_auc < 0.2, "window {}", bad.window_auc);
+        assert!(bad.auc > bad.window_auc, "cumulative lags the window");
+        assert!(bad.logloss > good.logloss);
+    }
+
+    #[test]
+    fn calibration_detects_bias() {
+        let m = Monitor::new(100);
+        // Predict 0.8 when the true rate is 0.4 -> calibration ~2.
+        let mut rng = Rng::new(3);
+        for _ in 0..2_000 {
+            m.observe_batch(&[0.8], &[rng.gen_bool(0.4) as u8 as f32]);
+        }
+        let snap = m.snapshot();
+        assert!((snap.calibration - 2.0).abs() < 0.3, "{}", snap.calibration);
+    }
+
+    #[test]
+    fn plain_trigger_fires_on_single_dip() {
+        let mut t = PlainThreshold { threshold: 0.7 };
+        assert!(!t.observe(0.75));
+        assert!(t.observe(0.69)); // one noisy point = false alarm
+    }
+
+    #[test]
+    fn smoothed_trigger_ignores_noise_catches_shift() {
+        let mut t = SmoothedThreshold::new(0.7, 3);
+        // Noisy single dips never fire.
+        for v in [0.75, 0.65, 0.75, 0.64, 0.78, 0.66, 0.8] {
+            assert!(!t.observe(v), "fired on noise at {v}");
+        }
+        // Sustained degradation fires within k points.
+        assert!(!t.observe(0.6));
+        assert!(!t.observe(0.58));
+        assert!(t.observe(0.55));
+    }
+
+    #[test]
+    fn smoothed_trigger_needs_k_points() {
+        let mut t = SmoothedThreshold::new(0.7, 5);
+        for _ in 0..4 {
+            assert!(!t.observe(0.1)); // not enough contrast points yet
+        }
+        assert!(t.observe(0.1));
+    }
+}

@@ -1,0 +1,437 @@
+//! RPC substrate: length-prefixed, CRC-checked frames over TCP, with an
+//! in-process fast path.
+//!
+//! No async runtime is available offline, so the server is thread-per-
+//! connection on top of a [`crate::util::ThreadPool`]-less accept loop
+//! (connections are long-lived in a PS deployment: every worker keeps one
+//! connection per server shard, so thread-per-conn matches the topology).
+//!
+//! Wire format per request:  `frame( [req_id u64][method u16][payload] )`
+//! and per response:          `frame( [req_id u64][status u8][payload] )`
+//! where `frame` adds `[len u32][crc32 u32]` (see [`crate::codec`]).
+//!
+//! [`Channel`] abstracts "how do I reach this service": `Local` dispatches
+//! straight into the service object (the all-in-one `LocalCluster` mode and
+//! most tests), `Remote` talks TCP. Components only ever hold `Channel`s,
+//! so the same coordinator code runs single-process or distributed.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::codec::{frame, unframe};
+use crate::{Error, Result};
+
+/// Maximum frame payload (guards allocation on hostile/corrupt input).
+pub const MAX_FRAME: usize = 256 << 20;
+
+/// Status byte on responses.
+const STATUS_OK: u8 = 0;
+const STATUS_ERR: u8 = 1;
+
+/// A dispatchable service: maps (method, payload) -> payload.
+pub trait Service: Send + Sync {
+    /// Handle one request.
+    fn call(&self, method: u16, payload: &[u8]) -> Result<Vec<u8>>;
+}
+
+impl<F> Service for F
+where
+    F: Fn(u16, &[u8]) -> Result<Vec<u8>> + Send + Sync,
+{
+    fn call(&self, method: u16, payload: &[u8]) -> Result<Vec<u8>> {
+        self(method, payload)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Framed stream I/O
+// ---------------------------------------------------------------------------
+
+/// Read exactly one frame from a stream (blocking).
+fn read_frame(stream: &mut TcpStream, scratch: &mut Vec<u8>) -> Result<Vec<u8>> {
+    let mut header = [0u8; 8];
+    stream.read_exact(&mut header)?;
+    let len = u32::from_le_bytes(header[0..4].try_into().unwrap()) as usize;
+    if len > MAX_FRAME {
+        return Err(Error::Codec(format!("frame length {len} exceeds max")));
+    }
+    scratch.clear();
+    scratch.resize(8 + len, 0);
+    scratch[..8].copy_from_slice(&header);
+    stream.read_exact(&mut scratch[8..])?;
+    match unframe(scratch)? {
+        Some((payload, _)) => Ok(payload.to_vec()),
+        None => Err(Error::Codec("incomplete frame after read".into())),
+    }
+}
+
+fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
+    let framed = frame(payload);
+    stream.write_all(&framed)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// Running RPC server; dropping it stops the accept loop.
+pub struct RpcServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RpcServer {
+    /// Bind `addr` (use port 0 for ephemeral) and serve `service`.
+    pub fn serve(addr: &str, service: Arc<dyn Service>) -> Result<RpcServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        listener.set_nonblocking(true)?;
+        let accept_thread = std::thread::Builder::new()
+            .name(format!("rpc-accept-{local}"))
+            .spawn(move || {
+                while !stop2.load(Ordering::Acquire) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let svc = service.clone();
+                            let stop3 = stop2.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("rpc-conn".into())
+                                .spawn(move || Self::conn_loop(stream, svc, stop3));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawn accept loop");
+        Ok(RpcServer { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// Bound address (resolves ephemeral ports).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting; existing connections close on their next poll.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Release);
+    }
+
+    fn conn_loop(mut stream: TcpStream, service: Arc<dyn Service>, stop: Arc<AtomicBool>) {
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(200)));
+        let mut scratch = Vec::new();
+        loop {
+            if stop.load(Ordering::Acquire) {
+                return;
+            }
+            let req = match read_frame(&mut stream, &mut scratch) {
+                Ok(r) => r,
+                Err(Error::Io(e))
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    continue; // poll for shutdown, then keep reading
+                }
+                Err(_) => return, // disconnect or corrupt stream
+            };
+            if req.len() < 10 {
+                return;
+            }
+            let req_id = u64::from_le_bytes(req[0..8].try_into().unwrap());
+            let method = u16::from_le_bytes(req[8..10].try_into().unwrap());
+            let payload = &req[10..];
+            let mut resp = Vec::with_capacity(32);
+            resp.extend_from_slice(&req_id.to_le_bytes());
+            match service.call(method, payload) {
+                Ok(body) => {
+                    resp.push(STATUS_OK);
+                    resp.extend_from_slice(&body);
+                }
+                Err(e) => {
+                    resp.push(STATUS_ERR);
+                    resp.extend_from_slice(e.to_string().as_bytes());
+                }
+            }
+            if write_frame(&mut stream, &resp).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+impl Drop for RpcServer {
+    fn drop(&mut self) {
+        self.shutdown();
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+struct ClientInner {
+    stream: Option<TcpStream>,
+    scratch: Vec<u8>,
+}
+
+/// Blocking RPC client with automatic reconnect. One in-flight request per
+/// client; callers needing concurrency hold a pool of clients (the
+/// WeiPS-client does exactly that, see `worker::client`).
+pub struct RpcClient {
+    addr: String,
+    timeout: std::time::Duration,
+    next_id: AtomicU64,
+    inner: Mutex<ClientInner>,
+}
+
+impl RpcClient {
+    /// Create a client for `addr` (connection is established lazily).
+    pub fn new(addr: &str, timeout: std::time::Duration) -> RpcClient {
+        RpcClient {
+            addr: addr.to_string(),
+            timeout,
+            next_id: AtomicU64::new(1),
+            inner: Mutex::new(ClientInner { stream: None, scratch: Vec::new() }),
+        }
+    }
+
+    fn ensure_conn(&self, inner: &mut ClientInner) -> Result<()> {
+        if inner.stream.is_none() {
+            let stream = TcpStream::connect(&self.addr)
+                .map_err(|e| Error::Rpc(format!("connect {}: {e}", self.addr)))?;
+            stream.set_nodelay(true)?;
+            stream.set_read_timeout(Some(self.timeout))?;
+            stream.set_write_timeout(Some(self.timeout))?;
+            inner.stream = Some(stream);
+        }
+        Ok(())
+    }
+
+    /// Issue one request and wait for its response.
+    pub fn call(&self, method: u16, payload: &[u8]) -> Result<Vec<u8>> {
+        let req_id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        self.ensure_conn(&mut inner)?;
+
+        let mut req = Vec::with_capacity(payload.len() + 10);
+        req.extend_from_slice(&req_id.to_le_bytes());
+        req.extend_from_slice(&method.to_le_bytes());
+        req.extend_from_slice(payload);
+
+        let outcome = (|| -> Result<Vec<u8>> {
+            let stream = inner.stream.as_mut().unwrap();
+            write_frame(stream, &req)?;
+            // A slow server may interleave read timeouts; retry until the
+            // client-level deadline elapses.
+            let deadline = std::time::Instant::now() + self.timeout;
+            loop {
+                let mut scratch = std::mem::take(&mut inner.scratch);
+                let stream = inner.stream.as_mut().unwrap();
+                let r = read_frame(stream, &mut scratch);
+                inner.scratch = scratch;
+                match r {
+                    Ok(resp) => {
+                        if resp.len() < 9 {
+                            return Err(Error::Rpc("short response".into()));
+                        }
+                        let rid = u64::from_le_bytes(resp[0..8].try_into().unwrap());
+                        if rid != req_id {
+                            return Err(Error::Rpc(format!("response id {rid} != {req_id}")));
+                        }
+                        let status = resp[8];
+                        let body = resp[9..].to_vec();
+                        return if status == STATUS_OK {
+                            Ok(body)
+                        } else {
+                            Err(Error::Rpc(String::from_utf8_lossy(&body).into_owned()))
+                        };
+                    }
+                    Err(Error::Io(e))
+                        if matches!(
+                            e.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                        ) && std::time::Instant::now() < deadline =>
+                    {
+                        continue;
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+        })();
+
+        if outcome.is_err() {
+            // Drop the (possibly desynchronized) connection; next call dials.
+            inner.stream = None;
+        }
+        outcome
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Channel: local or remote
+// ---------------------------------------------------------------------------
+
+/// How to reach a service: in-process or over TCP.
+#[derive(Clone)]
+pub enum Channel {
+    /// Direct dispatch into the service object.
+    Local(Arc<dyn Service>),
+    /// TCP RPC.
+    Remote(Arc<RpcClient>),
+}
+
+impl Channel {
+    /// Local channel to `svc`.
+    pub fn local(svc: Arc<dyn Service>) -> Channel {
+        Channel::Local(svc)
+    }
+
+    /// Remote channel to `addr`.
+    pub fn remote(addr: &str, timeout: std::time::Duration) -> Channel {
+        Channel::Remote(Arc::new(RpcClient::new(addr, timeout)))
+    }
+
+    /// Issue a request.
+    pub fn call(&self, method: u16, payload: &[u8]) -> Result<Vec<u8>> {
+        match self {
+            Channel::Local(svc) => svc.call(method, payload),
+            Channel::Remote(client) => client.call(method, payload),
+        }
+    }
+}
+
+impl std::fmt::Debug for Channel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Channel::Local(_) => write!(f, "Channel::Local"),
+            Channel::Remote(_) => write!(f, "Channel::Remote"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Echo;
+
+    impl Service for Echo {
+        fn call(&self, method: u16, payload: &[u8]) -> Result<Vec<u8>> {
+            match method {
+                0 => Ok(payload.to_vec()),
+                1 => Ok(payload.iter().rev().copied().collect()),
+                9 => Err(Error::Unavailable("degraded".into())),
+                _ => Err(Error::Rpc(format!("no method {method}"))),
+            }
+        }
+    }
+
+    fn timeout() -> std::time::Duration {
+        std::time::Duration::from_secs(5)
+    }
+
+    #[test]
+    fn local_channel_dispatches() {
+        let ch = Channel::local(Arc::new(Echo));
+        assert_eq!(ch.call(0, b"hi").unwrap(), b"hi");
+        assert_eq!(ch.call(1, b"abc").unwrap(), b"cba");
+        assert!(ch.call(9, b"").is_err());
+    }
+
+    #[test]
+    fn tcp_round_trip() {
+        let server = RpcServer::serve("127.0.0.1:0", Arc::new(Echo)).unwrap();
+        let ch = Channel::remote(&server.addr().to_string(), timeout());
+        assert_eq!(ch.call(0, b"hello").unwrap(), b"hello");
+        assert_eq!(ch.call(1, b"xyz").unwrap(), b"zyx");
+    }
+
+    #[test]
+    fn tcp_error_propagates_and_connection_survives() {
+        let server = RpcServer::serve("127.0.0.1:0", Arc::new(Echo)).unwrap();
+        let ch = Channel::remote(&server.addr().to_string(), timeout());
+        let err = ch.call(9, b"").unwrap_err();
+        assert!(err.to_string().contains("degraded"), "{err}");
+        // Same connection still usable after an application error.
+        assert_eq!(ch.call(0, b"ok").unwrap(), b"ok");
+    }
+
+    #[test]
+    fn tcp_large_payload() {
+        let server = RpcServer::serve("127.0.0.1:0", Arc::new(Echo)).unwrap();
+        let ch = Channel::remote(&server.addr().to_string(), timeout());
+        let big: Vec<u8> = (0..2_000_000u32).map(|i| i as u8).collect();
+        assert_eq!(ch.call(0, &big).unwrap(), big);
+    }
+
+    #[test]
+    fn many_sequential_calls() {
+        let server = RpcServer::serve("127.0.0.1:0", Arc::new(Echo)).unwrap();
+        let client = RpcClient::new(&server.addr().to_string(), timeout());
+        for i in 0..200u32 {
+            let payload = i.to_le_bytes();
+            assert_eq!(client.call(0, &payload).unwrap(), payload);
+        }
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let server = Arc::new(RpcServer::serve("127.0.0.1:0", Arc::new(Echo)).unwrap());
+        let addr = server.addr().to_string();
+        let mut handles = Vec::new();
+        for t in 0..4u8 {
+            let addr = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                let client = RpcClient::new(&addr, timeout());
+                for i in 0..50u32 {
+                    let payload = [t, i as u8];
+                    assert_eq!(client.call(1, &payload).unwrap(), [i as u8, t]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn connect_refused_is_error_then_reconnects() {
+        // Pick a port by binding+dropping a listener.
+        let tmp = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = tmp.local_addr().unwrap().to_string();
+        drop(tmp);
+        let client = RpcClient::new(&addr, timeout());
+        assert!(client.call(0, b"x").is_err());
+        // Now start a real server on that address; client should reconnect.
+        let _server = match RpcServer::serve(&addr, Arc::new(Echo)) {
+            Ok(s) => s,
+            Err(_) => return, // port grabbed by another process; skip rest
+        };
+        assert_eq!(client.call(0, b"x").unwrap(), b"x");
+    }
+
+    #[test]
+    fn shutdown_stops_accepting() {
+        let server = RpcServer::serve("127.0.0.1:0", Arc::new(Echo)).unwrap();
+        let addr = server.addr().to_string();
+        server.shutdown();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let client = RpcClient::new(&addr, std::time::Duration::from_millis(300));
+        // Either connect fails or the read times out — must error out.
+        assert!(client.call(0, b"x").is_err());
+    }
+}

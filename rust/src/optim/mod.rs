@@ -1,0 +1,427 @@
+//! Server-side optimizers (§1.2.1, §4.1.2).
+//!
+//! In the PS architecture the *server* applies optimizer updates: trainers
+//! push raw gradients, the master shard owns the auxiliary state. Each
+//! optimizer declares its slot layout — exactly the heterogeneous-
+//! parameters problem the paper fuses away: LR-FTRL rows are 3 sparse
+//! slots (z, n, w), FM-FTRL 6 (z, n, w per table), serving needs only `w`.
+//!
+//! Two FTRL implementations exist and are tested against each other:
+//! the scalar Rust path here (used per-row on small pushes) and the AOT
+//! Pallas kernel (`artifacts/ftrl_update_d*.hlo.txt`, used for large
+//! batched blocks via [`BatchedFtrl`]). The math follows
+//! `python/compile/kernels/ref.py` bit-for-bit in structure.
+
+use std::sync::Arc;
+
+use crate::runtime::{Engine, Tensor};
+use crate::{Error, Result};
+
+/// A server-side optimizer over fixed-width sparse rows.
+///
+/// A row is `slots().len() * dim` contiguous f32s, slot-major:
+/// `[slot0[0..dim], slot1[0..dim], ...]`. The serving weight lives in the
+/// slot named `"w"`.
+pub trait Optimizer: Send + Sync {
+    /// Optimizer name (matches config strings).
+    fn name(&self) -> &'static str;
+
+    /// Slot layout, e.g. `["z", "n", "w"]` for FTRL.
+    fn slots(&self) -> &'static [&'static str];
+
+    /// Apply one gradient to one row. `step` is the row's update count
+    /// (1-based on first call) for bias-corrected optimizers.
+    fn apply(&self, row: &mut [f32], grad: &[f32], dim: usize, step: u32);
+
+    /// Floats per row for a given dim.
+    fn row_width(&self, dim: usize) -> usize {
+        self.slots().len() * dim
+    }
+
+    /// Index of a slot by name.
+    fn slot_index(&self, name: &str) -> Option<usize> {
+        self.slots().iter().position(|s| *s == name)
+    }
+
+    /// The serving-weight sub-slice of a row.
+    fn serving<'r>(&self, row: &'r [f32], dim: usize) -> &'r [f32] {
+        let w = self.slot_index("w").expect("optimizer has no w slot");
+        &row[w * dim..(w + 1) * dim]
+    }
+}
+
+/// Construct an optimizer by config name.
+pub fn by_name(name: &str, hp: &FtrlHyper) -> Result<Arc<dyn Optimizer>> {
+    match name {
+        "ftrl" => Ok(Arc::new(Ftrl::new(hp.clone()))),
+        "sgd" => Ok(Arc::new(Sgd { lr: 0.05 })),
+        "adagrad" => Ok(Arc::new(Adagrad { lr: 0.05, eps: 1e-8 })),
+        "adam" => Ok(Arc::new(Adam { lr: 0.001, b1: 0.9, b2: 0.999, eps: 1e-8 })),
+        other => Err(Error::Config(format!("unknown optimizer {other}"))),
+    }
+}
+
+/// FTRL hyper-parameters (mirrors `aot.FTRL_HYPERS`).
+#[derive(Debug, Clone)]
+pub struct FtrlHyper {
+    pub alpha: f32,
+    pub beta: f32,
+    pub l1: f32,
+    pub l2: f32,
+}
+
+impl Default for FtrlHyper {
+    fn default() -> Self {
+        FtrlHyper { alpha: 0.05, beta: 1.0, l1: 1.0, l2: 1.0 }
+    }
+}
+
+/// FTRL-proximal (McMahan 2011). Slots: z, n, w (w cached for serving).
+pub struct Ftrl {
+    hp: FtrlHyper,
+}
+
+impl Ftrl {
+    /// New FTRL with `hp`.
+    pub fn new(hp: FtrlHyper) -> Ftrl {
+        Ftrl { hp }
+    }
+
+    #[inline]
+    fn weight(&self, z: f32, n: f32) -> f32 {
+        if z.abs() <= self.hp.l1 {
+            0.0
+        } else {
+            -(z - z.signum() * self.hp.l1)
+                / ((self.hp.beta + n.sqrt()) / self.hp.alpha + self.hp.l2)
+        }
+    }
+}
+
+impl Optimizer for Ftrl {
+    fn name(&self) -> &'static str {
+        "ftrl"
+    }
+
+    fn slots(&self) -> &'static [&'static str] {
+        &["z", "n", "w"]
+    }
+
+    fn apply(&self, row: &mut [f32], grad: &[f32], dim: usize, _step: u32) {
+        debug_assert_eq!(row.len(), 3 * dim);
+        debug_assert_eq!(grad.len(), dim);
+        let (z_slot, rest) = row.split_at_mut(dim);
+        let (n_slot, w_slot) = rest.split_at_mut(dim);
+        for j in 0..dim {
+            let g = grad[j];
+            let z = z_slot[j];
+            let n = n_slot[j];
+            let w_old = self.weight(z, n);
+            let n_new = n + g * g;
+            let sigma = (n_new.sqrt() - n.sqrt()) / self.hp.alpha;
+            let z_new = z + g - sigma * w_old;
+            z_slot[j] = z_new;
+            n_slot[j] = n_new;
+            w_slot[j] = self.weight(z_new, n_new);
+        }
+    }
+}
+
+/// Plain SGD. Slots: w.
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Optimizer for Sgd {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn slots(&self) -> &'static [&'static str] {
+        &["w"]
+    }
+
+    fn apply(&self, row: &mut [f32], grad: &[f32], dim: usize, _step: u32) {
+        debug_assert_eq!(row.len(), dim);
+        for j in 0..dim {
+            row[j] -= self.lr * grad[j];
+        }
+    }
+}
+
+/// Adagrad. Slots: acc, w.
+pub struct Adagrad {
+    pub lr: f32,
+    pub eps: f32,
+}
+
+impl Optimizer for Adagrad {
+    fn name(&self) -> &'static str {
+        "adagrad"
+    }
+
+    fn slots(&self) -> &'static [&'static str] {
+        &["acc", "w"]
+    }
+
+    fn apply(&self, row: &mut [f32], grad: &[f32], dim: usize, _step: u32) {
+        let (acc, w) = row.split_at_mut(dim);
+        for j in 0..dim {
+            let g = grad[j];
+            acc[j] += g * g;
+            w[j] -= self.lr * g / (acc[j].sqrt() + self.eps);
+        }
+    }
+}
+
+/// Adam with per-row step-based bias correction. Slots: m, v, w.
+pub struct Adam {
+    pub lr: f32,
+    pub b1: f32,
+    pub b2: f32,
+    pub eps: f32,
+}
+
+impl Optimizer for Adam {
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+
+    fn slots(&self) -> &'static [&'static str] {
+        &["m", "v", "w"]
+    }
+
+    fn apply(&self, row: &mut [f32], grad: &[f32], dim: usize, step: u32) {
+        let t = step.max(1) as f32;
+        let bc1 = 1.0 - self.b1.powf(t);
+        let bc2 = 1.0 - self.b2.powf(t);
+        let (m, rest) = row.split_at_mut(dim);
+        let (v, w) = rest.split_at_mut(dim);
+        for j in 0..dim {
+            let g = grad[j];
+            m[j] = self.b1 * m[j] + (1.0 - self.b1) * g;
+            v[j] = self.b2 * v[j] + (1.0 - self.b2) * g * g;
+            let m_hat = m[j] / bc1;
+            let v_hat = v[j] / bc2;
+            w[j] -= self.lr * m_hat / (v_hat.sqrt() + self.eps);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batched FTRL through the AOT Pallas kernel
+// ---------------------------------------------------------------------------
+
+/// Applies FTRL to large blocks of rows by executing the AOT Pallas kernel
+/// (`ftrl_update_d{dim}`) through PJRT. The master's push hot path batches
+/// dirty rows into `(block_rows, dim)` tensors, pads the tail, and scatters
+/// the updated (z, n, w) back.
+pub struct BatchedFtrl {
+    engine: Arc<Engine>,
+    dim: usize,
+    module: String,
+    block_rows: usize,
+}
+
+impl BatchedFtrl {
+    /// Kernel wrapper for rows of `dim` (requires `ftrl_update_d{dim}` in
+    /// the manifest).
+    pub fn new(engine: Arc<Engine>, dim: usize) -> Result<BatchedFtrl> {
+        let module = format!("ftrl_update_d{dim}");
+        engine.manifest().module(&module)?;
+        let block_rows = engine.config().ftrl_block_rows;
+        Ok(BatchedFtrl { engine, dim, module, block_rows })
+    }
+
+    /// Rows per kernel invocation.
+    pub fn block_rows(&self) -> usize {
+        self.block_rows
+    }
+
+    /// Update `k = ids` rows: `g`, `z`, `n` are `k*dim` flat slices;
+    /// outputs overwrite `z`, `n` and fill `w`. Handles `k` larger or
+    /// smaller than the kernel block by chunking / zero-padding.
+    pub fn update(&self, g: &[f32], z: &mut [f32], n: &mut [f32], w: &mut [f32]) -> Result<()> {
+        let dim = self.dim;
+        let k = g.len() / dim;
+        debug_assert_eq!(g.len(), k * dim);
+        debug_assert_eq!(z.len(), k * dim);
+        let rows = self.block_rows;
+        let mut start = 0usize;
+        while start < k {
+            let take = (k - start).min(rows);
+            let lo = start * dim;
+            let hi = (start + take) * dim;
+            let pad_len = rows * dim;
+            let mut gt = vec![0.0f32; pad_len];
+            let mut zt = vec![0.0f32; pad_len];
+            let mut nt = vec![0.0f32; pad_len];
+            gt[..hi - lo].copy_from_slice(&g[lo..hi]);
+            zt[..hi - lo].copy_from_slice(&z[lo..hi]);
+            nt[..hi - lo].copy_from_slice(&n[lo..hi]);
+            let out = self.engine.execute(
+                &self.module,
+                &[
+                    Tensor::new(vec![rows, dim], gt),
+                    Tensor::new(vec![rows, dim], zt),
+                    Tensor::new(vec![rows, dim], nt),
+                ],
+            )?;
+            z[lo..hi].copy_from_slice(&out[0].data[..hi - lo]);
+            n[lo..hi].copy_from_slice(&out[1].data[..hi - lo]);
+            w[lo..hi].copy_from_slice(&out[2].data[..hi - lo]);
+            start += take;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ftrl() -> Ftrl {
+        Ftrl::new(FtrlHyper::default())
+    }
+
+    #[test]
+    fn ftrl_zero_grad_is_noop() {
+        let f = ftrl();
+        let mut row = vec![0.5, -0.5, 2.0, 3.0, 0.1, -0.2]; // z, n, w at dim=2
+        let before = row.clone();
+        f.apply(&mut row, &[0.0, 0.0], 2, 1);
+        assert_eq!(&row[..4], &before[..4]); // z, n unchanged
+    }
+
+    #[test]
+    fn ftrl_l1_dead_zone() {
+        let f = ftrl();
+        let mut row = vec![0.0; 3];
+        f.apply(&mut row, &[1e-4], 1, 1);
+        assert_eq!(f.serving(&row, 1)[0], 0.0);
+    }
+
+    #[test]
+    fn ftrl_repeated_grads_move_weight_negative() {
+        let f = ftrl();
+        let mut row = vec![0.0; 3];
+        for step in 1..=60 {
+            f.apply(&mut row, &[1.0], 1, step);
+        }
+        assert!(f.serving(&row, 1)[0] < 0.0, "w = {}", row[2]);
+        // n accumulates g^2.
+        assert!((row[1] - 60.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn ftrl_matches_python_reference_values() {
+        // Golden values from python/compile/kernels/ref.py:
+        //   ftrl_update_ref([[0.7]], [[2.0]], [[1.5]])
+        //   -> z'=2.7817361, n'=1.99, w'=-0.03620424
+        let f = ftrl();
+        let mut row = vec![2.0, 1.5, 0.0];
+        f.apply(&mut row, &[0.7], 1, 1);
+        assert!((row[0] - 2.781_736_1).abs() < 1e-5, "z={}", row[0]);
+        assert!((row[1] - 1.99).abs() < 1e-5, "n={}", row[1]);
+        assert!((row[2] - (-0.036_204_24)).abs() < 1e-6, "w={}", row[2]);
+    }
+
+    #[test]
+    fn sgd_moves_against_gradient() {
+        let s = Sgd { lr: 0.1 };
+        let mut row = vec![1.0, -1.0];
+        s.apply(&mut row, &[0.5, -0.5], 2, 1);
+        assert_eq!(row, vec![0.95, -0.95]);
+    }
+
+    #[test]
+    fn adagrad_decays_effective_lr() {
+        let a = Adagrad { lr: 0.1, eps: 1e-8 };
+        let mut row = vec![0.0, 0.0]; // acc, w at dim=1
+        a.apply(&mut row, &[1.0], 1, 1);
+        let step1 = -row[1];
+        let w1 = row[1];
+        a.apply(&mut row, &[1.0], 1, 2);
+        let step2 = w1 - row[1];
+        assert!(step2 < step1, "step sizes: {step1} then {step2}");
+        assert!((row[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adam_bias_correction_first_step() {
+        let a = Adam { lr: 0.001, b1: 0.9, b2: 0.999, eps: 1e-8 };
+        let mut row = vec![0.0; 3];
+        a.apply(&mut row, &[0.3], 1, 1);
+        // First step with bias correction ~= -lr * sign(g).
+        assert!((row[2] + 0.001).abs() < 1e-4, "w={}", row[2]);
+    }
+
+    #[test]
+    fn by_name_resolves_and_rejects() {
+        let hp = FtrlHyper::default();
+        for n in ["ftrl", "sgd", "adagrad", "adam"] {
+            assert_eq!(by_name(n, &hp).unwrap().name(), n);
+        }
+        assert!(by_name("lbfgs", &hp).is_err());
+    }
+
+    #[test]
+    fn slot_layout_accessors() {
+        let f = ftrl();
+        assert_eq!(f.row_width(8), 24);
+        assert_eq!(f.slot_index("n"), Some(1));
+        assert_eq!(f.slot_index("q"), None);
+        let row: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        assert_eq!(f.serving(&row, 8), &row[16..24]);
+    }
+
+    // -- cross-layer: scalar Rust FTRL vs AOT Pallas kernel -------------------
+
+    #[test]
+    fn batched_ftrl_matches_scalar() {
+        let dir = crate::runtime::default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let engine = Arc::new(Engine::load(dir).unwrap());
+        let cfg = engine.config().clone();
+        let dim = cfg.dim;
+        let batched = BatchedFtrl::new(engine, dim).unwrap();
+        // Scalar comparator must use the manifest's hypers (the kernel's).
+        let scalar = Ftrl::new(FtrlHyper {
+            alpha: cfg.ftrl_alpha,
+            beta: cfg.ftrl_beta,
+            l1: cfg.ftrl_l1,
+            l2: cfg.ftrl_l2,
+        });
+
+        let k = batched.block_rows() + 137; // force chunk + pad path
+        let mut rng = crate::util::Rng::new(42);
+        let g: Vec<f32> = (0..k * dim).map(|_| rng.gen_f32() * 2.0 - 1.0).collect();
+        let mut z: Vec<f32> = (0..k * dim).map(|_| rng.gen_f32() * 4.0 - 2.0).collect();
+        let mut n: Vec<f32> = (0..k * dim).map(|_| rng.gen_f32() * 5.0).collect();
+        let mut w = vec![0.0f32; k * dim];
+
+        // Scalar expectation.
+        let mut rows_expect = Vec::with_capacity(k);
+        for i in 0..k {
+            let mut row = vec![0.0f32; 3 * dim];
+            row[..dim].copy_from_slice(&z[i * dim..(i + 1) * dim]);
+            row[dim..2 * dim].copy_from_slice(&n[i * dim..(i + 1) * dim]);
+            scalar.apply(&mut row, &g[i * dim..(i + 1) * dim], dim, 1);
+            rows_expect.push(row);
+        }
+
+        batched.update(&g, &mut z, &mut n, &mut w).unwrap();
+        for i in 0..k {
+            for j in 0..dim {
+                let (ze, ne, we) =
+                    (rows_expect[i][j], rows_expect[i][dim + j], rows_expect[i][2 * dim + j]);
+                assert!((z[i * dim + j] - ze).abs() < 1e-4, "z[{i},{j}]");
+                assert!((n[i * dim + j] - ne).abs() < 1e-4, "n[{i},{j}]");
+                assert!((w[i * dim + j] - we).abs() < 1e-4, "w[{i},{j}]");
+            }
+        }
+    }
+}

@@ -1,0 +1,471 @@
+//! Shared message types exchanged between WeiPS roles.
+//!
+//! All messages hand-implement [`Encode`]/[`Decode`] over the codec
+//! primitives. Method ids for RPC dispatch live with the services that
+//! register them (`server::service`, `scheduler::service`); this module is
+//! only the payload vocabulary.
+
+use crate::codec::{Decode, Encode, Reader, Writer};
+use crate::{Error, Result};
+
+/// Feature/parameter identifier (already hashed upstream).
+pub type ParamId = u64;
+/// Monotonic model version (checkpoint id).
+pub type Version = u64;
+
+// ---------------------------------------------------------------------------
+// Sparse pull/push
+// ---------------------------------------------------------------------------
+
+/// Pull rows for `ids` from a sparse table. `slot` selects which optimizer
+/// slot to read: serving pulls only `w`, training pulls all slots.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparsePull {
+    pub model: String,
+    pub table: String,
+    pub ids: Vec<ParamId>,
+    /// Slot name ("w", "z", ... or "*" for the full row).
+    pub slot: String,
+}
+
+impl Encode for SparsePull {
+    fn encode(&self, w: &mut Writer) {
+        w.put_str(&self.model);
+        w.put_str(&self.table);
+        w.put_str(&self.slot);
+        w.put_u64_slice(&self.ids);
+    }
+}
+
+impl Decode for SparsePull {
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(SparsePull {
+            model: r.get_str()?,
+            table: r.get_str()?,
+            slot: r.get_str()?,
+            ids: r.get_u64_slice()?,
+        })
+    }
+}
+
+/// Response to [`SparsePull`]: `values.len() == ids.len() * width`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseValues {
+    /// Floats per id (slot dim, or full row width for "*").
+    pub width: u32,
+    pub values: Vec<f32>,
+}
+
+impl Encode for SparseValues {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u32(self.width);
+        w.put_f32_slice(&self.values);
+    }
+}
+
+impl Decode for SparseValues {
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(SparseValues { width: r.get_u32()?, values: r.get_f32_slice()? })
+    }
+}
+
+/// Push gradients for `ids` into a sparse table (master applies the
+/// optimizer server-side). `grads.len() == ids.len() * dim`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparsePush {
+    pub model: String,
+    pub table: String,
+    pub ids: Vec<ParamId>,
+    pub grads: Vec<f32>,
+}
+
+impl Encode for SparsePush {
+    fn encode(&self, w: &mut Writer) {
+        w.put_str(&self.model);
+        w.put_str(&self.table);
+        w.put_u64_slice(&self.ids);
+        w.put_f32_slice(&self.grads);
+    }
+}
+
+impl Decode for SparsePush {
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(SparsePush {
+            model: r.get_str()?,
+            table: r.get_str()?,
+            ids: r.get_u64_slice()?,
+            grads: r.get_f32_slice()?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense pull/push
+// ---------------------------------------------------------------------------
+
+/// Pull a full dense table (tower weights, bias).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DensePull {
+    pub model: String,
+    pub table: String,
+}
+
+impl Encode for DensePull {
+    fn encode(&self, w: &mut Writer) {
+        w.put_str(&self.model);
+        w.put_str(&self.table);
+    }
+}
+
+impl Decode for DensePull {
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(DensePull { model: r.get_str()?, table: r.get_str()? })
+    }
+}
+
+/// Dense table content (also the dense push payload).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseValues {
+    pub model: String,
+    pub table: String,
+    pub values: Vec<f32>,
+}
+
+impl Encode for DenseValues {
+    fn encode(&self, w: &mut Writer) {
+        w.put_str(&self.model);
+        w.put_str(&self.table);
+        w.put_f32_slice(&self.values);
+    }
+}
+
+impl Decode for DenseValues {
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(DenseValues {
+            model: r.get_str()?,
+            table: r.get_str()?,
+            values: r.get_f32_slice()?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming sync records (the external-queue payload, §4.1)
+// ---------------------------------------------------------------------------
+
+/// Operation carried by a sync entry. Per the paper's eventual-consistency
+/// rule (§4.1d) an upsert always carries the *full current value* of the id
+/// (not a delta), so replay is idempotent; deletes propagate the feature
+/// filter (§4.1c).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SyncOp {
+    /// Full row state for the id.
+    Upsert(Vec<f32>),
+    /// Remove the id (feature-filter eviction).
+    Delete,
+}
+
+/// One id's update inside a sync batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SyncEntry {
+    pub id: ParamId,
+    pub op: SyncOp,
+}
+
+/// A batch of updates for one (model, table, master-shard), produced by the
+/// pusher, consumed by slave scatters. `seq` is the per-shard monotonic
+/// batch number used for gap/lag metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SyncBatch {
+    pub model: String,
+    pub table: String,
+    pub shard: u32,
+    pub seq: u64,
+    /// Wall-clock of gather time (ms) — measures end-to-end sync latency.
+    pub created_ms: u64,
+    pub entries: Vec<SyncEntry>,
+    /// Dense tables sync as whole-value snapshots (empty for sparse).
+    pub dense: Vec<f32>,
+}
+
+impl Encode for SyncBatch {
+    fn encode(&self, w: &mut Writer) {
+        w.put_str(&self.model);
+        w.put_str(&self.table);
+        w.put_u32(self.shard);
+        w.put_u64(self.seq);
+        w.put_u64(self.created_ms);
+        w.put_varint(self.entries.len() as u64);
+        for e in &self.entries {
+            w.put_varint(e.id);
+            match &e.op {
+                SyncOp::Upsert(vals) => {
+                    w.put_u8(0);
+                    w.put_f32_slice(vals);
+                }
+                SyncOp::Delete => w.put_u8(1),
+            }
+        }
+        w.put_f32_slice(&self.dense);
+    }
+}
+
+impl Decode for SyncBatch {
+    fn decode(r: &mut Reader) -> Result<Self> {
+        let model = r.get_str()?;
+        let table = r.get_str()?;
+        let shard = r.get_u32()?;
+        let seq = r.get_u64()?;
+        let created_ms = r.get_u64()?;
+        let n = r.get_varint()? as usize;
+        if n > r.remaining() + 1 {
+            return Err(Error::Codec(format!("sync batch entry count {n} exceeds buffer")));
+        }
+        let mut entries = Vec::with_capacity(n);
+        for _ in 0..n {
+            let id = r.get_varint()?;
+            let op = match r.get_u8()? {
+                0 => SyncOp::Upsert(r.get_f32_slice()?),
+                1 => SyncOp::Delete,
+                t => return Err(Error::Codec(format!("unknown sync op {t}"))),
+            };
+            entries.push(SyncEntry { id, op });
+        }
+        let dense = r.get_f32_slice()?;
+        Ok(SyncBatch { model, table, shard, seq, created_ms, entries, dense })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Control-plane messages
+// ---------------------------------------------------------------------------
+
+/// Node heartbeat to the scheduler.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Heartbeat {
+    pub node: String,
+    pub role: String,
+    pub healthy: bool,
+    /// Free-form load metric (QPS, queue depth) for balancing decisions.
+    pub load: f64,
+}
+
+impl Encode for Heartbeat {
+    fn encode(&self, w: &mut Writer) {
+        w.put_str(&self.node);
+        w.put_str(&self.role);
+        w.put_u8(self.healthy as u8);
+        w.put_f64(self.load);
+    }
+}
+
+impl Decode for Heartbeat {
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(Heartbeat {
+            node: r.get_str()?,
+            role: r.get_str()?,
+            healthy: r.get_u8()? != 0,
+            load: r.get_f64()?,
+        })
+    }
+}
+
+/// Checkpoint request from the scheduler to a master shard.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CkptRequest {
+    pub model: String,
+    pub version: Version,
+    /// Queue offsets captured at trigger time, stored in the checkpoint so
+    /// a rollback can resume streaming from the right position (§4.3.2).
+    pub queue_offsets: Vec<u64>,
+}
+
+impl Encode for CkptRequest {
+    fn encode(&self, w: &mut Writer) {
+        w.put_str(&self.model);
+        w.put_u64(self.version);
+        w.put_u64_slice(&self.queue_offsets);
+    }
+}
+
+impl Decode for CkptRequest {
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(CkptRequest {
+            model: r.get_str()?,
+            version: r.get_u64()?,
+            queue_offsets: r.get_u64_slice()?,
+        })
+    }
+}
+
+/// Generic OK/metadata reply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ack {
+    pub ok: bool,
+    pub detail: String,
+}
+
+impl Ack {
+    /// Successful ack.
+    pub fn ok() -> Ack {
+        Ack { ok: true, detail: String::new() }
+    }
+}
+
+impl Encode for Ack {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u8(self.ok as u8);
+        w.put_str(&self.detail);
+    }
+}
+
+impl Decode for Ack {
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(Ack { ok: r.get_u8()? != 0, detail: r.get_str()? })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Strategy};
+    use crate::util::Rng;
+
+    fn round_trip<T: Encode + Decode + PartialEq + std::fmt::Debug>(v: &T) {
+        let bytes = v.to_bytes();
+        let back = T::from_bytes(&bytes).expect("decode");
+        assert_eq!(&back, v);
+    }
+
+    #[test]
+    fn sparse_messages_round_trip() {
+        round_trip(&SparsePull {
+            model: "ctr".into(),
+            table: "w".into(),
+            ids: vec![1, 99, u64::MAX],
+            slot: "*".into(),
+        });
+        round_trip(&SparseValues { width: 8, values: vec![1.0, -2.5, 0.0] });
+        round_trip(&SparsePush {
+            model: "ctr".into(),
+            table: "v".into(),
+            ids: vec![5, 6],
+            grads: vec![0.25; 16],
+        });
+    }
+
+    #[test]
+    fn dense_messages_round_trip() {
+        round_trip(&DensePull { model: "m".into(), table: "tower.w1".into() });
+        round_trip(&DenseValues {
+            model: "m".into(),
+            table: "tower.w1".into(),
+            values: (0..100).map(|i| i as f32).collect(),
+        });
+    }
+
+    #[test]
+    fn sync_batch_round_trips() {
+        round_trip(&SyncBatch {
+            model: "ctr".into(),
+            table: "w".into(),
+            shard: 3,
+            seq: 42,
+            created_ms: 1_700_000_000_000,
+            entries: vec![
+                SyncEntry { id: 7, op: SyncOp::Upsert(vec![1.0, 2.0, 3.0]) },
+                SyncEntry { id: 8, op: SyncOp::Delete },
+            ],
+            dense: vec![],
+        });
+        round_trip(&SyncBatch {
+            model: "ctr".into(),
+            table: "bias".into(),
+            shard: 0,
+            seq: 0,
+            created_ms: 0,
+            entries: vec![],
+            dense: vec![0.5],
+        });
+    }
+
+    #[test]
+    fn control_messages_round_trip() {
+        round_trip(&Heartbeat { node: "m0".into(), role: "master".into(), healthy: true, load: 0.7 });
+        round_trip(&CkptRequest { model: "ctr".into(), version: 12, queue_offsets: vec![3, 9, 0] });
+        round_trip(&Ack::ok());
+        round_trip(&Ack { ok: false, detail: "shard down".into() });
+    }
+
+    #[test]
+    fn decode_rejects_truncation_and_garbage() {
+        let bytes = SparsePush {
+            model: "m".into(),
+            table: "t".into(),
+            ids: vec![1, 2, 3],
+            grads: vec![1.0; 6],
+        }
+        .to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(SparsePush::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+        // Unknown sync op tag.
+        let mut batch = SyncBatch {
+            model: "m".into(),
+            table: "t".into(),
+            shard: 0,
+            seq: 1,
+            created_ms: 2,
+            entries: vec![SyncEntry { id: 1, op: SyncOp::Delete }],
+            dense: vec![],
+        }
+        .to_bytes();
+        // Find and corrupt the op tag (last non-dense byte block); simplest
+        // robust approach: flip every byte and require decode not to panic.
+        for i in 0..batch.len() {
+            batch[i] ^= 0xFF;
+            let _ = SyncBatch::from_bytes(&batch); // must not panic
+            batch[i] ^= 0xFF;
+        }
+    }
+
+    #[test]
+    fn prop_sync_batch_round_trips() {
+        struct BatchStrat;
+        impl Strategy for BatchStrat {
+            type Value = SyncBatch;
+            fn gen(&self, rng: &mut Rng) -> SyncBatch {
+                let n = rng.gen_range(20) as usize;
+                let entries = (0..n)
+                    .map(|_| {
+                        let id = rng.next_u64() >> 16;
+                        let op = if rng.gen_bool(0.8) {
+                            let d = 1 + rng.gen_range(8) as usize;
+                            SyncOp::Upsert((0..d).map(|_| rng.gen_f32() - 0.5).collect())
+                        } else {
+                            SyncOp::Delete
+                        };
+                        SyncEntry { id, op }
+                    })
+                    .collect();
+                SyncBatch {
+                    model: "m".into(),
+                    table: if rng.gen_bool(0.5) { "w" } else { "v" }.into(),
+                    shard: rng.gen_range(16) as u32,
+                    seq: rng.next_u64() >> 32,
+                    created_ms: rng.next_u64() >> 20,
+                    entries,
+                    dense: vec![],
+                }
+            }
+        }
+        check("syncbatch-roundtrip", &BatchStrat, 200, |b| {
+            let bytes = b.to_bytes();
+            let back = SyncBatch::from_bytes(&bytes).map_err(|e| e.to_string())?;
+            if &back != b {
+                return Err("mismatch".into());
+            }
+            Ok(())
+        });
+    }
+}

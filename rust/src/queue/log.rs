@@ -1,0 +1,74 @@
+//! [`SyncLog`]: the queue surface the sync pipeline consumes.
+//!
+//! Pusher and scatter are written against this trait so the same pipeline
+//! runs embedded (direct [`Topic`] access, `LocalCluster`) or distributed
+//! (RPC to the broker process, [`super::remote::RemoteLog`]).
+
+use std::time::Duration;
+
+use super::{Record, Topic};
+use crate::Result;
+
+/// Partitioned, offset-addressed log.
+pub trait SyncLog: Send + Sync {
+    /// Number of partitions.
+    fn partition_count(&self) -> usize;
+    /// Append a payload; returns its offset.
+    fn append(&self, partition: u32, ts_ms: u64, payload: Vec<u8>) -> Result<u64>;
+    /// Fetch up to `max` records from `offset` (blocking up to `timeout`).
+    fn fetch(&self, partition: u32, offset: u64, max: usize, timeout: Duration)
+        -> Result<Vec<Record>>;
+    /// Log-end offset.
+    fn latest_offset(&self, partition: u32) -> Result<u64>;
+    /// Earliest retained offset.
+    fn earliest_offset(&self, partition: u32) -> Result<u64>;
+}
+
+impl SyncLog for Topic {
+    fn partition_count(&self) -> usize {
+        Topic::partition_count(self)
+    }
+
+    fn append(&self, partition: u32, ts_ms: u64, payload: Vec<u8>) -> Result<u64> {
+        Ok(self.partition(partition as usize)?.append(ts_ms, payload))
+    }
+
+    fn fetch(
+        &self,
+        partition: u32,
+        offset: u64,
+        max: usize,
+        timeout: Duration,
+    ) -> Result<Vec<Record>> {
+        self.partition(partition as usize)?.fetch(offset, max, timeout)
+    }
+
+    fn latest_offset(&self, partition: u32) -> Result<u64> {
+        Ok(self.partition(partition as usize)?.latest_offset())
+    }
+
+    fn earliest_offset(&self, partition: u32) -> Result<u64> {
+        Ok(self.partition(partition as usize)?.earliest_offset())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queue::Queue;
+
+    #[test]
+    fn topic_implements_synclog() {
+        let q = Queue::new(1 << 20);
+        let topic = q.create_topic("t", 2).unwrap();
+        let log: &dyn SyncLog = &*topic;
+        assert_eq!(log.partition_count(), 2);
+        assert_eq!(log.append(1, 5, b"x".to_vec()).unwrap(), 0);
+        assert_eq!(log.latest_offset(1).unwrap(), 1);
+        assert_eq!(log.earliest_offset(1).unwrap(), 0);
+        let recs = log.fetch(1, 0, 10, Duration::ZERO).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(*recs[0].payload, b"x".to_vec());
+        assert!(log.append(9, 0, vec![]).is_err());
+    }
+}

@@ -1,0 +1,197 @@
+//! Remote queue access: the broker-side RPC service + the client-side
+//! [`SyncLog`] implementation used by distributed masters/slaves.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::log::SyncLog;
+use super::{Record, Topic};
+use crate::codec::{Reader, Writer};
+use crate::net::{Channel, Service};
+use crate::{Error, Result};
+
+/// RPC method ids (broker service).
+pub mod methods {
+    pub const APPEND: u16 = 20;
+    pub const FETCH: u16 = 21;
+    pub const LATEST: u16 = 22;
+    pub const EARLIEST: u16 = 23;
+    pub const PARTITIONS: u16 = 24;
+}
+
+/// Broker-side service exposing one topic.
+pub struct QueueService {
+    pub topic: Arc<Topic>,
+}
+
+impl Service for QueueService {
+    fn call(&self, method: u16, payload: &[u8]) -> Result<Vec<u8>> {
+        let mut r = Reader::new(payload);
+        let mut w = Writer::new();
+        match method {
+            methods::APPEND => {
+                let partition = r.get_u32()?;
+                let ts = r.get_u64()?;
+                let data = r.get_bytes()?.to_vec();
+                let off = SyncLog::append(&*self.topic, partition, ts, data)?;
+                w.put_u64(off);
+            }
+            methods::FETCH => {
+                let partition = r.get_u32()?;
+                let offset = r.get_u64()?;
+                let max = r.get_u32()? as usize;
+                let timeout = Duration::from_millis(r.get_u32()? as u64);
+                let records = SyncLog::fetch(&*self.topic, partition, offset, max, timeout)?;
+                w.put_varint(records.len() as u64);
+                for rec in records {
+                    w.put_u64(rec.offset);
+                    w.put_u64(rec.ts_ms);
+                    w.put_bytes(&rec.payload);
+                }
+            }
+            methods::LATEST => {
+                let partition = r.get_u32()?;
+                w.put_u64(self.topic.latest_offset(partition)?);
+            }
+            methods::EARLIEST => {
+                let partition = r.get_u32()?;
+                w.put_u64(SyncLog::earliest_offset(&*self.topic, partition)?);
+            }
+            methods::PARTITIONS => {
+                w.put_u32(Topic::partition_count(&self.topic) as u32);
+            }
+            m => return Err(Error::Rpc(format!("queue: unknown method {m}"))),
+        }
+        Ok(w.into_bytes())
+    }
+}
+
+/// Client-side [`SyncLog`] over a [`Channel`] to the broker.
+pub struct RemoteLog {
+    channel: Channel,
+    partitions: usize,
+}
+
+impl RemoteLog {
+    /// Connect and learn the partition count.
+    pub fn connect(channel: Channel) -> Result<RemoteLog> {
+        let resp = channel.call(methods::PARTITIONS, &[])?;
+        let partitions = Reader::new(&resp).get_u32()? as usize;
+        Ok(RemoteLog { channel, partitions })
+    }
+}
+
+impl SyncLog for RemoteLog {
+    fn partition_count(&self) -> usize {
+        self.partitions
+    }
+
+    fn append(&self, partition: u32, ts_ms: u64, payload: Vec<u8>) -> Result<u64> {
+        let mut w = Writer::with_capacity(payload.len() + 24);
+        w.put_u32(partition);
+        w.put_u64(ts_ms);
+        w.put_bytes(&payload);
+        let resp = self.channel.call(methods::APPEND, &w.into_bytes())?;
+        Reader::new(&resp).get_u64()
+    }
+
+    fn fetch(
+        &self,
+        partition: u32,
+        offset: u64,
+        max: usize,
+        timeout: Duration,
+    ) -> Result<Vec<Record>> {
+        let mut w = Writer::new();
+        w.put_u32(partition);
+        w.put_u64(offset);
+        w.put_u32(max as u32);
+        w.put_u32(timeout.as_millis() as u32);
+        let resp = self.channel.call(methods::FETCH, &w.into_bytes());
+        let resp = match resp {
+            Ok(r) => r,
+            // Offset errors travel as Rpc strings; reconstruct the type the
+            // scatter relies on for its retention-gap recovery.
+            Err(Error::Rpc(msg)) if msg.contains("offset out of range") => {
+                return Err(Error::OffsetOutOfRange(msg));
+            }
+            Err(e) => return Err(e),
+        };
+        let mut r = Reader::new(&resp);
+        let n = r.get_varint()? as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let offset = r.get_u64()?;
+            let ts_ms = r.get_u64()?;
+            let payload = Arc::new(r.get_bytes()?.to_vec());
+            out.push(Record { offset, ts_ms, payload });
+        }
+        Ok(out)
+    }
+
+    fn latest_offset(&self, partition: u32) -> Result<u64> {
+        let mut w = Writer::new();
+        w.put_u32(partition);
+        let resp = self.channel.call(methods::LATEST, &w.into_bytes())?;
+        Reader::new(&resp).get_u64()
+    }
+
+    fn earliest_offset(&self, partition: u32) -> Result<u64> {
+        let mut w = Writer::new();
+        w.put_u32(partition);
+        let resp = self.channel.call(methods::EARLIEST, &w.into_bytes())?;
+        Reader::new(&resp).get_u64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queue::Queue;
+
+    fn remote_pair() -> (Arc<Topic>, RemoteLog) {
+        let q = Queue::new(1 << 20);
+        let topic = q.create_topic("t", 3).unwrap();
+        let svc = Arc::new(QueueService { topic: topic.clone() });
+        let remote = RemoteLog::connect(Channel::local(svc)).unwrap();
+        (topic, remote)
+    }
+
+    #[test]
+    fn remote_mirrors_local_log() {
+        let (topic, remote) = remote_pair();
+        assert_eq!(remote.partition_count(), 3);
+        let off = remote.append(1, 42, b"hello".to_vec()).unwrap();
+        assert_eq!(off, 0);
+        assert_eq!(topic.partition(1).unwrap().latest_offset(), 1);
+        let recs = remote.fetch(1, 0, 10, Duration::ZERO).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(*recs[0].payload, b"hello".to_vec());
+        assert_eq!(recs[0].ts_ms, 42);
+        assert_eq!(remote.latest_offset(1).unwrap(), 1);
+        assert_eq!(remote.earliest_offset(1).unwrap(), 0);
+    }
+
+    #[test]
+    fn remote_offset_errors_preserve_type() {
+        let (_topic, remote) = remote_pair();
+        let err = remote.fetch(0, 99, 1, Duration::ZERO).unwrap_err();
+        assert!(matches!(err, Error::OffsetOutOfRange(_)), "{err:?}");
+    }
+
+    #[test]
+    fn remote_over_tcp() {
+        let q = Queue::new(1 << 20);
+        let topic = q.create_topic("t", 1).unwrap();
+        let server = crate::net::RpcServer::serve(
+            "127.0.0.1:0",
+            Arc::new(QueueService { topic }),
+        )
+        .unwrap();
+        let ch = Channel::remote(&server.addr().to_string(), Duration::from_secs(5));
+        let remote = RemoteLog::connect(ch).unwrap();
+        remote.append(0, 1, vec![7; 100]).unwrap();
+        let recs = remote.fetch(0, 0, 10, Duration::ZERO).unwrap();
+        assert_eq!(recs[0].payload.len(), 100);
+    }
+}

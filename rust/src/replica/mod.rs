@@ -1,0 +1,344 @@
+//! Hot backup: multi-replica load balancing for slave shards (§4.2.2).
+//!
+//! "When an instance of the online service node crashes, the other
+//! instance takes over the requests that belong to that node." Online
+//! learning is *stateful*, so replicas are not interchangeable blanks —
+//! each keeps itself consistent via full + streaming sync; the balancer's
+//! job is health-aware selection and instant failover.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::{Error, Result};
+
+/// Balancing policy across healthy replicas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BalancePolicy {
+    /// Rotate through healthy replicas.
+    RoundRobin,
+    /// Pick the replica with the fewest in-flight requests.
+    LeastLoaded,
+}
+
+/// A replica endpoint: something that can serve and report health.
+pub trait Endpoint: Send + Sync {
+    /// Cheap health probe (no I/O beyond what the impl wants).
+    fn healthy(&self) -> bool;
+}
+
+struct Slot<E> {
+    endpoint: Arc<E>,
+    inflight: AtomicU64,
+    /// Consecutive failures observed by `report_result`.
+    failures: AtomicU64,
+}
+
+/// A group of replicas serving the same slave shard.
+pub struct ReplicaGroup<E: Endpoint> {
+    slots: RwLock<Vec<Arc<Slot<E>>>>,
+    policy: BalancePolicy,
+    rr: AtomicUsize,
+    /// Trip a replica after this many consecutive errors (auto-eject).
+    max_failures: u64,
+    pub failovers: AtomicU64,
+}
+
+/// Guard for one checked-out request; returns the in-flight token on drop.
+pub struct Lease<E: Endpoint> {
+    slot: Arc<Slot<E>>,
+}
+
+impl<E: Endpoint> Lease<E> {
+    /// The replica to call.
+    pub fn endpoint(&self) -> &Arc<E> {
+        &self.slot.endpoint
+    }
+
+    /// Report the call outcome (drives the failure-trip accounting).
+    pub fn report(&self, ok: bool) {
+        if ok {
+            self.slot.failures.store(0, Ordering::Relaxed);
+        } else {
+            self.slot.failures.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+impl<E: Endpoint> Drop for Lease<E> {
+    fn drop(&mut self) {
+        self.slot.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+impl<E: Endpoint> ReplicaGroup<E> {
+    /// New group over `endpoints`.
+    pub fn new(endpoints: Vec<Arc<E>>, policy: BalancePolicy) -> ReplicaGroup<E> {
+        ReplicaGroup {
+            slots: RwLock::new(
+                endpoints
+                    .into_iter()
+                    .map(|endpoint| {
+                        Arc::new(Slot {
+                            endpoint,
+                            inflight: AtomicU64::new(0),
+                            failures: AtomicU64::new(0),
+                        })
+                    })
+                    .collect(),
+            ),
+            policy,
+            rr: AtomicUsize::new(0),
+            max_failures: 3,
+            failovers: AtomicU64::new(0),
+        }
+    }
+
+    /// Add a replica at runtime (scale-out / recovery).
+    pub fn add(&self, endpoint: Arc<E>) {
+        self.slots.write().unwrap().push(Arc::new(Slot {
+            endpoint,
+            inflight: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+        }));
+    }
+
+    /// Replica count (healthy + unhealthy).
+    pub fn len(&self) -> usize {
+        self.slots.read().unwrap().len()
+    }
+
+    /// True when the group has no replicas at all.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Healthy replica count.
+    pub fn healthy_count(&self) -> usize {
+        self.slots
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|s| self.usable(s))
+            .count()
+    }
+
+    fn usable(&self, slot: &Slot<E>) -> bool {
+        slot.endpoint.healthy() && slot.failures.load(Ordering::Relaxed) < self.max_failures
+    }
+
+    /// Pick a replica per policy; errors when none is usable (the caller
+    /// surfaces this as service unavailability — E4 measures the window).
+    pub fn pick(&self) -> Result<Lease<E>> {
+        let slots = self.slots.read().unwrap();
+        if slots.is_empty() {
+            return Err(Error::Unavailable("replica group empty".into()));
+        }
+        let chosen = match self.policy {
+            BalancePolicy::RoundRobin => {
+                let n = slots.len();
+                let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+                (0..n)
+                    .map(|i| &slots[(start + i) % n])
+                    .find(|s| self.usable(s))
+            }
+            BalancePolicy::LeastLoaded => slots
+                .iter()
+                .filter(|s| self.usable(s))
+                .min_by_key(|s| s.inflight.load(Ordering::Relaxed)),
+        };
+        match chosen {
+            Some(slot) => {
+                slot.inflight.fetch_add(1, Ordering::Relaxed);
+                Ok(Lease { slot: slot.clone() })
+            }
+            None => Err(Error::Unavailable("no healthy replica".into())),
+        }
+    }
+
+    /// Pick with failover: try up to `attempts` distinct replicas through
+    /// `f`, counting failovers. This is the client-side hot-backup path.
+    pub fn call_with_failover<T>(
+        &self,
+        attempts: usize,
+        mut f: impl FnMut(&Arc<E>) -> Result<T>,
+    ) -> Result<T> {
+        let mut last_err = None;
+        for attempt in 0..attempts.max(1) {
+            let lease = match self.pick() {
+                Ok(l) => l,
+                Err(e) => {
+                    last_err = Some(e);
+                    break;
+                }
+            };
+            match f(lease.endpoint()) {
+                Ok(v) => {
+                    lease.report(true);
+                    return Ok(v);
+                }
+                Err(e) => {
+                    lease.report(false);
+                    if attempt + 1 < attempts {
+                        self.failovers.fetch_add(1, Ordering::Relaxed);
+                    }
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(last_err.unwrap_or_else(|| Error::Unavailable("no replicas".into())))
+    }
+
+    /// Clear failure counters (after recovery).
+    pub fn reset_failures(&self) {
+        for s in self.slots.read().unwrap().iter() {
+            s.failures.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Visit each endpoint (e.g. to broadcast a version switch).
+    pub fn for_each(&self, mut f: impl FnMut(&Arc<E>)) {
+        for s in self.slots.read().unwrap().iter() {
+            f(&s.endpoint);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+
+    struct FakeReplica {
+        id: usize,
+        up: AtomicBool,
+    }
+
+    impl FakeReplica {
+        fn new(id: usize) -> Arc<FakeReplica> {
+            Arc::new(FakeReplica { id, up: AtomicBool::new(true) })
+        }
+    }
+
+    impl Endpoint for FakeReplica {
+        fn healthy(&self) -> bool {
+            self.up.load(Ordering::Relaxed)
+        }
+    }
+
+    fn group(n: usize, policy: BalancePolicy) -> (ReplicaGroup<FakeReplica>, Vec<Arc<FakeReplica>>) {
+        let eps: Vec<Arc<FakeReplica>> = (0..n).map(FakeReplica::new).collect();
+        (ReplicaGroup::new(eps.clone(), policy), eps)
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let (g, _) = group(3, BalancePolicy::RoundRobin);
+        let ids: Vec<usize> = (0..6).map(|_| g.pick().unwrap().endpoint().id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn skips_unhealthy() {
+        let (g, eps) = group(3, BalancePolicy::RoundRobin);
+        eps[1].up.store(false, Ordering::Relaxed);
+        let ids: Vec<usize> = (0..4).map(|_| g.pick().unwrap().endpoint().id).collect();
+        assert!(!ids.contains(&1));
+        assert_eq!(g.healthy_count(), 2);
+    }
+
+    #[test]
+    fn all_down_is_unavailable() {
+        let (g, eps) = group(2, BalancePolicy::RoundRobin);
+        for e in &eps {
+            e.up.store(false, Ordering::Relaxed);
+        }
+        assert!(matches!(g.pick(), Err(Error::Unavailable(_))));
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle() {
+        let (g, _) = group(2, BalancePolicy::LeastLoaded);
+        let hold = g.pick().unwrap(); // replica with inflight=1
+        let first = hold.endpoint().id;
+        // Next picks should go to the other replica while we hold the lease.
+        for _ in 0..3 {
+            let l = g.pick().unwrap();
+            assert_ne!(l.endpoint().id, first);
+        }
+        drop(hold);
+    }
+
+    #[test]
+    fn lease_drop_releases_inflight() {
+        let (g, _) = group(1, BalancePolicy::LeastLoaded);
+        {
+            let _l = g.pick().unwrap();
+            let slots = g.slots.read().unwrap();
+            assert_eq!(slots[0].inflight.load(Ordering::Relaxed), 1);
+        }
+        let slots = g.slots.read().unwrap();
+        assert_eq!(slots[0].inflight.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn consecutive_failures_eject_until_reset() {
+        let (g, _) = group(2, BalancePolicy::RoundRobin);
+        // Fail replica 0 three times via report.
+        for _ in 0..3 {
+            loop {
+                let l = g.pick().unwrap();
+                let id = l.endpoint().id;
+                if id == 0 {
+                    l.report(false);
+                    break;
+                }
+            }
+        }
+        assert_eq!(g.healthy_count(), 1);
+        for _ in 0..4 {
+            assert_eq!(g.pick().unwrap().endpoint().id, 1);
+        }
+        g.reset_failures();
+        assert_eq!(g.healthy_count(), 2);
+    }
+
+    #[test]
+    fn failover_retries_distinct_replicas() {
+        let (g, _) = group(3, BalancePolicy::RoundRobin);
+        let mut failed_once = false;
+        let out = g
+            .call_with_failover(3, |e| {
+                if e.id == 0 && !failed_once {
+                    failed_once = true;
+                    Err(Error::Rpc("boom".into()))
+                } else {
+                    Ok(e.id)
+                }
+            })
+            .unwrap();
+        assert_ne!(out, 0);
+        assert_eq!(g.failovers.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn failover_exhausts_to_error() {
+        let (g, _) = group(2, BalancePolicy::RoundRobin);
+        let err = g
+            .call_with_failover::<()>(2, |_| Err(Error::Rpc("down".into())))
+            .unwrap_err();
+        assert!(err.to_string().contains("down"));
+    }
+
+    #[test]
+    fn add_replica_at_runtime() {
+        let (g, _) = group(1, BalancePolicy::RoundRobin);
+        assert_eq!(g.len(), 1);
+        g.add(FakeReplica::new(9));
+        assert_eq!(g.len(), 2);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..4 {
+            seen.insert(g.pick().unwrap().endpoint().id);
+        }
+        assert!(seen.contains(&9));
+    }
+}

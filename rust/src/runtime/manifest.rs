@@ -1,0 +1,255 @@
+//! AOT artifact manifest (written by `python/compile/aot.py`).
+//!
+//! The manifest pins the contract between build-time Python and the Rust
+//! hot path: module names, input/output tensor shapes and dtypes, and the
+//! model hyper-parameters (batch sizes, field count, factor dim, FTRL
+//! hypers) both sides must agree on.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Tensor dtype in the manifest (everything WeiPS ships today is f32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    S32,
+    U32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "s32" => Ok(DType::S32),
+            "u32" => Ok(DType::U32),
+            other => Err(Error::Config(format!("unknown dtype {other}"))),
+        }
+    }
+
+    /// Bytes per element.
+    pub fn size(&self) -> usize {
+        4
+    }
+}
+
+/// Shape + dtype of one module input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorMeta {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-lowered module.
+#[derive(Debug, Clone)]
+pub struct ModuleMeta {
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub path: PathBuf,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+/// Model/optimizer hyper-parameters shared across layers.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub batch_train: usize,
+    pub batch_predict: usize,
+    pub fields: usize,
+    pub dim: usize,
+    pub hidden: usize,
+    pub ftrl_block_rows: usize,
+    pub ftrl_alpha: f32,
+    pub ftrl_beta: f32,
+    pub ftrl_l1: f32,
+    pub ftrl_l2: f32,
+}
+
+/// Parsed artifacts manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub modules: BTreeMap<String, ModuleMeta>,
+}
+
+fn tensor_meta(j: &Json) -> Result<TensorMeta> {
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Config("tensor missing shape".into()))?
+        .iter()
+        .map(|v| v.as_i64().map(|x| x as usize))
+        .collect::<Option<Vec<_>>>()
+        .ok_or_else(|| Error::Config("non-integer dim".into()))?;
+    let dtype = DType::parse(
+        j.get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Config("tensor missing dtype".into()))?,
+    )?;
+    Ok(TensorMeta { shape, dtype })
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_i64)
+        .map(|v| v as usize)
+        .ok_or_else(|| Error::Config(format!("manifest config missing {key}")))
+}
+
+fn req_f32(j: &Json, key: &str) -> Result<f32> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .map(|v| v as f32)
+        .ok_or_else(|| Error::Config(format!("manifest ftrl missing {key}")))
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            Error::Config(format!(
+                "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let version = j.get("version").and_then(Json::as_i64).unwrap_or(0);
+        if version != 1 {
+            return Err(Error::Config(format!("unsupported manifest version {version}")));
+        }
+        let cfg = j
+            .get("config")
+            .ok_or_else(|| Error::Config("manifest missing config".into()))?;
+        let ftrl = cfg
+            .get("ftrl")
+            .ok_or_else(|| Error::Config("manifest missing ftrl config".into()))?;
+        let config = ModelConfig {
+            batch_train: req_usize(cfg, "batch_train")?,
+            batch_predict: req_usize(cfg, "batch_predict")?,
+            fields: req_usize(cfg, "fields")?,
+            dim: req_usize(cfg, "dim")?,
+            hidden: req_usize(cfg, "hidden")?,
+            ftrl_block_rows: req_usize(cfg, "ftrl_block_rows")?,
+            ftrl_alpha: req_f32(ftrl, "alpha")?,
+            ftrl_beta: req_f32(ftrl, "beta")?,
+            ftrl_l1: req_f32(ftrl, "l1")?,
+            ftrl_l2: req_f32(ftrl, "l2")?,
+        };
+        let mods = j
+            .get("modules")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| Error::Config("manifest missing modules".into()))?;
+        let mut modules = BTreeMap::new();
+        for (name, m) in mods {
+            let path = m
+                .get("path")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Config(format!("module {name} missing path")))?;
+            let inputs = m
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::Config(format!("module {name} missing inputs")))?
+                .iter()
+                .map(tensor_meta)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = m
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::Config(format!("module {name} missing outputs")))?
+                .iter()
+                .map(tensor_meta)
+                .collect::<Result<Vec<_>>>()?;
+            modules.insert(
+                name.clone(),
+                ModuleMeta { name: name.clone(), path: PathBuf::from(path), inputs, outputs },
+            );
+        }
+        Ok(Manifest { dir, config, modules })
+    }
+
+    /// Metadata for module `name`.
+    pub fn module(&self, name: &str) -> Result<&ModuleMeta> {
+        self.modules
+            .get(name)
+            .ok_or_else(|| Error::NotFound(format!("module {name} not in manifest")))
+    }
+
+    /// Absolute path of a module's HLO text.
+    pub fn module_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.module(name)?.path))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "config": {"batch_train": 8, "batch_predict": 2, "fields": 4, "dim": 2,
+                 "hidden": 8, "ftrl_block_rows": 64,
+                 "ftrl": {"alpha": 0.05, "beta": 1.0, "l1": 1.0, "l2": 1.0}},
+      "modules": {
+        "lr_train": {"path": "lr_train.hlo.txt",
+          "inputs": [{"shape": [8, 4], "dtype": "f32"},
+                     {"shape": [1], "dtype": "f32"},
+                     {"shape": [8], "dtype": "f32"}],
+          "outputs": [{"shape": [8], "dtype": "f32"},
+                      {"shape": [], "dtype": "f32"},
+                      {"shape": [8, 4], "dtype": "f32"},
+                      {"shape": [1], "dtype": "f32"}]}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/x")).unwrap();
+        assert_eq!(m.config.batch_train, 8);
+        assert_eq!(m.config.ftrl_alpha, 0.05);
+        let lr = m.module("lr_train").unwrap();
+        assert_eq!(lr.inputs.len(), 3);
+        assert_eq!(lr.inputs[0].shape, vec![8, 4]);
+        assert_eq!(lr.outputs[1].shape, Vec::<usize>::new());
+        assert_eq!(lr.outputs[1].elements(), 1);
+        assert_eq!(
+            m.module_path("lr_train").unwrap(),
+            PathBuf::from("/tmp/x/lr_train.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn missing_module_is_not_found() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/x")).unwrap();
+        assert!(matches!(m.module("nope"), Err(Error::NotFound(_))));
+    }
+
+    #[test]
+    fn rejects_bad_version_and_missing_fields() {
+        assert!(Manifest::parse(r#"{"version": 2}"#, PathBuf::new()).is_err());
+        assert!(Manifest::parse(r#"{"version": 1}"#, PathBuf::new()).is_err());
+        let no_ftrl = SAMPLE.replace("\"ftrl\"", "\"ftrlX\"");
+        assert!(Manifest::parse(&no_ftrl, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_dtype() {
+        let bad = SAMPLE.replace("\"f32\"", "\"f16\"");
+        assert!(Manifest::parse(&bad, PathBuf::new()).is_err());
+    }
+}

@@ -1,0 +1,362 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute on the
+//! hot path.
+//!
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute` (the pattern from /opt/xla-example/load_hlo). One compiled
+//! executable per module variant, cached for the process lifetime; Python
+//! is never invoked at runtime.
+
+mod manifest;
+
+pub use manifest::{DType, Manifest, ModelConfig, ModuleMeta, TensorMeta};
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::{Error, Result};
+
+/// Host-side f32 tensor (shape + row-major data).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    /// New tensor; panics if shape/product mismatch (programmer error).
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs {} elements",
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    /// Rank-0 scalar.
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    /// Rank-1 vector.
+    pub fn vec1(v: Vec<f32>) -> Tensor {
+        Tensor { shape: vec![v.len()], data: v }
+    }
+
+    /// Zero-filled tensor of `shape`.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the tensor has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// First element (scalars).
+    pub fn item(&self) -> f32 {
+        self.data[0]
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4)
+        };
+        xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &self.shape,
+            bytes,
+        )
+        .map_err(Into::into)
+    }
+
+    fn from_literal(lit: &xla::Literal, meta: &TensorMeta) -> Result<Tensor> {
+        let data = lit.to_vec::<f32>()?;
+        if data.len() != meta.elements() {
+            return Err(Error::Runtime(format!(
+                "output has {} elements, manifest says {:?}",
+                data.len(),
+                meta.shape
+            )));
+        }
+        Ok(Tensor { shape: meta.shape.clone(), data })
+    }
+}
+
+/// PJRT wrapper types are raw-pointer handles; the underlying PJRT CPU
+/// client is thread-safe for compilation and execution, so we assert Send +
+/// Sync and serialize executions per-module with a mutex below.
+struct SendExec(xla::PjRtLoadedExecutable);
+unsafe impl Send for SendExec {}
+unsafe impl Sync for SendExec {}
+
+struct SendClient(xla::PjRtClient);
+unsafe impl Send for SendClient {}
+unsafe impl Sync for SendClient {}
+
+struct CompiledModule {
+    meta: ModuleMeta,
+    exec: SendExec,
+    /// PJRT CPU execute is internally synchronized but not reentrant-safe
+    /// for our buffer handling; serialize per module.
+    lock: Mutex<()>,
+}
+
+/// Loaded artifact set + PJRT client. Cheap to share behind an `Arc`.
+pub struct Engine {
+    manifest: Manifest,
+    client: SendClient,
+    modules: Mutex<HashMap<String, &'static CompiledModule>>,
+}
+
+impl Engine {
+    /// Load the manifest in `dir` and initialize the PJRT CPU client.
+    /// Modules compile lazily on first use.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { manifest, client: SendClient(client), modules: Mutex::new(HashMap::new()) })
+    }
+
+    /// The parsed manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Model hyper-parameters from the manifest.
+    pub fn config(&self) -> &ModelConfig {
+        &self.manifest.config
+    }
+
+    /// Compile (or fetch cached) module `name`.
+    fn module(&self, name: &str) -> Result<&'static CompiledModule> {
+        let mut cache = self.modules.lock().unwrap();
+        if let Some(m) = cache.get(name) {
+            return Ok(m);
+        }
+        let meta = self.manifest.module(name)?.clone();
+        let path = self.manifest.module_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exec = self.client.0.compile(&comp)?;
+        // Executables live for the process lifetime; leak into &'static so
+        // callers can hold references without lifetime plumbing.
+        let module: &'static CompiledModule = Box::leak(Box::new(CompiledModule {
+            meta,
+            exec: SendExec(exec),
+            lock: Mutex::new(()),
+        }));
+        cache.insert(name.to_string(), module);
+        Ok(module)
+    }
+
+    /// Force-compile `name` now (startup warming).
+    pub fn warm(&self, name: &str) -> Result<()> {
+        self.module(name).map(|_| ())
+    }
+
+    /// Execute module `name` on `inputs`; validates shapes against the
+    /// manifest and returns outputs in manifest order.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let module = self.module(name)?;
+        if inputs.len() != module.meta.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: {} inputs given, manifest wants {}",
+                inputs.len(),
+                module.meta.inputs.len()
+            )));
+        }
+        for (i, (t, m)) in inputs.iter().zip(&module.meta.inputs).enumerate() {
+            if t.shape != m.shape {
+                return Err(Error::Runtime(format!(
+                    "{name}: input {i} shape {:?} != manifest {:?}",
+                    t.shape, m.shape
+                )));
+            }
+        }
+        let literals = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+
+        let result = {
+            let _guard = module.lock.lock().unwrap();
+            module.exec.0.execute::<xla::Literal>(&literals)?
+        };
+        let first = result
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| Error::Runtime(format!("{name}: no output buffer")))?;
+        // aot.py lowers with return_tuple=True: single tuple of k outputs.
+        let tuple = first.to_literal_sync()?.to_tuple()?;
+        if tuple.len() != module.meta.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: {} outputs, manifest says {}",
+                tuple.len(),
+                module.meta.outputs.len()
+            )));
+        }
+        tuple
+            .iter()
+            .zip(&module.meta.outputs)
+            .map(|(lit, meta)| Tensor::from_literal(lit, meta))
+            .collect()
+    }
+}
+
+/// Locate the artifacts directory for tests/benches: `WEIPS_ARTIFACTS` env
+/// var or `<manifest dir>/artifacts`.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("WEIPS_ARTIFACTS") {
+        return p.into();
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping runtime test: run `make artifacts` first");
+            return None;
+        }
+        Some(Engine::load(dir).expect("engine load"))
+    }
+
+    #[test]
+    fn tensor_construction() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(Tensor::scalar(2.5).item(), 2.5);
+        assert_eq!(Tensor::vec1(vec![1.0, 2.0]).shape, vec![2]);
+        assert_eq!(Tensor::zeros(&[4, 2]).data, vec![0.0; 8]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn lr_predict_matches_manual_sigmoid() {
+        let Some(eng) = engine() else { return };
+        let cfg = eng.config().clone();
+        let b = cfg.batch_predict;
+        let f = cfg.fields;
+        // w[i][j] = 0.01*(i+1), bias = 0.5
+        let mut w = Vec::with_capacity(b * f);
+        for i in 0..b {
+            for _ in 0..f {
+                w.push(0.01 * (i + 1) as f32);
+            }
+        }
+        let out = eng
+            .execute(
+                "lr_predict",
+                &[Tensor::new(vec![b, f], w), Tensor::vec1(vec![0.5])],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape, vec![b]);
+        for i in 0..b {
+            let logit = 0.01 * (i + 1) as f32 * f as f32 + 0.5;
+            let want = 1.0 / (1.0 + (-logit).exp());
+            assert!(
+                (out[0].data[i] - want).abs() < 1e-5,
+                "row {i}: {} vs {want}",
+                out[0].data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn lr_train_loss_and_grads_consistent() {
+        let Some(eng) = engine() else { return };
+        let cfg = eng.config().clone();
+        let (b, f) = (cfg.batch_train, cfg.fields);
+        let w = Tensor::zeros(&[b, f]);
+        let bias = Tensor::vec1(vec![0.0]);
+        let label = Tensor::vec1((0..b).map(|i| (i % 2) as f32).collect());
+        let out = eng.execute("lr_train", &[w, bias, label.clone()]).unwrap();
+        assert_eq!(out.len(), 4);
+        // Zero weights => p = 0.5 for all rows; loss = ln 2.
+        for p in &out[0].data {
+            assert!((p - 0.5).abs() < 1e-6);
+        }
+        assert!((out[1].item() - std::f32::consts::LN_2).abs() < 1e-5);
+        // grad w.r.t. w row i = (p - y)/B = (0.5 - y)/B for every field.
+        for i in 0..b {
+            let want = (0.5 - label.data[i]) / b as f32;
+            for j in 0..f {
+                let g = out[2].data[i * f + j];
+                assert!((g - want).abs() < 1e-6, "g[{i}][{j}]={g} want {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn execute_rejects_wrong_shapes() {
+        let Some(eng) = engine() else { return };
+        let err = eng
+            .execute("lr_predict", &[Tensor::zeros(&[1, 1]), Tensor::vec1(vec![0.0])])
+            .unwrap_err();
+        assert!(err.to_string().contains("shape"), "{err}");
+        assert!(eng.execute("lr_predict", &[Tensor::scalar(0.0)]).is_err());
+        assert!(eng.execute("no_such_module", &[]).is_err());
+    }
+
+    #[test]
+    fn ftrl_update_module_runs() {
+        let Some(eng) = engine() else { return };
+        let rows = eng.config().ftrl_block_rows;
+        let g = Tensor::new(vec![rows, 1], vec![1.0; rows]);
+        let z = Tensor::zeros(&[rows, 1]);
+        let n = Tensor::zeros(&[rows, 1]);
+        let out = eng.execute("ftrl_update_d1", &[g, z, n]).unwrap();
+        assert_eq!(out.len(), 3);
+        // n' = g^2 = 1, z' = g - sigma*w_old = 1 (w_old = 0).
+        assert!((out[1].data[0] - 1.0).abs() < 1e-6);
+        assert!((out[0].data[0] - 1.0).abs() < 1e-6);
+        // |z'| = 1 > l1 => w' = -(z'-l1)/((beta+sqrt(n'))/alpha + l2) < 0.
+        let cfg = eng.config();
+        let expect = -(1.0 - cfg.ftrl_l1)
+            / ((cfg.ftrl_beta + 1.0f32.sqrt()) / cfg.ftrl_alpha + cfg.ftrl_l2);
+        assert!((out[2].data[0] - expect).abs() < 1e-6, "w'={} want {expect}", out[2].data[0]);
+    }
+
+    #[test]
+    fn concurrent_execution_is_safe() {
+        let Some(eng) = engine() else { return };
+        let eng = std::sync::Arc::new(eng);
+        let cfg = eng.config().clone();
+        let (b, f) = (cfg.batch_predict, cfg.fields);
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let eng = eng.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..10 {
+                    let w = Tensor::new(vec![b, f], vec![0.1 * t as f32; b * f]);
+                    let out = eng
+                        .execute("lr_predict", &[w, Tensor::vec1(vec![0.0])])
+                        .unwrap();
+                    assert_eq!(out[0].shape, vec![b]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,374 @@
+//! Scheduler (§3.3): lifecycle + metadata + checkpoint orchestration.
+//!
+//! "The scheduler is the core scheduling component of the entire cluster,
+//! which is responsible for the lifecycle management of the entire system
+//! ... maintains global metadata and is stateless," with consistency
+//! delegated to the coordination store ([`MetaStore`], our ZK/etcd).
+//!
+//! Responsibilities implemented here:
+//! - node registry: ephemeral registrations kept alive by heartbeats,
+//!   failure detection via session expiry;
+//! - checkpoint orchestration (§4.2.1): **randomly jittered trigger** so
+//!   shards don't aggregate save traffic, **asynchronous saving** through
+//!   a thread pool, manifest finalization with queue offsets + metric,
+//!   local GC and periodic remote replication;
+//! - version counter for the domino downgrade's lineage.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::meta::MetaStore;
+use crate::server::master::MasterShard;
+use crate::storage::{CheckpointStore, CkptManifest};
+use crate::util::clock::Clock;
+use crate::util::{Rng, ThreadPool};
+use crate::{Error, Result};
+
+/// Checkpoint policy knobs (paper §4.2.1c: per-model configurable).
+#[derive(Debug, Clone)]
+pub struct CkptPolicy {
+    /// Mean interval between checkpoints (ms).
+    pub interval_ms: u64,
+    /// Random jitter fraction of the interval (0.3 = ±30%).
+    pub jitter: f64,
+    /// Local versions to keep.
+    pub keep_local: usize,
+    /// Replicate every k-th version to the remote tier (0 = never).
+    pub remote_every: u64,
+}
+
+impl Default for CkptPolicy {
+    fn default() -> Self {
+        CkptPolicy { interval_ms: 10_000, jitter: 0.3, keep_local: 5, remote_every: 4 }
+    }
+}
+
+/// A registered node's view.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeInfo {
+    pub name: String,
+    pub role: String,
+    pub session: u64,
+}
+
+/// The scheduler.
+pub struct Scheduler {
+    pub meta: MetaStore,
+    pub store: Arc<CheckpointStore>,
+    model: String,
+    policy: CkptPolicy,
+    clock: Arc<dyn Clock>,
+    pool: ThreadPool,
+    next_version: AtomicU64,
+    last_ckpt_ms: AtomicU64,
+    next_due_ms: AtomicU64,
+    rng: Mutex<Rng>,
+    pub checkpoints_taken: AtomicU64,
+}
+
+impl Scheduler {
+    /// New scheduler for `model`.
+    pub fn new(
+        meta: MetaStore,
+        store: Arc<CheckpointStore>,
+        model: &str,
+        policy: CkptPolicy,
+        clock: Arc<dyn Clock>,
+    ) -> Scheduler {
+        // Resume the version counter from whatever storage already has.
+        let start_version = store.latest_version(model).unwrap_or(0);
+        let now = clock.now_ms();
+        let s = Scheduler {
+            meta,
+            store,
+            model: model.to_string(),
+            policy,
+            clock,
+            pool: ThreadPool::new(2, "ckpt"),
+            next_version: AtomicU64::new(start_version + 1),
+            last_ckpt_ms: AtomicU64::new(now),
+            next_due_ms: AtomicU64::new(0),
+            rng: Mutex::new(Rng::new(now ^ 0x5c4ed)),
+            checkpoints_taken: AtomicU64::new(0),
+        };
+        s.schedule_next(now);
+        s
+    }
+
+    // -- node registry --------------------------------------------------------
+
+    /// Register a node; returns its heartbeat session.
+    pub fn register(&self, role: &str, name: &str, ttl_ms: u64) -> Result<NodeInfo> {
+        let session = self.meta.open_session(ttl_ms);
+        self.meta
+            .put_ephemeral(session, &format!("/nodes/{role}/{name}"), name.as_bytes().to_vec())?;
+        Ok(NodeInfo { name: name.to_string(), role: role.to_string(), session })
+    }
+
+    /// Heartbeat a registered node.
+    pub fn heartbeat(&self, node: &NodeInfo) -> Result<()> {
+        self.meta.heartbeat(node.session)
+    }
+
+    /// Expire dead sessions; returns the node keys that disappeared
+    /// (failure detection input for partial recovery).
+    pub fn detect_failures(&self) -> Vec<String> {
+        let before: Vec<String> = self.meta.list("/nodes/").into_iter().map(|(k, _, _)| k).collect();
+        let expired = self.meta.expire_sessions();
+        if expired.is_empty() {
+            return Vec::new();
+        }
+        let after: Vec<String> = self.meta.list("/nodes/").into_iter().map(|(k, _, _)| k).collect();
+        before.into_iter().filter(|k| !after.contains(k)).collect()
+    }
+
+    /// Nodes currently registered under a role.
+    pub fn nodes(&self, role: &str) -> Vec<String> {
+        self.meta
+            .list(&format!("/nodes/{role}/"))
+            .into_iter()
+            .map(|(k, _, _)| k.rsplit('/').next().unwrap_or("").to_string())
+            .collect()
+    }
+
+    // -- checkpoint orchestration (§4.2.1) -------------------------------------
+
+    fn schedule_next(&self, now: u64) {
+        let jitter_span = (self.policy.interval_ms as f64 * self.policy.jitter) as u64;
+        let jitter = if jitter_span == 0 {
+            0
+        } else {
+            let mut rng = self.rng.lock().unwrap();
+            rng.gen_range(2 * jitter_span + 1)
+        };
+        let due = now + self.policy.interval_ms - jitter_span + jitter;
+        self.next_due_ms.store(due, Ordering::Release);
+    }
+
+    /// True when the (jittered) checkpoint timer has fired.
+    pub fn checkpoint_due(&self) -> bool {
+        self.clock.now_ms() >= self.next_due_ms.load(Ordering::Acquire)
+    }
+
+    /// Take a full-cluster checkpoint: saves every master shard in
+    /// parallel (asynchronous saving), finalizes the manifest (with queue
+    /// offsets + metric), GCs local versions and replicates per policy.
+    /// Returns the new version.
+    pub fn checkpoint_now(
+        &self,
+        masters: &[Arc<MasterShard>],
+        queue_offsets: Vec<u64>,
+        metric: f64,
+    ) -> Result<u64> {
+        let version = self.next_version.fetch_add(1, Ordering::SeqCst);
+        let errors = Arc::new(Mutex::new(Vec::new()));
+        for m in masters {
+            let m = m.clone();
+            let store = self.store.clone();
+            let errors = errors.clone();
+            let model = self.model.clone();
+            self.pool.execute(move || {
+                let snap = m.snapshot();
+                if let Err(e) = store.save_shard(&model, version, m.shard_id, &snap) {
+                    errors.lock().unwrap().push(e.to_string());
+                }
+            });
+        }
+        self.pool.join();
+        let errs = errors.lock().unwrap();
+        if !errs.is_empty() {
+            return Err(Error::Checkpoint(format!("shard saves failed: {}", errs.join("; "))));
+        }
+        drop(errs);
+        self.store.write_manifest(&CkptManifest {
+            model: self.model.clone(),
+            version,
+            created_ms: self.clock.now_ms(),
+            num_shards: masters.len() as u32,
+            queue_offsets,
+            metric,
+        })?;
+        if self.policy.remote_every > 0 && version % self.policy.remote_every == 0 {
+            self.store.replicate_to_remote(&self.model, version)?;
+        }
+        let _ = self.store.gc_local(&self.model, self.policy.keep_local);
+        // Publish the version pointer in metadata.
+        self.meta
+            .put(&format!("/models/{}/version", self.model), version.to_string().into_bytes());
+        let now = self.clock.now_ms();
+        self.last_ckpt_ms.store(now, Ordering::Release);
+        self.schedule_next(now);
+        self.checkpoints_taken.fetch_add(1, Ordering::Relaxed);
+        Ok(version)
+    }
+
+    /// Latest finalized version.
+    pub fn latest_version(&self) -> Option<u64> {
+        self.store.latest_version(&self.model)
+    }
+
+    /// Partial recovery (§4.2.1e): restore exactly one crashed shard from
+    /// the newest checkpoint — "the entire cluster will not be restarted,
+    /// and only this shard will recover". Returns the recovered version.
+    pub fn recover_shard(&self, shard: &Arc<MasterShard>) -> Result<u64> {
+        let version = self
+            .latest_version()
+            .ok_or_else(|| Error::Checkpoint(format!("no checkpoint for {}", self.model)))?;
+        shard.load_checkpoint(&self.store, version)?;
+        Ok(version)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelKind, ModelSpec};
+    use crate::proto::SparsePush;
+    use crate::runtime::ModelConfig;
+    use crate::util::clock::ManualClock;
+
+    fn spec() -> ModelSpec {
+        let cfg = ModelConfig {
+            batch_train: 8,
+            batch_predict: 2,
+            fields: 4,
+            dim: 2,
+            hidden: 8,
+            ftrl_block_rows: 64,
+            ftrl_alpha: 0.05,
+            ftrl_beta: 1.0,
+            ftrl_l1: 1.0,
+            ftrl_l2: 1.0,
+        };
+        ModelSpec::derive("ctr", ModelKind::Lr, &cfg)
+    }
+
+    fn setup(interval: u64) -> (Scheduler, Vec<Arc<MasterShard>>, ManualClock, std::path::PathBuf) {
+        let clock = ManualClock::new(1_000);
+        let base = std::env::temp_dir().join(format!(
+            "weips-sched-{}-{:x}",
+            std::process::id(),
+            crate::util::mono_ns()
+        ));
+        let store = Arc::new(CheckpointStore::new(base.join("local"), Some(base.join("remote"))));
+        let meta = MetaStore::new(Arc::new(clock.clone()));
+        let masters: Vec<Arc<MasterShard>> = (0..3)
+            .map(|i| {
+                Arc::new(MasterShard::new(i, spec(), None, 1, Arc::new(clock.clone())).unwrap())
+            })
+            .collect();
+        let policy = CkptPolicy { interval_ms: interval, jitter: 0.3, keep_local: 2, remote_every: 2 };
+        let sched = Scheduler::new(meta, store, "ctr", policy, Arc::new(clock.clone()));
+        (sched, masters, clock, base)
+    }
+
+    fn push_some(masters: &[Arc<MasterShard>], base: u64) {
+        for (i, m) in masters.iter().enumerate() {
+            m.sparse_push(&SparsePush {
+                model: "ctr".into(),
+                table: "w".into(),
+                ids: vec![base + i as u64],
+                grads: vec![1.5],
+            })
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn registry_and_failure_detection() {
+        let (sched, _, clock, base) = setup(60_000);
+        let m0 = sched.register("master", "m0", 1_000).unwrap();
+        let _m1 = sched.register("master", "m1", 60_000).unwrap();
+        assert_eq!(sched.nodes("master"), vec!["m0", "m1"]);
+        // m0 misses heartbeats.
+        clock.advance(2_000);
+        let dead = sched.detect_failures();
+        assert_eq!(dead, vec!["/nodes/master/m0"]);
+        assert_eq!(sched.nodes("master"), vec!["m1"]);
+        assert!(sched.heartbeat(&m0).is_err());
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn checkpoint_saves_all_shards_and_manifest() {
+        let (sched, masters, _, base) = setup(60_000);
+        push_some(&masters, 100);
+        let v = sched.checkpoint_now(&masters, vec![7, 8], 0.71).unwrap();
+        assert_eq!(v, 1);
+        let manifest = sched.store.load_manifest("ctr", v).unwrap();
+        assert_eq!(manifest.num_shards, 3);
+        assert_eq!(manifest.queue_offsets, vec![7, 8]);
+        for m in &masters {
+            assert!(sched.store.load_shard("ctr", v, m.shard_id).is_ok());
+        }
+        // Version pointer published.
+        let (val, _) = sched.meta.get("/models/ctr/version").unwrap();
+        assert_eq!(val, b"1");
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn jittered_trigger_fires_within_band() {
+        let (sched, masters, clock, base) = setup(10_000);
+        assert!(!sched.checkpoint_due());
+        // Before interval*(1-jitter) it must not be due.
+        clock.advance(6_900);
+        assert!(!sched.checkpoint_due());
+        // After interval*(1+jitter) it must be due.
+        clock.advance(6_200);
+        assert!(sched.checkpoint_due());
+        sched.checkpoint_now(&masters, vec![], 0.5).unwrap();
+        assert!(!sched.checkpoint_due()); // rescheduled
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn gc_and_remote_replication_policy() {
+        let (sched, masters, _, base) = setup(60_000);
+        for i in 0..5 {
+            push_some(&masters, 1000 + i);
+            sched.checkpoint_now(&masters, vec![], 0.5).unwrap();
+        }
+        // keep_local=2: locals trimmed, but remote_every=2 replicated v2, v4.
+        let versions = sched.store.list_versions("ctr");
+        assert!(versions.contains(&4) && versions.contains(&5), "{versions:?}");
+        assert!(versions.contains(&2), "remote replica survives gc: {versions:?}");
+        assert!(!versions.contains(&1) && !versions.contains(&3), "{versions:?}");
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn partial_recovery_restores_one_shard() {
+        let (sched, masters, clock, base) = setup(60_000);
+        push_some(&masters, 7);
+        let v = sched.checkpoint_now(&masters, vec![], 0.6).unwrap();
+        // Shard 1 "crashes": fresh empty shard object.
+        let fresh = Arc::new(
+            MasterShard::new(1, spec(), None, 1, Arc::new(clock.clone())).unwrap(),
+        );
+        assert_eq!(fresh.total_rows(), 0);
+        let got = sched.recover_shard(&fresh).unwrap();
+        assert_eq!(got, v);
+        assert_eq!(fresh.total_rows(), masters[1].total_rows());
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn version_counter_resumes_after_restart() {
+        let (sched, masters, clock, base) = setup(60_000);
+        push_some(&masters, 1);
+        sched.checkpoint_now(&masters, vec![], 0.5).unwrap();
+        sched.checkpoint_now(&masters, vec![], 0.5).unwrap();
+        // "Restart" the scheduler against the same store.
+        let sched2 = Scheduler::new(
+            MetaStore::new(Arc::new(clock.clone())),
+            sched.store.clone(),
+            "ctr",
+            CkptPolicy::default(),
+            Arc::new(clock.clone()),
+        );
+        let v3 = sched2.checkpoint_now(&masters, vec![], 0.5).unwrap();
+        assert_eq!(v3, 3);
+        std::fs::remove_dir_all(base).ok();
+    }
+}

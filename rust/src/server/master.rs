@@ -1,0 +1,791 @@
+//! Master shard: the training-facing parameter server (§3.2).
+//!
+//! Holds the authoritative optimizer state, applies server-side updates on
+//! every trainer push (scalar FTRL for small batches, the AOT Pallas
+//! kernel for large blocks), feeds dirty ids to the sync [`Collector`],
+//! and snapshots itself for cold-backup checkpoints. Fault tolerance is
+//! checkpoint-based (§4.2.1) — the scheduler drives save/load.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::codec::{Decode, Encode, Reader, Writer};
+use crate::config::ModelSpec;
+use crate::net::Service;
+use crate::optim::BatchedFtrl;
+use crate::proto::{Ack, CkptRequest, DensePull, DenseValues, SparsePull, SparsePush, SparseValues};
+use crate::runtime::Engine;
+use crate::server::methods;
+use crate::storage::CheckpointStore;
+use crate::sync::collector::Collector;
+use crate::table::{aggregate_grads, DenseOpt, DenseTable, SparseTable};
+use crate::util::clock::Clock;
+use crate::{Error, Result};
+
+/// Use the AOT Pallas FTRL kernel when a push touches at least this many
+/// unique rows. The kernel executes fixed (ftrl_block_rows × dim) blocks,
+/// so small pushes pay full-block padding; on CPU-interpret PJRT the
+/// scalar loop wins below a full block (EXPERIMENTS.md §Perf — on a real
+/// TPU the crossover is far lower; override with WEIPS_BATCHED_MIN_ROWS).
+fn batched_ftrl_min_rows() -> usize {
+    use once_cell::sync::Lazy;
+    static MIN: Lazy<usize> = Lazy::new(|| {
+        std::env::var("WEIPS_BATCHED_MIN_ROWS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(8192)
+    });
+    *MIN
+}
+
+struct MasterState {
+    sparse: Vec<SparseTable>,
+    dense: Vec<DenseTable>,
+    /// Last dense version included in a gather flush, per dense table.
+    dense_synced: Vec<u64>,
+}
+
+/// Counters exposed through `STATS`.
+#[derive(Debug, Default)]
+pub struct MasterMetrics {
+    pub pulls: AtomicU64,
+    pub pushes: AtomicU64,
+    pub push_rows: AtomicU64,
+    pub batched_kernel_rows: AtomicU64,
+    pub scalar_rows: AtomicU64,
+}
+
+/// One master shard.
+pub struct MasterShard {
+    pub shard_id: u32,
+    pub spec: ModelSpec,
+    state: RwLock<MasterState>,
+    collector: Arc<Collector>,
+    batched: Vec<Option<BatchedFtrl>>, // per sparse table, when usable
+    clock: Arc<dyn Clock>,
+    /// Downgrade freeze: pushes rejected while set (§4.3.2).
+    frozen: AtomicBool,
+    pub metrics: MasterMetrics,
+}
+
+impl MasterShard {
+    /// Build a shard for `spec`. `engine` enables the batched AOT FTRL
+    /// path (pass `None` for pure-scalar operation, e.g. unit tests).
+    pub fn new(
+        shard_id: u32,
+        spec: ModelSpec,
+        engine: Option<Arc<Engine>>,
+        entry_threshold: u32,
+        clock: Arc<dyn Clock>,
+    ) -> Result<MasterShard> {
+        let mut sparse = Vec::new();
+        let mut batched = Vec::new();
+        for t in &spec.sparse {
+            let opt = spec.optimizer_for(&t.name)?;
+            sparse.push(SparseTable::new(&t.name, t.dim, opt, entry_threshold));
+            let b = match (&engine, t.optimizer.as_str()) {
+                (Some(eng), "ftrl") => BatchedFtrl::new(eng.clone(), t.dim).ok(),
+                _ => None,
+            };
+            batched.push(b);
+        }
+        let dense = spec
+            .dense
+            .iter()
+            .map(|d| {
+                DenseTable::new(&d.name, spec.dense_init(d), DenseOpt::Adagrad { lr: 0.05, eps: 1e-8 })
+            })
+            .collect::<Vec<_>>();
+        let dense_synced = vec![u64::MAX; dense.len()];
+        Ok(MasterShard {
+            shard_id,
+            spec,
+            state: RwLock::new(MasterState { sparse, dense, dense_synced }),
+            collector: Arc::new(Collector::new()),
+            batched,
+            clock,
+            frozen: AtomicBool::new(false),
+            metrics: MasterMetrics::default(),
+        })
+    }
+
+    /// The sync collector fed by this shard's pushes.
+    pub fn collector(&self) -> Arc<Collector> {
+        self.collector.clone()
+    }
+
+    /// Index of a sparse table in the spec order.
+    pub fn table_index(&self, name: &str) -> Result<u16> {
+        self.spec
+            .sparse
+            .iter()
+            .position(|t| t.name == name)
+            .map(|i| i as u16)
+            .ok_or_else(|| Error::NotFound(format!("sparse table {name}")))
+    }
+
+    /// Freeze/unfreeze pushes (downgrade execution support).
+    pub fn set_frozen(&self, frozen: bool) {
+        self.frozen.store(frozen, Ordering::Release);
+    }
+
+    /// True while the shard rejects pushes.
+    pub fn is_frozen(&self) -> bool {
+        self.frozen.load(Ordering::Acquire)
+    }
+
+    /// Pull one slot (or full rows with `slot == "*"`). Missing ids read 0.
+    pub fn sparse_pull(&self, req: &SparsePull) -> Result<SparseValues> {
+        self.metrics.pulls.fetch_add(1, Ordering::Relaxed);
+        let idx = self.table_index(&req.table)? as usize;
+        let now = self.clock.now_ms();
+        let mut state = self.state.write().unwrap();
+        let table = &mut state.sparse[idx];
+        if req.slot == "*" {
+            let width = table.optimizer().row_width(table.dim());
+            let mut values = vec![0.0f32; req.ids.len() * width];
+            for (i, id) in req.ids.iter().enumerate() {
+                if let Some(row) = table.get_row(*id) {
+                    values[i * width..(i + 1) * width].copy_from_slice(&row.values);
+                }
+            }
+            return Ok(SparseValues { width: width as u32, values });
+        }
+        let dim = table.dim();
+        let mut values = vec![0.0f32; req.ids.len() * dim];
+        table.pull_slot(&req.ids, &req.slot, now, &mut values)?;
+        Ok(SparseValues { width: dim as u32, values })
+    }
+
+    /// Apply a gradient push: aggregate duplicates, entry-filter, optimize
+    /// (batched kernel when large), record dirty ids.
+    pub fn sparse_push(&self, req: &SparsePush) -> Result<()> {
+        if self.is_frozen() {
+            return Err(Error::Unavailable("master frozen for version switch".into()));
+        }
+        self.metrics.pushes.fetch_add(1, Ordering::Relaxed);
+        let idx = self.table_index(&req.table)? as usize;
+        let now = self.clock.now_ms();
+        let mut state = self.state.write().unwrap();
+        let table = &mut state.sparse[idx];
+        let dim = table.dim();
+        if req.grads.len() != req.ids.len() * dim {
+            return Err(Error::Codec(format!(
+                "push grads {} != ids {} * dim {dim}",
+                req.grads.len(),
+                req.ids.len()
+            )));
+        }
+        let (uids, ugrads) = aggregate_grads(&req.ids, &req.grads, dim);
+        self.metrics.push_rows.fetch_add(uids.len() as u64, Ordering::Relaxed);
+
+        let touched: Vec<u64> = if uids.len() >= batched_ftrl_min_rows() && self.batched[idx].is_some()
+        {
+            // Batched AOT path: entry-filter, gather (z, n), run the Pallas
+            // kernel, scatter (z, n, w) back.
+            let ready = table.ensure_rows(&uids, now);
+            let ids: Vec<u64> = ready.iter().map(|(_, id)| *id).collect();
+            let k = ids.len();
+            if k == 0 {
+                Vec::new()
+            } else {
+                let mut g = vec![0.0f32; k * dim];
+                for (out_i, (pos, _)) in ready.iter().enumerate() {
+                    g[out_i * dim..(out_i + 1) * dim]
+                        .copy_from_slice(&ugrads[pos * dim..(pos + 1) * dim]);
+                }
+                let mut z = vec![0.0f32; k * dim];
+                let mut n = vec![0.0f32; k * dim];
+                let mut w = vec![0.0f32; k * dim];
+                table.gather_slot_pair(&ids, 0, 1, &mut z, &mut n);
+                self.batched[idx]
+                    .as_ref()
+                    .unwrap()
+                    .update(&g, &mut z, &mut n, &mut w)?;
+                table.scatter_slot_triple(&ids, (0, 1, 2), &z, &n, &w, now);
+                self.metrics.batched_kernel_rows.fetch_add(k as u64, Ordering::Relaxed);
+                ids
+            }
+        } else {
+            self.metrics.scalar_rows.fetch_add(uids.len() as u64, Ordering::Relaxed);
+            table.apply_grads(&uids, &ugrads, now)
+        };
+        drop(state);
+        self.collector.record_updates(idx as u16, &touched);
+        Ok(())
+    }
+
+    /// Read a dense table.
+    pub fn dense_pull(&self, req: &DensePull) -> Result<DenseValues> {
+        let state = self.state.read().unwrap();
+        let t = state
+            .dense
+            .iter()
+            .find(|d| d.name() == req.table)
+            .ok_or_else(|| Error::NotFound(format!("dense table {}", req.table)))?;
+        Ok(DenseValues {
+            model: req.model.clone(),
+            table: req.table.clone(),
+            values: t.values().to_vec(),
+        })
+    }
+
+    /// Apply a dense gradient.
+    pub fn dense_push(&self, req: &DenseValues) -> Result<()> {
+        if self.is_frozen() {
+            return Err(Error::Unavailable("master frozen for version switch".into()));
+        }
+        let mut state = self.state.write().unwrap();
+        let t = state
+            .dense
+            .iter_mut()
+            .find(|d| d.name() == req.table)
+            .ok_or_else(|| Error::NotFound(format!("dense table {}", req.table)))?;
+        t.apply_grad(&req.values)
+    }
+
+    /// Run the feature-expire pass (§4.1c); evictions are recorded as sync
+    /// deletes so slaves drop the rows too. Returns evicted count.
+    pub fn expire_features(&self, ttl_ms: u64) -> usize {
+        if ttl_ms == 0 {
+            return 0;
+        }
+        let now = self.clock.now_ms();
+        let mut state = self.state.write().unwrap();
+        let mut total = 0;
+        let mut evictions = Vec::new();
+        for (idx, table) in state.sparse.iter_mut().enumerate() {
+            let dead = table.expire(now, ttl_ms);
+            total += dead.len();
+            if !dead.is_empty() {
+                evictions.push((idx as u16, dead));
+            }
+        }
+        drop(state);
+        for (idx, dead) in evictions {
+            self.collector.record_deletes(idx, &dead);
+        }
+        total
+    }
+
+    /// Snapshot the full shard state (checkpoint payload).
+    pub fn snapshot(&self) -> Vec<u8> {
+        let state = self.state.read().unwrap();
+        let mut w = Writer::with_capacity(1 << 16);
+        w.put_u32(self.shard_id);
+        w.put_varint(state.sparse.len() as u64);
+        for t in &state.sparse {
+            t.encode_rows(&mut w);
+        }
+        w.put_varint(state.dense.len() as u64);
+        for d in &state.dense {
+            d.encode(&mut w);
+        }
+        w.into_bytes()
+    }
+
+    /// Restore shard state from a snapshot produced by [`Self::snapshot`]
+    /// — possibly taken by a *different* shard id in a differently-sized
+    /// cluster (dynamic routing on load, §4.2.1d): rows not owned by this
+    /// shard under `router` are skipped when a router is given.
+    pub fn restore(
+        &self,
+        bytes: &[u8],
+        router: Option<(&crate::sync::router::Router, u32)>,
+    ) -> Result<()> {
+        let mut r = Reader::new(bytes);
+        let _src_shard = r.get_u32()?;
+        let n_sparse = r.get_varint()? as usize;
+        let mut state = self.state.write().unwrap();
+        if n_sparse != state.sparse.len() {
+            return Err(Error::Checkpoint(format!(
+                "snapshot has {n_sparse} sparse tables, spec has {}",
+                state.sparse.len()
+            )));
+        }
+        for t in state.sparse.iter_mut() {
+            t.decode_rows(&mut r)?;
+        }
+        // Dynamic routing: drop rows that no longer belong to this shard.
+        if let Some((router, my_shard)) = router {
+            for t in state.sparse.iter_mut() {
+                let foreign: Vec<u64> = t
+                    .iter()
+                    .map(|(id, _)| *id)
+                    .filter(|id| router.shard_of(*id) != my_shard)
+                    .collect();
+                for id in foreign {
+                    t.delete(id);
+                }
+            }
+        }
+        let n_dense = r.get_varint()? as usize;
+        if n_dense != state.dense.len() {
+            return Err(Error::Checkpoint(format!(
+                "snapshot has {n_dense} dense tables, spec has {}",
+                state.dense.len()
+            )));
+        }
+        for d in state.dense.iter_mut() {
+            d.decode_into(&mut r)?;
+        }
+        Ok(())
+    }
+
+    /// Merge rows from another shard's snapshot into this shard, keeping
+    /// only rows this shard owns (cluster migration / resharding path).
+    pub fn absorb(
+        &self,
+        bytes: &[u8],
+        router: &crate::sync::router::Router,
+        my_shard: u32,
+    ) -> Result<usize> {
+        let mut r = Reader::new(bytes);
+        let _src_shard = r.get_u32()?;
+        let n_sparse = r.get_varint()? as usize;
+        let mut state = self.state.write().unwrap();
+        if n_sparse != state.sparse.len() {
+            return Err(Error::Checkpoint("table count mismatch".into()));
+        }
+        let now = self.clock.now_ms();
+        let mut absorbed = 0;
+        for t in state.sparse.iter_mut() {
+            // Decode into a scratch table, then filter-copy.
+            let mut scratch = SparseTable::new(t.name(), t.dim(), t.optimizer().clone(), 1);
+            scratch.decode_rows(&mut r)?;
+            for (id, row) in scratch.iter() {
+                if router.shard_of(*id) == my_shard {
+                    t.upsert_row(*id, &row.values, now)?;
+                    absorbed += 1;
+                }
+            }
+        }
+        // Dense tables: take the source values verbatim (replicated state).
+        let n_dense = r.get_varint()? as usize;
+        if n_dense != state.dense.len() {
+            return Err(Error::Checkpoint("dense count mismatch".into()));
+        }
+        for d in state.dense.iter_mut() {
+            d.decode_into(&mut r)?;
+        }
+        Ok(absorbed)
+    }
+
+    /// Replay a sync batch into this master's tables (partial-recovery
+    /// path, §4.2.1b: the external queue as real-time incremental backup).
+    /// Upserts carry full master rows, so applying them after a checkpoint
+    /// restore reconstructs every post-checkpoint update.
+    pub fn replay_sync_batch(&self, batch: &crate::proto::SyncBatch) -> Result<()> {
+        let idx = self.table_index(&batch.table)? as usize;
+        let now = self.clock.now_ms();
+        let mut state = self.state.write().unwrap();
+        let table = &mut state.sparse[idx];
+        for entry in &batch.entries {
+            match &entry.op {
+                crate::proto::SyncOp::Upsert(values) => {
+                    table.upsert_row(entry.id, values, now)?;
+                }
+                crate::proto::SyncOp::Delete => {
+                    table.delete(entry.id);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Failure injection for E5: inflate + sign-flip every serving weight
+    /// (the "abnormal change" the domino downgrade must detect). Test/bench
+    /// only; goes through the normal collector so the corruption streams
+    /// to the slaves like any update.
+    pub fn corrupt_for_test(&self, scale: f32) -> Result<()> {
+        let mut dirty: Vec<(u16, Vec<u64>)> = Vec::new();
+        {
+            let mut state = self.state.write().unwrap();
+            for (idx, table) in state.sparse.iter_mut().enumerate() {
+                let dim = table.dim();
+                let opt = table.optimizer().clone();
+                let w_slot = opt
+                    .slot_index("w")
+                    .ok_or_else(|| Error::State("optimizer lacks w slot".into()))?;
+                // Corrupt the z accumulator too (when present): FTRL
+                // re-derives w from (z, n) on the next update, so w-only
+                // corruption would self-heal for hot ids.
+                let z_slot = opt.slot_index("z");
+                let ids: Vec<u64> = table.iter().map(|(id, _)| *id).collect();
+                for id in &ids {
+                    let mut values = table.get_row(*id).unwrap().values.to_vec();
+                    for v in &mut values[w_slot * dim..(w_slot + 1) * dim] {
+                        *v = -*v * scale - 0.5;
+                    }
+                    if let Some(z) = z_slot {
+                        for v in &mut values[z * dim..(z + 1) * dim] {
+                            *v = -*v * scale - 2.0;
+                        }
+                    }
+                    table.upsert_row(*id, &values, 0)?;
+                }
+                dirty.push((idx as u16, ids));
+            }
+        }
+        for (idx, ids) in dirty {
+            self.collector.record_updates(idx, &ids);
+        }
+        Ok(())
+    }
+
+    /// Read current full rows + bump nothing (gather's value snapshot).
+    pub fn read_rows_for_sync(&self, table: u16, ids: &[u64]) -> Vec<(u64, Option<Vec<f32>>)> {
+        let state = self.state.read().unwrap();
+        let t = &state.sparse[table as usize];
+        ids.iter()
+            .map(|id| (*id, t.get_row(*id).map(|r| r.values.to_vec())))
+            .collect()
+    }
+
+    /// Dense tables whose version advanced since the last sync flush;
+    /// marks them synced. Returns (dense index, name, values).
+    pub fn dense_changed_since_sync(&self) -> Vec<(usize, String, Vec<f32>)> {
+        let mut state = self.state.write().unwrap();
+        let mut out = Vec::new();
+        for i in 0..state.dense.len() {
+            let v = state.dense[i].version;
+            if state.dense_synced[i] != v {
+                state.dense_synced[i] = v;
+                out.push((i, state.dense[i].name().to_string(), state.dense[i].values().to_vec()));
+            }
+        }
+        out
+    }
+
+    /// Total materialized rows across sparse tables.
+    pub fn total_rows(&self) -> usize {
+        let state = self.state.read().unwrap();
+        state.sparse.iter().map(|t| t.len()).sum()
+    }
+
+    /// Save this shard into `store` as `version`.
+    pub fn save_checkpoint(&self, store: &CheckpointStore, version: u64) -> Result<()> {
+        store.save_shard(&self.spec.name, version, self.shard_id, &self.snapshot())
+    }
+
+    /// Load this shard from `store` at `version` (same topology).
+    pub fn load_checkpoint(&self, store: &CheckpointStore, version: u64) -> Result<()> {
+        let bytes = store.load_shard(&self.spec.name, version, self.shard_id)?;
+        self.restore(&bytes, None)
+    }
+
+    fn stats_json(&self) -> String {
+        format!(
+            r#"{{"shard":{},"rows":{},"pulls":{},"pushes":{},"push_rows":{},"batched_rows":{},"scalar_rows":{},"frozen":{}}}"#,
+            self.shard_id,
+            self.total_rows(),
+            self.metrics.pulls.load(Ordering::Relaxed),
+            self.metrics.pushes.load(Ordering::Relaxed),
+            self.metrics.push_rows.load(Ordering::Relaxed),
+            self.metrics.batched_kernel_rows.load(Ordering::Relaxed),
+            self.metrics.scalar_rows.load(Ordering::Relaxed),
+            self.is_frozen(),
+        )
+    }
+}
+
+/// RPC facade for a master shard (optionally checkpoint-capable).
+pub struct MasterService {
+    pub shard: Arc<MasterShard>,
+    pub store: Option<Arc<CheckpointStore>>,
+}
+
+impl Service for MasterService {
+    fn call(&self, method: u16, payload: &[u8]) -> Result<Vec<u8>> {
+        match method {
+            methods::SPARSE_PULL => {
+                let req = SparsePull::from_bytes(payload)?;
+                Ok(self.shard.sparse_pull(&req)?.to_bytes())
+            }
+            methods::SPARSE_PUSH => {
+                let req = SparsePush::from_bytes(payload)?;
+                self.shard.sparse_push(&req)?;
+                Ok(Ack::ok().to_bytes())
+            }
+            methods::DENSE_PULL => {
+                let req = DensePull::from_bytes(payload)?;
+                Ok(self.shard.dense_pull(&req)?.to_bytes())
+            }
+            methods::DENSE_PUSH => {
+                let req = DenseValues::from_bytes(payload)?;
+                self.shard.dense_push(&req)?;
+                Ok(Ack::ok().to_bytes())
+            }
+            methods::SAVE_CKPT => {
+                let req = CkptRequest::from_bytes(payload)?;
+                let store = self
+                    .store
+                    .as_ref()
+                    .ok_or_else(|| Error::State("no checkpoint store attached".into()))?;
+                self.shard.save_checkpoint(store, req.version)?;
+                Ok(Ack::ok().to_bytes())
+            }
+            methods::LOAD_CKPT => {
+                let req = CkptRequest::from_bytes(payload)?;
+                let store = self
+                    .store
+                    .as_ref()
+                    .ok_or_else(|| Error::State("no checkpoint store attached".into()))?;
+                self.shard.load_checkpoint(store, req.version)?;
+                Ok(Ack::ok().to_bytes())
+            }
+            methods::STATS => Ok(self.shard.stats_json().into_bytes()),
+            methods::PING => Ok(Ack::ok().to_bytes()),
+            m => Err(Error::Rpc(format!("master: unknown method {m}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelKind, ModelSpec};
+    use crate::runtime::ModelConfig;
+    use crate::util::clock::ManualClock;
+
+    fn spec(kind: ModelKind) -> ModelSpec {
+        let cfg = ModelConfig {
+            batch_train: 8,
+            batch_predict: 2,
+            fields: 4,
+            dim: 2,
+            hidden: 8,
+            ftrl_block_rows: 64,
+            ftrl_alpha: 0.05,
+            ftrl_beta: 1.0,
+            ftrl_l1: 1.0,
+            ftrl_l2: 1.0,
+        };
+        ModelSpec::derive("ctr", kind, &cfg)
+    }
+
+    fn shard(kind: ModelKind) -> (Arc<MasterShard>, ManualClock) {
+        let clock = ManualClock::new(0);
+        let m = MasterShard::new(0, spec(kind), None, 1, Arc::new(clock.clone())).unwrap();
+        (Arc::new(m), clock)
+    }
+
+    fn push(m: &MasterShard, table: &str, ids: Vec<u64>, grads: Vec<f32>) {
+        m.sparse_push(&SparsePush { model: "ctr".into(), table: table.into(), ids, grads })
+            .unwrap();
+    }
+
+    fn pull(m: &MasterShard, table: &str, ids: Vec<u64>, slot: &str) -> SparseValues {
+        m.sparse_pull(&SparsePull { model: "ctr".into(), table: table.into(), ids, slot: slot.into() })
+            .unwrap()
+    }
+
+    #[test]
+    fn push_pull_lifecycle() {
+        let (m, _) = shard(ModelKind::Fm);
+        push(&m, "w", vec![1, 2], vec![1.0, -1.0]);
+        let w = pull(&m, "w", vec![1, 2, 3], "w");
+        assert_eq!(w.width, 1);
+        assert_eq!(w.values.len(), 3);
+        assert_eq!(w.values[2], 0.0); // missing id
+        // FTRL with |z|=1 <= l1 keeps w at 0 after one unit gradient; check z.
+        let z = pull(&m, "w", vec![1, 2], "z");
+        assert_eq!(z.values, vec![1.0, -1.0]);
+        // Full-row pull.
+        let full = pull(&m, "w", vec![1], "*");
+        assert_eq!(full.width, 3);
+        assert_eq!(full.values[0], 1.0);
+    }
+
+    #[test]
+    fn push_validates_and_collects() {
+        let (m, _) = shard(ModelKind::Fm);
+        // Bad width.
+        let err = m.sparse_push(&SparsePush {
+            model: "ctr".into(),
+            table: "v".into(),
+            ids: vec![1],
+            grads: vec![1.0],
+        });
+        assert!(err.is_err());
+        // Unknown table.
+        assert!(m
+            .sparse_push(&SparsePush {
+                model: "ctr".into(),
+                table: "zzz".into(),
+                ids: vec![1],
+                grads: vec![1.0],
+            })
+            .is_err());
+        push(&m, "v", vec![7, 7, 9], vec![0.1, 0.1, 0.2, 0.2, 0.3, 0.3]);
+        let c = m.collector();
+        let mut out = Vec::new();
+        c.drain(&mut out);
+        // 7 deduped by aggregate: two dirty ids for table v (idx 1).
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|e| e.table == 1));
+    }
+
+    #[test]
+    fn dense_push_pull() {
+        let (m, _) = shard(ModelKind::Fm);
+        let before = m
+            .dense_pull(&DensePull { model: "ctr".into(), table: "bias".into() })
+            .unwrap();
+        assert_eq!(before.values, vec![0.0]);
+        m.dense_push(&DenseValues { model: "ctr".into(), table: "bias".into(), values: vec![1.0] })
+            .unwrap();
+        let after = m
+            .dense_pull(&DensePull { model: "ctr".into(), table: "bias".into() })
+            .unwrap();
+        assert!(after.values[0] < 0.0); // moved against gradient
+        assert!(m
+            .dense_pull(&DensePull { model: "ctr".into(), table: "none".into() })
+            .is_err());
+    }
+
+    #[test]
+    fn frozen_rejects_pushes_not_pulls() {
+        let (m, _) = shard(ModelKind::Lr);
+        m.set_frozen(true);
+        assert!(m
+            .sparse_push(&SparsePush {
+                model: "ctr".into(),
+                table: "w".into(),
+                ids: vec![1],
+                grads: vec![1.0],
+            })
+            .is_err());
+        assert!(m
+            .dense_push(&DenseValues { model: "ctr".into(), table: "bias".into(), values: vec![1.0] })
+            .is_err());
+        let _ = pull(&m, "w", vec![1], "w"); // pulls still served
+        m.set_frozen(false);
+        push(&m, "w", vec![1], vec![1.0]);
+    }
+
+    #[test]
+    fn snapshot_restore_round_trip() {
+        let (m, _) = shard(ModelKind::Fm);
+        for i in 0..50u64 {
+            push(&m, "w", vec![i], vec![0.5]);
+            push(&m, "v", vec![i], vec![0.1, -0.1]);
+        }
+        m.dense_push(&DenseValues { model: "ctr".into(), table: "bias".into(), values: vec![1.0] })
+            .unwrap();
+        let snap = m.snapshot();
+
+        let (m2, _) = shard(ModelKind::Fm);
+        m2.restore(&snap, None).unwrap();
+        assert_eq!(m2.total_rows(), m.total_rows());
+        let a = pull(&m, "v", (0..50).collect(), "*");
+        let b = pull(&m2, "v", (0..50).collect(), "*");
+        assert_eq!(a, b);
+        let d1 = m.dense_pull(&DensePull { model: "ctr".into(), table: "bias".into() }).unwrap();
+        let d2 = m2.dense_pull(&DensePull { model: "ctr".into(), table: "bias".into() }).unwrap();
+        assert_eq!(d1.values, d2.values);
+    }
+
+    #[test]
+    fn restore_with_router_drops_foreign_rows() {
+        use crate::sync::router::Router;
+        let (m, _) = shard(ModelKind::Lr);
+        for i in 0..200u64 {
+            push(&m, "w", vec![i], vec![1.0]);
+        }
+        let snap = m.snapshot();
+        let (m2, _) = shard(ModelKind::Lr);
+        let router = Router::new(4);
+        m2.restore(&snap, Some((&router, 2))).unwrap();
+        let expect = (0..200u64).filter(|id| router.shard_of(*id) == 2).count();
+        assert_eq!(m2.total_rows(), expect);
+    }
+
+    #[test]
+    fn absorb_merges_owned_rows_only() {
+        use crate::sync::router::Router;
+        let (src_a, _) = shard(ModelKind::Lr);
+        let (src_b, _) = shard(ModelKind::Lr);
+        for i in 0..100u64 {
+            push(&src_a, "w", vec![i], vec![1.0]);
+        }
+        for i in 100..200u64 {
+            push(&src_b, "w", vec![i], vec![1.0]);
+        }
+        // Migrate 2-shard content into a 3-shard cluster, shard 1.
+        let router = Router::new(3);
+        let (dst, _) = shard(ModelKind::Lr);
+        let n1 = dst.absorb(&src_a.snapshot(), &router, 1).unwrap();
+        let n2 = dst.absorb(&src_b.snapshot(), &router, 1).unwrap();
+        let expect = (0..200u64).filter(|id| router.shard_of(*id) == 1).count();
+        assert_eq!(n1 + n2, expect);
+        assert_eq!(dst.total_rows(), expect);
+    }
+
+    #[test]
+    fn expire_records_deletes() {
+        let (m, clock) = shard(ModelKind::Lr);
+        push(&m, "w", vec![1, 2], vec![1.0, 1.0]);
+        {
+            let mut scratch = Vec::new();
+            m.collector().drain(&mut scratch); // clear update events
+        }
+        clock.advance(10_000);
+        push(&m, "w", vec![2], vec![1.0]); // refresh id 2
+        let evicted = m.expire_features(5_000);
+        assert_eq!(evicted, 1);
+        let mut events = Vec::new();
+        m.collector().drain(&mut events);
+        // id 2's update + id 1's delete.
+        assert!(events
+            .iter()
+            .any(|e| e.id == 1 && e.op == crate::sync::collector::DirtyOp::Delete));
+        assert_eq!(m.total_rows(), 1);
+    }
+
+    #[test]
+    fn service_dispatch_round_trip() {
+        let (m, _) = shard(ModelKind::Lr);
+        let svc = MasterService { shard: m.clone(), store: None };
+        let push_bytes = SparsePush {
+            model: "ctr".into(),
+            table: "w".into(),
+            ids: vec![5],
+            grads: vec![2.0],
+        }
+        .to_bytes();
+        let ack = Ack::from_bytes(&svc.call(methods::SPARSE_PUSH, &push_bytes).unwrap()).unwrap();
+        assert!(ack.ok);
+        let pull_bytes = SparsePull {
+            model: "ctr".into(),
+            table: "w".into(),
+            ids: vec![5],
+            slot: "z".into(),
+        }
+        .to_bytes();
+        let vals =
+            SparseValues::from_bytes(&svc.call(methods::SPARSE_PULL, &pull_bytes).unwrap()).unwrap();
+        assert_eq!(vals.values, vec![2.0]);
+        // Checkpoint without store errors.
+        let ck = CkptRequest { model: "ctr".into(), version: 1, queue_offsets: vec![] }.to_bytes();
+        assert!(svc.call(methods::SAVE_CKPT, &ck).is_err());
+        assert!(svc.call(99, &[]).is_err());
+        // Ping.
+        assert!(Ack::from_bytes(&svc.call(methods::PING, &[]).unwrap()).unwrap().ok);
+    }
+
+    #[test]
+    fn dense_changed_since_sync_tracks_versions() {
+        let (m, _) = shard(ModelKind::Fm);
+        // First call: everything is "changed" (initial sync).
+        let first = m.dense_changed_since_sync();
+        assert_eq!(first.len(), 1);
+        // No updates -> nothing to sync.
+        assert!(m.dense_changed_since_sync().is_empty());
+        m.dense_push(&DenseValues { model: "ctr".into(), table: "bias".into(), values: vec![1.0] })
+            .unwrap();
+        let after = m.dense_changed_since_sync();
+        assert_eq!(after.len(), 1);
+        assert_eq!(after[0].1, "bias");
+    }
+}

@@ -1,0 +1,28 @@
+//! Server role (§3.2): master (training-facing) and slave (serving-facing)
+//! parameter-server shards, plus their RPC method tables.
+
+pub mod master;
+pub mod slave;
+
+/// RPC method ids shared by master and slave services.
+pub mod methods {
+    /// `SparsePull -> SparseValues`
+    pub const SPARSE_PULL: u16 = 1;
+    /// `SparsePush -> Ack` (master only)
+    pub const SPARSE_PUSH: u16 = 2;
+    /// `DensePull -> DenseValues`
+    pub const DENSE_PULL: u16 = 3;
+    /// `DenseValues (grads) -> Ack` (master only)
+    pub const DENSE_PUSH: u16 = 4;
+    /// `CkptRequest -> Ack` (master only)
+    pub const SAVE_CKPT: u16 = 5;
+    /// `CkptRequest -> Ack` (master only)
+    pub const LOAD_CKPT: u16 = 6;
+    /// `() -> Stats (json)`
+    pub const STATS: u16 = 7;
+    /// health probe: `() -> Ack`
+    pub const PING: u16 = 8;
+}
+
+pub use master::MasterShard;
+pub use slave::{ServingTable, SlaveShard};

@@ -1,0 +1,570 @@
+//! Slave shard: the inference-facing parameter server (§3.2).
+//!
+//! Read-optimized: rows hold only the *transformed* serving representation
+//! (e.g. FTRL `w`, not `z,n`), fed by the scatter worker consuming the
+//! external queue. Fault tolerance is hot multi-replica (§4.2.2) — several
+//! identical slave shards serve behind the replica load balancer, each
+//! kept consistent by full sync (checkpoint bootstrap) + streaming
+//! incremental sync.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::codec::{Decode, Encode, Reader};
+use crate::net::Service;
+use crate::proto::{Ack, DensePull, DenseValues, SparsePull, SparseValues, SyncBatch, SyncOp};
+use crate::server::methods;
+use crate::sync::router::Router;
+use crate::sync::transform::Transform;
+use crate::util::hash::FxHashMap;
+use crate::{Error, Result};
+
+/// One serving table: id → transformed row.
+pub struct ServingTable {
+    pub width: usize,
+    rows: FxHashMap<u64, Box<[f32]>>,
+}
+
+impl ServingTable {
+    /// Empty table with fixed serving width.
+    pub fn new(width: usize) -> ServingTable {
+        ServingTable { width, rows: FxHashMap::default() }
+    }
+
+    /// Row count.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Read rows for `ids` into a flat vec (missing → 0).
+    pub fn pull(&self, ids: &[u64]) -> Vec<f32> {
+        let mut out = vec![0.0f32; ids.len() * self.width];
+        for (i, id) in ids.iter().enumerate() {
+            if let Some(row) = self.rows.get(id) {
+                out[i * self.width..(i + 1) * self.width].copy_from_slice(row);
+            }
+        }
+        out
+    }
+
+    fn upsert(&mut self, id: u64, values: Vec<f32>) {
+        self.rows.insert(id, values.into_boxed_slice());
+    }
+
+    fn delete(&mut self, id: u64) -> bool {
+        self.rows.remove(&id).is_some()
+    }
+}
+
+struct SlaveState {
+    tables: Vec<(String, ServingTable)>,
+    dense: Vec<(String, Vec<f32>)>,
+}
+
+/// Counters exposed through `STATS`.
+#[derive(Debug, Default)]
+pub struct SlaveMetrics {
+    pub pulls: AtomicU64,
+    pub applied_entries: AtomicU64,
+    pub filtered_entries: AtomicU64,
+    pub deletes: AtomicU64,
+    pub batches: AtomicU64,
+}
+
+/// One slave shard replica.
+pub struct SlaveShard {
+    pub shard_id: u32,
+    pub replica_id: u32,
+    model: String,
+    transform: Arc<dyn Transform>,
+    router: Router,
+    state: RwLock<SlaveState>,
+    /// Model version currently served (checkpoint lineage).
+    version: AtomicU64,
+    /// Health toggle for failover tests / draining.
+    healthy: AtomicBool,
+    pub metrics: SlaveMetrics,
+}
+
+impl SlaveShard {
+    /// New empty slave shard. `tables` = (name, serving width) in model
+    /// order; `router` is the *slave* cluster's router.
+    pub fn new(
+        shard_id: u32,
+        replica_id: u32,
+        model: &str,
+        tables: Vec<(String, usize)>,
+        dense: Vec<(String, usize)>,
+        transform: Arc<dyn Transform>,
+        router: Router,
+    ) -> SlaveShard {
+        SlaveShard {
+            shard_id,
+            replica_id,
+            model: model.to_string(),
+            transform,
+            router,
+            state: RwLock::new(SlaveState {
+                tables: tables
+                    .into_iter()
+                    .map(|(n, w)| (n, ServingTable::new(w)))
+                    .collect(),
+                dense: dense.into_iter().map(|(n, l)| (n, vec![0.0; l])).collect(),
+            }),
+            version: AtomicU64::new(0),
+            healthy: AtomicBool::new(true),
+            metrics: SlaveMetrics::default(),
+        }
+    }
+
+    /// Model name served.
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// Serving version (checkpoint id + streaming head).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Set the serving version (after full sync / version switch).
+    pub fn set_version(&self, v: u64) {
+        self.version.store(v, Ordering::Release);
+    }
+
+    /// Health controls (used by the balancer and failure injection).
+    pub fn set_healthy(&self, ok: bool) {
+        self.healthy.store(ok, Ordering::Release);
+    }
+
+    /// True when serving.
+    pub fn is_healthy(&self) -> bool {
+        self.healthy.load(Ordering::Acquire)
+    }
+
+    /// Apply one streaming sync batch: filter ids to this shard, transform
+    /// master rows to serving rows, upsert/delete; dense batches replace
+    /// values wholesale. Idempotent (full-value upserts, §4.1d).
+    pub fn apply_batch(&self, batch: &SyncBatch) -> Result<()> {
+        self.metrics.batches.fetch_add(1, Ordering::Relaxed);
+        let mut state = self.state.write().unwrap();
+        if !batch.dense.is_empty() {
+            let Some(t) = state.dense.iter_mut().find(|(n, _)| *n == batch.table) else {
+                // Data screening (§4.1.4b): this slave type does not serve
+                // the table — e.g. an embedding slave ignoring the tower.
+                self.metrics.filtered_entries.fetch_add(1, Ordering::Relaxed);
+                return Ok(());
+            };
+            if t.1.len() != batch.dense.len() {
+                return Err(Error::Codec(format!(
+                    "dense sync {}: len {} != {}",
+                    batch.table,
+                    batch.dense.len(),
+                    t.1.len()
+                )));
+            }
+            t.1.copy_from_slice(&batch.dense);
+            return Ok(());
+        }
+        let Some(width) = self.transform.serving_width(&batch.table) else {
+            // Screened-out table for this slave type.
+            self.metrics
+                .filtered_entries
+                .fetch_add(batch.entries.len() as u64, Ordering::Relaxed);
+            return Ok(());
+        };
+        let idx = state
+            .tables
+            .iter()
+            .position(|(n, _)| *n == batch.table)
+            .ok_or_else(|| Error::NotFound(format!("serving table {}", batch.table)))?;
+        let table = &mut state.tables[idx].1;
+        debug_assert_eq!(table.width, width);
+        let mut applied = 0u64;
+        let mut filtered = 0u64;
+        for entry in &batch.entries {
+            if self.router.shard_of(entry.id) != self.shard_id {
+                filtered += 1;
+                continue;
+            }
+            match &entry.op {
+                SyncOp::Upsert(row) => {
+                    if let Some(serving) = self.transform.transform(&batch.table, row)? {
+                        table.upsert(entry.id, serving);
+                        applied += 1;
+                    }
+                }
+                SyncOp::Delete => {
+                    if table.delete(entry.id) {
+                        self.metrics.deletes.fetch_add(1, Ordering::Relaxed);
+                    }
+                    applied += 1;
+                }
+            }
+        }
+        self.metrics.applied_entries.fetch_add(applied, Ordering::Relaxed);
+        self.metrics.filtered_entries.fetch_add(filtered, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Full synchronization (§4.1, §4.2.2): bootstrap this replica from a
+    /// master-shard checkpoint snapshot — filter ids to this slave shard,
+    /// transform each row. Call once per master shard snapshot.
+    pub fn full_sync_from_snapshot(&self, snapshot: &[u8]) -> Result<usize> {
+        let mut r = Reader::new(snapshot);
+        let _src_shard = r.get_u32()?;
+        let n_sparse = r.get_varint()? as usize;
+        let mut loaded = 0usize;
+        let mut state = self.state.write().unwrap();
+        for _ in 0..n_sparse {
+            // Decode the master table inline (name, dim, width, rows).
+            let name = r.get_str()?;
+            let _dim = r.get_u32()?;
+            let width = r.get_u32()? as usize;
+            let count = r.get_varint()? as usize;
+            let serving = self.transform.serving_width(&name);
+            let tbl_idx = state.tables.iter().position(|(n, _)| *n == name);
+            for _ in 0..count {
+                let id = r.get_varint()?;
+                let _last_access = r.get_varint()?;
+                let _updates = r.get_u32()?;
+                let values = r.get_f32_slice()?;
+                if values.len() != width {
+                    return Err(Error::Checkpoint(format!("row {id} width {}", values.len())));
+                }
+                if serving.is_none() || self.router.shard_of(id) != self.shard_id {
+                    continue;
+                }
+                if let (Some(idx), Some(out)) = (tbl_idx, self.transform.transform(&name, &values)?)
+                {
+                    state.tables[idx].1.upsert(id, out);
+                    loaded += 1;
+                }
+            }
+        }
+        // Dense tables from the snapshot.
+        let n_dense = r.get_varint()? as usize;
+        for _ in 0..n_dense {
+            let name = r.get_str()?;
+            let _version = r.get_u64()?;
+            let values = r.get_f32_slice()?;
+            let _acc = r.get_f32_slice()?;
+            if let Some(t) = state.dense.iter_mut().find(|(n, _)| *n == name) {
+                if t.1.len() == values.len() {
+                    t.1.copy_from_slice(&values);
+                }
+            }
+        }
+        Ok(loaded)
+    }
+
+    /// Drop all rows (before a full re-sync on version switch).
+    pub fn clear(&self) {
+        let mut state = self.state.write().unwrap();
+        for (_, t) in state.tables.iter_mut() {
+            t.rows.clear();
+        }
+        for (_, d) in state.dense.iter_mut() {
+            d.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    /// Serve a sparse pull (serving representation).
+    pub fn sparse_pull(&self, req: &SparsePull) -> Result<SparseValues> {
+        if !self.is_healthy() {
+            return Err(Error::Unavailable(format!(
+                "slave {}/{} draining",
+                self.shard_id, self.replica_id
+            )));
+        }
+        self.metrics.pulls.fetch_add(1, Ordering::Relaxed);
+        let state = self.state.read().unwrap();
+        let t = state
+            .tables
+            .iter()
+            .find(|(n, _)| *n == req.table)
+            .ok_or_else(|| Error::NotFound(format!("serving table {}", req.table)))?;
+        Ok(SparseValues { width: t.1.width as u32, values: t.1.pull(&req.ids) })
+    }
+
+    /// Serve a dense pull.
+    pub fn dense_pull(&self, req: &DensePull) -> Result<DenseValues> {
+        if !self.is_healthy() {
+            return Err(Error::Unavailable("slave draining".into()));
+        }
+        let state = self.state.read().unwrap();
+        let t = state
+            .dense
+            .iter()
+            .find(|(n, _)| *n == req.table)
+            .ok_or_else(|| Error::NotFound(format!("dense table {}", req.table)))?;
+        Ok(DenseValues { model: req.model.clone(), table: req.table.clone(), values: t.1.clone() })
+    }
+
+    /// Rows currently served across tables.
+    pub fn total_rows(&self) -> usize {
+        let state = self.state.read().unwrap();
+        state.tables.iter().map(|(_, t)| t.len()).sum()
+    }
+
+    fn stats_json(&self) -> String {
+        format!(
+            r#"{{"shard":{},"replica":{},"rows":{},"version":{},"pulls":{},"applied":{},"filtered":{},"healthy":{}}}"#,
+            self.shard_id,
+            self.replica_id,
+            self.total_rows(),
+            self.version(),
+            self.metrics.pulls.load(Ordering::Relaxed),
+            self.metrics.applied_entries.load(Ordering::Relaxed),
+            self.metrics.filtered_entries.load(Ordering::Relaxed),
+            self.is_healthy(),
+        )
+    }
+}
+
+/// RPC facade for a slave shard.
+pub struct SlaveService {
+    pub shard: Arc<SlaveShard>,
+}
+
+impl Service for SlaveService {
+    fn call(&self, method: u16, payload: &[u8]) -> Result<Vec<u8>> {
+        match method {
+            methods::SPARSE_PULL => {
+                let req = SparsePull::from_bytes(payload)?;
+                Ok(self.shard.sparse_pull(&req)?.to_bytes())
+            }
+            methods::DENSE_PULL => {
+                let req = DensePull::from_bytes(payload)?;
+                Ok(self.shard.dense_pull(&req)?.to_bytes())
+            }
+            methods::STATS => Ok(self.shard.stats_json().into_bytes()),
+            methods::PING => {
+                if self.shard.is_healthy() {
+                    Ok(Ack::ok().to_bytes())
+                } else {
+                    Err(Error::Unavailable("unhealthy".into()))
+                }
+            }
+            m => Err(Error::Rpc(format!("slave: unknown method {m}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{Ftrl, FtrlHyper};
+    use crate::proto::SyncEntry;
+    use crate::sync::transform::ServingWeights;
+
+    fn transform() -> Arc<dyn Transform> {
+        let ftrl: Arc<dyn crate::optim::Optimizer> = Arc::new(Ftrl::new(FtrlHyper::default()));
+        Arc::new(ServingWeights::new(vec![
+            ("w".into(), ftrl.clone(), 1),
+            ("v".into(), ftrl, 2),
+        ]))
+    }
+
+    fn slave(shard: u32, shards: u32) -> SlaveShard {
+        SlaveShard::new(
+            shard,
+            0,
+            "ctr",
+            vec![("w".into(), 1), ("v".into(), 2)],
+            vec![("bias".into(), 1)],
+            transform(),
+            Router::new(shards),
+        )
+    }
+
+    fn batch(table: &str, entries: Vec<SyncEntry>) -> SyncBatch {
+        SyncBatch {
+            model: "ctr".into(),
+            table: table.into(),
+            shard: 0,
+            seq: 1,
+            created_ms: 0,
+            entries,
+            dense: vec![],
+        }
+    }
+
+    #[test]
+    fn apply_upsert_transforms_to_serving() {
+        let s = slave(0, 1);
+        // FTRL row (z, n, w) dim 1: serving = w = -0.25.
+        s.apply_batch(&batch(
+            "w",
+            vec![SyncEntry { id: 42, op: SyncOp::Upsert(vec![2.0, 1.0, -0.25]) }],
+        ))
+        .unwrap();
+        let out = s
+            .sparse_pull(&SparsePull {
+                model: "ctr".into(),
+                table: "w".into(),
+                ids: vec![42, 43],
+                slot: "w".into(),
+            })
+            .unwrap();
+        assert_eq!(out.values, vec![-0.25, 0.0]);
+    }
+
+    #[test]
+    fn apply_filters_foreign_ids() {
+        let s = slave(1, 4);
+        let router = Router::new(4);
+        let mine: u64 = (0..1000).find(|id| router.shard_of(*id) == 1).unwrap();
+        let foreign: u64 = (0..1000).find(|id| router.shard_of(*id) == 0).unwrap();
+        s.apply_batch(&batch(
+            "w",
+            vec![
+                SyncEntry { id: mine, op: SyncOp::Upsert(vec![1.0, 1.0, 0.5]) },
+                SyncEntry { id: foreign, op: SyncOp::Upsert(vec![1.0, 1.0, 0.9]) },
+            ],
+        ))
+        .unwrap();
+        assert_eq!(s.total_rows(), 1);
+        assert_eq!(s.metrics.filtered_entries.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn apply_delete_removes_row() {
+        let s = slave(0, 1);
+        s.apply_batch(&batch("w", vec![SyncEntry { id: 7, op: SyncOp::Upsert(vec![0.0, 0.0, 0.3]) }]))
+            .unwrap();
+        assert_eq!(s.total_rows(), 1);
+        s.apply_batch(&batch("w", vec![SyncEntry { id: 7, op: SyncOp::Delete }])).unwrap();
+        assert_eq!(s.total_rows(), 0);
+        assert_eq!(s.metrics.deletes.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn replay_is_idempotent() {
+        let s = slave(0, 1);
+        let b = batch(
+            "v",
+            vec![SyncEntry { id: 9, op: SyncOp::Upsert(vec![0., 0., 1., 1., 0.5, -0.5]) }],
+        );
+        s.apply_batch(&b).unwrap();
+        let first = s
+            .sparse_pull(&SparsePull { model: "ctr".into(), table: "v".into(), ids: vec![9], slot: "w".into() })
+            .unwrap();
+        // Apply the same batch again (queue replay after downgrade).
+        s.apply_batch(&b).unwrap();
+        s.apply_batch(&b).unwrap();
+        let third = s
+            .sparse_pull(&SparsePull { model: "ctr".into(), table: "v".into(), ids: vec![9], slot: "w".into() })
+            .unwrap();
+        assert_eq!(first, third);
+        assert_eq!(s.total_rows(), 1);
+    }
+
+    #[test]
+    fn dense_sync_replaces_values() {
+        let s = slave(0, 1);
+        let mut b = batch("bias", vec![]);
+        b.dense = vec![0.75];
+        s.apply_batch(&b).unwrap();
+        let d = s
+            .dense_pull(&DensePull { model: "ctr".into(), table: "bias".into() })
+            .unwrap();
+        assert_eq!(d.values, vec![0.75]);
+        // Wrong length rejected.
+        b.dense = vec![1.0, 2.0];
+        assert!(s.apply_batch(&b).is_err());
+    }
+
+    #[test]
+    fn unhealthy_rejects_reads() {
+        let s = slave(0, 1);
+        s.set_healthy(false);
+        assert!(s
+            .sparse_pull(&SparsePull { model: "ctr".into(), table: "w".into(), ids: vec![1], slot: "w".into() })
+            .is_err());
+        s.set_healthy(true);
+        assert!(s
+            .sparse_pull(&SparsePull { model: "ctr".into(), table: "w".into(), ids: vec![1], slot: "w".into() })
+            .is_ok());
+    }
+
+    #[test]
+    fn full_sync_from_master_snapshot() {
+        use crate::config::{ModelKind, ModelSpec};
+        use crate::proto::SparsePush;
+        use crate::runtime::ModelConfig;
+        use crate::server::master::MasterShard;
+        use crate::util::clock::ManualClock;
+
+        let cfg = ModelConfig {
+            batch_train: 8,
+            batch_predict: 2,
+            fields: 4,
+            dim: 2,
+            hidden: 8,
+            ftrl_block_rows: 64,
+            ftrl_alpha: 0.05,
+            ftrl_beta: 1.0,
+            ftrl_l1: 1.0,
+            ftrl_l2: 1.0,
+        };
+        let spec = ModelSpec::derive("ctr", ModelKind::Fm, &cfg);
+        let master = MasterShard::new(
+            0,
+            spec,
+            None,
+            1,
+            Arc::new(ManualClock::new(0)),
+        )
+        .unwrap();
+        for i in 0..100u64 {
+            master
+                .sparse_push(&SparsePush {
+                    model: "ctr".into(),
+                    table: "w".into(),
+                    ids: vec![i],
+                    grads: vec![2.0], // |z| > l1 -> nonzero w
+                })
+                .unwrap();
+        }
+        let snap = master.snapshot();
+
+        // Two slave shards split the id space.
+        let s0 = slave(0, 2);
+        let s1 = slave(1, 2);
+        let l0 = s0.full_sync_from_snapshot(&snap).unwrap();
+        let l1 = s1.full_sync_from_snapshot(&snap).unwrap();
+        assert_eq!(l0 + l1, 100);
+        assert!(l0 > 20 && l1 > 20, "balance: {l0}/{l1}");
+        // Serving value matches the master's w slot.
+        let router = Router::new(2);
+        let id = (0..100).find(|i| router.shard_of(*i) == 0).unwrap();
+        let mw = master
+            .sparse_pull(&SparsePull { model: "ctr".into(), table: "w".into(), ids: vec![id], slot: "w".into() })
+            .unwrap();
+        let sw = s0
+            .sparse_pull(&SparsePull { model: "ctr".into(), table: "w".into(), ids: vec![id], slot: "w".into() })
+            .unwrap();
+        assert_eq!(mw.values, sw.values);
+        assert!(mw.values[0] != 0.0);
+    }
+
+    #[test]
+    fn clear_resets_state() {
+        let s = slave(0, 1);
+        s.apply_batch(&batch("w", vec![SyncEntry { id: 1, op: SyncOp::Upsert(vec![0., 0., 0.1]) }]))
+            .unwrap();
+        let mut b = batch("bias", vec![]);
+        b.dense = vec![0.9];
+        s.apply_batch(&b).unwrap();
+        s.clear();
+        assert_eq!(s.total_rows(), 0);
+        let d = s.dense_pull(&DensePull { model: "ctr".into(), table: "bias".into() }).unwrap();
+        assert_eq!(d.values, vec![0.0]);
+    }
+}

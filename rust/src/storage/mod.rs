@@ -1,0 +1,338 @@
+//! Hierarchical checkpoint storage (§4.2.1: cold backup of fault tolerance).
+//!
+//! Two tiers, as the paper prescribes: a fast **local** tier (sub-hourly
+//! save intervals) and a slower **remote** tier (hourly/daily), here two
+//! directory roots — the remote root stands in for HDFS/object storage and
+//! is replicated to asynchronously.
+//!
+//! Layout:  `<root>/<model>/v<version>/shard_<i>.ckpt` + `manifest.json`.
+//! Shard files are CRC-framed (`codec::frame`) so torn writes are detected;
+//! writes go through a temp file + atomic rename. The manifest records the
+//! external-queue offsets at checkpoint time — the hook the domino
+//! downgrade uses to resume streaming after a rollback (§4.3.2).
+
+use std::path::{Path, PathBuf};
+
+use crate::codec::{frame, unframe};
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Per-checkpoint metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CkptManifest {
+    pub model: String,
+    pub version: u64,
+    pub created_ms: u64,
+    pub num_shards: u32,
+    /// Queue offset per sync partition at checkpoint time.
+    pub queue_offsets: Vec<u64>,
+    /// Business metric snapshot (streaming AUC) — the downgrade's "optimal
+    /// index version strategy" picks by this.
+    pub metric: f64,
+}
+
+impl CkptManifest {
+    fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("model".into(), Json::Str(self.model.clone()));
+        m.insert("version".into(), Json::Num(self.version as f64));
+        m.insert("created_ms".into(), Json::Num(self.created_ms as f64));
+        m.insert("num_shards".into(), Json::Num(self.num_shards as f64));
+        m.insert(
+            "queue_offsets".into(),
+            Json::Arr(self.queue_offsets.iter().map(|o| Json::Num(*o as f64)).collect()),
+        );
+        m.insert("metric".into(), Json::Num(self.metric));
+        Json::Obj(m)
+    }
+
+    fn from_json(j: &Json) -> Result<CkptManifest> {
+        let field = |k: &str| {
+            j.get(k)
+                .ok_or_else(|| Error::Checkpoint(format!("manifest missing {k}")))
+        };
+        Ok(CkptManifest {
+            model: field("model")?.as_str().unwrap_or_default().to_string(),
+            version: field("version")?.as_i64().unwrap_or(0) as u64,
+            created_ms: field("created_ms")?.as_i64().unwrap_or(0) as u64,
+            num_shards: field("num_shards")?.as_i64().unwrap_or(0) as u32,
+            queue_offsets: field("queue_offsets")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|v| v.as_i64().unwrap_or(0) as u64)
+                .collect(),
+            metric: field("metric")?.as_f64().unwrap_or(0.0),
+        })
+    }
+}
+
+/// Two-tier checkpoint store.
+pub struct CheckpointStore {
+    local: PathBuf,
+    remote: Option<PathBuf>,
+}
+
+impl CheckpointStore {
+    /// Store rooted at `local`, optionally replicating to `remote`.
+    pub fn new(local: impl Into<PathBuf>, remote: Option<PathBuf>) -> CheckpointStore {
+        CheckpointStore { local: local.into(), remote }
+    }
+
+    fn version_dir(root: &Path, model: &str, version: u64) -> PathBuf {
+        root.join(model).join(format!("v{version:010}"))
+    }
+
+    fn shard_path(root: &Path, model: &str, version: u64, shard: u32) -> PathBuf {
+        Self::version_dir(root, model, version).join(format!("shard_{shard}.ckpt"))
+    }
+
+    /// Atomically write one shard's serialized state.
+    pub fn save_shard(&self, model: &str, version: u64, shard: u32, data: &[u8]) -> Result<()> {
+        let path = Self::shard_path(&self.local, model, version, shard);
+        std::fs::create_dir_all(path.parent().unwrap())?;
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, frame(data))?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(())
+    }
+
+    /// Load one shard's state (CRC-verified).
+    pub fn load_shard(&self, model: &str, version: u64, shard: u32) -> Result<Vec<u8>> {
+        self.load_shard_from(&self.local, model, version, shard)
+            .or_else(|e| match &self.remote {
+                Some(remote) => self.load_shard_from(remote, model, version, shard),
+                None => Err(e),
+            })
+    }
+
+    fn load_shard_from(&self, root: &Path, model: &str, version: u64, shard: u32) -> Result<Vec<u8>> {
+        let path = Self::shard_path(root, model, version, shard);
+        let bytes = std::fs::read(&path)
+            .map_err(|e| Error::Checkpoint(format!("{}: {e}", path.display())))?;
+        match unframe(&bytes)? {
+            Some((payload, used)) if used == bytes.len() => Ok(payload.to_vec()),
+            _ => Err(Error::Checkpoint(format!("{}: truncated", path.display()))),
+        }
+    }
+
+    /// Finalize a checkpoint: write its manifest (makes it visible).
+    pub fn write_manifest(&self, m: &CkptManifest) -> Result<()> {
+        let dir = Self::version_dir(&self.local, &m.model, m.version);
+        std::fs::create_dir_all(&dir)?;
+        let tmp = dir.join("manifest.json.tmp");
+        std::fs::write(&tmp, m.to_json().to_string())?;
+        std::fs::rename(tmp, dir.join("manifest.json"))?;
+        Ok(())
+    }
+
+    /// Read a checkpoint's manifest.
+    pub fn load_manifest(&self, model: &str, version: u64) -> Result<CkptManifest> {
+        for root in std::iter::once(&self.local).chain(self.remote.iter()) {
+            let path = Self::version_dir(root, model, version).join("manifest.json");
+            if let Ok(text) = std::fs::read_to_string(&path) {
+                return CkptManifest::from_json(&Json::parse(&text)?);
+            }
+        }
+        Err(Error::Checkpoint(format!("{model} v{version}: no manifest")))
+    }
+
+    /// All finalized versions (ascending) visible for `model`.
+    pub fn list_versions(&self, model: &str) -> Vec<u64> {
+        let mut versions = std::collections::BTreeSet::new();
+        for root in std::iter::once(&self.local).chain(self.remote.iter()) {
+            let dir = root.join(model);
+            let Ok(entries) = std::fs::read_dir(&dir) else { continue };
+            for e in entries.flatten() {
+                let name = e.file_name().to_string_lossy().into_owned();
+                if let Some(v) = name.strip_prefix('v').and_then(|s| s.parse::<u64>().ok()) {
+                    if e.path().join("manifest.json").exists() {
+                        versions.insert(v);
+                    }
+                }
+            }
+        }
+        versions.into_iter().collect()
+    }
+
+    /// Latest finalized version.
+    pub fn latest_version(&self, model: &str) -> Option<u64> {
+        self.list_versions(model).into_iter().last()
+    }
+
+    /// Copy a finalized checkpoint to the remote tier (the hourly/daily
+    /// backup). No-op without a remote root.
+    pub fn replicate_to_remote(&self, model: &str, version: u64) -> Result<()> {
+        let Some(remote) = &self.remote else { return Ok(()) };
+        let src = Self::version_dir(&self.local, model, version);
+        let dst = Self::version_dir(remote, model, version);
+        std::fs::create_dir_all(&dst)?;
+        for entry in std::fs::read_dir(&src)? {
+            let entry = entry?;
+            if entry.path().extension().map(|e| e == "tmp").unwrap_or(false) {
+                continue;
+            }
+            std::fs::copy(entry.path(), dst.join(entry.file_name()))?;
+        }
+        Ok(())
+    }
+
+    /// Keep the newest `keep` local versions, delete the rest. Returns the
+    /// removed versions. Remote tier is never GC'd here.
+    pub fn gc_local(&self, model: &str, keep: usize) -> Result<Vec<u64>> {
+        let versions = self.list_local_versions(model);
+        if versions.len() <= keep {
+            return Ok(Vec::new());
+        }
+        let cut = versions.len() - keep;
+        let mut removed = Vec::new();
+        for v in &versions[..cut] {
+            std::fs::remove_dir_all(Self::version_dir(&self.local, model, *v))?;
+            removed.push(*v);
+        }
+        Ok(removed)
+    }
+
+    fn list_local_versions(&self, model: &str) -> Vec<u64> {
+        let mut versions = Vec::new();
+        let dir = self.local.join(model);
+        let Ok(entries) = std::fs::read_dir(&dir) else { return versions };
+        for e in entries.flatten() {
+            let name = e.file_name().to_string_lossy().into_owned();
+            if let Some(v) = name.strip_prefix('v').and_then(|s| s.parse::<u64>().ok()) {
+                if e.path().join("manifest.json").exists() {
+                    versions.push(v);
+                }
+            }
+        }
+        versions.sort();
+        versions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_store(remote: bool) -> (CheckpointStore, PathBuf) {
+        let base = std::env::temp_dir().join(format!(
+            "weips-ckpt-{}-{:x}",
+            std::process::id(),
+            crate::util::mono_ns()
+        ));
+        let local = base.join("local");
+        let remote_dir = remote.then(|| base.join("remote"));
+        std::fs::create_dir_all(&local).unwrap();
+        if let Some(r) = &remote_dir {
+            std::fs::create_dir_all(r).unwrap();
+        }
+        (CheckpointStore::new(local, remote_dir), base)
+    }
+
+    fn manifest(v: u64, shards: u32) -> CkptManifest {
+        CkptManifest {
+            model: "ctr".into(),
+            version: v,
+            created_ms: 123,
+            num_shards: shards,
+            queue_offsets: vec![10, 20],
+            metric: 0.75,
+        }
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let (s, base) = tmp_store(false);
+        s.save_shard("ctr", 1, 0, b"shard-zero").unwrap();
+        s.save_shard("ctr", 1, 1, b"shard-one").unwrap();
+        s.write_manifest(&manifest(1, 2)).unwrap();
+        assert_eq!(s.load_shard("ctr", 1, 0).unwrap(), b"shard-zero");
+        assert_eq!(s.load_shard("ctr", 1, 1).unwrap(), b"shard-one");
+        let m = s.load_manifest("ctr", 1).unwrap();
+        assert_eq!(m, manifest(1, 2));
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let (s, base) = tmp_store(false);
+        s.save_shard("ctr", 1, 0, b"data-to-corrupt").unwrap();
+        // Flip a byte on disk.
+        let path = base
+            .join("local/ctr/v0000000001/shard_0.ckpt");
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&path, bytes).unwrap();
+        assert!(s.load_shard("ctr", 1, 0).is_err());
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn versions_listed_only_when_finalized() {
+        let (s, base) = tmp_store(false);
+        s.save_shard("ctr", 1, 0, b"x").unwrap();
+        // No manifest yet: not visible.
+        assert!(s.list_versions("ctr").is_empty());
+        s.write_manifest(&manifest(1, 1)).unwrap();
+        s.save_shard("ctr", 3, 0, b"y").unwrap();
+        s.write_manifest(&manifest(3, 1)).unwrap();
+        assert_eq!(s.list_versions("ctr"), vec![1, 3]);
+        assert_eq!(s.latest_version("ctr"), Some(3));
+        assert_eq!(s.latest_version("other"), None);
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn remote_tier_fallback() {
+        let (s, base) = tmp_store(true);
+        s.save_shard("ctr", 1, 0, b"payload").unwrap();
+        s.write_manifest(&manifest(1, 1)).unwrap();
+        s.replicate_to_remote("ctr", 1).unwrap();
+        // Simulate local disk loss.
+        std::fs::remove_dir_all(base.join("local/ctr")).unwrap();
+        assert_eq!(s.load_shard("ctr", 1, 0).unwrap(), b"payload");
+        assert_eq!(s.load_manifest("ctr", 1).unwrap().version, 1);
+        assert_eq!(s.list_versions("ctr"), vec![1]);
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn gc_keeps_newest_local_only() {
+        let (s, base) = tmp_store(true);
+        for v in 1..=5 {
+            s.save_shard("ctr", v, 0, b"d").unwrap();
+            s.write_manifest(&manifest(v, 1)).unwrap();
+            s.replicate_to_remote("ctr", v).unwrap();
+        }
+        let removed = s.gc_local("ctr", 2).unwrap();
+        assert_eq!(removed, vec![1, 2, 3]);
+        // Remote still has everything -> versions remain visible.
+        assert_eq!(s.list_versions("ctr"), vec![1, 2, 3, 4, 5]);
+        assert_eq!(s.load_shard("ctr", 1, 0).unwrap(), b"d");
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn missing_artifacts_error_cleanly() {
+        let (s, base) = tmp_store(false);
+        assert!(s.load_shard("nope", 1, 0).is_err());
+        assert!(s.load_manifest("nope", 1).is_err());
+        assert!(s.list_versions("nope").is_empty());
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn manifest_queue_offsets_round_trip() {
+        // The downgrade path depends on offsets surviving the round trip.
+        let (s, base) = tmp_store(false);
+        let mut m = manifest(7, 4);
+        m.queue_offsets = vec![0, u32::MAX as u64 + 5, 42, 1];
+        m.metric = 0.812345;
+        s.write_manifest(&m).unwrap();
+        let back = s.load_manifest("ctr", 7).unwrap();
+        assert_eq!(back.queue_offsets, m.queue_offsets);
+        assert!((back.metric - m.metric).abs() < 1e-12);
+        std::fs::remove_dir_all(base).ok();
+    }
+}

@@ -1,0 +1,127 @@
+//! Collector (§4.1.1): lock-free capture of dirty parameter ids.
+//!
+//! "After receiving the push request from the client, the model collects
+//! the parameters in real-time and then writes them to the internal
+//! lock-free cache queue. To save memory space for the sparse model, the
+//! data collected at this time only include the collection ids and the
+//! operation type. This procedure does not retain the model increment."
+//!
+//! Exactly that: push handlers (any thread) record `(table, id, op)`
+//! triples into a [`LockFreeQueue`]; the gather thread drains and dedups.
+//! Values are *not* captured here — gather reads the current row state at
+//! flush time, which is what makes replay idempotent (§4.1d).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::LockFreeQueue;
+
+/// What happened to the id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DirtyOp {
+    /// Row updated (gather will snapshot its full current value).
+    Update,
+    /// Row deleted (feature filter eviction).
+    Delete,
+}
+
+/// One dirty event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DirtyEvent {
+    /// Index into the model spec's sparse-table list.
+    pub table: u16,
+    pub id: u64,
+    pub op: DirtyOp,
+}
+
+/// Lock-free dirty-id collector for one master shard.
+#[derive(Default)]
+pub struct Collector {
+    queue: LockFreeQueue<DirtyEvent>,
+    recorded: AtomicU64,
+}
+
+impl Collector {
+    /// Empty collector.
+    pub fn new() -> Collector {
+        Collector { queue: LockFreeQueue::new(), recorded: AtomicU64::new(0) }
+    }
+
+    /// Record updated ids for a table (called from push handlers).
+    pub fn record_updates(&self, table: u16, ids: &[u64]) {
+        for &id in ids {
+            self.queue.push(DirtyEvent { table, id, op: DirtyOp::Update });
+        }
+        self.recorded.fetch_add(ids.len() as u64, Ordering::Relaxed);
+    }
+
+    /// Record deleted ids for a table (feature expire).
+    pub fn record_deletes(&self, table: u16, ids: &[u64]) {
+        for &id in ids {
+            self.queue.push(DirtyEvent { table, id, op: DirtyOp::Delete });
+        }
+        self.recorded.fetch_add(ids.len() as u64, Ordering::Relaxed);
+    }
+
+    /// Drain all pending events into `out` (single consumer: the gather
+    /// thread). Returns the number drained.
+    pub fn drain(&self, out: &mut Vec<DirtyEvent>) -> usize {
+        self.queue.drain_into(out)
+    }
+
+    /// Events currently queued (approximate).
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Total events ever recorded (the raw update stream size — numerator
+    /// of the E2 repetition-rate measurement).
+    pub fn total_recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn records_and_drains_in_order() {
+        let c = Collector::new();
+        c.record_updates(0, &[1, 2]);
+        c.record_deletes(1, &[3]);
+        let mut out = Vec::new();
+        assert_eq!(c.drain(&mut out), 3);
+        assert_eq!(
+            out,
+            vec![
+                DirtyEvent { table: 0, id: 1, op: DirtyOp::Update },
+                DirtyEvent { table: 0, id: 2, op: DirtyOp::Update },
+                DirtyEvent { table: 1, id: 3, op: DirtyOp::Delete },
+            ]
+        );
+        assert_eq!(c.total_recorded(), 3);
+        assert_eq!(c.pending(), 0);
+    }
+
+    #[test]
+    fn concurrent_pushers_lose_nothing() {
+        let c = Arc::new(Collector::new());
+        let mut handles = Vec::new();
+        for t in 0..4u16 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..5_000u64 {
+                    c.record_updates(t, &[i]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut out = Vec::new();
+        c.drain(&mut out);
+        assert_eq!(out.len(), 20_000);
+        assert_eq!(c.total_recorded(), 20_000);
+    }
+}

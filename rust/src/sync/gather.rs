@@ -1,0 +1,377 @@
+//! Gather (§4.1.2): drain the collector, dedup dirty ids, snapshot their
+//! current values, and emit sync batches per the configured mode.
+//!
+//! Three gather frequencies, exactly as the paper enumerates:
+//! - **real-time**: flush on every poll that finds events (freshest,
+//!   highest bandwidth);
+//! - **threshold**: flush when the distinct dirty-id count reaches N;
+//! - **period**: flush every P ms.
+//!
+//! Dedup is the bandwidth lever: the paper measured that "the repetition
+//! rate of model parameters updates within 10 seconds reach 90 %", so a
+//! windowed gather sends one full-value record per id regardless of how
+//! many times it changed (§4.1d's ID-granularity eventual consistency).
+//! [`GatherStats`] records raw vs deduped counts — experiment E2.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::config::GatherMode;
+use crate::proto::{SyncBatch, SyncEntry, SyncOp};
+use crate::server::master::MasterShard;
+use crate::sync::collector::{DirtyEvent, DirtyOp};
+use crate::util::clock::Clock;
+use crate::util::hash::FxHashMap;
+
+/// Bandwidth/dedup accounting (E2).
+#[derive(Debug, Default)]
+pub struct GatherStats {
+    /// Raw dirty events drained from the collector.
+    pub raw_events: AtomicU64,
+    /// Entries actually emitted after windowed dedup.
+    pub emitted_entries: AtomicU64,
+    /// Batches emitted.
+    pub batches: AtomicU64,
+    /// Flush polls that found nothing.
+    pub empty_polls: AtomicU64,
+}
+
+impl GatherStats {
+    /// Fraction of raw updates suppressed by dedup (the paper's
+    /// repetition rate). 0 when nothing was recorded.
+    pub fn repetition_rate(&self) -> f64 {
+        let raw = self.raw_events.load(Ordering::Relaxed) as f64;
+        let emitted = self.emitted_entries.load(Ordering::Relaxed) as f64;
+        if raw == 0.0 {
+            0.0
+        } else {
+            1.0 - emitted / raw
+        }
+    }
+}
+
+/// The gather worker for one master shard. Call [`Gather::poll`] from the
+/// shard's sync thread; it returns the batches to hand to the pusher.
+pub struct Gather {
+    master: Arc<MasterShard>,
+    mode: GatherMode,
+    clock: Arc<dyn Clock>,
+    /// Dirty window: table -> id -> latest op.
+    window: BTreeMap<u16, FxHashMap<u64, DirtyOp>>,
+    window_distinct: usize,
+    last_flush_ms: u64,
+    scratch: Vec<DirtyEvent>,
+    seq: u64,
+    pub stats: GatherStats,
+}
+
+impl Gather {
+    /// New gather worker.
+    pub fn new(master: Arc<MasterShard>, mode: GatherMode, clock: Arc<dyn Clock>) -> Gather {
+        let now = clock.now_ms();
+        Gather {
+            master,
+            mode,
+            clock,
+            window: BTreeMap::new(),
+            window_distinct: 0,
+            last_flush_ms: now,
+            scratch: Vec::new(),
+            seq: 0,
+            stats: GatherStats::default(),
+        }
+    }
+
+    /// Drain newly collected events into the dedup window.
+    fn absorb(&mut self) {
+        self.scratch.clear();
+        let drained = self.master.collector().drain(&mut self.scratch);
+        if drained == 0 {
+            return;
+        }
+        self.stats.raw_events.fetch_add(drained as u64, Ordering::Relaxed);
+        for ev in &self.scratch {
+            let table = self.window.entry(ev.table).or_default();
+            // Last op wins within the window (delete after update = delete;
+            // update after delete = update with the new full value).
+            if table.insert(ev.id, ev.op).is_none() {
+                self.window_distinct += 1;
+            }
+        }
+    }
+
+    fn should_flush(&self, now: u64) -> bool {
+        if self.window_distinct == 0 {
+            return false;
+        }
+        match self.mode {
+            GatherMode::Realtime => true,
+            GatherMode::Threshold(n) => self.window_distinct >= n,
+            GatherMode::Period(ms) => now.saturating_sub(self.last_flush_ms) >= ms,
+        }
+    }
+
+    /// Poll once: absorb events and flush if the mode says so. Returns the
+    /// emitted batches (possibly empty).
+    pub fn poll(&mut self) -> Vec<SyncBatch> {
+        self.absorb();
+        let now = self.clock.now_ms();
+        let mut out = Vec::new();
+        if self.should_flush(now) {
+            out = self.flush(now);
+        } else {
+            self.stats.empty_polls.fetch_add(1, Ordering::Relaxed);
+        }
+        // Dense tables piggyback on any flush tick in period/threshold
+        // mode and on every poll in realtime mode. Only the dense-owner
+        // shard (0) emits them — other shards' dense copies are never
+        // pushed to and would overwrite the trained state out of order.
+        if self.master.shard_id == 0
+            && (!out.is_empty() || matches!(self.mode, GatherMode::Realtime))
+        {
+            for (_, name, values) in self.master.dense_changed_since_sync() {
+                self.seq += 1;
+                out.push(SyncBatch {
+                    model: self.master.spec.name.clone(),
+                    table: name,
+                    shard: self.master.shard_id,
+                    seq: self.seq,
+                    created_ms: now,
+                    entries: Vec::new(),
+                    dense: values,
+                });
+            }
+        }
+        out
+    }
+
+    /// Force a flush regardless of mode (used at shutdown / tests).
+    pub fn flush_now(&mut self) -> Vec<SyncBatch> {
+        self.absorb();
+        let now = self.clock.now_ms();
+        let mut out = self.flush(now);
+        if self.master.shard_id != 0 {
+            return out;
+        }
+        for (_, name, values) in self.master.dense_changed_since_sync() {
+            self.seq += 1;
+            out.push(SyncBatch {
+                model: self.master.spec.name.clone(),
+                table: name,
+                shard: self.master.shard_id,
+                seq: self.seq,
+                created_ms: now,
+                entries: Vec::new(),
+                dense: values,
+            });
+        }
+        out
+    }
+
+    fn flush(&mut self, now: u64) -> Vec<SyncBatch> {
+        let mut batches = Vec::new();
+        let window = std::mem::take(&mut self.window);
+        self.window_distinct = 0;
+        self.last_flush_ms = now;
+        for (table_idx, ids) in window {
+            let table_name = self.master.spec.sparse[table_idx as usize].name.clone();
+            let mut upsert_ids = Vec::new();
+            let mut entries = Vec::new();
+            for (id, op) in &ids {
+                match op {
+                    DirtyOp::Update => upsert_ids.push(*id),
+                    DirtyOp::Delete => entries.push(SyncEntry { id: *id, op: SyncOp::Delete }),
+                }
+            }
+            // Snapshot current full values (not increments): replay-safe.
+            for (id, row) in self.master.read_rows_for_sync(table_idx, &upsert_ids) {
+                match row {
+                    Some(values) => entries.push(SyncEntry { id, op: SyncOp::Upsert(values) }),
+                    // Row vanished between update and flush (expired):
+                    // propagate as delete.
+                    None => entries.push(SyncEntry { id, op: SyncOp::Delete }),
+                }
+            }
+            if entries.is_empty() {
+                continue;
+            }
+            self.stats
+                .emitted_entries
+                .fetch_add(entries.len() as u64, Ordering::Relaxed);
+            self.stats.batches.fetch_add(1, Ordering::Relaxed);
+            self.seq += 1;
+            batches.push(SyncBatch {
+                model: self.master.spec.name.clone(),
+                table: table_name,
+                shard: self.master.shard_id,
+                seq: self.seq,
+                created_ms: now,
+                entries,
+                dense: Vec::new(),
+            });
+        }
+        batches
+    }
+
+    /// Distinct ids currently pending in the window.
+    pub fn pending_distinct(&self) -> usize {
+        self.window_distinct
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelKind, ModelSpec};
+    use crate::proto::SparsePush;
+    use crate::runtime::ModelConfig;
+    use crate::util::clock::ManualClock;
+
+    fn master() -> (Arc<MasterShard>, ManualClock) {
+        let cfg = ModelConfig {
+            batch_train: 8,
+            batch_predict: 2,
+            fields: 4,
+            dim: 2,
+            hidden: 8,
+            ftrl_block_rows: 64,
+            ftrl_alpha: 0.05,
+            ftrl_beta: 1.0,
+            ftrl_l1: 1.0,
+            ftrl_l2: 1.0,
+        };
+        let spec = ModelSpec::derive("ctr", ModelKind::Fm, &cfg);
+        let clock = ManualClock::new(0);
+        (
+            Arc::new(MasterShard::new(0, spec, None, 1, Arc::new(clock.clone())).unwrap()),
+            clock,
+        )
+    }
+
+    fn push(m: &MasterShard, ids: Vec<u64>) {
+        let grads = vec![2.0; ids.len()];
+        m.sparse_push(&SparsePush { model: "ctr".into(), table: "w".into(), ids, grads })
+            .unwrap();
+    }
+
+    #[test]
+    fn realtime_flushes_every_poll() {
+        let (m, clock) = master();
+        let mut g = Gather::new(m.clone(), GatherMode::Realtime, Arc::new(clock.clone()));
+        let _ = g.poll(); // initial dense sync
+        push(&m, vec![1, 2]);
+        let batches = g.poll();
+        let sparse: Vec<&SyncBatch> = batches.iter().filter(|b| b.table == "w").collect();
+        assert_eq!(sparse.len(), 1);
+        assert_eq!(sparse[0].entries.len(), 2);
+        // Values are full rows (z, n, w).
+        for e in &sparse[0].entries {
+            match &e.op {
+                SyncOp::Upsert(v) => assert_eq!(v.len(), 3),
+                _ => panic!("expected upsert"),
+            }
+        }
+        assert!(g.poll().iter().all(|b| b.table != "w")); // drained
+    }
+
+    #[test]
+    fn threshold_mode_waits_for_n_distinct() {
+        let (m, clock) = master();
+        let mut g = Gather::new(m.clone(), GatherMode::Threshold(3), Arc::new(clock.clone()));
+        push(&m, vec![1]);
+        push(&m, vec![1]); // repeat: still 1 distinct
+        assert!(g.poll().is_empty());
+        assert_eq!(g.pending_distinct(), 1);
+        push(&m, vec![2]);
+        assert!(g.poll().is_empty());
+        push(&m, vec![3]);
+        let batches = g.poll();
+        assert_eq!(batches.iter().filter(|b| b.table == "w").count(), 1);
+        let b = batches.iter().find(|b| b.table == "w").unwrap();
+        assert_eq!(b.entries.len(), 3);
+        // Dedup accounting: 4 raw events, 3 emitted.
+        assert_eq!(g.stats.raw_events.load(Ordering::Relaxed), 4);
+        assert_eq!(g.stats.emitted_entries.load(Ordering::Relaxed), 3);
+        assert!(g.stats.repetition_rate() > 0.24 && g.stats.repetition_rate() < 0.26);
+    }
+
+    #[test]
+    fn period_mode_flushes_on_time() {
+        let (m, clock) = master();
+        let mut g = Gather::new(m.clone(), GatherMode::Period(1_000), Arc::new(clock.clone()));
+        push(&m, vec![1, 2, 3]);
+        assert!(g.poll().is_empty());
+        clock.advance(999);
+        assert!(g.poll().is_empty());
+        clock.advance(2);
+        let batches = g.poll();
+        assert_eq!(batches.iter().filter(|b| b.table == "w").count(), 1);
+    }
+
+    #[test]
+    fn window_dedups_repeated_ids() {
+        let (m, clock) = master();
+        let mut g = Gather::new(m.clone(), GatherMode::Period(100), Arc::new(clock.clone()));
+        for _ in 0..50 {
+            push(&m, vec![7]);
+        }
+        clock.advance(200);
+        let batches = g.poll();
+        let b = batches.iter().find(|b| b.table == "w").unwrap();
+        assert_eq!(b.entries.len(), 1); // one full-value record for id 7
+        assert!(g.stats.repetition_rate() > 0.97);
+    }
+
+    #[test]
+    fn delete_after_update_wins() {
+        let (m, clock) = master();
+        let mut g = Gather::new(m.clone(), GatherMode::Period(10), Arc::new(clock.clone()));
+        push(&m, vec![5]);
+        // Manually record a delete (as feature-expire would).
+        m.collector().record_deletes(0, &[5]);
+        clock.advance(20);
+        let batches = g.poll();
+        let b = batches.iter().find(|b| b.table == "w").unwrap();
+        assert_eq!(b.entries.len(), 1);
+        assert!(matches!(b.entries[0].op, SyncOp::Delete));
+    }
+
+    #[test]
+    fn dense_changes_emit_snapshot_batches() {
+        use crate::proto::DenseValues;
+        let (m, clock) = master();
+        let mut g = Gather::new(m.clone(), GatherMode::Realtime, Arc::new(clock.clone()));
+        let first = g.poll(); // initial dense state
+        assert!(first.iter().any(|b| b.table == "bias" && !b.dense.is_empty()));
+        assert!(g.poll().is_empty());
+        m.dense_push(&DenseValues { model: "ctr".into(), table: "bias".into(), values: vec![1.0] })
+            .unwrap();
+        let after = g.poll();
+        assert!(after.iter().any(|b| b.table == "bias"));
+    }
+
+    #[test]
+    fn flush_now_forces_pending_out() {
+        let (m, clock) = master();
+        let mut g = Gather::new(m.clone(), GatherMode::Threshold(1_000_000), Arc::new(clock.clone()));
+        push(&m, vec![1]);
+        assert!(g.poll().is_empty());
+        let batches = g.flush_now();
+        assert!(batches.iter().any(|b| b.table == "w"));
+    }
+
+    #[test]
+    fn seq_is_monotonic_per_shard() {
+        let (m, clock) = master();
+        let mut g = Gather::new(m.clone(), GatherMode::Realtime, Arc::new(clock.clone()));
+        let mut last = 0;
+        for round in 0..5 {
+            push(&m, vec![round]);
+            for b in g.poll() {
+                assert!(b.seq > last, "seq regressed");
+                last = b.seq;
+            }
+        }
+    }
+}

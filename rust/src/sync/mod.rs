@@ -1,0 +1,27 @@
+//! Streaming synchronization (§4.1): the paper's core mechanism.
+//!
+//! ```text
+//!  master push path          sync pipeline                 slave serve path
+//!  ───────────────  ┌───────────────────────────────────┐  ───────────────
+//!  optimizer apply ─► collector ─► gather ─► pusher ─► queue ─► scatter ─►
+//!  (dirty ids)        lock-free    dedup +    serialize  parts   route +
+//!                     id queue     snapshot   compress           transform
+//! ```
+//!
+//! Eventual consistency contract (§4.1d): every upsert carries the id's
+//! *full current value* (never a delta), so batches are idempotent and
+//! replayable from any checkpoint-recorded offset.
+
+pub mod collector;
+pub mod gather;
+pub mod pusher;
+pub mod router;
+pub mod scatter;
+pub mod transform;
+
+pub use collector::{Collector, DirtyEvent, DirtyOp};
+pub use gather::{Gather, GatherStats};
+pub use pusher::{Pusher, PusherStats};
+pub use router::Router;
+pub use scatter::{Scatter, ScatterStats};
+pub use transform::{EmbeddingOnly, FullRows, ServingWeights, Transform};

@@ -1,0 +1,180 @@
+//! Pusher (§4.1.3): serialize + compress gathered batches and append them
+//! to the external queue partition mapped from this master shard's id.
+//!
+//! "We combine the concept of fragmentation of the external queue with the
+//! fragmentation mechanism of the Parameter Server ... performing the
+//! partition mapping according to the server-id before sending."
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::codec::{maybe_compress, Encode};
+use crate::proto::SyncBatch;
+use crate::queue::log::SyncLog;
+use crate::sync::router::partition_of_shard;
+use crate::Result;
+
+/// Bandwidth accounting (E1/E2).
+#[derive(Debug, Default)]
+pub struct PusherStats {
+    pub batches: AtomicU64,
+    pub bytes_raw: AtomicU64,
+    pub bytes_on_wire: AtomicU64,
+}
+
+impl PusherStats {
+    /// Compression ratio achieved (1.0 = no win).
+    pub fn compression_ratio(&self) -> f64 {
+        let raw = self.bytes_raw.load(Ordering::Relaxed) as f64;
+        let wire = self.bytes_on_wire.load(Ordering::Relaxed) as f64;
+        if wire == 0.0 {
+            1.0
+        } else {
+            raw / wire
+        }
+    }
+}
+
+/// Pushes one master shard's batches into its queue partition.
+pub struct Pusher {
+    log: Arc<dyn SyncLog>,
+    partition: u32,
+    /// Compress payloads before queueing (§4.1.3). Deflate costs ~1 ms per
+    /// 400 KiB batch on this testbed — a latency/bandwidth knob; set
+    /// WEIPS_SYNC_COMPRESS=0 for latency-critical deployments
+    /// (EXPERIMENTS.md §Perf ablation).
+    compress: bool,
+    pub stats: PusherStats,
+}
+
+impl Pusher {
+    /// Pusher for `master_shard` onto `log`.
+    pub fn new(log: Arc<dyn SyncLog>, master_shard: u32) -> Pusher {
+        let partition = partition_of_shard(master_shard, log.partition_count() as u32);
+        let compress = std::env::var("WEIPS_SYNC_COMPRESS").map(|v| v != "0").unwrap_or(true);
+        Pusher { log, partition, compress, stats: PusherStats::default() }
+    }
+
+    /// The partition this pusher appends to.
+    pub fn partition(&self) -> u32 {
+        self.partition
+    }
+
+    /// Serialize, compress and enqueue one batch; returns its offset.
+    ///
+    /// Sparse batches go to this shard's mapped partition; dense-table
+    /// snapshots are broadcast to *every* partition — each slave shard
+    /// subscribes to a partition subset but all of them serve the dense
+    /// tower, so a single-partition dense record would never reach some
+    /// shards.
+    pub fn push(&self, batch: &SyncBatch) -> Result<u64> {
+        let raw = batch.to_bytes();
+        let wire = if self.compress {
+            maybe_compress(&raw)
+        } else {
+            // Stored-mode envelope (decompress() still decodes it).
+            let mut out = Vec::with_capacity(raw.len() + 1);
+            out.push(0); // CompressMode::None
+            out.extend_from_slice(&raw);
+            out
+        };
+        self.stats.batches.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes_raw.fetch_add(raw.len() as u64, Ordering::Relaxed);
+        if batch.dense.is_empty() {
+            self.stats.bytes_on_wire.fetch_add(wire.len() as u64, Ordering::Relaxed);
+            return self.log.append(self.partition, batch.created_ms, wire);
+        }
+        let mut last = 0;
+        for p in 0..self.log.partition_count() as u32 {
+            self.stats.bytes_on_wire.fetch_add(wire.len() as u64, Ordering::Relaxed);
+            last = self.log.append(p, batch.created_ms, wire.clone())?;
+        }
+        Ok(last)
+    }
+
+    /// Push a set of batches; returns the last offset written.
+    pub fn push_all(&self, batches: &[SyncBatch]) -> Result<Option<u64>> {
+        let mut last = None;
+        for b in batches {
+            last = Some(self.push(b)?);
+        }
+        Ok(last)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{decompress, Decode};
+    use crate::proto::{SyncEntry, SyncOp};
+    use crate::queue::Queue;
+
+    fn batch(shard: u32, n: usize) -> SyncBatch {
+        SyncBatch {
+            model: "ctr".into(),
+            table: "w".into(),
+            shard,
+            seq: 1,
+            created_ms: 42,
+            entries: (0..n as u64)
+                .map(|id| SyncEntry { id, op: SyncOp::Upsert(vec![0.1, 0.2, 0.3]) })
+                .collect(),
+            dense: vec![],
+        }
+    }
+
+    #[test]
+    fn push_routes_to_mapped_partition() {
+        let q = Queue::new(1 << 20);
+        let topic = q.create_topic("sync", 4).unwrap();
+        let p2 = Pusher::new(topic.clone(), 2);
+        let p6 = Pusher::new(topic.clone(), 6); // 6 % 4 = 2
+        assert_eq!(p2.partition(), 2);
+        assert_eq!(p6.partition(), 2);
+        p2.push(&batch(2, 3)).unwrap();
+        p6.push(&batch(6, 3)).unwrap();
+        assert_eq!(topic.partition(2).unwrap().latest_offset(), 2);
+        assert_eq!(topic.partition(0).unwrap().latest_offset(), 0);
+    }
+
+    #[test]
+    fn wire_payload_round_trips() {
+        let q = Queue::new(1 << 20);
+        let topic = q.create_topic("sync", 2).unwrap();
+        let pusher = Pusher::new(topic.clone(), 1);
+        let b = batch(1, 100);
+        let off = pusher.push(&b).unwrap();
+        let recs = topic
+            .partition(1)
+            .unwrap()
+            .fetch(off, 1, std::time::Duration::ZERO)
+            .unwrap();
+        let raw = decompress(&recs[0].payload).unwrap();
+        let back = SyncBatch::from_bytes(&raw).unwrap();
+        assert_eq!(back, b);
+    }
+
+    #[test]
+    fn compression_helps_on_repetitive_batches() {
+        let q = Queue::new(1 << 20);
+        let topic = q.create_topic("sync", 1).unwrap();
+        let pusher = Pusher::new(topic, 0);
+        pusher.push(&batch(0, 2_000)).unwrap();
+        assert!(
+            pusher.stats.compression_ratio() > 1.5,
+            "ratio {}",
+            pusher.stats.compression_ratio()
+        );
+    }
+
+    #[test]
+    fn push_all_returns_last_offset() {
+        let q = Queue::new(1 << 20);
+        let topic = q.create_topic("sync", 1).unwrap();
+        let pusher = Pusher::new(topic, 0);
+        assert_eq!(pusher.push_all(&[]).unwrap(), None);
+        let last = pusher.push_all(&[batch(0, 1), batch(0, 2), batch(0, 3)]).unwrap();
+        assert_eq!(last, Some(2));
+        assert_eq!(pusher.stats.batches.load(Ordering::Relaxed), 3);
+    }
+}

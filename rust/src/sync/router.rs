@@ -1,0 +1,247 @@
+//! Model routing: parameter-id → shard / partition mapping (§4.1.4a).
+//!
+//! Training traffic and inference traffic want different shard counts
+//! ("the resource requirements of the two situations is inconsistent"), so
+//! WeiPS lets every cluster pick its own count: ids hash-route onto M
+//! master shards, the pusher maps master shards onto P queue partitions,
+//! and each slave cluster with S shards routes the *same ids* onto its own
+//! S. The router also powers heterogeneous-cluster migration (§4.2.1d:
+//! "cluster A has 10 shards to cluster B has 20 shards").
+//!
+//! When `S` divides `M` and `P == M`, a slave shard only needs the
+//! partition subset `{p : p mod S == s}` — the paper's "specify certain
+//! partitions for consuming ... reducing bandwidth pressure"; otherwise it
+//! falls back to consuming all partitions and filtering by id.
+
+use crate::util::hash::fxhash64;
+
+/// Stateless router over a cluster size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Router {
+    shards: u32,
+}
+
+impl Router {
+    /// Router for a cluster of `shards` (>= 1).
+    pub fn new(shards: u32) -> Router {
+        assert!(shards >= 1, "cluster needs at least one shard");
+        Router { shards }
+    }
+
+    /// Shard count.
+    pub fn shards(&self) -> u32 {
+        self.shards
+    }
+
+    /// Owning shard for a parameter id.
+    #[inline]
+    pub fn shard_of(&self, id: u64) -> u32 {
+        (fxhash64(id) % self.shards as u64) as u32
+    }
+
+    /// Split `ids` into per-shard buckets; returns `(shard -> (positions,
+    /// ids))` so callers can reassemble responses in request order.
+    pub fn split_ids(&self, ids: &[u64]) -> Vec<(Vec<usize>, Vec<u64>)> {
+        let mut buckets: Vec<(Vec<usize>, Vec<u64>)> =
+            (0..self.shards).map(|_| (Vec::new(), Vec::new())).collect();
+        for (pos, &id) in ids.iter().enumerate() {
+            let s = self.shard_of(id) as usize;
+            buckets[s].0.push(pos);
+            buckets[s].1.push(id);
+        }
+        buckets
+    }
+}
+
+/// Master-shard → queue-partition mapping used by the pusher (§4.1.3:
+/// "performing the partition mapping according to the server-id").
+#[inline]
+pub fn partition_of_shard(master_shard: u32, partitions: u32) -> u32 {
+    master_shard % partitions
+}
+
+/// The partitions a slave shard must consume, given the master/partition/
+/// slave topology. Returns the reduced subset when the modulo structure
+/// allows it, else every partition (caller filters by id).
+pub fn partitions_for_slave(
+    master_shards: u32,
+    partitions: u32,
+    slave_shards: u32,
+    slave_shard: u32,
+) -> Vec<u32> {
+    debug_assert!(slave_shard < slave_shards);
+    if partitions == master_shards && master_shards % slave_shards == 0 {
+        // h % M known per partition p (= p since P == M); slave s needs
+        // ids with h % S == s, and S | M means h % S == (h % M) % S.
+        (0..partitions).filter(|p| p % slave_shards == slave_shard).collect()
+    } else {
+        (0..partitions).collect()
+    }
+}
+
+/// True when the reduced-subset optimization applies (used by metrics and
+/// the gather-bandwidth bench).
+pub fn partition_subset_applies(master_shards: u32, partitions: u32, slave_shards: u32) -> bool {
+    partitions == master_shards && master_shards % slave_shards == 0
+}
+
+/// Remap plan for migrating a model between clusters of different sizes
+/// (§4.2.1d). For each source shard, which destination shards its rows can
+/// land on — destination is still decided per id, this is the coarse plan
+/// used to parallelize the copy.
+pub fn migration_plan(src_shards: u32, dst_shards: u32) -> Vec<Vec<u32>> {
+    // Any src shard may contain ids for any dst shard in general; with the
+    // fxhash modulo scheme the only exploitable structure is divisibility.
+    let mut plan = Vec::with_capacity(src_shards as usize);
+    for _src in 0..src_shards {
+        if src_shards % dst_shards == 0 {
+            // Coarsening (e.g. 20 -> 10): each src maps into exactly one dst
+            // only when hashing is aligned, which per-id modulo does not
+            // guarantee; keep full fanout for correctness.
+            plan.push((0..dst_shards).collect());
+        } else {
+            plan.push((0..dst_shards).collect());
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, PairOf, U64Range, VecOf};
+
+    #[test]
+    fn shard_of_is_stable_and_bounded() {
+        let r = Router::new(8);
+        for id in 0..1000u64 {
+            let s = r.shard_of(id);
+            assert!(s < 8);
+            assert_eq!(s, r.shard_of(id));
+        }
+    }
+
+    #[test]
+    fn split_preserves_positions() {
+        let r = Router::new(4);
+        let ids = vec![10, 20, 30, 40, 50, 20];
+        let buckets = r.split_ids(&ids);
+        let mut seen = vec![false; ids.len()];
+        for (shard, (positions, bids)) in buckets.iter().enumerate() {
+            assert_eq!(positions.len(), bids.len());
+            for (pos, id) in positions.iter().zip(bids) {
+                assert_eq!(ids[*pos], *id);
+                assert_eq!(r.shard_of(*id), shard as u32);
+                seen[*pos] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every position routed exactly once");
+    }
+
+    #[test]
+    fn balance_is_reasonable() {
+        let r = Router::new(16);
+        let mut counts = vec![0usize; 16];
+        for id in 0..160_000u64 {
+            counts[r.shard_of(id) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 1_500.0, "count {c}");
+        }
+    }
+
+    #[test]
+    fn partition_subset_when_compatible() {
+        // M=8 masters, P=8 partitions, S=4 slaves: slave 1 reads {1, 5}.
+        assert_eq!(partitions_for_slave(8, 8, 4, 1), vec![1, 5]);
+        assert!(partition_subset_applies(8, 8, 4));
+        // Every partition covered exactly once across slaves.
+        let mut all: Vec<u32> = (0..4).flat_map(|s| partitions_for_slave(8, 8, 4, s)).collect();
+        all.sort();
+        assert_eq!(all, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn partition_fallback_when_incompatible() {
+        // S does not divide M -> read everything.
+        assert_eq!(partitions_for_slave(8, 8, 3, 0), (0..8).collect::<Vec<_>>());
+        assert!(!partition_subset_applies(8, 8, 3));
+        // P != M -> read everything.
+        assert_eq!(partitions_for_slave(8, 4, 4, 2), (0..4).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn subset_routing_is_correct_not_just_covering() {
+        // Ids routed to slave shard s must only appear in partitions the
+        // subset rule assigns to s.
+        let (m, p, s_cnt) = (12u32, 12u32, 4u32);
+        let master = Router::new(m);
+        let slave = Router::new(s_cnt);
+        for id in 0..50_000u64 {
+            let part = partition_of_shard(master.shard_of(id), p);
+            let s = slave.shard_of(id);
+            let subset = partitions_for_slave(m, p, s_cnt, s);
+            assert!(
+                subset.contains(&part),
+                "id {id}: partition {part} not in slave {s}'s subset {subset:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_routing_is_total_partition() {
+        // Every id lands on exactly one shard for any cluster size.
+        check(
+            "routing-total",
+            &PairOf(U64Range(1, 64), VecOf(U64Range(0, u64::MAX - 1), 128)),
+            300,
+            |(shards, ids)| {
+                let r = Router::new(*shards as u32);
+                let buckets = r.split_ids(ids);
+                let total: usize = buckets.iter().map(|(p, _)| p.len()).sum();
+                if total != ids.len() {
+                    return Err(format!("{total} != {}", ids.len()));
+                }
+                let mut positions: Vec<usize> =
+                    buckets.iter().flat_map(|(p, _)| p.iter().copied()).collect();
+                positions.sort();
+                positions.dedup();
+                if positions.len() != ids.len() {
+                    return Err("positions duplicated or lost".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_resharding_preserves_every_id() {
+        // Migrating M -> N: re-routing all ids through the new router must
+        // assign each id exactly one new shard; and ids that co-resided
+        // stay findable (totality of migration_plan fanout).
+        check(
+            "resharding-total",
+            &PairOf(PairOf(U64Range(1, 32), U64Range(1, 32)), VecOf(U64Range(0, 1 << 48), 200)),
+            200,
+            |((m, n), ids)| {
+                let src = Router::new(*m as u32);
+                let dst = Router::new(*n as u32);
+                let plan = migration_plan(*m as u32, *n as u32);
+                for &id in ids {
+                    let s = src.shard_of(id);
+                    let d = dst.shard_of(id);
+                    if !plan[s as usize].contains(&d) {
+                        return Err(format!("plan misses id {id}: {s} -> {d}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_shards_rejected() {
+        Router::new(0);
+    }
+}

@@ -1,0 +1,198 @@
+//! Model transforming: master-format rows → slave-format rows (§4.1.4b).
+//!
+//! "Real-time updates will face the problem of heterogeneous master-slave
+//! data which requires real-time model conversion during the real-time
+//! synchronization process." The master stores optimizer state (FTRL z, n
+//! + cached w); a ranking slave stores only the serving weight; an
+//! embedding-query slave keeps only the factor table. The transform runs
+//! on the scatter path, per entry, and may also *screen* data (drop tables
+//! the slave type does not serve).
+
+use std::sync::Arc;
+
+use crate::optim::Optimizer;
+use crate::{Error, Result};
+
+/// Converts one master row into the slave's serving representation.
+/// `None` = this slave screens out the table entirely.
+pub trait Transform: Send + Sync {
+    /// Serving floats per id for `table`, or `None` to drop the table.
+    fn serving_width(&self, table: &str) -> Option<usize>;
+
+    /// Convert a full master row to the serving row.
+    fn transform(&self, table: &str, row: &[f32]) -> Result<Option<Vec<f32>>>;
+}
+
+/// Extract the optimizer's `w` slot — the standard ranking-slave transform
+/// (FTRL `(z, n, w) -> w`, Adam `(m, v, w) -> w`, SGD `w -> w`).
+pub struct ServingWeights {
+    /// (table name, optimizer, dim) for every table this slave serves.
+    tables: Vec<(String, Arc<dyn Optimizer>, usize)>,
+}
+
+impl ServingWeights {
+    /// Transform serving the given tables.
+    pub fn new(tables: Vec<(String, Arc<dyn Optimizer>, usize)>) -> ServingWeights {
+        ServingWeights { tables }
+    }
+
+    fn lookup(&self, table: &str) -> Option<&(String, Arc<dyn Optimizer>, usize)> {
+        self.tables.iter().find(|(n, _, _)| n == table)
+    }
+}
+
+impl Transform for ServingWeights {
+    fn serving_width(&self, table: &str) -> Option<usize> {
+        self.lookup(table).map(|(_, _, dim)| *dim)
+    }
+
+    fn transform(&self, table: &str, row: &[f32]) -> Result<Option<Vec<f32>>> {
+        let Some((_, opt, dim)) = self.lookup(table) else {
+            return Ok(None); // screened out
+        };
+        if row.len() != opt.row_width(*dim) {
+            return Err(Error::Codec(format!(
+                "transform {table}: row width {} != {}",
+                row.len(),
+                opt.row_width(*dim)
+            )));
+        }
+        Ok(Some(opt.serving(row, *dim).to_vec()))
+    }
+}
+
+/// Identity transform: the slave mirrors full master rows (model-evaluation
+/// slaves that need optimizer state, or master→master replication).
+pub struct FullRows {
+    tables: Vec<(String, usize)>,
+}
+
+impl FullRows {
+    /// Mirror `tables` (name, full row width).
+    pub fn new(tables: Vec<(String, usize)>) -> FullRows {
+        FullRows { tables }
+    }
+}
+
+impl Transform for FullRows {
+    fn serving_width(&self, table: &str) -> Option<usize> {
+        self.tables.iter().find(|(n, _)| n == table).map(|(_, w)| *w)
+    }
+
+    fn transform(&self, table: &str, row: &[f32]) -> Result<Option<Vec<f32>>> {
+        match self.serving_width(table) {
+            Some(w) if row.len() == w => Ok(Some(row.to_vec())),
+            Some(w) => Err(Error::Codec(format!(
+                "full-row transform {table}: width {} != {w}",
+                row.len()
+            ))),
+            None => Ok(None),
+        }
+    }
+}
+
+/// Embedding-query slave: keeps only the factor table's serving weights
+/// ("some generate features based on the index input by the user", §1.2.1).
+pub struct EmbeddingOnly {
+    inner: ServingWeights,
+    keep: String,
+}
+
+impl EmbeddingOnly {
+    /// Serve only `keep` (e.g. "v") through the given optimizer layout.
+    pub fn new(keep: &str, optimizer: Arc<dyn Optimizer>, dim: usize) -> EmbeddingOnly {
+        EmbeddingOnly {
+            inner: ServingWeights::new(vec![(keep.to_string(), optimizer, dim)]),
+            keep: keep.to_string(),
+        }
+    }
+}
+
+impl Transform for EmbeddingOnly {
+    fn serving_width(&self, table: &str) -> Option<usize> {
+        (table == self.keep).then(|| self.inner.serving_width(table)).flatten()
+    }
+
+    fn transform(&self, table: &str, row: &[f32]) -> Result<Option<Vec<f32>>> {
+        if table != self.keep {
+            return Ok(None);
+        }
+        self.inner.transform(table, row)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{Adagrad, Ftrl, FtrlHyper, Sgd};
+
+    fn ftrl() -> Arc<dyn Optimizer> {
+        Arc::new(Ftrl::new(FtrlHyper::default()))
+    }
+
+    #[test]
+    fn serving_weights_extracts_w_slot() {
+        let t = ServingWeights::new(vec![
+            ("w".into(), ftrl(), 1),
+            ("v".into(), ftrl(), 4),
+        ]);
+        assert_eq!(t.serving_width("w"), Some(1));
+        assert_eq!(t.serving_width("v"), Some(4));
+        assert_eq!(t.serving_width("junk"), None);
+
+        // FTRL row (z, n, w) at dim 1: w = row[2].
+        let out = t.transform("w", &[5.0, 2.0, -0.7]).unwrap().unwrap();
+        assert_eq!(out, vec![-0.7]);
+        // dim 4: w slot = last 4 of 12.
+        let row: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        assert_eq!(t.transform("v", &row).unwrap().unwrap(), vec![8.0, 9.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn serving_weights_screens_unknown_tables() {
+        let t = ServingWeights::new(vec![("w".into(), ftrl(), 1)]);
+        assert_eq!(t.transform("other", &[1.0, 2.0, 3.0]).unwrap(), None);
+    }
+
+    #[test]
+    fn width_mismatch_is_error_not_garbage() {
+        let t = ServingWeights::new(vec![("w".into(), ftrl(), 2)]);
+        assert!(t.transform("w", &[1.0, 2.0, 3.0]).is_err()); // needs 6
+    }
+
+    #[test]
+    fn works_across_optimizer_layouts() {
+        let t = ServingWeights::new(vec![
+            ("sgd_t".into(), Arc::new(Sgd { lr: 0.1 }) as Arc<dyn Optimizer>, 2),
+            ("ada_t".into(), Arc::new(Adagrad { lr: 0.1, eps: 1e-8 }) as Arc<dyn Optimizer>, 2),
+        ]);
+        // SGD row is already just w.
+        assert_eq!(t.transform("sgd_t", &[0.1, 0.2]).unwrap().unwrap(), vec![0.1, 0.2]);
+        // Adagrad (acc, w): w is the second half.
+        assert_eq!(
+            t.transform("ada_t", &[9.0, 9.0, 0.3, 0.4]).unwrap().unwrap(),
+            vec![0.3, 0.4]
+        );
+    }
+
+    #[test]
+    fn full_rows_mirror() {
+        let t = FullRows::new(vec![("w".into(), 3)]);
+        assert_eq!(
+            t.transform("w", &[1.0, 2.0, 3.0]).unwrap().unwrap(),
+            vec![1.0, 2.0, 3.0]
+        );
+        assert_eq!(t.transform("x", &[1.0]).unwrap(), None);
+        assert!(t.transform("w", &[1.0]).is_err());
+    }
+
+    #[test]
+    fn embedding_only_keeps_one_table() {
+        let t = EmbeddingOnly::new("v", ftrl(), 2);
+        assert_eq!(t.serving_width("v"), Some(2));
+        assert_eq!(t.serving_width("w"), None);
+        assert_eq!(t.transform("w", &[1.0, 2.0, 3.0]).unwrap(), None);
+        let row = [0.0, 0.0, 1.0, 1.0, 0.5, 0.6]; // z,n,w dim2
+        assert_eq!(t.transform("v", &row).unwrap().unwrap(), vec![0.5, 0.6]);
+    }
+}

@@ -1,0 +1,676 @@
+//! Parameter tables: sharded sparse slot-tables and dense tensors.
+//!
+//! A [`SparseTable`] holds the rows of one logical parameter matrix on one
+//! server shard (id → `slots × dim` f32s, slot layout owned by the
+//! optimizer). It implements the XDL-derived features the paper adopts
+//! (§2.2, §4.1c): **feature entry filter** (rows materialize only after an
+//! id has been observed `entry_threshold` times — low-frequency junk never
+//! allocates) and **feature expire** (ids untouched for a TTL are evicted,
+//! and the eviction propagates to slaves through sync deletes).
+//!
+//! Tables are deliberately lock-free-free: a shard server wraps its tables
+//! in the shard's own `RwLock` — no double locking on the hot path.
+
+use crate::codec::{Encode, Reader, Writer};
+use crate::optim::Optimizer;
+use crate::util::hash::FxHashMap;
+use crate::{Error, Result};
+use std::sync::Arc;
+
+/// One sparse row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Row {
+    pub values: Box<[f32]>,
+    pub last_access_ms: u64,
+    pub updates: u32,
+}
+
+/// Sparse parameter table (one shard's slice of one matrix).
+pub struct SparseTable {
+    name: String,
+    dim: usize,
+    optimizer: Arc<dyn Optimizer>,
+    rows: FxHashMap<u64, Row>,
+    /// Entry filter: ids seen fewer than `entry_threshold` times live here.
+    probation: FxHashMap<u64, u32>,
+    entry_threshold: u32,
+}
+
+impl SparseTable {
+    /// New table; `entry_threshold = 1` materializes rows immediately.
+    pub fn new(
+        name: impl Into<String>,
+        dim: usize,
+        optimizer: Arc<dyn Optimizer>,
+        entry_threshold: u32,
+    ) -> SparseTable {
+        SparseTable {
+            name: name.into(),
+            dim,
+            optimizer,
+            rows: FxHashMap::default(),
+            probation: FxHashMap::default(),
+            entry_threshold: entry_threshold.max(1),
+        }
+    }
+
+    /// Table name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Per-slot dimension.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Optimizer owning the slot layout.
+    pub fn optimizer(&self) -> &Arc<dyn Optimizer> {
+        &self.optimizer
+    }
+
+    /// Materialized row count.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no rows are materialized.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Approximate bytes held (rows only).
+    pub fn bytes(&self) -> usize {
+        self.rows.len() * (self.optimizer.row_width(self.dim) * 4 + 24)
+    }
+
+    fn row_width(&self) -> usize {
+        self.optimizer.row_width(self.dim)
+    }
+
+    /// Read one slot (by name) for `ids` into `out` (missing ids → 0.0).
+    /// `out.len() == ids.len() * dim`. Updates access times.
+    pub fn pull_slot(&mut self, ids: &[u64], slot: &str, now_ms: u64, out: &mut [f32]) -> Result<()> {
+        let dim = self.dim;
+        debug_assert_eq!(out.len(), ids.len() * dim);
+        let slot_idx = self
+            .optimizer
+            .slot_index(slot)
+            .ok_or_else(|| Error::NotFound(format!("slot {slot} in table {}", self.name)))?;
+        for (i, id) in ids.iter().enumerate() {
+            let dst = &mut out[i * dim..(i + 1) * dim];
+            match self.rows.get_mut(id) {
+                Some(row) => {
+                    row.last_access_ms = now_ms;
+                    dst.copy_from_slice(&row.values[slot_idx * dim..(slot_idx + 1) * dim]);
+                }
+                None => dst.fill(0.0),
+            }
+        }
+        Ok(())
+    }
+
+    /// Full row for `id` (no access-time touch).
+    pub fn get_row(&self, id: u64) -> Option<&Row> {
+        self.rows.get(&id)
+    }
+
+    /// Apply pre-aggregated gradients: `grads.len() == ids.len() * dim`,
+    /// ids must be unique (aggregate duplicates upstream — see
+    /// [`aggregate_grads`]). Returns the ids whose rows changed (i.e.
+    /// passed the entry filter) for the sync collector.
+    pub fn apply_grads(&mut self, ids: &[u64], grads: &[f32], now_ms: u64) -> Vec<u64> {
+        debug_assert_eq!(grads.len(), ids.len() * self.dim);
+        let dim = self.dim;
+        let width = self.row_width();
+        let mut touched = Vec::with_capacity(ids.len());
+        for (i, &id) in ids.iter().enumerate() {
+            if !self.rows.contains_key(&id) {
+                // Entry filter: count observations until the threshold.
+                let seen = self.probation.entry(id).or_insert(0);
+                *seen += 1;
+                if *seen < self.entry_threshold {
+                    continue;
+                }
+                self.probation.remove(&id);
+                self.rows.insert(
+                    id,
+                    Row {
+                        values: vec![0.0; width].into_boxed_slice(),
+                        last_access_ms: now_ms,
+                        updates: 0,
+                    },
+                );
+            }
+            let row = self.rows.get_mut(&id).unwrap();
+            row.updates += 1;
+            row.last_access_ms = now_ms;
+            self.optimizer
+                .apply(&mut row.values, &grads[i * dim..(i + 1) * dim], dim, row.updates);
+            touched.push(id);
+        }
+        touched
+    }
+
+    /// Run `ids` through the entry filter, materializing rows that pass.
+    /// Returns the subset of `ids` (with positions) that are materialized
+    /// and may be updated. Order of first occurrence is preserved.
+    pub fn ensure_rows(&mut self, ids: &[u64], now_ms: u64) -> Vec<(usize, u64)> {
+        let width = self.row_width();
+        let mut ready = Vec::with_capacity(ids.len());
+        for (pos, &id) in ids.iter().enumerate() {
+            if !self.rows.contains_key(&id) {
+                let seen = self.probation.entry(id).or_insert(0);
+                *seen += 1;
+                if *seen < self.entry_threshold {
+                    continue;
+                }
+                self.probation.remove(&id);
+                self.rows.insert(
+                    id,
+                    Row {
+                        values: vec![0.0; width].into_boxed_slice(),
+                        last_access_ms: now_ms,
+                        updates: 0,
+                    },
+                );
+            }
+            ready.push((pos, id));
+        }
+        ready
+    }
+
+    /// Gather two slots (by index) for materialized `ids` into flat
+    /// `(a, b)` arrays of `ids.len() * dim` — the batched-FTRL read path
+    /// (slots z and n). Missing rows panic (call [`Self::ensure_rows`]).
+    pub fn gather_slot_pair(&self, ids: &[u64], slot_a: usize, slot_b: usize, a: &mut [f32], b: &mut [f32]) {
+        let dim = self.dim;
+        for (i, id) in ids.iter().enumerate() {
+            let row = self.rows.get(id).expect("gather of unmaterialized row");
+            a[i * dim..(i + 1) * dim]
+                .copy_from_slice(&row.values[slot_a * dim..(slot_a + 1) * dim]);
+            b[i * dim..(i + 1) * dim]
+                .copy_from_slice(&row.values[slot_b * dim..(slot_b + 1) * dim]);
+        }
+    }
+
+    /// Scatter three slots back for `ids` (batched-FTRL write path: z, n,
+    /// w), bumping update counts and access times.
+    pub fn scatter_slot_triple(
+        &mut self,
+        ids: &[u64],
+        slots: (usize, usize, usize),
+        a: &[f32],
+        b: &[f32],
+        c: &[f32],
+        now_ms: u64,
+    ) {
+        let dim = self.dim;
+        for (i, id) in ids.iter().enumerate() {
+            let row = self.rows.get_mut(id).expect("scatter to unmaterialized row");
+            row.values[slots.0 * dim..(slots.0 + 1) * dim]
+                .copy_from_slice(&a[i * dim..(i + 1) * dim]);
+            row.values[slots.1 * dim..(slots.1 + 1) * dim]
+                .copy_from_slice(&b[i * dim..(i + 1) * dim]);
+            row.values[slots.2 * dim..(slots.2 + 1) * dim]
+                .copy_from_slice(&c[i * dim..(i + 1) * dim]);
+            row.updates += 1;
+            row.last_access_ms = now_ms;
+        }
+    }
+
+    /// Overwrite a full row (scatter / checkpoint-load path).
+    pub fn upsert_row(&mut self, id: u64, values: &[f32], now_ms: u64) -> Result<()> {
+        if values.len() != self.row_width() {
+            return Err(Error::Codec(format!(
+                "row width {} != {} for table {}",
+                values.len(),
+                self.row_width(),
+                self.name
+            )));
+        }
+        match self.rows.get_mut(&id) {
+            Some(row) => {
+                row.values.copy_from_slice(values);
+                row.last_access_ms = now_ms;
+            }
+            None => {
+                self.rows.insert(
+                    id,
+                    Row {
+                        values: values.to_vec().into_boxed_slice(),
+                        last_access_ms: now_ms,
+                        updates: 0,
+                    },
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Remove a row; true if it existed.
+    pub fn delete(&mut self, id: u64) -> bool {
+        self.probation.remove(&id);
+        self.rows.remove(&id).is_some()
+    }
+
+    /// Feature expire: evict rows untouched for `ttl_ms`; returns evicted
+    /// ids (propagated to slaves as sync deletes).
+    pub fn expire(&mut self, now_ms: u64, ttl_ms: u64) -> Vec<u64> {
+        let dead: Vec<u64> = self
+            .rows
+            .iter()
+            .filter(|(_, r)| now_ms.saturating_sub(r.last_access_ms) > ttl_ms)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in &dead {
+            self.rows.remove(id);
+        }
+        // Probation entries also age out wholesale on expire passes.
+        self.probation.clear();
+        dead
+    }
+
+    /// Iterate all materialized rows.
+    pub fn iter(&self) -> impl Iterator<Item = (&u64, &Row)> {
+        self.rows.iter()
+    }
+
+    /// Serialize every row (checkpoint shard payload).
+    pub fn encode_rows(&self, w: &mut Writer) {
+        w.put_str(&self.name);
+        w.put_u32(self.dim as u32);
+        w.put_u32(self.row_width() as u32);
+        w.put_varint(self.rows.len() as u64);
+        for (id, row) in &self.rows {
+            w.put_varint(*id);
+            w.put_varint(row.last_access_ms);
+            w.put_u32(row.updates);
+            w.put_f32_slice(&row.values);
+        }
+    }
+
+    /// Restore rows from a checkpoint (replaces current content).
+    pub fn decode_rows(&mut self, r: &mut Reader) -> Result<()> {
+        let name = r.get_str()?;
+        if name != self.name {
+            return Err(Error::Checkpoint(format!(
+                "checkpoint table {name} != {}",
+                self.name
+            )));
+        }
+        let dim = r.get_u32()? as usize;
+        let width = r.get_u32()? as usize;
+        if dim != self.dim || width != self.row_width() {
+            return Err(Error::Checkpoint(format!(
+                "table {} schema mismatch: dim {dim}/{} width {width}/{}",
+                self.name,
+                self.dim,
+                self.row_width()
+            )));
+        }
+        let count = r.get_varint()? as usize;
+        self.rows.clear();
+        self.probation.clear();
+        for _ in 0..count {
+            let id = r.get_varint()?;
+            let last_access_ms = r.get_varint()?;
+            let updates = r.get_u32()?;
+            let values = r.get_f32_slice()?;
+            if values.len() != width {
+                return Err(Error::Checkpoint(format!(
+                    "row {id} width {} != {width}",
+                    values.len()
+                )));
+            }
+            self.rows.insert(
+                id,
+                Row { values: values.into_boxed_slice(), last_access_ms, updates },
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Aggregate duplicate ids in a push batch by summing their gradients.
+/// Returns unique ids + summed grads (order of first occurrence).
+pub fn aggregate_grads(ids: &[u64], grads: &[f32], dim: usize) -> (Vec<u64>, Vec<f32>) {
+    debug_assert_eq!(grads.len(), ids.len() * dim);
+    let mut index: FxHashMap<u64, usize> = FxHashMap::default();
+    let mut out_ids = Vec::with_capacity(ids.len());
+    let mut out_grads: Vec<f32> = Vec::with_capacity(grads.len());
+    for (i, &id) in ids.iter().enumerate() {
+        match index.get(&id) {
+            Some(&pos) => {
+                let dst = pos * dim;
+                for j in 0..dim {
+                    out_grads[dst + j] += grads[i * dim + j];
+                }
+            }
+            None => {
+                index.insert(id, out_ids.len());
+                out_ids.push(id);
+                out_grads.extend_from_slice(&grads[i * dim..(i + 1) * dim]);
+            }
+        }
+    }
+    (out_ids, out_grads)
+}
+
+// ---------------------------------------------------------------------------
+// Dense tables
+// ---------------------------------------------------------------------------
+
+/// Dense optimizer for tower weights (SGD or Adagrad with internal state).
+#[derive(Debug, Clone)]
+pub enum DenseOpt {
+    Sgd { lr: f32 },
+    Adagrad { lr: f32, eps: f32 },
+}
+
+/// A dense parameter tensor (MLP tower weights, bias) with optimizer state.
+pub struct DenseTable {
+    name: String,
+    values: Vec<f32>,
+    acc: Vec<f32>,
+    opt: DenseOpt,
+    /// Bumped on every update; slaves use it to detect staleness.
+    pub version: u64,
+}
+
+impl DenseTable {
+    /// New dense table with `init` values.
+    pub fn new(name: impl Into<String>, init: Vec<f32>, opt: DenseOpt) -> DenseTable {
+        let acc = vec![0.0; init.len()];
+        DenseTable { name: name.into(), values: init, acc, opt, version: 0 }
+    }
+
+    /// Table name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Current values.
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// True when the table is empty.
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Apply a gradient of the same length.
+    pub fn apply_grad(&mut self, grad: &[f32]) -> Result<()> {
+        if grad.len() != self.values.len() {
+            return Err(Error::Codec(format!(
+                "dense grad len {} != {} for {}",
+                grad.len(),
+                self.values.len(),
+                self.name
+            )));
+        }
+        match self.opt {
+            DenseOpt::Sgd { lr } => {
+                for (w, g) in self.values.iter_mut().zip(grad) {
+                    *w -= lr * g;
+                }
+            }
+            DenseOpt::Adagrad { lr, eps } => {
+                for ((w, a), g) in self.values.iter_mut().zip(&mut self.acc).zip(grad) {
+                    *a += g * g;
+                    *w -= lr * g / (a.sqrt() + eps);
+                }
+            }
+        }
+        self.version += 1;
+        Ok(())
+    }
+
+    /// Overwrite values (scatter / checkpoint load).
+    pub fn set_values(&mut self, values: &[f32]) -> Result<()> {
+        if values.len() != self.values.len() {
+            return Err(Error::Codec(format!(
+                "dense set len {} != {} for {}",
+                values.len(),
+                self.values.len(),
+                self.name
+            )));
+        }
+        self.values.copy_from_slice(values);
+        self.version += 1;
+        Ok(())
+    }
+}
+
+impl Encode for DenseTable {
+    fn encode(&self, w: &mut Writer) {
+        w.put_str(&self.name);
+        w.put_u64(self.version);
+        w.put_f32_slice(&self.values);
+        w.put_f32_slice(&self.acc);
+    }
+}
+
+impl DenseTable {
+    /// Restore state saved by [`Encode::encode`] into this table.
+    pub fn decode_into(&mut self, r: &mut Reader) -> Result<()> {
+        let name = r.get_str()?;
+        if name != self.name {
+            return Err(Error::Checkpoint(format!("dense table {name} != {}", self.name)));
+        }
+        self.version = r.get_u64()?;
+        let values = r.get_f32_slice()?;
+        let acc = r.get_f32_slice()?;
+        if values.len() != self.values.len() {
+            return Err(Error::Checkpoint(format!(
+                "dense {} len {} != {}",
+                self.name,
+                values.len(),
+                self.values.len()
+            )));
+        }
+        self.values = values;
+        self.acc = acc;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{Ftrl, FtrlHyper, Sgd};
+
+    fn table(threshold: u32) -> SparseTable {
+        SparseTable::new("w", 2, Arc::new(Ftrl::new(FtrlHyper::default())), threshold)
+    }
+
+    #[test]
+    fn pull_missing_ids_is_zero() {
+        let mut t = table(1);
+        let mut out = vec![9.0; 6];
+        t.pull_slot(&[1, 2, 3], "w", 0, &mut out).unwrap();
+        assert_eq!(out, vec![0.0; 6]);
+        assert!(t.pull_slot(&[1], "nope", 0, &mut [0.0; 2]).is_err());
+    }
+
+    #[test]
+    fn apply_then_pull_round_trips() {
+        let mut t = table(1);
+        let touched = t.apply_grads(&[7, 8], &[1.0, 1.0, -1.0, -1.0], 100);
+        assert_eq!(touched, vec![7, 8]);
+        assert_eq!(t.len(), 2);
+        let mut z = vec![0.0; 2];
+        t.pull_slot(&[7], "z", 100, &mut z).unwrap();
+        assert_eq!(z, vec![1.0, 1.0]); // z = g on first update from zero
+        let mut n = vec![0.0; 2];
+        t.pull_slot(&[8], "n", 100, &mut n).unwrap();
+        assert_eq!(n, vec![1.0, 1.0]); // n = g^2
+    }
+
+    #[test]
+    fn entry_filter_defers_materialization() {
+        let mut t = table(3);
+        assert!(t.apply_grads(&[5], &[1.0, 1.0], 0).is_empty());
+        assert!(t.apply_grads(&[5], &[1.0, 1.0], 0).is_empty());
+        assert_eq!(t.len(), 0);
+        // Third observation materializes and applies.
+        assert_eq!(t.apply_grads(&[5], &[1.0, 1.0], 0), vec![5]);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.get_row(5).unwrap().updates, 1);
+    }
+
+    #[test]
+    fn expire_evicts_stale_rows() {
+        let mut t = table(1);
+        t.apply_grads(&[1], &[1.0, 1.0], 1_000);
+        t.apply_grads(&[2], &[1.0, 1.0], 5_000);
+        let dead = t.expire(10_000, 6_000);
+        assert_eq!(dead, vec![1]);
+        assert_eq!(t.len(), 1);
+        assert!(t.get_row(2).is_some());
+        // Access refreshes the clock.
+        let mut out = vec![0.0; 2];
+        t.pull_slot(&[2], "w", 20_000, &mut out).unwrap();
+        assert!(t.expire(24_000, 6_000).is_empty());
+    }
+
+    #[test]
+    fn delete_removes_row_and_probation() {
+        let mut t = table(2);
+        t.apply_grads(&[9], &[1.0, 1.0], 0); // probation only
+        assert!(!t.delete(9)); // not materialized
+        t.apply_grads(&[9], &[1.0, 1.0], 0);
+        t.apply_grads(&[9], &[1.0, 1.0], 0);
+        assert_eq!(t.len(), 1);
+        assert!(t.delete(9));
+        assert_eq!(t.len(), 0);
+    }
+
+    #[test]
+    fn upsert_validates_width() {
+        let mut t = table(1);
+        assert!(t.upsert_row(1, &[0.0; 6], 0).is_ok()); // 3 slots * dim 2
+        assert!(t.upsert_row(1, &[0.0; 4], 0).is_err());
+        t.upsert_row(1, &[1., 2., 3., 4., 5., 6.], 0).unwrap();
+        assert_eq!(&*t.get_row(1).unwrap().values, &[1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn checkpoint_round_trip() {
+        let mut t = table(1);
+        for id in 0..100u64 {
+            t.apply_grads(&[id], &[id as f32 * 0.1, -0.5], 50);
+        }
+        let mut w = Writer::new();
+        t.encode_rows(&mut w);
+        let bytes = w.into_bytes();
+
+        let mut t2 = table(1);
+        t2.decode_rows(&mut Reader::new(&bytes)).unwrap();
+        assert_eq!(t2.len(), 100);
+        for id in 0..100u64 {
+            assert_eq!(t.get_row(id).unwrap(), t2.get_row(id).unwrap(), "row {id}");
+        }
+    }
+
+    #[test]
+    fn checkpoint_schema_mismatch_rejected() {
+        let mut t = table(1);
+        t.apply_grads(&[1], &[1.0, 1.0], 0);
+        let mut w = Writer::new();
+        t.encode_rows(&mut w);
+        let bytes = w.into_bytes();
+        // dim-4 table refuses a dim-2 checkpoint.
+        let mut t4 = SparseTable::new("w", 4, Arc::new(Ftrl::new(FtrlHyper::default())), 1);
+        assert!(t4.decode_rows(&mut Reader::new(&bytes)).is_err());
+        // Different name refuses too.
+        let mut tn = SparseTable::new("v", 2, Arc::new(Ftrl::new(FtrlHyper::default())), 1);
+        assert!(tn.decode_rows(&mut Reader::new(&bytes)).is_err());
+    }
+
+    #[test]
+    fn aggregate_grads_sums_duplicates() {
+        let (ids, grads) = aggregate_grads(
+            &[3, 5, 3, 5, 7],
+            &[1., 1., 2., 2., 10., 10., 20., 20., 5., 5.],
+            2,
+        );
+        assert_eq!(ids, vec![3, 5, 7]);
+        assert_eq!(grads, vec![11., 11., 22., 22., 5., 5.]);
+    }
+
+    #[test]
+    fn prop_aggregate_preserves_total_mass() {
+        use crate::util::prop::{check, PairOf, U64Range, VecOf};
+        check(
+            "aggregate-mass",
+            &VecOf(PairOf(U64Range(0, 9), U64Range(0, 100)), 64),
+            200,
+            |pairs| {
+                let ids: Vec<u64> = pairs.iter().map(|(id, _)| *id).collect();
+                let grads: Vec<f32> = pairs.iter().map(|(_, g)| *g as f32).collect();
+                let (uids, ugrads) = aggregate_grads(&ids, &grads, 1);
+                let total_in: f32 = grads.iter().sum();
+                let total_out: f32 = ugrads.iter().sum();
+                if (total_in - total_out).abs() > 1e-3 {
+                    return Err(format!("mass {total_in} -> {total_out}"));
+                }
+                let mut sorted = uids.clone();
+                sorted.sort();
+                sorted.dedup();
+                if sorted.len() != uids.len() {
+                    return Err("duplicate ids in output".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn dense_sgd_and_adagrad() {
+        let mut d = DenseTable::new("b", vec![1.0, 2.0], DenseOpt::Sgd { lr: 0.5 });
+        d.apply_grad(&[1.0, -1.0]).unwrap();
+        assert_eq!(d.values(), &[0.5, 2.5]);
+        assert_eq!(d.version, 1);
+        assert!(d.apply_grad(&[1.0]).is_err());
+
+        let mut a = DenseTable::new("w1", vec![0.0; 2], DenseOpt::Adagrad { lr: 0.1, eps: 1e-8 });
+        a.apply_grad(&[1.0, 1.0]).unwrap();
+        let first = -a.values()[0];
+        a.apply_grad(&[1.0, 1.0]).unwrap();
+        let second = first - (-a.values()[0] - first) ; // step sizes shrink
+        assert!(first > 0.0 && second > 0.0);
+    }
+
+    #[test]
+    fn dense_checkpoint_round_trip() {
+        let mut d = DenseTable::new("w1", vec![0.0; 8], DenseOpt::Adagrad { lr: 0.1, eps: 1e-8 });
+        d.apply_grad(&[0.5; 8]).unwrap();
+        d.apply_grad(&[-0.25; 8]).unwrap();
+        let bytes = d.to_bytes();
+
+        let mut d2 = DenseTable::new("w1", vec![0.0; 8], DenseOpt::Adagrad { lr: 0.1, eps: 1e-8 });
+        d2.decode_into(&mut Reader::new(&bytes)).unwrap();
+        assert_eq!(d2.values(), d.values());
+        assert_eq!(d2.version, d.version);
+        // Post-restore updates continue from restored adagrad state.
+        d.apply_grad(&[0.1; 8]).unwrap();
+        d2.apply_grad(&[0.1; 8]).unwrap();
+        assert_eq!(d.values(), d2.values());
+    }
+
+    #[test]
+    fn sgd_table_slot_layout() {
+        let mut t = SparseTable::new("w", 4, Arc::new(Sgd { lr: 0.1 }), 1);
+        t.apply_grads(&[1], &[1.0, 2.0, 3.0, 4.0], 0);
+        let row = t.get_row(1).unwrap();
+        assert_eq!(row.values.len(), 4); // single slot
+        assert_eq!(&*row.values, &[-0.1, -0.2, -0.3, -0.4]);
+    }
+}

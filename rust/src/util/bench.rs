@@ -1,0 +1,137 @@
+//! Micro/macro benchmark harness (criterion is unavailable offline).
+//!
+//! Every `cargo bench` target uses this: timed closures with warmup,
+//! per-iteration latency histograms, and aligned table output so each
+//! bench prints the rows of the experiment it reproduces (DESIGN.md §5).
+
+use super::histogram::{fmt_ns, Histogram};
+
+/// Result of one measured case.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub label: String,
+    pub iters: u64,
+    pub total_ns: u64,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+}
+
+impl Stats {
+    /// Operations per second.
+    pub fn ops_per_sec(&self) -> f64 {
+        if self.total_ns == 0 {
+            0.0
+        } else {
+            self.iters as f64 / (self.total_ns as f64 / 1e9)
+        }
+    }
+
+    /// One formatted table row.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12} {:>14.0}",
+            self.label,
+            self.iters,
+            fmt_ns(self.mean_ns as u64),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            self.ops_per_sec(),
+        )
+    }
+}
+
+/// Print the standard table header.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<44} {:>10} {:>12} {:>12} {:>12} {:>14}",
+        "case", "iters", "mean", "p50", "p99", "ops/s"
+    );
+    println!("{}", "-".repeat(110));
+}
+
+/// Measure `f` for `iters` iterations after `warmup` unmeasured ones.
+/// Records per-iteration latency.
+pub fn run<F: FnMut()>(label: &str, warmup: u64, iters: u64, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let hist = Histogram::new();
+    let start = std::time::Instant::now();
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f();
+        hist.record(t0.elapsed().as_nanos() as u64);
+    }
+    let total_ns = start.elapsed().as_nanos() as u64;
+    let stats = Stats {
+        label: label.to_string(),
+        iters,
+        total_ns,
+        mean_ns: hist.mean(),
+        p50_ns: hist.quantile(0.5),
+        p99_ns: hist.quantile(0.99),
+        max_ns: hist.max(),
+    };
+    println!("{}", stats.row());
+    stats
+}
+
+/// Measure a closure that does `batch` logical operations per call;
+/// reported ops/s is per logical op.
+pub fn run_batched<F: FnMut()>(label: &str, warmup: u64, iters: u64, batch: u64, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let hist = Histogram::new();
+    let start = std::time::Instant::now();
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f();
+        hist.record(t0.elapsed().as_nanos() as u64 / batch.max(1));
+    }
+    let total_ns = start.elapsed().as_nanos() as u64;
+    let stats = Stats {
+        label: label.to_string(),
+        iters: iters * batch,
+        total_ns,
+        mean_ns: hist.mean(),
+        p50_ns: hist.quantile(0.5),
+        p99_ns: hist.quantile(0.99),
+        max_ns: hist.max(),
+    };
+    println!("{}", stats.row());
+    stats
+}
+
+/// Simple named-value output line for non-latency metrics (ratios, bytes).
+pub fn metric(name: &str, value: impl std::fmt::Display) {
+    println!("  {name:<58} {value}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_measures_something() {
+        let s = run("spin", 2, 50, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(s.iters, 50);
+        assert!(s.ops_per_sec() > 0.0);
+        assert!(s.p99_ns >= s.p50_ns);
+    }
+
+    #[test]
+    fn batched_divides_latency() {
+        let s = run_batched("batch", 0, 10, 100, || {
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        });
+        // Per-op latency ~1us, not ~100us.
+        assert!(s.mean_ns < 50_000.0, "mean {}", s.mean_ns);
+        assert_eq!(s.iters, 1_000);
+    }
+}

@@ -1,0 +1,136 @@
+//! Fast non-cryptographic hashing (fxhash-style) and a `HashMap` wrapper.
+//!
+//! Parameter ids are already well-distributed 64-bit feature hashes, so the
+//! shard router and the sparse tables want the cheapest possible mixer, not
+//! SipHash. `fxhash64` is the rustc FxHasher multiply-xor scheme extended to
+//! one-shot u64 keys; `FxHashMap` plugs it into `std::collections::HashMap`.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// One-shot mix of a 64-bit key (used by the shard router).
+#[inline]
+pub fn fxhash64(mut x: u64) -> u64 {
+    x = x.wrapping_mul(SEED);
+    x ^= x >> 32;
+    x = x.wrapping_mul(SEED);
+    x ^= x >> 32;
+    x
+}
+
+/// Streaming FxHasher compatible with `std` hashing traits.
+#[derive(Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        // Final avalanche so sequential keys spread across buckets.
+        let mut h = self.hash;
+        h ^= h >> 32;
+        h = h.wrapping_mul(SEED);
+        h ^= h >> 32;
+        h
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rem.len()].copy_from_slice(rem);
+            self.add(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.add(v);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.add(v as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.add(v as u64);
+    }
+}
+
+/// HashMap keyed with the fast hasher.
+pub type FxHashMap<K, V> = HashMap<K, V, BuildHasherDefault<FxHasher>>;
+/// HashSet keyed with the fast hasher.
+pub type FxHashSet<K> = HashSet<K, BuildHasherDefault<FxHasher>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_shot_is_deterministic_and_mixing() {
+        assert_eq!(fxhash64(1), fxhash64(1));
+        assert_ne!(fxhash64(1), fxhash64(2));
+        // Low bits of sequential keys should differ (shard routing quality).
+        let mask = 0xFF;
+        let mut seen = std::collections::HashSet::new();
+        for k in 0..64u64 {
+            seen.insert(fxhash64(k) & mask);
+        }
+        assert!(seen.len() > 40, "only {} distinct low bytes", seen.len());
+    }
+
+    #[test]
+    fn map_works_with_fx_hasher() {
+        let mut m: FxHashMap<u64, u32> = FxHashMap::default();
+        for i in 0..1000 {
+            m.insert(i, (i * 2) as u32);
+        }
+        assert_eq!(m.len(), 1000);
+        assert_eq!(m[&7], 14);
+    }
+
+    #[test]
+    fn streaming_hash_distinguishes_lengths() {
+        use std::hash::Hash;
+        fn h<T: Hash>(v: T) -> u64 {
+            let mut hasher = FxHasher::default();
+            v.hash(&mut hasher);
+            hasher.finish()
+        }
+        assert_ne!(h(b"abc".as_slice()), h(b"abcd".as_slice()));
+        assert_ne!(h((1u64, 2u64)), h((2u64, 1u64)));
+    }
+
+    #[test]
+    fn shard_distribution_is_balanced() {
+        // Routing quality: hashing 100k sequential ids into 16 shards should
+        // land within ±15% of uniform.
+        let shards = 16u64;
+        let mut counts = vec![0usize; shards as usize];
+        let n = 100_000u64;
+        for id in 0..n {
+            counts[(fxhash64(id) % shards) as usize] += 1;
+        }
+        let expect = (n / shards) as f64;
+        for c in counts {
+            assert!((c as f64 - expect).abs() / expect < 0.15, "count {c} vs {expect}");
+        }
+    }
+}

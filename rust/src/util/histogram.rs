@@ -1,0 +1,247 @@
+//! Log-bucketed latency histogram (HdrHistogram-lite).
+//!
+//! Every latency number reported by the monitor and the bench harness flows
+//! through this: fixed 2×64 log2 sub-bucketed layout covering 1 ns .. ~17 min
+//! with ≤ ~1.6% relative error, constant memory, lock-free recording.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const SUB_BITS: u32 = 5; // 32 sub-buckets per power of two => <= 3.1% width
+const SUB: usize = 1 << SUB_BITS;
+const BUCKETS: usize = 64 - SUB_BITS as usize; // exponents
+const SLOTS: usize = BUCKETS * SUB;
+
+/// Concurrent log-bucketed histogram of u64 values (typically nanoseconds).
+#[derive(Debug)]
+pub struct Histogram {
+    counts: Vec<AtomicU64>,
+    total: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+    min: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        let mut counts = Vec::with_capacity(SLOTS);
+        counts.resize_with(SLOTS, || AtomicU64::new(0));
+        Histogram {
+            counts,
+            total: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+        }
+    }
+
+    #[inline]
+    fn slot(value: u64) -> usize {
+        let v = value.max(1);
+        let exp = 63 - v.leading_zeros() as usize; // floor(log2 v)
+        if exp < SUB_BITS as usize {
+            // Values below 2^SUB_BITS map directly onto the first slots.
+            return v as usize;
+        }
+        let sub = ((v >> (exp - SUB_BITS as usize)) as usize) & (SUB - 1);
+        (exp - SUB_BITS as usize) * SUB + sub + SUB // offset past direct range
+    }
+
+    #[inline]
+    fn slot_mid(slot: usize) -> u64 {
+        if slot < SUB {
+            return slot as u64;
+        }
+        let s = slot - SUB;
+        let exp = s / SUB + SUB_BITS as usize;
+        let sub = (s % SUB) as u64;
+        let base = (1u64 << exp) + (sub << (exp - SUB_BITS as usize));
+        base + (1u64 << (exp - SUB_BITS as usize)) / 2
+    }
+
+    /// Record one value.
+    #[inline]
+    pub fn record(&self, value: u64) {
+        let idx = Self::slot(value).min(SLOTS - 1);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+        self.max.fetch_max(value, Ordering::Relaxed);
+        self.min.fetch_min(value, Ordering::Relaxed);
+    }
+
+    /// Number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Mean of recorded values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Maximum recorded value (exact).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Minimum recorded value (exact; 0 when empty).
+    pub fn min(&self) -> u64 {
+        let m = self.min.load(Ordering::Relaxed);
+        if m == u64::MAX {
+            0
+        } else {
+            m
+        }
+    }
+
+    /// Approximate quantile `q` in [0,1] (bucket midpoint).
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c.load(Ordering::Relaxed);
+            if acc >= rank {
+                return Self::slot_mid(i).min(self.max());
+            }
+        }
+        self.max()
+    }
+
+    /// Reset all counters.
+    pub fn clear(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.total.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+        self.min.store(u64::MAX, Ordering::Relaxed);
+    }
+
+    /// One-line human summary with ns→µs/ms scaling.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={} p50={} p99={} p999={} max={}",
+            self.count(),
+            fmt_ns(self.mean() as u64),
+            fmt_ns(self.quantile(0.50)),
+            fmt_ns(self.quantile(0.99)),
+            fmt_ns(self.quantile(0.999)),
+            fmt_ns(self.max()),
+        )
+    }
+}
+
+/// Format a nanosecond count with an adaptive unit.
+pub fn fmt_ns(ns: u64) -> String {
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.1}us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0);
+    }
+
+    #[test]
+    fn small_values_exact() {
+        let h = Histogram::new();
+        for v in [1u64, 2, 3, 3, 3, 4] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.max(), 4);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.quantile(0.5), 3);
+    }
+
+    #[test]
+    fn quantiles_within_relative_error() {
+        let h = Histogram::new();
+        for v in 1..=100_000u64 {
+            h.record(v);
+        }
+        for (q, expect) in [(0.5, 50_000.0), (0.9, 90_000.0), (0.99, 99_000.0)] {
+            let got = h.quantile(q) as f64;
+            assert!(
+                (got - expect).abs() / expect < 0.05,
+                "q={q} got={got} expect={expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn mean_is_exact() {
+        let h = Histogram::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        assert_eq!(h.mean(), 20.0);
+    }
+
+    #[test]
+    fn concurrent_records() {
+        let h = std::sync::Arc::new(Histogram::new());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let h = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..10_000u64 {
+                    h.record(t * 10_000 + i + 1);
+                }
+            }));
+        }
+        for hd in handles {
+            hd.join().unwrap();
+        }
+        assert_eq!(h.count(), 40_000);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let h = Histogram::new();
+        h.record(5);
+        h.clear();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_ns(500), "500ns");
+        assert_eq!(fmt_ns(1_500), "1.5us");
+        assert_eq!(fmt_ns(2_000_000), "2.00ms");
+        assert_eq!(fmt_ns(3_000_000_000), "3.00s");
+    }
+}

@@ -1,0 +1,39 @@
+//! Small self-contained utilities shared by every subsystem.
+//!
+//! The build environment has no network access to crates.io beyond the
+//! vendored `xla`/`anyhow` closure, so the usual ecosystem crates (rand,
+//! fxhash, hdrhistogram, proptest, serde) are reimplemented here in the
+//! minimal form WeiPS needs. Each is unit-tested in its own module.
+
+pub mod bench;
+pub mod clock;
+pub mod hash;
+pub mod histogram;
+pub mod json;
+pub mod lockfree;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;
+
+pub use clock::{Clock, ManualClock, SystemClock};
+pub use hash::fxhash64;
+pub use histogram::Histogram;
+pub use lockfree::LockFreeQueue;
+pub use rng::Rng;
+pub use threadpool::ThreadPool;
+
+/// Current wall-clock time in milliseconds since the unix epoch.
+pub fn now_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Current monotonic time in nanoseconds (process-relative).
+pub fn mono_ns() -> u64 {
+    use std::time::Instant;
+    use once_cell::sync::Lazy;
+    static START: Lazy<Instant> = Lazy::new(Instant::now);
+    START.elapsed().as_nanos() as u64
+}

@@ -1,0 +1,220 @@
+//! In-repo property-based testing harness (proptest is unavailable offline).
+//!
+//! A tiny shrinking property tester: generators are closures over [`Rng`],
+//! `check` runs N seeded cases, and on failure greedily shrinks the input
+//! via the strategy's `shrink` before panicking with the minimal
+//! counterexample and its reproduction seed. Used by the coordinator
+//! invariant suites (routing totality, queue idempotence, gather
+//! last-write-wins, codec round-trips — DESIGN.md §6).
+
+use super::rng::Rng;
+
+/// A value generator plus shrinker.
+pub trait Strategy {
+    /// Generated value type.
+    type Value: Clone + std::fmt::Debug;
+    /// Generate one value.
+    fn gen(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller values (tried in order during shrinking).
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        Vec::new()
+    }
+}
+
+/// Run `cases` seeded random cases of `prop` against `strategy`; on failure
+/// shrink (up to 200 steps) and panic with the minimal counterexample.
+pub fn check<S, F>(name: &str, strategy: &S, cases: usize, mut prop: F)
+where
+    S: Strategy,
+    F: FnMut(&S::Value) -> std::result::Result<(), String>,
+{
+    // Honor WEIPS_PROP_SEED for reproduction.
+    let base_seed = std::env::var("WEIPS_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let value = strategy.gen(&mut rng);
+        if let Err(msg) = prop(&value) {
+            // Shrink.
+            let mut best = value;
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: while steps < 200 {
+                for cand in strategy.shrink(&best) {
+                    steps += 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if steps >= 200 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (seed={seed}, case={case}):\n  input: {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Uniform u64 in [lo, hi].
+pub struct U64Range(pub u64, pub u64);
+
+impl Strategy for U64Range {
+    type Value = u64;
+
+    fn gen(&self, rng: &mut Rng) -> u64 {
+        self.0 + rng.gen_range(self.1 - self.0 + 1)
+    }
+
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (v - self.0) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Vector of values from an element strategy, length in [0, max_len].
+pub struct VecOf<S>(pub S, pub usize);
+
+impl<S: Strategy> Strategy for VecOf<S> {
+    type Value = Vec<S::Value>;
+
+    fn gen(&self, rng: &mut Rng) -> Self::Value {
+        let len = rng.gen_range(self.1 as u64 + 1) as usize;
+        (0..len).map(|_| self.0.gen(rng)).collect()
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if v.is_empty() {
+            return out;
+        }
+        // Halve, drop-front, drop-back, then shrink one element.
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[1..].to_vec());
+        out.push(v[..v.len() - 1].to_vec());
+        for (i, elem) in v.iter().enumerate().take(4) {
+            for smaller in self.0.shrink(elem) {
+                let mut copy = v.clone();
+                copy[i] = smaller;
+                out.push(copy);
+            }
+        }
+        out
+    }
+}
+
+/// Pair of two strategies.
+pub struct PairOf<A, B>(pub A, pub B);
+
+impl<A: Strategy, B: Strategy> Strategy for PairOf<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn gen(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.gen(rng), self.1.gen(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// f32 in [lo, hi] (finite).
+pub struct F32Range(pub f32, pub f32);
+
+impl Strategy for F32Range {
+    type Value = f32;
+
+    fn gen(&self, rng: &mut Rng) -> f32 {
+        self.0 + rng.gen_f32() * (self.1 - self.0)
+    }
+
+    fn shrink(&self, v: &f32) -> Vec<f32> {
+        let mut out = Vec::new();
+        if *v != 0.0 && self.0 <= 0.0 && self.1 >= 0.0 {
+            out.push(0.0);
+            out.push(v / 2.0);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_quiet() {
+        check("sum-commutes", &PairOf(U64Range(0, 100), U64Range(0, 100)), 200, |(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'finds-bug' failed")]
+    fn failing_property_panics_with_counterexample() {
+        check("finds-bug", &U64Range(0, 1000), 500, |v| {
+            if *v < 500 {
+                Ok(())
+            } else {
+                Err(format!("{v} >= 500"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_reaches_small_counterexample() {
+        // Catch the panic and confirm the reported input shrank to <= a
+        // small multiple of the boundary.
+        let result = std::panic::catch_unwind(|| {
+            check("shrinks", &VecOf(U64Range(0, 100), 50), 200, |v| {
+                if v.len() < 5 {
+                    Ok(())
+                } else {
+                    Err("too long".into())
+                }
+            });
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        // Minimal failing length is 5; shrinker should get close.
+        let input_part = msg.split("input: ").nth(1).unwrap();
+        let commas = input_part.chars().filter(|&c| c == ',').count();
+        assert!(commas <= 7, "shrunk input still large: {msg}");
+    }
+
+    #[test]
+    fn vec_strategy_respects_max_len() {
+        let s = VecOf(U64Range(0, 10), 8);
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            assert!(s.gen(&mut rng).len() <= 8);
+        }
+    }
+}

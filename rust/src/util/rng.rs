@@ -1,0 +1,308 @@
+//! Deterministic pseudo-random number generation (splitmix64 + xoshiro256**).
+//!
+//! Used for synthetic workload generation, the randomized checkpoint trigger
+//! (§4.2.1a of the paper), and the in-repo property-testing harness. All
+//! randomness in WeiPS flows through seeded [`Rng`] instances so every
+//! experiment and test is reproducible.
+
+/// Splitmix64 step: good enough to seed and to derive stream ids.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** PRNG — fast, 256-bit state, statistically strong for
+/// simulation purposes (not cryptographic).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (expanded via splitmix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent child stream (for per-thread generators).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64() ^ 0xA5A5_5A5A_DEAD_BEEF)
+    }
+
+    /// Next 64 uniformly random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform u32.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)` (Lemire's multiply-shift; n must be > 0).
+    #[inline]
+    pub fn gen_range(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn gen_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn gen_normal(&mut self) -> f64 {
+        let u1 = self.gen_f64().max(f64::MIN_POSITIVE);
+        let u2 = self.gen_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+
+    /// Exponential with rate `lambda` (mean `1/lambda`).
+    pub fn gen_exp(&mut self, lambda: f64) -> f64 {
+        -self.gen_f64().max(f64::MIN_POSITIVE).ln() / lambda
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick an index from unnormalized weights.
+    pub fn pick_weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut x = self.gen_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len().saturating_sub(1)
+    }
+}
+
+/// Zipf(s) sampler over `{0, .., n-1}` via rejection-inversion
+/// (Hörmann & Derflinger) — O(1) per sample, used to model the power-law
+/// popularity of feature ids that drives the paper's 90 %-repetition
+/// observation (DESIGN.md E2).
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: u64,
+    s: f64,
+    h_x1: f64,
+    h_n: f64,
+    dense: Option<Vec<f64>>, // cdf for tiny n
+}
+
+impl Zipf {
+    /// New sampler over `n` items with exponent `s > 0`, `s != 1` handled.
+    pub fn new(n: u64, s: f64) -> Self {
+        assert!(n > 0 && s > 0.0);
+        if n <= 64 {
+            // Exact CDF for small domains.
+            let mut cdf = Vec::with_capacity(n as usize);
+            let mut acc = 0.0;
+            for k in 1..=n {
+                acc += (k as f64).powf(-s);
+                cdf.push(acc);
+            }
+            let total = acc;
+            for v in cdf.iter_mut() {
+                *v /= total;
+            }
+            return Zipf { n, s, h_x1: 0.0, h_n: 0.0, dense: Some(cdf) };
+        }
+        let h = |x: f64| -> f64 {
+            if (s - 1.0).abs() < 1e-9 {
+                (x).ln()
+            } else {
+                (x.powf(1.0 - s) - 1.0) / (1.0 - s)
+            }
+        };
+        Zipf { n, s, h_x1: h(1.5) - 1.0, h_n: h(n as f64 + 0.5), dense: None }
+    }
+
+    fn h_inv(&self, x: f64) -> f64 {
+        if (self.s - 1.0).abs() < 1e-9 {
+            x.exp()
+        } else {
+            (1.0 + x * (1.0 - self.s)).powf(1.0 / (1.0 - self.s))
+        }
+    }
+
+    /// Sample a rank in `[0, n)`; rank 0 is the most popular item.
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        if let Some(cdf) = &self.dense {
+            let u = rng.gen_f64();
+            return cdf.partition_point(|&c| c < u) as u64;
+        }
+        loop {
+            let u = self.h_x1 + rng.gen_f64() * (self.h_n - self.h_x1);
+            let x = self.h_inv(u);
+            let k = (x + 0.5).floor().max(1.0).min(self.n as f64);
+            let h = |y: f64| -> f64 {
+                if (self.s - 1.0).abs() < 1e-9 {
+                    y.ln()
+                } else {
+                    (y.powf(1.0 - self.s) - 1.0) / (1.0 - self.s)
+                }
+            };
+            if u >= h(k + 0.5) - (k).powf(-self.s) {
+                return k as u64 - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn range_is_bounded_and_covers() {
+        let mut r = Rng::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.gen_range(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn f64_in_unit_interval_with_plausible_mean() {
+        let mut r = Rng::new(9);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let v = r.gen_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_has_unit_variance() {
+        let mut r = Rng::new(11);
+        let (mut s, mut s2) = (0.0, 0.0);
+        let n = 20_000;
+        for _ in 0..n {
+            let v = r.gen_normal();
+            s += v;
+            s2 += v * v;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(3);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zipf_head_is_heavier_than_tail() {
+        let z = Zipf::new(10_000, 1.1);
+        let mut r = Rng::new(5);
+        let mut head = 0usize;
+        let n = 50_000;
+        for _ in 0..n {
+            if z.sample(&mut r) < 100 {
+                head += 1;
+            }
+        }
+        // With s=1.1 the top-1% of ranks should get a large share of mass.
+        assert!(head as f64 / n as f64 > 0.35, "head share {}", head as f64 / n as f64);
+    }
+
+    #[test]
+    fn zipf_small_domain_exact() {
+        let z = Zipf::new(3, 1.0);
+        let mut r = Rng::new(13);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[z.sample(&mut r) as usize] += 1;
+        }
+        // Expected proportions 6/11, 3/11, 2/11.
+        let p0 = counts[0] as f64 / 30_000.0;
+        assert!((p0 - 6.0 / 11.0).abs() < 0.02, "p0={p0}");
+        assert!(counts[0] > counts[1] && counts[1] > counts[2]);
+    }
+
+    #[test]
+    fn pick_weighted_respects_weights() {
+        let mut r = Rng::new(21);
+        let mut c = [0usize; 2];
+        for _ in 0..10_000 {
+            c[r.pick_weighted(&[9.0, 1.0])] += 1;
+        }
+        assert!(c[0] > 8_000 && c[1] > 500);
+    }
+}

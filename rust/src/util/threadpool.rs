@@ -1,0 +1,165 @@
+//! Fixed-size thread pool (no tokio in the offline build environment).
+//!
+//! Used by the RPC server (per-connection handlers), the checkpoint writer
+//! (asynchronous saving, paper §4.2.1a) and the scatter appliers. Tasks are
+//! boxed closures; `join` blocks until all submitted work has drained.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    pending: AtomicUsize,
+    done_cv: Condvar,
+    done_mu: Mutex<()>,
+}
+
+/// Fixed-size pool of worker threads consuming a shared task channel.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Task>>,
+    workers: Vec<JoinHandle<()>>,
+    shared: Arc<Shared>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `size` worker threads (min 1).
+    pub fn new(size: usize, name: &str) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(Shared {
+            pending: AtomicUsize::new(0),
+            done_cv: Condvar::new(),
+            done_mu: Mutex::new(()),
+        });
+        let mut workers = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = rx.clone();
+            let shared = shared.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("{name}-{i}"))
+                .spawn(move || loop {
+                    let task = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match task {
+                        Ok(task) => {
+                            task();
+                            if shared.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                                let _g = shared.done_mu.lock().unwrap();
+                                shared.done_cv.notify_all();
+                            }
+                        }
+                        Err(_) => break, // channel closed => shutdown
+                    }
+                })
+                .expect("spawn worker");
+            workers.push(handle);
+        }
+        ThreadPool { tx: Some(tx), workers, shared }
+    }
+
+    /// Submit a task for execution.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.pending.fetch_add(1, Ordering::AcqRel);
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Number of submitted-but-unfinished tasks.
+    pub fn pending(&self) -> usize {
+        self.shared.pending.load(Ordering::Acquire)
+    }
+
+    /// Block until every submitted task has completed.
+    pub fn join(&self) {
+        let mut guard = self.shared.done_mu.lock().unwrap();
+        while self.shared.pending.load(Ordering::Acquire) > 0 {
+            let (g, _timeout) = self
+                .shared
+                .done_cv
+                .wait_timeout(guard, std::time::Duration::from_millis(50))
+                .unwrap();
+            guard = g;
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.join();
+        drop(self.tx.take()); // close channel => workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_tasks() {
+        let pool = ThreadPool::new(4, "test");
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+        assert_eq!(pool.pending(), 0);
+    }
+
+    #[test]
+    fn join_waits_for_slow_tasks() {
+        let pool = ThreadPool::new(2, "slow");
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..4 {
+            let c = counter.clone();
+            pool.execute(move || {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn drop_drains_outstanding_work() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = ThreadPool::new(1, "drop");
+            for _ in 0..10 {
+                let c = counter.clone();
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        } // drop joins
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn size_zero_clamped_to_one() {
+        let pool = ThreadPool::new(0, "min");
+        let c = Arc::new(AtomicU64::new(0));
+        let c2 = c.clone();
+        pool.execute(move || {
+            c2.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.join();
+        assert_eq!(c.load(Ordering::SeqCst), 1);
+    }
+}

@@ -1,0 +1,374 @@
+//! WeiPS-client (§3.1): the worker-side access library.
+//!
+//! "The interactions between the servers are all through WeiPS-client ...
+//! because the predictor and the trainer have different scheme
+//! requirements, WeiPS-client carries different characteristics for that."
+//!
+//! Two profiles:
+//! - [`ShardedClient`] (trainer profile): throughput-oriented fan-out of
+//!   big pull/push batches across master shards, no failover (masters are
+//!   checkpoint-recovered, §4.2.1);
+//! - [`SlaveClient`] (predictor profile): latency-oriented reads against
+//!   slave replica groups with health-aware failover (hot backup, §4.2.2).
+
+use std::sync::Arc;
+
+use crate::codec::{Decode, Encode};
+use crate::net::Channel;
+use crate::proto::{DensePull, DenseValues, SparsePull, SparsePush, SparseValues};
+use crate::replica::{Endpoint, ReplicaGroup};
+use crate::server::methods;
+use crate::server::slave::SlaveShard;
+use crate::sync::router::Router;
+use crate::{Error, Result};
+
+/// Trainer-profile client over the master cluster.
+pub struct ShardedClient {
+    model: String,
+    router: Router,
+    shards: Vec<Channel>,
+}
+
+impl ShardedClient {
+    /// Client over `shards` (index = master shard id).
+    pub fn new(model: &str, shards: Vec<Channel>) -> ShardedClient {
+        ShardedClient {
+            model: model.to_string(),
+            router: Router::new(shards.len() as u32),
+            shards,
+        }
+    }
+
+    /// Master shard count.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Pull `slot` of `table` for `ids` (any length); returns values in
+    /// request order, `width` floats per id.
+    pub fn sparse_pull(&self, table: &str, ids: &[u64], slot: &str) -> Result<(u32, Vec<f32>)> {
+        let buckets = self.router.split_ids(ids);
+        let mut width = 0u32;
+        let mut out: Vec<f32> = Vec::new();
+        for (shard, (positions, shard_ids)) in buckets.iter().enumerate() {
+            if shard_ids.is_empty() {
+                continue;
+            }
+            let req = SparsePull {
+                model: self.model.clone(),
+                table: table.to_string(),
+                ids: shard_ids.clone(),
+                slot: slot.to_string(),
+            };
+            let resp_bytes = self.shards[shard].call(methods::SPARSE_PULL, &req.to_bytes())?;
+            let resp = SparseValues::from_bytes(&resp_bytes)?;
+            if width == 0 {
+                width = resp.width;
+                out.resize(ids.len() * width as usize, 0.0);
+            } else if width != resp.width {
+                return Err(Error::Rpc(format!(
+                    "width mismatch across shards: {width} vs {}",
+                    resp.width
+                )));
+            }
+            let w = width as usize;
+            for (i, &pos) in positions.iter().enumerate() {
+                out[pos * w..(pos + 1) * w].copy_from_slice(&resp.values[i * w..(i + 1) * w]);
+            }
+        }
+        Ok((width, out))
+    }
+
+    /// Push gradients for `ids` (`grads.len() == ids.len() * dim`).
+    pub fn sparse_push(&self, table: &str, ids: &[u64], grads: &[f32]) -> Result<()> {
+        if ids.is_empty() {
+            return Ok(());
+        }
+        let dim = grads.len() / ids.len();
+        let buckets = self.router.split_ids(ids);
+        for (shard, (positions, shard_ids)) in buckets.iter().enumerate() {
+            if shard_ids.is_empty() {
+                continue;
+            }
+            let mut shard_grads = Vec::with_capacity(shard_ids.len() * dim);
+            for &pos in positions {
+                shard_grads.extend_from_slice(&grads[pos * dim..(pos + 1) * dim]);
+            }
+            let req = SparsePush {
+                model: self.model.clone(),
+                table: table.to_string(),
+                ids: shard_ids.clone(),
+                grads: shard_grads,
+            };
+            self.shards[shard].call(methods::SPARSE_PUSH, &req.to_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Pull a dense table (dense state lives on shard 0 — the designated
+    /// dense owner, avoiding divergent replicas).
+    pub fn dense_pull(&self, table: &str) -> Result<Vec<f32>> {
+        let req = DensePull { model: self.model.clone(), table: table.to_string() };
+        let resp = self.shards[0].call(methods::DENSE_PULL, &req.to_bytes())?;
+        Ok(DenseValues::from_bytes(&resp)?.values)
+    }
+
+    /// Push a dense gradient (shard 0).
+    pub fn dense_push(&self, table: &str, grads: Vec<f32>) -> Result<()> {
+        let req = DenseValues {
+            model: self.model.clone(),
+            table: table.to_string(),
+            values: grads,
+        };
+        self.shards[0].call(methods::DENSE_PUSH, &req.to_bytes())?;
+        Ok(())
+    }
+}
+
+/// A slave replica endpoint: channel + (for in-process replicas) a direct
+/// health view; remote replicas are probed via PING.
+pub struct SlaveEndpoint {
+    pub channel: Channel,
+    local: Option<Arc<SlaveShard>>,
+}
+
+impl SlaveEndpoint {
+    /// In-process endpoint (health read directly off the shard).
+    pub fn local(channel: Channel, shard: Arc<SlaveShard>) -> SlaveEndpoint {
+        SlaveEndpoint { channel, local: Some(shard) }
+    }
+
+    /// Remote endpoint (health via PING).
+    pub fn remote(channel: Channel) -> SlaveEndpoint {
+        SlaveEndpoint { channel, local: None }
+    }
+}
+
+impl Endpoint for SlaveEndpoint {
+    fn healthy(&self) -> bool {
+        match &self.local {
+            Some(shard) => shard.is_healthy(),
+            None => self.channel.call(methods::PING, &[]).is_ok(),
+        }
+    }
+}
+
+/// Predictor-profile client over the slave cluster: one replica group per
+/// slave shard, failover on every read.
+pub struct SlaveClient {
+    model: String,
+    router: Router,
+    groups: Vec<Arc<ReplicaGroup<SlaveEndpoint>>>,
+    /// Failover attempts per read.
+    attempts: usize,
+}
+
+impl SlaveClient {
+    /// Client over `groups` (index = slave shard id).
+    pub fn new(model: &str, groups: Vec<Arc<ReplicaGroup<SlaveEndpoint>>>) -> SlaveClient {
+        SlaveClient {
+            model: model.to_string(),
+            router: Router::new(groups.len() as u32),
+            groups,
+            attempts: 3,
+        }
+    }
+
+    /// Slave shard count.
+    pub fn shard_count(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Replica group for a shard (failure injection in tests/benches).
+    pub fn group(&self, shard: usize) -> &Arc<ReplicaGroup<SlaveEndpoint>> {
+        &self.groups[shard]
+    }
+
+    /// Pull serving values for `ids` in request order.
+    pub fn sparse_pull(&self, table: &str, ids: &[u64]) -> Result<(u32, Vec<f32>)> {
+        let buckets = self.router.split_ids(ids);
+        let mut width = 0u32;
+        let mut out: Vec<f32> = Vec::new();
+        for (shard, (positions, shard_ids)) in buckets.iter().enumerate() {
+            if shard_ids.is_empty() {
+                continue;
+            }
+            let req = SparsePull {
+                model: self.model.clone(),
+                table: table.to_string(),
+                ids: shard_ids.clone(),
+                slot: "w".to_string(),
+            }
+            .to_bytes();
+            let resp_bytes = self.groups[shard]
+                .call_with_failover(self.attempts, |ep| ep.channel.call(methods::SPARSE_PULL, &req))?;
+            let resp = SparseValues::from_bytes(&resp_bytes)?;
+            if width == 0 {
+                width = resp.width;
+                out.resize(ids.len() * width as usize, 0.0);
+            }
+            let w = width as usize;
+            for (i, &pos) in positions.iter().enumerate() {
+                out[pos * w..(pos + 1) * w].copy_from_slice(&resp.values[i * w..(i + 1) * w]);
+            }
+        }
+        Ok((width, out))
+    }
+
+    /// Pull a dense table from any shard-0 replica.
+    pub fn dense_pull(&self, table: &str) -> Result<Vec<f32>> {
+        let req = DensePull { model: self.model.clone(), table: table.to_string() }.to_bytes();
+        let resp = self.groups[0]
+            .call_with_failover(self.attempts, |ep| ep.channel.call(methods::DENSE_PULL, &req))?;
+        Ok(DenseValues::from_bytes(&resp)?.values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelKind, ModelSpec};
+    use crate::replica::BalancePolicy;
+    use crate::runtime::ModelConfig;
+    use crate::server::master::{MasterService, MasterShard};
+    use crate::server::slave::SlaveService;
+    use crate::sync::transform::ServingWeights;
+    use crate::util::clock::ManualClock;
+
+    fn model_cfg() -> ModelConfig {
+        ModelConfig {
+            batch_train: 8,
+            batch_predict: 2,
+            fields: 4,
+            dim: 2,
+            hidden: 8,
+            ftrl_block_rows: 64,
+            ftrl_alpha: 0.05,
+            ftrl_beta: 1.0,
+            ftrl_l1: 1.0,
+            ftrl_l2: 1.0,
+        }
+    }
+
+    fn master_cluster(n: u32) -> (ShardedClient, Vec<Arc<MasterShard>>) {
+        let spec = ModelSpec::derive("ctr", ModelKind::Fm, &model_cfg());
+        let clock = Arc::new(ManualClock::new(0));
+        let masters: Vec<Arc<MasterShard>> = (0..n)
+            .map(|i| Arc::new(MasterShard::new(i, spec.clone(), None, 1, clock.clone()).unwrap()))
+            .collect();
+        let channels: Vec<Channel> = masters
+            .iter()
+            .map(|m| Channel::local(Arc::new(MasterService { shard: m.clone(), store: None })))
+            .collect();
+        (ShardedClient::new("ctr", channels), masters)
+    }
+
+    #[test]
+    fn sharded_push_pull_round_trip() {
+        let (client, masters) = master_cluster(4);
+        let ids: Vec<u64> = (0..100).collect();
+        let grads = vec![2.0f32; 100];
+        client.sparse_push("w", &ids, &grads).unwrap();
+        // Rows spread across shards.
+        let spread: Vec<usize> = masters.iter().map(|m| m.total_rows()).collect();
+        assert_eq!(spread.iter().sum::<usize>(), 100);
+        assert!(spread.iter().all(|&c| c > 5), "spread {spread:?}");
+        // Pull z in request order.
+        let (width, z) = client.sparse_pull("w", &ids, "z").unwrap();
+        assert_eq!(width, 1);
+        assert!(z.iter().all(|&v| (v - 2.0).abs() < 1e-6));
+        // Multi-dim table.
+        client.sparse_push("v", &ids, &vec![0.5f32; 200]).unwrap();
+        let (vw, vv) = client.sparse_pull("v", &ids, "*").unwrap();
+        assert_eq!(vw, 6); // 3 slots * dim 2
+        assert_eq!(vv.len(), 600);
+    }
+
+    #[test]
+    fn dense_ops_go_to_shard_zero() {
+        let (client, masters) = master_cluster(3);
+        client.dense_push("bias", vec![1.0]).unwrap();
+        let v = client.dense_pull("bias").unwrap();
+        assert!(v[0] < 0.0);
+        // Only shard 0's dense table moved.
+        let d1 = masters[1]
+            .dense_pull(&DensePull { model: "ctr".into(), table: "bias".into() })
+            .unwrap();
+        assert_eq!(d1.values, vec![0.0]);
+    }
+
+    fn slave_cluster(shards: u32, replicas: u32) -> (SlaveClient, Vec<Vec<Arc<SlaveShard>>>) {
+        let ftrl: Arc<dyn crate::optim::Optimizer> =
+            Arc::new(crate::optim::Ftrl::new(crate::optim::FtrlHyper::default()));
+        let mut groups = Vec::new();
+        let mut all = Vec::new();
+        for s in 0..shards {
+            let mut eps = Vec::new();
+            let mut reps = Vec::new();
+            for r in 0..replicas {
+                let shard = Arc::new(SlaveShard::new(
+                    s,
+                    r,
+                    "ctr",
+                    vec![("w".into(), 1)],
+                    vec![("bias".into(), 1)],
+                    Arc::new(ServingWeights::new(vec![("w".into(), ftrl.clone(), 1)])),
+                    Router::new(shards),
+                ));
+                let ch = Channel::local(Arc::new(SlaveService { shard: shard.clone() }));
+                eps.push(Arc::new(SlaveEndpoint::local(ch, shard.clone())));
+                reps.push(shard);
+            }
+            groups.push(Arc::new(ReplicaGroup::new(eps, BalancePolicy::RoundRobin)));
+            all.push(reps);
+        }
+        (SlaveClient::new("ctr", groups), all)
+    }
+
+    fn seed_slaves(slaves: &[Vec<Arc<SlaveShard>>], ids: &[u64]) {
+        use crate::proto::{SyncBatch, SyncEntry, SyncOp};
+        let router = Router::new(slaves.len() as u32);
+        for &id in ids {
+            let shard = router.shard_of(id) as usize;
+            let batch = SyncBatch {
+                model: "ctr".into(),
+                table: "w".into(),
+                shard: 0,
+                seq: 0,
+                created_ms: 0,
+                entries: vec![SyncEntry { id, op: SyncOp::Upsert(vec![2.0, 1.0, id as f32]) }],
+                dense: vec![],
+            };
+            for replica in &slaves[shard] {
+                replica.apply_batch(&batch).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn slave_pull_in_request_order() {
+        let (client, slaves) = slave_cluster(2, 2);
+        let ids: Vec<u64> = (10..30).collect();
+        seed_slaves(&slaves, &ids);
+        let (w, vals) = client.sparse_pull("w", &ids).unwrap();
+        assert_eq!(w, 1);
+        for (i, &id) in ids.iter().enumerate() {
+            assert_eq!(vals[i], id as f32, "id {id}");
+        }
+    }
+
+    #[test]
+    fn slave_failover_on_replica_death() {
+        let (client, slaves) = slave_cluster(1, 3);
+        let ids = vec![5u64, 6, 7];
+        seed_slaves(&slaves, &ids);
+        // Kill two replicas.
+        slaves[0][0].set_healthy(false);
+        slaves[0][1].set_healthy(false);
+        let (_, vals) = client.sparse_pull("w", &ids).unwrap();
+        assert_eq!(vals, vec![5.0, 6.0, 7.0]);
+        // All dead -> unavailable.
+        slaves[0][2].set_healthy(false);
+        assert!(client.sparse_pull("w", &ids).is_err());
+    }
+}

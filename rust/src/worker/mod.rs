@@ -1,0 +1,9 @@
+//! Worker role (§3.1): trainer and predictor, plus the WeiPS-client.
+
+pub mod client;
+pub mod predictor;
+pub mod trainer;
+
+pub use client::{ShardedClient, SlaveClient, SlaveEndpoint};
+pub use predictor::Predictor;
+pub use trainer::Trainer;

@@ -1,0 +1,287 @@
+//! Predictor worker (§3.1): low-latency online inference.
+//!
+//! Serves ranking requests from the slave cluster: pull serving weights
+//! from replica groups (with hot-backup failover), execute the AOT
+//! `*_predict` module. Requests are micro-batched up to the compiled
+//! batch size; the tail is padded and the padding discarded — latency
+//! stays bounded, the executable stays shape-static.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::config::{ModelKind, ModelSpec};
+use crate::runtime::{Engine, Tensor};
+use crate::util::Histogram;
+use crate::worker::client::SlaveClient;
+use crate::{Error, Result};
+
+/// Serving metrics.
+#[derive(Debug, Default)]
+pub struct PredictorMetrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub failures: AtomicU64,
+    /// Per-request latency (ns).
+    pub latency_ns: Histogram,
+}
+
+/// The predictor worker.
+pub struct Predictor {
+    engine: Arc<Engine>,
+    spec: ModelSpec,
+    client: SlaveClient,
+    pub metrics: PredictorMetrics,
+}
+
+impl Predictor {
+    /// New predictor.
+    pub fn new(engine: Arc<Engine>, spec: ModelSpec, client: SlaveClient) -> Predictor {
+        Predictor { engine, spec, client, metrics: PredictorMetrics::default() }
+    }
+
+    /// The model spec in use.
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    /// The slave client (failure injection in tests).
+    pub fn client(&self) -> &SlaveClient {
+        &self.client
+    }
+
+    /// Predict CTR for each request (`ids` per request = one sample's
+    /// feature ids). Any request count; internally chunked to the compiled
+    /// batch size.
+    pub fn predict(&self, requests: &[Vec<u64>]) -> Result<Vec<f32>> {
+        let start = crate::util::mono_ns();
+        let b = self.spec.batch_predict;
+        let f = self.spec.fields;
+        let mut out = Vec::with_capacity(requests.len());
+        for chunk in requests.chunks(b) {
+            let mut flat_ids = Vec::with_capacity(b * f);
+            for req in chunk {
+                if req.len() != f {
+                    self.metrics.failures.fetch_add(1, Ordering::Relaxed);
+                    return Err(Error::State(format!(
+                        "request has {} fields, model wants {f}",
+                        req.len()
+                    )));
+                }
+                flat_ids.extend_from_slice(req);
+            }
+            // Pad the tail chunk by repeating the last request.
+            let pad = b - chunk.len();
+            for _ in 0..pad {
+                let last = &chunk[chunk.len() - 1];
+                flat_ids.extend_from_slice(last);
+            }
+            let preds = self.predict_padded(&flat_ids)?;
+            out.extend_from_slice(&preds[..chunk.len()]);
+        }
+        self.metrics.requests.fetch_add(requests.len() as u64, Ordering::Relaxed);
+        let elapsed = crate::util::mono_ns() - start;
+        for _ in 0..requests.len() {
+            self.metrics
+                .latency_ns
+                .record(elapsed / requests.len().max(1) as u64);
+        }
+        Ok(out)
+    }
+
+    fn predict_padded(&self, flat_ids: &[u64]) -> Result<Vec<f32>> {
+        let b = self.spec.batch_predict;
+        let f = self.spec.fields;
+        let k = self.spec.dim;
+        debug_assert_eq!(flat_ids.len(), b * f);
+        self.metrics.batches.fetch_add(1, Ordering::Relaxed);
+
+        let (_, w_vals) = self.client.sparse_pull("w", flat_ids)?;
+        let w = Tensor::new(vec![b, f], w_vals);
+        let dense: Vec<Tensor> = self
+            .spec
+            .dense
+            .iter()
+            .map(|d| {
+                let values = self.client.dense_pull(&d.name)?;
+                Ok(self.dense_to_tensor(&d.name, values))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let outputs = match self.spec.kind {
+            ModelKind::Lr => {
+                let mut inputs = vec![w];
+                inputs.extend(dense);
+                self.engine.execute("lr_predict", &inputs)?
+            }
+            ModelKind::Fm => {
+                let (_, v_vals) = self.client.sparse_pull("v", flat_ids)?;
+                let v = Tensor::new(vec![b, f, k], v_vals);
+                let mut inputs = vec![w, v];
+                inputs.extend(dense);
+                self.engine.execute("fm_predict", &inputs)?
+            }
+            ModelKind::DeepFm => {
+                let (_, v_vals) = self.client.sparse_pull("v", flat_ids)?;
+                let v = Tensor::new(vec![b, f, k], v_vals);
+                let mut inputs = vec![w, v];
+                inputs.extend(dense);
+                self.engine.execute("deepfm_predict", &inputs)?
+            }
+        };
+        Ok(outputs[0].data.clone())
+    }
+
+    fn dense_to_tensor(&self, name: &str, values: Vec<f32>) -> Tensor {
+        let (f, k, h) = (self.spec.fields, self.spec.dim, self.spec.hidden);
+        match name {
+            "w1" => Tensor::new(vec![f * k, h], values),
+            "w2" => Tensor::new(vec![h, 1], values),
+            _ => Tensor::vec1(values),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::Channel;
+    use crate::optim::{Ftrl, FtrlHyper, Optimizer};
+    use crate::proto::{SyncBatch, SyncEntry, SyncOp};
+    use crate::replica::{BalancePolicy, ReplicaGroup};
+    use crate::runtime::default_artifacts_dir;
+    use crate::server::slave::{SlaveService, SlaveShard};
+    use crate::sync::router::Router;
+    use crate::sync::transform::ServingWeights;
+    use crate::worker::client::SlaveEndpoint;
+
+    fn build(kind: ModelKind) -> Option<(Predictor, Vec<Vec<Arc<SlaveShard>>>)> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping predictor test: run `make artifacts`");
+            return None;
+        }
+        let engine = Arc::new(Engine::load(dir).unwrap());
+        let spec = ModelSpec::derive("ctr", kind, engine.config());
+        let ftrl: Arc<dyn Optimizer> = Arc::new(Ftrl::new(FtrlHyper::default()));
+        let mut table_layout = vec![("w".to_string(), 1usize)];
+        let mut tf = vec![("w".to_string(), ftrl.clone(), 1usize)];
+        if !matches!(kind, ModelKind::Lr) {
+            table_layout.push(("v".to_string(), spec.dim));
+            tf.push(("v".to_string(), ftrl.clone(), spec.dim));
+        }
+        let dense_layout: Vec<(String, usize)> =
+            spec.dense.iter().map(|d| (d.name.clone(), d.len)).collect();
+        let shards = 2u32;
+        let mut groups = Vec::new();
+        let mut all = Vec::new();
+        for s in 0..shards {
+            let mut eps = Vec::new();
+            let mut reps = Vec::new();
+            for r in 0..2u32 {
+                let shard = Arc::new(SlaveShard::new(
+                    s,
+                    r,
+                    "ctr",
+                    table_layout.clone(),
+                    dense_layout.clone(),
+                    Arc::new(ServingWeights::new(tf.clone())),
+                    Router::new(shards),
+                ));
+                let ch = Channel::local(Arc::new(SlaveService { shard: shard.clone() }));
+                eps.push(Arc::new(SlaveEndpoint::local(ch, shard.clone())));
+                reps.push(shard);
+            }
+            groups.push(Arc::new(ReplicaGroup::new(eps, BalancePolicy::RoundRobin)));
+            all.push(reps);
+        }
+        let client = SlaveClient::new("ctr", groups);
+        Some((Predictor::new(engine, spec, client), all))
+    }
+
+    fn seed_w(slaves: &[Vec<Arc<SlaveShard>>], id: u64, w: f32) {
+        let router = Router::new(slaves.len() as u32);
+        let batch = SyncBatch {
+            model: "ctr".into(),
+            table: "w".into(),
+            shard: 0,
+            seq: 0,
+            created_ms: 0,
+            entries: vec![SyncEntry { id, op: SyncOp::Upsert(vec![0.0, 0.0, w]) }],
+            dense: vec![],
+        };
+        for replica in &slaves[router.shard_of(id) as usize] {
+            replica.apply_batch(&batch).unwrap();
+        }
+    }
+
+    #[test]
+    fn lr_predictions_match_sigmoid_of_weights() {
+        let Some((p, slaves)) = build(ModelKind::Lr) else { return };
+        let f = p.spec().fields;
+        // Request 0: all-zero weights (p = 0.5); request 1: each field 0.1.
+        let req0: Vec<u64> = (1_000..1_000 + f as u64).collect();
+        let req1: Vec<u64> = (2_000..2_000 + f as u64).collect();
+        for &id in &req1 {
+            seed_w(&slaves, id, 0.1);
+        }
+        let preds = p.predict(&[req0, req1]).unwrap();
+        assert!((preds[0] - 0.5).abs() < 1e-6);
+        let logit = 0.1 * f as f32;
+        let want = 1.0 / (1.0 + (-logit).exp());
+        assert!((preds[1] - want).abs() < 1e-5, "{} vs {want}", preds[1]);
+    }
+
+    #[test]
+    fn odd_request_counts_are_padded_correctly() {
+        let Some((p, _)) = build(ModelKind::Lr) else { return };
+        let f = p.spec().fields;
+        let b = p.spec().batch_predict;
+        let reqs: Vec<Vec<u64>> = (0..(b * 2 + 1))
+            .map(|i| ((i * 100) as u64..(i * 100 + f) as u64).collect())
+            .collect();
+        let preds = p.predict(&reqs).unwrap();
+        assert_eq!(preds.len(), b * 2 + 1);
+        assert!(preds.iter().all(|x| (x - 0.5).abs() < 1e-6)); // all zero weights
+        assert_eq!(p.metrics.batches.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn fm_prediction_uses_factors() {
+        let Some((p, slaves)) = build(ModelKind::Fm) else { return };
+        let f = p.spec().fields;
+        let req: Vec<u64> = (3_000..3_000 + f as u64).collect();
+        let baseline = p.predict(&[req.clone()]).unwrap()[0];
+        // Give two ids identical factor vectors -> positive interaction.
+        let k = p.spec().dim;
+        let router = Router::new(slaves.len() as u32);
+        for &id in &req[..2] {
+            let mut row = vec![0.0; 3 * k];
+            row[2 * k..].iter_mut().for_each(|x| *x = 1.0); // w slot = ones
+            let batch = SyncBatch {
+                model: "ctr".into(),
+                table: "v".into(),
+                shard: 0,
+                seq: 0,
+                created_ms: 0,
+                entries: vec![SyncEntry { id, op: SyncOp::Upsert(row) }],
+                dense: vec![],
+            };
+            for replica in &slaves[router.shard_of(id) as usize] {
+                replica.apply_batch(&batch).unwrap();
+            }
+        }
+        let with_factors = p.predict(&[req]).unwrap()[0];
+        assert!(with_factors > baseline + 0.1, "{with_factors} vs {baseline}");
+    }
+
+    #[test]
+    fn replica_failure_transparent_to_serving() {
+        let Some((p, slaves)) = build(ModelKind::Lr) else { return };
+        let f = p.spec().fields;
+        let req: Vec<u64> = (0..f as u64).collect();
+        slaves[0][0].set_healthy(false);
+        slaves[1][0].set_healthy(false);
+        let preds = p.predict(&[req]).unwrap();
+        assert_eq!(preds.len(), 1);
+    }
+}

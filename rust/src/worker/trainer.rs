@@ -1,0 +1,235 @@
+//! Trainer worker (§3.1): pull → AOT train graph → push.
+//!
+//! Per batch: pull the sparse rows for the batch's ids from the master
+//! cluster, pull the dense tower tables, execute the AOT-compiled
+//! `*_train` module (forward + loss + grads + *pre-update* predictions),
+//! feed the predictions to the progressive-validation monitor (§4.3.1),
+//! then push the sparse/dense gradients back. Python never runs here —
+//! the graph is a compiled PJRT executable.
+
+use std::sync::Arc;
+
+use crate::config::{ModelKind, ModelSpec};
+use crate::monitor::Monitor;
+use crate::runtime::{Engine, Tensor};
+use crate::sample::Sample;
+use crate::worker::client::ShardedClient;
+use crate::{Error, Result};
+
+/// Result of one training step.
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    pub loss: f32,
+    /// Pre-update predictions (progressive validation signal).
+    pub preds: Vec<f32>,
+}
+
+/// The trainer worker.
+pub struct Trainer {
+    engine: Arc<Engine>,
+    spec: ModelSpec,
+    client: ShardedClient,
+    monitor: Arc<Monitor>,
+}
+
+impl Trainer {
+    /// New trainer.
+    pub fn new(
+        engine: Arc<Engine>,
+        spec: ModelSpec,
+        client: ShardedClient,
+        monitor: Arc<Monitor>,
+    ) -> Trainer {
+        Trainer { engine, spec, client, monitor }
+    }
+
+    /// The model spec in use.
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    /// Flatten the batch's ids (row-major `B × F`).
+    fn flat_ids(&self, samples: &[Sample]) -> Result<Vec<u64>> {
+        let f = self.spec.fields;
+        let mut ids = Vec::with_capacity(samples.len() * f);
+        for s in samples {
+            if s.ids.len() != f {
+                return Err(Error::State(format!(
+                    "sample has {} fields, model wants {f}",
+                    s.ids.len()
+                )));
+            }
+            ids.extend_from_slice(&s.ids);
+        }
+        Ok(ids)
+    }
+
+    /// Run one training step on exactly `batch_train` samples.
+    pub fn train_batch(&self, samples: &[Sample]) -> Result<StepOutput> {
+        let b = self.spec.batch_train;
+        if samples.len() != b {
+            return Err(Error::State(format!(
+                "train_batch needs exactly {b} samples, got {}",
+                samples.len()
+            )));
+        }
+        let f = self.spec.fields;
+        let k = self.spec.dim;
+        let ids = self.flat_ids(samples)?;
+        let labels: Vec<f32> = samples.iter().map(|s| s.label).collect();
+
+        // -- pull phase -----------------------------------------------------
+        let (_, w_vals) = self.client.sparse_pull("w", &ids, "w")?;
+        let w = Tensor::new(vec![b, f], w_vals);
+        let label_t = Tensor::vec1(labels.clone());
+        let dense_tensors: Vec<Tensor> = self
+            .spec
+            .dense
+            .iter()
+            .map(|d| {
+                let values = self.client.dense_pull(&d.name)?;
+                Ok(self.dense_to_tensor(&d.name, values))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let outputs = match self.spec.kind {
+            ModelKind::Lr => {
+                // [w, bias, label] -> [pred, loss, grad_w, grad_bias]
+                let mut inputs = vec![w];
+                inputs.extend(dense_tensors);
+                inputs.push(label_t);
+                self.engine.execute("lr_train", &inputs)?
+            }
+            ModelKind::Fm => {
+                let (_, v_vals) = self.client.sparse_pull("v", &ids, "w")?;
+                let v = Tensor::new(vec![b, f, k], v_vals);
+                let mut inputs = vec![w, v];
+                inputs.extend(dense_tensors);
+                inputs.push(label_t);
+                self.engine.execute("fm_train", &inputs)?
+            }
+            ModelKind::DeepFm => {
+                let (_, v_vals) = self.client.sparse_pull("v", &ids, "w")?;
+                let v = Tensor::new(vec![b, f, k], v_vals);
+                let mut inputs = vec![w, v];
+                inputs.extend(dense_tensors);
+                inputs.push(label_t);
+                self.engine.execute("deepfm_train", &inputs)?
+            }
+        };
+
+        // -- monitor (pre-update predictions) --------------------------------
+        let preds = outputs[0].data.clone();
+        let loss = outputs[1].item();
+        self.monitor.observe_batch(&preds, &labels);
+
+        // -- push phase -------------------------------------------------------
+        // Output layout: [pred, loss, grad_sparse..., grad_dense...] in the
+        // same order the graph takes its inputs.
+        let mut out_idx = 2;
+        self.client.sparse_push("w", &ids, &outputs[out_idx].data)?;
+        out_idx += 1;
+        if matches!(self.spec.kind, ModelKind::Fm | ModelKind::DeepFm) {
+            self.client.sparse_push("v", &ids, &outputs[out_idx].data)?;
+            out_idx += 1;
+        }
+        for d in &self.spec.dense {
+            self.client.dense_push(&d.name, outputs[out_idx].data.clone())?;
+            out_idx += 1;
+        }
+        debug_assert_eq!(out_idx, outputs.len());
+
+        Ok(StepOutput { loss, preds })
+    }
+
+    fn dense_to_tensor(&self, name: &str, values: Vec<f32>) -> Tensor {
+        // Tower matrices need their 2-D shapes back; vectors stay rank-1.
+        let (f, k, h) = (self.spec.fields, self.spec.dim, self.spec.hidden);
+        match name {
+            "w1" => Tensor::new(vec![f * k, h], values),
+            "w2" => Tensor::new(vec![h, 1], values),
+            _ => Tensor::vec1(values),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelKind;
+    use crate::net::Channel;
+    use crate::runtime::default_artifacts_dir;
+    use crate::sample::{Workload, WorkloadConfig};
+    use crate::server::master::{MasterService, MasterShard};
+    use crate::util::clock::SystemClock;
+
+    fn build(kind: ModelKind) -> Option<(Trainer, Vec<Arc<MasterShard>>, Workload)> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping trainer test: run `make artifacts`");
+            return None;
+        }
+        let engine = Arc::new(Engine::load(dir).unwrap());
+        let spec = ModelSpec::derive("ctr", kind, engine.config());
+        let clock = Arc::new(SystemClock);
+        let masters: Vec<Arc<MasterShard>> = (0..2)
+            .map(|i| {
+                Arc::new(
+                    MasterShard::new(i, spec.clone(), Some(engine.clone()), 1, clock.clone())
+                        .unwrap(),
+                )
+            })
+            .collect();
+        let channels: Vec<Channel> = masters
+            .iter()
+            .map(|m| Channel::local(Arc::new(MasterService { shard: m.clone(), store: None })))
+            .collect();
+        let client = ShardedClient::new("ctr", channels);
+        let monitor = Arc::new(Monitor::new(1_000));
+        let workload = Workload::new(WorkloadConfig {
+            fields: spec.fields,
+            ids_per_field: 1_000,
+            seed: 7,
+            ..Default::default()
+        });
+        Some((Trainer::new(engine, spec, client, monitor), masters, workload))
+    }
+
+    #[test]
+    fn lr_training_reduces_loss() {
+        let Some((trainer, masters, mut workload)) = build(ModelKind::Lr) else { return };
+        let b = trainer.spec().batch_train;
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for step in 0..30 {
+            let samples = workload.batch(step * 1_000, b);
+            let out = trainer.train_batch(&samples).unwrap();
+            assert!(out.loss.is_finite());
+            if step == 0 {
+                first = out.loss;
+            }
+            last = out.loss;
+        }
+        assert!(last < first, "loss {first} -> {last}");
+        assert!(masters.iter().map(|m| m.total_rows()).sum::<usize>() > 0);
+    }
+
+    #[test]
+    fn fm_training_runs_and_monitors() {
+        let Some((trainer, _masters, mut workload)) = build(ModelKind::Fm) else { return };
+        let b = trainer.spec().batch_train;
+        for step in 0..10 {
+            let samples = workload.batch(step * 1_000, b);
+            let out = trainer.train_batch(&samples).unwrap();
+            assert_eq!(out.preds.len(), b);
+            assert!(out.preds.iter().all(|p| (0.0..=1.0).contains(p)));
+        }
+    }
+
+    #[test]
+    fn wrong_batch_size_rejected() {
+        let Some((trainer, _, mut workload)) = build(ModelKind::Lr) else { return };
+        let samples = workload.batch(0, 3);
+        assert!(trainer.train_batch(&samples).is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! Integration: the distributed deployment shape — every hop over real
+//! TCP RPC (broker, master shards, slave replicas, trainer, predictor),
+//! exactly what the `weips` CLI roles launch as separate processes.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use weips::config::{GatherMode, ModelKind, ModelSpec};
+use weips::monitor::Monitor;
+use weips::net::{Channel, RpcServer};
+use weips::queue::{Queue, QueueService, RemoteLog, SyncLog};
+use weips::replica::{BalancePolicy, ReplicaGroup};
+use weips::runtime::Engine;
+use weips::sample::{Workload, WorkloadConfig};
+use weips::server::master::{MasterService, MasterShard};
+use weips::server::slave::{SlaveService, SlaveShard};
+use weips::sync::{Gather, Pusher, Router, Scatter, ServingWeights};
+use weips::util::clock::SystemClock;
+use weips::worker::{Predictor, ShardedClient, SlaveClient, SlaveEndpoint, Trainer};
+
+const TIMEOUT: Duration = Duration::from_secs(10);
+const MASTERS: u32 = 2;
+const SLAVES: u32 = 2;
+
+fn artifacts_ready() -> bool {
+    weips::runtime::default_artifacts_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn full_stack_over_tcp() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Arc::new(Engine::load(weips::runtime::default_artifacts_dir()).unwrap());
+    let spec = ModelSpec::derive("ctr", ModelKind::Fm, engine.config());
+    let clock = Arc::new(SystemClock);
+
+    // --- broker process ---
+    let queue = Queue::default();
+    let topic = queue.create_topic("sync.ctr", MASTERS as usize).unwrap();
+    let broker_srv = RpcServer::serve("127.0.0.1:0", Arc::new(QueueService { topic })).unwrap();
+    let broker_addr = broker_srv.addr().to_string();
+
+    // --- master processes (shard server + sync pump) ---
+    let mut master_addrs = Vec::new();
+    let mut master_servers = Vec::new();
+    let mut pumps = Vec::new();
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    for shard in 0..MASTERS {
+        let master = Arc::new(
+            MasterShard::new(shard, spec.clone(), Some(engine.clone()), 1, clock.clone()).unwrap(),
+        );
+        let srv = RpcServer::serve(
+            "127.0.0.1:0",
+            Arc::new(MasterService { shard: master.clone(), store: None }),
+        )
+        .unwrap();
+        master_addrs.push(srv.addr().to_string());
+        master_servers.push(srv);
+        // Sync pump thread: gather -> remote broker.
+        let log: Arc<dyn SyncLog> = Arc::new(
+            RemoteLog::connect(Channel::remote(&broker_addr, TIMEOUT)).unwrap(),
+        );
+        let mut gather = Gather::new(master.clone(), GatherMode::Realtime, clock.clone());
+        let pusher = Pusher::new(log, shard);
+        let stop2 = stop.clone();
+        pumps.push(std::thread::spawn(move || {
+            while !stop2.load(std::sync::atomic::Ordering::Acquire) {
+                let batches = gather.poll();
+                if batches.is_empty() {
+                    std::thread::sleep(Duration::from_millis(2));
+                } else {
+                    pusher.push_all(&batches).unwrap();
+                }
+            }
+        }));
+    }
+
+    // --- slave processes (replica server + scatter pump) ---
+    let transform = Arc::new(ServingWeights::new(
+        spec.sparse
+            .iter()
+            .map(|t| (t.name.clone(), spec.optimizer_for(&t.name).unwrap(), t.dim))
+            .collect(),
+    ));
+    let tables: Vec<(String, usize)> =
+        spec.sparse.iter().map(|t| (t.name.clone(), t.dim)).collect();
+    let dense: Vec<(String, usize)> =
+        spec.dense.iter().map(|d| (d.name.clone(), d.len)).collect();
+    let mut groups = Vec::new();
+    let mut slave_servers = Vec::new();
+    for shard in 0..SLAVES {
+        let slave = Arc::new(SlaveShard::new(
+            shard,
+            0,
+            "ctr",
+            tables.clone(),
+            dense.clone(),
+            transform.clone(),
+            Router::new(SLAVES),
+        ));
+        let srv =
+            RpcServer::serve("127.0.0.1:0", Arc::new(SlaveService { shard: slave.clone() }))
+                .unwrap();
+        let addr = srv.addr().to_string();
+        slave_servers.push(srv);
+        let log: Arc<dyn SyncLog> = Arc::new(
+            RemoteLog::connect(Channel::remote(&broker_addr, TIMEOUT)).unwrap(),
+        );
+        let mut scatter = Scatter::new(log, slave, MASTERS, SLAVES, clock.clone());
+        let stop2 = stop.clone();
+        pumps.push(std::thread::spawn(move || {
+            while !stop2.load(std::sync::atomic::Ordering::Acquire) {
+                if scatter.poll(Duration::from_millis(10)).unwrap() == 0 {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+        }));
+        groups.push(Arc::new(ReplicaGroup::new(
+            vec![Arc::new(SlaveEndpoint::remote(Channel::remote(&addr, TIMEOUT)))],
+            BalancePolicy::RoundRobin,
+        )));
+    }
+
+    // --- trainer process ---
+    let channels: Vec<Channel> =
+        master_addrs.iter().map(|a| Channel::remote(a, TIMEOUT)).collect();
+    let monitor = Arc::new(Monitor::new(2048));
+    let trainer = Trainer::new(
+        engine.clone(),
+        spec.clone(),
+        ShardedClient::new("ctr", channels),
+        monitor.clone(),
+    );
+    let mut workload = Workload::new(WorkloadConfig {
+        fields: spec.fields,
+        ids_per_field: 500,
+        seed: 31,
+        ..Default::default()
+    });
+    let mut losses = Vec::new();
+    for step in 0..20u64 {
+        let samples = workload.batch(step * 100, spec.batch_train);
+        losses.push(trainer.train_batch(&samples).unwrap().loss);
+    }
+    assert!(losses.iter().all(|l| l.is_finite()));
+    assert!(losses.last().unwrap() < losses.first().unwrap(), "{losses:?}");
+
+    // --- predictor process (waits for sync to catch up) ---
+    let predictor = Predictor::new(engine, spec.clone(), SlaveClient::new("ctr", groups));
+    let reqs: Vec<Vec<u64>> = workload
+        .batch(10_000, 8)
+        .into_iter()
+        .map(|s| s.ids)
+        .collect();
+    // Give the pumps a moment to flush everything through TCP.
+    let deadline = std::time::Instant::now() + Duration::from_secs(15);
+    let preds = loop {
+        let preds = predictor.predict(&reqs).unwrap();
+        if preds.iter().any(|p| (p - 0.5).abs() > 1e-3) || std::time::Instant::now() > deadline {
+            break preds;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert_eq!(preds.len(), 8);
+    assert!(
+        preds.iter().any(|p| (p - 0.5).abs() > 1e-3),
+        "slaves never received synced weights over TCP: {preds:?}"
+    );
+
+    stop.store(true, std::sync::atomic::Ordering::Release);
+    for p in pumps {
+        let _ = p.join();
+    }
+}

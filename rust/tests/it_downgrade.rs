@@ -1,0 +1,186 @@
+//! Integration: monitor + domino downgrade (§4.3).
+//!
+//! Train to a healthy model, checkpoint, corrupt the parameters (the
+//! "abnormal change"), watch the progressive-validation window AUC
+//! collapse, let the smoothed trigger fire, and verify the rollback
+//! restores both master and serving state to the stable version.
+
+use weips::config::{ClusterConfig, GatherMode, ModelKind};
+use weips::coordinator::{ClusterOpts, LocalCluster};
+use weips::downgrade::SwitchStrategy;
+use weips::sample::WorkloadConfig;
+
+fn artifacts_ready() -> bool {
+    weips::runtime::default_artifacts_dir().join("manifest.json").exists()
+}
+
+fn cluster(threshold: f64) -> LocalCluster {
+    LocalCluster::new(ClusterOpts {
+        cluster: ClusterConfig {
+            model_kind: ModelKind::Lr,
+            master_shards: 2,
+            slave_shards: 1,
+            slave_replicas: 2,
+            queue_partitions: 2,
+            gather_mode: GatherMode::Realtime,
+            ..Default::default()
+        },
+        workload: WorkloadConfig {
+            ids_per_field: 300,
+            zipf_s: 1.3,
+            seed: 5,
+            ..Default::default()
+        },
+        trigger_threshold: threshold,
+        trigger_smooth: 3,
+        switch_strategy: SwitchStrategy::LatestStable,
+        ..Default::default()
+    })
+    .expect("cluster")
+}
+
+#[test]
+fn corruption_detected_and_rolled_back() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let c = cluster(0.52);
+    // Train long enough for window AUC to be meaningfully above 0.52.
+    for _ in 0..120 {
+        c.train_step().unwrap();
+        c.sync_tick().unwrap();
+    }
+    c.flush_sync().unwrap();
+    let healthy = c.monitor.snapshot();
+    assert!(
+        healthy.window_auc > 0.54,
+        "model failed to learn (window auc {})",
+        healthy.window_auc
+    );
+    let stable = c.checkpoint().unwrap();
+
+    // Inject corruption; it streams to slaves like real updates.
+    c.corrupt_model().unwrap();
+    c.flush_sync().unwrap();
+
+    // Keep training (progressive validation now sees corrupted pulls);
+    // control ticks evaluate the smoothed trigger.
+    let mut fired = None;
+    for _ in 0..60 {
+        c.train_step().unwrap();
+        c.sync_tick().unwrap();
+        if let Some(plan) = c.control_tick().unwrap() {
+            fired = Some(plan);
+            break;
+        }
+    }
+    let plan = fired.expect("domino trigger never fired on corrupted model");
+    // The corruption happened *after* the stable checkpoint with no newer
+    // checkpoint in between, so the rollback lands back on `stable` (the
+    // from/target versions coincide: live drift, not checkpoint lineage).
+    assert_eq!(plan.target_version, stable);
+    assert_eq!(c.vm.current(), stable);
+
+    // Serving state equals the stable checkpoint's transformed weights and
+    // training resumes cleanly.
+    for _ in 0..5 {
+        c.train_step().unwrap();
+        c.sync_tick().unwrap();
+    }
+    let after = c.monitor.snapshot();
+    assert!(after.samples > healthy.samples);
+}
+
+#[test]
+fn plain_threshold_false_alarms_vs_smoothed() {
+    // Unit-style comparison at integration scope: identical noisy metric
+    // stream, plain trigger fires, smoothed does not (§4.3.2a).
+    use weips::monitor::{PlainThreshold, SmoothedThreshold, Trigger};
+    let noisy = [0.76, 0.69, 0.77, 0.75, 0.68, 0.78, 0.74, 0.69, 0.77];
+    let mut plain = PlainThreshold { threshold: 0.70 };
+    let mut smoothed = SmoothedThreshold::new(0.70, 3);
+    let plain_fires = noisy.iter().filter(|v| plain.observe(**v)).count();
+    let smoothed_fires = noisy.iter().filter(|v| smoothed.observe(**v)).count();
+    assert!(plain_fires >= 3, "plain should false-alarm: {plain_fires}");
+    assert_eq!(smoothed_fires, 0, "smoothed must ignore isolated dips");
+}
+
+#[test]
+fn manual_version_switch() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let c = cluster(0.01); // trigger effectively disabled
+    for _ in 0..30 {
+        c.train_step().unwrap();
+        c.sync_tick().unwrap();
+    }
+    c.flush_sync().unwrap();
+    let v1 = c.checkpoint().unwrap();
+    for _ in 0..30 {
+        c.train_step().unwrap();
+        c.sync_tick().unwrap();
+    }
+    c.flush_sync().unwrap();
+    let v2 = c.checkpoint().unwrap();
+    assert!(v2 > v1);
+    // Operator pins the older version manually (§4.3.2 "the person can
+    // specify the appropriate version ... manually").
+    c.switch_version(v1).unwrap();
+    assert_eq!(c.vm.current(), v1);
+    // Serving still works on the pinned version.
+    let preds = c.predict(&c.serving_requests(4)).unwrap();
+    assert_eq!(preds.len(), 4);
+}
+
+#[test]
+fn optimal_metric_strategy_picks_best_checkpoint() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let c = LocalCluster::new(ClusterOpts {
+        cluster: ClusterConfig {
+            model_kind: ModelKind::Lr,
+            master_shards: 2,
+            slave_shards: 1,
+            slave_replicas: 1,
+            queue_partitions: 2,
+            gather_mode: GatherMode::Realtime,
+            ..Default::default()
+        },
+        workload: WorkloadConfig { ids_per_field: 300, zipf_s: 1.3, seed: 9, ..Default::default() },
+        switch_strategy: SwitchStrategy::OptimalMetric,
+        trigger_threshold: 0.0,
+        ..Default::default()
+    })
+    .unwrap();
+    // Three checkpoints with improving metric.
+    for _ in 0..3 {
+        for _ in 0..40 {
+            c.train_step().unwrap();
+            c.sync_tick().unwrap();
+        }
+        c.flush_sync().unwrap();
+        c.checkpoint().unwrap();
+    }
+    let plan = c
+        .vm
+        .plan(&c.store, SwitchStrategy::OptimalMetric)
+        .expect("candidates exist");
+    // The best-metric candidate should be the latest (metric improved).
+    let manifests: Vec<_> = c
+        .store
+        .list_versions("ctr")
+        .into_iter()
+        .filter(|v| *v <= c.vm.current())
+        .map(|v| c.store.load_manifest("ctr", v).unwrap())
+        .collect();
+    let best = manifests
+        .iter()
+        .max_by(|a, b| a.metric.partial_cmp(&b.metric).unwrap())
+        .unwrap();
+    assert_eq!(plan.target_version, best.version);
+}

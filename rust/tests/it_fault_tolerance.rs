@@ -1,0 +1,186 @@
+//! Integration: multi-level fault tolerance (§4.2).
+//!
+//! Hot backup: a slave replica dies, serving continues through its peers
+//! and the replica catches back up via full sync + offset replay.
+//! Cold backup: a master shard crashes and recovers *partially* (only
+//! that shard) from checkpoint + its own queue partition's incremental
+//! backup, restoring post-checkpoint updates too.
+
+use weips::config::{ClusterConfig, GatherMode, ModelKind};
+use weips::coordinator::{ClusterOpts, LocalCluster};
+use weips::proto::SparsePull;
+use weips::sample::WorkloadConfig;
+
+fn artifacts_ready() -> bool {
+    weips::runtime::default_artifacts_dir().join("manifest.json").exists()
+}
+
+fn cluster() -> LocalCluster {
+    LocalCluster::new(ClusterOpts {
+        cluster: ClusterConfig {
+            model_kind: ModelKind::Lr,
+            master_shards: 4,
+            slave_shards: 2,
+            slave_replicas: 3,
+            queue_partitions: 4,
+            gather_mode: GatherMode::Realtime,
+            ..Default::default()
+        },
+        workload: WorkloadConfig { ids_per_field: 1_000, seed: 21, ..Default::default() },
+        ..Default::default()
+    })
+    .expect("cluster")
+}
+
+#[test]
+fn slave_failover_keeps_serving_and_recovery_catches_up() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let c = cluster();
+    for _ in 0..8 {
+        c.train_step().unwrap();
+        c.sync_tick().unwrap();
+    }
+    c.flush_sync().unwrap();
+    c.checkpoint().unwrap();
+
+    // Kill replica 0 of both shards: predictions must still succeed.
+    c.kill_slave(0, 0);
+    c.kill_slave(1, 0);
+    let reqs = c.serving_requests(8);
+    let preds = c.predict(&reqs).unwrap();
+    assert_eq!(preds.len(), 8);
+
+    // Train more while the replica is down (it misses these updates).
+    for _ in 0..5 {
+        c.train_step().unwrap();
+        c.sync_tick().unwrap();
+    }
+    c.flush_sync().unwrap();
+
+    // Recover replica (0,0): full sync from checkpoint + replay.
+    c.recover_slave(0, 0).unwrap();
+    let healthy = &c.slaves[0][1];
+    let recovered = &c.slaves[0][0];
+    assert!(recovered.is_healthy());
+
+    // Drain any remaining queue tail for the recovered replica.
+    c.flush_sync().unwrap();
+    // Same rows served as a replica that never died.
+    assert_eq!(recovered.total_rows(), healthy.total_rows());
+    // Spot-check value equality on the healthy replica's ids.
+    let reqs = c.serving_requests(16);
+    for ids in &reqs {
+        for &id in ids {
+            let router = weips::sync::Router::new(c.cfg.slave_shards);
+            if router.shard_of(id) != 0 {
+                continue;
+            }
+            let pull = |s: &std::sync::Arc<weips::server::SlaveShard>| {
+                s.sparse_pull(&SparsePull {
+                    model: "ctr".into(),
+                    table: "w".into(),
+                    ids: vec![id],
+                    slot: "w".into(),
+                })
+                .unwrap()
+                .values[0]
+            };
+            assert!((pull(recovered) - pull(healthy)).abs() < 1e-6, "id {id}");
+        }
+    }
+}
+
+#[test]
+fn all_replicas_down_is_unavailable_not_wrong() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let c = cluster();
+    for _ in 0..3 {
+        c.train_step().unwrap();
+    }
+    c.flush_sync().unwrap();
+    for r in 0..3 {
+        c.kill_slave(0, r);
+    }
+    let reqs = c.serving_requests(4);
+    // Some requests route to shard 0 -> must error, not return stale junk.
+    let result = c.predict(&reqs);
+    assert!(result.is_err(), "predictions served with no healthy replica");
+}
+
+#[test]
+fn master_partial_recovery_restores_post_checkpoint_updates() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut c = cluster();
+    for _ in 0..6 {
+        c.train_step().unwrap();
+        c.sync_tick().unwrap();
+    }
+    c.flush_sync().unwrap();
+    c.checkpoint().unwrap();
+    // Post-checkpoint updates (the incremental backup must capture these).
+    for _ in 0..6 {
+        c.train_step().unwrap();
+        c.sync_tick().unwrap();
+    }
+    c.flush_sync().unwrap();
+
+    let victim = 2usize;
+    let reference = c.masters[victim].snapshot();
+    let rows_before = c.crash_master(victim).unwrap();
+    assert!(rows_before > 0);
+    assert_eq!(c.masters[victim].total_rows(), 0);
+
+    c.recover_master(victim).unwrap();
+    let recovered_rows = c.masters[victim].total_rows();
+    assert_eq!(
+        recovered_rows, rows_before,
+        "partial recovery row count {recovered_rows} != pre-crash {rows_before}"
+    );
+    // Value-level equality vs the pre-crash snapshot.
+    assert_eq!(
+        c.masters[victim].snapshot().len(),
+        reference.len(),
+        "snapshot shape differs after recovery"
+    );
+    // Other shards untouched (partial recovery, not cluster restart).
+    for (i, m) in c.masters.iter().enumerate() {
+        if i != victim {
+            assert!(m.total_rows() > 0);
+        }
+    }
+    // Training continues after recovery.
+    for _ in 0..2 {
+        c.train_step().unwrap();
+    }
+}
+
+#[test]
+fn checkpoint_versions_rotate_with_gc() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let c = cluster();
+    for round in 0..8 {
+        for _ in 0..2 {
+            c.train_step().unwrap();
+        }
+        c.flush_sync().unwrap();
+        let v = c.checkpoint().unwrap();
+        assert_eq!(v, round + 1);
+    }
+    let versions = c.store.list_versions("ctr");
+    // keep=5 local + remote_every=4 replicated survivors.
+    assert!(versions.len() >= 5, "{versions:?}");
+    assert!(versions.contains(&8));
+    assert!(versions.contains(&4), "remote-replicated v4 survives: {versions:?}");
+}

@@ -1,0 +1,230 @@
+//! Integration: heterogeneous slave types (§1.2.1, §4.1.4b).
+//!
+//! "The same inference service corresponding to the same model may have
+//! different predictions for various business scenarios ... some generate
+//! features based on the index input by the user." One master cluster
+//! feeds two *different* slave types from the same sync stream:
+//!
+//! - a ranking slave (ServingWeights transform: every table's `w`);
+//! - an embedding slave (EmbeddingOnly transform: only the factor table,
+//!   for nearest-neighbour / feature-generation queries).
+//!
+//! Both consume the identical queue; the transform screens tables per
+//! slave type — the paper's "data screening and data conversion".
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use weips::config::{ModelKind, ModelSpec};
+use weips::proto::{SparsePull, SparsePush};
+use weips::queue::Queue;
+use weips::runtime::ModelConfig;
+use weips::server::master::MasterShard;
+use weips::server::slave::SlaveShard;
+use weips::sync::{EmbeddingOnly, Gather, Pusher, Router, Scatter, ServingWeights};
+use weips::util::clock::ManualClock;
+
+fn spec() -> ModelSpec {
+    let cfg = ModelConfig {
+        batch_train: 8,
+        batch_predict: 2,
+        fields: 4,
+        dim: 4,
+        hidden: 8,
+        ftrl_block_rows: 64,
+        ftrl_alpha: 0.1,
+        ftrl_beta: 1.0,
+        ftrl_l1: 0.01,
+        ftrl_l2: 1.0,
+    };
+    ModelSpec::derive("ctr", ModelKind::Fm, &cfg)
+}
+
+#[test]
+fn one_stream_feeds_ranking_and_embedding_slaves() {
+    let spec = spec();
+    let clock = Arc::new(ManualClock::new(0));
+    let master = Arc::new(MasterShard::new(0, spec.clone(), None, 1, clock.clone()).unwrap());
+
+    // Train some ids on both tables.
+    for id in 0..50u64 {
+        master
+            .sparse_push(&SparsePush {
+                model: "ctr".into(),
+                table: "w".into(),
+                ids: vec![id],
+                grads: vec![1.5],
+            })
+            .unwrap();
+        master
+            .sparse_push(&SparsePush {
+                model: "ctr".into(),
+                table: "v".into(),
+                ids: vec![id],
+                grads: vec![0.5, -0.5, 0.25, -0.25],
+            })
+            .unwrap();
+    }
+
+    // One queue, one gather/pusher.
+    let queue = Queue::default();
+    let topic = queue.create_topic("sync.ctr", 1).unwrap();
+    let mut gather = Gather::new(
+        master.clone(),
+        weips::config::GatherMode::Realtime,
+        clock.clone(),
+    );
+    let pusher = Pusher::new(topic.clone(), 0);
+    pusher.push_all(&gather.flush_now()).unwrap();
+
+    // Ranking slave: serves w of both tables.
+    let ftrl_w = spec.optimizer_for("w").unwrap();
+    let ftrl_v = spec.optimizer_for("v").unwrap();
+    let ranking = Arc::new(SlaveShard::new(
+        0,
+        0,
+        "ctr",
+        vec![("w".into(), 1), ("v".into(), 4)],
+        vec![("bias".into(), 1)],
+        Arc::new(ServingWeights::new(vec![
+            ("w".into(), ftrl_w.clone(), 1),
+            ("v".into(), ftrl_v.clone(), 4),
+        ])),
+        Router::new(1),
+    ));
+    // Embedding slave: screens everything except the factor table.
+    let embedding = Arc::new(SlaveShard::new(
+        0,
+        0,
+        "ctr",
+        vec![("v".into(), 4)],
+        vec![],
+        Arc::new(EmbeddingOnly::new("v", ftrl_v, 4)),
+        Router::new(1),
+    ));
+
+    let mut sc_rank = Scatter::new(topic.clone(), ranking.clone(), 1, 1, clock.clone());
+    let mut sc_emb = Scatter::new(topic.clone(), embedding.clone(), 1, 1, clock.clone());
+    sc_rank.poll(Duration::ZERO).unwrap();
+    sc_emb.poll(Duration::ZERO).unwrap();
+
+    // Ranking slave holds both tables' rows.
+    assert_eq!(ranking.total_rows(), 100);
+    // Embedding slave screened the w table: only the 50 factor rows.
+    assert_eq!(embedding.total_rows(), 50);
+    // 50 screened w-entries + the screened dense "bias" snapshot batch.
+    assert_eq!(
+        embedding.metrics.filtered_entries.load(std::sync::atomic::Ordering::Relaxed),
+        51
+    );
+
+    // Embedding queries return the factor vector the master trained.
+    let master_v = master
+        .sparse_pull(&SparsePull {
+            model: "ctr".into(),
+            table: "v".into(),
+            ids: vec![7],
+            slot: "w".into(),
+        })
+        .unwrap();
+    let emb_v = embedding
+        .sparse_pull(&SparsePull {
+            model: "ctr".into(),
+            table: "v".into(),
+            ids: vec![7],
+            slot: "w".into(),
+        })
+        .unwrap();
+    assert_eq!(master_v.values, emb_v.values);
+    assert!(emb_v.values.iter().any(|x| *x != 0.0));
+    // The w table does not exist on the embedding slave at all.
+    assert!(embedding
+        .sparse_pull(&SparsePull {
+            model: "ctr".into(),
+            table: "w".into(),
+            ids: vec![7],
+            slot: "w".into(),
+        })
+        .is_err());
+
+    // Deletes propagate to both types from the same stream.
+    master.expire_features(0); // no-op (ttl 0)
+    {
+        // Force-delete id 7 via collector (feature filter path).
+        let idx = master.table_index("v").unwrap();
+        let mut state_touch = Vec::new();
+        master.collector().drain(&mut state_touch); // clear residue
+        master.collector().record_deletes(idx, &[7]);
+    }
+    pusher.push_all(&gather.flush_now()).unwrap();
+    sc_rank.poll(Duration::ZERO).unwrap();
+    sc_emb.poll(Duration::ZERO).unwrap();
+    let gone = embedding
+        .sparse_pull(&SparsePull {
+            model: "ctr".into(),
+            table: "v".into(),
+            ids: vec![7],
+            slot: "w".into(),
+        })
+        .unwrap();
+    assert!(gone.values.iter().all(|x| *x == 0.0), "embedding row not deleted");
+    assert_eq!(ranking.total_rows(), 99);
+    assert_eq!(embedding.total_rows(), 49);
+}
+
+#[test]
+fn full_rows_transform_supports_model_evaluation_slaves() {
+    // A model-evaluation slave mirrors full optimizer state (§4.1.4b "can
+    // satisfy model evaluation ... or other embedding queries").
+    use weips::sync::FullRows;
+    let spec = spec();
+    let clock = Arc::new(ManualClock::new(0));
+    let master = Arc::new(MasterShard::new(0, spec.clone(), None, 1, clock.clone()).unwrap());
+    master
+        .sparse_push(&SparsePush {
+            model: "ctr".into(),
+            table: "w".into(),
+            ids: vec![1, 2],
+            grads: vec![2.0, -2.0],
+        })
+        .unwrap();
+
+    let queue = Queue::default();
+    let topic = queue.create_topic("sync.ctr", 1).unwrap();
+    let mut gather =
+        Gather::new(master.clone(), weips::config::GatherMode::Realtime, clock.clone());
+    let pusher = Pusher::new(topic.clone(), 0);
+    pusher.push_all(&gather.flush_now()).unwrap();
+
+    let eval_slave = Arc::new(SlaveShard::new(
+        0,
+        0,
+        "ctr",
+        vec![("w".into(), 3)], // full FTRL row width (z, n, w @ dim 1)
+        vec![],
+        Arc::new(FullRows::new(vec![("w".into(), 3)])),
+        Router::new(1),
+    ));
+    let mut sc = Scatter::new(topic, eval_slave.clone(), 1, 1, clock);
+    sc.poll(Duration::ZERO).unwrap();
+
+    // The eval slave sees the complete (z, n, w) row, not just w.
+    let full = eval_slave
+        .sparse_pull(&SparsePull {
+            model: "ctr".into(),
+            table: "w".into(),
+            ids: vec![1],
+            slot: "w".into(),
+        })
+        .unwrap();
+    assert_eq!(full.width, 3);
+    let master_row = master
+        .sparse_pull(&SparsePull {
+            model: "ctr".into(),
+            table: "w".into(),
+            ids: vec![1],
+            slot: "*".into(),
+        })
+        .unwrap();
+    assert_eq!(full.values, master_row.values);
+}

@@ -1,0 +1,214 @@
+//! Integration: heterogeneous-cluster migration + property tests on
+//! coordinator invariants (dynamic routing, §4.2.1d).
+
+use std::sync::Arc;
+
+use weips::config::{ModelKind, ModelSpec};
+use weips::proto::{SparsePull, SparsePush};
+use weips::runtime::ModelConfig;
+use weips::server::master::MasterShard;
+use weips::sync::Router;
+use weips::util::clock::ManualClock;
+use weips::util::prop::{check, PairOf, U64Range, VecOf};
+
+fn spec() -> ModelSpec {
+    let cfg = ModelConfig {
+        batch_train: 8,
+        batch_predict: 2,
+        fields: 4,
+        dim: 2,
+        hidden: 8,
+        ftrl_block_rows: 64,
+        ftrl_alpha: 0.05,
+        ftrl_beta: 1.0,
+        ftrl_l1: 1.0,
+        ftrl_l2: 1.0,
+    };
+    ModelSpec::derive("ctr", ModelKind::Fm, &cfg)
+}
+
+fn build_cluster(shards: u32) -> Vec<Arc<MasterShard>> {
+    let clock = Arc::new(ManualClock::new(0));
+    (0..shards)
+        .map(|i| Arc::new(MasterShard::new(i, spec(), None, 1, clock.clone()).unwrap()))
+        .collect()
+}
+
+fn train_ids(cluster: &[Arc<MasterShard>], ids: &[u64]) {
+    let router = Router::new(cluster.len() as u32);
+    for &id in ids {
+        let m = &cluster[router.shard_of(id) as usize];
+        m.sparse_push(&SparsePush {
+            model: "ctr".into(),
+            table: "w".into(),
+            ids: vec![id],
+            grads: vec![(id % 13) as f32 * 0.3 + 0.5],
+        })
+        .unwrap();
+    }
+}
+
+fn migrate(src: &[Arc<MasterShard>], dst: &[Arc<MasterShard>]) -> usize {
+    let router = Router::new(dst.len() as u32);
+    let mut moved = 0;
+    for s in src {
+        let snap = s.snapshot();
+        for (di, d) in dst.iter().enumerate() {
+            moved += d.absorb(&snap, &router, di as u32).unwrap();
+        }
+    }
+    moved
+}
+
+#[test]
+fn migrate_10_to_20_shards_preserves_everything() {
+    let src = build_cluster(10);
+    let ids: Vec<u64> = (0..3_000u64).map(|i| i * 7 + 1).collect();
+    train_ids(&src, &ids);
+    let total_src: usize = src.iter().map(|m| m.total_rows()).sum();
+    assert_eq!(total_src, ids.len());
+
+    let dst = build_cluster(20);
+    let moved = migrate(&src, &dst);
+    assert_eq!(moved, ids.len());
+    assert_eq!(dst.iter().map(|m| m.total_rows()).sum::<usize>(), ids.len());
+
+    // Value-level equality through the new routing.
+    let src_router = Router::new(10);
+    let dst_router = Router::new(20);
+    for &id in ids.iter().step_by(37) {
+        let a = src[src_router.shard_of(id) as usize]
+            .sparse_pull(&SparsePull {
+                model: "ctr".into(),
+                table: "w".into(),
+                ids: vec![id],
+                slot: "*".into(),
+            })
+            .unwrap();
+        let b = dst[dst_router.shard_of(id) as usize]
+            .sparse_pull(&SparsePull {
+                model: "ctr".into(),
+                table: "w".into(),
+                ids: vec![id],
+                slot: "*".into(),
+            })
+            .unwrap();
+        assert_eq!(a, b, "id {id}");
+    }
+}
+
+#[test]
+fn migrate_down_20_to_3_shards() {
+    let src = build_cluster(20);
+    let ids: Vec<u64> = (0..2_000u64).collect();
+    train_ids(&src, &ids);
+    let dst = build_cluster(3);
+    assert_eq!(migrate(&src, &dst), ids.len());
+    // Every id readable at its new home with nonzero state.
+    let dst_router = Router::new(3);
+    for &id in ids.iter().step_by(101) {
+        let v = dst[dst_router.shard_of(id) as usize]
+            .sparse_pull(&SparsePull {
+                model: "ctr".into(),
+                table: "w".into(),
+                ids: vec![id],
+                slot: "z".into(),
+            })
+            .unwrap();
+        assert!(v.values[0] != 0.0, "id {id} lost state");
+    }
+}
+
+#[test]
+fn prop_migration_is_total_and_exclusive() {
+    // For any (src shards, dst shards, ids): after migration every id is
+    // owned by exactly one destination shard and no rows are duplicated.
+    check(
+        "migration-total-exclusive",
+        &PairOf(PairOf(U64Range(1, 8), U64Range(1, 8)), VecOf(U64Range(0, 1 << 40), 60)),
+        15, // each case builds real shard objects; keep the count modest
+        |((s, d), raw_ids)| {
+            let mut ids = raw_ids.clone();
+            ids.sort();
+            ids.dedup();
+            let src = build_cluster(*s as u32);
+            train_ids(&src, &ids);
+            let dst = build_cluster(*d as u32);
+            let moved = migrate(&src, &dst);
+            if moved != ids.len() {
+                return Err(format!("moved {moved} of {}", ids.len()));
+            }
+            let total: usize = dst.iter().map(|m| m.total_rows()).sum();
+            if total != ids.len() {
+                return Err(format!("dst holds {total}, want {}", ids.len()));
+            }
+            // Exclusivity: each id present on exactly its routed shard.
+            let router = Router::new(*d as u32);
+            for &id in &ids {
+                for (i, m) in dst.iter().enumerate() {
+                    let has = m
+                        .sparse_pull(&SparsePull {
+                            model: "ctr".into(),
+                            table: "w".into(),
+                            ids: vec![id],
+                            slot: "z".into(),
+                        })
+                        .unwrap()
+                        .values[0]
+                        != 0.0;
+                    let should = router.shard_of(id) == i as u32;
+                    if has != should {
+                        return Err(format!("id {id} on shard {i}: has={has} should={should}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gather_dedup_is_last_write_wins() {
+    // Replaying a dirty-id stream through gather dedup must produce the
+    // same final slave state as applying every event in order.
+    use weips::sync::collector::{DirtyEvent, DirtyOp};
+    use weips::util::hash::FxHashMap;
+    use weips::util::prop::Strategy;
+    use weips::util::Rng;
+
+    struct Events;
+    impl Strategy for Events {
+        type Value = Vec<DirtyEvent>;
+        fn gen(&self, rng: &mut Rng) -> Self::Value {
+            let n = rng.gen_range(200) as usize;
+            (0..n)
+                .map(|_| DirtyEvent {
+                    table: 0,
+                    id: rng.gen_range(20),
+                    op: if rng.gen_bool(0.8) { DirtyOp::Update } else { DirtyOp::Delete },
+                })
+                .collect()
+        }
+    }
+    check("gather-lww", &Events, 300, |events| {
+        // Sequential truth.
+        let mut truth: FxHashMap<u64, DirtyOp> = FxHashMap::default();
+        for e in events {
+            truth.insert(e.id, e.op);
+        }
+        // Windowed dedup (what Gather::absorb does).
+        let mut window: FxHashMap<u64, DirtyOp> = FxHashMap::default();
+        for e in events {
+            window.insert(e.id, e.op);
+        }
+        if window.len() != truth.len() {
+            return Err("distinct id sets differ".into());
+        }
+        for (id, op) in &truth {
+            if window.get(id) != Some(op) {
+                return Err(format!("id {id}: {op:?} vs {:?}", window.get(id)));
+            }
+        }
+        Ok(())
+    });
+}
