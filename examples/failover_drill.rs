@@ -17,7 +17,7 @@ use weips::coordinator::{ClusterOpts, LocalCluster};
 use weips::downgrade::SwitchStrategy;
 use weips::sample::WorkloadConfig;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut cluster = LocalCluster::new(ClusterOpts {
         cluster: ClusterConfig {
             model_kind: ModelKind::Lr,

@@ -80,7 +80,7 @@ impl JoinedFeed {
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // Exercise the AOT Pallas FTRL path end-to-end (the TPU-representative
     // architecture). On CPU-interpret PJRT the scalar loop is faster below
     // a full kernel block, so the default crossover would bypass it — see

@@ -10,7 +10,7 @@ use weips::config::{ClusterConfig, GatherMode, ModelKind};
 use weips::coordinator::{ClusterOpts, LocalCluster};
 use weips::sample::WorkloadConfig;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // 1. Assemble the cluster: 4 master shards (training-facing), 2 slave
     //    shards x 2 replicas (serving-facing), streaming sync between them.
     let cluster = LocalCluster::new(ClusterOpts {

@@ -54,7 +54,7 @@ fn spot_check(a: &[Arc<MasterShard>], b: &[Arc<MasterShard>], ids: &[u64]) -> bo
     })
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let engine = Engine::load(weips::runtime::default_artifacts_dir())?;
     let spec = ModelSpec::derive("ctr", ModelKind::Fm, engine.config());
 

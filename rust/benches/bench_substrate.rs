@@ -89,7 +89,7 @@ fn main() {
         std::hint::black_box(SyncBatch::from_bytes(&encoded).unwrap());
     });
     let mut wire = Vec::new();
-    bench::run("compress (deflate-fast)", 2, 50, || {
+    bench::run("compress (lz-fast)", 2, 50, || {
         wire = maybe_compress(&encoded);
     });
     bench::metric(

@@ -2,10 +2,81 @@
 //! to the throughput with a large batch size ... the prediction serving
 //! stage is more sensitive to delay time, carry high QPS, set small batch
 //! size". One fused system must sustain both profiles.
+//!
+//! Also E3d: the lock-striping scaling curve — multi-threaded contended
+//! push/pull against one `StripedSparseTable` at 1 vs N stripes. This
+//! scenario needs no AOT artifacts and runs first; the cluster scenarios
+//! below are skipped when artifacts are absent.
+
+use std::sync::Arc;
 
 use weips::config::{ClusterConfig, GatherMode, ModelKind};
 use weips::coordinator::{ClusterOpts, LocalCluster};
+use weips::table::StripedSparseTable;
 use weips::util::bench;
+
+/// E3d: N writer + N reader threads hammer one table; every thread works
+/// a disjoint id range but all ranges hash across all stripes, so a
+/// single-lock table serializes everything while a striped one scales.
+/// Emits both the human table row and the one-line JSON shape.
+fn contended_push_pull() {
+    bench::header("E3d: contended push/pull vs lock stripes (dim 8, FTRL)");
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8).min(8);
+    let ids_per_thread = 2_048u64;
+    let rounds = 30u64;
+    let mut baseline_ops = 0.0f64;
+    for stripes in [1usize, 2, 8, 32] {
+        let ftrl = Arc::new(weips::optim::Ftrl::new(Default::default()));
+        let table = Arc::new(StripedSparseTable::new("v", 8, ftrl, 1, stripes));
+        // Pre-populate so the measurement is steady-state updates.
+        for t in 0..threads as u64 {
+            let ids: Vec<u64> = (t * ids_per_thread..(t + 1) * ids_per_thread).collect();
+            table.apply_batch(&ids, &vec![0.1f32; ids.len() * 8], 0);
+        }
+        let start = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for t in 0..threads as u64 {
+            let table = table.clone();
+            handles.push(std::thread::spawn(move || {
+                let ids: Vec<u64> = (t * ids_per_thread..(t + 1) * ids_per_thread).collect();
+                let grads = vec![0.1f32; ids.len() * 8];
+                let mut out = vec![0.0f32; ids.len() * 8];
+                for round in 0..rounds {
+                    if (t + round) % 2 == 0 {
+                        table.apply_batch(&ids, &grads, round);
+                    } else {
+                        table.pull_slot(&ids, "w", round, &mut out).unwrap();
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let elapsed = start.elapsed();
+        let total_ops = threads as u64 * rounds * ids_per_thread;
+        let ops_per_sec = total_ops as f64 / elapsed.as_secs_f64();
+        if stripes == 1 {
+            baseline_ops = ops_per_sec;
+        }
+        let speedup = if baseline_ops > 0.0 { ops_per_sec / baseline_ops } else { 1.0 };
+        bench::metric(
+            &format!("{threads} threads, {stripes:>2} stripes (row-ops/s)"),
+            format!("{ops_per_sec:>14.0}   ({speedup:.2}x vs 1 stripe)"),
+        );
+        bench::json_metric(
+            "contended_push_pull",
+            &[
+                ("threads", threads.to_string()),
+                ("stripes", stripes.to_string()),
+                ("ids_per_thread", ids_per_thread.to_string()),
+                ("rounds", rounds.to_string()),
+                ("ops_per_sec", format!("{ops_per_sec:.0}")),
+                ("speedup_vs_1_stripe", format!("{speedup:.3}")),
+            ],
+        );
+    }
+}
 
 fn cluster() -> LocalCluster {
     LocalCluster::new(ClusterOpts {
@@ -29,6 +100,12 @@ fn cluster() -> LocalCluster {
 }
 
 fn main() {
+    contended_push_pull();
+
+    if !weips::runtime::default_artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping cluster scenarios: run `make artifacts` first");
+        return;
+    }
     let c = cluster();
     let b_train = c.spec.batch_train;
     let b_pred = c.spec.batch_predict;

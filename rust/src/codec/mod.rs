@@ -1,5 +1,5 @@
 //! Binary wire/storage codec: bounds-checked reader/writer, varints,
-//! CRC-framed envelopes and optional deflate compression.
+//! CRC-framed envelopes and optional LZ compression.
 //!
 //! The paper's pusher "makes serialize and compress for the aggregated
 //! updated data" before handing it to the external queue (§4.1.3); this
@@ -279,12 +279,35 @@ pub trait Decode: Sized {
     }
 }
 
+/// CRC-32 (IEEE 802.3 polynomial, the `crc32fast::hash` contract) over a
+/// byte slice. Table-driven; the table is built once per process.
+pub fn crc32(data: &[u8]) -> u32 {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, entry) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *entry = c;
+        }
+        t
+    });
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
 /// Frame an encoded payload with `[len u32][crc32 u32]` for storage / wire
 /// transport. Detects truncation and corruption.
 pub fn frame(payload: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(payload.len() + 8);
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-    out.extend_from_slice(&crc32fast::hash(payload).to_le_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
     out.extend_from_slice(payload);
     out
 }
@@ -304,7 +327,7 @@ pub fn unframe(buf: &[u8]) -> Result<Option<(&[u8], usize)>> {
     }
     let crc = u32::from_le_bytes(buf[4..8].try_into().unwrap());
     let payload = &buf[8..8 + len];
-    if crc32fast::hash(payload) != crc {
+    if crc32(payload) != crc {
         return Err(Error::Codec("frame crc mismatch".into()));
     }
     Ok(Some((payload, 8 + len)))
@@ -390,6 +413,13 @@ mod tests {
         w.put_f32_slice(&vals);
         let bytes = w.into_bytes();
         assert_eq!(Reader::new(&bytes).get_f32_slice().unwrap(), vals);
+    }
+
+    #[test]
+    fn crc32_matches_reference_vector() {
+        // The canonical IEEE CRC-32 check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
     }
 
     #[test]

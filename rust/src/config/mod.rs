@@ -202,6 +202,10 @@ pub struct ClusterConfig {
     pub gather_mode: GatherMode,
     /// Feature entry filter threshold (observations before materializing).
     pub entry_threshold: u32,
+    /// Lock stripes per sparse table on master and slave shards (≥ 1).
+    /// More stripes = more push/pull/gather concurrency per shard; the
+    /// contended-throughput bench (`bench_throughput`) measures the curve.
+    pub table_stripes: u32,
     /// Feature expire TTL in ms (0 = never).
     pub feature_ttl_ms: u64,
     /// Checkpoint every ~this many ms (randomly jittered, §4.2.1a).
@@ -225,6 +229,7 @@ impl Default for ClusterConfig {
             queue_partitions: 4,
             gather_mode: GatherMode::Threshold(4096),
             entry_threshold: 1,
+            table_stripes: 8,
             feature_ttl_ms: 0,
             ckpt_interval_ms: 10_000,
             ckpt_keep: 5,
@@ -261,6 +266,11 @@ impl ClusterConfig {
         }
         if let Some(v) = doc.get_int("cluster", "entry_threshold") {
             c.entry_threshold = v as u32;
+        }
+        if let Some(v) = doc.get_int("cluster", "table_stripes") {
+            // Clamp on the signed value: a negative entry must not wrap
+            // into billions of stripes.
+            c.table_stripes = v.clamp(1, u32::MAX as i64) as u32;
         }
         if let Some(v) = doc.get_int("cluster", "feature_ttl_ms") {
             c.feature_ttl_ms = v as u64;
@@ -364,6 +374,7 @@ mod tests {
             model_kind = "deepfm"
             master_shards = 8
             gather_mode = "period:100"
+            table_stripes = 16
             "#,
         )
         .unwrap();
@@ -371,6 +382,7 @@ mod tests {
         assert_eq!(c.model_kind, ModelKind::DeepFm);
         assert_eq!(c.master_shards, 8);
         assert_eq!(c.gather_mode, GatherMode::Period(100));
+        assert_eq!(c.table_stripes, 16);
         assert_eq!(c.slave_shards, 2); // default preserved
     }
 }

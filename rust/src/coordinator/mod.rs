@@ -129,11 +129,12 @@ impl LocalCluster {
         let mut gathers = Vec::new();
         let mut pushers = Vec::new();
         for i in 0..cfg.master_shards {
-            let m = Arc::new(MasterShard::new(
+            let m = Arc::new(MasterShard::with_stripes(
                 i,
                 spec.clone(),
                 Some(engine.clone()),
                 cfg.entry_threshold,
+                cfg.table_stripes as usize,
                 clock.clone(),
             )?);
             gathers.push(Mutex::new(Gather::new(m.clone(), cfg.gather_mode, clock.clone())));
@@ -161,7 +162,7 @@ impl LocalCluster {
             let mut shard_scatters = Vec::new();
             let mut endpoints = Vec::new();
             for r in 0..cfg.slave_replicas {
-                let shard = Arc::new(SlaveShard::new(
+                let shard = Arc::new(SlaveShard::with_stripes(
                     s,
                     r,
                     &cfg.model_name,
@@ -169,6 +170,7 @@ impl LocalCluster {
                     dense_tables.clone(),
                     Arc::new(ServingWeights::new(transform_tables.clone())),
                     slave_router,
+                    cfg.table_stripes as usize,
                 ));
                 shard_scatters.push(Mutex::new(Scatter::new(
                     topic.clone(),
@@ -492,11 +494,12 @@ impl LocalCluster {
     /// Returns the dead shard's row count for verification.
     pub fn crash_master(&mut self, shard: usize) -> Result<usize> {
         let rows = self.masters[shard].total_rows();
-        let fresh = Arc::new(MasterShard::new(
+        let fresh = Arc::new(MasterShard::with_stripes(
             shard as u32,
             self.spec.clone(),
             Some(self.engine.clone()),
             self.cfg.entry_threshold,
+            self.cfg.table_stripes as usize,
             self.clock.clone(),
         )?);
         // Rewire: gather + trainer channels point at the new object.

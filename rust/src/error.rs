@@ -1,44 +1,69 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-implemented `Display`/`Error`; no derive
+//! crates in the offline build environment).
+
+use std::fmt;
 
 /// Errors produced by WeiPS subsystems.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Wire / checkpoint decoding failed.
-    #[error("codec error: {0}")]
     Codec(String),
     /// I/O error (sockets, checkpoint files, queue segments).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
     /// RPC-level failure (timeout, connection reset, remote fault).
-    #[error("rpc error: {0}")]
     Rpc(String),
     /// Request routed to a shard/partition that does not exist.
-    #[error("routing error: {0}")]
     Routing(String),
     /// Queue consumer asked for an offset outside the retained range.
-    #[error("offset out of range: {0}")]
     OffsetOutOfRange(String),
     /// Metadata store conflict (CAS failure / stale version).
-    #[error("meta conflict: {0}")]
     MetaConflict(String),
     /// Checkpoint missing or corrupt.
-    #[error("checkpoint error: {0}")]
     Checkpoint(String),
     /// PJRT / XLA runtime failure.
-    #[error("runtime error: {0}")]
     Runtime(String),
     /// Configuration file invalid.
-    #[error("config error: {0}")]
     Config(String),
     /// Node is not in a state where the operation is legal.
-    #[error("illegal state: {0}")]
     State(String),
     /// Referenced model/version/table is unknown.
-    #[error("not found: {0}")]
     NotFound(String),
     /// Service deliberately rejecting load (backpressure / degraded).
-    #[error("unavailable: {0}")]
     Unavailable(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Codec(m) => write!(f, "codec error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Rpc(m) => write!(f, "rpc error: {m}"),
+            Error::Routing(m) => write!(f, "routing error: {m}"),
+            Error::OffsetOutOfRange(m) => write!(f, "offset out of range: {m}"),
+            Error::MetaConflict(m) => write!(f, "meta conflict: {m}"),
+            Error::Checkpoint(m) => write!(f, "checkpoint error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::State(m) => write!(f, "illegal state: {m}"),
+            Error::NotFound(m) => write!(f, "not found: {m}"),
+            Error::Unavailable(m) => write!(f, "unavailable: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
@@ -65,5 +90,6 @@ mod tests {
         let ioe = std::io::Error::new(std::io::ErrorKind::Other, "boom");
         let e: Error = ioe.into();
         assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

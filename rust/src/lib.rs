@@ -11,6 +11,22 @@
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
+// Style lints deliberately relaxed: this crate reimplements ecosystem
+// substrates (hash maps, histograms, codecs, a prop-test harness) whose
+// idiomatic shapes trip pedantic style checks; correctness lints stay on
+// and CI runs `clippy -- -D warnings` over what remains.
+#![allow(
+    clippy::inherent_to_string,
+    clippy::len_without_is_empty,
+    clippy::new_without_default,
+    clippy::needless_range_loop,
+    clippy::manual_range_contains,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::should_implement_trait,
+    clippy::result_large_err
+)]
+
 pub mod cli;
 pub mod codec;
 pub mod config;

@@ -5,6 +5,13 @@
 //! kernel for large blocks), feeds dirty ids to the sync [`Collector`],
 //! and snapshots itself for cold-backup checkpoints. Fault tolerance is
 //! checkpoint-based (§4.2.1) — the scheduler drives save/load.
+//!
+//! Sparse state lives in [`StripedSparseTable`]s: sparse pushes and pulls
+//! take only the outer state lock in *read* mode plus the stripe locks
+//! their ids hash to, so concurrent trainer pushes, serving pulls, expire
+//! passes and gather snapshots on different stripes never serialize on a
+//! single table lock. The outer `RwLock` is written only by dense updates
+//! and whole-shard operations (restore / absorb / dense sync bookkeeping).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
@@ -18,7 +25,7 @@ use crate::runtime::Engine;
 use crate::server::methods;
 use crate::storage::CheckpointStore;
 use crate::sync::collector::Collector;
-use crate::table::{aggregate_grads, DenseOpt, DenseTable, SparseTable};
+use crate::table::{aggregate_grads, DenseOpt, DenseTable, SparseTable, StripedSparseTable};
 use crate::util::clock::Clock;
 use crate::{Error, Result};
 
@@ -28,18 +35,18 @@ use crate::{Error, Result};
 /// scalar loop wins below a full block (EXPERIMENTS.md §Perf — on a real
 /// TPU the crossover is far lower; override with WEIPS_BATCHED_MIN_ROWS).
 fn batched_ftrl_min_rows() -> usize {
-    use once_cell::sync::Lazy;
-    static MIN: Lazy<usize> = Lazy::new(|| {
+    use std::sync::OnceLock;
+    static MIN: OnceLock<usize> = OnceLock::new();
+    *MIN.get_or_init(|| {
         std::env::var("WEIPS_BATCHED_MIN_ROWS")
             .ok()
             .and_then(|v| v.parse().ok())
             .unwrap_or(8192)
-    });
-    *MIN
+    })
 }
 
 struct MasterState {
-    sparse: Vec<SparseTable>,
+    sparse: Vec<StripedSparseTable>,
     dense: Vec<DenseTable>,
     /// Last dense version included in a gather flush, per dense table.
     dense_synced: Vec<u64>,
@@ -69,8 +76,10 @@ pub struct MasterShard {
 }
 
 impl MasterShard {
-    /// Build a shard for `spec`. `engine` enables the batched AOT FTRL
-    /// path (pass `None` for pure-scalar operation, e.g. unit tests).
+    /// Build a shard for `spec` with the default stripe count
+    /// ([`crate::table::default_stripe_count`]). `engine` enables the
+    /// batched AOT FTRL path (pass `None` for pure-scalar operation, e.g.
+    /// unit tests).
     pub fn new(
         shard_id: u32,
         spec: ModelSpec,
@@ -78,11 +87,31 @@ impl MasterShard {
         entry_threshold: u32,
         clock: Arc<dyn Clock>,
     ) -> Result<MasterShard> {
+        Self::with_stripes(
+            shard_id,
+            spec,
+            engine,
+            entry_threshold,
+            crate::table::default_stripe_count(),
+            clock,
+        )
+    }
+
+    /// Build a shard with an explicit per-table lock-stripe count (the
+    /// cluster config's `table_stripes` knob).
+    pub fn with_stripes(
+        shard_id: u32,
+        spec: ModelSpec,
+        engine: Option<Arc<Engine>>,
+        entry_threshold: u32,
+        stripes: usize,
+        clock: Arc<dyn Clock>,
+    ) -> Result<MasterShard> {
         let mut sparse = Vec::new();
         let mut batched = Vec::new();
         for t in &spec.sparse {
             let opt = spec.optimizer_for(&t.name)?;
-            sparse.push(SparseTable::new(&t.name, t.dim, opt, entry_threshold));
+            sparse.push(StripedSparseTable::new(&t.name, t.dim, opt, entry_threshold, stripes));
             let b = match (&engine, t.optimizer.as_str()) {
                 (Some(eng), "ftrl") => BatchedFtrl::new(eng.clone(), t.dim).ok(),
                 _ => None,
@@ -135,20 +164,17 @@ impl MasterShard {
     }
 
     /// Pull one slot (or full rows with `slot == "*"`). Missing ids read 0.
+    /// Takes the state lock in read mode; contention is per stripe.
     pub fn sparse_pull(&self, req: &SparsePull) -> Result<SparseValues> {
         self.metrics.pulls.fetch_add(1, Ordering::Relaxed);
         let idx = self.table_index(&req.table)? as usize;
         let now = self.clock.now_ms();
-        let mut state = self.state.write().unwrap();
-        let table = &mut state.sparse[idx];
+        let state = self.state.read().unwrap();
+        let table = &state.sparse[idx];
         if req.slot == "*" {
             let width = table.optimizer().row_width(table.dim());
             let mut values = vec![0.0f32; req.ids.len() * width];
-            for (i, id) in req.ids.iter().enumerate() {
-                if let Some(row) = table.get_row(*id) {
-                    values[i * width..(i + 1) * width].copy_from_slice(&row.values);
-                }
-            }
+            table.pull_rows(&req.ids, &mut values);
             return Ok(SparseValues { width: width as u32, values });
         }
         let dim = table.dim();
@@ -158,7 +184,8 @@ impl MasterShard {
     }
 
     /// Apply a gradient push: aggregate duplicates, entry-filter, optimize
-    /// (batched kernel when large), record dirty ids.
+    /// (batched kernel when large), record dirty ids. Takes the state lock
+    /// in read mode; per-stripe write locks serialize same-stripe ids only.
     pub fn sparse_push(&self, req: &SparsePush) -> Result<()> {
         if self.is_frozen() {
             return Err(Error::Unavailable("master frozen for version switch".into()));
@@ -166,8 +193,8 @@ impl MasterShard {
         self.metrics.pushes.fetch_add(1, Ordering::Relaxed);
         let idx = self.table_index(&req.table)? as usize;
         let now = self.clock.now_ms();
-        let mut state = self.state.write().unwrap();
-        let table = &mut state.sparse[idx];
+        let state = self.state.read().unwrap();
+        let table = &state.sparse[idx];
         let dim = table.dim();
         if req.grads.len() != req.ids.len() * dim {
             return Err(Error::Codec(format!(
@@ -179,36 +206,40 @@ impl MasterShard {
         let (uids, ugrads) = aggregate_grads(&req.ids, &req.grads, dim);
         self.metrics.push_rows.fetch_add(uids.len() as u64, Ordering::Relaxed);
 
-        let touched: Vec<u64> = if uids.len() >= batched_ftrl_min_rows() && self.batched[idx].is_some()
-        {
-            // Batched AOT path: entry-filter, gather (z, n), run the Pallas
-            // kernel, scatter (z, n, w) back.
-            let ready = table.ensure_rows(&uids, now);
-            let ids: Vec<u64> = ready.iter().map(|(_, id)| *id).collect();
-            let k = ids.len();
-            if k == 0 {
-                Vec::new()
-            } else {
-                let mut g = vec![0.0f32; k * dim];
-                for (out_i, (pos, _)) in ready.iter().enumerate() {
-                    g[out_i * dim..(out_i + 1) * dim]
-                        .copy_from_slice(&ugrads[pos * dim..(pos + 1) * dim]);
+        let touched: Vec<u64> = if let Some(kernel) = self.batched[idx].as_ref() {
+            // Batched AOT path: per stripe — entry-filter, gather (z, n),
+            // run the Pallas kernel, scatter (z, n, w) back, all under
+            // that stripe's write lock. The scalar/kernel crossover is
+            // applied per stripe *invocation* (the kernel pads each call
+            // to a full block); undersized stripe groups go scalar.
+            let mut touched = Vec::with_capacity(uids.len());
+            let result = table.apply_batch_with(
+                &uids,
+                &ugrads,
+                now,
+                batched_ftrl_min_rows(),
+                &mut touched,
+                |g, z, n, w| kernel.update(g, z, n, w),
+            );
+            let kernel_rows = match result {
+                Ok(k) => k,
+                Err(e) => {
+                    // Stripes committed before the kernel error stay
+                    // applied; record them so slaves don't go stale, then
+                    // surface the error.
+                    drop(state);
+                    self.collector.record_updates(idx as u16, &touched);
+                    return Err(e);
                 }
-                let mut z = vec![0.0f32; k * dim];
-                let mut n = vec![0.0f32; k * dim];
-                let mut w = vec![0.0f32; k * dim];
-                table.gather_slot_pair(&ids, 0, 1, &mut z, &mut n);
-                self.batched[idx]
-                    .as_ref()
-                    .unwrap()
-                    .update(&g, &mut z, &mut n, &mut w)?;
-                table.scatter_slot_triple(&ids, (0, 1, 2), &z, &n, &w, now);
-                self.metrics.batched_kernel_rows.fetch_add(k as u64, Ordering::Relaxed);
-                ids
-            }
+            };
+            self.metrics.batched_kernel_rows.fetch_add(kernel_rows, Ordering::Relaxed);
+            self.metrics
+                .scalar_rows
+                .fetch_add(touched.len() as u64 - kernel_rows, Ordering::Relaxed);
+            touched
         } else {
             self.metrics.scalar_rows.fetch_add(uids.len() as u64, Ordering::Relaxed);
-            table.apply_grads(&uids, &ugrads, now)
+            table.apply_batch(&uids, &ugrads, now)
         };
         drop(state);
         self.collector.record_updates(idx as u16, &touched);
@@ -245,16 +276,17 @@ impl MasterShard {
     }
 
     /// Run the feature-expire pass (§4.1c); evictions are recorded as sync
-    /// deletes so slaves drop the rows too. Returns evicted count.
+    /// deletes so slaves drop the rows too. Walks one stripe at a time, so
+    /// pushes/pulls on other stripes keep flowing. Returns evicted count.
     pub fn expire_features(&self, ttl_ms: u64) -> usize {
         if ttl_ms == 0 {
             return 0;
         }
         let now = self.clock.now_ms();
-        let mut state = self.state.write().unwrap();
+        let state = self.state.read().unwrap();
         let mut total = 0;
         let mut evictions = Vec::new();
-        for (idx, table) in state.sparse.iter_mut().enumerate() {
+        for (idx, table) in state.sparse.iter().enumerate() {
             let dead = table.expire(now, ttl_ms);
             total += dead.len();
             if !dead.is_empty() {
@@ -303,15 +335,15 @@ impl MasterShard {
                 state.sparse.len()
             )));
         }
-        for t in state.sparse.iter_mut() {
+        for t in state.sparse.iter() {
             t.decode_rows(&mut r)?;
         }
         // Dynamic routing: drop rows that no longer belong to this shard.
         if let Some((router, my_shard)) = router {
-            for t in state.sparse.iter_mut() {
+            for t in state.sparse.iter() {
                 let foreign: Vec<u64> = t
-                    .iter()
-                    .map(|(id, _)| *id)
+                    .ids()
+                    .into_iter()
                     .filter(|id| router.shard_of(*id) != my_shard)
                     .collect();
                 for id in foreign {
@@ -349,7 +381,7 @@ impl MasterShard {
         }
         let now = self.clock.now_ms();
         let mut absorbed = 0;
-        for t in state.sparse.iter_mut() {
+        for t in state.sparse.iter() {
             // Decode into a scratch table, then filter-copy.
             let mut scratch = SparseTable::new(t.name(), t.dim(), t.optimizer().clone(), 1);
             scratch.decode_rows(&mut r)?;
@@ -378,8 +410,8 @@ impl MasterShard {
     pub fn replay_sync_batch(&self, batch: &crate::proto::SyncBatch) -> Result<()> {
         let idx = self.table_index(&batch.table)? as usize;
         let now = self.clock.now_ms();
-        let mut state = self.state.write().unwrap();
-        let table = &mut state.sparse[idx];
+        let state = self.state.read().unwrap();
+        let table = &state.sparse[idx];
         for entry in &batch.entries {
             match &entry.op {
                 crate::proto::SyncOp::Upsert(values) => {
@@ -400,8 +432,8 @@ impl MasterShard {
     pub fn corrupt_for_test(&self, scale: f32) -> Result<()> {
         let mut dirty: Vec<(u16, Vec<u64>)> = Vec::new();
         {
-            let mut state = self.state.write().unwrap();
-            for (idx, table) in state.sparse.iter_mut().enumerate() {
+            let state = self.state.read().unwrap();
+            for (idx, table) in state.sparse.iter().enumerate() {
                 let dim = table.dim();
                 let opt = table.optimizer().clone();
                 let w_slot = opt
@@ -411,9 +443,12 @@ impl MasterShard {
                 // re-derives w from (z, n) on the next update, so w-only
                 // corruption would self-heal for hot ids.
                 let z_slot = opt.slot_index("z");
-                let ids: Vec<u64> = table.iter().map(|(id, _)| *id).collect();
+                let ids: Vec<u64> = table.ids();
                 for id in &ids {
-                    let mut values = table.get_row(*id).unwrap().values.to_vec();
+                    // A concurrent expire pass may evict between ids() and
+                    // here (both run under the outer read lock now).
+                    let Some(row) = table.get_row(*id) else { continue };
+                    let mut values = row.values.to_vec();
                     for v in &mut values[w_slot * dim..(w_slot + 1) * dim] {
                         *v = -*v * scale - 0.5;
                     }
@@ -434,12 +469,12 @@ impl MasterShard {
     }
 
     /// Read current full rows + bump nothing (gather's value snapshot).
+    /// Ids are grouped by stripe internally, each stripe read-locked once,
+    /// so a snapshot concurrent with `apply_batch` on other stripes never
+    /// blocks.
     pub fn read_rows_for_sync(&self, table: u16, ids: &[u64]) -> Vec<(u64, Option<Vec<f32>>)> {
         let state = self.state.read().unwrap();
-        let t = &state.sparse[table as usize];
-        ids.iter()
-            .map(|id| (*id, t.get_row(*id).map(|r| r.values.to_vec())))
-            .collect()
+        state.sparse[table as usize].read_rows(ids)
     }
 
     /// Dense tables whose version advanced since the last sync flush;

@@ -6,6 +6,12 @@
 //! identical slave shards serve behind the replica load balancer, each
 //! kept consistent by full sync (checkpoint bootstrap) + streaming
 //! incremental sync.
+//!
+//! Serving tables are lock-striped like the master's
+//! [`crate::table::StripedSparseTable`]: a pull takes only the read locks
+//! of the stripes its ids hash to, and the scatter worker's streaming
+//! upserts write-lock one stripe at a time — serving reads never contend
+//! with streaming updates on other stripes.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
@@ -16,54 +22,98 @@ use crate::proto::{Ack, DensePull, DenseValues, SparsePull, SparseValues, SyncBa
 use crate::server::methods;
 use crate::sync::router::Router;
 use crate::sync::transform::Transform;
-use crate::util::hash::FxHashMap;
+use crate::util::hash::{fxhash64, FxHashMap};
 use crate::{Error, Result};
 
-/// One serving table: id → transformed row.
+/// One serving table: id → transformed row, partitioned into lock stripes.
 pub struct ServingTable {
     pub width: usize,
-    rows: FxHashMap<u64, Box<[f32]>>,
+    stripes: Vec<RwLock<FxHashMap<u64, Box<[f32]>>>>,
 }
 
 impl ServingTable {
-    /// Empty table with fixed serving width.
+    /// Empty table with fixed serving width and the default stripe count.
     pub fn new(width: usize) -> ServingTable {
-        ServingTable { width, rows: FxHashMap::default() }
+        Self::with_stripes(width, crate::table::default_stripe_count())
     }
 
-    /// Row count.
+    /// Empty table with an explicit stripe count (min 1).
+    pub fn with_stripes(width: usize, stripes: usize) -> ServingTable {
+        ServingTable {
+            width,
+            stripes: (0..stripes.max(1)).map(|_| RwLock::new(FxHashMap::default())).collect(),
+        }
+    }
+
+    /// Number of lock stripes.
+    pub fn stripe_count(&self) -> usize {
+        self.stripes.len()
+    }
+
+    /// Owning stripe for an id (same high-bit scheme as the master tables
+    /// so stripe choice stays independent of shard routing).
+    #[inline]
+    fn stripe_of(&self, id: u64) -> usize {
+        ((fxhash64(id) >> 32) as usize) % self.stripes.len()
+    }
+
+    /// Row count (sums stripes; exact at quiesce).
     pub fn len(&self) -> usize {
-        self.rows.len()
+        self.stripes.iter().map(|s| s.read().unwrap().len()).sum()
     }
 
     /// True when empty.
     pub fn is_empty(&self) -> bool {
-        self.rows.is_empty()
+        self.stripes.iter().all(|s| s.read().unwrap().is_empty())
     }
 
-    /// Read rows for `ids` into a flat vec (missing → 0).
+    /// Read rows for `ids` into a flat vec (missing → 0). Small serving
+    /// pulls (the latency-critical predict path uses tiny batches) take
+    /// the owning stripe's read lock per id with zero grouping
+    /// allocations; larger batches group by stripe and take each touched
+    /// stripe's read lock once.
     pub fn pull(&self, ids: &[u64]) -> Vec<f32> {
-        let mut out = vec![0.0f32; ids.len() * self.width];
-        for (i, id) in ids.iter().enumerate() {
-            if let Some(row) = self.rows.get(id) {
-                out[i * self.width..(i + 1) * self.width].copy_from_slice(row);
+        let width = self.width;
+        let mut out = vec![0.0f32; ids.len() * width];
+        if ids.len() <= self.stripes.len() {
+            for (i, &id) in ids.iter().enumerate() {
+                let rows = self.stripes[self.stripe_of(id)].read().unwrap();
+                if let Some(row) = rows.get(&id) {
+                    out[i * width..(i + 1) * width].copy_from_slice(row);
+                }
+            }
+            return out;
+        }
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.stripes.len()];
+        for (i, &id) in ids.iter().enumerate() {
+            groups[self.stripe_of(id)].push(i);
+        }
+        for (stripe, members) in groups.iter().enumerate() {
+            if members.is_empty() {
+                continue;
+            }
+            let rows = self.stripes[stripe].read().unwrap();
+            for &i in members {
+                if let Some(row) = rows.get(&ids[i]) {
+                    out[i * width..(i + 1) * width].copy_from_slice(row);
+                }
             }
         }
         out
     }
 
-    fn upsert(&mut self, id: u64, values: Vec<f32>) {
-        self.rows.insert(id, values.into_boxed_slice());
+    fn upsert(&self, id: u64, values: Vec<f32>) {
+        self.stripes[self.stripe_of(id)]
+            .write()
+            .unwrap()
+            .insert(id, values.into_boxed_slice());
     }
 
-    fn delete(&mut self, id: u64) -> bool {
-        self.rows.remove(&id).is_some()
+    fn clear(&self) {
+        for s in &self.stripes {
+            s.write().unwrap().clear();
+        }
     }
-}
-
-struct SlaveState {
-    tables: Vec<(String, ServingTable)>,
-    dense: Vec<(String, Vec<f32>)>,
 }
 
 /// Counters exposed through `STATS`.
@@ -83,7 +133,11 @@ pub struct SlaveShard {
     model: String,
     transform: Arc<dyn Transform>,
     router: Router,
-    state: RwLock<SlaveState>,
+    /// Sparse serving tables: the list is fixed at construction, each
+    /// table's rows are guarded by its own lock stripes.
+    tables: Vec<(String, ServingTable)>,
+    /// Dense tables replace wholesale per sync batch; one lock is fine.
+    dense: RwLock<Vec<(String, Vec<f32>)>>,
     /// Model version currently served (checkpoint lineage).
     version: AtomicU64,
     /// Health toggle for failover tests / draining.
@@ -92,8 +146,9 @@ pub struct SlaveShard {
 }
 
 impl SlaveShard {
-    /// New empty slave shard. `tables` = (name, serving width) in model
-    /// order; `router` is the *slave* cluster's router.
+    /// New empty slave shard with the default stripe count. `tables` =
+    /// (name, serving width) in model order; `router` is the *slave*
+    /// cluster's router.
     pub fn new(
         shard_id: u32,
         replica_id: u32,
@@ -103,19 +158,42 @@ impl SlaveShard {
         transform: Arc<dyn Transform>,
         router: Router,
     ) -> SlaveShard {
+        Self::with_stripes(
+            shard_id,
+            replica_id,
+            model,
+            tables,
+            dense,
+            transform,
+            router,
+            crate::table::default_stripe_count(),
+        )
+    }
+
+    /// New empty slave shard with an explicit per-table lock-stripe count
+    /// (the cluster config's `table_stripes` knob).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_stripes(
+        shard_id: u32,
+        replica_id: u32,
+        model: &str,
+        tables: Vec<(String, usize)>,
+        dense: Vec<(String, usize)>,
+        transform: Arc<dyn Transform>,
+        router: Router,
+        stripes: usize,
+    ) -> SlaveShard {
         SlaveShard {
             shard_id,
             replica_id,
             model: model.to_string(),
             transform,
             router,
-            state: RwLock::new(SlaveState {
-                tables: tables
-                    .into_iter()
-                    .map(|(n, w)| (n, ServingTable::new(w)))
-                    .collect(),
-                dense: dense.into_iter().map(|(n, l)| (n, vec![0.0; l])).collect(),
-            }),
+            tables: tables
+                .into_iter()
+                .map(|(n, w)| (n, ServingTable::with_stripes(w, stripes)))
+                .collect(),
+            dense: RwLock::new(dense.into_iter().map(|(n, l)| (n, vec![0.0; l])).collect()),
             version: AtomicU64::new(0),
             healthy: AtomicBool::new(true),
             metrics: SlaveMetrics::default(),
@@ -150,11 +228,16 @@ impl SlaveShard {
     /// Apply one streaming sync batch: filter ids to this shard, transform
     /// master rows to serving rows, upsert/delete; dense batches replace
     /// values wholesale. Idempotent (full-value upserts, §4.1d).
+    ///
+    /// Transforms run outside any lock; the writes are then grouped by
+    /// stripe and applied under one stripe write-lock per group, so
+    /// concurrent serving pulls only wait for the stripes actually being
+    /// written.
     pub fn apply_batch(&self, batch: &SyncBatch) -> Result<()> {
         self.metrics.batches.fetch_add(1, Ordering::Relaxed);
-        let mut state = self.state.write().unwrap();
         if !batch.dense.is_empty() {
-            let Some(t) = state.dense.iter_mut().find(|(n, _)| *n == batch.table) else {
+            let mut dense = self.dense.write().unwrap();
+            let Some(t) = dense.iter_mut().find(|(n, _)| *n == batch.table) else {
                 // Data screening (§4.1.4b): this slave type does not serve
                 // the table — e.g. an embedding slave ignoring the tower.
                 self.metrics.filtered_entries.fetch_add(1, Ordering::Relaxed);
@@ -178,15 +261,18 @@ impl SlaveShard {
                 .fetch_add(batch.entries.len() as u64, Ordering::Relaxed);
             return Ok(());
         };
-        let idx = state
+        let table = &self
             .tables
             .iter()
-            .position(|(n, _)| *n == batch.table)
-            .ok_or_else(|| Error::NotFound(format!("serving table {}", batch.table)))?;
-        let table = &mut state.tables[idx].1;
+            .find(|(n, _)| *n == batch.table)
+            .ok_or_else(|| Error::NotFound(format!("serving table {}", batch.table)))?
+            .1;
         debug_assert_eq!(table.width, width);
         let mut applied = 0u64;
         let mut filtered = 0u64;
+        // Pre-transform outside the stripe locks, grouped by stripe.
+        let mut groups: Vec<Vec<(u64, Option<Vec<f32>>)>> =
+            vec![Vec::new(); table.stripe_count()];
         for entry in &batch.entries {
             if self.router.shard_of(entry.id) != self.shard_id {
                 filtered += 1;
@@ -195,15 +281,31 @@ impl SlaveShard {
             match &entry.op {
                 SyncOp::Upsert(row) => {
                     if let Some(serving) = self.transform.transform(&batch.table, row)? {
-                        table.upsert(entry.id, serving);
-                        applied += 1;
+                        groups[table.stripe_of(entry.id)].push((entry.id, Some(serving)));
                     }
                 }
                 SyncOp::Delete => {
-                    if table.delete(entry.id) {
-                        self.metrics.deletes.fetch_add(1, Ordering::Relaxed);
+                    groups[table.stripe_of(entry.id)].push((entry.id, None));
+                }
+            }
+        }
+        for (stripe, ops) in groups.into_iter().enumerate() {
+            if ops.is_empty() {
+                continue;
+            }
+            let mut rows = table.stripes[stripe].write().unwrap();
+            for (id, op) in ops {
+                match op {
+                    Some(serving) => {
+                        rows.insert(id, serving.into_boxed_slice());
+                        applied += 1;
                     }
-                    applied += 1;
+                    None => {
+                        if rows.remove(&id).is_some() {
+                            self.metrics.deletes.fetch_add(1, Ordering::Relaxed);
+                        }
+                        applied += 1;
+                    }
                 }
             }
         }
@@ -220,7 +322,6 @@ impl SlaveShard {
         let _src_shard = r.get_u32()?;
         let n_sparse = r.get_varint()? as usize;
         let mut loaded = 0usize;
-        let mut state = self.state.write().unwrap();
         for _ in 0..n_sparse {
             // Decode the master table inline (name, dim, width, rows).
             let name = r.get_str()?;
@@ -228,7 +329,7 @@ impl SlaveShard {
             let width = r.get_u32()? as usize;
             let count = r.get_varint()? as usize;
             let serving = self.transform.serving_width(&name);
-            let tbl_idx = state.tables.iter().position(|(n, _)| *n == name);
+            let tbl_idx = self.tables.iter().position(|(n, _)| *n == name);
             for _ in 0..count {
                 let id = r.get_varint()?;
                 let _last_access = r.get_varint()?;
@@ -242,19 +343,20 @@ impl SlaveShard {
                 }
                 if let (Some(idx), Some(out)) = (tbl_idx, self.transform.transform(&name, &values)?)
                 {
-                    state.tables[idx].1.upsert(id, out);
+                    self.tables[idx].1.upsert(id, out);
                     loaded += 1;
                 }
             }
         }
         // Dense tables from the snapshot.
         let n_dense = r.get_varint()? as usize;
+        let mut dense = self.dense.write().unwrap();
         for _ in 0..n_dense {
             let name = r.get_str()?;
             let _version = r.get_u64()?;
             let values = r.get_f32_slice()?;
             let _acc = r.get_f32_slice()?;
-            if let Some(t) = state.dense.iter_mut().find(|(n, _)| *n == name) {
+            if let Some(t) = dense.iter_mut().find(|(n, _)| *n == name) {
                 if t.1.len() == values.len() {
                     t.1.copy_from_slice(&values);
                 }
@@ -265,16 +367,16 @@ impl SlaveShard {
 
     /// Drop all rows (before a full re-sync on version switch).
     pub fn clear(&self) {
-        let mut state = self.state.write().unwrap();
-        for (_, t) in state.tables.iter_mut() {
-            t.rows.clear();
+        for (_, t) in self.tables.iter() {
+            t.clear();
         }
-        for (_, d) in state.dense.iter_mut() {
+        for (_, d) in self.dense.write().unwrap().iter_mut() {
             d.iter_mut().for_each(|x| *x = 0.0);
         }
     }
 
-    /// Serve a sparse pull (serving representation).
+    /// Serve a sparse pull (serving representation). Touches only the
+    /// stripes the requested ids hash to, in read mode.
     pub fn sparse_pull(&self, req: &SparsePull) -> Result<SparseValues> {
         if !self.is_healthy() {
             return Err(Error::Unavailable(format!(
@@ -283,8 +385,7 @@ impl SlaveShard {
             )));
         }
         self.metrics.pulls.fetch_add(1, Ordering::Relaxed);
-        let state = self.state.read().unwrap();
-        let t = state
+        let t = self
             .tables
             .iter()
             .find(|(n, _)| *n == req.table)
@@ -297,9 +398,8 @@ impl SlaveShard {
         if !self.is_healthy() {
             return Err(Error::Unavailable("slave draining".into()));
         }
-        let state = self.state.read().unwrap();
-        let t = state
-            .dense
+        let dense = self.dense.read().unwrap();
+        let t = dense
             .iter()
             .find(|(n, _)| *n == req.table)
             .ok_or_else(|| Error::NotFound(format!("dense table {}", req.table)))?;
@@ -308,8 +408,7 @@ impl SlaveShard {
 
     /// Rows currently served across tables.
     pub fn total_rows(&self) -> usize {
-        let state = self.state.read().unwrap();
-        state.tables.iter().map(|(_, t)| t.len()).sum()
+        self.tables.iter().map(|(_, t)| t.len()).sum()
     }
 
     fn stats_json(&self) -> String {

@@ -9,7 +9,11 @@
 //! Exactly that: push handlers (any thread) record `(table, id, op)`
 //! triples into a [`LockFreeQueue`]; the gather thread drains and dedups.
 //! Values are *not* captured here — gather reads the current row state at
-//! flush time, which is what makes replay idempotent (§4.1d).
+//! flush time, which is what makes replay idempotent (§4.1d). With the
+//! lock-striped tables, push handlers on different stripes feed this
+//! queue truly concurrently (the queue was always MPSC; the stripes make
+//! the producers actually parallel), and the flush-time snapshot re-groups
+//! the deduped ids by stripe on the read side.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

@@ -12,6 +12,12 @@
 //! windowed gather sends one full-value record per id regardless of how
 //! many times it changed (§4.1d's ID-granularity eventual consistency).
 //! [`GatherStats`] records raw vs deduped counts — experiment E2.
+//!
+//! Value snapshots go through the master's lock-striped tables
+//! ([`MasterShard::read_rows_for_sync`]): the flush groups each table's
+//! dirty ids by stripe and takes one stripe *read* lock per group, so a
+//! gather snapshot runs concurrently with optimizer applies on every
+//! other stripe instead of serializing behind a whole-table lock.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -185,6 +191,9 @@ impl Gather {
                 }
             }
             // Snapshot current full values (not increments): replay-safe.
+            // The master groups these ids by lock stripe internally —
+            // one stripe read-lock per group, concurrent with pushes on
+            // other stripes.
             for (id, row) in self.master.read_rows_for_sync(table_idx, &upsert_ids) {
                 match row {
                     Some(values) => entries.push(SyncEntry { id, op: SyncOp::Upsert(values) }),

@@ -7,6 +7,12 @@
 //! pressure." The subset comes from [`partitions_for_slave`]; when the
 //! topology is incompatible the scatter falls back to all partitions and
 //! the slave filters per id (both paths covered by tests).
+//!
+//! Applies land in the slave's lock-striped serving tables
+//! ([`SlaveShard::apply_batch`] transforms rows outside any lock, then
+//! writes one stripe at a time), so a scatter worker streaming upserts
+//! never stalls serving pulls on other stripes — the slave-side half of
+//! the striped-table design (DESIGN.md §"Lock-striped tables").
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;

@@ -111,6 +111,19 @@ pub fn metric(name: &str, value: impl std::fmt::Display) {
     println!("  {name:<58} {value}");
 }
 
+/// Machine-readable result line in the repo's one-line JSON shape (the
+/// same `{"key":value,...}` form the server `STATS` endpoints emit), so
+/// bench sweeps can be diffed/plotted without parsing the human tables.
+/// Values are emitted verbatim — pass numbers, or pre-quoted strings.
+pub fn json_metric(bench: &str, fields: &[(&str, String)]) {
+    let mut line = format!(r#"{{"bench":"{bench}""#);
+    for (k, v) in fields {
+        line.push_str(&format!(r#","{k}":{v}"#));
+    }
+    line.push('}');
+    println!("{line}");
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -123,6 +136,19 @@ mod tests {
         assert_eq!(s.iters, 50);
         assert!(s.ops_per_sec() > 0.0);
         assert!(s.p99_ns >= s.p50_ns);
+    }
+
+    #[test]
+    fn json_metric_is_valid_json() {
+        // Shape-check via the in-repo parser.
+        let mut line = String::from(r#"{"bench":"contended_push_pull""#);
+        for (k, v) in [("stripes", "8"), ("ops_per_sec", "12345.0")] {
+            line.push_str(&format!(r#","{k}":{v}"#));
+        }
+        line.push('}');
+        let parsed = crate::util::json::Json::parse(&line).unwrap();
+        assert_eq!(parsed.get("bench").and_then(|j| j.as_str()), Some("contended_push_pull"));
+        assert_eq!(parsed.get("stripes").and_then(|j| j.as_i64()), Some(8));
     }
 
     #[test]

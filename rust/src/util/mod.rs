@@ -1,9 +1,10 @@
 //! Small self-contained utilities shared by every subsystem.
 //!
-//! The build environment has no network access to crates.io beyond the
-//! vendored `xla`/`anyhow` closure, so the usual ecosystem crates (rand,
-//! fxhash, hdrhistogram, proptest, serde) are reimplemented here in the
-//! minimal form WeiPS needs. Each is unit-tested in its own module.
+//! The build environment has no network access to crates.io (the only
+//! non-std dependency is the in-workspace `xla` PJRT stub), so the usual
+//! ecosystem crates (rand, fxhash, hdrhistogram, proptest, serde, flate2,
+//! crc32fast) are reimplemented here and in `codec` in the minimal form
+//! WeiPS needs. Each is unit-tested in its own module.
 
 pub mod bench;
 pub mod clock;
@@ -32,8 +33,8 @@ pub fn now_ms() -> u64 {
 
 /// Current monotonic time in nanoseconds (process-relative).
 pub fn mono_ns() -> u64 {
+    use std::sync::OnceLock;
     use std::time::Instant;
-    use once_cell::sync::Lazy;
-    static START: Lazy<Instant> = Lazy::new(Instant::now);
-    START.elapsed().as_nanos() as u64
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_nanos() as u64
 }

@@ -1,0 +1,225 @@
+//! Integration: lock-striped parameter tables on the full sync path.
+//!
+//! Covers the striped-table contract end to end, no AOT artifacts needed:
+//! entry-filtered ids never reach any stripe (and never sync), expired
+//! ids leave their owning stripe *and* arrive at slaves as deletes, the
+//! checkpoint encoding is byte-stable across stripe counts at the shard
+//! level, and concurrent push traffic across stripes survives a live
+//! gather/scatter pipeline without losing or duplicating state.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use weips::config::{GatherMode, ModelKind, ModelSpec};
+use weips::proto::{SparsePull, SparsePush};
+use weips::queue::Queue;
+use weips::runtime::ModelConfig;
+use weips::server::master::MasterShard;
+use weips::server::slave::SlaveShard;
+use weips::sync::{Gather, Pusher, Router, Scatter, ServingWeights};
+use weips::util::clock::ManualClock;
+
+fn spec() -> ModelSpec {
+    let cfg = ModelConfig {
+        batch_train: 8,
+        batch_predict: 2,
+        fields: 4,
+        dim: 2,
+        hidden: 8,
+        ftrl_block_rows: 64,
+        ftrl_alpha: 0.1,
+        ftrl_beta: 1.0,
+        ftrl_l1: 0.01,
+        ftrl_l2: 1.0,
+    };
+    ModelSpec::derive("ctr", ModelKind::Fm, &cfg)
+}
+
+fn master(entry_threshold: u32, stripes: usize, clock: Arc<ManualClock>) -> Arc<MasterShard> {
+    Arc::new(
+        MasterShard::with_stripes(0, spec(), None, entry_threshold, stripes, clock).unwrap(),
+    )
+}
+
+fn slave(model_spec: &ModelSpec) -> Arc<SlaveShard> {
+    let tables: Vec<(String, usize)> =
+        model_spec.sparse.iter().map(|t| (t.name.clone(), t.dim)).collect();
+    let dense: Vec<(String, usize)> =
+        model_spec.dense.iter().map(|d| (d.name.clone(), d.len)).collect();
+    let transform = Arc::new(ServingWeights::new(
+        model_spec
+            .sparse
+            .iter()
+            .map(|t| (t.name.clone(), model_spec.optimizer_for(&t.name).unwrap(), t.dim))
+            .collect(),
+    ));
+    Arc::new(SlaveShard::new(0, 0, "ctr", tables, dense, transform, Router::new(1)))
+}
+
+fn push(m: &MasterShard, ids: Vec<u64>) {
+    let grads = vec![1.0f32; ids.len()];
+    m.sparse_push(&SparsePush { model: "ctr".into(), table: "w".into(), ids, grads }).unwrap();
+}
+
+#[test]
+fn entry_filtered_ids_never_materialize_or_sync() {
+    let clock = Arc::new(ManualClock::new(0));
+    let m = master(3, 8, clock.clone());
+    let mut gather = Gather::new(m.clone(), GatherMode::Realtime, clock.clone());
+    let queue = Queue::default();
+    let topic = queue.create_topic("sync.ctr", 1).unwrap();
+    let pusher = Pusher::new(topic.clone(), 0);
+    let s = slave(&m.spec);
+    let mut scatter = Scatter::new(topic, s.clone(), 1, 1, clock);
+
+    // Two observations of 30 ids: below the threshold of 3.
+    for _ in 0..2 {
+        push(&m, (0..30).collect());
+    }
+    assert_eq!(m.total_rows(), 0, "probation ids materialized");
+    pusher.push_all(&gather.flush_now()).unwrap();
+    scatter.poll(Duration::ZERO).unwrap();
+    assert_eq!(s.total_rows(), 0, "probation ids leaked into the sync stream");
+
+    // Third observation crosses the threshold everywhere.
+    push(&m, (0..30).collect());
+    assert_eq!(m.total_rows(), 30);
+    pusher.push_all(&gather.flush_now()).unwrap();
+    scatter.poll(Duration::ZERO).unwrap();
+    assert_eq!(s.total_rows(), 30);
+}
+
+#[test]
+fn expired_ids_evict_and_emit_sync_deletes() {
+    let clock = Arc::new(ManualClock::new(0));
+    let m = master(1, 8, clock.clone());
+    let mut gather = Gather::new(m.clone(), GatherMode::Realtime, clock.clone());
+    let queue = Queue::default();
+    let topic = queue.create_topic("sync.ctr", 1).unwrap();
+    let pusher = Pusher::new(topic.clone(), 0);
+    let s = slave(&m.spec);
+    let mut scatter = Scatter::new(topic, s.clone(), 1, 1, clock.clone());
+
+    push(&m, (0..40).collect());
+    pusher.push_all(&gather.flush_now()).unwrap();
+    scatter.poll(Duration::ZERO).unwrap();
+    assert_eq!(s.total_rows(), 40);
+
+    // Refresh half the ids, expire the rest.
+    clock.advance(10_000);
+    push(&m, (0..20).collect());
+    let evicted = m.expire_features(5_000);
+    assert_eq!(evicted, 20);
+    assert_eq!(m.total_rows(), 20);
+    // The eviction must reach the slave as deletes through the queue.
+    pusher.push_all(&gather.flush_now()).unwrap();
+    scatter.poll(Duration::ZERO).unwrap();
+    assert_eq!(s.total_rows(), 20, "expire did not propagate as sync deletes");
+    let gone = s
+        .sparse_pull(&SparsePull {
+            model: "ctr".into(),
+            table: "w".into(),
+            ids: (20..40).collect(),
+            slot: "w".into(),
+        })
+        .unwrap();
+    assert!(gone.values.iter().all(|v| *v == 0.0));
+}
+
+#[test]
+fn shard_snapshots_are_stable_across_stripe_counts() {
+    let mut snaps = Vec::new();
+    for stripes in [1usize, 4, 16] {
+        let clock = Arc::new(ManualClock::new(0));
+        let m = master(1, stripes, clock);
+        for id in 0..100u64 {
+            m.sparse_push(&SparsePush {
+                model: "ctr".into(),
+                table: "w".into(),
+                ids: vec![id],
+                grads: vec![id as f32 * 0.1 + 0.5],
+            })
+            .unwrap();
+            m.sparse_push(&SparsePush {
+                model: "ctr".into(),
+                table: "v".into(),
+                ids: vec![id],
+                grads: vec![0.25, -0.25],
+            })
+            .unwrap();
+        }
+        snaps.push(m.snapshot());
+    }
+    assert_eq!(snaps[0], snaps[1], "1-stripe vs 4-stripe snapshots differ");
+    assert_eq!(snaps[0], snaps[2], "1-stripe vs 16-stripe snapshots differ");
+    // And a shard with a different stripe count restores them exactly.
+    let clock = Arc::new(ManualClock::new(0));
+    let m = master(1, 2, clock);
+    m.restore(&snaps[2], None).unwrap();
+    assert_eq!(m.total_rows(), 200);
+    assert_eq!(m.snapshot(), snaps[0], "restore did not round-trip byte-stably");
+}
+
+#[test]
+fn concurrent_pushes_with_live_gather_lose_nothing() {
+    let clock = Arc::new(ManualClock::new(0));
+    let m = master(1, 8, clock.clone());
+    let mut gather = Gather::new(m.clone(), GatherMode::Realtime, clock.clone());
+    let queue = Queue::default();
+    let topic = queue.create_topic("sync.ctr", 1).unwrap();
+    let pusher = Pusher::new(topic.clone(), 0);
+    let s = slave(&m.spec);
+    let mut scatter = Scatter::new(topic, s.clone(), 1, 1, clock);
+
+    // 4 pusher threads on disjoint id ranges, gather polling live.
+    let per = 400u64;
+    let done = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    let mut handles = Vec::new();
+    for w in 0..4u64 {
+        let m = m.clone();
+        let done = done.clone();
+        handles.push(std::thread::spawn(move || {
+            for _ in 0..10 {
+                let ids: Vec<u64> = (w * per..(w + 1) * per).collect();
+                let grads = vec![0.5f32; ids.len()];
+                m.sparse_push(&SparsePush {
+                    model: "ctr".into(),
+                    table: "w".into(),
+                    ids,
+                    grads,
+                })
+                .unwrap();
+            }
+            done.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        }));
+    }
+    // Drive the pipeline while writers run (gather snapshots race applies
+    // on other stripes — the non-blocking property under test).
+    while done.load(std::sync::atomic::Ordering::SeqCst) < 4 {
+        pusher.push_all(&gather.poll()).unwrap();
+        scatter.poll(Duration::ZERO).unwrap();
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    // Final flush: slave converges to exactly the master's state.
+    pusher.push_all(&gather.flush_now()).unwrap();
+    scatter.poll(Duration::ZERO).unwrap();
+    assert_eq!(m.total_rows(), 4 * per as usize);
+    assert_eq!(s.total_rows(), 4 * per as usize);
+    let ids: Vec<u64> = (0..4 * per).collect();
+    let mw = m
+        .sparse_pull(&SparsePull {
+            model: "ctr".into(),
+            table: "w".into(),
+            ids: ids.clone(),
+            slot: "w".into(),
+        })
+        .unwrap();
+    let sw = s
+        .sparse_pull(&SparsePull { model: "ctr".into(), table: "w".into(), ids, slot: "w".into() })
+        .unwrap();
+    assert_eq!(mw.values, sw.values, "slave diverged from master after quiesce");
+    // FTRL with |z| > l1 after 10 unit-ish updates: weights are nonzero.
+    assert!(mw.values.iter().all(|v| *v != 0.0));
+}

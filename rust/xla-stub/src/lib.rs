@@ -1,0 +1,219 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real crate wraps the XLA PJRT C API (client construction, HLO
+//! compilation, buffer execution). This build environment has no PJRT
+//! runtime, so this stub preserves the exact API surface the `weips`
+//! runtime layer compiles against while failing *at runtime* on any path
+//! that would need the real PJRT machinery (module compilation/execution).
+//!
+//! Host-side `Literal` handling is implemented for real (it is plain byte
+//! shuffling), so code that only constructs/destructures literals works.
+//! `Engine::load` only touches PJRT lazily per-module, and every test and
+//! bench that needs compiled modules already skips when the AOT artifacts
+//! are absent — which is exactly the situation in which this stub is the
+//! linked implementation.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` (string-backed here).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} requires the PJRT runtime, which is not available in this offline build \
+         (the xla crate is stubbed; see rust/xla-stub)"
+    ))
+}
+
+/// Element types the weips runtime uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+}
+
+/// A host-side literal: shape + raw little-endian bytes.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+}
+
+/// Types a literal's payload can be viewed as.
+pub trait NativeType: Copy {
+    /// Size of one element in bytes.
+    const SIZE: usize;
+    /// Decode one little-endian element.
+    fn from_le_bytes(chunk: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const SIZE: usize = 4;
+    fn from_le_bytes(chunk: &[u8]) -> Self {
+        f32::from_le_bytes(chunk.try_into().expect("4-byte chunk"))
+    }
+}
+
+impl Literal {
+    /// Build a literal from a shape and raw (little-endian) bytes.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal, Error> {
+        let elems: usize = dims.iter().product();
+        let want = elems * 4;
+        if data.len() != want {
+            return Err(Error(format!(
+                "literal shape {dims:?} wants {want} bytes, got {}",
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), data: data.to_vec() })
+    }
+
+    /// Element type.
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    /// Shape dimensions.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Copy the payload out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        if self.data.len() % T::SIZE != 0 {
+            return Err(Error(format!(
+                "literal payload of {} bytes is not a multiple of {}",
+                self.data.len(),
+                T::SIZE
+            )));
+        }
+        Ok(self.data.chunks_exact(T::SIZE).map(T::from_le_bytes).collect())
+    }
+
+    /// Destructure a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable("tuple literal destructuring"))
+    }
+}
+
+/// Parsed HLO module (stub: never constructible offline).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file. Always fails in the stub: turning HLO text
+    /// into a module proto is PJRT/XLA functionality.
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto, Error> {
+        Err(unavailable(&format!(
+            "loading HLO module {}",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// XLA computation handle (stub).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a module proto as a computation.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Compiled executable handle (stub: never constructible offline).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+/// Device buffer handle (stub: never constructible offline).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("device-to-host transfer"))
+    }
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute the program on the given arguments.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("executable execution"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Construct the CPU client. Succeeds so that hosts can build engine
+    /// objects; the failure surfaces lazily at first compile/execute.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("HLO compilation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trips_f32() {
+        let vals = [1.0f32, -2.5, 0.0, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &bytes).unwrap();
+        assert_eq!(lit.dims(), &[2, 2]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vals);
+    }
+
+    #[test]
+    fn literal_rejects_wrong_sizes() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &[0u8; 4]).is_err()
+        );
+    }
+
+    #[test]
+    fn pjrt_paths_fail_gracefully() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo.txt").is_err());
+        let exec_err = client
+            .compile(&XlaComputation { _private: () })
+            .map(|_| ())
+            .unwrap_err();
+        assert!(exec_err.to_string().contains("PJRT"), "{exec_err}");
+    }
+}
