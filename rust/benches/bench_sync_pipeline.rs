@@ -1,0 +1,325 @@
+//! E10 — the parallel streaming-sync pipeline (§4.1): striped collector →
+//! pooled gather snapshot → queue → pooled scatter apply.
+//!
+//! Measures, at 1 vs N table stripes × sequential vs pooled sync stages:
+//!   - gather-snapshot throughput (per-stripe value reads, the flush hot
+//!     path) — rows/s;
+//!   - scatter-apply throughput (per-stripe transform + upsert into the
+//!     serving table) — rows/s;
+//!   - push → serving-visible latency through the full pipeline
+//!     (push, gather flush, queue, scatter poll) — ms per round;
+//! and verifies the determinism contract: sync-batch bytes and checkpoint
+//! bytes are identical for every stripe count and pool size.
+//!
+//! Needs no AOT artifacts. Emits the human table plus one-line JSON
+//! records, and writes the full result set to `BENCH_sync_pipeline.json`
+//! (uploaded as a CI artifact — the perf trajectory accumulates per
+//! commit). `WEIPS_BENCH_SMOKE=1` shrinks sizes for CI smoke runs.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use weips::codec::Encode;
+use weips::config::{GatherMode, ModelKind, ModelSpec};
+use weips::optim::{Ftrl, FtrlHyper, Optimizer};
+use weips::proto::{SparsePush, SyncBatch, SyncEntry, SyncOp};
+use weips::queue::Queue;
+use weips::runtime::ModelConfig;
+use weips::server::master::MasterShard;
+use weips::server::slave::SlaveShard;
+use weips::sync::{Gather, Pusher, Router, Scatter, ServingWeights};
+use weips::table::stripe_of_id;
+use weips::util::bench;
+use weips::util::clock::ManualClock;
+use weips::util::ThreadPool;
+
+const DIM: usize = 8;
+
+fn smoke() -> bool {
+    std::env::var("WEIPS_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false)
+}
+
+fn spec() -> ModelSpec {
+    let cfg = ModelConfig {
+        batch_train: 8,
+        batch_predict: 2,
+        fields: 4,
+        dim: DIM,
+        hidden: 8,
+        ftrl_block_rows: 64,
+        ftrl_alpha: 0.05,
+        ftrl_beta: 1.0,
+        ftrl_l1: 1.0,
+        ftrl_l2: 1.0,
+    };
+    ModelSpec::derive("ctr", ModelKind::Fm, &cfg)
+}
+
+fn master(stripes: usize) -> Arc<MasterShard> {
+    let clock = Arc::new(ManualClock::new(0));
+    Arc::new(MasterShard::with_stripes(0, spec(), None, 1, stripes, clock).unwrap())
+}
+
+/// Populate `n` rows of table `v` and clear the collector backlog.
+fn populate(m: &MasterShard, n: u64) {
+    for chunk in (0..n).collect::<Vec<_>>().chunks(8_192) {
+        let grads = vec![0.1f32; chunk.len() * DIM];
+        m.sparse_push(&SparsePush {
+            model: "ctr".into(),
+            table: "v".into(),
+            ids: chunk.to_vec(),
+            grads,
+        })
+        .unwrap();
+    }
+    let mut sink = Vec::new();
+    m.collector().drain(&mut sink);
+}
+
+fn serving(stripes: usize) -> Arc<SlaveShard> {
+    let ftrl: Arc<dyn Optimizer> = Arc::new(Ftrl::new(FtrlHyper::default()));
+    Arc::new(SlaveShard::with_stripes(
+        0,
+        0,
+        "ctr",
+        vec![("w".into(), 1), ("v".into(), DIM)],
+        vec![("bias".into(), 1)],
+        Arc::new(ServingWeights::new(vec![
+            ("w".into(), ftrl.clone(), 1),
+            ("v".into(), ftrl, DIM),
+        ])),
+        Router::new(1),
+        stripes,
+    ))
+}
+
+struct Case {
+    stripes: usize,
+    threads: usize,
+}
+
+impl Case {
+    fn label(&self) -> String {
+        format!("{} stripes, {} pool threads", self.stripes, self.threads)
+    }
+
+    fn pool(&self) -> Option<Arc<ThreadPool>> {
+        (self.threads > 0).then(|| Arc::new(ThreadPool::new(self.threads, "sync-bench")))
+    }
+}
+
+fn cases() -> Vec<Case> {
+    vec![
+        Case { stripes: 1, threads: 0 }, // the sequential single-thread path
+        Case { stripes: 8, threads: 0 }, // striping alone
+        Case { stripes: 8, threads: 4 }, // the acceptance configuration
+        Case { stripes: 32, threads: 4 },
+    ]
+}
+
+fn gather_snapshot(rows: u64, iters: u64, results: &mut Vec<String>) {
+    bench::header(&format!("E10a: gather snapshot throughput ({rows} rows, dim {DIM})"));
+    let mut baseline = 0.0f64;
+    for case in cases() {
+        let m = master(case.stripes);
+        populate(&m, rows);
+        let pool = case.pool();
+        let mut groups: Vec<Vec<u64>> = vec![Vec::new(); case.stripes];
+        for id in 0..rows {
+            groups[stripe_of_id(id, case.stripes)].push(id);
+        }
+        let table = m.table_index("v").unwrap();
+        let stats = bench::run_batched(
+            &format!("snapshot ({})", case.label()),
+            1,
+            iters,
+            rows,
+            || {
+                let snap = m.read_rows_for_sync_grouped(table, &groups, pool.as_deref());
+                std::hint::black_box(&snap);
+            },
+        );
+        let rows_per_sec = stats.ops_per_sec();
+        if case.stripes == 1 && case.threads == 0 {
+            baseline = rows_per_sec;
+        }
+        let speedup = if baseline > 0.0 { rows_per_sec / baseline } else { 1.0 };
+        bench::metric(
+            &format!("  speedup vs sequential ({})", case.label()),
+            format!("{speedup:.2}x"),
+        );
+        let json = format!(
+            r#"{{"bench":"sync_pipeline","stage":"gather_snapshot","stripes":{},"threads":{},"rows":{},"rows_per_sec":{:.0},"speedup_vs_seq":{:.3}}}"#,
+            case.stripes, case.threads, rows, rows_per_sec, speedup
+        );
+        println!("{json}");
+        results.push(json);
+    }
+}
+
+fn scatter_apply(rows: u64, iters: u64, results: &mut Vec<String>) {
+    bench::header(&format!("E10b: scatter apply throughput ({rows} rows, dim {DIM})"));
+    let batch = SyncBatch {
+        model: "ctr".into(),
+        table: "v".into(),
+        shard: 0,
+        seq: 1,
+        created_ms: 0,
+        entries: (0..rows)
+            .map(|id| SyncEntry {
+                id,
+                op: SyncOp::Upsert(vec![0.25f32; 3 * DIM]),
+            })
+            .collect(),
+        dense: vec![],
+    };
+    let mut baseline = 0.0f64;
+    for case in cases() {
+        let s = serving(case.stripes);
+        let pool = case.pool();
+        let stats = bench::run_batched(
+            &format!("apply ({})", case.label()),
+            1,
+            iters,
+            rows,
+            || {
+                s.apply_batch_pooled(&batch, pool.as_deref()).unwrap();
+            },
+        );
+        let rows_per_sec = stats.ops_per_sec();
+        if case.stripes == 1 && case.threads == 0 {
+            baseline = rows_per_sec;
+        }
+        let speedup = if baseline > 0.0 { rows_per_sec / baseline } else { 1.0 };
+        bench::metric(
+            &format!("  speedup vs sequential ({})", case.label()),
+            format!("{speedup:.2}x"),
+        );
+        let json = format!(
+            r#"{{"bench":"sync_pipeline","stage":"scatter_apply","stripes":{},"threads":{},"rows":{},"rows_per_sec":{:.0},"speedup_vs_seq":{:.3}}}"#,
+            case.stripes, case.threads, rows, rows_per_sec, speedup
+        );
+        println!("{json}");
+        results.push(json);
+    }
+}
+
+fn push_to_visible_latency(rounds: u64, ids_per_round: u64, results: &mut Vec<String>) {
+    bench::header(&format!(
+        "E10c: push -> serving-visible latency ({ids_per_round} ids/round)"
+    ));
+    for case in cases() {
+        let clock = Arc::new(ManualClock::new(0));
+        let m = Arc::new(
+            MasterShard::with_stripes(0, spec(), None, 1, case.stripes, clock.clone()).unwrap(),
+        );
+        let pool = case.pool();
+        let queue = Queue::new(1 << 30);
+        let topic = queue.create_topic("sync.ctr", 1).unwrap();
+        let pusher = Pusher::new(topic.clone(), 0);
+        let mut gather =
+            Gather::with_pool(m.clone(), GatherMode::Realtime, clock.clone(), pool.clone());
+        let s = serving(case.stripes);
+        let mut scatter = Scatter::with_pool(topic, s.clone(), 1, 1, clock, pool);
+        let mut total = Duration::ZERO;
+        for round in 0..rounds {
+            let ids: Vec<u64> =
+                (round * ids_per_round..(round + 1) * ids_per_round).collect();
+            let grads = vec![0.1f32; ids.len() * DIM];
+            let t0 = std::time::Instant::now();
+            m.sparse_push(&SparsePush {
+                model: "ctr".into(),
+                table: "v".into(),
+                ids,
+                grads,
+            })
+            .unwrap();
+            pusher.push_all(&gather.flush_now()).unwrap();
+            scatter.poll(Duration::ZERO).unwrap();
+            total += t0.elapsed();
+        }
+        assert_eq!(s.total_rows(), (rounds * ids_per_round) as usize);
+        let ms_per_round = total.as_secs_f64() * 1e3 / rounds as f64;
+        bench::metric(
+            &format!("push->visible ({})", case.label()),
+            format!("{ms_per_round:.3} ms/round"),
+        );
+        let json = format!(
+            r#"{{"bench":"sync_pipeline","stage":"push_to_visible","stripes":{},"threads":{},"ids_per_round":{},"ms_per_round":{:.4}}}"#,
+            case.stripes, case.threads, ids_per_round, ms_per_round
+        );
+        println!("{json}");
+        results.push(json);
+    }
+}
+
+/// Determinism contract: the same logical workload must produce
+/// byte-identical sync batches and checkpoints at every stripe count and
+/// pool size (the gather sorts batch entries by id; the checkpoint
+/// encoder emits ascending ids).
+fn determinism_check(results: &mut Vec<String>) {
+    bench::header("E10d: sync-batch + checkpoint determinism across stripes x pools");
+    let mut blobs: Vec<(Vec<u8>, Vec<u8>)> = Vec::new();
+    for case in cases() {
+        let clock = Arc::new(ManualClock::new(0));
+        let m = Arc::new(
+            MasterShard::with_stripes(0, spec(), None, 1, case.stripes, clock.clone()).unwrap(),
+        );
+        let pool = case.pool();
+        let mut gather =
+            Gather::with_pool(m.clone(), GatherMode::Threshold(1 << 30), clock, pool);
+        for round in 0..10u64 {
+            let ids: Vec<u64> = (0..512).map(|i| (i * 13 + round) % 1_999).collect();
+            let grads = vec![0.5f32; ids.len() * DIM];
+            m.sparse_push(&SparsePush {
+                model: "ctr".into(),
+                table: "v".into(),
+                ids,
+                grads,
+            })
+            .unwrap();
+        }
+        let batch_bytes: Vec<u8> =
+            gather.flush_now().iter().flat_map(|b| b.to_bytes()).collect();
+        blobs.push((batch_bytes, m.snapshot()));
+    }
+    for (i, (batches, snap)) in blobs.iter().enumerate().skip(1) {
+        assert_eq!(
+            batches, &blobs[0].0,
+            "sync-batch bytes diverged between case 0 and case {i}"
+        );
+        assert_eq!(
+            snap, &blobs[0].1,
+            "checkpoint bytes diverged between case 0 and case {i}"
+        );
+    }
+    bench::metric("sync-batch + checkpoint bytes identical across all cases", "ok");
+    let json = format!(
+        r#"{{"bench":"sync_pipeline","stage":"determinism","cases":{},"identical":true}}"#,
+        blobs.len()
+    );
+    println!("{json}");
+    results.push(json);
+}
+
+fn main() {
+    let (rows, iters, rounds, ids_per_round) = if smoke() {
+        (20_000u64, 2u64, 5u64, 512u64)
+    } else {
+        (200_000u64, 5u64, 20u64, 2_048u64)
+    };
+    let mut results = Vec::new();
+    gather_snapshot(rows, iters, &mut results);
+    scatter_apply(rows, iters, &mut results);
+    push_to_visible_latency(rounds, ids_per_round, &mut results);
+    determinism_check(&mut results);
+    let json = format!("[\n  {}\n]\n", results.join(",\n  "));
+    // Anchor to the workspace root (cargo runs benches with cwd = the
+    // package root, rust/), so CI finds the artifact at a fixed path.
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package has a parent dir")
+        .join("BENCH_sync_pipeline.json");
+    std::fs::write(&out, &json).expect("write BENCH_sync_pipeline.json");
+    println!("\nwrote {} ({} records)", out.display(), results.len());
+}

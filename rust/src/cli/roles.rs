@@ -37,6 +37,8 @@ fn cluster_config(args: &Args) -> Result<ClusterConfig> {
         cfg.gather_mode = GatherMode::parse(g)?;
     }
     cfg.ckpt_interval_ms = args.get_u64("ckpt-interval-ms", cfg.ckpt_interval_ms)?;
+    cfg.sync_threads = args.get_u64("sync-threads", cfg.sync_threads as u64)? as u32;
+    cfg.rpc_threads = args.get_u64("rpc-threads", cfg.rpc_threads as u64)?.max(1) as u32;
     Ok(cfg)
 }
 
@@ -109,9 +111,14 @@ pub fn run_broker(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7100");
     let partitions = args.get_u64("partitions", 4)? as usize;
     let model = args.get_or("model-name", "ctr");
+    let cfg = cluster_config(args)?;
     let queue = Queue::default();
     let topic = queue.create_topic(&format!("sync.{model}"), partitions)?;
-    let server = RpcServer::serve(&addr, Arc::new(QueueService { topic }))?;
+    let server = RpcServer::serve_pooled(
+        &addr,
+        Arc::new(QueueService { topic }),
+        cfg.rpc_threads as usize,
+    )?;
     println!("broker on {} ({partitions} partitions)", server.addr());
     block_forever()
 }
@@ -135,16 +142,18 @@ pub fn run_master(args: &Args) -> Result<()> {
     )?);
     let data_dir: std::path::PathBuf = args.get_or("data-dir", "/tmp/weips-data").into();
     let store = Arc::new(CheckpointStore::new(data_dir, None));
-    let server = RpcServer::serve(
+    let server = RpcServer::serve_pooled(
         &addr,
         Arc::new(MasterService { shard: master.clone(), store: Some(store) }),
+        cfg.rpc_threads as usize,
     )?;
     println!("master shard {shard} on {} (broker {broker})", server.addr());
 
-    // Sync pump: gather -> pusher against the remote broker.
+    // Sync pump: gather -> pusher against the remote broker; snapshots
+    // fan out over the shared sync pool.
     let log: Arc<dyn SyncLog> =
         Arc::new(RemoteLog::connect(Channel::remote(&broker, RPC_TIMEOUT))?);
-    let mut gather = Gather::new(master, cfg.gather_mode, clock);
+    let mut gather = Gather::with_pool(master, cfg.gather_mode, clock, cfg.sync_pool());
     let pusher = Pusher::new(log, shard);
     loop {
         let batches = gather.poll();
@@ -189,7 +198,11 @@ pub fn run_slave(args: &Args) -> Result<()> {
         Router::new(cfg.slave_shards),
         cfg.table_stripes as usize,
     ));
-    let server = RpcServer::serve(&addr, Arc::new(SlaveService { shard: slave.clone() }))?;
+    let server = RpcServer::serve_pooled(
+        &addr,
+        Arc::new(SlaveService { shard: slave.clone() }),
+        cfg.rpc_threads as usize,
+    )?;
     println!(
         "slave {shard}/{replica} on {} (broker {broker}, {} slave shards)",
         server.addr(),
@@ -197,12 +210,13 @@ pub fn run_slave(args: &Args) -> Result<()> {
     );
     let log: Arc<dyn SyncLog> =
         Arc::new(RemoteLog::connect(Channel::remote(&broker, RPC_TIMEOUT))?);
-    let mut scatter = Scatter::new(
+    let mut scatter = Scatter::with_pool(
         log,
         slave,
         cfg.master_shards,
         cfg.slave_shards,
         Arc::new(SystemClock),
+        cfg.sync_pool(),
     );
     println!("consuming partitions {:?}", scatter.partitions());
     loop {

@@ -190,6 +190,13 @@ impl GatherMode {
     }
 }
 
+/// Env-overridable thread-count default (`sync_threads`; `rpc_threads`
+/// defers to [`crate::net::default_rpc_threads`], its single source of
+/// truth).
+fn env_threads(var: &str, default: u32) -> u32 {
+    std::env::var(var).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
 /// Cluster topology + policies (defaults suit the examples and benches).
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
@@ -206,6 +213,15 @@ pub struct ClusterConfig {
     /// More stripes = more push/pull/gather concurrency per shard; the
     /// contended-throughput bench (`bench_throughput`) measures the curve.
     pub table_stripes: u32,
+    /// Threads in the shared sync pool that parallelizes gather value
+    /// snapshots, scatter applies and feature-expire passes across table
+    /// stripes (0 = run those stages sequentially). `WEIPS_SYNC_THREADS`
+    /// overrides the default; `bench_sync_pipeline` measures the curve.
+    pub sync_threads: u32,
+    /// Handler threads per RPC server (readiness-polled connection fleet
+    /// shares this fixed pool instead of one thread per connection).
+    /// `WEIPS_RPC_THREADS` overrides the default.
+    pub rpc_threads: u32,
     /// Feature expire TTL in ms (0 = never).
     pub feature_ttl_ms: u64,
     /// Checkpoint every ~this many ms (randomly jittered, §4.2.1a).
@@ -230,6 +246,8 @@ impl Default for ClusterConfig {
             gather_mode: GatherMode::Threshold(4096),
             entry_threshold: 1,
             table_stripes: 8,
+            sync_threads: env_threads("WEIPS_SYNC_THREADS", 4),
+            rpc_threads: crate::net::default_rpc_threads() as u32,
             feature_ttl_ms: 0,
             ckpt_interval_ms: 10_000,
             ckpt_keep: 5,
@@ -240,6 +258,16 @@ impl Default for ClusterConfig {
 }
 
 impl ClusterConfig {
+    /// Build the shared sync pool this config implies: one process-wide
+    /// pool driving parallel gather snapshots, scatter applies and expire
+    /// passes (`None` when `sync_threads = 0` — sequential stages). The
+    /// single construction point for the knob→pool policy (coordinator
+    /// and CLI roles both call this).
+    pub fn sync_pool(&self) -> Option<Arc<crate::util::ThreadPool>> {
+        (self.sync_threads > 0)
+            .then(|| Arc::new(crate::util::ThreadPool::new(self.sync_threads as usize, "sync-pool")))
+    }
+
     /// Apply `[cluster]` section overrides from a parsed TOML document.
     pub fn from_toml(doc: &TomlDoc) -> Result<ClusterConfig> {
         let mut c = ClusterConfig::default();
@@ -271,6 +299,12 @@ impl ClusterConfig {
             // Clamp on the signed value: a negative entry must not wrap
             // into billions of stripes.
             c.table_stripes = v.clamp(1, u32::MAX as i64) as u32;
+        }
+        if let Some(v) = doc.get_int("cluster", "sync_threads") {
+            c.sync_threads = v.clamp(0, u32::MAX as i64) as u32;
+        }
+        if let Some(v) = doc.get_int("cluster", "rpc_threads") {
+            c.rpc_threads = v.clamp(1, u32::MAX as i64) as u32;
         }
         if let Some(v) = doc.get_int("cluster", "feature_ttl_ms") {
             c.feature_ttl_ms = v as u64;
@@ -375,6 +409,8 @@ mod tests {
             master_shards = 8
             gather_mode = "period:100"
             table_stripes = 16
+            sync_threads = 6
+            rpc_threads = 12
             "#,
         )
         .unwrap();
@@ -383,6 +419,23 @@ mod tests {
         assert_eq!(c.master_shards, 8);
         assert_eq!(c.gather_mode, GatherMode::Period(100));
         assert_eq!(c.table_stripes, 16);
+        assert_eq!(c.sync_threads, 6);
+        assert_eq!(c.rpc_threads, 12);
         assert_eq!(c.slave_shards, 2); // default preserved
+    }
+
+    #[test]
+    fn thread_knobs_clamp_to_sane_ranges() {
+        let doc = TomlDoc::parse(
+            r#"
+            [cluster]
+            sync_threads = -3
+            rpc_threads = -1
+            "#,
+        )
+        .unwrap();
+        let c = ClusterConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.sync_threads, 0); // negative -> sequential
+        assert_eq!(c.rpc_threads, 1); // server always has >= 1 handler
     }
 }

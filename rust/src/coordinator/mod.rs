@@ -33,6 +33,7 @@ use crate::server::slave::{SlaveService, SlaveShard};
 use crate::storage::CheckpointStore;
 use crate::sync::{Gather, Pusher, Router, Scatter, ServingWeights};
 use crate::util::clock::{Clock, SystemClock};
+use crate::util::ThreadPool;
 use crate::worker::{Predictor, ShardedClient, SlaveClient, SlaveEndpoint, Trainer};
 use crate::{Error, Result};
 
@@ -80,6 +81,9 @@ pub struct LocalCluster {
     pub slaves: Vec<Vec<Arc<SlaveShard>>>,
     scatters: Vec<Vec<Mutex<Scatter>>>,
     pub groups: Vec<Arc<ReplicaGroup<SlaveEndpoint>>>,
+    /// Shared pool driving parallel gather snapshots, scatter applies and
+    /// expire passes across every shard (`None` when `sync_threads = 0`).
+    pub sync_pool: Option<Arc<ThreadPool>>,
     pub monitor: Arc<Monitor>,
     pub vm: VersionManager,
     pub domino: Mutex<Domino>,
@@ -125,6 +129,10 @@ impl LocalCluster {
         )?;
 
         // -- masters + sync pipeline -----------------------------------------
+        // One pool shared by every gather/scatter/expire in the process:
+        // the sync stages parallelize across table stripes without each
+        // shard paying for its own thread fleet.
+        let sync_pool = cfg.sync_pool();
         let mut masters = Vec::new();
         let mut gathers = Vec::new();
         let mut pushers = Vec::new();
@@ -137,7 +145,12 @@ impl LocalCluster {
                 cfg.table_stripes as usize,
                 clock.clone(),
             )?);
-            gathers.push(Mutex::new(Gather::new(m.clone(), cfg.gather_mode, clock.clone())));
+            gathers.push(Mutex::new(Gather::with_pool(
+                m.clone(),
+                cfg.gather_mode,
+                clock.clone(),
+                sync_pool.clone(),
+            )));
             pushers.push(Pusher::new(topic.clone(), i));
             masters.push(m);
         }
@@ -172,12 +185,13 @@ impl LocalCluster {
                     slave_router,
                     cfg.table_stripes as usize,
                 ));
-                shard_scatters.push(Mutex::new(Scatter::new(
+                shard_scatters.push(Mutex::new(Scatter::with_pool(
                     topic.clone(),
                     shard.clone(),
                     cfg.master_shards,
                     cfg.slave_shards,
                     clock.clone(),
+                    sync_pool.clone(),
                 )));
                 let ch = Channel::local(Arc::new(SlaveService { shard: shard.clone() }));
                 endpoints.push(Arc::new(SlaveEndpoint::local(ch, shard.clone())));
@@ -253,6 +267,7 @@ impl LocalCluster {
             slaves,
             scatters,
             groups,
+            sync_pool,
             monitor,
             vm,
             domino,
@@ -375,7 +390,7 @@ impl LocalCluster {
         }
         if self.cfg.feature_ttl_ms > 0 {
             for m in &self.masters {
-                m.expire_features(self.cfg.feature_ttl_ms);
+                m.expire_features_pooled(self.cfg.feature_ttl_ms, self.sync_pool.as_deref());
             }
         }
         let snap = self.monitor.snapshot();
@@ -503,8 +518,12 @@ impl LocalCluster {
             self.clock.clone(),
         )?);
         // Rewire: gather + trainer channels point at the new object.
-        self.gathers[shard] =
-            Mutex::new(Gather::new(fresh.clone(), self.cfg.gather_mode, self.clock.clone()));
+        self.gathers[shard] = Mutex::new(Gather::with_pool(
+            fresh.clone(),
+            self.cfg.gather_mode,
+            self.clock.clone(),
+            self.sync_pool.clone(),
+        ));
         self.masters[shard] = fresh;
         self.rewire_trainer();
         Ok(rows)

@@ -1,10 +1,15 @@
 //! RPC substrate: length-prefixed, CRC-checked frames over TCP, with an
 //! in-process fast path.
 //!
-//! No async runtime is available offline, so the server is thread-per-
-//! connection on top of a [`crate::util::ThreadPool`]-less accept loop
-//! (connections are long-lived in a PS deployment: every worker keeps one
-//! connection per server shard, so thread-per-conn matches the topology).
+//! No async runtime is available offline, so the server runs a fixed
+//! [`crate::util::ThreadPool`] behind a readiness-polling connection loop:
+//! the accept thread keeps every idle connection in a parked set and
+//! sweeps it with non-blocking peeks; a connection with bytes pending is
+//! handed to a pool worker, which drains the requests already queued on
+//! it and parks it again. A fleet of workers fanning into one shard
+//! therefore costs `rpc_threads` handler threads total (plus the accept/
+//! poll thread) instead of one thread per connection
+//! (`WEIPS_RPC_THREADS` / the cluster config's `rpc_threads` knob).
 //!
 //! Wire format per request:  `frame( [req_id u64][method u16][payload] )`
 //! and per response:          `frame( [req_id u64][status u8][payload] )`
@@ -21,6 +26,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::codec::{frame, unframe};
+use crate::util::ThreadPool;
 use crate::{Error, Result};
 
 /// Maximum frame payload (guards allocation on hostile/corrupt input).
@@ -29,6 +35,21 @@ pub const MAX_FRAME: usize = 256 << 20;
 /// Status byte on responses.
 const STATUS_OK: u8 = 0;
 const STATUS_ERR: u8 = 1;
+
+/// Handler threads per RPC server when no explicit count is given
+/// (`WEIPS_RPC_THREADS` overrides; the cluster config's `rpc_threads`
+/// knob wins where a config is present).
+pub fn default_rpc_threads() -> usize {
+    use std::sync::OnceLock;
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("WEIPS_RPC_THREADS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(8)
+    })
+}
 
 /// A dispatchable service: maps (method, payload) -> payload.
 pub trait Service: Send + Sync {
@@ -49,8 +70,13 @@ where
 // Framed stream I/O
 // ---------------------------------------------------------------------------
 
-/// Read exactly one frame from a stream (blocking).
-fn read_frame(stream: &mut TcpStream, scratch: &mut Vec<u8>) -> Result<Vec<u8>> {
+/// Read exactly one frame from a stream (blocking). The payload is left in
+/// `scratch` and its byte range returned — no intermediate copy; callers
+/// borrow `&scratch[range]` (and copy only what they keep).
+fn read_frame(
+    stream: &mut TcpStream,
+    scratch: &mut Vec<u8>,
+) -> Result<std::ops::Range<usize>> {
     let mut header = [0u8; 8];
     stream.read_exact(&mut header)?;
     let len = u32::from_le_bytes(header[0..4].try_into().unwrap()) as usize;
@@ -62,7 +88,7 @@ fn read_frame(stream: &mut TcpStream, scratch: &mut Vec<u8>) -> Result<Vec<u8>> 
     scratch[..8].copy_from_slice(&header);
     stream.read_exact(&mut scratch[8..])?;
     match unframe(scratch)? {
-        Some((payload, _)) => Ok(payload.to_vec()),
+        Some((_, consumed)) => Ok(8..consumed),
         None => Err(Error::Codec("incomplete frame after read".into())),
     }
 }
@@ -73,46 +99,152 @@ fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
     Ok(())
 }
 
+/// A handler-pool worker never waits on one peer's socket longer than
+/// this: a connection that stalls mid-frame (or refuses our writes) is
+/// dropped and its worker reclaimed, so slow/hung clients cannot pin the
+/// fixed pool. Generous next to a healthy peer's packet gaps (micro- to
+/// milliseconds) — tripping it means the peer is effectively gone.
+const IO_STALL_LIMIT: std::time::Duration = std::time::Duration::from_secs(10);
+
+/// Nap between non-blocking I/O retries; abort on shutdown or when the
+/// peer has stalled past `deadline`.
+fn nap_or_abort(stop: &AtomicBool, deadline: std::time::Instant, what: &str) -> Result<()> {
+    if stop.load(Ordering::Acquire) {
+        return Err(Error::Rpc("server shutting down".into()));
+    }
+    if std::time::Instant::now() >= deadline {
+        return Err(Error::Rpc(format!("peer stalled {what}")));
+    }
+    std::thread::sleep(std::time::Duration::from_micros(200));
+    Ok(())
+}
+
+/// Read one frame from a non-blocking stream. `Ok(None)` means no request
+/// has started (first header byte would block) — the caller parks the
+/// connection back into the poll set. Once a frame is underway, short
+/// naps bridge the gaps between the peer's packets, bounded by
+/// [`IO_STALL_LIMIT`]; `stop` aborts.
+fn read_frame_nonblocking(
+    stream: &mut TcpStream,
+    scratch: &mut Vec<u8>,
+    stop: &AtomicBool,
+) -> Result<Option<std::ops::Range<usize>>> {
+    let deadline = std::time::Instant::now() + IO_STALL_LIMIT;
+    let mut header = [0u8; 8];
+    let mut got = 0usize;
+    while got < 8 {
+        match stream.read(&mut header[got..]) {
+            Ok(0) => return Err(Error::Rpc("peer closed".into())),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if got == 0 {
+                    return Ok(None); // idle connection: no request pending
+                }
+                nap_or_abort(stop, deadline, "mid-header")?;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_le_bytes(header[0..4].try_into().unwrap()) as usize;
+    if len > MAX_FRAME {
+        return Err(Error::Codec(format!("frame length {len} exceeds max")));
+    }
+    scratch.clear();
+    scratch.resize(8 + len, 0);
+    scratch[..8].copy_from_slice(&header);
+    let mut got = 8;
+    while got < 8 + len {
+        match stream.read(&mut scratch[got..]) {
+            Ok(0) => return Err(Error::Rpc("peer closed mid-frame".into())),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                nap_or_abort(stop, deadline, "mid-frame")?;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    match unframe(scratch)? {
+        Some((_, consumed)) => Ok(Some(8..consumed)),
+        None => Err(Error::Codec("incomplete frame after read".into())),
+    }
+}
+
+/// Write all of `bytes` to a non-blocking stream (napping through a full
+/// socket buffer, bounded by [`IO_STALL_LIMIT`]; `stop` aborts).
+fn write_all_nonblocking(stream: &mut TcpStream, bytes: &[u8], stop: &AtomicBool) -> Result<()> {
+    let deadline = std::time::Instant::now() + IO_STALL_LIMIT;
+    let mut off = 0usize;
+    while off < bytes.len() {
+        match stream.write(&bytes[off..]) {
+            Ok(0) => return Err(Error::Rpc("peer closed on write".into())),
+            Ok(n) => off += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                nap_or_abort(stop, deadline, "on write")?;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
 // ---------------------------------------------------------------------------
 // Server
 // ---------------------------------------------------------------------------
 
-/// Running RPC server; dropping it stops the accept loop.
+/// Running RPC server: a fixed handler pool fed by a readiness-polling
+/// accept/poll thread. Dropping it stops the loop, joins the accept
+/// thread and drains the pool ([`Drop`] below — tests cannot leak accept
+/// loops or handler threads).
 pub struct RpcServer {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    /// Handler pool; `Some` until drop. Dropped after the accept thread
+    /// joins so no task can be submitted to a dead pool.
+    pool: Option<Arc<ThreadPool>>,
+    /// Parked (idle) connections awaiting readiness.
+    parked: Arc<Mutex<Vec<TcpStream>>>,
 }
 
 impl RpcServer {
-    /// Bind `addr` (use port 0 for ephemeral) and serve `service`.
+    /// Bind `addr` (use port 0 for ephemeral) and serve `service` on
+    /// [`default_rpc_threads`] handler threads.
     pub fn serve(addr: &str, service: Arc<dyn Service>) -> Result<RpcServer> {
+        Self::serve_pooled(addr, service, default_rpc_threads())
+    }
+
+    /// Bind `addr` and serve `service` on a fixed pool of `threads`
+    /// handler threads (the cluster config's `rpc_threads` knob).
+    pub fn serve_pooled(
+        addr: &str,
+        service: Arc<dyn Service>,
+        threads: usize,
+    ) -> Result<RpcServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
         listener.set_nonblocking(true)?;
-        let accept_thread = std::thread::Builder::new()
-            .name(format!("rpc-accept-{local}"))
-            .spawn(move || {
-                while !stop2.load(Ordering::Acquire) {
-                    match listener.accept() {
-                        Ok((stream, _peer)) => {
-                            let svc = service.clone();
-                            let stop3 = stop2.clone();
-                            let _ = std::thread::Builder::new()
-                                .name("rpc-conn".into())
-                                .spawn(move || Self::conn_loop(stream, svc, stop3));
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(2));
-                        }
-                        Err(_) => break,
-                    }
-                }
-            })
-            .expect("spawn accept loop");
-        Ok(RpcServer { addr: local, stop, accept_thread: Some(accept_thread) })
+        let stop = Arc::new(AtomicBool::new(false));
+        let pool = Arc::new(ThreadPool::new(threads, &format!("rpc-{}", local.port())));
+        let parked: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept_thread = {
+            let stop = stop.clone();
+            let pool = pool.clone();
+            let parked = parked.clone();
+            std::thread::Builder::new()
+                .name(format!("rpc-accept-{local}"))
+                .spawn(move || Self::accept_poll_loop(listener, service, stop, pool, parked))
+                .expect("spawn accept loop")
+        };
+        Ok(RpcServer {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+            pool: Some(pool),
+            parked,
+        })
     }
 
     /// Bound address (resolves ephemeral ports).
@@ -120,31 +252,131 @@ impl RpcServer {
         self.addr
     }
 
-    /// Stop accepting; existing connections close on their next poll.
+    /// Idle connections currently parked (excludes ones being serviced).
+    pub fn parked_connections(&self) -> usize {
+        self.parked.lock().unwrap().len()
+    }
+
+    /// Stop accepting and polling; parked connections close when the
+    /// server drops, in-flight handlers abort on their next I/O nap.
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::Release);
     }
 
-    fn conn_loop(mut stream: TcpStream, service: Arc<dyn Service>, stop: Arc<AtomicBool>) {
-        let _ = stream.set_nodelay(true);
-        let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(200)));
+    /// Accept new connections and sweep parked ones for readiness; ready
+    /// connections move onto the handler pool and park themselves again
+    /// once they have drained the requests queued on them.
+    fn accept_poll_loop(
+        listener: TcpListener,
+        service: Arc<dyn Service>,
+        stop: Arc<AtomicBool>,
+        pool: Arc<ThreadPool>,
+        parked: Arc<Mutex<Vec<TcpStream>>>,
+    ) {
+        // Adaptive sweep pacing: an idle server backs its sweep interval
+        // off (1ms -> 10ms) so a large parked fleet doesn't burn a core
+        // on peek() syscalls; any progress snaps it back for latency.
+        let mut idle_sweeps = 0u32;
+        while !stop.load(Ordering::Acquire) {
+            let mut progressed = false;
+            // Admit every connection waiting in the backlog.
+            loop {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let _ = stream.set_nodelay(true);
+                        if stream.set_nonblocking(true).is_ok() {
+                            parked.lock().unwrap().push(stream);
+                        }
+                        progressed = true;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(_) => return,
+                }
+            }
+            // Sweep parked connections; dispatch the readable ones.
+            let mut ready = Vec::new();
+            {
+                let mut guard = parked.lock().unwrap();
+                let mut i = 0;
+                while i < guard.len() {
+                    let mut probe = [0u8; 1];
+                    match guard[i].peek(&mut probe) {
+                        Ok(0) => {
+                            guard.swap_remove(i); // peer closed
+                        }
+                        Ok(_) => ready.push(guard.swap_remove(i)),
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => i += 1,
+                        Err(_) => {
+                            guard.swap_remove(i); // broken socket
+                        }
+                    }
+                }
+            }
+            for stream in ready {
+                progressed = true;
+                let service = service.clone();
+                let stop = stop.clone();
+                let parked = parked.clone();
+                pool.execute(move || Self::serve_ready(stream, service, stop, parked));
+            }
+            if progressed {
+                idle_sweeps = 0;
+            } else {
+                idle_sweeps = idle_sweeps.saturating_add(1);
+                let ms = match idle_sweeps {
+                    0..=10 => 1,
+                    11..=100 => 2,
+                    _ => 10,
+                };
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+            }
+        }
+    }
+
+    /// Drain the requests already queued on a readable connection, then
+    /// park it again. Runs on a pool worker; the worker is released once
+    /// the connection goes quiet, so a worker fleet holding many
+    /// mostly-idle connections shares `rpc_threads` handlers. A short
+    /// post-response linger bridges a request/response-cycling client's
+    /// think time, keeping sequential call latency at microseconds
+    /// instead of a full poller sweep.
+    fn serve_ready(
+        mut stream: TcpStream,
+        service: Arc<dyn Service>,
+        stop: Arc<AtomicBool>,
+        parked: Arc<Mutex<Vec<TcpStream>>>,
+    ) {
+        const LINGER: std::time::Duration = std::time::Duration::from_micros(300);
+        // Fairness bound: a connection streaming back-to-back requests is
+        // re-parked after this many responses so the poller can
+        // round-robin workers across more saturating clients than
+        // `rpc_threads` — one hot peer cannot pin a worker indefinitely.
+        const MAX_REQUESTS_PER_DISPATCH: u32 = 128;
         let mut scratch = Vec::new();
+        let mut idle_since = std::time::Instant::now();
+        let mut served = 0u32;
         loop {
             if stop.load(Ordering::Acquire) {
-                return;
+                return; // drop the connection on shutdown
             }
-            let req = match read_frame(&mut stream, &mut scratch) {
-                Ok(r) => r,
-                Err(Error::Io(e))
-                    if matches!(
-                        e.kind(),
-                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                    ) =>
-                {
-                    continue; // poll for shutdown, then keep reading
+            if served >= MAX_REQUESTS_PER_DISPATCH {
+                parked.lock().unwrap().push(stream);
+                return; // yield the worker; the poller re-dispatches
+            }
+            let range = match read_frame_nonblocking(&mut stream, &mut scratch, &stop) {
+                Ok(Some(range)) => range,
+                Ok(None) => {
+                    if idle_since.elapsed() >= LINGER {
+                        // Connection went quiet: hand it to the poller.
+                        parked.lock().unwrap().push(stream);
+                        return;
+                    }
+                    std::thread::sleep(std::time::Duration::from_micros(20));
+                    continue;
                 }
                 Err(_) => return, // disconnect or corrupt stream
             };
+            let req = &scratch[range];
             if req.len() < 10 {
                 return;
             }
@@ -163,9 +395,12 @@ impl RpcServer {
                     resp.extend_from_slice(e.to_string().as_bytes());
                 }
             }
-            if write_frame(&mut stream, &resp).is_err() {
+            let framed = frame(&resp);
+            if write_all_nonblocking(&mut stream, &framed, &stop).is_err() {
                 return;
             }
+            served += 1;
+            idle_since = std::time::Instant::now();
         }
     }
 }
@@ -176,6 +411,11 @@ impl Drop for RpcServer {
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
+        // Join handler workers (in-flight tasks abort on their next nap,
+        // then the pool's Drop drains and joins). After this, no thread
+        // of this server remains.
+        self.pool.take();
+        self.parked.lock().unwrap().clear();
     }
 }
 
@@ -233,18 +473,19 @@ impl RpcClient {
         req.extend_from_slice(payload);
 
         let outcome = (|| -> Result<Vec<u8>> {
-            let stream = inner.stream.as_mut().unwrap();
+            // Disjoint borrows of the stream and the reusable scratch
+            // buffer; the response payload is parsed in place and only
+            // the body is copied out.
+            let ClientInner { stream, scratch } = &mut *inner;
+            let stream = stream.as_mut().unwrap();
             write_frame(stream, &req)?;
             // A slow server may interleave read timeouts; retry until the
             // client-level deadline elapses.
             let deadline = std::time::Instant::now() + self.timeout;
             loop {
-                let mut scratch = std::mem::take(&mut inner.scratch);
-                let stream = inner.stream.as_mut().unwrap();
-                let r = read_frame(stream, &mut scratch);
-                inner.scratch = scratch;
-                match r {
-                    Ok(resp) => {
+                match read_frame(stream, scratch) {
+                    Ok(range) => {
+                        let resp = &scratch[range];
                         if resp.len() < 9 {
                             return Err(Error::Rpc("short response".into()));
                         }
@@ -422,6 +663,40 @@ mod tests {
             Err(_) => return, // port grabbed by another process; skip rest
         };
         assert_eq!(client.call(0, b"x").unwrap(), b"x");
+    }
+
+    #[test]
+    fn pool_smaller_than_connection_fleet_still_serves() {
+        // 8 concurrent long-lived connections share 2 handler threads —
+        // the high fan-in shape the pooled server exists for.
+        let server = RpcServer::serve_pooled("127.0.0.1:0", Arc::new(Echo), 2).unwrap();
+        let addr = server.addr().to_string();
+        let mut handles = Vec::new();
+        for t in 0..8u8 {
+            let addr = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                let client = RpcClient::new(&addr, timeout());
+                for i in 0..25u32 {
+                    let payload = [t, i as u8];
+                    assert_eq!(client.call(1, &payload).unwrap(), [i as u8, t]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn drop_joins_threads_and_closes_connections() {
+        let server = RpcServer::serve("127.0.0.1:0", Arc::new(Echo)).unwrap();
+        let addr = server.addr().to_string();
+        let client = RpcClient::new(&addr, std::time::Duration::from_millis(500));
+        assert_eq!(client.call(0, b"x").unwrap(), b"x");
+        // Drop joins the accept thread and the handler pool and closes
+        // the parked connection; the client then fails fast.
+        drop(server);
+        assert!(client.call(0, b"y").is_err());
     }
 
     #[test]

@@ -130,7 +130,10 @@ impl MasterShard {
             shard_id,
             spec,
             state: RwLock::new(MasterState { sparse, dense, dense_synced }),
-            collector: Arc::new(Collector::new()),
+            // Same stripe count as the tables: the collector's per-stripe
+            // queues line up with the tables' lock stripes, so gather can
+            // snapshot its groups without re-hashing.
+            collector: Arc::new(Collector::with_stripes(stripes.max(1))),
             batched,
             clock,
             frozen: AtomicBool::new(false),
@@ -279,6 +282,18 @@ impl MasterShard {
     /// deletes so slaves drop the rows too. Walks one stripe at a time, so
     /// pushes/pulls on other stripes keep flowing. Returns evicted count.
     pub fn expire_features(&self, ttl_ms: u64) -> usize {
+        self.expire_features_pooled(ttl_ms, None)
+    }
+
+    /// [`Self::expire_features`] with the per-stripe scans fanned out over
+    /// `pool` (the cluster's shared sync pool). Eviction recording stays
+    /// in stripe order, so the sync-delete stream is identical to the
+    /// sequential pass.
+    pub fn expire_features_pooled(
+        &self,
+        ttl_ms: u64,
+        pool: Option<&crate::util::ThreadPool>,
+    ) -> usize {
         if ttl_ms == 0 {
             return 0;
         }
@@ -287,7 +302,7 @@ impl MasterShard {
         let mut total = 0;
         let mut evictions = Vec::new();
         for (idx, table) in state.sparse.iter().enumerate() {
-            let dead = table.expire(now, ttl_ms);
+            let dead = table.expire_pooled(now, ttl_ms, pool);
             total += dead.len();
             if !dead.is_empty() {
                 evictions.push((idx as u16, dead));
@@ -472,9 +487,29 @@ impl MasterShard {
     /// Ids are grouped by stripe internally, each stripe read-locked once,
     /// so a snapshot concurrent with `apply_batch` on other stripes never
     /// blocks.
-    pub fn read_rows_for_sync(&self, table: u16, ids: &[u64]) -> Vec<(u64, Option<Vec<f32>>)> {
+    pub fn read_rows_for_sync(&self, table: u16, ids: &[u64]) -> crate::table::RowSnapshot {
         let state = self.state.read().unwrap();
         state.sparse[table as usize].read_rows(ids)
+    }
+
+    /// Value snapshot for ids already grouped by lock stripe (the striped
+    /// collector's layout). Per-stripe reads run concurrently on `pool`
+    /// when given, each task holding only its stripe's read lock. Falls
+    /// back to a flat snapshot if the group count does not match the
+    /// table's stripes (e.g. a collector built with a different knob).
+    pub fn read_rows_for_sync_grouped(
+        &self,
+        table: u16,
+        groups: &[Vec<u64>],
+        pool: Option<&crate::util::ThreadPool>,
+    ) -> Vec<crate::table::RowSnapshot> {
+        let state = self.state.read().unwrap();
+        let t = &state.sparse[table as usize];
+        if groups.len() != t.stripe_count() {
+            let flat: Vec<u64> = groups.iter().flatten().copied().collect();
+            return vec![t.read_rows(&flat)];
+        }
+        t.read_rows_grouped(groups, pool)
     }
 
     /// Dense tables whose version advanced since the last sync flush;

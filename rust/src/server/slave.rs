@@ -14,7 +14,7 @@
 //! with streaming updates on other stripes.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::codec::{Decode, Encode, Reader};
 use crate::net::Service;
@@ -22,7 +22,9 @@ use crate::proto::{Ack, DensePull, DenseValues, SparsePull, SparseValues, SyncBa
 use crate::server::methods;
 use crate::sync::router::Router;
 use crate::sync::transform::Transform;
-use crate::util::hash::{fxhash64, FxHashMap};
+use crate::table::stripe_of_id;
+use crate::util::hash::FxHashMap;
+use crate::util::ThreadPool;
 use crate::{Error, Result};
 
 /// One serving table: id → transformed row, partitioned into lock stripes.
@@ -54,7 +56,7 @@ impl ServingTable {
     /// so stripe choice stays independent of shard routing).
     #[inline]
     fn stripe_of(&self, id: u64) -> usize {
-        ((fxhash64(id) >> 32) as usize) % self.stripes.len()
+        stripe_of_id(id, self.stripes.len())
     }
 
     /// Row count (sums stripes; exact at quiesce).
@@ -228,12 +230,26 @@ impl SlaveShard {
     /// Apply one streaming sync batch: filter ids to this shard, transform
     /// master rows to serving rows, upsert/delete; dense batches replace
     /// values wholesale. Idempotent (full-value upserts, §4.1d).
-    ///
-    /// Transforms run outside any lock; the writes are then grouped by
-    /// stripe and applied under one stripe write-lock per group, so
-    /// concurrent serving pulls only wait for the stripes actually being
-    /// written.
     pub fn apply_batch(&self, batch: &SyncBatch) -> Result<()> {
+        self.apply_batch_pooled(batch, None)
+    }
+
+    /// [`Self::apply_batch`] with the per-stripe work fanned out over
+    /// `pool` (the cluster's shared sync pool).
+    ///
+    /// Entries are grouped by stripe up front (one hash per id); then each
+    /// stripe's task transforms its master rows **outside** any lock and
+    /// applies them under that one stripe's write lock, so concurrent
+    /// serving pulls only wait for the stripes actually being written —
+    /// and with a pool, the transform+apply of different stripes overlaps.
+    /// On a transform error the failing stripe drops its entries and the
+    /// error is returned after the other stripes finish. The batch is
+    /// *not* retried — the scatter has already advanced past it
+    /// (deterministically bad batches must not wedge the stream), exactly
+    /// as the pre-pool path skipped a whole errored batch — so the
+    /// dropped rows stay stale until a later update re-dirties them or a
+    /// full sync rebuilds the replica.
+    pub fn apply_batch_pooled(&self, batch: &SyncBatch, pool: Option<&ThreadPool>) -> Result<()> {
         self.metrics.batches.fetch_add(1, Ordering::Relaxed);
         if !batch.dense.is_empty() {
             let mut dense = self.dense.write().unwrap();
@@ -268,31 +284,39 @@ impl SlaveShard {
             .ok_or_else(|| Error::NotFound(format!("serving table {}", batch.table)))?
             .1;
         debug_assert_eq!(table.width, width);
-        let mut applied = 0u64;
         let mut filtered = 0u64;
-        // Pre-transform outside the stripe locks, grouped by stripe.
-        let mut groups: Vec<Vec<(u64, Option<Vec<f32>>)>> =
-            vec![Vec::new(); table.stripe_count()];
-        for entry in &batch.entries {
+        // Group entry indexes by stripe (serial: one hash per id).
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); table.stripe_count()];
+        for (i, entry) in batch.entries.iter().enumerate() {
             if self.router.shard_of(entry.id) != self.shard_id {
                 filtered += 1;
                 continue;
             }
-            match &entry.op {
-                SyncOp::Upsert(row) => {
-                    if let Some(serving) = self.transform.transform(&batch.table, row)? {
-                        groups[table.stripe_of(entry.id)].push((entry.id, Some(serving)));
-                    }
-                }
-                SyncOp::Delete => {
-                    groups[table.stripe_of(entry.id)].push((entry.id, None));
-                }
-            }
+            groups[table.stripe_of(entry.id)].push(i);
         }
-        for (stripe, ops) in groups.into_iter().enumerate() {
-            if ops.is_empty() {
-                continue;
+        self.metrics.filtered_entries.fetch_add(filtered, Ordering::Relaxed);
+        let first_err: Mutex<Option<Error>> = Mutex::new(None);
+        let apply_stripe = |stripe: usize, idxs: &[usize]| {
+            let mut ops: Vec<(u64, Option<Vec<f32>>)> = Vec::with_capacity(idxs.len());
+            for &i in idxs {
+                let entry = &batch.entries[i];
+                match &entry.op {
+                    SyncOp::Upsert(row) => match self.transform.transform(&batch.table, row) {
+                        Ok(Some(serving)) => ops.push((entry.id, Some(serving))),
+                        Ok(None) => {}
+                        Err(e) => {
+                            first_err.lock().unwrap().get_or_insert(e);
+                            return;
+                        }
+                    },
+                    SyncOp::Delete => ops.push((entry.id, None)),
+                }
             }
+            if ops.is_empty() {
+                return;
+            }
+            let mut applied = 0u64;
+            let mut deleted = 0u64;
             let mut rows = table.stripes[stripe].write().unwrap();
             for (id, op) in ops {
                 match op {
@@ -302,16 +326,42 @@ impl SlaveShard {
                     }
                     None => {
                         if rows.remove(&id).is_some() {
-                            self.metrics.deletes.fetch_add(1, Ordering::Relaxed);
+                            deleted += 1;
                         }
                         applied += 1;
                     }
                 }
             }
+            drop(rows);
+            self.metrics.applied_entries.fetch_add(applied, Ordering::Relaxed);
+            self.metrics.deletes.fetch_add(deleted, Ordering::Relaxed);
+        };
+        let busy = groups.iter().filter(|g| !g.is_empty()).count();
+        match pool {
+            Some(pool) if busy > 1 => {
+                let apply_stripe = &apply_stripe;
+                let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = groups
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, g)| !g.is_empty())
+                    .map(|(s, g)| {
+                        Box::new(move || apply_stripe(s, g)) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                pool.run_borrowed(tasks);
+            }
+            _ => {
+                for (s, g) in groups.iter().enumerate() {
+                    if !g.is_empty() {
+                        apply_stripe(s, g);
+                    }
+                }
+            }
         }
-        self.metrics.applied_entries.fetch_add(applied, Ordering::Relaxed);
-        self.metrics.filtered_entries.fetch_add(filtered, Ordering::Relaxed);
-        Ok(())
+        match first_err.into_inner().unwrap() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 
     /// Full synchronization (§4.1, §4.2.2): bootstrap this replica from a
@@ -541,6 +591,41 @@ mod tests {
         s.apply_batch(&batch("w", vec![SyncEntry { id: 7, op: SyncOp::Delete }])).unwrap();
         assert_eq!(s.total_rows(), 0);
         assert_eq!(s.metrics.deletes.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn pooled_apply_matches_sequential() {
+        let pool = ThreadPool::new(4, "scatter-test");
+        let entries: Vec<SyncEntry> = (0..500u64)
+            .map(|id| SyncEntry {
+                id,
+                op: SyncOp::Upsert(vec![2.0, 1.0, -0.25 - id as f32 * 1e-3]),
+            })
+            .chain((0..10u64).map(|id| SyncEntry { id: id * 7, op: SyncOp::Delete }))
+            .collect();
+        let b = batch("w", entries);
+        let seq = slave(0, 1);
+        seq.apply_batch(&b).unwrap();
+        let par = slave(0, 1);
+        par.apply_batch_pooled(&b, Some(&pool)).unwrap();
+        assert_eq!(seq.total_rows(), par.total_rows());
+        let ids: Vec<u64> = (0..500).collect();
+        let a = seq
+            .sparse_pull(&SparsePull {
+                model: "ctr".into(),
+                table: "w".into(),
+                ids: ids.clone(),
+                slot: "w".into(),
+            })
+            .unwrap();
+        let c = par
+            .sparse_pull(&SparsePull { model: "ctr".into(), table: "w".into(), ids, slot: "w".into() })
+            .unwrap();
+        assert_eq!(a, c, "pooled scatter apply diverged from sequential");
+        assert_eq!(
+            seq.metrics.applied_entries.load(Ordering::Relaxed),
+            par.metrics.applied_entries.load(Ordering::Relaxed)
+        );
     }
 
     #[test]

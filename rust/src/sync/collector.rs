@@ -7,16 +7,22 @@
 //! operation type. This procedure does not retain the model increment."
 //!
 //! Exactly that: push handlers (any thread) record `(table, id, op)`
-//! triples into a [`LockFreeQueue`]; the gather thread drains and dedups.
+//! triples into lock-free queues; the gather thread drains and dedups.
 //! Values are *not* captured here — gather reads the current row state at
-//! flush time, which is what makes replay idempotent (§4.1d). With the
-//! lock-striped tables, push handlers on different stripes feed this
-//! queue truly concurrently (the queue was always MPSC; the stripes make
-//! the producers actually parallel), and the flush-time snapshot re-groups
-//! the deduped ids by stripe on the read side.
+//! flush time, which is what makes replay idempotent (§4.1d).
+//!
+//! The collector is **striped**: one [`LockFreeQueue`] per table lock
+//! stripe, keyed by the same [`stripe_of_id`] hash as the parameter
+//! tables. Push handlers working different stripes stop contending on a
+//! single MPSC tail, and the gather thread receives events already
+//! grouped by stripe ([`Collector::drain_grouped`]) — the flush-time
+//! re-hash of deduped ids the single-queue design needed is gone, and the
+//! per-stripe groups feed straight into the parallel snapshot
+//! (`StripedSparseTable::read_rows_grouped`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::table::stripe_of_id;
 use crate::util::LockFreeQueue;
 
 /// What happened to the id.
@@ -37,44 +43,84 @@ pub struct DirtyEvent {
     pub op: DirtyOp,
 }
 
-/// Lock-free dirty-id collector for one master shard.
-#[derive(Default)]
+/// Lock-free, stripe-partitioned dirty-id collector for one master shard.
 pub struct Collector {
-    queue: LockFreeQueue<DirtyEvent>,
+    /// One MPSC queue per table lock stripe.
+    queues: Vec<LockFreeQueue<DirtyEvent>>,
     recorded: AtomicU64,
 }
 
+impl Default for Collector {
+    fn default() -> Collector {
+        Collector::new()
+    }
+}
+
 impl Collector {
-    /// Empty collector.
+    /// Empty collector with the default stripe count.
     pub fn new() -> Collector {
-        Collector { queue: LockFreeQueue::new(), recorded: AtomicU64::new(0) }
+        Collector::with_stripes(crate::table::default_stripe_count())
+    }
+
+    /// Empty collector with one queue per table lock stripe (min 1). Must
+    /// match the stripe count of the tables feeding it so the groups line
+    /// up with the tables' lock stripes (the master shard constructs both
+    /// from the same knob).
+    pub fn with_stripes(stripes: usize) -> Collector {
+        Collector {
+            queues: (0..stripes.max(1)).map(|_| LockFreeQueue::new()).collect(),
+            recorded: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of stripe queues.
+    pub fn stripe_count(&self) -> usize {
+        self.queues.len()
+    }
+
+    #[inline]
+    fn record(&self, table: u16, ids: &[u64], op: DirtyOp) {
+        for &id in ids {
+            self.queues[stripe_of_id(id, self.queues.len())]
+                .push(DirtyEvent { table, id, op });
+        }
+        self.recorded.fetch_add(ids.len() as u64, Ordering::Relaxed);
     }
 
     /// Record updated ids for a table (called from push handlers).
     pub fn record_updates(&self, table: u16, ids: &[u64]) {
-        for &id in ids {
-            self.queue.push(DirtyEvent { table, id, op: DirtyOp::Update });
-        }
-        self.recorded.fetch_add(ids.len() as u64, Ordering::Relaxed);
+        self.record(table, ids, DirtyOp::Update);
     }
 
     /// Record deleted ids for a table (feature expire).
     pub fn record_deletes(&self, table: u16, ids: &[u64]) {
-        for &id in ids {
-            self.queue.push(DirtyEvent { table, id, op: DirtyOp::Delete });
-        }
-        self.recorded.fetch_add(ids.len() as u64, Ordering::Relaxed);
+        self.record(table, ids, DirtyOp::Delete);
     }
 
-    /// Drain all pending events into `out` (single consumer: the gather
-    /// thread). Returns the number drained.
+    /// Drain all pending events into `out`, stripe by stripe in stripe
+    /// order (single consumer: the gather thread). Returns the number
+    /// drained.
     pub fn drain(&self, out: &mut Vec<DirtyEvent>) -> usize {
-        self.queue.drain_into(out)
+        self.queues.iter().map(|q| q.drain_into(out)).sum()
+    }
+
+    /// Drain all pending events grouped by stripe: `out[s]` receives
+    /// stripe `s`'s events in arrival order. `out` is resized to the
+    /// stripe count; existing contents of its inner vectors are kept
+    /// (callers clear between polls to reuse capacity). Returns the
+    /// number drained.
+    pub fn drain_grouped(&self, out: &mut Vec<Vec<DirtyEvent>>) -> usize {
+        out.resize_with(self.queues.len(), Vec::new);
+        self.queues
+            .iter()
+            .zip(out.iter_mut())
+            .map(|(q, slot)| q.drain_into(slot))
+            .sum()
     }
 
     /// Events currently queued (approximate).
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        self.queues.iter().map(|q| q.len()).sum()
     }
 
     /// Total events ever recorded (the raw update stream size — numerator
@@ -90,27 +136,50 @@ mod tests {
     use std::sync::Arc;
 
     #[test]
-    fn records_and_drains_in_order() {
-        let c = Collector::new();
+    fn records_and_drains_everything() {
+        let c = Collector::with_stripes(4);
         c.record_updates(0, &[1, 2]);
         c.record_deletes(1, &[3]);
         let mut out = Vec::new();
         assert_eq!(c.drain(&mut out), 3);
-        assert_eq!(
-            out,
-            vec![
-                DirtyEvent { table: 0, id: 1, op: DirtyOp::Update },
-                DirtyEvent { table: 0, id: 2, op: DirtyOp::Update },
-                DirtyEvent { table: 1, id: 3, op: DirtyOp::Delete },
-            ]
-        );
+        assert_eq!(out.len(), 3);
+        assert!(out.contains(&DirtyEvent { table: 0, id: 1, op: DirtyOp::Update }));
+        assert!(out.contains(&DirtyEvent { table: 0, id: 2, op: DirtyOp::Update }));
+        assert!(out.contains(&DirtyEvent { table: 1, id: 3, op: DirtyOp::Delete }));
         assert_eq!(c.total_recorded(), 3);
         assert_eq!(c.pending(), 0);
     }
 
     #[test]
+    fn drain_grouped_routes_by_stripe_hash() {
+        let c = Collector::with_stripes(8);
+        let ids: Vec<u64> = (0..200).collect();
+        c.record_updates(0, &ids);
+        let mut out = Vec::new();
+        assert_eq!(c.drain_grouped(&mut out), 200);
+        assert_eq!(out.len(), 8);
+        for (s, events) in out.iter().enumerate() {
+            for ev in events {
+                assert_eq!(stripe_of_id(ev.id, 8), s, "id {} in wrong stripe", ev.id);
+            }
+        }
+        // Per-stripe arrival order is preserved (single producer here).
+        for events in &out {
+            let ids: Vec<u64> = events.iter().map(|e| e.id).collect();
+            let mut sorted = ids.clone();
+            sorted.sort_unstable();
+            assert_eq!(ids, sorted);
+        }
+        assert_eq!(out.iter().map(Vec::len).sum::<usize>(), 200);
+        // Reused buffers accumulate unless cleared by the caller.
+        c.record_updates(0, &[7]);
+        assert_eq!(c.drain_grouped(&mut out), 1);
+        assert_eq!(out.iter().map(Vec::len).sum::<usize>(), 201);
+    }
+
+    #[test]
     fn concurrent_pushers_lose_nothing() {
-        let c = Arc::new(Collector::new());
+        let c = Arc::new(Collector::with_stripes(8));
         let mut handles = Vec::new();
         for t in 0..4u16 {
             let c = c.clone();

@@ -13,11 +13,21 @@
 //! many times it changed (§4.1d's ID-granularity eventual consistency).
 //! [`GatherStats`] records raw vs deduped counts — experiment E2.
 //!
-//! Value snapshots go through the master's lock-striped tables
-//! ([`MasterShard::read_rows_for_sync`]): the flush groups each table's
-//! dirty ids by stripe and takes one stripe *read* lock per group, so a
-//! gather snapshot runs concurrently with optimizer applies on every
-//! other stripe instead of serializing behind a whole-table lock.
+//! Value snapshots go through the master's lock-striped tables: the
+//! striped collector hands this worker events **already grouped by
+//! stripe**, the dedup window is kept per stripe, and the flush passes
+//! those groups straight to
+//! [`MasterShard::read_rows_for_sync_grouped`] — no flush-time re-hash.
+//! With a shared [`ThreadPool`], the per-stripe snapshots run
+//! concurrently, each holding only its own stripe's *read* lock inside
+//! the task, so a gather flush overlaps optimizer applies on every other
+//! stripe *and* parallelizes its own value reads.
+//!
+//! Determinism: each flushed batch's entries are sorted by id before
+//! emission. One entry exists per id (the window dedups), so the sort is
+//! a total order and the encoded batch bytes are identical for any
+//! stripe count and any pool size — the property the sync-pipeline bench
+//! asserts, and what keeps replica replay byte-stable.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -29,6 +39,7 @@ use crate::server::master::MasterShard;
 use crate::sync::collector::{DirtyEvent, DirtyOp};
 use crate::util::clock::Clock;
 use crate::util::hash::FxHashMap;
+use crate::util::ThreadPool;
 
 /// Bandwidth/dedup accounting (E2).
 #[derive(Debug, Default)]
@@ -63,23 +74,40 @@ pub struct Gather {
     master: Arc<MasterShard>,
     mode: GatherMode,
     clock: Arc<dyn Clock>,
-    /// Dirty window: table -> id -> latest op.
-    window: BTreeMap<u16, FxHashMap<u64, DirtyOp>>,
+    /// Shared sync pool for parallel per-stripe value snapshots
+    /// (`None` = sequential).
+    pool: Option<Arc<ThreadPool>>,
+    /// Dirty window: table -> per-stripe (id -> latest op). The stripe
+    /// index matches the collector's (and therefore the table's) stripes,
+    /// so flush hands groups to the snapshot without re-hashing.
+    window: BTreeMap<u16, Vec<FxHashMap<u64, DirtyOp>>>,
     window_distinct: usize,
     last_flush_ms: u64,
-    scratch: Vec<DirtyEvent>,
+    scratch: Vec<Vec<DirtyEvent>>,
     seq: u64,
     pub stats: GatherStats,
 }
 
 impl Gather {
-    /// New gather worker.
+    /// New gather worker (sequential snapshots).
     pub fn new(master: Arc<MasterShard>, mode: GatherMode, clock: Arc<dyn Clock>) -> Gather {
+        Self::with_pool(master, mode, clock, None)
+    }
+
+    /// New gather worker snapshotting stripes on `pool` (typically the
+    /// cluster's shared sync pool).
+    pub fn with_pool(
+        master: Arc<MasterShard>,
+        mode: GatherMode,
+        clock: Arc<dyn Clock>,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> Gather {
         let now = clock.now_ms();
         Gather {
             master,
             mode,
             clock,
+            pool,
             window: BTreeMap::new(),
             window_distinct: 0,
             last_flush_ms: now,
@@ -91,18 +119,29 @@ impl Gather {
 
     /// Drain newly collected events into the dedup window.
     fn absorb(&mut self) {
-        self.scratch.clear();
-        let drained = self.master.collector().drain(&mut self.scratch);
+        for stripe in &mut self.scratch {
+            stripe.clear();
+        }
+        let collector = self.master.collector();
+        let drained = collector.drain_grouped(&mut self.scratch);
         if drained == 0 {
             return;
         }
+        let stripes = collector.stripe_count();
         self.stats.raw_events.fetch_add(drained as u64, Ordering::Relaxed);
-        for ev in &self.scratch {
-            let table = self.window.entry(ev.table).or_default();
-            // Last op wins within the window (delete after update = delete;
-            // update after delete = update with the new full value).
-            if table.insert(ev.id, ev.op).is_none() {
-                self.window_distinct += 1;
+        for (s, events) in self.scratch.iter().enumerate() {
+            for ev in events {
+                let table = self
+                    .window
+                    .entry(ev.table)
+                    .or_insert_with(|| (0..stripes).map(|_| FxHashMap::default()).collect());
+                // Last op wins within the window (delete after update =
+                // delete; update after delete = update with the new full
+                // value). Ids hash to exactly one stripe, so per-stripe
+                // maps dedup exactly like the old single map.
+                if table[s].insert(ev.id, ev.op).is_none() {
+                    self.window_distinct += 1;
+                }
             }
         }
     }
@@ -180,21 +219,33 @@ impl Gather {
         let window = std::mem::take(&mut self.window);
         self.window_distinct = 0;
         self.last_flush_ms = now;
-        for (table_idx, ids) in window {
+        for (table_idx, stripes) in window {
             let table_name = self.master.spec.sparse[table_idx as usize].name.clone();
-            let mut upsert_ids = Vec::new();
             let mut entries = Vec::new();
-            for (id, op) in &ids {
-                match op {
-                    DirtyOp::Update => upsert_ids.push(*id),
-                    DirtyOp::Delete => entries.push(SyncEntry { id: *id, op: SyncOp::Delete }),
+            let mut upsert_groups: Vec<Vec<u64>> = Vec::with_capacity(stripes.len());
+            for stripe in &stripes {
+                let mut group = Vec::new();
+                for (id, op) in stripe {
+                    match op {
+                        DirtyOp::Update => group.push(*id),
+                        DirtyOp::Delete => {
+                            entries.push(SyncEntry { id: *id, op: SyncOp::Delete })
+                        }
+                    }
                 }
+                upsert_groups.push(group);
             }
             // Snapshot current full values (not increments): replay-safe.
-            // The master groups these ids by lock stripe internally —
-            // one stripe read-lock per group, concurrent with pushes on
-            // other stripes.
-            for (id, row) in self.master.read_rows_for_sync(table_idx, &upsert_ids) {
+            // The groups are already the table's lock stripes, so each
+            // stripe takes its read lock once — in parallel on the shared
+            // pool when one is attached — concurrent with pushes on every
+            // other stripe.
+            let snapshots = self.master.read_rows_for_sync_grouped(
+                table_idx,
+                &upsert_groups,
+                self.pool.as_deref(),
+            );
+            for (id, row) in snapshots.into_iter().flatten() {
                 match row {
                     Some(values) => entries.push(SyncEntry { id, op: SyncOp::Upsert(values) }),
                     // Row vanished between update and flush (expired):
@@ -205,6 +256,10 @@ impl Gather {
             if entries.is_empty() {
                 continue;
             }
+            // One entry per id (windowed dedup), so sorting by id is a
+            // total order: batch bytes are identical for any stripe count
+            // or pool size.
+            entries.sort_unstable_by_key(|e| e.id);
             self.stats
                 .emitted_entries
                 .fetch_add(entries.len() as u64, Ordering::Relaxed);
@@ -368,6 +423,53 @@ mod tests {
         assert!(g.poll().is_empty());
         let batches = g.flush_now();
         assert!(batches.iter().any(|b| b.table == "w"));
+    }
+
+    #[test]
+    fn flush_bytes_identical_across_stripe_counts_and_pools() {
+        use crate::codec::Encode;
+        let cfg = ModelConfig {
+            batch_train: 8,
+            batch_predict: 2,
+            fields: 4,
+            dim: 2,
+            hidden: 8,
+            ftrl_block_rows: 64,
+            ftrl_alpha: 0.05,
+            ftrl_beta: 1.0,
+            ftrl_l1: 1.0,
+            ftrl_l2: 1.0,
+        };
+        let mut blobs = Vec::new();
+        for (stripes, threads) in [(1usize, 0usize), (8, 0), (8, 4), (32, 2)] {
+            let spec = ModelSpec::derive("ctr", ModelKind::Fm, &cfg);
+            let clock = ManualClock::new(0);
+            let m = Arc::new(
+                MasterShard::with_stripes(0, spec, None, 1, stripes, Arc::new(clock.clone()))
+                    .unwrap(),
+            );
+            let pool = if threads > 0 {
+                Some(Arc::new(crate::util::ThreadPool::new(threads, "gather-det")))
+            } else {
+                None
+            };
+            let mut g = Gather::with_pool(
+                m.clone(),
+                GatherMode::Threshold(1_000_000),
+                Arc::new(clock.clone()),
+                pool,
+            );
+            for i in 0..300u64 {
+                push(&m, vec![i % 97, i]);
+            }
+            m.collector().record_deletes(0, &[10_000]);
+            let bytes: Vec<u8> = g.flush_now().iter().flat_map(|b| b.to_bytes()).collect();
+            assert!(!bytes.is_empty());
+            blobs.push(bytes);
+        }
+        for b in &blobs[1..] {
+            assert_eq!(b, &blobs[0], "sync-batch bytes differ across stripes/pool sizes");
+        }
     }
 
     #[test]

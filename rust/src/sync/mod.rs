@@ -5,7 +5,8 @@
 //!  ───────────────  ┌───────────────────────────────────┐  ───────────────
 //!  optimizer apply ─► collector ─► gather ─► pusher ─► queue ─► scatter ─►
 //!  (dirty ids)        lock-free    dedup +    serialize  parts   route +
-//!                     id queue     snapshot   compress           transform
+//!                     per-stripe   pooled     compress           pooled
+//!                     id queues    snapshot                      apply
 //! ```
 //!
 //! Eventual consistency contract (§4.1d): every upsert carries the id's

@@ -24,7 +24,7 @@ use crate::queue::log::SyncLog;
 use crate::server::slave::SlaveShard;
 use crate::sync::router::partitions_for_slave;
 use crate::util::clock::Clock;
-use crate::util::Histogram;
+use crate::util::{Histogram, ThreadPool};
 use crate::{Error, Result};
 
 /// Scatter-side accounting (E1: sync latency lives here).
@@ -41,6 +41,9 @@ pub struct Scatter {
     log: Arc<dyn SyncLog>,
     slave: Arc<SlaveShard>,
     clock: Arc<dyn Clock>,
+    /// Shared sync pool for parallel per-stripe applies
+    /// (`None` = sequential).
+    pool: Option<Arc<ThreadPool>>,
     /// (partition, next offset) pairs this scatter consumes.
     cursors: Vec<(u32, u64)>,
     pub stats: ScatterStats,
@@ -48,13 +51,27 @@ pub struct Scatter {
 
 impl Scatter {
     /// Build a scatter for `slave`, subscribing to the partition subset
-    /// implied by the topology.
+    /// implied by the topology (sequential applies).
     pub fn new(
         log: Arc<dyn SyncLog>,
         slave: Arc<SlaveShard>,
         master_shards: u32,
         slave_shards: u32,
         clock: Arc<dyn Clock>,
+    ) -> Scatter {
+        Self::with_pool(log, slave, master_shards, slave_shards, clock, None)
+    }
+
+    /// [`Self::new`] applying batches over `pool` (typically the cluster's
+    /// shared sync pool): each batch's per-stripe transform+upsert work
+    /// fans out across pool threads.
+    pub fn with_pool(
+        log: Arc<dyn SyncLog>,
+        slave: Arc<SlaveShard>,
+        master_shards: u32,
+        slave_shards: u32,
+        clock: Arc<dyn Clock>,
+        pool: Option<Arc<ThreadPool>>,
     ) -> Scatter {
         let parts = partitions_for_slave(
             master_shards,
@@ -63,7 +80,7 @@ impl Scatter {
             slave.shard_id,
         );
         let cursors = parts.into_iter().map(|p| (p, 0u64)).collect();
-        Scatter { log, slave, clock, cursors, stats: ScatterStats::default() }
+        Scatter { log, slave, clock, pool, cursors, stats: ScatterStats::default() }
     }
 
     /// Partitions this scatter consumes.
@@ -139,7 +156,7 @@ impl Scatter {
                         }
                     };
                     let lat = now_fn.now_ms().saturating_sub(batch.created_ms);
-                    self.slave.apply_batch(&batch)?;
+                    self.slave.apply_batch_pooled(&batch, self.pool.as_deref())?;
                     self.stats.latency_ms.record(lat);
                     self.stats.batches_applied.fetch_add(1, Ordering::Relaxed);
                     applied += 1;

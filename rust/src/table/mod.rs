@@ -24,6 +24,7 @@
 use crate::codec::{Encode, Reader, Writer};
 use crate::optim::Optimizer;
 use crate::util::hash::{fxhash64, FxHashMap};
+use crate::util::ThreadPool;
 use crate::{Error, Result};
 use std::sync::{Arc, RwLock};
 
@@ -41,6 +42,20 @@ pub fn default_stripe_count() -> usize {
             .unwrap_or(8)
     })
 }
+
+/// Owning stripe for an id among `stripes` stripes. The single source of
+/// truth for stripe selection: the master tables, the slave serving
+/// tables and the sync collector all key on this, which is what lets the
+/// collector's per-stripe queues line up with the tables' lock stripes.
+/// Uses the *high* 32 bits of `fxhash64(id)` so stripe choice stays
+/// independent of the shard router (which keys on the low bits).
+#[inline]
+pub fn stripe_of_id(id: u64, stripes: usize) -> usize {
+    ((fxhash64(id) >> 32) as usize) % stripes.max(1)
+}
+
+/// One table's value snapshot: (id, full row values or `None` if absent).
+pub type RowSnapshot = Vec<(u64, Option<Vec<f32>>)>;
 
 /// One sparse row.
 #[derive(Debug, Clone, PartialEq)]
@@ -455,7 +470,7 @@ impl StripedSparseTable {
     /// Owning stripe for an id.
     #[inline]
     pub fn stripe_of(&self, id: u64) -> usize {
-        ((fxhash64(id) >> 32) as usize) % self.stripes.len()
+        stripe_of_id(id, self.stripes.len())
     }
 
     fn row_width(&self) -> usize {
@@ -737,8 +752,15 @@ impl StripedSparseTable {
     /// evicted ids (propagated to slaves as sync deletes). Probation
     /// entries age out wholesale per stripe, matching [`SparseTable`].
     pub fn expire(&self, now_ms: u64, ttl_ms: u64) -> Vec<u64> {
-        let mut dead = Vec::new();
-        for stripe in &self.stripes {
+        self.expire_pooled(now_ms, ttl_ms, None)
+    }
+
+    /// [`Self::expire`] with the per-stripe scan+evict fanned out over
+    /// `pool` (one task per stripe, each under its own stripe write lock).
+    /// Evicted ids come back merged in stripe order regardless of pool
+    /// size, so downstream sync-delete recording stays deterministic.
+    pub fn expire_pooled(&self, now_ms: u64, ttl_ms: u64, pool: Option<&ThreadPool>) -> Vec<u64> {
+        let expire_stripe = |stripe: &RwLock<Stripe>| -> Vec<u64> {
             let mut s = stripe.write().unwrap();
             let stripe_dead: Vec<u64> = s
                 .rows
@@ -750,9 +772,30 @@ impl StripedSparseTable {
                 s.rows.remove(id);
             }
             s.probation.clear();
-            dead.extend(stripe_dead);
+            stripe_dead
+        };
+        let mut per_stripe: Vec<Vec<u64>> = (0..self.stripes.len()).map(|_| Vec::new()).collect();
+        match pool {
+            Some(pool) if self.stripes.len() > 1 => {
+                let expire_stripe = &expire_stripe;
+                let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = per_stripe
+                    .iter_mut()
+                    .zip(&self.stripes)
+                    .map(|(slot, stripe)| {
+                        Box::new(move || {
+                            *slot = expire_stripe(stripe);
+                        }) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                pool.run_borrowed(tasks);
+            }
+            _ => {
+                for (slot, stripe) in per_stripe.iter_mut().zip(&self.stripes) {
+                    *slot = expire_stripe(stripe);
+                }
+            }
         }
-        dead
+        per_stripe.into_iter().flatten().collect()
     }
 
     /// All materialized ids (stripe order; no access-time touch).
@@ -768,7 +811,7 @@ impl StripedSparseTable {
     /// (gather's value snapshot). One stripe read-lock per touched stripe,
     /// so a snapshot never blocks behind writes on other stripes. Results
     /// come back grouped by stripe.
-    pub fn read_rows(&self, ids: &[u64]) -> Vec<(u64, Option<Vec<f32>>)> {
+    pub fn read_rows(&self, ids: &[u64]) -> RowSnapshot {
         let mut out = Vec::with_capacity(ids.len());
         for (stripe, (_, sids)) in self.group_by_stripe(ids).into_iter().enumerate() {
             if sids.is_empty() {
@@ -777,6 +820,62 @@ impl StripedSparseTable {
             let s = self.stripes[stripe].read().unwrap();
             for id in sids {
                 out.push((id, s.rows.get(&id).map(|r| r.values.to_vec())));
+            }
+        }
+        out
+    }
+
+    /// Snapshot full rows for ids already grouped by stripe — the striped
+    /// collector hands gather exactly this shape, so no flush-time re-hash
+    /// is needed. `groups[s]` must hold only ids whose [`Self::stripe_of`]
+    /// is `s` and `groups.len()` must equal the stripe count (callers
+    /// built from the same-striped collector satisfy both by
+    /// construction). Each stripe's snapshot runs under that stripe's
+    /// *read* lock only; with `pool`, non-empty stripes snapshot
+    /// concurrently (read-lock held only inside the task). Results come
+    /// back per stripe, in stripe order, independent of pool size.
+    pub fn read_rows_grouped(
+        &self,
+        groups: &[Vec<u64>],
+        pool: Option<&ThreadPool>,
+    ) -> Vec<RowSnapshot> {
+        debug_assert_eq!(groups.len(), self.stripes.len());
+        debug_assert!(groups
+            .iter()
+            .enumerate()
+            .all(|(s, g)| g.iter().all(|&id| self.stripe_of(id) == s)));
+        let snapshot_stripe = |stripe: &RwLock<Stripe>, ids: &[u64]| -> RowSnapshot {
+            let s = stripe.read().unwrap();
+            ids.iter()
+                .map(|id| (*id, s.rows.get(id).map(|r| r.values.to_vec())))
+                .collect()
+        };
+        let mut out: Vec<RowSnapshot> = (0..groups.len()).map(|_| Vec::new()).collect();
+        let busy = groups.iter().filter(|g| !g.is_empty()).count();
+        match pool {
+            // With one busy stripe there is nothing to overlap; skip the
+            // pool round-trip.
+            Some(pool) if busy > 1 => {
+                let snapshot_stripe = &snapshot_stripe;
+                let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+                    .iter_mut()
+                    .zip(&self.stripes)
+                    .zip(groups)
+                    .filter(|((_, _), g)| !g.is_empty())
+                    .map(|((slot, stripe), g)| {
+                        Box::new(move || {
+                            *slot = snapshot_stripe(stripe, g);
+                        }) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                pool.run_borrowed(tasks);
+            }
+            _ => {
+                for ((slot, stripe), g) in out.iter_mut().zip(&self.stripes).zip(groups) {
+                    if !g.is_empty() {
+                        *slot = snapshot_stripe(stripe, g);
+                    }
+                }
             }
         }
         out
@@ -1368,6 +1467,50 @@ mod tests {
         t.pull_slot(&ids, "w", 0, &mut out).unwrap();
         // SGD with lr 1.0 and grad -1.0 for `rounds` rounds => w == rounds.
         assert!(out.iter().all(|&v| v == rounds as f32), "lost updates under contention");
+    }
+
+    #[test]
+    fn striped_grouped_snapshot_matches_flat_and_pool() {
+        let t = striped(1, 8);
+        let ids: Vec<u64> = (0..500).collect();
+        t.apply_batch(&ids, &vec![0.2f32; ids.len() * 2], 5);
+        let mut groups: Vec<Vec<u64>> = vec![Vec::new(); t.stripe_count()];
+        for &id in &ids {
+            groups[t.stripe_of(id)].push(id);
+        }
+        let flat = t.read_rows(&ids);
+        let seq = t.read_rows_grouped(&groups, None);
+        let pool = ThreadPool::new(4, "snap");
+        let par = t.read_rows_grouped(&groups, Some(&pool));
+        assert_eq!(seq, par, "pooled snapshot diverged from sequential");
+        let merged: RowSnapshot = seq.into_iter().flatten().collect();
+        assert_eq!(merged, flat, "grouped snapshot diverged from flat read_rows");
+        // Missing ids read back None through the grouped path too.
+        let mut missing: Vec<Vec<u64>> = vec![Vec::new(); t.stripe_count()];
+        missing[t.stripe_of(1_000_000)].push(1_000_000);
+        let snap = t.read_rows_grouped(&missing, Some(&pool));
+        assert!(snap.iter().flatten().all(|(_, r)| r.is_none()));
+    }
+
+    #[test]
+    fn striped_expire_pooled_matches_sequential() {
+        let pool = ThreadPool::new(4, "expire");
+        let build = || {
+            let t = striped(1, 8);
+            t.apply_batch(&(0..100u64).collect::<Vec<_>>(), &vec![1.0f32; 200], 1_000);
+            t.apply_batch(&(100..200u64).collect::<Vec<_>>(), &vec![1.0f32; 200], 9_000);
+            t
+        };
+        let a = build();
+        let b = build();
+        let dead_seq = a.expire_pooled(10_000, 5_000, None);
+        let dead_par = b.expire_pooled(10_000, 5_000, Some(&pool));
+        assert_eq!(dead_seq, dead_par, "pooled expire order diverged");
+        let mut sorted = dead_par.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100u64).collect::<Vec<_>>());
+        assert_eq!(a.len(), 100);
+        assert_eq!(b.len(), 100);
     }
 
     #[test]

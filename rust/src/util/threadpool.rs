@@ -1,10 +1,23 @@
 //! Fixed-size thread pool (no tokio in the offline build environment).
 //!
-//! Used by the RPC server (per-connection handlers), the checkpoint writer
-//! (asynchronous saving, paper §4.2.1a) and the scatter appliers. Tasks are
+//! Used by the RPC server (pooled connection handlers), the checkpoint
+//! writer (asynchronous saving, paper §4.2.1a) and the parallel sync
+//! pipeline (gather snapshots, scatter applies, expire passes). Tasks are
 //! boxed closures; `join` blocks until all submitted work has drained.
+//!
+//! Panic safety: a panicking task decrements `pending` through a drop
+//! guard (so `join` never hangs on a poisoned count) and the worker thread
+//! survives via `catch_unwind`, so the pool keeps its full parallelism for
+//! the tasks that follow.
+//!
+//! [`ThreadPool::run_borrowed`] is the scoped entry point the sync
+//! pipeline uses: it submits closures that borrow from the caller's stack
+//! (per-stripe table references, result slots) and blocks until every one
+//! of them has finished before returning, which is what makes the borrow
+//! sound. Never call it from inside a task running on the same pool — the
+//! caller would occupy a worker while waiting for workers.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -16,11 +29,49 @@ struct Shared {
     done_mu: Mutex<()>,
 }
 
+/// Decrements `pending` and notifies `join`ers on drop — runs on normal
+/// completion *and* during unwind, so a panicking task can never strand
+/// the count.
+struct PendingGuard<'a>(&'a Shared);
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        if self.0.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = self.0.done_mu.lock().unwrap();
+            self.0.done_cv.notify_all();
+        }
+    }
+}
+
+/// Completion latch for one [`ThreadPool::run_borrowed`] call: counts the
+/// batch's own tasks (not the whole pool), records whether any panicked.
+struct Latch {
+    remaining: AtomicUsize,
+    cv: Condvar,
+    mu: Mutex<()>,
+    panicked: AtomicBool,
+}
+
+struct LatchGuard(Arc<Latch>);
+
+impl Drop for LatchGuard {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.panicked.store(true, Ordering::Release);
+        }
+        if self.0.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = self.0.mu.lock().unwrap();
+            self.0.cv.notify_all();
+        }
+    }
+}
+
 /// Fixed-size pool of worker threads consuming a shared task channel.
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Task>>,
     workers: Vec<JoinHandle<()>>,
     shared: Arc<Shared>,
+    size: usize,
 }
 
 impl ThreadPool {
@@ -47,11 +98,14 @@ impl ThreadPool {
                     };
                     match task {
                         Ok(task) => {
-                            task();
-                            if shared.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
-                                let _g = shared.done_mu.lock().unwrap();
-                                shared.done_cv.notify_all();
-                            }
+                            let guard = PendingGuard(&shared);
+                            // The worker must outlive a panicking task;
+                            // the pending count is kept honest by the
+                            // guard's drop either way.
+                            let _ = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(task),
+                            );
+                            drop(guard);
                         }
                         Err(_) => break, // channel closed => shutdown
                     }
@@ -59,7 +113,12 @@ impl ThreadPool {
                 .expect("spawn worker");
             workers.push(handle);
         }
-        ThreadPool { tx: Some(tx), workers, shared }
+        ThreadPool { tx: Some(tx), workers, shared, size }
+    }
+
+    /// Worker thread count.
+    pub fn size(&self) -> usize {
+        self.size
     }
 
     /// Submit a task for execution.
@@ -70,6 +129,53 @@ impl ThreadPool {
             .expect("pool shut down")
             .send(Box::new(f))
             .expect("worker channel closed");
+    }
+
+    /// Run a batch of closures that may borrow from the caller's stack,
+    /// blocking until every one has completed. This is the parallel-sync
+    /// primitive: per-stripe snapshot/apply tasks borrow the table and
+    /// their result slots, and the wait-before-return is what makes those
+    /// borrows sound. Panics inside a task are re-raised here after the
+    /// whole batch has drained. Must not be called from a task running on
+    /// this same pool (a waiting worker cannot also execute).
+    pub fn run_borrowed<'a>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        let latch = Arc::new(Latch {
+            remaining: AtomicUsize::new(tasks.len()),
+            cv: Condvar::new(),
+            mu: Mutex::new(()),
+            panicked: AtomicBool::new(false),
+        });
+        for task in tasks {
+            // SAFETY: the latch wait below blocks until this closure has
+            // run to completion (or unwound — the LatchGuard drops either
+            // way), so every borrow in `task` strictly outlives its use.
+            let task = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'a>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(task)
+            };
+            let latch = latch.clone();
+            self.execute(move || {
+                let _guard = LatchGuard(latch);
+                task();
+            });
+        }
+        let mut guard = latch.mu.lock().unwrap();
+        while latch.remaining.load(Ordering::Acquire) > 0 {
+            let (g, _timeout) = latch
+                .cv
+                .wait_timeout(guard, std::time::Duration::from_millis(50))
+                .unwrap();
+            guard = g;
+        }
+        drop(guard);
+        if latch.panicked.load(Ordering::Acquire) {
+            panic!("ThreadPool::run_borrowed: a task panicked");
+        }
     }
 
     /// Number of submitted-but-unfinished tasks.
@@ -154,6 +260,67 @@ mod tests {
     #[test]
     fn size_zero_clamped_to_one() {
         let pool = ThreadPool::new(0, "min");
+        let c = Arc::new(AtomicU64::new(0));
+        let c2 = c.clone();
+        pool.execute(move || {
+            c2.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.join();
+        assert_eq!(c.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn panicking_task_does_not_hang_join_or_kill_worker() {
+        // Regression: a panicking task used to leave `pending` stuck (join
+        // spun forever) and killed its worker thread. Now the guard keeps
+        // the count honest and catch_unwind keeps the worker alive.
+        let pool = ThreadPool::new(1, "panic");
+        pool.execute(|| panic!("boom"));
+        pool.join(); // must return
+        assert_eq!(pool.pending(), 0);
+        // The single worker survived and still executes new work.
+        let c = Arc::new(AtomicU64::new(0));
+        let c2 = c.clone();
+        pool.execute(move || {
+            c2.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.join();
+        assert_eq!(c.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn run_borrowed_sees_stack_data_and_blocks_until_done() {
+        let pool = ThreadPool::new(4, "scope");
+        let data: Vec<u64> = (0..64).collect();
+        let mut sums = vec![0u64; 8];
+        {
+            let chunks: Vec<(&[u64], &mut u64)> =
+                data.chunks(8).zip(sums.iter_mut()).collect();
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = chunks
+                .into_iter()
+                .map(|(chunk, slot)| {
+                    Box::new(move || {
+                        *slot = chunk.iter().sum();
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_borrowed(tasks);
+        }
+        assert_eq!(sums.iter().sum::<u64>(), (0..64).sum());
+    }
+
+    #[test]
+    fn run_borrowed_propagates_task_panic() {
+        let pool = ThreadPool::new(2, "scope-panic");
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                Box::new(|| {}),
+                Box::new(|| panic!("scoped boom")),
+            ];
+            pool.run_borrowed(tasks);
+        }));
+        assert!(result.is_err());
+        // Pool remains serviceable.
         let c = Arc::new(AtomicU64::new(0));
         let c2 = c.clone();
         pool.execute(move || {
