@@ -1,26 +1,37 @@
-//! E10 — the parallel streaming-sync pipeline (§4.1): striped collector →
-//! pooled gather snapshot → queue → pooled scatter apply.
+//! E10 — the event-driven parallel streaming-sync pipeline (§4.1):
+//! striped collector → pooled gather absorb + snapshot → queue → pooled
+//! coalesced scatter apply, fronted by the event-driven RPC substrate.
 //!
 //! Measures, at 1 vs N table stripes × sequential vs pooled sync stages:
 //!   - gather-snapshot throughput (per-stripe value reads, the flush hot
 //!     path) — rows/s;
+//!   - gather-absorb throughput (the dedup-window merge, fanned per
+//!     stripe over the sync pool) — events/s;
 //!   - scatter-apply throughput (per-stripe transform + upsert into the
 //!     serving table) — rows/s;
+//!   - scatter coalescing: rows/s and stripe-lock acquisitions per row
+//!     for batch-by-batch vs coalesced application of a queue backlog
+//!     (asserts acquisitions/row strictly decrease at depth > 1);
 //!   - push → serving-visible latency through the full pipeline
 //!     (push, gather flush, queue, scatter poll) — ms per round;
+//!   - idle-fleet CPU: process CPU burned while a fleet of parked RPC
+//!     connections sits idle, epoll vs peek poll mode;
 //! and verifies the determinism contract: sync-batch bytes and checkpoint
-//! bytes are identical for every stripe count and pool size.
+//! bytes are identical for every stripe count and pool size, and survive
+//! an RPC round trip unchanged in both poll modes.
 //!
 //! Needs no AOT artifacts. Emits the human table plus one-line JSON
 //! records, and writes the full result set to `BENCH_sync_pipeline.json`
-//! (uploaded as a CI artifact — the perf trajectory accumulates per
-//! commit). `WEIPS_BENCH_SMOKE=1` shrinks sizes for CI smoke runs.
+//! (uploaded as a CI artifact and gated against the committed baseline by
+//! `tools/check_bench_regression.py`). `WEIPS_BENCH_SMOKE=1` shrinks
+//! sizes for CI smoke runs.
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use weips::codec::Encode;
 use weips::config::{GatherMode, ModelKind, ModelSpec};
+use weips::net::{Channel, PollMode, RpcOptions, RpcServer, Service};
 use weips::optim::{Ftrl, FtrlHyper, Optimizer};
 use weips::proto::{SparsePush, SyncBatch, SyncEntry, SyncOp};
 use weips::queue::Queue;
@@ -31,7 +42,7 @@ use weips::sync::{Gather, Pusher, Router, Scatter, ServingWeights};
 use weips::table::stripe_of_id;
 use weips::util::bench;
 use weips::util::clock::ManualClock;
-use weips::util::ThreadPool;
+use weips::util::{sys, ThreadPool};
 
 const DIM: usize = 8;
 
@@ -204,6 +215,182 @@ fn scatter_apply(rows: u64, iters: u64, results: &mut Vec<String>) {
     }
 }
 
+fn gather_absorb(events: u64, iters: u64, results: &mut Vec<String>) {
+    bench::header(&format!("E10e: gather absorb throughput ({events} events/drain)"));
+    let ids: Vec<u64> = (0..events).collect();
+    let mut baseline = 0.0f64;
+    for case in cases() {
+        let m = master(case.stripes);
+        let pool = case.pool();
+        let clock = Arc::new(ManualClock::new(0));
+        let mut g = Gather::with_pool(m.clone(), GatherMode::Threshold(1 << 30), clock, pool);
+        let mut total = Duration::ZERO;
+        for _ in 0..iters {
+            // Enqueue dirty events straight into the striped collector
+            // (table 1 = "v"), then time the absorb-only poll.
+            for chunk in ids.chunks(8_192) {
+                m.collector().record_updates(1, chunk);
+            }
+            let t0 = Instant::now();
+            let out = g.poll();
+            total += t0.elapsed();
+            assert!(out.is_empty(), "threshold flush fired during absorb bench");
+        }
+        let events_per_sec = (events * iters) as f64 / total.as_secs_f64();
+        if case.stripes == 1 && case.threads == 0 {
+            baseline = events_per_sec;
+        }
+        let speedup = if baseline > 0.0 { events_per_sec / baseline } else { 1.0 };
+        bench::metric(
+            &format!("absorb ({})", case.label()),
+            format!("{:.2} M events/s ({speedup:.2}x)", events_per_sec / 1e6),
+        );
+        let json = format!(
+            r#"{{"bench":"sync_pipeline","stage":"gather_absorb","stripes":{},"threads":{},"rows":{},"rows_per_sec":{:.0},"speedup_vs_seq":{:.3}}}"#,
+            case.stripes, case.threads, events, events_per_sec, speedup
+        );
+        println!("{json}");
+        results.push(json);
+    }
+}
+
+fn scatter_coalesce(rows: u64, depth: u64, results: &mut Vec<String>) {
+    bench::header(&format!(
+        "E10f: scatter coalescing ({depth} batches x {rows} rows backlog)"
+    ));
+    let batches: Vec<SyncBatch> = (0..depth)
+        .map(|d| SyncBatch {
+            model: "ctr".into(),
+            table: "v".into(),
+            shard: 0,
+            seq: d + 1,
+            created_ms: 0,
+            entries: (0..rows)
+                .map(|id| SyncEntry {
+                    id,
+                    op: SyncOp::Upsert(vec![0.25 + d as f32 * 0.01; 3 * DIM]),
+                })
+                .collect(),
+            dense: vec![],
+        })
+        .collect();
+    for case in cases() {
+        let pool = case.pool();
+        // Batch-by-batch: the pre-coalescing path.
+        let one = serving(case.stripes);
+        let t0 = Instant::now();
+        for b in &batches {
+            one.apply_batch_pooled(b, pool.as_deref()).unwrap();
+        }
+        let one_secs = t0.elapsed().as_secs_f64();
+        // Coalesced: the whole backlog as one grouped run.
+        let co = serving(case.stripes);
+        let t1 = Instant::now();
+        co.apply_batches_pooled(&batches, pool.as_deref()).unwrap();
+        let co_secs = t1.elapsed().as_secs_f64();
+        let applied = rows * depth;
+        let one_locks = one
+            .metrics
+            .stripe_lock_acquisitions
+            .load(std::sync::atomic::Ordering::Relaxed);
+        let co_locks = co
+            .metrics
+            .stripe_lock_acquisitions
+            .load(std::sync::atomic::Ordering::Relaxed);
+        // The acceptance criterion: stripe-lock acquisitions per applied
+        // row strictly decrease at batch depth > 1.
+        assert!(
+            co_locks < one_locks,
+            "coalescing did not amortize locks ({}): {co_locks} vs {one_locks}",
+            case.label()
+        );
+        let one_rate = applied as f64 / one_secs;
+        let co_rate = applied as f64 / co_secs;
+        bench::metric(
+            &format!("coalesced apply ({})", case.label()),
+            format!(
+                "{:.2} M rows/s vs {:.2} M rows/s; locks/row {:.4} vs {:.4}",
+                co_rate / 1e6,
+                one_rate / 1e6,
+                co_locks as f64 / applied as f64,
+                one_locks as f64 / applied as f64
+            ),
+        );
+        let json = format!(
+            r#"{{"bench":"sync_pipeline","stage":"scatter_coalesce","stripes":{},"threads":{},"rows":{},"depth":{},"rows_per_sec":{:.0},"rows_per_sec_batchwise":{:.0},"locks_per_row":{:.5},"locks_per_row_batchwise":{:.5}}}"#,
+            case.stripes,
+            case.threads,
+            applied,
+            depth,
+            co_rate,
+            one_rate,
+            co_locks as f64 / applied as f64,
+            one_locks as f64 / applied as f64
+        );
+        println!("{json}");
+        results.push(json);
+    }
+}
+
+struct EchoService;
+
+impl Service for EchoService {
+    fn call(&self, _method: u16, payload: &[u8]) -> weips::Result<Vec<u8>> {
+        Ok(payload.to_vec())
+    }
+}
+
+/// Poll modes available on this host (Event only where the epoll binding
+/// works — the bench verifies by asking the server what it resolved to).
+fn available_poll_modes() -> Vec<PollMode> {
+    if sys::supported() {
+        vec![PollMode::Event, PollMode::Peek]
+    } else {
+        vec![PollMode::Peek]
+    }
+}
+
+fn idle_fleet_cpu(conns: usize, window_ms: u64, results: &mut Vec<String>) {
+    bench::header(&format!("E10g: idle-fleet CPU ({conns} parked connections)"));
+    if sys::process_cpu_ns().is_none() {
+        println!("  (process CPU clock unavailable on this target — skipped)");
+        return;
+    }
+    for mode in available_poll_modes() {
+        let server = RpcServer::serve_with(
+            "127.0.0.1:0",
+            Arc::new(EchoService),
+            RpcOptions { threads: 2, mode, ..RpcOptions::default() },
+        )
+        .unwrap();
+        assert_eq!(server.poll_mode(), mode, "requested poll mode unavailable");
+        let fleet: Vec<std::net::TcpStream> = (0..conns)
+            .map(|_| std::net::TcpStream::connect(server.addr()).unwrap())
+            .collect();
+        // Wait until the whole fleet is parked, then measure an idle window.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while server.parked_connections() < conns {
+            assert!(Instant::now() < deadline, "fleet never parked ({mode:?})");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let cpu0 = sys::process_cpu_ns().unwrap();
+        let w0 = Instant::now();
+        std::thread::sleep(Duration::from_millis(window_ms));
+        let cpu_ms = (sys::process_cpu_ns().unwrap() - cpu0) as f64 / 1e6;
+        let wall_ms = w0.elapsed().as_secs_f64() * 1e3;
+        bench::metric(
+            &format!("idle cpu ({mode:?}, {conns} conns)"),
+            format!("{cpu_ms:.2} ms CPU / {wall_ms:.0} ms wall"),
+        );
+        let json = format!(
+            r#"{{"bench":"sync_pipeline","stage":"idle_fleet_cpu","mode":"{mode:?}","conns":{conns},"cpu_ms":{cpu_ms:.3},"wall_ms":{wall_ms:.1}}}"#,
+        );
+        println!("{json}");
+        results.push(json);
+        drop(fleet);
+    }
+}
+
 fn push_to_visible_latency(rounds: u64, ids_per_round: u64, results: &mut Vec<String>) {
     bench::header(&format!(
         "E10c: push -> serving-visible latency ({ids_per_round} ids/round)"
@@ -293,9 +480,27 @@ fn determinism_check(results: &mut Vec<String>) {
             "checkpoint bytes diverged between case 0 and case {i}"
         );
     }
+    // The wire leg: the same bytes must survive an RPC round trip
+    // unchanged under both readiness mechanisms (exercises the
+    // zero-allocation frame assemble/parse paths end to end).
+    let mut modes_checked = 0;
+    for mode in available_poll_modes() {
+        let server = RpcServer::serve_with(
+            "127.0.0.1:0",
+            Arc::new(EchoService),
+            RpcOptions { threads: 2, mode, ..RpcOptions::default() },
+        )
+        .unwrap();
+        let ch = Channel::remote(&server.addr().to_string(), Duration::from_secs(10));
+        for payload in [&blobs[0].0, &blobs[0].1] {
+            let echoed = ch.call(0, payload).unwrap();
+            assert_eq!(&echoed, payload, "bytes corrupted over RPC in {mode:?} mode");
+        }
+        modes_checked += 1;
+    }
     bench::metric("sync-batch + checkpoint bytes identical across all cases", "ok");
     let json = format!(
-        r#"{{"bench":"sync_pipeline","stage":"determinism","cases":{},"identical":true}}"#,
+        r#"{{"bench":"sync_pipeline","stage":"determinism","cases":{},"poll_modes":{modes_checked},"identical":true}}"#,
         blobs.len()
     );
     println!("{json}");
@@ -308,10 +513,18 @@ fn main() {
     } else {
         (200_000u64, 5u64, 20u64, 2_048u64)
     };
+    let (absorb_events, coalesce_rows, coalesce_depth, idle_conns, idle_window_ms) = if smoke() {
+        (20_000u64, 4_000u64, 4u64, 16usize, 300u64)
+    } else {
+        (200_000u64, 40_000u64, 8u64, 64usize, 1_000u64)
+    };
     let mut results = Vec::new();
     gather_snapshot(rows, iters, &mut results);
+    gather_absorb(absorb_events, iters, &mut results);
     scatter_apply(rows, iters, &mut results);
+    scatter_coalesce(coalesce_rows, coalesce_depth, &mut results);
     push_to_visible_latency(rounds, ids_per_round, &mut results);
+    idle_fleet_cpu(idle_conns, idle_window_ms, &mut results);
     determinism_check(&mut results);
     let json = format!("[\n  {}\n]\n", results.join(",\n  "));
     // Anchor to the workspace root (cargo runs benches with cwd = the

@@ -114,11 +114,8 @@ pub fn run_broker(args: &Args) -> Result<()> {
     let cfg = cluster_config(args)?;
     let queue = Queue::default();
     let topic = queue.create_topic(&format!("sync.{model}"), partitions)?;
-    let server = RpcServer::serve_pooled(
-        &addr,
-        Arc::new(QueueService { topic }),
-        cfg.rpc_threads as usize,
-    )?;
+    let server =
+        RpcServer::serve_with(&addr, Arc::new(QueueService { topic }), cfg.rpc_options())?;
     println!("broker on {} ({partitions} partitions)", server.addr());
     block_forever()
 }
@@ -142,10 +139,10 @@ pub fn run_master(args: &Args) -> Result<()> {
     )?);
     let data_dir: std::path::PathBuf = args.get_or("data-dir", "/tmp/weips-data").into();
     let store = Arc::new(CheckpointStore::new(data_dir, None));
-    let server = RpcServer::serve_pooled(
+    let server = RpcServer::serve_with(
         &addr,
         Arc::new(MasterService { shard: master.clone(), store: Some(store) }),
-        cfg.rpc_threads as usize,
+        cfg.rpc_options(),
     )?;
     println!("master shard {shard} on {} (broker {broker})", server.addr());
 
@@ -198,10 +195,10 @@ pub fn run_slave(args: &Args) -> Result<()> {
         Router::new(cfg.slave_shards),
         cfg.table_stripes as usize,
     ));
-    let server = RpcServer::serve_pooled(
+    let server = RpcServer::serve_with(
         &addr,
         Arc::new(SlaveService { shard: slave.clone() }),
-        cfg.rpc_threads as usize,
+        cfg.rpc_options(),
     )?;
     println!(
         "slave {shard}/{replica} on {} (broker {broker}, {} slave shards)",

@@ -87,21 +87,49 @@ fn flush_literals(out: &mut Vec<u8>, data: &[u8], start: usize, end: usize) {
     }
 }
 
+/// Reusable hash-chain tables for [`compress_into`]: ~768 KiB that the
+/// pusher keeps warm across batches, so steady-state compression
+/// performs zero heap allocations.
+#[derive(Default)]
+pub struct LzState {
+    head: Vec<usize>,
+    prev: Vec<usize>,
+}
+
+impl LzState {
+    /// Empty state (tables materialize on first use).
+    pub fn new() -> LzState {
+        LzState::default()
+    }
+}
+
 /// LZSS-compress `data` (no envelope).
+pub fn compress(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() / 2 + 16);
+    compress_into(data, &mut out, &mut LzState::new());
+    out
+}
+
+/// LZSS-compress `data`, appending to `out` (not cleared — envelope
+/// writers put their mode byte first) and reusing `state`'s tables.
 ///
 /// Memory is constant regardless of input size: the chain table is a
 /// 64 Ki ring keyed by `pos & (MAX_DIST)` — safe because any candidate
 /// whose ring slot has been overwritten is necessarily more than
 /// `MAX_DIST` behind the cursor and thus outside the match window anyway.
-pub fn compress(data: &[u8]) -> Vec<u8> {
+pub fn compress_into(data: &[u8], out: &mut Vec<u8>, state: &mut LzState) {
     const RING: usize = MAX_DIST + 1; // 64 Ki, power of two
-    let mut out = Vec::with_capacity(data.len() / 2 + 16);
-    put_varint(&mut out, data.len() as u64);
+    out.reserve(data.len() / 2 + 16);
+    put_varint(out, data.len() as u64);
     if data.is_empty() {
-        return out;
+        return;
     }
-    let mut head = vec![usize::MAX; 1 << HASH_BITS];
-    let mut prev = vec![usize::MAX; RING];
+    state.head.clear();
+    state.head.resize(1 << HASH_BITS, usize::MAX);
+    state.prev.clear();
+    state.prev.resize(RING, usize::MAX);
+    let head = &mut state.head;
+    let prev = &mut state.prev;
     let mut literal_start = 0usize;
     let mut pos = 0usize;
     while pos < data.len() {
@@ -139,7 +167,7 @@ pub fn compress(data: &[u8]) -> Vec<u8> {
             }
         }
         if best_len >= MIN_MATCH {
-            flush_literals(&mut out, data, literal_start, pos);
+            flush_literals(out, data, literal_start, pos);
             out.push(0x80 | (best_len - MIN_MATCH) as u8);
             out.extend_from_slice(&(best_dist as u16).to_le_bytes());
             // Index every covered position so future matches can land here.
@@ -162,12 +190,20 @@ pub fn compress(data: &[u8]) -> Vec<u8> {
             pos += 1;
         }
     }
-    flush_literals(&mut out, data, literal_start, data.len());
-    out
+    flush_literals(out, data, literal_start, data.len());
 }
 
 /// Inverse of [`compress`].
 pub fn decompress_raw(data: &[u8]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    decompress_raw_into(data, &mut out)?;
+    Ok(out)
+}
+
+/// Inverse of [`compress_into`]: decode into `out` (cleared first, so the
+/// scatter worker reuses one buffer across every record it consumes).
+pub fn decompress_raw_into(data: &[u8], out: &mut Vec<u8>) -> Result<()> {
+    out.clear();
     let mut pos = 0usize;
     let declared = get_varint(data, &mut pos)? as usize;
     // Guard hostile lengths: output can never exceed what literal runs and
@@ -178,7 +214,7 @@ pub fn decompress_raw(data: &[u8]) -> Result<Vec<u8>> {
     // Cap the up-front reservation: `declared` is attacker-controlled up
     // to ~132x the input, so reserve modestly and let decoding grow the
     // vec as tokens actually validate.
-    let mut out = Vec::with_capacity(declared.min(1 << 20));
+    out.reserve(declared.min(1 << 20));
     while pos < data.len() {
         let token = data[pos];
         pos += 1;
@@ -223,33 +259,54 @@ pub fn decompress_raw(data: &[u8]) -> Result<Vec<u8>> {
             out.len()
         )));
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Envelope-encode: compress if it actually shrinks the payload, else store.
 pub fn maybe_compress(data: &[u8]) -> Vec<u8> {
-    let packed = compress(data);
-    if packed.len() + 1 < data.len() {
-        let mut out = Vec::with_capacity(packed.len() + 1);
-        out.push(CompressMode::Lz as u8);
-        out.extend_from_slice(&packed);
-        out
-    } else {
-        let mut out = Vec::with_capacity(data.len() + 1);
+    let mut out = Vec::new();
+    maybe_compress_into(data, &mut out, &mut LzState::new());
+    out
+}
+
+/// [`maybe_compress`] into a reusable buffer with reusable LZ tables —
+/// the pusher's zero-allocation steady state. `out` is cleared first and
+/// receives the 1-byte mode envelope + payload; the choice of mode is
+/// identical to [`maybe_compress`].
+pub fn maybe_compress_into(data: &[u8], out: &mut Vec<u8>, state: &mut LzState) {
+    out.clear();
+    out.push(CompressMode::Lz as u8);
+    compress_into(data, out, state);
+    // Keep LZ only when the envelope actually shrank: out.len() is
+    // packed + 1, so this is the original `packed + 1 < data.len()` test.
+    if out.len() >= data.len() {
+        out.clear();
         out.push(CompressMode::None as u8);
         out.extend_from_slice(data);
-        out
     }
 }
 
 /// Decode a [`maybe_compress`] envelope.
 pub fn decompress(data: &[u8]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    decompress_into(data, &mut out)?;
+    Ok(out)
+}
+
+/// Decode a [`maybe_compress`] envelope into a reusable buffer (cleared
+/// first) — the scatter worker's per-record decode path allocates nothing
+/// once the buffer has grown to the working set.
+pub fn decompress_into(data: &[u8], out: &mut Vec<u8>) -> Result<()> {
     let (&mode, rest) = data
         .split_first()
         .ok_or_else(|| Error::Codec("empty compressed envelope".into()))?;
     match mode {
-        m if m == CompressMode::None as u8 => Ok(rest.to_vec()),
-        m if m == CompressMode::Lz as u8 => decompress_raw(rest),
+        m if m == CompressMode::None as u8 => {
+            out.clear();
+            out.extend_from_slice(rest);
+            Ok(())
+        }
+        m if m == CompressMode::Lz as u8 => decompress_raw_into(rest, out),
         m => Err(Error::Codec(format!("unknown compress mode {m}"))),
     }
 }
@@ -315,6 +372,72 @@ mod tests {
             let _ = decompress_raw(&packed[..cut]); // must not panic
         }
         assert!(decompress_raw(&packed[..packed.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn into_variants_match_allocating_paths_and_reuse_buffers() {
+        let data: Vec<u8> = (0..30_000u32).map(|i| (i % 23) as u8).collect();
+        let mut state = LzState::new();
+        let mut wire = Vec::new();
+        let mut raw = Vec::new();
+        // Same buffers + state across payloads of shrinking size: stale
+        // content must never leak into a later (shorter) result.
+        for cut in [data.len(), 10_000, 257, 16, 1, 0] {
+            let payload = &data[..cut];
+            maybe_compress_into(payload, &mut wire, &mut state);
+            assert_eq!(wire, maybe_compress(payload), "envelope diverged at cut {cut}");
+            decompress_into(&wire, &mut raw).unwrap();
+            assert_eq!(&raw, payload, "round trip diverged at cut {cut}");
+        }
+    }
+
+    #[test]
+    fn prop_decompress_into_rejects_truncation_and_garbage() {
+        use crate::util::prop::{check, Strategy};
+        use crate::util::Rng;
+        struct Payload;
+        impl Strategy for Payload {
+            type Value = Vec<u8>;
+            fn gen(&self, rng: &mut Rng) -> Vec<u8> {
+                let n = rng.gen_range(2_000) as usize;
+                // Mildly repetitive so the Lz arm is actually exercised.
+                (0..n).map(|i| ((rng.next_u64() >> 7) as u8) % 7 + (i % 3) as u8).collect()
+            }
+        }
+        let mut scratch = Vec::new();
+        check("decompress-into-hostile", &Payload, 60, |payload| {
+            let env = maybe_compress(payload);
+            // Every strict prefix must error (or, for the stored mode,
+            // yield a shorter payload — never panic or over-read).
+            for cut in 1..env.len() {
+                match decompress_into(&env[..cut], &mut scratch) {
+                    Ok(()) => {
+                        if env[0] == CompressMode::Lz as u8 {
+                            return Err(format!("lz prefix {cut} decoded"));
+                        }
+                    }
+                    Err(_) => {}
+                }
+            }
+            // Bit flips in the body must never panic; flips in the Lz
+            // stream may decode to garbage only if lengths still agree.
+            let mut bad = env.clone();
+            if bad.len() > 1 {
+                let at = 1 + (payload.len() % (bad.len() - 1));
+                bad[at] ^= 0x40;
+                let _ = decompress_into(&bad, &mut scratch);
+            }
+            // Unknown envelope modes are rejected outright.
+            if decompress_into(&[9, 1, 2, 3], &mut scratch).is_ok() {
+                return Err("unknown mode accepted".into());
+            }
+            // And the buffer still round-trips clean input afterwards.
+            decompress_into(&env, &mut scratch).map_err(|e| e.to_string())?;
+            if &scratch != payload {
+                return Err("reused buffer corrupted a clean decode".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -10,7 +10,10 @@
 
 mod compress;
 
-pub use compress::{compress, decompress, maybe_compress, CompressMode};
+pub use compress::{
+    compress, decompress, decompress_into, maybe_compress, maybe_compress_into, CompressMode,
+    LzState,
+};
 
 use crate::{Error, Result};
 
@@ -34,6 +37,17 @@ impl Writer {
     /// Finish and take the encoded bytes.
     pub fn into_bytes(self) -> Vec<u8> {
         self.buf
+    }
+
+    /// Borrow the encoded bytes (for reusable writers that survive the
+    /// encode — the pusher's pooled buffers).
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Reset for reuse, keeping the allocated capacity.
+    pub fn clear(&mut self) {
+        self.buf.clear();
     }
 
     /// Bytes written so far.
@@ -117,11 +131,19 @@ impl Writer {
         }
     }
 
-    /// Length-prefixed u64 slice, delta-varint encoded when sorted-ish.
+    /// Length-prefixed u64 slice, delta-encoded: each element is the
+    /// zigzag varint of its (wrapping) difference from the previous one,
+    /// the first diffing against 0. Sorted id lists — the common shape on
+    /// the pull/sync paths — collapse to a byte or two per id; unsorted
+    /// input still round-trips exactly (wrapping arithmetic + zigzag
+    /// cover any jump, including to/from `u64::MAX`).
     pub fn put_u64_slice(&mut self, v: &[u64]) {
         self.put_varint(v.len() as u64);
-        for x in v {
-            self.put_varint(*x);
+        let mut prev = 0u64;
+        for &x in v {
+            let delta = x.wrapping_sub(prev) as i64;
+            self.put_varint(((delta << 1) ^ (delta >> 63)) as u64);
+            prev = x;
         }
     }
 }
@@ -239,12 +261,18 @@ impl<'a> Reader<'a> {
 
     pub fn get_u64_slice(&mut self) -> Result<Vec<u64>> {
         let n = self.get_varint()? as usize;
-        if n > self.remaining() + 1 {
+        // Each zigzag delta takes at least one byte, so a declared length
+        // beyond the remaining bytes is hostile — reject before reserving.
+        if n > self.remaining() {
             return Err(Error::Codec(format!("u64 slice length {n} exceeds buffer")));
         }
         let mut out = Vec::with_capacity(n);
+        let mut prev = 0u64;
         for _ in 0..n {
-            out.push(self.get_varint()?);
+            let z = self.get_varint()?;
+            let delta = ((z >> 1) as i64) ^ -((z & 1) as i64);
+            prev = prev.wrapping_add(delta as u64);
+            out.push(prev);
         }
         Ok(out)
     }
@@ -306,10 +334,23 @@ pub fn crc32(data: &[u8]) -> u32 {
 /// transport. Detects truncation and corruption.
 pub fn frame(payload: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(payload.len() + 8);
-    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(&[0u8; 8]);
     out.extend_from_slice(payload);
+    finish_frame(&mut out);
     out
+}
+
+/// Finish a frame assembled in place: `buf` holds 8 reserved header bytes
+/// followed by the payload; this writes `[len u32][crc32 u32]` into the
+/// header. The in-buffer twin of [`frame`] — the RPC layer assembles
+/// requests and responses directly in reusable per-connection buffers, so
+/// steady-state framing performs zero heap allocations.
+pub fn finish_frame(buf: &mut [u8]) {
+    debug_assert!(buf.len() >= 8, "finish_frame needs the 8 reserved header bytes");
+    let len = buf.len() - 8;
+    let crc = crc32(&buf[8..]);
+    buf[0..4].copy_from_slice(&(len as u32).to_le_bytes());
+    buf[4..8].copy_from_slice(&crc.to_le_bytes());
 }
 
 /// Parse one frame from the front of `buf`: returns `(payload, consumed)`.
@@ -435,6 +476,85 @@ mod tests {
         // Truncated -> needs more bytes.
         assert!(unframe(&framed[..framed.len() - 1]).unwrap().is_none());
         assert!(unframe(&framed[..4]).unwrap().is_none());
+    }
+
+    #[test]
+    fn varint_max_length_and_overflow() {
+        // u64::MAX is exactly 10 bytes; an 11th continuation byte (or a
+        // 10th byte carrying bits past 2^64) must error, not wrap.
+        let mut w = Writer::new();
+        w.put_varint(u64::MAX);
+        let max = w.into_bytes();
+        assert_eq!(max.len(), 10);
+        assert_eq!(Reader::new(&max).get_varint().unwrap(), u64::MAX);
+        // 10 continuation bytes then a terminator: 11-byte varint.
+        let mut overlong = vec![0x80u8; 10];
+        overlong.push(0x01);
+        assert!(Reader::new(&overlong).get_varint().is_err());
+        // Truncated max-length varint (all continuation, no terminator).
+        assert!(Reader::new(&max[..9]).get_varint().is_err());
+    }
+
+    #[test]
+    fn u64_slice_delta_round_trips_unsorted_and_extremes() {
+        let cases: Vec<Vec<u64>> = vec![
+            vec![],
+            vec![0],
+            vec![u64::MAX],
+            vec![u64::MAX, 0, u64::MAX, 1, u64::MAX - 1],
+            vec![5, 4, 3, 2, 1, 0],
+            vec![7; 16],
+            (0..500u64).map(|i| i * 37 + 3).collect(),
+        ];
+        for ids in &cases {
+            let mut w = Writer::new();
+            w.put_u64_slice(ids);
+            let bytes = w.into_bytes();
+            let mut r = Reader::new(&bytes);
+            assert_eq!(&r.get_u64_slice().unwrap(), ids);
+            assert!(r.is_done());
+        }
+        // Sorted ids are the dense case the delta encoding exists for:
+        // consecutive small deltas take ~1 byte each versus up to 10.
+        let sorted: Vec<u64> = (1_000_000_000..1_000_001_000u64).collect();
+        let mut w = Writer::new();
+        w.put_u64_slice(&sorted);
+        let delta_len = w.len();
+        assert!(
+            delta_len < 1 + 5 + 2 * sorted.len(),
+            "sorted ids encoded poorly: {delta_len} bytes"
+        );
+    }
+
+    #[test]
+    fn prop_u64_slice_delta_round_trips() {
+        check("u64-slice-delta", &VecOf(U64Range(0, u64::MAX - 1), 64), 300, |ids| {
+            let mut w = Writer::new();
+            w.put_u64_slice(ids);
+            let bytes = w.into_bytes();
+            let mut r = Reader::new(&bytes);
+            let got = r.get_u64_slice().map_err(|e| e.to_string())?;
+            if &got != ids {
+                return Err(format!("{got:?} != {ids:?}"));
+            }
+            if !r.is_done() {
+                return Err("trailing bytes".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn finish_frame_matches_frame() {
+        let payload = b"in-place framing";
+        let boxed = frame(payload);
+        let mut inplace = vec![0u8; 8];
+        inplace.extend_from_slice(payload);
+        finish_frame(&mut inplace);
+        assert_eq!(inplace, boxed);
+        let (p, used) = unframe(&inplace).unwrap().unwrap();
+        assert_eq!(p, payload);
+        assert_eq!(used, inplace.len());
     }
 
     #[test]

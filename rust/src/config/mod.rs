@@ -222,6 +222,20 @@ pub struct ClusterConfig {
     /// shares this fixed pool instead of one thread per connection).
     /// `WEIPS_RPC_THREADS` overrides the default.
     pub rpc_threads: u32,
+    /// RPC stalled-peer drop timeout (ms): a connection that stalls
+    /// mid-frame or refuses writes for this long is dropped and its
+    /// handler reclaimed. `WEIPS_RPC_STALL_MS` overrides the default.
+    pub rpc_stall_ms: u64,
+    /// Peek-mode poll back-off lower bound (ms) — the sweep interval
+    /// while traffic flows. Irrelevant in epoll mode.
+    pub rpc_poll_min_ms: u64,
+    /// Peek-mode poll back-off upper bound (ms) — the interval an idle
+    /// server backs off to. Irrelevant in epoll mode.
+    pub rpc_poll_max_ms: u64,
+    /// Readiness mechanism for parked RPC connections: `auto` (epoll
+    /// where available), `epoll`, or `peek`. `WEIPS_RPC_POLL` overrides
+    /// the default.
+    pub rpc_poll_mode: crate::net::PollMode,
     /// Feature expire TTL in ms (0 = never).
     pub feature_ttl_ms: u64,
     /// Checkpoint every ~this many ms (randomly jittered, §4.2.1a).
@@ -248,6 +262,10 @@ impl Default for ClusterConfig {
             table_stripes: 8,
             sync_threads: env_threads("WEIPS_SYNC_THREADS", 4),
             rpc_threads: crate::net::default_rpc_threads() as u32,
+            rpc_stall_ms: crate::net::default_stall_ms(),
+            rpc_poll_min_ms: 1,
+            rpc_poll_max_ms: 10,
+            rpc_poll_mode: crate::net::default_poll_mode(),
             feature_ttl_ms: 0,
             ckpt_interval_ms: 10_000,
             ckpt_keep: 5,
@@ -266,6 +284,20 @@ impl ClusterConfig {
     pub fn sync_pool(&self) -> Option<Arc<crate::util::ThreadPool>> {
         (self.sync_threads > 0)
             .then(|| Arc::new(crate::util::ThreadPool::new(self.sync_threads as usize, "sync-pool")))
+    }
+
+    /// RPC server options this config implies — the single construction
+    /// point for the RPC knob→option policy (all serving roles call
+    /// this).
+    pub fn rpc_options(&self) -> crate::net::RpcOptions {
+        crate::net::RpcOptions {
+            threads: self.rpc_threads.max(1) as usize,
+            stall: std::time::Duration::from_millis(self.rpc_stall_ms.max(1)),
+            poll_min_ms: self.rpc_poll_min_ms.max(1),
+            poll_max_ms: self.rpc_poll_max_ms.max(self.rpc_poll_min_ms.max(1)),
+            scratch_cap: crate::net::default_scratch_cap(),
+            mode: self.rpc_poll_mode,
+        }
     }
 
     /// Apply `[cluster]` section overrides from a parsed TOML document.
@@ -305,6 +337,18 @@ impl ClusterConfig {
         }
         if let Some(v) = doc.get_int("cluster", "rpc_threads") {
             c.rpc_threads = v.clamp(1, u32::MAX as i64) as u32;
+        }
+        if let Some(v) = doc.get_int("cluster", "rpc_stall_ms") {
+            c.rpc_stall_ms = v.max(1) as u64;
+        }
+        if let Some(v) = doc.get_int("cluster", "rpc_poll_min_ms") {
+            c.rpc_poll_min_ms = v.max(1) as u64;
+        }
+        if let Some(v) = doc.get_int("cluster", "rpc_poll_max_ms") {
+            c.rpc_poll_max_ms = v.max(1) as u64;
+        }
+        if let Some(v) = doc.get_str("cluster", "rpc_poll_mode") {
+            c.rpc_poll_mode = crate::net::PollMode::parse(v)?;
         }
         if let Some(v) = doc.get_int("cluster", "feature_ttl_ms") {
             c.feature_ttl_ms = v as u64;
@@ -411,6 +455,10 @@ mod tests {
             table_stripes = 16
             sync_threads = 6
             rpc_threads = 12
+            rpc_stall_ms = 2500
+            rpc_poll_min_ms = 2
+            rpc_poll_max_ms = 40
+            rpc_poll_mode = "peek"
             "#,
         )
         .unwrap();
@@ -421,7 +469,38 @@ mod tests {
         assert_eq!(c.table_stripes, 16);
         assert_eq!(c.sync_threads, 6);
         assert_eq!(c.rpc_threads, 12);
+        assert_eq!(c.rpc_stall_ms, 2500);
+        assert_eq!(c.rpc_poll_min_ms, 2);
+        assert_eq!(c.rpc_poll_max_ms, 40);
+        assert_eq!(c.rpc_poll_mode, crate::net::PollMode::Peek);
         assert_eq!(c.slave_shards, 2); // default preserved
+        let opts = c.rpc_options();
+        assert_eq!(opts.threads, 12);
+        assert_eq!(opts.stall, std::time::Duration::from_millis(2500));
+        assert_eq!(opts.poll_min_ms, 2);
+        assert_eq!(opts.poll_max_ms, 40);
+        assert_eq!(opts.mode, crate::net::PollMode::Peek);
+    }
+
+    #[test]
+    fn rpc_knobs_clamp_and_reject_bad_modes() {
+        let doc = TomlDoc::parse(
+            r#"
+            [cluster]
+            rpc_stall_ms = 0
+            rpc_poll_min_ms = 20
+            rpc_poll_max_ms = 5
+            "#,
+        )
+        .unwrap();
+        let c = ClusterConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.rpc_stall_ms, 1); // never zero: would drop every peer
+        let opts = c.rpc_options();
+        // max is lifted to min so the back-off range stays well-formed.
+        assert_eq!(opts.poll_min_ms, 20);
+        assert_eq!(opts.poll_max_ms, 20);
+        let bad = TomlDoc::parse("[cluster]\nrpc_poll_mode = \"select\"\n").unwrap();
+        assert!(ClusterConfig::from_toml(&bad).is_err());
     }
 
     #[test]

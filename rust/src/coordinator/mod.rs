@@ -544,21 +544,26 @@ impl LocalCluster {
         let partition = self.topic.partition(partition_id as usize)?;
         let mut offset = start.max(partition.earliest_offset());
         let master = &self.masters[shard];
+        let mut raw = Vec::new();
         loop {
             let records = partition.fetch(offset, 256, Duration::ZERO)?;
             if records.is_empty() {
                 break;
             }
+            // Decode the whole fetch chunk, then replay it coalesced: one
+            // stripe-lock acquisition per busy stripe per chunk.
+            let mut chunk: Vec<crate::proto::SyncBatch> = Vec::with_capacity(records.len());
             for rec in &records {
                 offset = rec.offset + 1;
-                let raw = crate::codec::decompress(&rec.payload)?;
+                crate::codec::decompress_into(&rec.payload, &mut raw)?;
                 let batch =
                     <crate::proto::SyncBatch as crate::codec::Decode>::from_bytes(&raw)?;
                 if batch.shard != shard as u32 || !batch.dense.is_empty() {
                     continue;
                 }
-                master.replay_sync_batch(&batch)?;
+                chunk.push(batch);
             }
+            master.replay_sync_batches(&chunk)?;
         }
         Ok(version)
     }

@@ -2,14 +2,26 @@
 //! in-process fast path.
 //!
 //! No async runtime is available offline, so the server runs a fixed
-//! [`crate::util::ThreadPool`] behind a readiness-polling connection loop:
-//! the accept thread keeps every idle connection in a parked set and
-//! sweeps it with non-blocking peeks; a connection with bytes pending is
-//! handed to a pool worker, which drains the requests already queued on
-//! it and parks it again. A fleet of workers fanning into one shard
-//! therefore costs `rpc_threads` handler threads total (plus the accept/
-//! poll thread) instead of one thread per connection
-//! (`WEIPS_RPC_THREADS` / the cluster config's `rpc_threads` knob).
+//! [`crate::util::ThreadPool`] behind an event-driven connection loop:
+//! the poll thread keeps every idle connection in a parked set and sleeps
+//! on a tiny in-tree epoll binding ([`crate::util::sys`]) until the
+//! kernel reports one readable — idle fleets cost zero CPU and a wakeup
+//! is O(ready), not O(parked). A ready connection is handed to a pool
+//! worker, which drains the requests already queued on it and parks it
+//! again (through the repark queue + eventfd waker, so the parked set has
+//! exactly one owner). On targets without the epoll binding — or with
+//! `WEIPS_RPC_POLL=peek` / the config's `rpc_poll_mode` knob — the loop
+//! falls back to the portable peek sweep with configurable back-off
+//! bounds. A fleet of workers fanning into one shard therefore costs
+//! `rpc_threads` handler threads total (plus the poll thread) instead of
+//! one thread per connection.
+//!
+//! Steady-state request handling performs **zero heap allocations** in
+//! the frame path: each connection carries its own read-scratch and
+//! response buffers (capped + shrunk when parked, so one huge frame never
+//! pins memory), requests are parsed in place from the scratch range, and
+//! responses are assembled and framed in the reusable write buffer
+//! ([`crate::codec::finish_frame`]).
 //!
 //! Wire format per request:  `frame( [req_id u64][method u16][payload] )`
 //! and per response:          `frame( [req_id u64][status u8][payload] )`
@@ -20,12 +32,16 @@
 //! most tests), `Remote` talks TCP. Components only ever hold `Channel`s,
 //! so the same coordinator code runs single-process or distributed.
 
+use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
-use crate::codec::{frame, unframe};
+use crate::codec::{finish_frame, unframe};
+use crate::util::sys;
 use crate::util::ThreadPool;
 use crate::{Error, Result};
 
@@ -51,6 +67,125 @@ pub fn default_rpc_threads() -> usize {
     })
 }
 
+/// Stalled-peer drop timeout default in ms (`WEIPS_RPC_STALL_MS`
+/// overrides; the cluster config's `rpc_stall_ms` knob wins where a
+/// config is present). A handler never waits on one peer's socket longer
+/// than this mid-frame or mid-write — generous next to a healthy peer's
+/// packet gaps, so tripping it means the peer is effectively gone.
+pub fn default_stall_ms() -> u64 {
+    use std::sync::OnceLock;
+    static N: OnceLock<u64> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("WEIPS_RPC_STALL_MS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(10_000)
+    })
+}
+
+/// Per-connection scratch-buffer cap default in bytes
+/// (`WEIPS_RPC_SCRATCH_CAP` overrides): buffers grown past this by a
+/// large frame are shrunk back when the connection parks.
+pub fn default_scratch_cap() -> usize {
+    use std::sync::OnceLock;
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("WEIPS_RPC_SCRATCH_CAP")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .filter(|&n| n >= 4096)
+            .unwrap_or(1 << 20)
+    })
+}
+
+/// How the poll thread learns a parked connection is readable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PollMode {
+    /// Resolve at serve time: [`PollMode::Event`] where the platform
+    /// supports the epoll binding, else [`PollMode::Peek`].
+    Auto,
+    /// Kernel readiness notification (epoll via [`crate::util::sys`]):
+    /// zero idle CPU, O(ready) wakeups.
+    Event,
+    /// Portable fallback: sweep parked connections with non-blocking
+    /// `peek` at an adaptive interval.
+    Peek,
+}
+
+impl PollMode {
+    /// Parse "auto" | "epoll"/"event" | "peek".
+    pub fn parse(s: &str) -> Result<PollMode> {
+        match s {
+            "auto" => Ok(PollMode::Auto),
+            "epoll" | "event" => Ok(PollMode::Event),
+            "peek" => Ok(PollMode::Peek),
+            other => Err(Error::Config(format!("unknown rpc poll mode {other}"))),
+        }
+    }
+
+    fn resolve(self) -> PollMode {
+        match self {
+            PollMode::Auto => {
+                if sys::supported() {
+                    PollMode::Event
+                } else {
+                    PollMode::Peek
+                }
+            }
+            m => m,
+        }
+    }
+}
+
+/// Poll-mode default (`WEIPS_RPC_POLL` = auto|epoll|peek; the cluster
+/// config's `rpc_poll_mode` knob wins where a config is present).
+pub fn default_poll_mode() -> PollMode {
+    use std::sync::OnceLock;
+    static M: OnceLock<PollMode> = OnceLock::new();
+    *M.get_or_init(|| {
+        std::env::var("WEIPS_RPC_POLL")
+            .ok()
+            .and_then(|v| PollMode::parse(&v).ok())
+            .unwrap_or(PollMode::Auto)
+    })
+}
+
+/// Tunables for one RPC server (the cluster config's RPC knobs resolve to
+/// this — see `ClusterConfig::rpc_options`).
+#[derive(Debug, Clone)]
+pub struct RpcOptions {
+    /// Handler pool size.
+    pub threads: usize,
+    /// Stalled-peer drop timeout (mid-frame / blocked-write gaps beyond
+    /// this drop the connection and reclaim the worker).
+    pub stall: Duration,
+    /// Peek-mode sweep back-off lower bound (ms) — the sweep interval
+    /// while traffic is flowing.
+    pub poll_min_ms: u64,
+    /// Peek-mode sweep back-off upper bound (ms) — the idle interval a
+    /// quiet server backs off to.
+    pub poll_max_ms: u64,
+    /// Per-connection scratch buffers are shrunk back under this many
+    /// bytes when the connection parks.
+    pub scratch_cap: usize,
+    /// Readiness mechanism.
+    pub mode: PollMode,
+}
+
+impl Default for RpcOptions {
+    fn default() -> RpcOptions {
+        RpcOptions {
+            threads: default_rpc_threads(),
+            stall: Duration::from_millis(default_stall_ms()),
+            poll_min_ms: 1,
+            poll_max_ms: 10,
+            scratch_cap: default_scratch_cap(),
+            mode: default_poll_mode(),
+        }
+    }
+}
+
 /// A dispatchable service: maps (method, payload) -> payload.
 pub trait Service: Send + Sync {
     /// Handle one request.
@@ -73,10 +208,7 @@ where
 /// Read exactly one frame from a stream (blocking). The payload is left in
 /// `scratch` and its byte range returned — no intermediate copy; callers
 /// borrow `&scratch[range]` (and copy only what they keep).
-fn read_frame(
-    stream: &mut TcpStream,
-    scratch: &mut Vec<u8>,
-) -> Result<std::ops::Range<usize>> {
+fn read_frame(stream: &mut TcpStream, scratch: &mut Vec<u8>) -> Result<std::ops::Range<usize>> {
     let mut header = [0u8; 8];
     stream.read_exact(&mut header)?;
     let len = u32::from_le_bytes(header[0..4].try_into().unwrap()) as usize;
@@ -92,19 +224,6 @@ fn read_frame(
         None => Err(Error::Codec("incomplete frame after read".into())),
     }
 }
-
-fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
-    let framed = frame(payload);
-    stream.write_all(&framed)?;
-    Ok(())
-}
-
-/// A handler-pool worker never waits on one peer's socket longer than
-/// this: a connection that stalls mid-frame (or refuses our writes) is
-/// dropped and its worker reclaimed, so slow/hung clients cannot pin the
-/// fixed pool. Generous next to a healthy peer's packet gaps (micro- to
-/// milliseconds) — tripping it means the peer is effectively gone.
-const IO_STALL_LIMIT: std::time::Duration = std::time::Duration::from_secs(10);
 
 /// Nap between non-blocking I/O retries; abort on shutdown or when the
 /// peer has stalled past `deadline`.
@@ -122,14 +241,15 @@ fn nap_or_abort(stop: &AtomicBool, deadline: std::time::Instant, what: &str) -> 
 /// Read one frame from a non-blocking stream. `Ok(None)` means no request
 /// has started (first header byte would block) — the caller parks the
 /// connection back into the poll set. Once a frame is underway, short
-/// naps bridge the gaps between the peer's packets, bounded by
-/// [`IO_STALL_LIMIT`]; `stop` aborts.
+/// naps bridge the gaps between the peer's packets, bounded by `stall`;
+/// `stop` aborts.
 fn read_frame_nonblocking(
     stream: &mut TcpStream,
     scratch: &mut Vec<u8>,
     stop: &AtomicBool,
+    stall: Duration,
 ) -> Result<Option<std::ops::Range<usize>>> {
-    let deadline = std::time::Instant::now() + IO_STALL_LIMIT;
+    let deadline = std::time::Instant::now() + stall;
     let mut header = [0u8; 8];
     let mut got = 0usize;
     while got < 8 {
@@ -172,9 +292,14 @@ fn read_frame_nonblocking(
 }
 
 /// Write all of `bytes` to a non-blocking stream (napping through a full
-/// socket buffer, bounded by [`IO_STALL_LIMIT`]; `stop` aborts).
-fn write_all_nonblocking(stream: &mut TcpStream, bytes: &[u8], stop: &AtomicBool) -> Result<()> {
-    let deadline = std::time::Instant::now() + IO_STALL_LIMIT;
+/// socket buffer, bounded by `stall`; `stop` aborts).
+fn write_all_nonblocking(
+    stream: &mut TcpStream,
+    bytes: &[u8],
+    stop: &AtomicBool,
+    stall: Duration,
+) -> Result<()> {
+    let deadline = std::time::Instant::now() + stall;
     let mut off = 0usize;
     while off < bytes.len() {
         match stream.write(&bytes[off..]) {
@@ -194,26 +319,87 @@ fn write_all_nonblocking(stream: &mut TcpStream, bytes: &[u8], stop: &AtomicBool
 // Server
 // ---------------------------------------------------------------------------
 
-/// Running RPC server: a fixed handler pool fed by a readiness-polling
-/// accept/poll thread. Dropping it stops the loop, joins the accept
+/// One connection plus its reusable buffers. The buffers travel with the
+/// connection between the poll thread and pool workers, so steady-state
+/// request handling allocates nothing; [`Conn::shrink`] caps what an
+/// oversized frame can pin once the connection goes idle.
+struct Conn {
+    stream: TcpStream,
+    /// Frame read scratch — handlers borrow payload ranges in place.
+    rbuf: Vec<u8>,
+    /// Response assembly + framing buffer.
+    wbuf: Vec<u8>,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn { stream, rbuf: Vec::new(), wbuf: Vec::new() }
+    }
+
+    /// Release buffer memory beyond `cap` (called whenever the connection
+    /// parks, so a single huge frame cannot pin memory for the
+    /// connection's lifetime).
+    fn shrink(&mut self, cap: usize) {
+        if self.rbuf.capacity() > cap {
+            self.rbuf.clear();
+            self.rbuf.shrink_to(cap);
+        }
+        if self.wbuf.capacity() > cap {
+            self.wbuf.clear();
+            self.wbuf.shrink_to(cap);
+        }
+    }
+}
+
+/// Hand-off point between pool workers and the poll thread, which is the
+/// sole owner of the parked set: workers push drained connections here
+/// and (in event mode) ring the waker; the poll thread absorbs the queue
+/// and re-registers the fds.
+struct ParkQueue {
+    queue: Mutex<Vec<Conn>>,
+    /// Idle connections: parked-set size plus queued re-parks.
+    count: AtomicUsize,
+    /// Event-mode waker (`None` in peek mode — the sweep notices).
+    waker: Option<sys::EventFd>,
+}
+
+impl ParkQueue {
+    fn park(&self, conn: Conn) {
+        self.count.fetch_add(1, Ordering::AcqRel);
+        self.queue.lock().unwrap().push(conn);
+        if let Some(w) = &self.waker {
+            w.signal();
+        }
+    }
+
+    fn take_queued(&self) -> Vec<Conn> {
+        std::mem::take(&mut *self.queue.lock().unwrap())
+    }
+}
+
+/// Running RPC server: a fixed handler pool fed by an event-driven (or
+/// peek-sweeping) poll thread. Dropping it stops the loop, joins the poll
 /// thread and drains the pool ([`Drop`] below — tests cannot leak accept
 /// loops or handler threads).
 pub struct RpcServer {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
-    /// Handler pool; `Some` until drop. Dropped after the accept thread
+    /// Handler pool; `Some` until drop. Dropped after the poll thread
     /// joins so no task can be submitted to a dead pool.
     pool: Option<Arc<ThreadPool>>,
-    /// Parked (idle) connections awaiting readiness.
-    parked: Arc<Mutex<Vec<TcpStream>>>,
+    park: Arc<ParkQueue>,
+    /// Readiness mechanism actually in use (after `Auto` resolution and
+    /// epoll-availability fallback).
+    mode: PollMode,
 }
 
 impl RpcServer {
-    /// Bind `addr` (use port 0 for ephemeral) and serve `service` on
-    /// [`default_rpc_threads`] handler threads.
+    /// Bind `addr` (use port 0 for ephemeral) and serve `service` with
+    /// default options ([`default_rpc_threads`] handlers, env-tunable
+    /// stall/poll knobs).
     pub fn serve(addr: &str, service: Arc<dyn Service>) -> Result<RpcServer> {
-        Self::serve_pooled(addr, service, default_rpc_threads())
+        Self::serve_with(addr, service, RpcOptions::default())
     }
 
     /// Bind `addr` and serve `service` on a fixed pool of `threads`
@@ -223,27 +409,62 @@ impl RpcServer {
         service: Arc<dyn Service>,
         threads: usize,
     ) -> Result<RpcServer> {
+        Self::serve_with(addr, service, RpcOptions { threads, ..RpcOptions::default() })
+    }
+
+    /// Bind `addr` and serve `service` with explicit [`RpcOptions`].
+    pub fn serve_with(
+        addr: &str,
+        service: Arc<dyn Service>,
+        opts: RpcOptions,
+    ) -> Result<RpcServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
-        let pool = Arc::new(ThreadPool::new(threads, &format!("rpc-{}", local.port())));
-        let parked: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let pool =
+            Arc::new(ThreadPool::new(opts.threads.max(1), &format!("rpc-{}", local.port())));
+        let mut mode = opts.mode.resolve();
+        // Event mode needs a live epoll instance and a waker; anything
+        // short of that falls back to the portable sweep.
+        let mut epoll = None;
+        let mut waker = None;
+        if mode == PollMode::Event {
+            match (sys::Epoll::new(), sys::EventFd::new()) {
+                (Ok(e), Ok(w)) => {
+                    epoll = Some(e);
+                    waker = Some(w);
+                }
+                _ => mode = PollMode::Peek,
+            }
+        }
+        let park = Arc::new(ParkQueue {
+            queue: Mutex::new(Vec::new()),
+            count: AtomicUsize::new(0),
+            waker,
+        });
+        let opts = Arc::new(RpcOptions { mode, ..opts });
         let accept_thread = {
             let stop = stop.clone();
             let pool = pool.clone();
-            let parked = parked.clone();
+            let park = park.clone();
             std::thread::Builder::new()
-                .name(format!("rpc-accept-{local}"))
-                .spawn(move || Self::accept_poll_loop(listener, service, stop, pool, parked))
-                .expect("spawn accept loop")
+                .name(format!("rpc-poll-{local}"))
+                .spawn(move || match epoll {
+                    Some(epoll) => {
+                        Self::event_loop(listener, service, stop, pool, park, opts, epoll)
+                    }
+                    None => Self::peek_loop(listener, service, stop, pool, park, opts),
+                })
+                .expect("spawn poll loop")
         };
         Ok(RpcServer {
             addr: local,
             stop,
             accept_thread: Some(accept_thread),
             pool: Some(pool),
-            parked,
+            park,
+            mode,
         })
     }
 
@@ -252,40 +473,146 @@ impl RpcServer {
         self.addr
     }
 
+    /// Readiness mechanism in use.
+    pub fn poll_mode(&self) -> PollMode {
+        self.mode
+    }
+
     /// Idle connections currently parked (excludes ones being serviced).
     pub fn parked_connections(&self) -> usize {
-        self.parked.lock().unwrap().len()
+        self.park.count.load(Ordering::Acquire)
     }
 
     /// Stop accepting and polling; parked connections close when the
     /// server drops, in-flight handlers abort on their next I/O nap.
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::Release);
+        if let Some(w) = &self.park.waker {
+            w.signal();
+        }
     }
 
-    /// Accept new connections and sweep parked ones for readiness; ready
-    /// connections move onto the handler pool and park themselves again
-    /// once they have drained the requests queued on them.
-    fn accept_poll_loop(
+    fn dispatch(
+        conn: Conn,
+        service: &Arc<dyn Service>,
+        stop: &Arc<AtomicBool>,
+        pool: &Arc<ThreadPool>,
+        park: &Arc<ParkQueue>,
+        opts: &Arc<RpcOptions>,
+    ) {
+        let service = service.clone();
+        let stop = stop.clone();
+        let park = park.clone();
+        let opts = opts.clone();
+        pool.execute(move || Self::serve_ready(conn, service, stop, park, opts));
+    }
+
+    /// Event-driven poll loop: the listener, the waker and every parked
+    /// connection are registered with epoll; the thread sleeps until the
+    /// kernel reports readiness. Idle servers burn no CPU regardless of
+    /// fleet size, and each wakeup touches only the ready fds.
+    fn event_loop(
         listener: TcpListener,
         service: Arc<dyn Service>,
         stop: Arc<AtomicBool>,
         pool: Arc<ThreadPool>,
-        parked: Arc<Mutex<Vec<TcpStream>>>,
+        park: Arc<ParkQueue>,
+        opts: Arc<RpcOptions>,
+        epoll: sys::Epoll,
     ) {
-        // Adaptive sweep pacing: an idle server backs its sweep interval
-        // off (1ms -> 10ms) so a large parked fleet doesn't burn a core
-        // on peek() syscalls; any progress snaps it back for latency.
+        const TOKEN_WAKE: u64 = u64::MAX;
+        const TOKEN_ACCEPT: u64 = u64::MAX - 1;
+        // fd-keyed parked set (fds are process-unique while open and never
+        // collide with the reserved tokens).
+        let mut conns: HashMap<u64, Conn> = HashMap::new();
+        let mut events = vec![sys::EpollEvent::default(); 64];
+        if epoll.add(listener.as_raw_fd(), TOKEN_ACCEPT).is_err() {
+            // Registration failure at startup: fall back to sweeping.
+            return Self::peek_loop(listener, service, stop, pool, park, opts);
+        }
+        if let Some(w) = &park.waker {
+            let _ = epoll.add(w.raw_fd(), TOKEN_WAKE);
+        }
+        while !stop.load(Ordering::Acquire) {
+            // Re-register connections the workers handed back before
+            // sleeping (the waker guarantees we woke for them).
+            for conn in park.take_queued() {
+                let fd = conn.stream.as_raw_fd();
+                if epoll.add(fd, fd as u64).is_ok() {
+                    conns.insert(fd as u64, conn);
+                } else {
+                    park.count.fetch_sub(1, Ordering::AcqRel); // broken socket
+                }
+            }
+            // The 1 s timeout is a belt-and-braces stop check; shutdown
+            // rings the waker so teardown never waits on it.
+            let n = match epoll.wait(&mut events, 1_000) {
+                Ok(n) => n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            };
+            for ev in events.iter().take(n) {
+                match ev.token() {
+                    TOKEN_WAKE => {
+                        if let Some(w) = &park.waker {
+                            w.drain();
+                        }
+                    }
+                    TOKEN_ACCEPT => loop {
+                        match listener.accept() {
+                            Ok((stream, _peer)) => {
+                                let _ = stream.set_nodelay(true);
+                                if stream.set_nonblocking(true).is_err() {
+                                    continue;
+                                }
+                                let fd = stream.as_raw_fd();
+                                if epoll.add(fd, fd as u64).is_ok() {
+                                    conns.insert(fd as u64, Conn::new(stream));
+                                    park.count.fetch_add(1, Ordering::AcqRel);
+                                }
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                            Err(_) => return,
+                        }
+                    },
+                    token => {
+                        // Readable or hung up — the worker's first read
+                        // tells them apart; either way it leaves the set.
+                        if let Some(conn) = conns.remove(&token) {
+                            let _ = epoll.delete(conn.stream.as_raw_fd());
+                            park.count.fetch_sub(1, Ordering::AcqRel);
+                            Self::dispatch(conn, &service, &stop, &pool, &park, &opts);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Portable fallback: accept new connections and sweep parked ones
+    /// for readiness with non-blocking peeks, backing the sweep interval
+    /// off between `poll_min_ms` and `poll_max_ms` while idle.
+    fn peek_loop(
+        listener: TcpListener,
+        service: Arc<dyn Service>,
+        stop: Arc<AtomicBool>,
+        pool: Arc<ThreadPool>,
+        park: Arc<ParkQueue>,
+        opts: Arc<RpcOptions>,
+    ) {
+        let mut conns: Vec<Conn> = Vec::new();
         let mut idle_sweeps = 0u32;
         while !stop.load(Ordering::Acquire) {
             let mut progressed = false;
+            conns.append(&mut park.take_queued());
             // Admit every connection waiting in the backlog.
             loop {
                 match listener.accept() {
                     Ok((stream, _peer)) => {
                         let _ = stream.set_nodelay(true);
                         if stream.set_nonblocking(true).is_ok() {
-                            parked.lock().unwrap().push(stream);
+                            conns.push(Conn::new(stream));
+                            park.count.fetch_add(1, Ordering::AcqRel);
                         }
                         progressed = true;
                     }
@@ -294,41 +621,44 @@ impl RpcServer {
                 }
             }
             // Sweep parked connections; dispatch the readable ones.
-            let mut ready = Vec::new();
-            {
-                let mut guard = parked.lock().unwrap();
-                let mut i = 0;
-                while i < guard.len() {
-                    let mut probe = [0u8; 1];
-                    match guard[i].peek(&mut probe) {
-                        Ok(0) => {
-                            guard.swap_remove(i); // peer closed
-                        }
-                        Ok(_) => ready.push(guard.swap_remove(i)),
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => i += 1,
-                        Err(_) => {
-                            guard.swap_remove(i); // broken socket
-                        }
+            let mut i = 0;
+            while i < conns.len() {
+                let mut probe = [0u8; 1];
+                match conns[i].stream.peek(&mut probe) {
+                    Ok(0) => {
+                        conns.swap_remove(i); // peer closed
+                        park.count.fetch_sub(1, Ordering::AcqRel);
+                    }
+                    Ok(_) => {
+                        let conn = conns.swap_remove(i);
+                        park.count.fetch_sub(1, Ordering::AcqRel);
+                        progressed = true;
+                        Self::dispatch(conn, &service, &stop, &pool, &park, &opts);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => i += 1,
+                    Err(_) => {
+                        conns.swap_remove(i); // broken socket
+                        park.count.fetch_sub(1, Ordering::AcqRel);
                     }
                 }
-            }
-            for stream in ready {
-                progressed = true;
-                let service = service.clone();
-                let stop = stop.clone();
-                let parked = parked.clone();
-                pool.execute(move || Self::serve_ready(stream, service, stop, parked));
             }
             if progressed {
                 idle_sweeps = 0;
             } else {
                 idle_sweeps = idle_sweeps.saturating_add(1);
                 let ms = match idle_sweeps {
-                    0..=10 => 1,
-                    11..=100 => 2,
-                    _ => 10,
+                    0..=10 => opts.poll_min_ms,
+                    11..=100 => (opts.poll_min_ms * 2).min(opts.poll_max_ms.max(opts.poll_min_ms)),
+                    _ => opts.poll_max_ms.max(opts.poll_min_ms),
                 };
-                std::thread::sleep(std::time::Duration::from_millis(ms));
+                // Nap in short slices so a large configured back-off never
+                // delays shutdown (drop joins this thread).
+                let mut left = ms.max(1);
+                while left > 0 && !stop.load(Ordering::Acquire) {
+                    let slice = left.min(10);
+                    std::thread::sleep(std::time::Duration::from_millis(slice));
+                    left -= slice;
+                }
             }
         }
     }
@@ -339,20 +669,21 @@ impl RpcServer {
     /// mostly-idle connections shares `rpc_threads` handlers. A short
     /// post-response linger bridges a request/response-cycling client's
     /// think time, keeping sequential call latency at microseconds
-    /// instead of a full poller sweep.
+    /// instead of a full poller round-trip. The frame path reuses the
+    /// connection's own buffers — no allocation per request.
     fn serve_ready(
-        mut stream: TcpStream,
+        mut conn: Conn,
         service: Arc<dyn Service>,
         stop: Arc<AtomicBool>,
-        parked: Arc<Mutex<Vec<TcpStream>>>,
+        park: Arc<ParkQueue>,
+        opts: Arc<RpcOptions>,
     ) {
-        const LINGER: std::time::Duration = std::time::Duration::from_micros(300);
+        const LINGER: Duration = Duration::from_micros(300);
         // Fairness bound: a connection streaming back-to-back requests is
         // re-parked after this many responses so the poller can
         // round-robin workers across more saturating clients than
         // `rpc_threads` — one hot peer cannot pin a worker indefinitely.
         const MAX_REQUESTS_PER_DISPATCH: u32 = 128;
-        let mut scratch = Vec::new();
         let mut idle_since = std::time::Instant::now();
         let mut served = 0u32;
         loop {
@@ -360,15 +691,19 @@ impl RpcServer {
                 return; // drop the connection on shutdown
             }
             if served >= MAX_REQUESTS_PER_DISPATCH {
-                parked.lock().unwrap().push(stream);
+                conn.shrink(opts.scratch_cap);
+                park.park(conn);
                 return; // yield the worker; the poller re-dispatches
             }
-            let range = match read_frame_nonblocking(&mut stream, &mut scratch, &stop) {
+            // Disjoint borrows of the stream and the two buffers.
+            let Conn { stream, rbuf, wbuf } = &mut conn;
+            let range = match read_frame_nonblocking(stream, rbuf, &stop, opts.stall) {
                 Ok(Some(range)) => range,
                 Ok(None) => {
                     if idle_since.elapsed() >= LINGER {
                         // Connection went quiet: hand it to the poller.
-                        parked.lock().unwrap().push(stream);
+                        conn.shrink(opts.scratch_cap);
+                        park.park(conn);
                         return;
                     }
                     std::thread::sleep(std::time::Duration::from_micros(20));
@@ -376,27 +711,30 @@ impl RpcServer {
                 }
                 Err(_) => return, // disconnect or corrupt stream
             };
-            let req = &scratch[range];
+            let req = &rbuf[range];
             if req.len() < 10 {
                 return;
             }
             let req_id = u64::from_le_bytes(req[0..8].try_into().unwrap());
             let method = u16::from_le_bytes(req[8..10].try_into().unwrap());
             let payload = &req[10..];
-            let mut resp = Vec::with_capacity(32);
-            resp.extend_from_slice(&req_id.to_le_bytes());
+            // Assemble the framed response in place:
+            // [len u32][crc u32][req_id u64][status u8][body].
+            wbuf.clear();
+            wbuf.extend_from_slice(&[0u8; 8]);
+            wbuf.extend_from_slice(&req_id.to_le_bytes());
             match service.call(method, payload) {
                 Ok(body) => {
-                    resp.push(STATUS_OK);
-                    resp.extend_from_slice(&body);
+                    wbuf.push(STATUS_OK);
+                    wbuf.extend_from_slice(&body);
                 }
                 Err(e) => {
-                    resp.push(STATUS_ERR);
-                    resp.extend_from_slice(e.to_string().as_bytes());
+                    wbuf.push(STATUS_ERR);
+                    wbuf.extend_from_slice(e.to_string().as_bytes());
                 }
             }
-            let framed = frame(&resp);
-            if write_all_nonblocking(&mut stream, &framed, &stop).is_err() {
+            finish_frame(wbuf);
+            if write_all_nonblocking(stream, wbuf, &stop, opts.stall).is_err() {
                 return;
             }
             served += 1;
@@ -415,7 +753,8 @@ impl Drop for RpcServer {
         // then the pool's Drop drains and joins). After this, no thread
         // of this server remains.
         self.pool.take();
-        self.parked.lock().unwrap().clear();
+        self.park.queue.lock().unwrap().clear();
+        self.park.count.store(0, Ordering::Release);
     }
 }
 
@@ -425,12 +764,16 @@ impl Drop for RpcServer {
 
 struct ClientInner {
     stream: Option<TcpStream>,
+    /// Response frame scratch (payload parsed in place).
     scratch: Vec<u8>,
+    /// Request assembly + framing buffer.
+    wbuf: Vec<u8>,
 }
 
 /// Blocking RPC client with automatic reconnect. One in-flight request per
 /// client; callers needing concurrency hold a pool of clients (the
-/// WeiPS-client does exactly that, see `worker::client`).
+/// WeiPS-client does exactly that, see `worker::client`). Request and
+/// response frames are assembled/parsed in reusable buffers.
 pub struct RpcClient {
     addr: String,
     timeout: std::time::Duration,
@@ -445,7 +788,11 @@ impl RpcClient {
             addr: addr.to_string(),
             timeout,
             next_id: AtomicU64::new(1),
-            inner: Mutex::new(ClientInner { stream: None, scratch: Vec::new() }),
+            inner: Mutex::new(ClientInner {
+                stream: None,
+                scratch: Vec::new(),
+                wbuf: Vec::new(),
+            }),
         }
     }
 
@@ -467,18 +814,19 @@ impl RpcClient {
         let mut inner = self.inner.lock().unwrap();
         self.ensure_conn(&mut inner)?;
 
-        let mut req = Vec::with_capacity(payload.len() + 10);
-        req.extend_from_slice(&req_id.to_le_bytes());
-        req.extend_from_slice(&method.to_le_bytes());
-        req.extend_from_slice(payload);
-
         let outcome = (|| -> Result<Vec<u8>> {
-            // Disjoint borrows of the stream and the reusable scratch
-            // buffer; the response payload is parsed in place and only
-            // the body is copied out.
-            let ClientInner { stream, scratch } = &mut *inner;
+            // Disjoint borrows of the stream and the reusable buffers;
+            // the request frame is assembled in place and the response
+            // payload parsed in place — only the body is copied out.
+            let ClientInner { stream, scratch, wbuf } = &mut *inner;
             let stream = stream.as_mut().unwrap();
-            write_frame(stream, &req)?;
+            wbuf.clear();
+            wbuf.extend_from_slice(&[0u8; 8]);
+            wbuf.extend_from_slice(&req_id.to_le_bytes());
+            wbuf.extend_from_slice(&method.to_le_bytes());
+            wbuf.extend_from_slice(payload);
+            finish_frame(wbuf);
+            stream.write_all(wbuf)?;
             // A slow server may interleave read timeouts; retry until the
             // client-level deadline elapses.
             let deadline = std::time::Instant::now() + self.timeout;
@@ -517,6 +865,17 @@ impl RpcClient {
         if outcome.is_err() {
             // Drop the (possibly desynchronized) connection; next call dials.
             inner.stream = None;
+        }
+        // Same cap as server-side connections: one huge response must not
+        // pin the client's buffers for its lifetime.
+        let cap = default_scratch_cap();
+        if inner.scratch.capacity() > cap {
+            inner.scratch.clear();
+            inner.scratch.shrink_to(cap);
+        }
+        if inner.wbuf.capacity() > cap {
+            inner.wbuf.clear();
+            inner.wbuf.shrink_to(cap);
         }
         outcome
     }
@@ -585,6 +944,15 @@ mod tests {
         std::time::Duration::from_secs(5)
     }
 
+    fn serve_mode(mode: PollMode) -> RpcServer {
+        RpcServer::serve_with(
+            "127.0.0.1:0",
+            Arc::new(Echo),
+            RpcOptions { mode, ..RpcOptions::default() },
+        )
+        .unwrap()
+    }
+
     #[test]
     fn local_channel_dispatches() {
         let ch = Channel::local(Arc::new(Echo));
@@ -599,6 +967,48 @@ mod tests {
         let ch = Channel::remote(&server.addr().to_string(), timeout());
         assert_eq!(ch.call(0, b"hello").unwrap(), b"hello");
         assert_eq!(ch.call(1, b"xyz").unwrap(), b"zyx");
+    }
+
+    #[test]
+    fn tcp_round_trip_in_both_poll_modes() {
+        for mode in [PollMode::Peek, PollMode::Event] {
+            let server = serve_mode(mode);
+            if mode == PollMode::Event && server.poll_mode() != PollMode::Event {
+                continue; // platform without the epoll binding
+            }
+            let ch = Channel::remote(&server.addr().to_string(), timeout());
+            for i in 0..40u32 {
+                let payload = i.to_le_bytes();
+                assert_eq!(ch.call(0, &payload).unwrap(), payload, "mode {mode:?}");
+            }
+            let err = ch.call(9, b"").unwrap_err();
+            assert!(err.to_string().contains("degraded"), "{err}");
+            assert_eq!(ch.call(0, b"still-up").unwrap(), b"still-up");
+        }
+    }
+
+    #[test]
+    fn event_mode_parks_idle_connections() {
+        let server = serve_mode(PollMode::Event);
+        if server.poll_mode() != PollMode::Event {
+            return; // no epoll on this platform
+        }
+        let clients: Vec<RpcClient> = (0..6)
+            .map(|_| RpcClient::new(&server.addr().to_string(), timeout()))
+            .collect();
+        for (i, c) in clients.iter().enumerate() {
+            assert_eq!(c.call(0, &[i as u8]).unwrap(), [i as u8]);
+        }
+        // All six connections go quiet and return to the parked set.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while server.parked_connections() < 6 {
+            assert!(std::time::Instant::now() < deadline, "connections never parked");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        // And they are still serviceable after parking.
+        for (i, c) in clients.iter().enumerate() {
+            assert_eq!(c.call(1, &[i as u8, 9]).unwrap(), [9, i as u8]);
+        }
     }
 
     #[test]
@@ -693,7 +1103,7 @@ mod tests {
         let addr = server.addr().to_string();
         let client = RpcClient::new(&addr, std::time::Duration::from_millis(500));
         assert_eq!(client.call(0, b"x").unwrap(), b"x");
-        // Drop joins the accept thread and the handler pool and closes
+        // Drop joins the poll thread and the handler pool and closes
         // the parked connection; the client then fails fast.
         drop(server);
         assert!(client.call(0, b"y").is_err());
@@ -708,5 +1118,59 @@ mod tests {
         let client = RpcClient::new(&addr, std::time::Duration::from_millis(300));
         // Either connect fails or the read times out — must error out.
         assert!(client.call(0, b"x").is_err());
+    }
+
+    #[test]
+    fn conn_shrink_caps_oversized_buffers() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _peer = TcpStream::connect(addr).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        let mut conn = Conn::new(stream);
+        conn.rbuf.reserve(8 << 20);
+        conn.wbuf.reserve(8 << 20);
+        conn.shrink(1 << 16);
+        assert!(conn.rbuf.capacity() <= 1 << 16, "rbuf kept {} bytes", conn.rbuf.capacity());
+        assert!(conn.wbuf.capacity() <= 1 << 16, "wbuf kept {} bytes", conn.wbuf.capacity());
+        // Under-cap buffers are left alone (no realloc churn).
+        conn.rbuf.reserve(1024);
+        let cap = conn.rbuf.capacity();
+        conn.shrink(1 << 16);
+        assert_eq!(conn.rbuf.capacity(), cap);
+    }
+
+    #[test]
+    fn poll_mode_parses_and_resolves() {
+        assert_eq!(PollMode::parse("auto").unwrap(), PollMode::Auto);
+        assert_eq!(PollMode::parse("epoll").unwrap(), PollMode::Event);
+        assert_eq!(PollMode::parse("event").unwrap(), PollMode::Event);
+        assert_eq!(PollMode::parse("peek").unwrap(), PollMode::Peek);
+        assert!(PollMode::parse("select").is_err());
+        assert_ne!(PollMode::Auto.resolve(), PollMode::Auto);
+        assert_eq!(PollMode::Peek.resolve(), PollMode::Peek);
+    }
+
+    #[test]
+    fn stall_timeout_drops_wedged_peer_without_blocking_pool() {
+        // A 1-thread pool with an aggressive stall limit: a peer that
+        // sends half a frame then goes silent must be dropped quickly and
+        // the worker reclaimed for healthy clients.
+        let server = RpcServer::serve_with(
+            "127.0.0.1:0",
+            Arc::new(Echo),
+            RpcOptions {
+                threads: 1,
+                stall: Duration::from_millis(100),
+                ..RpcOptions::default()
+            },
+        )
+        .unwrap();
+        let addr = server.addr().to_string();
+        let mut wedged = TcpStream::connect(&addr).unwrap();
+        // Half a header: the handler enters mid-header napping.
+        wedged.write_all(&[1, 2, 3]).unwrap();
+        std::thread::sleep(Duration::from_millis(250)); // > stall
+        let client = RpcClient::new(&addr, timeout());
+        assert_eq!(client.call(0, b"after-wedge").unwrap(), b"after-wedge");
     }
 }

@@ -423,18 +423,40 @@ impl MasterShard {
     /// Upserts carry full master rows, so applying them after a checkpoint
     /// restore reconstructs every post-checkpoint update.
     pub fn replay_sync_batch(&self, batch: &crate::proto::SyncBatch) -> Result<()> {
-        let idx = self.table_index(&batch.table)? as usize;
+        self.replay_sync_batches(std::slice::from_ref(batch))
+    }
+
+    /// Replay a run of sync batches, coalesced: rows are grouped per
+    /// table × lock stripe across the whole run first (in batch order, so
+    /// later batches win), then applied through
+    /// [`crate::table::StripedSparseTable::apply_grouped`] — one stripe
+    /// lock acquisition per busy stripe per run instead of one per row
+    /// per batch, which is what keeps post-downgrade queue replay bounded
+    /// by row volume rather than batch count.
+    pub fn replay_sync_batches(&self, batches: &[crate::proto::SyncBatch]) -> Result<()> {
+        if batches.is_empty() {
+            return Ok(());
+        }
         let now = self.clock.now_ms();
         let state = self.state.read().unwrap();
-        let table = &state.sparse[idx];
-        for entry in &batch.entries {
-            match &entry.op {
-                crate::proto::SyncOp::Upsert(values) => {
-                    table.upsert_row(entry.id, values, now)?;
-                }
-                crate::proto::SyncOp::Delete => {
-                    table.delete(entry.id);
-                }
+        let mut per_table: Vec<Option<Vec<crate::table::RowOps<'_>>>> =
+            (0..state.sparse.len()).map(|_| None).collect();
+        for batch in batches {
+            let idx = self.table_index(&batch.table)? as usize;
+            let table = &state.sparse[idx];
+            let groups = per_table[idx]
+                .get_or_insert_with(|| (0..table.stripe_count()).map(|_| Vec::new()).collect());
+            for entry in &batch.entries {
+                let op = match &entry.op {
+                    crate::proto::SyncOp::Upsert(values) => Some(values.as_slice()),
+                    crate::proto::SyncOp::Delete => None,
+                };
+                groups[table.stripe_of(entry.id)].push((entry.id, op));
+            }
+        }
+        for (idx, groups) in per_table.into_iter().enumerate() {
+            if let Some(groups) = groups {
+                state.sparse[idx].apply_grouped(&groups, now)?;
             }
         }
         Ok(())

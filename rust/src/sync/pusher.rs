@@ -6,9 +6,9 @@
 //! partition mapping according to the server-id before sending."
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
-use crate::codec::{maybe_compress, Encode};
+use crate::codec::{maybe_compress_into, Encode, LzState, Writer};
 use crate::proto::SyncBatch;
 use crate::queue::log::SyncLog;
 use crate::sync::router::partition_of_shard;
@@ -35,6 +35,15 @@ impl PusherStats {
     }
 }
 
+/// Reusable serialize + compress buffers: the encode target, the LZ hash
+/// tables and the wire envelope all persist across pushes, so a
+/// steady-state push allocates only the owned payload the queue keeps.
+struct PushScratch {
+    raw: Writer,
+    wire: Vec<u8>,
+    lz: LzState,
+}
+
 /// Pushes one master shard's batches into its queue partition.
 pub struct Pusher {
     log: Arc<dyn SyncLog>,
@@ -44,6 +53,7 @@ pub struct Pusher {
     /// WEIPS_SYNC_COMPRESS=0 for latency-critical deployments
     /// (EXPERIMENTS.md §Perf ablation).
     compress: bool,
+    scratch: Mutex<PushScratch>,
     pub stats: PusherStats,
 }
 
@@ -52,7 +62,17 @@ impl Pusher {
     pub fn new(log: Arc<dyn SyncLog>, master_shard: u32) -> Pusher {
         let partition = partition_of_shard(master_shard, log.partition_count() as u32);
         let compress = std::env::var("WEIPS_SYNC_COMPRESS").map(|v| v != "0").unwrap_or(true);
-        Pusher { log, partition, compress, stats: PusherStats::default() }
+        Pusher {
+            log,
+            partition,
+            compress,
+            scratch: Mutex::new(PushScratch {
+                raw: Writer::new(),
+                wire: Vec::new(),
+                lz: LzState::new(),
+            }),
+            stats: PusherStats::default(),
+        }
     }
 
     /// The partition this pusher appends to.
@@ -68,21 +88,26 @@ impl Pusher {
     /// tower, so a single-partition dense record would never reach some
     /// shards.
     pub fn push(&self, batch: &SyncBatch) -> Result<u64> {
-        let raw = batch.to_bytes();
-        let wire = if self.compress {
-            maybe_compress(&raw)
+        // Serialize + compress in the pooled scratch buffers; only the
+        // final owned payload handed to the queue is allocated.
+        let mut s = self.scratch.lock().unwrap();
+        let PushScratch { raw, wire, lz } = &mut *s;
+        raw.clear();
+        batch.encode(raw);
+        let raw_len = raw.len();
+        if self.compress {
+            maybe_compress_into(raw.as_bytes(), wire, lz);
         } else {
             // Stored-mode envelope (decompress() still decodes it).
-            let mut out = Vec::with_capacity(raw.len() + 1);
-            out.push(0); // CompressMode::None
-            out.extend_from_slice(&raw);
-            out
-        };
+            wire.clear();
+            wire.push(0); // CompressMode::None
+            wire.extend_from_slice(raw.as_bytes());
+        }
         self.stats.batches.fetch_add(1, Ordering::Relaxed);
-        self.stats.bytes_raw.fetch_add(raw.len() as u64, Ordering::Relaxed);
+        self.stats.bytes_raw.fetch_add(raw_len as u64, Ordering::Relaxed);
         if batch.dense.is_empty() {
             self.stats.bytes_on_wire.fetch_add(wire.len() as u64, Ordering::Relaxed);
-            return self.log.append(self.partition, batch.created_ms, wire);
+            return self.log.append(self.partition, batch.created_ms, wire.clone());
         }
         let mut last = 0;
         for p in 0..self.log.partition_count() as u32 {

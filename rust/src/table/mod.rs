@@ -57,6 +57,11 @@ pub fn stripe_of_id(id: u64, stripes: usize) -> usize {
 /// One table's value snapshot: (id, full row values or `None` if absent).
 pub type RowSnapshot = Vec<(u64, Option<Vec<f32>>)>;
 
+/// One stripe's coalesced row operations for
+/// [`StripedSparseTable::apply_grouped`]: `(id, Some(full row))` upserts,
+/// `(id, None)` deletes, in arrival order.
+pub type RowOps<'a> = Vec<(u64, Option<&'a [f32]>)>;
+
 /// One sparse row.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Row {
@@ -708,6 +713,73 @@ impl StripedSparseTable {
             kernel_rows += k as u64;
         }
         Ok(kernel_rows)
+    }
+
+    /// Multi-batch coalesced row-op apply: `groups[s]` holds the full-row
+    /// upserts (`Some(values)`) and deletes (`None`) whose ids hash to
+    /// stripe `s`, accumulated across a whole run of sync batches **in
+    /// arrival order** (so a later batch's op for an id wins, exactly as
+    /// per-row application would). Each non-empty stripe takes its write
+    /// lock once for the entire run — queue replay and scatter-style
+    /// consumers pay one acquisition per busy stripe instead of one per
+    /// row per batch. Width mismatches skip the op and the first such
+    /// error is returned after everything else has applied (matching
+    /// [`Self::upsert_row`]'s per-op validation). Returns rows touched.
+    pub fn apply_grouped(&self, groups: &[RowOps<'_>], now_ms: u64) -> Result<u64> {
+        debug_assert_eq!(groups.len(), self.stripes.len());
+        let width = self.row_width();
+        let mut touched = 0u64;
+        let mut first_err: Option<Error> = None;
+        for (stripe, ops) in groups.iter().enumerate() {
+            if ops.is_empty() {
+                continue;
+            }
+            let mut s = self.stripes[stripe].write().unwrap();
+            for &(id, op) in ops {
+                debug_assert_eq!(self.stripe_of(id), stripe, "op grouped to wrong stripe");
+                match op {
+                    Some(values) => {
+                        if values.len() != width {
+                            if first_err.is_none() {
+                                first_err = Some(Error::Codec(format!(
+                                    "row width {} != {width} for table {}",
+                                    values.len(),
+                                    self.name
+                                )));
+                            }
+                            continue;
+                        }
+                        match s.rows.get_mut(&id) {
+                            Some(row) => {
+                                row.values.copy_from_slice(values);
+                                row.last_access_ms = now_ms;
+                            }
+                            None => {
+                                s.rows.insert(
+                                    id,
+                                    Row {
+                                        values: values.to_vec().into_boxed_slice(),
+                                        last_access_ms: now_ms,
+                                        updates: 0,
+                                    },
+                                );
+                            }
+                        }
+                        touched += 1;
+                    }
+                    None => {
+                        s.probation.remove(&id);
+                        if s.rows.remove(&id).is_some() {
+                            touched += 1;
+                        }
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(touched),
+        }
     }
 
     /// Overwrite a full row (scatter / checkpoint-load / replay path).
@@ -1511,6 +1583,65 @@ mod tests {
         assert_eq!(sorted, (0..100u64).collect::<Vec<_>>());
         assert_eq!(a.len(), 100);
         assert_eq!(b.len(), 100);
+    }
+
+    #[test]
+    fn striped_apply_grouped_matches_per_row_and_last_write_wins() {
+        let per_row = striped(1, 8);
+        let grouped = striped(1, 8);
+        // Two "batches" over overlapping ids: second overwrites ids 0..50
+        // and deletes every 10th id.
+        let first: Vec<(u64, Vec<f32>)> =
+            (0..100u64).map(|id| (id, vec![id as f32, 1.0, 2.0, 3.0, 4.0, 5.0])).collect();
+        let second: Vec<(u64, Option<Vec<f32>>)> = (0..50u64)
+            .map(|id| {
+                if id % 10 == 0 {
+                    (id, None)
+                } else {
+                    (id, Some(vec![-(id as f32), 0.0, 0.0, 0.0, 0.0, 9.0]))
+                }
+            })
+            .collect();
+        // Per-row reference application.
+        for (id, v) in &first {
+            per_row.upsert_row(*id, v, 7).unwrap();
+        }
+        for (id, op) in &second {
+            match op {
+                Some(v) => per_row.upsert_row(*id, v, 8).unwrap(),
+                None => {
+                    per_row.delete(*id);
+                }
+            }
+        }
+        // Grouped application: both batches folded into one run.
+        let mut groups: Vec<Vec<(u64, Option<&[f32]>)>> =
+            vec![Vec::new(); grouped.stripe_count()];
+        for (id, v) in &first {
+            groups[grouped.stripe_of(*id)].push((*id, Some(v.as_slice())));
+        }
+        for (id, op) in &second {
+            groups[grouped.stripe_of(*id)].push((*id, op.as_deref()));
+        }
+        let touched = grouped.apply_grouped(&groups, 8).unwrap();
+        assert!(touched > 0);
+        assert_eq!(per_row.len(), grouped.len());
+        for id in 0..100u64 {
+            assert_eq!(
+                per_row.get_row(id).map(|r| r.values.clone()),
+                grouped.get_row(id).map(|r| r.values.clone()),
+                "id {id}"
+            );
+        }
+        // Width mismatch: error surfaces, valid ops still land.
+        let mut bad: Vec<Vec<(u64, Option<&[f32]>)>> = vec![Vec::new(); grouped.stripe_count()];
+        let good_row = [1.0f32; 6];
+        let short_row = [1.0f32; 2];
+        bad[grouped.stripe_of(500)].push((500, Some(&good_row)));
+        bad[grouped.stripe_of(501)].push((501, Some(&short_row)));
+        assert!(grouped.apply_grouped(&bad, 9).is_err());
+        assert!(grouped.get_row(500).is_some());
+        assert!(grouped.get_row(501).is_none());
     }
 
     #[test]

@@ -14,6 +14,7 @@ pub mod json;
 pub mod lockfree;
 pub mod prop;
 pub mod rng;
+pub mod sys;
 pub mod threadpool;
 
 pub use clock::{Clock, ManualClock, SystemClock};

@@ -1,0 +1,430 @@
+//! Raw Linux syscall bindings for the event-driven RPC substrate.
+//!
+//! The offline build has no `libc` crate, so the handful of kernel
+//! interfaces the net layer needs — epoll readiness notification, an
+//! eventfd waker, and the per-process CPU clock the idle-fleet bench
+//! reads — are invoked directly through the architecture's syscall
+//! instruction (`syscall` on x86_64, `svc 0` on aarch64). Everything is
+//! wrapped in safe types ([`Epoll`], [`EventFd`]); on platforms without
+//! these bindings the constructors return an error and callers fall back
+//! to the portable peek-sweep poll loop (`net::PollMode::Peek`), which is
+//! exactly what [`supported`] reports.
+//!
+//! Only the syscalls the repo actually uses are bound. Numbers come from
+//! the kernel's `unistd` tables for each architecture and are stable ABI.
+
+#![allow(clippy::missing_safety_doc)]
+
+use std::io;
+
+/// True when the epoll/eventfd bindings are functional on this target —
+/// the `net` layer's `PollMode::Auto` resolves on this.
+pub fn supported() -> bool {
+    cfg!(all(
+        target_os = "linux",
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    ))
+}
+
+/// One epoll readiness record. Layout matches the kernel ABI
+/// (`struct epoll_event`), which is packed on x86_64 only.
+#[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+#[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+#[derive(Clone, Copy, Default)]
+pub struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+impl EpollEvent {
+    /// The token registered with [`Epoll::add`] for the ready fd.
+    /// (Copies the field out — the struct may be packed.)
+    pub fn token(&self) -> u64 {
+        self.data
+    }
+
+    /// Raw readiness flags (EPOLLIN/EPOLLHUP/...).
+    pub fn flags(&self) -> u32 {
+        self.events
+    }
+}
+
+pub const EPOLLIN: u32 = 0x001;
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod imp {
+    use super::EpollEvent;
+    use std::io;
+
+    #[cfg(target_arch = "x86_64")]
+    mod nr {
+        pub const READ: usize = 0;
+        pub const WRITE: usize = 1;
+        pub const CLOSE: usize = 3;
+        pub const CLOCK_GETTIME: usize = 228;
+        pub const EPOLL_CTL: usize = 233;
+        pub const EPOLL_PWAIT: usize = 281;
+        pub const EVENTFD2: usize = 290;
+        pub const EPOLL_CREATE1: usize = 291;
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    mod nr {
+        pub const READ: usize = 63;
+        pub const WRITE: usize = 64;
+        pub const CLOSE: usize = 57;
+        pub const CLOCK_GETTIME: usize = 113;
+        pub const EPOLL_CTL: usize = 21;
+        pub const EPOLL_PWAIT: usize = 22;
+        pub const EVENTFD2: usize = 19;
+        pub const EPOLL_CREATE1: usize = 20;
+    }
+
+    /// Raw 6-argument syscall; returns the kernel's raw result
+    /// (negative = -errno).
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn syscall6(
+        n: usize,
+        a1: usize,
+        a2: usize,
+        a3: usize,
+        a4: usize,
+        a5: usize,
+        a6: usize,
+    ) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") n as isize => ret,
+            in("rdi") a1,
+            in("rsi") a2,
+            in("rdx") a3,
+            in("r10") a4,
+            in("r8") a5,
+            in("r9") a6,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn syscall6(
+        n: usize,
+        a1: usize,
+        a2: usize,
+        a3: usize,
+        a4: usize,
+        a5: usize,
+        a6: usize,
+    ) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "svc 0",
+            inlateout("x0") a1 as isize => ret,
+            in("x1") a2,
+            in("x2") a3,
+            in("x3") a4,
+            in("x4") a5,
+            in("x5") a6,
+            in("x8") n,
+            options(nostack),
+        );
+        ret
+    }
+
+    fn check(ret: isize) -> io::Result<usize> {
+        if ret < 0 {
+            Err(io::Error::from_raw_os_error(-ret as i32))
+        } else {
+            Ok(ret as usize)
+        }
+    }
+
+    pub fn epoll_create1() -> io::Result<i32> {
+        const EPOLL_CLOEXEC: usize = 0o2000000;
+        check(unsafe { syscall6(nr::EPOLL_CREATE1, EPOLL_CLOEXEC, 0, 0, 0, 0, 0) })
+            .map(|fd| fd as i32)
+    }
+
+    pub fn epoll_ctl(epfd: i32, op: usize, fd: i32, event: Option<&EpollEvent>) -> io::Result<()> {
+        let ptr = event.map_or(0usize, |e| e as *const EpollEvent as usize);
+        check(unsafe { syscall6(nr::EPOLL_CTL, epfd as usize, op, fd as usize, ptr, 0, 0) })
+            .map(|_| ())
+    }
+
+    pub fn epoll_wait(epfd: i32, out: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+        check(unsafe {
+            syscall6(
+                nr::EPOLL_PWAIT,
+                epfd as usize,
+                out.as_mut_ptr() as usize,
+                out.len(),
+                timeout_ms as usize,
+                0, // sigmask = NULL: don't alter the signal mask
+                0,
+            )
+        })
+    }
+
+    pub fn eventfd() -> io::Result<i32> {
+        const EFD_CLOEXEC: usize = 0o2000000;
+        const EFD_NONBLOCK: usize = 0o4000;
+        check(unsafe { syscall6(nr::EVENTFD2, 0, EFD_CLOEXEC | EFD_NONBLOCK, 0, 0, 0, 0) })
+            .map(|fd| fd as i32)
+    }
+
+    pub fn read(fd: i32, buf: &mut [u8]) -> io::Result<usize> {
+        check(unsafe {
+            syscall6(nr::READ, fd as usize, buf.as_mut_ptr() as usize, buf.len(), 0, 0, 0)
+        })
+    }
+
+    pub fn write(fd: i32, buf: &[u8]) -> io::Result<usize> {
+        check(unsafe {
+            syscall6(nr::WRITE, fd as usize, buf.as_ptr() as usize, buf.len(), 0, 0, 0)
+        })
+    }
+
+    pub fn close(fd: i32) {
+        let _ = unsafe { syscall6(nr::CLOSE, fd as usize, 0, 0, 0, 0, 0) };
+    }
+
+    /// CLOCK_PROCESS_CPUTIME_ID in nanoseconds (the idle-fleet CPU bench).
+    pub fn process_cpu_ns() -> Option<u64> {
+        const CLOCK_PROCESS_CPUTIME_ID: usize = 2;
+        #[repr(C)]
+        struct Timespec {
+            sec: i64,
+            nsec: i64,
+        }
+        let mut ts = Timespec { sec: 0, nsec: 0 };
+        let ret = unsafe {
+            syscall6(
+                nr::CLOCK_GETTIME,
+                CLOCK_PROCESS_CPUTIME_ID,
+                &mut ts as *mut Timespec as usize,
+                0,
+                0,
+                0,
+                0,
+            )
+        };
+        if ret < 0 {
+            return None;
+        }
+        Some(ts.sec as u64 * 1_000_000_000 + ts.nsec as u64)
+    }
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+mod imp {
+    //! Stub bindings: constructors fail, `PollMode::Auto` resolves to the
+    //! portable peek sweep, and nothing here is ever invoked at runtime.
+    use super::EpollEvent;
+    use std::io;
+
+    fn unsupported<T>() -> io::Result<T> {
+        Err(io::Error::new(io::ErrorKind::Unsupported, "no syscall bindings on this target"))
+    }
+
+    pub fn epoll_create1() -> io::Result<i32> {
+        unsupported()
+    }
+
+    pub fn epoll_ctl(
+        _epfd: i32,
+        _op: usize,
+        _fd: i32,
+        _event: Option<&EpollEvent>,
+    ) -> io::Result<()> {
+        unsupported()
+    }
+
+    pub fn epoll_wait(_epfd: i32, _out: &mut [EpollEvent], _timeout_ms: i32) -> io::Result<usize> {
+        unsupported()
+    }
+
+    pub fn eventfd() -> io::Result<i32> {
+        unsupported()
+    }
+
+    pub fn read(_fd: i32, _buf: &mut [u8]) -> io::Result<usize> {
+        unsupported()
+    }
+
+    pub fn write(_fd: i32, _buf: &[u8]) -> io::Result<usize> {
+        unsupported()
+    }
+
+    pub fn close(_fd: i32) {}
+
+    pub fn process_cpu_ns() -> Option<u64> {
+        None
+    }
+}
+
+const EPOLL_CTL_ADD: usize = 1;
+const EPOLL_CTL_DEL: usize = 2;
+
+/// Kernel readiness-notification set: register fds with tokens, sleep
+/// until one is ready. Wakeups are O(ready), idle waits cost zero CPU —
+/// the property the parked-connection poll loop needs at fleet scale.
+pub struct Epoll {
+    fd: i32,
+}
+
+impl Epoll {
+    /// New epoll instance (fails on unsupported targets — callers fall
+    /// back to the peek sweep).
+    pub fn new() -> io::Result<Epoll> {
+        imp::epoll_create1().map(|fd| Epoll { fd })
+    }
+
+    /// Watch `fd` for input readiness / peer hangup, tagged with `token`
+    /// (level-triggered: already-buffered bytes report on the next wait).
+    pub fn add(&self, fd: i32, token: u64) -> io::Result<()> {
+        let ev = EpollEvent { events: EPOLLIN | EPOLLRDHUP, data: token };
+        imp::epoll_ctl(self.fd, EPOLL_CTL_ADD, fd, Some(&ev))
+    }
+
+    /// Stop watching `fd`.
+    pub fn delete(&self, fd: i32) -> io::Result<()> {
+        imp::epoll_ctl(self.fd, EPOLL_CTL_DEL, fd, None)
+    }
+
+    /// Block up to `timeout_ms` (-1 = forever) for readiness; fills `out`
+    /// and returns how many records are valid.
+    pub fn wait(&self, out: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+        imp::epoll_wait(self.fd, out, timeout_ms)
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        imp::close(self.fd);
+    }
+}
+
+/// Cross-thread waker for an [`Epoll`] sleeper (nonblocking eventfd):
+/// `signal` from any thread makes the fd readable, `drain` resets it.
+pub struct EventFd {
+    fd: i32,
+}
+
+impl EventFd {
+    /// New waker (fails on unsupported targets).
+    pub fn new() -> io::Result<EventFd> {
+        imp::eventfd().map(|fd| EventFd { fd })
+    }
+
+    /// Raw fd for epoll registration.
+    pub fn raw_fd(&self) -> i32 {
+        self.fd
+    }
+
+    /// Make the fd readable (wake the sleeper). Infallible by design: a
+    /// full counter still leaves the fd readable.
+    pub fn signal(&self) {
+        let one = 1u64.to_ne_bytes();
+        let _ = imp::write(self.fd, &one);
+    }
+
+    /// Consume pending signals so the next wait sleeps again.
+    pub fn drain(&self) {
+        let mut buf = [0u8; 8];
+        let _ = imp::read(self.fd, &mut buf);
+    }
+}
+
+impl Drop for EventFd {
+    fn drop(&mut self) {
+        imp::close(self.fd);
+    }
+}
+
+/// CPU time this process has consumed, in nanoseconds (`None` where the
+/// binding is unavailable). The idle-fleet bench compares this across
+/// poll modes: a parked fleet under epoll must burn ~no CPU.
+pub fn process_cpu_ns() -> Option<u64> {
+    imp::process_cpu_ns()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoll_reports_readable_pipe_like_socket() {
+        if !supported() {
+            return;
+        }
+        use std::io::Write;
+        use std::os::unix::io::AsRawFd;
+        // A connected TCP pair is the closest std-only fd pair.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut tx = std::net::TcpStream::connect(addr).unwrap();
+        let (rx, _) = listener.accept().unwrap();
+
+        let ep = Epoll::new().unwrap();
+        ep.add(rx.as_raw_fd(), 42).unwrap();
+        let mut events = [EpollEvent::default(); 8];
+        // Nothing pending: times out with zero events.
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+        tx.write_all(b"x").unwrap();
+        let n = ep.wait(&mut events, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(events[0].token(), 42);
+        assert!(events[0].flags() & EPOLLIN != 0);
+        ep.delete(rx.as_raw_fd()).unwrap();
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn eventfd_wakes_epoll_and_drains() {
+        if !supported() {
+            return;
+        }
+        let ep = Epoll::new().unwrap();
+        let wake = EventFd::new().unwrap();
+        ep.add(wake.raw_fd(), 7).unwrap();
+        let mut events = [EpollEvent::default(); 4];
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+        wake.signal();
+        assert_eq!(ep.wait(&mut events, 1000).unwrap(), 1);
+        assert_eq!(events[0].token(), 7);
+        wake.drain();
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+        // Wake from another thread unblocks a sleeping wait.
+        let ep = std::sync::Arc::new(ep);
+        let wake = std::sync::Arc::new(wake);
+        let w2 = wake.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            w2.signal();
+        });
+        let n = ep.wait(&mut events, 5_000).unwrap();
+        assert_eq!(n, 1);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn process_cpu_clock_advances() {
+        if !supported() {
+            return;
+        }
+        let a = process_cpu_ns().unwrap();
+        // Burn a little CPU.
+        let mut x = 0u64;
+        for i in 0..2_000_000u64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(i);
+        }
+        std::hint::black_box(x);
+        let b = process_cpu_ns().unwrap();
+        assert!(b >= a);
+        assert!(b > 0);
+    }
+}

@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""Gate CI on sync-pipeline bench regressions.
+
+Usage: check_bench_regression.py <baseline.json> <current.json> [tolerance]
+
+Compares the current `bench_sync_pipeline` smoke run against the committed
+baseline and fails (exit 1) on a >tolerance (default 30%) regression in
+gather/scatter throughput or push->visible latency.
+
+Machine-speed normalization: absolute rows/s on a CI runner is not
+comparable to the machine that recorded the baseline, so every comparison
+is normalized by the sequential case (stripes=1, threads=0) of the same
+stage: regression is judged on the *shape* of the scaling curve, which
+cancels the host factor. Within one stage:
+
+    factor = current_seq / baseline_seq
+    fail if current[case] < (1 - tol) * factor * baseline[case]   (throughput)
+    fail if current[case] > (1 + tol) * factor * baseline[case]   (latency)
+
+Intra-run invariants are checked regardless of the baseline:
+  - determinism record present with identical=true
+  - scatter_coalesce: locks_per_row < locks_per_row_batchwise
+
+A baseline containing a record {"stage": "meta", "provisional": true}
+skips the cross-file comparison (used to seed the gate before the first
+CI-measured artifact is promoted to baseline) while still enforcing the
+intra-run invariants.
+"""
+
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def by_case(records, stage):
+    out = {}
+    for r in records:
+        if r.get("stage") == stage:
+            out[(r.get("stripes"), r.get("threads"))] = r
+    return out
+
+
+THROUGHPUT_STAGES = ["gather_snapshot", "gather_absorb", "scatter_apply", "scatter_coalesce"]
+LATENCY_STAGES = ["push_to_visible"]
+SEQ = (1, 0)
+
+
+def check_intra_run(current):
+    failures = []
+    det = [r for r in current if r.get("stage") == "determinism"]
+    if not det or not det[0].get("identical"):
+        failures.append("determinism record missing or not identical")
+    for r in current:
+        if r.get("stage") != "scatter_coalesce":
+            continue
+        if not r["locks_per_row"] < r["locks_per_row_batchwise"]:
+            failures.append(
+                f"scatter_coalesce stripes={r['stripes']} threads={r['threads']}: "
+                f"locks/row {r['locks_per_row']} !< batchwise {r['locks_per_row_batchwise']}"
+            )
+    return failures
+
+
+def check_against_baseline(baseline, current, tol):
+    failures = []
+    for stage in THROUGHPUT_STAGES + LATENCY_STAGES:
+        base = by_case(baseline, stage)
+        cur = by_case(current, stage)
+        if not base:
+            continue
+        key = "rows_per_sec" if stage in THROUGHPUT_STAGES else "ms_per_round"
+        if SEQ not in base or SEQ not in cur:
+            failures.append(f"{stage}: sequential reference case missing")
+            continue
+        factor = cur[SEQ][key] / base[SEQ][key]
+        for case, b in base.items():
+            if case == SEQ or case not in cur:
+                continue
+            expected = factor * b[key]
+            got = cur[case][key]
+            if stage in THROUGHPUT_STAGES:
+                if got < (1.0 - tol) * expected:
+                    failures.append(
+                        f"{stage} stripes={case[0]} threads={case[1]}: "
+                        f"{key} {got:.0f} < {(1.0 - tol) * expected:.0f} "
+                        f"(baseline {b[key]:.0f} x host factor {factor:.2f})"
+                    )
+            else:
+                if got > (1.0 + tol) * expected:
+                    failures.append(
+                        f"{stage} stripes={case[0]} threads={case[1]}: "
+                        f"{key} {got:.3f} > {(1.0 + tol) * expected:.3f} "
+                        f"(baseline {b[key]:.3f} x host factor {factor:.2f})"
+                    )
+    return failures
+
+
+def main():
+    if len(sys.argv) < 3:
+        print(__doc__)
+        return 2
+    baseline = load(sys.argv[1])
+    current = load(sys.argv[2])
+    tol = float(sys.argv[3]) if len(sys.argv) > 3 else 0.30
+
+    failures = check_intra_run(current)
+    provisional = any(r.get("stage") == "meta" and r.get("provisional") for r in baseline)
+    if provisional:
+        print("baseline is provisional: skipping cross-run comparison "
+              "(promote a CI artifact to ci/BENCH_sync_pipeline.baseline.json to arm it)")
+    else:
+        failures += check_against_baseline(baseline, current, tol)
+
+    if failures:
+        print(f"bench regression check FAILED ({len(failures)} issue(s)):")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("bench regression check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
