@@ -192,9 +192,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         ..Default::default()
     })?;
     for (i, m) in frozen.masters.iter().enumerate() {
-        let snap =
-            cluster.store.load_shard(&cluster.cfg.model_name, frozen_version.unwrap(), i as u32)?;
-        m.restore(&snap, None)?;
+        // Chain-aware restore: the frozen version may be an incremental
+        // delta tip (base + delta chunks), not a monolithic snapshot.
+        m.restore_chain(&cluster.store, frozen_version.unwrap(), i)?;
         for shard in &frozen.slaves {
             for replica in shard {
                 replica.full_sync_from_snapshot(&m.snapshot())?;

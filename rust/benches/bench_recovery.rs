@@ -1,15 +1,228 @@
-//! E4 — multi-level fault tolerance (§4.2): unavailability windows for
-//! hot-replica failover vs partial (single-shard) recovery vs full-cluster
-//! cold restart, plus requests failed during each.
+//! E4 — multi-level fault tolerance (§4.2) + incremental durability.
+//!
+//! The incremental section (artifact-free, runs everywhere) measures
+//! what the Monolith-style chain buys: checkpoint pause and recovery
+//! time that scale with the **dirty set**, not total table size. It
+//! asserts the shape (a 1%-dirty delta seals far faster than a full
+//! base) and that crash recovery — base + delta chain + WAL tail —
+//! round-trips **byte-identical** shard state, then writes
+//! `BENCH_recovery.json` (CI uploads it per commit and gates the smoke
+//! invariants).
+//!
+//! The legacy cluster drill (hot failover vs partial vs full-cluster
+//! recovery) still runs when AOT artifacts are present and `--smoke` is
+//! not set.
+//!
+//! `--smoke` or `WEIPS_BENCH_SMOKE=1` shrinks sizes and skips the
+//! cluster drill.
 
+use std::sync::Arc;
 use std::time::Instant;
 
-use weips::config::{ClusterConfig, GatherMode, ModelKind};
-use weips::coordinator::{ClusterOpts, LocalCluster};
+use weips::config::{ModelKind, ModelSpec};
+use weips::meta::MetaStore;
+use weips::proto::SparsePush;
+use weips::queue::WalLog;
+use weips::runtime::ModelConfig;
+use weips::scheduler::{CkptPolicy, Scheduler};
+use weips::server::master::MasterShard;
+use weips::storage::incremental::{self, IncrPolicy, WalJournal};
+use weips::storage::{CheckpointStore, CkptKind};
 use weips::util::bench;
+use weips::util::clock::ManualClock;
 
-fn cluster() -> LocalCluster {
-    LocalCluster::new(ClusterOpts {
+fn smoke() -> bool {
+    std::env::var("WEIPS_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false)
+        || std::env::args().any(|a| a == "--smoke")
+}
+
+fn artifacts_ready() -> bool {
+    weips::runtime::default_artifacts_dir().join("manifest.json").exists()
+}
+
+fn mini_spec() -> ModelSpec {
+    let cfg = ModelConfig {
+        batch_train: 8,
+        batch_predict: 2,
+        fields: 4,
+        dim: 8,
+        hidden: 8,
+        ftrl_block_rows: 64,
+        ftrl_alpha: 0.05,
+        ftrl_beta: 1.0,
+        ftrl_l1: 1.0,
+        ftrl_l2: 1.0,
+    };
+    ModelSpec::derive("ctr", ModelKind::Fm, &cfg)
+}
+
+fn push_range(m: &MasterShard, ids: std::ops::Range<u64>) {
+    let all: Vec<u64> = ids.collect();
+    for chunk in all.chunks(4096) {
+        let grads: Vec<f32> = chunk.iter().map(|id| (*id % 13) as f32 * 0.1 + 0.2).collect();
+        m.sparse_push(&SparsePush {
+            model: "ctr".into(),
+            table: "w".into(),
+            ids: chunk.to_vec(),
+            grads,
+        })
+        .unwrap();
+    }
+}
+
+fn tmp_dir() -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "weips-bench-recovery-{}-{:x}",
+        std::process::id(),
+        weips::util::mono_ns()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Incremental checkpoint pause + recovery scaling vs the dirty set.
+fn incremental_scaling(rows: u64, results: &mut Vec<String>) {
+    bench::header("E4i: incremental checkpoint pause vs dirty set");
+    let dir = tmp_dir();
+    let store = Arc::new(CheckpointStore::new(dir.join("ckpt"), None));
+    let clock = ManualClock::new(0);
+    let master =
+        Arc::new(MasterShard::new(0, mini_spec(), None, 1, Arc::new(clock.clone())).unwrap());
+    let mut scheduler = Scheduler::new(
+        MetaStore::new(Arc::new(clock.clone())),
+        store.clone(),
+        "ctr",
+        CkptPolicy { interval_ms: u64::MAX / 4, jitter: 0.0, keep_local: 64, remote_every: 0 },
+        Arc::new(clock.clone()),
+    );
+    scheduler.set_incr_policy(IncrPolicy { base_every: 64, keep_chains: 8 });
+    let wal = WalLog::open(dir.join("wal"), 1).unwrap();
+    let mut journal = WalJournal::new(0);
+    let masters = [master.clone()];
+
+    push_range(&master, 0..rows);
+    journal.poll(&master, &wal, 1).unwrap();
+
+    // Base: full snapshot of every row. The snapshot *encode* is the
+    // pause the training path feels; the seal adds manifest + fs work.
+    let t0 = Instant::now();
+    let snap_len = master.snapshot().len();
+    let base_encode_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t0 = Instant::now();
+    let (base_version, kind, cuts) = scheduler
+        .checkpoint_incremental(&masters, vec![], wal.latest_offsets(), 0.5)
+        .unwrap();
+    let base_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(kind, CkptKind::Base);
+    let mut prev_cut = cuts[0];
+    journal.reset(cuts[0], master.dense_versions());
+    bench::metric(
+        "base checkpoint (all rows)",
+        format!("encode {base_encode_ms:.2} ms, seal {base_ms:.2} ms, {rows} rows, {snap_len} B"),
+    );
+    results.push(format!(
+        r#"{{"bench":"recovery","stage":"ckpt_pause","kind":"base","rows":{rows},"dirty_rows":{rows},"encode_ms":{base_encode_ms:.3},"seal_ms":{base_ms:.3}}}"#
+    ));
+
+    // Deltas at increasing dirty fractions. Assertions compare *encode*
+    // times (pure collection cost, no fs noise); seal times are reported.
+    let mut delta_encode_ms = Vec::new();
+    let mut last_version = base_version;
+    for fraction in [0.01f64, 0.1, 1.0] {
+        let dirty = ((rows as f64) * fraction).max(1.0) as u64;
+        push_range(&master, 0..dirty);
+        journal.poll(&master, &wal, 2).unwrap();
+        let t0 = Instant::now();
+        let probe = master.encode_delta(prev_cut);
+        let encode_ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert_eq!(probe.upserts as u64, dirty, "delta collected the wrong dirty set");
+        let t0 = Instant::now();
+        let (v, kind, cuts) = scheduler
+            .checkpoint_incremental(&masters, vec![], wal.latest_offsets(), 0.5)
+            .unwrap();
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert_eq!(kind, CkptKind::Delta);
+        prev_cut = cuts[0];
+        journal.reset(cuts[0], master.dense_versions());
+        last_version = v;
+        bench::metric(
+            &format!("delta checkpoint ({:.0}% dirty)", fraction * 100.0),
+            format!("encode {encode_ms:.2} ms, seal {ms:.2} ms, {dirty} rows"),
+        );
+        results.push(format!(
+            r#"{{"bench":"recovery","stage":"ckpt_pause","kind":"delta","rows":{rows},"dirty_rows":{dirty},"encode_ms":{encode_ms:.3},"seal_ms":{ms:.3}}}"#
+        ));
+        delta_encode_ms.push(encode_ms);
+    }
+    // The acceptance shape: pause scales with the dirty set, not table
+    // size — a 1%-dirty delta is far cheaper than the full base encode,
+    // and delta cost grows with the dirty fraction.
+    assert!(
+        delta_encode_ms[0] < base_encode_ms,
+        "1%-dirty delta encode ({:.3} ms) not cheaper than full base encode ({base_encode_ms:.3} ms)",
+        delta_encode_ms[0]
+    );
+    assert!(
+        delta_encode_ms[0] < delta_encode_ms[2],
+        "delta encode does not scale with dirty set: 1% {:.3} ms vs 100% {:.3} ms",
+        delta_encode_ms[0],
+        delta_encode_ms[2]
+    );
+
+    // -- recovery ---------------------------------------------------------------
+    bench::header("E4ii: recovery time (chain + WAL) and byte identity");
+    // WAL-only tail on top of the last sealed delta.
+    push_range(&master, 0..rows / 100);
+    journal.poll(&master, &wal, 3).unwrap();
+    let reference = master.snapshot();
+
+    let fresh =
+        Arc::new(MasterShard::new(0, mini_spec(), None, 1, Arc::new(clock.clone())).unwrap());
+    let t0 = Instant::now();
+    let tip = fresh.restore_chain(&store, last_version, 0).unwrap();
+    let chain_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t0 = Instant::now();
+    let from = tip.wal_offsets.first().copied().unwrap_or(0);
+    let replayed = incremental::replay_wal(&fresh, &wal, 0, from).unwrap();
+    let wal_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert!(replayed > 0);
+    assert_eq!(
+        fresh.snapshot(),
+        reference,
+        "crash recovery did not round-trip byte-identical state"
+    );
+    bench::metric("chain restore (base + 3 deltas)", format!("{chain_ms:.2} ms"));
+    bench::metric("WAL tail replay", format!("{wal_ms:.2} ms, {replayed} records"));
+    bench::metric("recovered state", "byte-identical to uninterrupted run");
+    results.push(format!(
+        r#"{{"bench":"recovery","stage":"recover","rows":{rows},"chain_ms":{chain_ms:.3},"wal_ms":{wal_ms:.3},"wal_records":{replayed},"byte_identical":true}}"#
+    ));
+
+    // Dirty-set-proportional recovery: replaying one delta on a warm
+    // shard touches only its dirty rows.
+    let dirty = ((rows as f64) * 0.01).max(1.0) as u64;
+    let chunk = store.load_chunk("ctr", base_version + 1, 0, CkptKind::Delta).unwrap();
+    let t0 = Instant::now();
+    fresh.apply_delta(&chunk, false).unwrap();
+    let delta_apply_ms = t0.elapsed().as_secs_f64() * 1e3;
+    bench::metric(
+        &format!("single delta re-apply ({dirty} rows)"),
+        format!("{delta_apply_ms:.2} ms"),
+    );
+    results.push(format!(
+        r#"{{"bench":"recovery","stage":"delta_apply","rows":{rows},"dirty_rows":{dirty},"ms":{delta_apply_ms:.3}}}"#
+    ));
+
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// The legacy cluster drill: hot failover, slave recovery, master
+/// partial recovery vs full cold restart (needs AOT artifacts).
+fn cluster_drill() {
+    use weips::config::{ClusterConfig, GatherMode};
+    use weips::coordinator::{ClusterOpts, LocalCluster};
+
+    let mut c = LocalCluster::new(ClusterOpts {
         cluster: ClusterConfig {
             model_kind: ModelKind::Lr,
             master_shards: 8,
@@ -26,11 +239,7 @@ fn cluster() -> LocalCluster {
         },
         ..Default::default()
     })
-    .expect("cluster (run `make artifacts` first)")
-}
-
-fn main() {
-    let mut c = cluster();
+    .expect("cluster (run `make artifacts` first)");
     for _ in 0..40 {
         c.train_step().unwrap();
         c.sync_tick().unwrap();
@@ -45,7 +254,7 @@ fn main() {
     let rows: usize = c.masters.iter().map(|m| m.total_rows()).sum();
     bench::metric("model rows at failure time", rows);
 
-    // -- hot failover -----------------------------------------------------------
+    // -- hot failover ---------------------------------------------------------
     bench::header("E4a: hot-replica failover (serving unavailability)");
     let reqs = c.serving_requests(4);
     bench::run("serving while healthy", 3, 100, || {
@@ -61,14 +270,14 @@ fn main() {
     });
     bench::metric("requests failed during failover", failed);
 
-    // -- slave recovery -----------------------------------------------------------
-    bench::header("E4b: slave replica recovery (full sync + replay)");
-    bench::run("recover_slave (checkpoint + offset replay)", 0, 5, || {
+    // -- slave recovery -------------------------------------------------------
+    bench::header("E4b: slave replica recovery (chain sync + replay)");
+    bench::run("recover_slave (chain + offset replay)", 0, 5, || {
         c.kill_slave(0, 0);
         c.recover_slave(0, 0).unwrap();
     });
 
-    // -- master partial recovery ----------------------------------------------------
+    // -- master partial recovery ----------------------------------------------
     bench::header("E4c: master shard partial recovery vs full restart");
     let t0 = Instant::now();
     c.crash_master(3).unwrap();
@@ -76,23 +285,19 @@ fn main() {
     let partial = t0.elapsed();
     bench::metric("partial recovery (1 of 8 shards)", format!("{partial:?}"));
 
-    // Full cold restart: every shard reloads from checkpoint.
+    // Full cold restart: every shard reloads, every replica re-syncs.
     let t0 = Instant::now();
     let version = c.store.latest_version("ctr").unwrap();
     for m in &c.masters {
-        m.load_checkpoint(&c.store, version).unwrap();
+        m.restore_chain(&c.store, version, m.shard_id as usize).unwrap();
     }
-    // ... and every replica full-syncs (the cold-path slave bootstrap).
-    let snaps: Vec<Vec<u8>> = c
-        .masters
-        .iter()
-        .map(|m| c.store.load_shard("ctr", version, m.shard_id).unwrap())
-        .collect();
+    let chains: Vec<_> =
+        c.masters.iter().map(|m| c.shard_chain(version, m.shard_id).unwrap()).collect();
     for shard in &c.slaves {
         for replica in shard {
             replica.clear();
-            for s in &snaps {
-                replica.full_sync_from_snapshot(s).unwrap();
+            for chain in &chains {
+                LocalCluster::apply_chain_chunks(replica, chain).unwrap();
             }
         }
     }
@@ -103,7 +308,7 @@ fn main() {
         format!("{:.2}x faster", full.as_secs_f64() / partial.as_secs_f64().max(1e-9)),
     );
 
-    // -- checkpoint save cost (the cold-backup write path) ---------------------------
+    // -- checkpoint save cost -------------------------------------------------
     bench::header("E4d: checkpoint save (async, all shards)");
     bench::run("checkpoint_now (8 shards)", 1, 10, || {
         c.checkpoint().unwrap();
@@ -111,4 +316,22 @@ fn main() {
     println!(
         "\nshape check: hot failover adds microseconds and fails zero requests;\npartial recovery is a fraction of a full restart and touches one shard only."
     );
+}
+
+fn main() {
+    let rows = if smoke() { 20_000u64 } else { 200_000u64 };
+    let mut results = Vec::new();
+    incremental_scaling(rows, &mut results);
+    let json = format!("[\n  {}\n]\n", results.join(",\n  "));
+    // Anchor to the workspace root (cargo runs benches with cwd = the
+    // package root, rust/), so CI finds the artifact at a fixed path.
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package has a parent dir")
+        .join("BENCH_recovery.json");
+    std::fs::write(&out, &json).expect("write BENCH_recovery.json");
+    println!("\nwrote {} ({} records)", out.display(), results.len());
+    if !smoke() && artifacts_ready() {
+        cluster_drill();
+    }
 }

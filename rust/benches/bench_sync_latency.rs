@@ -128,16 +128,15 @@ fn main() {
     bench::metric("model rows at export time", rows);
     bench::run("checkpoint-export-reload (baseline)", 1, 10, || {
         let v = c.checkpoint().unwrap();
-        let snaps: Vec<Vec<u8>> = c
-            .masters
-            .iter()
-            .map(|m| c.store.load_shard("ctr", v, m.shard_id).unwrap())
-            .collect();
+        // Chain-aware load (a version may be a base or a delta tip):
+        // chunks load once per master and are shared across replicas.
+        let chains: Vec<_> =
+            c.masters.iter().map(|m| c.shard_chain(v, m.shard_id).unwrap()).collect();
         for shard in &c.slaves {
             for replica in shard {
                 replica.clear();
-                for s in &snaps {
-                    replica.full_sync_from_snapshot(s).unwrap();
+                for chain in &chains {
+                    LocalCluster::apply_chain_chunks(replica, chain).unwrap();
                 }
             }
         }

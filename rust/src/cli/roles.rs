@@ -4,18 +4,21 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use super::Args;
-use crate::config::{ClusterConfig, GatherMode, ModelKind, ModelSpec, TomlDoc};
+use crate::config::{CkptMode, ClusterConfig, GatherMode, ModelKind, ModelSpec, TomlDoc};
 use crate::coordinator::{ClusterOpts, LocalCluster};
+use crate::meta::MetaStore;
 use crate::net::{Channel, RpcServer};
-use crate::queue::{Queue, QueueService, RemoteLog, SyncLog};
+use crate::queue::{Queue, QueueService, RemoteLog, SyncLog, WalLog};
 use crate::replica::{BalancePolicy, ReplicaGroup};
 use crate::runtime::Engine;
 use crate::sample::{Workload, WorkloadConfig};
+use crate::scheduler::{CkptPolicy, Scheduler};
 use crate::server::master::{MasterService, MasterShard};
 use crate::server::slave::{SlaveService, SlaveShard};
+use crate::storage::incremental::{self, IncrPolicy, WalJournal};
 use crate::storage::CheckpointStore;
 use crate::sync::{Gather, Pusher, Router, Scatter, ServingWeights};
-use crate::util::clock::SystemClock;
+use crate::util::clock::{Clock, SystemClock};
 use crate::worker::{Predictor, ShardedClient, SlaveClient, SlaveEndpoint, Trainer};
 use crate::{Error, Result};
 
@@ -37,6 +40,10 @@ fn cluster_config(args: &Args) -> Result<ClusterConfig> {
         cfg.gather_mode = GatherMode::parse(g)?;
     }
     cfg.ckpt_interval_ms = args.get_u64("ckpt-interval-ms", cfg.ckpt_interval_ms)?;
+    if let Some(mode) = args.get("ckpt-mode") {
+        cfg.ckpt_mode = CkptMode::parse(mode)?;
+    }
+    cfg.ckpt_base_every = args.get_u64("ckpt-base-every", cfg.ckpt_base_every)?.max(1);
     cfg.sync_threads = args.get_u64("sync-threads", cfg.sync_threads as u64)? as u32;
     cfg.rpc_threads = args.get_u64("rpc-threads", cfg.rpc_threads as u64)?.max(1) as u32;
     Ok(cfg)
@@ -120,7 +127,12 @@ pub fn run_broker(args: &Args) -> Result<()> {
     block_forever()
 }
 
-/// `weips master`: one master shard + its sync pipeline.
+/// `weips master`: one master shard + its sync pipeline. In incremental
+/// checkpoint mode (the default) the shard warm-starts from its local
+/// chain + WAL tail, journals every gather window to the WAL and seals
+/// base/delta chunks on the jittered checkpoint timer — master-side
+/// fault tolerance that needs neither the broker nor a scheduler
+/// process. `--warm-start 0` forces a cold boot.
 pub fn run_master(args: &Args) -> Result<()> {
     let shard = args.get_u64("shard", 0)? as u32;
     let addr = args.get_or("addr", "127.0.0.1:7200");
@@ -138,7 +150,37 @@ pub fn run_master(args: &Args) -> Result<()> {
         clock.clone(),
     )?);
     let data_dir: std::path::PathBuf = args.get_or("data-dir", "/tmp/weips-data").into();
-    let store = Arc::new(CheckpointStore::new(data_dir, None));
+    let store = Arc::new(CheckpointStore::new(data_dir.clone(), None));
+    let incremental_mode = cfg.ckpt_mode == CkptMode::Incremental;
+    if !incremental_mode {
+        // No delta consumer: skip tombstone tracking (expired rows free
+        // all their memory).
+        master.set_incremental_tracking(false);
+    }
+
+    // Shard-private durability state: the chain chunks and the WAL live
+    // beside the shared store, so concurrent shard processes sharing a
+    // data dir never collide on manifests.
+    let own_dir = data_dir.join(format!("master-{shard}"));
+    let own_store = Arc::new(CheckpointStore::new(own_dir.join("chain"), None));
+    let wal = Arc::new(WalLog::open(own_dir.join("wal"), 1)?);
+    if incremental_mode && args.get_or("warm-start", "1") != "0" {
+        // A crash before the first seal leaves WAL records but no chain:
+        // replay from offset 0 in that case instead of booting empty.
+        let (chain, from) = match own_store.latest_version(&cfg.model_name) {
+            Some(version) => {
+                let tip = master.restore_chain(&own_store, version, 0)?;
+                (format!("v{version} chain"), tip.wal_offsets.first().copied().unwrap_or(0))
+            }
+            None => ("no chain".to_string(), 0),
+        };
+        let replayed = incremental::replay_wal(&master, &wal, 0, from)?;
+        println!(
+            "warm start: {chain} + {replayed} WAL records -> {} rows",
+            master.total_rows()
+        );
+    }
+
     let server = RpcServer::serve_with(
         &addr,
         Arc::new(MasterService { shard: master.clone(), store: Some(store) }),
@@ -146,18 +188,52 @@ pub fn run_master(args: &Args) -> Result<()> {
     )?;
     println!("master shard {shard} on {} (broker {broker})", server.addr());
 
+    let mut scheduler = Scheduler::new(
+        MetaStore::new(clock.clone()),
+        own_store,
+        &cfg.model_name,
+        CkptPolicy {
+            interval_ms: cfg.ckpt_interval_ms,
+            jitter: 0.3,
+            keep_local: cfg.ckpt_keep,
+            remote_every: 0,
+        },
+        clock.clone(),
+    );
+    scheduler.set_incr_policy(IncrPolicy {
+        base_every: cfg.ckpt_base_every.max(1),
+        keep_chains: cfg.ckpt_keep.max(1),
+    });
+    let mut journal = WalJournal::new(0);
+    journal.reset(master.cut_epoch(), master.dense_versions());
+
     // Sync pump: gather -> pusher against the remote broker; snapshots
-    // fan out over the shared sync pool.
+    // fan out over the shared sync pool. Every window is journaled to
+    // the WAL; the jittered timer seals base/delta chunks.
     let log: Arc<dyn SyncLog> =
         Arc::new(RemoteLog::connect(Channel::remote(&broker, RPC_TIMEOUT))?);
-    let mut gather = Gather::with_pool(master, cfg.gather_mode, clock, cfg.sync_pool());
+    let mut gather =
+        Gather::with_pool(master.clone(), cfg.gather_mode, clock.clone(), cfg.sync_pool());
     let pusher = Pusher::new(log, shard);
+    let masters = [master.clone()];
     loop {
         let batches = gather.poll();
         if batches.is_empty() {
             std::thread::sleep(Duration::from_millis(5));
         } else {
             pusher.push_all(&batches)?;
+        }
+        if !incremental_mode {
+            continue;
+        }
+        journal.poll(&master, &wal, clock.now_ms())?;
+        if scheduler.checkpoint_due() {
+            let wal_offsets = wal.latest_offsets();
+            let (v, kind, cuts) =
+                scheduler.checkpoint_incremental(&masters, vec![], wal_offsets.clone(), 0.0)?;
+            journal.reset(cuts[0], master.dense_versions());
+            wal.trim_until(0, wal_offsets[0])?;
+            println!("sealed {} checkpoint v{v}", kind.as_str());
         }
     }
 }

@@ -190,6 +190,26 @@ impl GatherMode {
     }
 }
 
+/// Checkpoint strategy: monolithic full-shard snapshots every time, or
+/// incremental chains (periodic bases + dirty-epoch delta chunks + WAL
+/// journaling — see `storage::incremental`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CkptMode {
+    Full,
+    Incremental,
+}
+
+impl CkptMode {
+    /// Parse "full" | "incremental".
+    pub fn parse(s: &str) -> Result<CkptMode> {
+        match s {
+            "full" => Ok(CkptMode::Full),
+            "incremental" => Ok(CkptMode::Incremental),
+            other => Err(Error::Config(format!("unknown ckpt mode {other}"))),
+        }
+    }
+}
+
 /// Env-overridable thread-count default (`sync_threads`; `rpc_threads`
 /// defers to [`crate::net::default_rpc_threads`], its single source of
 /// truth).
@@ -240,7 +260,14 @@ pub struct ClusterConfig {
     pub feature_ttl_ms: u64,
     /// Checkpoint every ~this many ms (randomly jittered, §4.2.1a).
     pub ckpt_interval_ms: u64,
-    /// Local checkpoint versions to keep.
+    /// Checkpoint strategy: incremental chains (default) or full
+    /// snapshots every time.
+    pub ckpt_mode: CkptMode,
+    /// Incremental mode: chunks per chain — every `ckpt_base_every`-th
+    /// checkpoint reseeds a full base (1 = every checkpoint is a base).
+    pub ckpt_base_every: u64,
+    /// Local checkpoint versions (full mode) or complete chains
+    /// (incremental mode) to keep.
     pub ckpt_keep: usize,
     /// Replicate every k-th checkpoint to the remote tier.
     pub remote_every: u64,
@@ -268,6 +295,8 @@ impl Default for ClusterConfig {
             rpc_poll_mode: crate::net::default_poll_mode(),
             feature_ttl_ms: 0,
             ckpt_interval_ms: 10_000,
+            ckpt_mode: CkptMode::Incremental,
+            ckpt_base_every: 4,
             ckpt_keep: 5,
             remote_every: 4,
             session_ttl_ms: 3_000,
@@ -355,6 +384,12 @@ impl ClusterConfig {
         }
         if let Some(v) = doc.get_int("cluster", "ckpt_interval_ms") {
             c.ckpt_interval_ms = v as u64;
+        }
+        if let Some(v) = doc.get_str("cluster", "ckpt_mode") {
+            c.ckpt_mode = CkptMode::parse(v)?;
+        }
+        if let Some(v) = doc.get_int("cluster", "ckpt_base_every") {
+            c.ckpt_base_every = v.max(1) as u64;
         }
         if let Some(v) = doc.get_int("cluster", "ckpt_keep") {
             c.ckpt_keep = v as usize;
@@ -459,11 +494,17 @@ mod tests {
             rpc_poll_min_ms = 2
             rpc_poll_max_ms = 40
             rpc_poll_mode = "peek"
+            ckpt_mode = "full"
+            ckpt_base_every = 8
             "#,
         )
         .unwrap();
         let c = ClusterConfig::from_toml(&doc).unwrap();
         assert_eq!(c.model_kind, ModelKind::DeepFm);
+        assert_eq!(c.ckpt_mode, CkptMode::Full);
+        assert_eq!(c.ckpt_base_every, 8);
+        assert!(CkptMode::parse("woven").is_err());
+        assert_eq!(ClusterConfig::default().ckpt_mode, CkptMode::Incremental);
         assert_eq!(c.master_shards, 8);
         assert_eq!(c.gather_mode, GatherMode::Period(100));
         assert_eq!(c.table_stripes, 16);

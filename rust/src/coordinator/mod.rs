@@ -17,20 +17,21 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::config::{ClusterConfig, ModelSpec};
+use crate::config::{CkptMode, ClusterConfig, ModelSpec};
 use crate::downgrade::{Domino, DowngradePlan, SwitchStrategy, VersionManager};
 use crate::meta::MetaStore;
 use crate::monitor::{Monitor, SmoothedThreshold};
 use crate::net::Channel;
 use crate::optim::Optimizer;
-use crate::queue::{Queue, Topic};
+use crate::queue::{Queue, Topic, WalLog};
 use crate::replica::{BalancePolicy, ReplicaGroup};
 use crate::runtime::Engine;
 use crate::sample::{Workload, WorkloadConfig};
 use crate::scheduler::{CkptPolicy, Scheduler};
 use crate::server::master::{MasterService, MasterShard};
 use crate::server::slave::{SlaveService, SlaveShard};
-use crate::storage::CheckpointStore;
+use crate::storage::incremental::{self, IncrPolicy, WalJournal};
+use crate::storage::{CheckpointStore, CkptKind};
 use crate::sync::{Gather, Pusher, Router, Scatter, ServingWeights};
 use crate::util::clock::{Clock, SystemClock};
 use crate::util::ThreadPool;
@@ -73,6 +74,11 @@ pub struct LocalCluster {
     pub topic: Arc<Topic>,
     pub meta: MetaStore,
     pub store: Arc<CheckpointStore>,
+    /// Per-shard write-ahead log: every sync tick journals each master's
+    /// dirty window as a micro-delta chunk, bounding the data loss
+    /// between sealed checkpoint deltas to one tick.
+    pub wal: Arc<WalLog>,
+    journals: Vec<Mutex<WalJournal>>,
     pub scheduler: Scheduler,
     pub masters: Vec<Arc<MasterShard>>,
     gathers: Vec<Mutex<Gather>>,
@@ -121,6 +127,9 @@ impl LocalCluster {
             data_dir.join("ckpt-local"),
             Some(data_dir.join("ckpt-remote")),
         ));
+        let wal = Arc::new(WalLog::open(data_dir.join("wal"), cfg.master_shards as usize)?);
+        let journals: Vec<Mutex<WalJournal>> =
+            (0..cfg.master_shards).map(|i| Mutex::new(WalJournal::new(i))).collect();
         let meta = MetaStore::new(clock.clone());
         let queue = Arc::new(Queue::default());
         let topic = queue.create_topic(
@@ -145,6 +154,11 @@ impl LocalCluster {
                 cfg.table_stripes as usize,
                 clock.clone(),
             )?);
+            // Full mode has no delta consumer: skip tombstone tracking so
+            // expired rows free all their memory.
+            if cfg.ckpt_mode == CkptMode::Full {
+                m.set_incremental_tracking(false);
+            }
             gathers.push(Mutex::new(Gather::with_pool(
                 m.clone(),
                 cfg.gather_mode,
@@ -226,7 +240,7 @@ impl LocalCluster {
         );
 
         // -- control plane --------------------------------------------------------
-        let scheduler = Scheduler::new(
+        let mut scheduler = Scheduler::new(
             meta.clone(),
             store.clone(),
             &cfg.model_name,
@@ -238,6 +252,10 @@ impl LocalCluster {
             },
             clock.clone(),
         );
+        scheduler.set_incr_policy(IncrPolicy {
+            base_every: cfg.ckpt_base_every.max(1),
+            keep_chains: cfg.ckpt_keep.max(1),
+        });
         let vm = VersionManager::new(&cfg.model_name, 0);
         // Cooldown must outlast the monitor window (in control ticks ≈
         // batches) or post-rollback contamination re-fires the domino and
@@ -260,6 +278,8 @@ impl LocalCluster {
             topic,
             meta,
             store,
+            wal,
+            journals,
             scheduler,
             masters,
             gathers,
@@ -298,8 +318,9 @@ impl LocalCluster {
         Ok(self.trainer.train_batch(&samples)?.loss)
     }
 
-    /// Drive the sync pipeline once: gather + push on every master, then
-    /// scatter on every slave replica. Returns (batches pushed, applied).
+    /// Drive the sync pipeline once: gather + push on every master,
+    /// journal each master's dirty window to the WAL, then scatter on
+    /// every slave replica. Returns (batches pushed, applied).
     pub fn sync_tick(&self) -> Result<(usize, usize)> {
         let mut pushed = 0;
         for (i, g) in self.gathers.iter().enumerate() {
@@ -307,6 +328,7 @@ impl LocalCluster {
             pushed += batches.len();
             self.pushers[i].push_all(&batches)?;
         }
+        self.journal_wal()?;
         let mut applied = 0;
         for shard in &self.scatters {
             for sc in shard {
@@ -316,6 +338,19 @@ impl LocalCluster {
         Ok((pushed, applied))
     }
 
+    /// Journal every master's dirty window as a WAL micro-delta (no-op
+    /// in full checkpoint mode and for clean windows).
+    fn journal_wal(&self) -> Result<()> {
+        if self.cfg.ckpt_mode != CkptMode::Incremental {
+            return Ok(());
+        }
+        let now = self.clock.now_ms();
+        for (i, m) in self.masters.iter().enumerate() {
+            self.journals[i].lock().unwrap().poll(m, &self.wal, now)?;
+        }
+        Ok(())
+    }
+
     /// Force every pending update through the pipeline until slaves are
     /// fully caught up.
     pub fn flush_sync(&self) -> Result<()> {
@@ -323,6 +358,7 @@ impl LocalCluster {
             let batches = g.lock().unwrap().flush_now();
             self.pushers[i].push_all(&batches)?;
         }
+        self.journal_wal()?;
         loop {
             let mut lag = 0;
             for shard in &self.scatters {
@@ -366,12 +402,34 @@ impl LocalCluster {
             .collect()
     }
 
-    /// Take a cluster checkpoint now; returns the version.
+    /// Take a cluster checkpoint now; returns the version. In incremental
+    /// mode this seals a base or delta chunk per the chain policy,
+    /// re-arms the WAL journals and trims the WAL below the seal.
     pub fn checkpoint(&self) -> Result<u64> {
         let metric = self.monitor.snapshot().window_auc;
-        let v = self
-            .scheduler
-            .checkpoint_now(&self.masters, self.queue_offsets(), metric)?;
+        let v = match self.cfg.ckpt_mode {
+            CkptMode::Full => {
+                self.scheduler.checkpoint_now(&self.masters, self.queue_offsets(), metric)?
+            }
+            CkptMode::Incremental => {
+                let wal_offsets = self.wal.latest_offsets();
+                let (v, _kind, cuts) = self.scheduler.checkpoint_incremental(
+                    &self.masters,
+                    self.queue_offsets(),
+                    wal_offsets.clone(),
+                    metric,
+                )?;
+                // Journals only need to cover what the sealed chunks do
+                // not; the WAL below the seal is covered by the chain.
+                for (i, m) in self.masters.iter().enumerate() {
+                    self.journals[i].lock().unwrap().reset(cuts[i], m.dense_versions());
+                }
+                for (p, off) in wal_offsets.iter().enumerate() {
+                    self.wal.trim_until(p as u32, *off)?;
+                }
+                v
+            }
+        };
         self.vm.advance(v);
         for shard in &self.slaves {
             for replica in shard {
@@ -379,6 +437,52 @@ impl LocalCluster {
             }
         }
         Ok(v)
+    }
+
+    /// Load the chunk lineage for one master shard at `version`: the base
+    /// snapshot first, then each delta chunk (a pre-incremental full
+    /// checkpoint is a chain of one). Slave bootstrap and the benches
+    /// consume this instead of assuming every version has full shards.
+    pub fn shard_chain(&self, version: u64, shard: u32) -> Result<Vec<(CkptKind, Vec<u8>)>> {
+        let chain = incremental::resolve_chain(&self.store, &self.cfg.model_name, version)?;
+        chain
+            .iter()
+            .map(|m| {
+                Ok((m.kind, self.store.load_chunk(&self.cfg.model_name, m.version, shard, m.kind)?))
+            })
+            .collect()
+    }
+
+    /// Rebuild one slave replica's state from a master shard's chain:
+    /// base full sync, then each delta chunk in order. Call once per
+    /// master shard (the replica's router filters foreign ids). Callers
+    /// syncing many replicas should load via [`Self::shard_chain`] once
+    /// and use [`Self::apply_chain_chunks`] per replica instead.
+    pub fn slave_sync_chain(
+        &self,
+        replica: &Arc<SlaveShard>,
+        version: u64,
+        shard: u32,
+    ) -> Result<()> {
+        Self::apply_chain_chunks(replica, &self.shard_chain(version, shard)?)
+    }
+
+    /// Apply pre-loaded chain chunks to one replica (base → deltas).
+    pub fn apply_chain_chunks(
+        replica: &Arc<SlaveShard>,
+        chain: &[(CkptKind, Vec<u8>)],
+    ) -> Result<()> {
+        for (kind, bytes) in chain {
+            match kind {
+                CkptKind::Base => {
+                    replica.full_sync_from_snapshot(bytes)?;
+                }
+                CkptKind::Delta => {
+                    replica.apply_delta_snapshot(bytes)?;
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Control tick: jittered checkpoints + feature expire + failure
@@ -422,25 +526,44 @@ impl LocalCluster {
         }
         let result = (|| -> Result<()> {
             for m in &self.masters {
-                m.load_checkpoint(&self.store, plan.target_version)?;
+                m.restore_chain(&self.store, plan.target_version, m.shard_id as usize)?;
             }
-            // Slaves: clear + full sync from the rolled-back masters'
-            // checkpoint snapshots, then skip the queue's poisoned tail
-            // (new master state will stream from the current end).
-            let snapshots: Vec<Vec<u8>> = self
+            // Slaves: clear + chain sync from the rolled-back lineage
+            // (base + deltas), then skip the queue's poisoned tail (new
+            // master state will stream from the current end). Chains are
+            // loaded once per master and shared across replicas — this
+            // is the latency-critical rollback path.
+            let chains: Vec<Vec<(CkptKind, Vec<u8>)>> = self
                 .masters
                 .iter()
-                .map(|m| self.store.load_shard(&self.cfg.model_name, plan.target_version, m.shard_id))
-                .collect::<Result<Vec<_>>>()?;
+                .map(|m| self.shard_chain(plan.target_version, m.shard_id))
+                .collect::<Result<_>>()?;
             for (sidx, shard) in self.slaves.iter().enumerate() {
                 for (ridx, replica) in shard.iter().enumerate() {
                     replica.clear();
-                    for snap in &snapshots {
-                        replica.full_sync_from_snapshot(snap)?;
+                    for chain in &chains {
+                        Self::apply_chain_chunks(replica, chain)?;
                     }
                     replica.set_version(plan.target_version);
                     self.scatters[sidx][ridx].lock().unwrap().seek_to_latest()?;
                 }
+            }
+            // Post-rollback durability hygiene: the WAL tail belongs to
+            // the abandoned lineage, and the next checkpoint must reseed
+            // a base (the rolled-back state has no chain to delta onto).
+            if self.cfg.ckpt_mode == CkptMode::Incremental {
+                let manifest =
+                    self.store.load_manifest(&self.cfg.model_name, plan.target_version)?;
+                for (i, m) in self.masters.iter().enumerate() {
+                    let cut = manifest.epochs.get(i).copied().unwrap_or(0);
+                    // Every master was just chain-restored, so a crash-time
+                    // suspension can be lifted too.
+                    self.journals[i].lock().unwrap().resume(cut, m.dense_versions());
+                }
+                for (p, off) in self.wal.latest_offsets().iter().enumerate() {
+                    self.wal.trim_until(p as u32, *off)?;
+                }
+                self.scheduler.force_base_next();
             }
             Ok(())
         })();
@@ -472,9 +595,10 @@ impl LocalCluster {
         self.slaves[shard][replica].set_healthy(false);
     }
 
-    /// Recover a slave replica: full sync from the newest checkpoint, then
-    /// replay the queue from the checkpoint's recorded offsets (§4.2.1b's
-    /// "external queue as the real-time incremental backup").
+    /// Recover a slave replica: warm-start from the newest checkpoint
+    /// chain (base → delta chunks), then replay the queue from the
+    /// checkpoint's recorded offsets (§4.2.1b's "external queue as the
+    /// real-time incremental backup").
     pub fn recover_slave(&self, shard: usize, replica: usize) -> Result<()> {
         let version = self
             .store
@@ -484,8 +608,7 @@ impl LocalCluster {
         let target = &self.slaves[shard][replica];
         target.clear();
         for m in &self.masters {
-            let snap = self.store.load_shard(&self.cfg.model_name, version, m.shard_id)?;
-            target.full_sync_from_snapshot(&snap)?;
+            self.slave_sync_chain(target, version, m.shard_id)?;
         }
         target.set_version(version);
         // Seek the replica's scatter to the checkpoint offsets of its
@@ -509,6 +632,11 @@ impl LocalCluster {
     /// Returns the dead shard's row count for verification.
     pub fn crash_master(&mut self, shard: usize) -> Result<usize> {
         let rows = self.masters[shard].total_rows();
+        // Quiesce the dead shard's WAL journal: a sync tick between crash
+        // and recovery must not log the blank replacement's state, or
+        // recovery would replay it over the restored rows. recover_master
+        // re-arms the journal.
+        self.journals[shard].lock().unwrap().suspend();
         let fresh = Arc::new(MasterShard::with_stripes(
             shard as u32,
             self.spec.clone(),
@@ -529,10 +657,28 @@ impl LocalCluster {
         Ok(rows)
     }
 
-    /// Partial recovery of one master shard from the newest checkpoint +
-    /// replay of its own sync partition (strong-consistency incremental
-    /// backup, §4.2.1b/e).
+    /// Partial recovery of one master shard. Incremental mode: base →
+    /// delta chain → WAL-tail replay (byte-identical, including row
+    /// metadata — the chunks carry it). Full mode: newest checkpoint +
+    /// replay of the shard's own sync partition (§4.2.1b/e).
     pub fn recover_master(&self, shard: usize) -> Result<u64> {
+        if self.cfg.ckpt_mode == CkptMode::Incremental {
+            let version = self
+                .store
+                .latest_version(&self.cfg.model_name)
+                .ok_or_else(|| Error::Checkpoint("no checkpoint to recover from".into()))?;
+            let master = &self.masters[shard];
+            let tip = master.restore_chain(&self.store, version, shard)?;
+            let from = tip.wal_offsets.get(shard).copied().unwrap_or(0);
+            incremental::replay_wal(master, &self.wal, shard as u32, from)?;
+            // Replayed rows are stamped dirty; seal the journal frontier
+            // at a fresh cut so they are re-captured by the next chunk
+            // (they are already in the WAL) but not re-journaled. This
+            // also lifts the crash-time suspension.
+            let cut = master.cut_epoch();
+            self.journals[shard].lock().unwrap().resume(cut, master.dense_versions());
+            return Ok(version);
+        }
         let version = self.scheduler.recover_shard(&self.masters[shard])?;
         let manifest = self.store.load_manifest(&self.cfg.model_name, version)?;
         // Replay this shard's partition from the checkpoint offset: sync

@@ -220,6 +220,10 @@ mod tests {
                     num_shards: 1,
                     queue_offsets: vec![*v * 10],
                     metric: *metric,
+                    kind: crate::storage::CkptKind::Base,
+                    parent: 0,
+                    epochs: vec![*v],
+                    wal_offsets: vec![],
                 })
                 .unwrap();
         }

@@ -361,6 +361,11 @@ struct ParkQueue {
     count: AtomicUsize,
     /// Event-mode waker (`None` in peek mode — the sweep notices).
     waker: Option<sys::EventFd>,
+    /// Worker dispatches submitted to the pool (ready-set batching makes
+    /// this grow slower than `dispatched_conns` under small ready sets).
+    dispatches: AtomicU64,
+    /// Ready connections handed to workers.
+    dispatched_conns: AtomicU64,
 }
 
 impl ParkQueue {
@@ -442,6 +447,8 @@ impl RpcServer {
             queue: Mutex::new(Vec::new()),
             count: AtomicUsize::new(0),
             waker,
+            dispatches: AtomicU64::new(0),
+            dispatched_conns: AtomicU64::new(0),
         });
         let opts = Arc::new(RpcOptions { mode, ..opts });
         let accept_thread = {
@@ -483,6 +490,16 @@ impl RpcServer {
         self.park.count.load(Ordering::Acquire)
     }
 
+    /// (worker dispatches, ready connections handed over). With ready-set
+    /// batching, dispatches <= connections: small epoll ready sets share
+    /// one pool wakeup.
+    pub fn dispatch_stats(&self) -> (u64, u64) {
+        (
+            self.park.dispatches.load(Ordering::Relaxed),
+            self.park.dispatched_conns.load(Ordering::Relaxed),
+        )
+    }
+
     /// Stop accepting and polling; parked connections close when the
     /// server drops, in-flight handlers abort on their next I/O nap.
     pub fn shutdown(&self) {
@@ -500,11 +517,61 @@ impl RpcServer {
         park: &Arc<ParkQueue>,
         opts: &Arc<RpcOptions>,
     ) {
+        park.dispatches.fetch_add(1, Ordering::Relaxed);
+        park.dispatched_conns.fetch_add(1, Ordering::Relaxed);
         let service = service.clone();
         let stop = stop.clone();
         let park = park.clone();
         let opts = opts.clone();
         pool.execute(move || Self::serve_ready(conn, service, stop, park, opts));
+    }
+
+    /// Ready sets this small ride a single worker dispatch **when the
+    /// pool already has queued work**: the tasks would serialize behind
+    /// the backlog anyway, so collapsing them saves the per-connection
+    /// pool hand-off (queue lock + worker wake) with zero added latency.
+    /// With idle workers available, or for larger sets, connections fan
+    /// out one task each for handler parallelism — batching there would
+    /// head-of-line-block concurrent requests.
+    const READY_BATCH_MAX: usize = 4;
+
+    fn dispatch_ready(
+        ready: &mut Vec<Conn>,
+        service: &Arc<dyn Service>,
+        stop: &Arc<AtomicBool>,
+        pool: &Arc<ThreadPool>,
+        park: &Arc<ParkQueue>,
+        opts: &Arc<RpcOptions>,
+    ) {
+        match ready.len() {
+            0 => {}
+            1 => Self::dispatch(ready.pop().unwrap(), service, stop, pool, park, opts),
+            n if n <= Self::READY_BATCH_MAX && pool.pending() > 0 => {
+                park.dispatches.fetch_add(1, Ordering::Relaxed);
+                park.dispatched_conns.fetch_add(n as u64, Ordering::Relaxed);
+                let batch: Vec<Conn> = ready.drain(..).collect();
+                let service = service.clone();
+                let stop = stop.clone();
+                let park = park.clone();
+                let opts = opts.clone();
+                pool.execute(move || {
+                    for conn in batch {
+                        Self::serve_ready(
+                            conn,
+                            service.clone(),
+                            stop.clone(),
+                            park.clone(),
+                            opts.clone(),
+                        );
+                    }
+                });
+            }
+            _ => {
+                for conn in ready.drain(..) {
+                    Self::dispatch(conn, service, stop, pool, park, opts);
+                }
+            }
+        }
     }
 
     /// Event-driven poll loop: the listener, the waker and every parked
@@ -526,6 +593,10 @@ impl RpcServer {
         // collide with the reserved tokens).
         let mut conns: HashMap<u64, Conn> = HashMap::new();
         let mut events = vec![sys::EpollEvent::default(); 64];
+        // Reused across wakeups like the event buffer — the dispatch path
+        // stays allocation-free except when a small set batches into one
+        // task (which must own its connections).
+        let mut ready: Vec<Conn> = Vec::new();
         if epoll.add(listener.as_raw_fd(), TOKEN_ACCEPT).is_err() {
             // Registration failure at startup: fall back to sweeping.
             return Self::peek_loop(listener, service, stop, pool, park, opts);
@@ -551,6 +622,8 @@ impl RpcServer {
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
                 Err(_) => break,
             };
+            // Collect this wakeup's ready connections, then hand the set
+            // to workers in as few pool dispatches as sensible.
             for ev in events.iter().take(n) {
                 match ev.token() {
                     TOKEN_WAKE => {
@@ -581,11 +654,12 @@ impl RpcServer {
                         if let Some(conn) = conns.remove(&token) {
                             let _ = epoll.delete(conn.stream.as_raw_fd());
                             park.count.fetch_sub(1, Ordering::AcqRel);
-                            Self::dispatch(conn, &service, &stop, &pool, &park, &opts);
+                            ready.push(conn);
                         }
                     }
                 }
             }
+            Self::dispatch_ready(&mut ready, &service, &stop, &pool, &park, &opts);
         }
     }
 
@@ -1009,6 +1083,34 @@ mod tests {
         for (i, c) in clients.iter().enumerate() {
             assert_eq!(c.call(1, &[i as u8, 9]).unwrap(), [9, i as u8]);
         }
+    }
+
+    #[test]
+    fn event_mode_batches_small_ready_sets() {
+        let server = serve_mode(PollMode::Event);
+        if server.poll_mode() != PollMode::Event {
+            return; // no epoll on this platform
+        }
+        let clients: Vec<RpcClient> = (0..8)
+            .map(|_| RpcClient::new(&server.addr().to_string(), timeout()))
+            .collect();
+        // Rounds of concurrent calls across the fleet: every call must
+        // round-trip regardless of how the poller groups ready sets.
+        for round in 0..20u8 {
+            std::thread::scope(|s| {
+                for (i, c) in clients.iter().enumerate() {
+                    s.spawn(move || {
+                        assert_eq!(c.call(0, &[round, i as u8]).unwrap(), [round, i as u8]);
+                    });
+                }
+            });
+        }
+        let (dispatches, conns) = server.dispatch_stats();
+        assert!(conns > 0, "no ready connections dispatched");
+        assert!(
+            dispatches <= conns,
+            "batched dispatch accounting broken: {dispatches} > {conns}"
+        );
     }
 
     #[test]

@@ -17,9 +17,11 @@
 
 pub mod log;
 pub mod remote;
+pub mod wal;
 
 pub use log::SyncLog;
 pub use remote::{QueueService, RemoteLog};
+pub use wal::WalLog;
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex, RwLock};

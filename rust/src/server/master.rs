@@ -23,7 +23,7 @@ use crate::optim::BatchedFtrl;
 use crate::proto::{Ack, CkptRequest, DensePull, DenseValues, SparsePull, SparsePush, SparseValues};
 use crate::runtime::Engine;
 use crate::server::methods;
-use crate::storage::CheckpointStore;
+use crate::storage::{CheckpointStore, CkptKind, CkptManifest};
 use crate::sync::collector::Collector;
 use crate::table::{aggregate_grads, DenseOpt, DenseTable, SparseTable, StripedSparseTable};
 use crate::util::clock::Clock;
@@ -62,6 +62,13 @@ pub struct MasterMetrics {
     pub scalar_rows: AtomicU64,
 }
 
+/// An encoded dirty-epoch delta chunk (everything mutated since a cut).
+pub struct DeltaChunk {
+    pub bytes: Vec<u8>,
+    pub upserts: usize,
+    pub deletes: usize,
+}
+
 /// One master shard.
 pub struct MasterShard {
     pub shard_id: u32,
@@ -72,6 +79,9 @@ pub struct MasterShard {
     clock: Arc<dyn Clock>,
     /// Downgrade freeze: pushes rejected while set (§4.3.2).
     frozen: AtomicBool,
+    /// Shard-level checkpoint epoch counter; all sparse tables' write
+    /// epochs move in lockstep with it (see [`Self::cut_epoch`]).
+    ckpt_epoch: AtomicU64,
     pub metrics: MasterMetrics,
 }
 
@@ -137,6 +147,7 @@ impl MasterShard {
             batched,
             clock,
             frozen: AtomicBool::new(false),
+            ckpt_epoch: AtomicU64::new(1),
             metrics: MasterMetrics::default(),
         })
     }
@@ -377,6 +388,171 @@ impl MasterShard {
             d.decode_into(&mut r)?;
         }
         Ok(())
+    }
+
+    // -- incremental durability (dirty epochs, delta chunks, chains) ----------
+
+    /// Current write epoch: the value every mutation stamps its rows with.
+    pub fn write_epoch(&self) -> u64 {
+        self.ckpt_epoch.load(Ordering::SeqCst)
+    }
+
+    /// Seal the current epoch window. Returns the cut — every mutation
+    /// applied so far is stamped `<= cut` — and moves all sparse tables
+    /// to `cut + 1`, so later mutations belong to the next window. A
+    /// delta collected afterwards with `since = previous cut` captures
+    /// exactly the sealed window (plus any raced `cut + 1` stragglers,
+    /// which the next window re-captures — duplicates, never losses).
+    pub fn cut_epoch(&self) -> u64 {
+        let cut = self.ckpt_epoch.fetch_add(1, Ordering::SeqCst);
+        let state = self.state.read().unwrap();
+        for t in &state.sparse {
+            t.set_write_epoch(cut + 1);
+        }
+        cut
+    }
+
+    /// Re-arm the write epoch (after restoring a checkpoint whose
+    /// manifest recorded `epoch - 1` for this shard): future mutations
+    /// stamp `epoch`, so the next delta against that manifest sees them.
+    pub fn set_write_epoch(&self, epoch: u64) {
+        self.ckpt_epoch.store(epoch, Ordering::SeqCst);
+        let state = self.state.read().unwrap();
+        for t in &state.sparse {
+            t.set_write_epoch(epoch);
+        }
+    }
+
+    /// Enable/disable tombstone tracking on every sparse table. Off for
+    /// deployments with no incremental checkpoint consumer (full mode,
+    /// scheduler-less serving), so expired rows free all their memory.
+    pub fn set_incremental_tracking(&self, on: bool) {
+        let state = self.state.read().unwrap();
+        for t in &state.sparse {
+            t.set_grave_tracking(on);
+        }
+    }
+
+    /// Dense-table version counters (the WAL journal's change gate).
+    pub fn dense_versions(&self) -> Vec<u64> {
+        let state = self.state.read().unwrap();
+        state.dense.iter().map(|d| d.version).collect()
+    }
+
+    /// (dirty rows, tombstones) across sparse tables since `since`.
+    pub fn dirty_counts(&self, since: u64) -> (usize, usize) {
+        let state = self.state.read().unwrap();
+        let mut rows = 0;
+        let mut graves = 0;
+        for t in &state.sparse {
+            let (r, g) = t.dirty_counts(since);
+            rows += r;
+            graves += g;
+        }
+        (rows, graves)
+    }
+
+    /// Drop tombstones sealed through `through` (call after the
+    /// checkpoint that recorded that cut — no future delta can need them).
+    pub fn prune_dirty(&self, through: u64) {
+        let state = self.state.read().unwrap();
+        for t in &state.sparse {
+            t.prune_graves(through);
+        }
+    }
+
+    /// Encode a delta chunk: every sparse row mutated since epoch
+    /// `since` (with metadata — restores are byte-identical), tombstones
+    /// for rows deleted since, and the full dense state. Collection
+    /// walks one stripe at a time under that stripe's *read* lock, so a
+    /// checkpoint never globally stalls training. Holds the outer state
+    /// lock in read mode only.
+    pub fn encode_delta(&self, since: u64) -> DeltaChunk {
+        let state = self.state.read().unwrap();
+        let mut w = Writer::with_capacity(1 << 12);
+        w.put_u32(self.shard_id);
+        w.put_varint(since);
+        w.put_varint(state.sparse.len() as u64);
+        let mut upserts = 0;
+        let mut deletes = 0;
+        for t in &state.sparse {
+            let (u, d) = t.encode_delta_rows(since, &mut w);
+            upserts += u;
+            deletes += d;
+        }
+        w.put_varint(state.dense.len() as u64);
+        for d in &state.dense {
+            d.encode(&mut w);
+        }
+        DeltaChunk { bytes: w.into_bytes(), upserts, deletes }
+    }
+
+    /// Apply a delta chunk produced by [`Self::encode_delta`].
+    /// `mark_dirty = false` for chain restores (the chunk's checkpoint
+    /// already covers these rows), `true` for WAL replay (the replayed
+    /// rows must be captured by the *next* delta). Returns
+    /// (rows upserted, rows deleted).
+    pub fn apply_delta(&self, bytes: &[u8], mark_dirty: bool) -> Result<(usize, usize)> {
+        let mut r = Reader::new(bytes);
+        let _src_shard = r.get_u32()?;
+        let _since = r.get_varint()?;
+        let n_sparse = r.get_varint()? as usize;
+        let mut state = self.state.write().unwrap();
+        if n_sparse != state.sparse.len() {
+            return Err(Error::Checkpoint(format!(
+                "delta has {n_sparse} sparse tables, spec has {}",
+                state.sparse.len()
+            )));
+        }
+        let mut upserts = 0;
+        let mut deletes = 0;
+        for t in state.sparse.iter() {
+            let stamp = if mark_dirty { t.write_epoch() } else { 0 };
+            let (u, d) = t.decode_delta_rows(&mut r, stamp)?;
+            upserts += u;
+            deletes += d;
+        }
+        let n_dense = r.get_varint()? as usize;
+        if n_dense != state.dense.len() {
+            return Err(Error::Checkpoint(format!(
+                "delta has {n_dense} dense tables, spec has {}",
+                state.dense.len()
+            )));
+        }
+        for d in state.dense.iter_mut() {
+            d.decode_into(&mut r)?;
+        }
+        Ok((upserts, deletes))
+    }
+
+    /// Restore this shard from the incremental chain ending at `version`:
+    /// base snapshot, then each delta chunk in order, then re-arm the
+    /// write epoch from the tip manifest so post-recovery mutations land
+    /// in the next delta. `manifest_slot` is this shard's position in the
+    /// manifest's save order (== shard id for whole-cluster
+    /// orchestrators, 0 for a standalone single-shard store). Returns the
+    /// tip manifest — its `wal_offsets` / `queue_offsets` tell the caller
+    /// where tail replay starts.
+    pub fn restore_chain(
+        &self,
+        store: &CheckpointStore,
+        version: u64,
+        manifest_slot: usize,
+    ) -> Result<CkptManifest> {
+        let chain = crate::storage::incremental::resolve_chain(store, &self.spec.name, version)?;
+        for m in &chain {
+            let bytes = store.load_chunk(&self.spec.name, m.version, self.shard_id, m.kind)?;
+            match m.kind {
+                CkptKind::Base => self.restore(&bytes, None)?,
+                CkptKind::Delta => {
+                    self.apply_delta(&bytes, false)?;
+                }
+            }
+        }
+        let tip = chain.into_iter().next_back().expect("resolve_chain returns >= 1 link");
+        let epoch = tip.epochs.get(manifest_slot).copied().unwrap_or(0);
+        self.set_write_epoch(epoch + 1);
+        Ok(tip)
     }
 
     /// Merge rows from another shard's snapshot into this shard, keeping
@@ -864,6 +1040,37 @@ mod tests {
         assert!(svc.call(99, &[]).is_err());
         // Ping.
         assert!(Ack::from_bytes(&svc.call(methods::PING, &[]).unwrap()).unwrap().ok);
+    }
+
+    #[test]
+    fn delta_chunks_capture_dirty_window_and_restore_bytes() {
+        let (m, _) = shard(ModelKind::Fm);
+        for i in 0..40u64 {
+            push(&m, "w", vec![i], vec![0.5]);
+            push(&m, "v", vec![i], vec![0.1, -0.1]);
+        }
+        let cut = m.cut_epoch();
+        // Sealed window: nothing is dirty relative to the cut.
+        assert_eq!(m.dirty_counts(cut), (0, 0));
+        let (m2, _) = shard(ModelKind::Fm);
+        m2.restore(&m.snapshot(), None).unwrap();
+        // Post-cut mutations: two sparse rows and a dense update.
+        push(&m, "w", vec![3, 7], vec![1.0, 1.0]);
+        m.dense_push(&DenseValues { model: "ctr".into(), table: "bias".into(), values: vec![1.0] })
+            .unwrap();
+        assert_eq!(m.dirty_counts(cut), (2, 0));
+        let chunk = m.encode_delta(cut);
+        assert_eq!((chunk.upserts, chunk.deletes), (2, 0));
+        m2.apply_delta(&chunk.bytes, false).unwrap();
+        assert_eq!(m.snapshot(), m2.snapshot(), "delta restore not byte-identical");
+        // A truncated chunk errors cleanly, never panics.
+        assert!(m2.apply_delta(&chunk.bytes[..chunk.bytes.len() / 2], false).is_err());
+        // WAL-style replay marks rows dirty so the next delta reseals them.
+        let (m3, _) = shard(ModelKind::Fm);
+        m3.restore(&m.snapshot(), None).unwrap();
+        assert_eq!(m3.dirty_counts(0), (0, 0));
+        m3.apply_delta(&chunk.bytes, true).unwrap();
+        assert_eq!(m3.dirty_counts(0), (2, 0));
     }
 
     #[test]

@@ -111,6 +111,10 @@ impl ServingTable {
             .insert(id, values.into_boxed_slice());
     }
 
+    fn remove(&self, id: u64) -> bool {
+        self.stripes[self.stripe_of(id)].write().unwrap().remove(&id).is_some()
+    }
+
     fn clear(&self) {
         for s in &self.stripes {
             s.write().unwrap().clear();
@@ -428,41 +432,31 @@ impl SlaveShard {
         }
     }
 
-    /// Full synchronization (§4.1, §4.2.2): bootstrap this replica from a
-    /// master-shard checkpoint snapshot — filter ids to this slave shard,
-    /// transform each row. Call once per master shard snapshot.
-    pub fn full_sync_from_snapshot(&self, snapshot: &[u8]) -> Result<usize> {
-        let mut r = Reader::new(snapshot);
-        let _src_shard = r.get_u32()?;
-        let n_sparse = r.get_varint()? as usize;
-        let mut loaded = 0usize;
-        for _ in 0..n_sparse {
-            // Decode the master table inline (name, dim, width, rows).
-            let name = r.get_str()?;
-            let _dim = r.get_u32()?;
-            let width = r.get_u32()? as usize;
-            let count = r.get_varint()? as usize;
-            let serving = self.transform.serving_width(&name);
-            let tbl_idx = self.tables.iter().position(|(n, _)| *n == name);
-            for _ in 0..count {
-                let id = r.get_varint()?;
-                let _last_access = r.get_varint()?;
-                let _updates = r.get_u32()?;
-                let values = r.get_f32_slice()?;
-                if values.len() != width {
-                    return Err(Error::Checkpoint(format!("row {id} width {}", values.len())));
-                }
-                if serving.is_none() || self.router.shard_of(id) != self.shard_id {
-                    continue;
-                }
-                if let (Some(idx), Some(out)) = (tbl_idx, self.transform.transform(&name, &values)?)
-                {
-                    self.tables[idx].1.upsert(id, out);
-                    loaded += 1;
-                }
-            }
+    /// Filter one master row to this shard, transform it and upsert the
+    /// serving form — the per-row step shared by full sync and delta
+    /// apply. Returns true when a row landed.
+    fn sync_row(
+        &self,
+        tbl_idx: Option<usize>,
+        serving: Option<usize>,
+        name: &str,
+        id: u64,
+        values: &[f32],
+    ) -> Result<bool> {
+        if serving.is_none() || self.router.shard_of(id) != self.shard_id {
+            return Ok(false);
         }
-        // Dense tables from the snapshot.
+        if let (Some(idx), Some(out)) = (tbl_idx, self.transform.transform(name, values)?) {
+            self.tables[idx].1.upsert(id, out);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Dense tail shared by snapshot and delta chunks: (name, version,
+    /// values, acc) per table; unknown names and length mismatches are
+    /// skipped (data screening).
+    fn decode_dense_tail(&self, r: &mut Reader) -> Result<()> {
         let n_dense = r.get_varint()? as usize;
         let mut dense = self.dense.write().unwrap();
         for _ in 0..n_dense {
@@ -476,7 +470,90 @@ impl SlaveShard {
                 }
             }
         }
+        Ok(())
+    }
+
+    /// Full synchronization (§4.1, §4.2.2): bootstrap this replica from a
+    /// master-shard checkpoint snapshot — filter ids to this slave shard,
+    /// transform each row. Call once per master shard snapshot.
+    pub fn full_sync_from_snapshot(&self, snapshot: &[u8]) -> Result<usize> {
+        let mut r = Reader::new(snapshot);
+        let _src_shard = r.get_u32()?;
+        let n_sparse = r.get_varint()? as usize;
+        let mut loaded = 0usize;
+        for _ in 0..n_sparse {
+            // Decode the master table inline (name, dim, width, rows).
+            let name = r.get_str()?;
+            let _dim = r.get_u32()?;
+            let width = r.get_u32()? as usize;
+            let serving = self.transform.serving_width(&name);
+            let tbl_idx = self.tables.iter().position(|(n, _)| *n == name);
+            let count = r.get_varint()? as usize;
+            for _ in 0..count {
+                let id = r.get_varint()?;
+                let _last_access = r.get_varint()?;
+                let _updates = r.get_u32()?;
+                let values = r.get_f32_slice()?;
+                if values.len() != width {
+                    return Err(Error::Checkpoint(format!("row {id} width {}", values.len())));
+                }
+                if self.sync_row(tbl_idx, serving, &name, id, &values)? {
+                    loaded += 1;
+                }
+            }
+        }
+        self.decode_dense_tail(&mut r)?;
         Ok(loaded)
+    }
+
+    /// Warm-start continuation: apply one incremental delta chunk
+    /// (written by `MasterShard::encode_delta`) on top of a base full
+    /// sync — filter ids to this slave shard, transform dirty rows to
+    /// serving form, apply tombstones, take dense state wholesale.
+    /// Returns rows upserted + deleted here.
+    pub fn apply_delta_snapshot(&self, chunk: &[u8]) -> Result<usize> {
+        let mut r = Reader::new(chunk);
+        let _src_shard = r.get_u32()?;
+        let _since = r.get_varint()?;
+        let n_sparse = r.get_varint()? as usize;
+        let mut applied = 0usize;
+        for _ in 0..n_sparse {
+            let name = r.get_str()?;
+            let _dim = r.get_u32()?;
+            let width = r.get_u32()? as usize;
+            let serving = self.transform.serving_width(&name);
+            let tbl_idx = self.tables.iter().position(|(n, _)| *n == name);
+            let n_upserts = r.get_varint()? as usize;
+            for _ in 0..n_upserts {
+                let id = r.get_varint()?;
+                let _last_access = r.get_varint()?;
+                let _updates = r.get_u32()?;
+                let values = r.get_f32_slice()?;
+                if values.len() != width {
+                    return Err(Error::Checkpoint(format!(
+                        "delta row {id} width {}",
+                        values.len()
+                    )));
+                }
+                if self.sync_row(tbl_idx, serving, &name, id, &values)? {
+                    applied += 1;
+                }
+            }
+            let n_deletes = r.get_varint()? as usize;
+            for _ in 0..n_deletes {
+                let id = r.get_varint()?;
+                if self.router.shard_of(id) != self.shard_id {
+                    continue;
+                }
+                if let Some(idx) = tbl_idx {
+                    if self.tables[idx].1.remove(id) {
+                        applied += 1;
+                    }
+                }
+            }
+        }
+        self.decode_dense_tail(&mut r)?;
+        Ok(applied)
     }
 
     /// Drop all rows (before a full re-sync on version switch).
@@ -882,6 +959,69 @@ mod tests {
             .unwrap();
         assert_eq!(mw.values, sw.values);
         assert!(mw.values[0] != 0.0);
+    }
+
+    #[test]
+    fn delta_snapshot_continues_a_full_sync() {
+        use crate::config::{ModelKind, ModelSpec};
+        use crate::proto::SparsePush;
+        use crate::runtime::ModelConfig;
+        use crate::server::master::MasterShard;
+        use crate::util::clock::ManualClock;
+
+        let cfg = ModelConfig {
+            batch_train: 8,
+            batch_predict: 2,
+            fields: 4,
+            dim: 2,
+            hidden: 8,
+            ftrl_block_rows: 64,
+            ftrl_alpha: 0.05,
+            ftrl_beta: 1.0,
+            ftrl_l1: 1.0,
+            ftrl_l2: 1.0,
+        };
+        let spec = ModelSpec::derive("ctr", ModelKind::Fm, &cfg);
+        let clock = ManualClock::new(0);
+        let master = MasterShard::new(0, spec, None, 1, Arc::new(clock.clone())).unwrap();
+        let push = |id: u64, g: f32| {
+            master
+                .sparse_push(&SparsePush {
+                    model: "ctr".into(),
+                    table: "w".into(),
+                    ids: vec![id],
+                    grads: vec![g],
+                })
+                .unwrap()
+        };
+        for i in 0..60u64 {
+            push(i, 2.0);
+        }
+        let s = slave(0, 1);
+        s.full_sync_from_snapshot(&master.snapshot()).unwrap();
+        assert_eq!(s.total_rows(), 60);
+        // Post-base window: refresh two rows, expire the other 58.
+        let cut = master.cut_epoch();
+        clock.advance(10_000);
+        push(1, 3.0);
+        push(2, 3.0);
+        assert_eq!(master.expire_features(5_000), 58);
+        let chunk = master.encode_delta(cut);
+        assert_eq!(chunk.deletes, 58);
+        s.apply_delta_snapshot(&chunk.bytes).unwrap();
+        assert_eq!(s.total_rows(), 2);
+        // Served value tracks the master's current serving weight.
+        let pull = |ids: Vec<u64>| SparsePull {
+            model: "ctr".into(),
+            table: "w".into(),
+            ids,
+            slot: "w".into(),
+        };
+        let mw = master.sparse_pull(&pull(vec![1, 2])).unwrap();
+        let sw = s.sparse_pull(&pull(vec![1, 2])).unwrap();
+        assert_eq!(mw.values, sw.values);
+        // Hostile input: a truncated chunk errors, never panics.
+        assert!(s.apply_delta_snapshot(&chunk.bytes[..10]).is_err());
     }
 
     #[test]

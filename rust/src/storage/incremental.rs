@@ -1,0 +1,377 @@
+//! Incremental checkpoint & recovery engine: manifest chains, chain GC,
+//! and the WAL journal that bounds data loss between delta chunks.
+//!
+//! Monolith-style durability (Lian et al., 2022) on top of the
+//! dirty-epoch substrate: periodic **base** snapshots plus **delta**
+//! chunks holding only the rows touched since the parent checkpoint, a
+//! replayable write-ahead log closing the gap from the last sealed chunk
+//! to the crash point, and a recovery path that loads base → applies the
+//! delta chain → replays the WAL tail. Chunk formats live with the data
+//! they serialize ([`crate::table::StripedSparseTable::encode_delta_rows`],
+//! [`crate::server::master::MasterShard::encode_delta`]); this module
+//! owns the *lineage*: which versions form a chain, which chains are
+//! still needed, and what the WAL must replay.
+//!
+//! Chain shape: every version's [`CkptManifest`] records its kind and,
+//! for deltas, the parent version plus the per-shard epoch cuts the delta
+//! was collected against. [`resolve_chain`] walks tip → base and
+//! validates the lineage (missing manifests, duplicate versions / cycles,
+//! non-monotonic parents all fail cleanly — hostile or half-GC'd stores
+//! must never panic or silently mis-restore).
+
+use crate::queue::wal::WalLog;
+use crate::server::master::MasterShard;
+use crate::storage::{CheckpointStore, CkptKind, CkptManifest};
+use crate::{Error, Result};
+
+/// Hard cap on chain length: a longer walk means a corrupt lineage (the
+/// policy reseeds a base every few checkpoints), not a legitimate chain.
+pub const MAX_CHAIN: usize = 1024;
+
+/// Incremental checkpoint policy knobs.
+#[derive(Debug, Clone)]
+pub struct IncrPolicy {
+    /// Chunks per chain: every `base_every`-th checkpoint reseeds a full
+    /// base (1 = every checkpoint is a base, i.e. the legacy behaviour).
+    pub base_every: u64,
+    /// Complete chains to keep locally; GC drops whole chains only, never
+    /// a base out from under its deltas.
+    pub keep_chains: usize,
+}
+
+impl Default for IncrPolicy {
+    fn default() -> Self {
+        IncrPolicy { base_every: 4, keep_chains: 2 }
+    }
+}
+
+/// Resolve the recovery chain for `version`: returns manifests ordered
+/// base first, `version`'s last. Validates the lineage and fails cleanly
+/// on missing manifests, cycles / duplicate versions, parents that do not
+/// precede their child, or chains longer than [`MAX_CHAIN`].
+pub fn resolve_chain(
+    store: &CheckpointStore,
+    model: &str,
+    version: u64,
+) -> Result<Vec<CkptManifest>> {
+    let mut rev: Vec<CkptManifest> = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    let mut v = version;
+    loop {
+        if !seen.insert(v) {
+            return Err(Error::Checkpoint(format!(
+                "{model} v{version}: manifest chain revisits v{v} (cycle or duplicate)"
+            )));
+        }
+        if rev.len() >= MAX_CHAIN {
+            return Err(Error::Checkpoint(format!(
+                "{model} v{version}: chain exceeds {MAX_CHAIN} links"
+            )));
+        }
+        let m = store.load_manifest(model, v)?;
+        if m.version != v {
+            return Err(Error::Checkpoint(format!(
+                "{model} v{v}: manifest claims version {}",
+                m.version
+            )));
+        }
+        let (kind, parent) = (m.kind, m.parent);
+        rev.push(m);
+        match kind {
+            CkptKind::Base => break,
+            CkptKind::Delta => {
+                if parent == 0 || parent >= v {
+                    return Err(Error::Checkpoint(format!(
+                        "{model} v{v}: delta has invalid parent {parent}"
+                    )));
+                }
+                v = parent;
+            }
+        }
+    }
+    rev.reverse();
+    Ok(rev)
+}
+
+/// Decide the next checkpoint's kind: a base when there is no usable
+/// lineage (nothing yet, or a corrupt/unresolvable chain — reseeding is
+/// the self-healing move) or when the current chain already holds
+/// `base_every` chunks; otherwise a delta against the latest version,
+/// whose manifest is returned for its epoch cuts.
+pub fn plan_next(
+    store: &CheckpointStore,
+    model: &str,
+    policy: &IncrPolicy,
+) -> (CkptKind, Option<CkptManifest>) {
+    let Some(latest) = store.latest_version(model) else {
+        return (CkptKind::Base, None);
+    };
+    match resolve_chain(store, model, latest) {
+        Ok(chain) if (chain.len() as u64) < policy.base_every.max(1) => {
+            let tip = chain.into_iter().next_back();
+            (CkptKind::Delta, tip)
+        }
+        _ => (CkptKind::Base, None),
+    }
+}
+
+/// Chain-aware local GC: keep the newest `keep_chains` bases and every
+/// version from the oldest kept base onwards; remove older versions
+/// wholesale. Never cuts a live chain in half (version numbers within a
+/// lineage are monotonically increasing). Returns the removed versions.
+pub fn gc_chains(store: &CheckpointStore, model: &str, keep_chains: usize) -> Result<Vec<u64>> {
+    let versions = store.list_versions(model);
+    let mut bases = Vec::new();
+    for &v in &versions {
+        if let Ok(m) = store.load_manifest(model, v) {
+            if m.kind == CkptKind::Base {
+                bases.push(v);
+            }
+        }
+    }
+    let keep = keep_chains.max(1);
+    if bases.len() <= keep {
+        return Ok(Vec::new());
+    }
+    let cutoff = bases[bases.len() - keep];
+    let mut removed = Vec::new();
+    for &v in &versions {
+        if v < cutoff {
+            store.remove_local_version(model, v)?;
+            removed.push(v);
+        }
+    }
+    Ok(removed)
+}
+
+/// Per-shard WAL journal: drains the shard's dirty set as a micro-delta
+/// chunk into one WAL partition on every poll. Records are the same
+/// chunk format as checkpoint deltas, so recovery replays them through
+/// the identical decode path — base chunk, delta chain, then these.
+pub struct WalJournal {
+    partition: u32,
+    /// Epoch cut of the last journaled micro-delta.
+    last_cut: u64,
+    /// Dense-table versions at the last append (dense state piggybacks on
+    /// every chunk; this gates appends when only dense changed).
+    last_dense: Vec<u64>,
+    /// While set, polls are no-ops. A crashed-and-replaced shard must not
+    /// journal its blank replacement's state — recovery would replay that
+    /// junk over the restored rows. [`Self::reset`] resumes.
+    suspended: bool,
+}
+
+impl WalJournal {
+    /// Journal for one shard writing to `partition`.
+    pub fn new(partition: u32) -> WalJournal {
+        WalJournal { partition, last_cut: 0, last_dense: Vec::new(), suspended: false }
+    }
+
+    /// The WAL partition this journal appends to.
+    pub fn partition(&self) -> u32 {
+        self.partition
+    }
+
+    /// Stop journaling until the next [`Self::reset`] (between a shard
+    /// crash and its recovery).
+    pub fn suspend(&mut self) {
+        self.suspended = true;
+    }
+
+    /// Cut the shard's write epoch and journal everything dirtied since
+    /// the previous cut. Clean windows append nothing and — because the
+    /// dirty probe is a per-stripe `max_epoch` compare, not an encode —
+    /// cost no allocation, keeping idle masters idle. Returns the
+    /// appended offset, if any.
+    pub fn poll(
+        &mut self,
+        master: &MasterShard,
+        wal: &WalLog,
+        now_ms: u64,
+    ) -> Result<Option<u64>> {
+        if self.suspended {
+            return Ok(None);
+        }
+        let dense = master.dense_versions();
+        let (rows, graves) = master.dirty_counts(self.last_cut);
+        if rows + graves == 0 && dense == self.last_dense {
+            return Ok(None);
+        }
+        let cut = master.cut_epoch();
+        let chunk = master.encode_delta(self.last_cut);
+        self.last_cut = cut;
+        self.last_dense = dense;
+        let offset = crate::queue::SyncLog::append(wal, self.partition, now_ms, chunk.bytes)?;
+        Ok(Some(offset))
+    }
+
+    /// Re-arm the journal frontier after a checkpoint seal: subsequent
+    /// polls journal only what the sealed chunks do not already cover.
+    /// Does **not** lift a suspension — a checkpoint taken between a
+    /// crash and its recovery must not let the blank replacement reach
+    /// the log ([`Self::resume`] is recovery's job).
+    pub fn reset(&mut self, cut: u64, dense_versions: Vec<u64>) {
+        self.last_cut = cut;
+        self.last_dense = dense_versions;
+    }
+
+    /// Re-arm **and** lift any suspension — call once the shard's state
+    /// has been restored (recovery / downgrade rollback).
+    pub fn resume(&mut self, cut: u64, dense_versions: Vec<u64>) {
+        self.reset(cut, dense_versions);
+        self.suspended = false;
+    }
+}
+
+/// Replay a WAL partition's tail into a master shard: every record is a
+/// micro-delta chunk; rows are stamped with the shard's *current* write
+/// epoch so the next checkpoint delta captures them. Returns records
+/// replayed.
+pub fn replay_wal(
+    master: &MasterShard,
+    wal: &WalLog,
+    partition: u32,
+    from_offset: u64,
+) -> Result<usize> {
+    use crate::queue::SyncLog;
+    let earliest = wal.earliest_offset(partition)?;
+    let mut offset = from_offset.max(earliest);
+    let mut replayed = 0usize;
+    loop {
+        let records = wal.fetch(partition, offset, 256, std::time::Duration::ZERO)?;
+        if records.is_empty() {
+            return Ok(replayed);
+        }
+        for rec in &records {
+            offset = rec.offset + 1;
+            master.apply_delta(&rec.payload, true)?;
+            replayed += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_store() -> (CheckpointStore, std::path::PathBuf) {
+        let base = std::env::temp_dir().join(format!(
+            "weips-incr-{}-{:x}",
+            std::process::id(),
+            crate::util::mono_ns()
+        ));
+        let local = base.join("local");
+        std::fs::create_dir_all(&local).unwrap();
+        (CheckpointStore::new(local, None), base)
+    }
+
+    fn manifest(v: u64, kind: CkptKind, parent: u64) -> CkptManifest {
+        CkptManifest {
+            model: "ctr".into(),
+            version: v,
+            created_ms: v * 10,
+            num_shards: 1,
+            queue_offsets: vec![],
+            metric: 0.5,
+            kind,
+            parent,
+            epochs: vec![v],
+            wal_offsets: vec![],
+        }
+    }
+
+    fn seal(s: &CheckpointStore, v: u64, kind: CkptKind, parent: u64) {
+        s.save_chunk("ctr", v, 0, kind, b"chunk").unwrap();
+        s.write_manifest(&manifest(v, kind, parent)).unwrap();
+    }
+
+    #[test]
+    fn resolve_chain_walks_base_first() {
+        let (s, base) = tmp_store();
+        seal(&s, 1, CkptKind::Base, 0);
+        seal(&s, 2, CkptKind::Delta, 1);
+        seal(&s, 3, CkptKind::Delta, 2);
+        let chain = resolve_chain(&s, "ctr", 3).unwrap();
+        let versions: Vec<u64> = chain.iter().map(|m| m.version).collect();
+        assert_eq!(versions, vec![1, 2, 3]);
+        assert_eq!(chain[0].kind, CkptKind::Base);
+        // A base resolves to itself.
+        assert_eq!(resolve_chain(&s, "ctr", 1).unwrap().len(), 1);
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn resolve_chain_rejects_hostile_lineage() {
+        let (s, base) = tmp_store();
+        // Missing parent manifest.
+        seal(&s, 5, CkptKind::Delta, 4);
+        assert!(resolve_chain(&s, "ctr", 5).is_err());
+        // Self-parent (cycle of one).
+        let mut m = manifest(7, CkptKind::Delta, 7);
+        m.parent = 7;
+        s.save_chunk("ctr", 7, 0, CkptKind::Delta, b"x").unwrap();
+        s.write_manifest(&m).unwrap();
+        assert!(resolve_chain(&s, "ctr", 7).is_err());
+        // Parent newer than child.
+        seal(&s, 9, CkptKind::Base, 0);
+        seal(&s, 8, CkptKind::Delta, 9);
+        assert!(resolve_chain(&s, "ctr", 8).is_err());
+        // Delta claiming parent 0.
+        seal(&s, 11, CkptKind::Delta, 0);
+        assert!(resolve_chain(&s, "ctr", 11).is_err());
+        // Manifest whose recorded version disagrees with its directory.
+        let mut lying = manifest(13, CkptKind::Base, 0);
+        lying.version = 12;
+        let dir = base.join("local/ctr/v0000000013");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), {
+            // Reuse the store writer for v12, then move it under v13.
+            s.write_manifest(&lying).unwrap();
+            std::fs::read(base.join("local/ctr/v0000000012/manifest.json")).unwrap()
+        })
+        .unwrap();
+        assert!(resolve_chain(&s, "ctr", 13).is_err());
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn plan_next_alternates_bases_and_deltas() {
+        let (s, base) = tmp_store();
+        let policy = IncrPolicy { base_every: 3, keep_chains: 2 };
+        assert_eq!(plan_next(&s, "ctr", &policy).0, CkptKind::Base);
+        seal(&s, 1, CkptKind::Base, 0);
+        let (kind, tip) = plan_next(&s, "ctr", &policy);
+        assert_eq!(kind, CkptKind::Delta);
+        assert_eq!(tip.unwrap().version, 1);
+        seal(&s, 2, CkptKind::Delta, 1);
+        let (kind, tip) = plan_next(&s, "ctr", &policy);
+        assert_eq!(kind, CkptKind::Delta);
+        assert_eq!(tip.unwrap().version, 2);
+        seal(&s, 3, CkptKind::Delta, 2);
+        // Chain is full (3 chunks): reseed.
+        assert_eq!(plan_next(&s, "ctr", &policy).0, CkptKind::Base);
+        // Corrupt lineage also reseeds instead of erroring.
+        seal(&s, 4, CkptKind::Delta, 99);
+        assert_eq!(plan_next(&s, "ctr", &policy).0, CkptKind::Base);
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn gc_keeps_whole_chains() {
+        let (s, base) = tmp_store();
+        // Two full chains + the start of a third.
+        seal(&s, 1, CkptKind::Base, 0);
+        seal(&s, 2, CkptKind::Delta, 1);
+        seal(&s, 3, CkptKind::Base, 0);
+        seal(&s, 4, CkptKind::Delta, 3);
+        seal(&s, 5, CkptKind::Base, 0);
+        let removed = gc_chains(&s, "ctr", 2).unwrap();
+        assert_eq!(removed, vec![1, 2]);
+        assert_eq!(s.list_versions("ctr"), vec![3, 4, 5]);
+        // Chains still resolve after GC.
+        assert!(resolve_chain(&s, "ctr", 4).is_ok());
+        // Keeping more chains than exist removes nothing.
+        assert!(gc_chains(&s, "ctr", 5).unwrap().is_empty());
+        std::fs::remove_dir_all(base).ok();
+    }
+}

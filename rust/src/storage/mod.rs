@@ -5,17 +5,50 @@
 //! directory roots — the remote root stands in for HDFS/object storage and
 //! is replicated to asynchronously.
 //!
-//! Layout:  `<root>/<model>/v<version>/shard_<i>.ckpt` + `manifest.json`.
-//! Shard files are CRC-framed (`codec::frame`) so torn writes are detected;
-//! writes go through a temp file + atomic rename. The manifest records the
-//! external-queue offsets at checkpoint time — the hook the domino
-//! downgrade uses to resume streaming after a rollback (§4.3.2).
+//! Layout:  `<root>/<model>/v<version>/shard_<i>.ckpt` + `manifest.json`
+//! (delta versions store `shard_<i>.delta` instead — see
+//! [`incremental`]). Shard files are CRC-framed (`codec::frame`) so torn
+//! writes are detected; writes go through a temp file + atomic rename.
+//! The manifest records the external-queue offsets at checkpoint time —
+//! the hook the domino downgrade uses to resume streaming after a
+//! rollback (§4.3.2) — and, for incremental chains, the parent version,
+//! per-shard epoch cuts and WAL offsets the recovery path replays from.
+
+pub mod incremental;
 
 use std::path::{Path, PathBuf};
 
 use crate::codec::{frame, unframe};
 use crate::util::json::Json;
 use crate::{Error, Result};
+
+/// What a checkpoint version's shard chunks contain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CkptKind {
+    /// Full shard snapshots — a recovery chain starts here.
+    Base,
+    /// Dirty-epoch delta chunks against the manifest's `parent` version.
+    Delta,
+}
+
+impl CkptKind {
+    /// Manifest string form.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CkptKind::Base => "base",
+            CkptKind::Delta => "delta",
+        }
+    }
+
+    /// Parse the manifest string form.
+    pub fn parse(s: &str) -> Result<CkptKind> {
+        match s {
+            "base" => Ok(CkptKind::Base),
+            "delta" => Ok(CkptKind::Delta),
+            other => Err(Error::Checkpoint(format!("unknown checkpoint kind {other}"))),
+        }
+    }
+}
 
 /// Per-checkpoint metadata.
 #[derive(Debug, Clone, PartialEq)]
@@ -29,20 +62,34 @@ pub struct CkptManifest {
     /// Business metric snapshot (streaming AUC) — the downgrade's "optimal
     /// index version strategy" picks by this.
     pub metric: f64,
+    /// Base (full shard snapshots) or delta (dirty-epoch chunks).
+    pub kind: CkptKind,
+    /// Previous version in the chain (0 = none; only deltas have one).
+    pub parent: u64,
+    /// Per-shard dirty-epoch cut at seal time, in shard save order. A
+    /// delta at child version collects rows stamped `> epochs[i]` of its
+    /// parent; recovery re-arms shard `i`'s write epoch to
+    /// `epochs[i] + 1`.
+    pub epochs: Vec<u64>,
+    /// Write-ahead-log offset per WAL partition at seal time — recovery
+    /// replays the WAL tail from here (empty when no WAL is attached).
+    pub wal_offsets: Vec<u64>,
 }
 
 impl CkptManifest {
     fn to_json(&self) -> Json {
+        let nums = |v: &[u64]| Json::Arr(v.iter().map(|o| Json::Num(*o as f64)).collect());
         let mut m = std::collections::BTreeMap::new();
         m.insert("model".into(), Json::Str(self.model.clone()));
         m.insert("version".into(), Json::Num(self.version as f64));
         m.insert("created_ms".into(), Json::Num(self.created_ms as f64));
         m.insert("num_shards".into(), Json::Num(self.num_shards as f64));
-        m.insert(
-            "queue_offsets".into(),
-            Json::Arr(self.queue_offsets.iter().map(|o| Json::Num(*o as f64)).collect()),
-        );
+        m.insert("queue_offsets".into(), nums(&self.queue_offsets));
         m.insert("metric".into(), Json::Num(self.metric));
+        m.insert("kind".into(), Json::Str(self.kind.as_str().to_string()));
+        m.insert("parent".into(), Json::Num(self.parent as f64));
+        m.insert("epochs".into(), nums(&self.epochs));
+        m.insert("wal_offsets".into(), nums(&self.wal_offsets));
         Json::Obj(m)
     }
 
@@ -50,6 +97,20 @@ impl CkptManifest {
         let field = |k: &str| {
             j.get(k)
                 .ok_or_else(|| Error::Checkpoint(format!("manifest missing {k}")))
+        };
+        let nums = |k: &str| -> Vec<u64> {
+            j.get(k)
+                .and_then(|v| v.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .map(|v| v.as_i64().unwrap_or(0) as u64)
+                .collect()
+        };
+        // Chain fields default to a standalone base so pre-incremental
+        // manifests keep loading.
+        let kind = match j.get("kind").and_then(|v| v.as_str()) {
+            Some(s) => CkptKind::parse(s)?,
+            None => CkptKind::Base,
         };
         Ok(CkptManifest {
             model: field("model")?.as_str().unwrap_or_default().to_string(),
@@ -63,6 +124,10 @@ impl CkptManifest {
                 .map(|v| v.as_i64().unwrap_or(0) as u64)
                 .collect(),
             metric: field("metric")?.as_f64().unwrap_or(0.0),
+            kind,
+            parent: j.get("parent").and_then(|v| v.as_i64()).unwrap_or(0) as u64,
+            epochs: nums("epochs"),
+            wal_offsets: nums("wal_offsets"),
         })
     }
 }
@@ -83,13 +148,29 @@ impl CheckpointStore {
         root.join(model).join(format!("v{version:010}"))
     }
 
-    fn shard_path(root: &Path, model: &str, version: u64, shard: u32) -> PathBuf {
-        Self::version_dir(root, model, version).join(format!("shard_{shard}.ckpt"))
+    fn shard_path(root: &Path, model: &str, version: u64, shard: u32, kind: CkptKind) -> PathBuf {
+        let ext = match kind {
+            CkptKind::Base => "ckpt",
+            CkptKind::Delta => "delta",
+        };
+        Self::version_dir(root, model, version).join(format!("shard_{shard}.{ext}"))
     }
 
-    /// Atomically write one shard's serialized state.
+    /// Atomically write one shard's full-snapshot chunk (base kind).
     pub fn save_shard(&self, model: &str, version: u64, shard: u32, data: &[u8]) -> Result<()> {
-        let path = Self::shard_path(&self.local, model, version, shard);
+        self.save_chunk(model, version, shard, CkptKind::Base, data)
+    }
+
+    /// Atomically write one shard's chunk of the given kind.
+    pub fn save_chunk(
+        &self,
+        model: &str,
+        version: u64,
+        shard: u32,
+        kind: CkptKind,
+        data: &[u8],
+    ) -> Result<()> {
+        let path = Self::shard_path(&self.local, model, version, shard, kind);
         std::fs::create_dir_all(path.parent().unwrap())?;
         let tmp = path.with_extension("tmp");
         std::fs::write(&tmp, frame(data))?;
@@ -97,17 +178,36 @@ impl CheckpointStore {
         Ok(())
     }
 
-    /// Load one shard's state (CRC-verified).
+    /// Load one shard's full-snapshot chunk (CRC-verified).
     pub fn load_shard(&self, model: &str, version: u64, shard: u32) -> Result<Vec<u8>> {
-        self.load_shard_from(&self.local, model, version, shard)
+        self.load_chunk(model, version, shard, CkptKind::Base)
+    }
+
+    /// Load one shard's chunk of the given kind (CRC-verified, remote
+    /// fallback).
+    pub fn load_chunk(
+        &self,
+        model: &str,
+        version: u64,
+        shard: u32,
+        kind: CkptKind,
+    ) -> Result<Vec<u8>> {
+        self.load_chunk_from(&self.local, model, version, shard, kind)
             .or_else(|e| match &self.remote {
-                Some(remote) => self.load_shard_from(remote, model, version, shard),
+                Some(remote) => self.load_chunk_from(remote, model, version, shard, kind),
                 None => Err(e),
             })
     }
 
-    fn load_shard_from(&self, root: &Path, model: &str, version: u64, shard: u32) -> Result<Vec<u8>> {
-        let path = Self::shard_path(root, model, version, shard);
+    fn load_chunk_from(
+        &self,
+        root: &Path,
+        model: &str,
+        version: u64,
+        shard: u32,
+        kind: CkptKind,
+    ) -> Result<Vec<u8>> {
+        let path = Self::shard_path(root, model, version, shard, kind);
         let bytes = std::fs::read(&path)
             .map_err(|e| Error::Checkpoint(format!("{}: {e}", path.display())))?;
         match unframe(&bytes)? {
@@ -193,6 +293,17 @@ impl CheckpointStore {
         Ok(removed)
     }
 
+    /// Delete one local version outright (chain-aware GC uses this; the
+    /// plain newest-N [`Self::gc_local`] would cut delta chains in half).
+    /// No-op if the version directory does not exist. Remote is untouched.
+    pub fn remove_local_version(&self, model: &str, version: u64) -> Result<()> {
+        let dir = Self::version_dir(&self.local, model, version);
+        if dir.exists() {
+            std::fs::remove_dir_all(dir)?;
+        }
+        Ok(())
+    }
+
     fn list_local_versions(&self, model: &str) -> Vec<u64> {
         let mut versions = Vec::new();
         let dir = self.local.join(model);
@@ -237,6 +348,10 @@ mod tests {
             num_shards: shards,
             queue_offsets: vec![10, 20],
             metric: 0.75,
+            kind: CkptKind::Base,
+            parent: 0,
+            epochs: vec![7],
+            wal_offsets: vec![1, 2],
         }
     }
 
@@ -319,6 +434,57 @@ mod tests {
         assert!(s.load_shard("nope", 1, 0).is_err());
         assert!(s.load_manifest("nope", 1).is_err());
         assert!(s.list_versions("nope").is_empty());
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn chain_manifest_fields_round_trip_and_default() {
+        let (s, base) = tmp_store(false);
+        let mut m = manifest(9, 2);
+        m.kind = CkptKind::Delta;
+        m.parent = 8;
+        m.epochs = vec![4, 5];
+        m.wal_offsets = vec![100, 200, 300];
+        s.write_manifest(&m).unwrap();
+        assert_eq!(s.load_manifest("ctr", 9).unwrap(), m);
+        // Pre-incremental manifests (no chain keys) load as a plain base.
+        let dir = base.join("local/ctr/v0000000003");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"model":"ctr","version":3,"created_ms":1,"num_shards":1,"queue_offsets":[5],"metric":0.5}"#,
+        )
+        .unwrap();
+        let old = s.load_manifest("ctr", 3).unwrap();
+        assert_eq!(old.kind, CkptKind::Base);
+        assert_eq!(old.parent, 0);
+        assert!(old.epochs.is_empty() && old.wal_offsets.is_empty());
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn delta_chunks_live_beside_base_chunks() {
+        let (s, base) = tmp_store(false);
+        s.save_chunk("ctr", 2, 0, CkptKind::Delta, b"delta-bytes").unwrap();
+        assert_eq!(s.load_chunk("ctr", 2, 0, CkptKind::Delta).unwrap(), b"delta-bytes");
+        // The base chunk of the same version is a distinct artifact.
+        assert!(s.load_shard("ctr", 2, 0).is_err());
+        s.save_shard("ctr", 2, 0, b"base-bytes").unwrap();
+        assert_eq!(s.load_shard("ctr", 2, 0).unwrap(), b"base-bytes");
+        assert_eq!(s.load_chunk("ctr", 2, 0, CkptKind::Delta).unwrap(), b"delta-bytes");
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn remove_local_version_only_touches_that_version() {
+        let (s, base) = tmp_store(false);
+        for v in 1..=3 {
+            s.save_shard("ctr", v, 0, b"d").unwrap();
+            s.write_manifest(&manifest(v, 1)).unwrap();
+        }
+        s.remove_local_version("ctr", 2).unwrap();
+        s.remove_local_version("ctr", 99).unwrap(); // absent: no-op
+        assert_eq!(s.list_versions("ctr"), vec![1, 3]);
         std::fs::remove_dir_all(base).ok();
     }
 

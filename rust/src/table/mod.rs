@@ -26,6 +26,7 @@ use crate::optim::Optimizer;
 use crate::util::hash::{fxhash64, FxHashMap};
 use crate::util::ThreadPool;
 use crate::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 /// Stripe count used when none is configured (`WEIPS_TABLE_STRIPES`
@@ -68,6 +69,22 @@ pub struct Row {
     pub values: Box<[f32]>,
     pub last_access_ms: u64,
     pub updates: u32,
+    /// Checkpoint epoch of the last mutation (see
+    /// [`StripedSparseTable::set_write_epoch`]). 0 = clean (restored from
+    /// a checkpoint and untouched since). Not persisted in snapshots.
+    pub epoch: u64,
+}
+
+/// One row captured by a dirty-epoch delta collection
+/// ([`StripedSparseTable::collect_delta`]): the full row plus the
+/// metadata an incremental chunk must carry so recovery reproduces the
+/// uninterrupted state byte-for-byte.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeltaRow {
+    pub id: u64,
+    pub last_access_ms: u64,
+    pub updates: u32,
+    pub values: Vec<f32>,
 }
 
 /// Sparse parameter table (one shard's slice of one matrix).
@@ -184,6 +201,7 @@ impl SparseTable {
                         values: vec![0.0; width].into_boxed_slice(),
                         last_access_ms: now_ms,
                         updates: 0,
+                        epoch: 0,
                     },
                 );
             }
@@ -217,6 +235,7 @@ impl SparseTable {
                         values: vec![0.0; width].into_boxed_slice(),
                         last_access_ms: now_ms,
                         updates: 0,
+                        epoch: 0,
                     },
                 );
             }
@@ -286,6 +305,7 @@ impl SparseTable {
                         values: values.to_vec().into_boxed_slice(),
                         last_access_ms: now_ms,
                         updates: 0,
+                        epoch: 0,
                     },
                 );
             }
@@ -370,7 +390,7 @@ impl SparseTable {
             }
             self.rows.insert(
                 id,
-                Row { values: values.into_boxed_slice(), last_access_ms, updates },
+                Row { values: values.into_boxed_slice(), last_access_ms, updates, epoch: 0 },
             );
         }
         Ok(())
@@ -408,11 +428,22 @@ pub fn aggregate_grads(ids: &[u64], grads: &[f32], dim: usize) -> (Vec<u64>, Vec
 
 /// One lock stripe: an independent slice of the id space with its own row
 /// map, probation (entry-filter) map and implicit expire clock (the
-/// per-row `last_access_ms` it guards).
+/// per-row `last_access_ms` it guards). For incremental durability each
+/// stripe also keeps its tombstones (`graves`: ids deleted since the last
+/// pruned epoch) and the highest epoch any mutation in the stripe has
+/// stamped, so delta collection can skip clean stripes without touching
+/// their rows.
 #[derive(Default)]
 struct Stripe {
     rows: FxHashMap<u64, Row>,
     probation: FxHashMap<u64, u32>,
+    /// id -> epoch at which the row was deleted (cleared on re-insert and
+    /// by [`StripedSparseTable::prune_graves`]).
+    graves: FxHashMap<u64, u64>,
+    /// Highest epoch stamped by any mutation (row or grave) in this
+    /// stripe; lets [`StripedSparseTable::collect_delta`] skip stripes
+    /// untouched since the cut.
+    max_epoch: u64,
 }
 
 /// Sparse parameter table partitioned into N lock stripes.
@@ -430,6 +461,18 @@ pub struct StripedSparseTable {
     optimizer: Arc<dyn Optimizer>,
     entry_threshold: u32,
     stripes: Vec<RwLock<Stripe>>,
+    /// Current checkpoint write epoch: every mutation stamps the rows it
+    /// touches with this value (loaded *inside* the stripe's write-lock
+    /// section, so an epoch cut that happens-before a stripe scan is
+    /// observed by every later writer of that stripe — see DESIGN.md §5).
+    /// The shard owner bumps it at every checkpoint/WAL cut via
+    /// [`Self::set_write_epoch`]; standalone tables stay at the initial 1.
+    write_epoch: AtomicU64,
+    /// Record tombstones on delete/expire (on by default). Deployments
+    /// with no incremental consumer — full checkpoint mode, scheduler-less
+    /// serving — turn this off so expired ids free *all* their memory
+    /// instead of leaving grave entries no prune pass will ever drop.
+    track_graves: std::sync::atomic::AtomicBool,
 }
 
 impl StripedSparseTable {
@@ -449,7 +492,30 @@ impl StripedSparseTable {
             optimizer,
             entry_threshold: entry_threshold.max(1),
             stripes: (0..stripes).map(|_| RwLock::new(Stripe::default())).collect(),
+            write_epoch: AtomicU64::new(1),
+            track_graves: std::sync::atomic::AtomicBool::new(true),
         }
+    }
+
+    /// Enable/disable tombstone recording (see the field docs; delta
+    /// collection still works when off, it just cannot propagate deletes).
+    pub fn set_grave_tracking(&self, on: bool) {
+        self.track_graves.store(on, Ordering::Relaxed);
+    }
+
+    /// Current write epoch (the value mutations stamp touched rows with).
+    pub fn write_epoch(&self) -> u64 {
+        self.write_epoch.load(Ordering::SeqCst)
+    }
+
+    /// Set the write epoch. The shard owner calls this at every
+    /// checkpoint / WAL cut (all of a shard's tables move in lockstep):
+    /// after the cut, a delta collection with `since = old epoch - 1`
+    /// captures exactly the rows mutated since the previous cut, and no
+    /// later mutation can be missed by the *next* delta because writers
+    /// re-load the epoch under each stripe's write lock.
+    pub fn set_write_epoch(&self, epoch: u64) {
+        self.write_epoch.store(epoch, Ordering::SeqCst);
     }
 
     /// Table name.
@@ -584,6 +650,10 @@ impl StripedSparseTable {
                 continue;
             }
             let mut s = self.stripes[stripe].write().unwrap();
+            // Loaded under the stripe lock so an epoch cut ordered before
+            // this lock acquisition is always observed (dirty tracking).
+            let epoch = self.write_epoch.load(Ordering::Relaxed);
+            let before = touched.len();
             for (&pos, &id) in positions.iter().zip(&sids) {
                 if !s.rows.contains_key(&id) {
                     let seen = s.probation.entry(id).or_insert(0);
@@ -592,21 +662,27 @@ impl StripedSparseTable {
                         continue;
                     }
                     s.probation.remove(&id);
+                    s.graves.remove(&id);
                     s.rows.insert(
                         id,
                         Row {
                             values: vec![0.0; width].into_boxed_slice(),
                             last_access_ms: now_ms,
                             updates: 0,
+                            epoch,
                         },
                     );
                 }
                 let row = s.rows.get_mut(&id).unwrap();
                 row.updates += 1;
                 row.last_access_ms = now_ms;
+                row.epoch = epoch;
                 self.optimizer
                     .apply(&mut row.values, &grads[pos * dim..(pos + 1) * dim], dim, row.updates);
                 touched.push(id);
+            }
+            if touched.len() > before {
+                s.max_epoch = s.max_epoch.max(epoch);
             }
         }
         touched
@@ -650,6 +726,7 @@ impl StripedSparseTable {
                 continue;
             }
             let mut s = self.stripes[stripe].write().unwrap();
+            let epoch = self.write_epoch.load(Ordering::Relaxed);
             let mut ready: Vec<(usize, u64)> = Vec::with_capacity(sids.len());
             for (&pos, &id) in positions.iter().zip(&sids) {
                 if !s.rows.contains_key(&id) {
@@ -659,12 +736,14 @@ impl StripedSparseTable {
                         continue;
                     }
                     s.probation.remove(&id);
+                    s.graves.remove(&id);
                     s.rows.insert(
                         id,
                         Row {
                             values: vec![0.0; width].into_boxed_slice(),
                             last_access_ms: now_ms,
                             updates: 0,
+                            epoch,
                         },
                     );
                 }
@@ -674,12 +753,14 @@ impl StripedSparseTable {
             if k == 0 {
                 continue;
             }
+            s.max_epoch = s.max_epoch.max(epoch);
             if k < min_kernel_rows.max(1) {
                 // Below the per-invocation crossover: scalar path.
                 for (pos, id) in &ready {
                     let row = s.rows.get_mut(id).unwrap();
                     row.updates += 1;
                     row.last_access_ms = now_ms;
+                    row.epoch = epoch;
                     self.optimizer.apply(
                         &mut row.values,
                         &grads[pos * dim..(pos + 1) * dim],
@@ -708,6 +789,7 @@ impl StripedSparseTable {
                 row.values[2 * dim..].copy_from_slice(&w[i * dim..(i + 1) * dim]);
                 row.updates += 1;
                 row.last_access_ms = now_ms;
+                row.epoch = epoch;
                 touched.push(*id);
             }
             kernel_rows += k as u64;
@@ -735,6 +817,8 @@ impl StripedSparseTable {
                 continue;
             }
             let mut s = self.stripes[stripe].write().unwrap();
+            let epoch = self.write_epoch.load(Ordering::Relaxed);
+            s.max_epoch = s.max_epoch.max(epoch);
             for &(id, op) in ops {
                 debug_assert_eq!(self.stripe_of(id), stripe, "op grouped to wrong stripe");
                 match op {
@@ -749,10 +833,12 @@ impl StripedSparseTable {
                             }
                             continue;
                         }
+                        s.graves.remove(&id);
                         match s.rows.get_mut(&id) {
                             Some(row) => {
                                 row.values.copy_from_slice(values);
                                 row.last_access_ms = now_ms;
+                                row.epoch = epoch;
                             }
                             None => {
                                 s.rows.insert(
@@ -761,6 +847,7 @@ impl StripedSparseTable {
                                         values: values.to_vec().into_boxed_slice(),
                                         last_access_ms: now_ms,
                                         updates: 0,
+                                        epoch,
                                     },
                                 );
                             }
@@ -770,6 +857,9 @@ impl StripedSparseTable {
                     None => {
                         s.probation.remove(&id);
                         if s.rows.remove(&id).is_some() {
+                            if self.track_graves.load(Ordering::Relaxed) {
+                                s.graves.insert(id, epoch);
+                            }
                             touched += 1;
                         }
                     }
@@ -793,10 +883,14 @@ impl StripedSparseTable {
             )));
         }
         let mut s = self.stripes[self.stripe_of(id)].write().unwrap();
+        let epoch = self.write_epoch.load(Ordering::Relaxed);
+        s.max_epoch = s.max_epoch.max(epoch);
+        s.graves.remove(&id);
         match s.rows.get_mut(&id) {
             Some(row) => {
                 row.values.copy_from_slice(values);
                 row.last_access_ms = now_ms;
+                row.epoch = epoch;
             }
             None => {
                 s.rows.insert(
@@ -805,6 +899,7 @@ impl StripedSparseTable {
                         values: values.to_vec().into_boxed_slice(),
                         last_access_ms: now_ms,
                         updates: 0,
+                        epoch,
                     },
                 );
             }
@@ -812,11 +907,53 @@ impl StripedSparseTable {
         Ok(())
     }
 
-    /// Remove a row; true if it existed.
+    /// Overwrite or insert a row with explicit metadata — the incremental
+    /// chunk restore path ([`Self::decode_delta_rows`], WAL replay).
+    /// Bypasses the entry filter and stamps `epoch` verbatim: chain
+    /// restores pass 0 (clean), WAL replay passes the current write epoch
+    /// so replayed rows are captured by the next delta.
+    pub fn restore_row(
+        &self,
+        id: u64,
+        values: &[f32],
+        last_access_ms: u64,
+        updates: u32,
+        epoch: u64,
+    ) -> Result<()> {
+        if values.len() != self.row_width() {
+            return Err(Error::Checkpoint(format!(
+                "row width {} != {} for table {}",
+                values.len(),
+                self.row_width(),
+                self.name
+            )));
+        }
+        let mut s = self.stripes[self.stripe_of(id)].write().unwrap();
+        s.max_epoch = s.max_epoch.max(epoch);
+        s.probation.remove(&id);
+        s.graves.remove(&id);
+        s.rows.insert(
+            id,
+            Row { values: values.to_vec().into_boxed_slice(), last_access_ms, updates, epoch },
+        );
+        Ok(())
+    }
+
+    /// Remove a row; true if it existed. Deletions leave a tombstone so
+    /// delta chunks propagate them (pruned by [`Self::prune_graves`]).
     pub fn delete(&self, id: u64) -> bool {
         let mut s = self.stripes[self.stripe_of(id)].write().unwrap();
+        let epoch = self.write_epoch.load(Ordering::Relaxed);
         s.probation.remove(&id);
-        s.rows.remove(&id).is_some()
+        if s.rows.remove(&id).is_some() {
+            if self.track_graves.load(Ordering::Relaxed) {
+                s.graves.insert(id, epoch);
+                s.max_epoch = s.max_epoch.max(epoch);
+            }
+            true
+        } else {
+            false
+        }
     }
 
     /// Feature expire: evict rows untouched for `ttl_ms`, one stripe at a
@@ -832,8 +969,12 @@ impl StripedSparseTable {
     /// Evicted ids come back merged in stripe order regardless of pool
     /// size, so downstream sync-delete recording stays deterministic.
     pub fn expire_pooled(&self, now_ms: u64, ttl_ms: u64, pool: Option<&ThreadPool>) -> Vec<u64> {
+        let write_epoch = &self.write_epoch;
+        let track_graves = &self.track_graves;
         let expire_stripe = |stripe: &RwLock<Stripe>| -> Vec<u64> {
             let mut s = stripe.write().unwrap();
+            let epoch = write_epoch.load(Ordering::Relaxed);
+            let track = track_graves.load(Ordering::Relaxed);
             let stripe_dead: Vec<u64> = s
                 .rows
                 .iter()
@@ -842,6 +983,12 @@ impl StripedSparseTable {
                 .collect();
             for id in &stripe_dead {
                 s.rows.remove(id);
+                if track {
+                    s.graves.insert(*id, epoch);
+                }
+            }
+            if track && !stripe_dead.is_empty() {
+                s.max_epoch = s.max_epoch.max(epoch);
             }
             s.probation.clear();
             stripe_dead
@@ -953,6 +1100,144 @@ impl StripedSparseTable {
         out
     }
 
+    /// Collect the dirty set since epoch `since`: full rows whose last
+    /// mutation epoch is `> since`, plus tombstones for rows deleted
+    /// after it. Scans one stripe at a time under that stripe's *read*
+    /// lock only — a delta collection never blocks writers on other
+    /// stripes (the "training never globally stalls" property of
+    /// incremental checkpoints). An id appears in at most one of the two
+    /// lists (re-inserting a deleted row clears its grave). Results are
+    /// sorted by id, so downstream chunk bytes are deterministic for any
+    /// stripe count.
+    pub fn collect_delta(&self, since: u64) -> (Vec<DeltaRow>, Vec<u64>) {
+        let mut upserts = Vec::new();
+        let mut deletes = Vec::new();
+        for stripe in &self.stripes {
+            let s = stripe.read().unwrap();
+            if s.max_epoch <= since {
+                continue;
+            }
+            for (id, row) in &s.rows {
+                if row.epoch > since {
+                    upserts.push(DeltaRow {
+                        id: *id,
+                        last_access_ms: row.last_access_ms,
+                        updates: row.updates,
+                        values: row.values.to_vec(),
+                    });
+                }
+            }
+            for (id, &epoch) in &s.graves {
+                if epoch > since {
+                    deletes.push(*id);
+                }
+            }
+        }
+        upserts.sort_unstable_by_key(|r| r.id);
+        deletes.sort_unstable();
+        (upserts, deletes)
+    }
+
+    /// (dirty rows, tombstones) since `since` — checkpoint sizing and the
+    /// recovery bench's dirty-set scaling measurements.
+    pub fn dirty_counts(&self, since: u64) -> (usize, usize) {
+        let mut rows = 0;
+        let mut graves = 0;
+        for stripe in &self.stripes {
+            let s = stripe.read().unwrap();
+            if s.max_epoch <= since {
+                continue;
+            }
+            rows += s.rows.values().filter(|r| r.epoch > since).count();
+            graves += s.graves.values().filter(|&&e| e > since).count();
+        }
+        (rows, graves)
+    }
+
+    /// Drop tombstones stamped `<= through`. Called after the checkpoint
+    /// that sealed them: every future delta's `since` is at least
+    /// `through`, so those graves can never be collected again.
+    pub fn prune_graves(&self, through: u64) {
+        for stripe in &self.stripes {
+            let mut s = stripe.write().unwrap();
+            s.graves.retain(|_, e| *e > through);
+        }
+    }
+
+    /// Serialize the dirty set since `since` as one table section of a
+    /// delta chunk: schema header, full dirty rows (with metadata, so a
+    /// restore is byte-identical to the uninterrupted state), then
+    /// tombstone ids. Returns (upserts, deletes) written.
+    pub fn encode_delta_rows(&self, since: u64, w: &mut Writer) -> (usize, usize) {
+        let (upserts, deletes) = self.collect_delta(since);
+        w.put_str(&self.name);
+        w.put_u32(self.dim as u32);
+        w.put_u32(self.row_width() as u32);
+        w.put_varint(upserts.len() as u64);
+        for row in &upserts {
+            w.put_varint(row.id);
+            w.put_varint(row.last_access_ms);
+            w.put_u32(row.updates);
+            w.put_f32_slice(&row.values);
+        }
+        w.put_varint(deletes.len() as u64);
+        for id in &deletes {
+            w.put_varint(*id);
+        }
+        (upserts.len(), deletes.len())
+    }
+
+    /// Apply one table section written by [`Self::encode_delta_rows`].
+    /// `stamp` is the epoch applied rows carry afterwards: chain restores
+    /// pass 0 (clean — the restored state is exactly what the chunk's
+    /// checkpoint already covers), WAL replay passes the current write
+    /// epoch so replayed rows are dirty again and the next delta captures
+    /// them. Returns (rows upserted, rows deleted).
+    pub fn decode_delta_rows(&self, r: &mut Reader, stamp: u64) -> Result<(usize, usize)> {
+        let name = r.get_str()?;
+        if name != self.name {
+            return Err(Error::Checkpoint(format!("delta table {name} != {}", self.name)));
+        }
+        let dim = r.get_u32()? as usize;
+        let width = r.get_u32()? as usize;
+        if dim != self.dim || width != self.row_width() {
+            return Err(Error::Checkpoint(format!(
+                "table {} delta schema mismatch: dim {dim}/{} width {width}/{}",
+                self.name,
+                self.dim,
+                self.row_width()
+            )));
+        }
+        let n_upserts = r.get_varint()? as usize;
+        for _ in 0..n_upserts {
+            let id = r.get_varint()?;
+            let last_access_ms = r.get_varint()?;
+            let updates = r.get_u32()?;
+            let values = r.get_f32_slice()?;
+            self.restore_row(id, &values, last_access_ms, updates, stamp)?;
+        }
+        let n_deletes = r.get_varint()? as usize;
+        let mut deleted = 0;
+        for _ in 0..n_deletes {
+            let id = r.get_varint()?;
+            let mut s = self.stripes[self.stripe_of(id)].write().unwrap();
+            s.probation.remove(&id);
+            if s.rows.remove(&id).is_some() {
+                deleted += 1;
+            }
+            // Tombstones inherit `stamp` exactly like upserts: a chain
+            // restore (stamp 0) must not plant far-future graves that
+            // every later delta re-collects until the epoch counter
+            // catches up; a WAL replay (stamp = live epoch) must leave
+            // one so the next sealed chunk propagates the delete.
+            if stamp > 0 && self.track_graves.load(Ordering::Relaxed) {
+                s.graves.insert(id, stamp);
+                s.max_epoch = s.max_epoch.max(stamp);
+            }
+        }
+        Ok((n_upserts, deleted))
+    }
+
     /// Serialize every row (checkpoint shard payload). Byte-compatible
     /// with [`SparseTable::encode_rows`], but **deterministic**: rows are
     /// emitted in ascending id order regardless of stripe count, so the
@@ -997,6 +1282,10 @@ impl StripedSparseTable {
         for g in guards.iter_mut() {
             g.rows.clear();
             g.probation.clear();
+            // A full restore replaces everything: restored rows are clean
+            // (epoch 0) and pre-restore tombstones are meaningless.
+            g.graves.clear();
+            g.max_epoch = 0;
         }
         for _ in 0..count {
             let id = r.get_varint()?;
@@ -1011,7 +1300,7 @@ impl StripedSparseTable {
             }
             guards[self.stripe_of(id)].rows.insert(
                 id,
-                Row { values: values.into_boxed_slice(), last_access_ms, updates },
+                Row { values: values.into_boxed_slice(), last_access_ms, updates, epoch: 0 },
             );
         }
         Ok(())
@@ -1708,5 +1997,133 @@ mod tests {
                 "fallback id {id}"
             );
         }
+    }
+
+    // -- dirty-epoch tracking -------------------------------------------------
+
+    #[test]
+    fn epoch_delta_tracks_dirty_rows_and_tombstones() {
+        let t = striped(1, 8);
+        let ids: Vec<u64> = (0..100).collect();
+        t.apply_batch(&ids, &vec![1.0f32; 200], 10);
+        // Everything is dirty relative to epoch 0 (tables start at 1).
+        let (up, del) = t.collect_delta(0);
+        assert_eq!(up.len(), 100);
+        assert!(del.is_empty());
+        assert_eq!(t.dirty_counts(0), (100, 0));
+        // Cut: nothing is dirty since epoch 1 any more.
+        t.set_write_epoch(2);
+        assert_eq!(t.dirty_counts(1), (0, 0));
+        // Touch two rows and delete one: exactly those collect.
+        t.apply_batch(&[3, 5], &[0.5, 0.5, 0.5, 0.5], 20);
+        assert!(t.delete(7));
+        let (up, del) = t.collect_delta(1);
+        assert_eq!(up.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 5]);
+        assert_eq!(del, vec![7]);
+        // Row metadata travels with the delta.
+        assert!(up.iter().all(|r| r.updates == 2 && r.last_access_ms == 20));
+        // Re-inserting a deleted id clears its tombstone.
+        t.apply_batch(&[7], &[1.0, 1.0], 30);
+        let (up, del) = t.collect_delta(1);
+        assert_eq!(up.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 5, 7]);
+        assert!(del.is_empty());
+        // Prune drops sealed tombstones, keeps newer ones.
+        t.delete(5);
+        t.set_write_epoch(3);
+        t.delete(3);
+        t.prune_graves(2);
+        let (up, del) = t.collect_delta(2);
+        assert!(up.is_empty());
+        assert_eq!(del, vec![3]);
+    }
+
+    #[test]
+    fn delta_round_trip_restores_identical_bytes() {
+        let src = striped(1, 4);
+        let ids: Vec<u64> = (0..50).collect();
+        src.apply_batch(&ids, &vec![1.0f32; 100], 11);
+        // Bootstrap the destination from a full snapshot (the base).
+        let mut w = Writer::new();
+        src.encode_rows(&mut w);
+        let dst = striped(1, 16); // different stripe count on purpose
+        dst.decode_rows(&mut Reader::new(&w.into_bytes())).unwrap();
+        // Post-cut mutations: two updates and a delete.
+        src.set_write_epoch(2);
+        src.apply_batch(&[1, 2], &[2.0, 2.0, 2.0, 2.0], 22);
+        src.delete(4);
+        let mut dw = Writer::new();
+        let (ups, dels) = src.encode_delta_rows(1, &mut dw);
+        assert_eq!((ups, dels), (2, 1));
+        let bytes = dw.into_bytes();
+        dst.decode_delta_rows(&mut Reader::new(&bytes), 0).unwrap();
+        // Full snapshots are now byte-identical (values *and* metadata).
+        let mut a = Writer::new();
+        src.encode_rows(&mut a);
+        let mut b = Writer::new();
+        dst.encode_rows(&mut b);
+        assert_eq!(a.into_bytes(), b.into_bytes(), "delta restore diverged from source");
+        // Hostile input: a truncated delta section errors, never panics.
+        let cut = &bytes[..bytes.len() / 2];
+        let fresh = striped(1, 4);
+        assert!(fresh.decode_delta_rows(&mut Reader::new(cut), 0).is_err());
+        // Schema mismatch is rejected.
+        let wrong = StripedSparseTable::new(
+            "w",
+            4,
+            Arc::new(Ftrl::new(FtrlHyper::default())),
+            1,
+            4,
+        );
+        assert!(wrong.decode_delta_rows(&mut Reader::new(&bytes), 0).is_err());
+    }
+
+    #[test]
+    fn delta_collection_is_deterministic_across_stripe_counts() {
+        let mut blobs = Vec::new();
+        for stripes in [1usize, 4, 32] {
+            let t = striped(1, stripes);
+            let ids: Vec<u64> = (0..300).collect();
+            t.apply_batch(&ids, &vec![0.25f32; 600], 5);
+            t.set_write_epoch(2);
+            t.apply_batch(&(0..40u64).collect::<Vec<_>>(), &vec![0.5f32; 80], 6);
+            t.delete(50);
+            t.delete(51);
+            let mut w = Writer::new();
+            t.encode_delta_rows(1, &mut w);
+            blobs.push(w.into_bytes());
+        }
+        for b in &blobs[1..] {
+            assert_eq!(b, &blobs[0], "delta bytes differ across stripe counts");
+        }
+    }
+
+    #[test]
+    fn grave_tracking_off_leaves_no_tombstones() {
+        let t = striped(1, 4);
+        t.apply_batch(&[1, 2], &[1.0, 1.0, 1.0, 1.0], 0);
+        t.set_grave_tracking(false);
+        assert!(t.delete(1));
+        assert_eq!(t.expire(10_000, 5_000), vec![2]);
+        assert_eq!(t.dirty_counts(0).1, 0, "graves recorded while tracking is off");
+        let (_, deletes) = t.collect_delta(0);
+        assert!(deletes.is_empty());
+    }
+
+    #[test]
+    fn restore_row_preserves_metadata_and_stamp() {
+        let t = striped(1, 4);
+        t.restore_row(9, &[1., 2., 3., 4., 5., 6.], 77, 13, 0).unwrap();
+        let row = t.get_row(9).unwrap();
+        assert_eq!(row.last_access_ms, 77);
+        assert_eq!(row.updates, 13);
+        assert_eq!(row.epoch, 0);
+        // Clean stamp: not collected as dirty.
+        assert_eq!(t.dirty_counts(0), (0, 0));
+        // Dirty stamp: collected.
+        t.restore_row(10, &[0.0; 6], 1, 1, 5).unwrap();
+        let (up, _) = t.collect_delta(4);
+        assert_eq!(up.iter().map(|r| r.id).collect::<Vec<_>>(), vec![10]);
+        // Width mismatch errors cleanly.
+        assert!(t.restore_row(11, &[0.0; 2], 0, 0, 0).is_err());
     }
 }

@@ -2,7 +2,7 @@
 //!
 //! Every `cargo bench` target uses this: timed closures with warmup,
 //! per-iteration latency histograms, and aligned table output so each
-//! bench prints the rows of the experiment it reproduces (DESIGN.md §5).
+//! bench prints the rows of the experiment it reproduces (DESIGN.md §7).
 
 use super::histogram::{fmt_ns, Histogram};
 

@@ -5,7 +5,7 @@
 //! via the strategy's `shrink` before panicking with the minimal
 //! counterexample and its reproduction seed. Used by the coordinator
 //! invariant suites (routing totality, queue idempotence, gather
-//! last-write-wins, codec round-trips — DESIGN.md §5).
+//! last-write-wins, codec round-trips — DESIGN.md §6).
 
 use super::rng::Rng;
 

@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Validate and promote a measured bench_sync_pipeline artifact to the
+committed regression baseline.
+
+Usage:
+  promote_bench_baseline.py <candidate.json> <baseline-path>
+      Validate <candidate.json> (a BENCH_sync_pipeline.json produced by a
+      trusted run) and install it at <baseline-path>, arming the
+      cross-run regression gate in tools/check_bench_regression.py.
+
+  promote_bench_baseline.py --provisional-check <baseline-path>
+      Exit 0 iff the committed baseline is still the provisional seed
+      (i.e. promotion is wanted). CI uses this to self-arm the gate on
+      the first trusted main-branch run.
+
+Validation before installing:
+  - parses as a JSON list of records;
+  - not itself provisional;
+  - every gated stage has its sequential reference case
+    (stripes=1, threads=0) — check_bench_regression normalizes by it;
+  - the intra-run invariants hold (determinism identical, coalescing
+    amortizes locks), so a broken run can never become the baseline.
+"""
+
+import json
+import sys
+
+sys.path.insert(0, __import__("os").path.dirname(__file__))
+from check_bench_regression import (  # noqa: E402
+    LATENCY_STAGES,
+    SEQ,
+    THROUGHPUT_STAGES,
+    by_case,
+    check_intra_run,
+)
+
+
+def is_provisional(records):
+    return any(r.get("stage") == "meta" and r.get("provisional") for r in records)
+
+
+def validate(candidate):
+    errors = check_intra_run(candidate)
+    if is_provisional(candidate):
+        errors.append("candidate is itself a provisional seed")
+    for stage in THROUGHPUT_STAGES + LATENCY_STAGES:
+        cases = by_case(candidate, stage)
+        if not cases:
+            errors.append(f"stage {stage}: no records")
+        elif SEQ not in cases:
+            errors.append(f"stage {stage}: sequential reference case {SEQ} missing")
+    return errors
+
+
+def main():
+    args = sys.argv[1:]
+    if len(args) == 2 and args[0] == "--provisional-check":
+        with open(args[1]) as f:
+            return 0 if is_provisional(json.load(f)) else 1
+    if len(args) != 2:
+        print(__doc__)
+        return 2
+    candidate_path, baseline_path = args
+    with open(candidate_path) as f:
+        candidate = json.load(f)
+    errors = validate(candidate)
+    if errors:
+        print(f"candidate {candidate_path} rejected ({len(errors)} issue(s)):")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    with open(baseline_path, "w") as f:
+        json.dump(candidate, f, indent=1)
+        f.write("\n")
+    print(f"promoted {candidate_path} -> {baseline_path} "
+          f"({len(candidate)} records); the regression gate is armed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
