@@ -1,0 +1,304 @@
+//! E11 — elastic resharding: live-migration pause vs slot count,
+//! catch-up convergence under concurrent pushes, and routing-epoch
+//! determinism. Artifact-free (runs everywhere); `--smoke` /
+//! `WEIPS_BENCH_SMOKE=1` shrinks sizes for the CI stage.
+//!
+//! Asserted invariants (CI fails if they break):
+//! - a migrated cluster's logical state is **byte-identical** to a
+//!   no-migration control run fed the same event stream;
+//! - catch-up converges: the last dirty round is no larger than the base
+//!   pass even with a pusher hammering the donor throughout;
+//! - rebalance plans are deterministic, minimal-disruption, and survive
+//!   an encode/decode round trip bit-for-bit.
+//!
+//! Writes `BENCH_reshard.json` (CI uploads it per commit; the committed
+//! baseline self-arms via tools/promote_bench_baseline.py --kind reshard).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use weips::config::{ModelKind, ModelSpec};
+use weips::net::Channel;
+use weips::reshard::{
+    balance_moves, pick_donor_slots, MigrationOpts, SlotMap, SlotSet, SlotTransfer,
+};
+use weips::runtime::ModelConfig;
+use weips::server::master::{MasterService, MasterShard};
+use weips::sync::Router;
+use weips::table::DeltaRow;
+use weips::util::bench;
+use weips::util::clock::ManualClock;
+use weips::worker::ShardedClient;
+
+const UNIVERSE: usize = 256;
+const MASTERS: u32 = 4;
+
+fn smoke() -> bool {
+    std::env::var("WEIPS_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false)
+        || std::env::args().any(|a| a == "--smoke")
+}
+
+fn mini_spec() -> ModelSpec {
+    let cfg = ModelConfig {
+        batch_train: 8,
+        batch_predict: 2,
+        fields: 4,
+        dim: 4,
+        hidden: 8,
+        ftrl_block_rows: 64,
+        ftrl_alpha: 0.05,
+        ftrl_beta: 1.0,
+        ftrl_l1: 1.0,
+        ftrl_l2: 1.0,
+    };
+    ModelSpec::derive("ctr", ModelKind::Lr, &cfg)
+}
+
+struct Fleet {
+    router: Router,
+    masters: Vec<Arc<MasterShard>>,
+    client: Arc<ShardedClient>,
+}
+
+fn fleet() -> Fleet {
+    let clock = Arc::new(ManualClock::new(0));
+    let router = Router::with_slots(MASTERS, UNIVERSE);
+    let masters: Vec<Arc<MasterShard>> = (0..MASTERS)
+        .map(|i| {
+            let m = Arc::new(
+                MasterShard::with_stripes(i, mini_spec(), None, 1, 8, clock.clone()).unwrap(),
+            );
+            m.set_route_guard(router.clone());
+            m
+        })
+        .collect();
+    let channels: Vec<Channel> = masters
+        .iter()
+        .map(|m| Channel::local(Arc::new(MasterService { shard: m.clone(), store: None })))
+        .collect();
+    let client = Arc::new(ShardedClient::with_router("ctr", channels, router.clone()));
+    Fleet { router, masters, client }
+}
+
+fn load(f: &Fleet, rows: u64) {
+    let ids: Vec<u64> = (0..rows).collect();
+    for chunk in ids.chunks(4096) {
+        let grads: Vec<f32> = chunk.iter().map(|&id| (id % 13) as f32 * 0.1 + 0.2).collect();
+        f.client.sparse_push("w", chunk, &grads).unwrap();
+    }
+}
+
+fn spawn_pusher(
+    f: &Fleet,
+    rows: u64,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    let client = f.client.clone();
+    std::thread::spawn(move || {
+        let mut round = 0u64;
+        while !stop.load(Ordering::Acquire) {
+            let base = (round * 997) % rows;
+            let n = 1024.min(rows);
+            let ids: Vec<u64> = (0..n).map(|i| (base + i) % rows).collect();
+            let grads = vec![0.3f32; ids.len()];
+            client.sparse_push("w", &ids, &grads).unwrap();
+            round += 1;
+        }
+    })
+}
+
+/// Union of every shard's rows, sorted by id per table — the logical
+/// model (values + update counts).
+fn logical_state(f: &Fleet) -> Vec<Vec<DeltaRow>> {
+    let full = SlotSet::full(UNIVERSE);
+    let n_tables = f.masters[0].collect_slot_delta(None, &full).len();
+    let mut per_table: Vec<Vec<DeltaRow>> = vec![Vec::new(); n_tables];
+    for m in &f.masters {
+        for (ti, (_, rows, _)) in m.collect_slot_delta(None, &full).into_iter().enumerate() {
+            per_table[ti].extend(rows);
+        }
+    }
+    for rows in &mut per_table {
+        rows.sort_by_key(|r| r.id);
+    }
+    per_table
+}
+
+fn cutover(f: &Fleet, slots: &[u16], recipient: u32) {
+    let map = f.router.snapshot();
+    let moves: Vec<(u16, u32)> = slots.iter().map(|&s| (s, recipient)).collect();
+    f.router.install(map.rebalanced(&moves).unwrap()).unwrap();
+}
+
+/// E11a: sealed-window pause and total migration time vs slots moved,
+/// with a pusher hammering the fleet throughout.
+fn migration_pause(rows: u64, results: &mut Vec<String>) {
+    bench::header("E11a: live migration pause vs slot count");
+    for k in [8usize, 32, 64] {
+        let f = fleet();
+        load(&f, rows);
+        let stop = Arc::new(AtomicBool::new(false));
+        let pusher = spawn_pusher(&f, rows, stop.clone());
+        let map = f.router.snapshot();
+        let slots = pick_donor_slots(&map, 3, k).unwrap();
+        let t_total = Instant::now();
+        let mut t = SlotTransfer::new(&f.masters[3], &f.masters[1], &slots, UNIVERSE).unwrap();
+        t.run_catchup(&MigrationOpts::default()).unwrap();
+        let t_seal = Instant::now();
+        t.seal().unwrap();
+        t.final_sync().unwrap();
+        cutover(&f, &slots, 1);
+        let report = t.finish().unwrap();
+        let sealed_ms = t_seal.elapsed().as_secs_f64() * 1e3;
+        let total_ms = t_total.elapsed().as_secs_f64() * 1e3;
+        stop.store(true, Ordering::Release);
+        pusher.join().unwrap();
+        assert!(report.purged_rows > 0, "migration moved nothing");
+        bench::metric(
+            &format!("move {k} slots ({} rows)", report.purged_rows),
+            format!(
+                "sealed window {sealed_ms:.2} ms, total {total_ms:.2} ms, \
+                 base {} rows, {} catch-up rounds, {} rows in the sealed window",
+                report.base_rows, report.catchup_rounds, report.final_rows
+            ),
+        );
+        results.push(format!(
+            r#"{{"bench":"reshard","stage":"migration_pause","slots_moved":{k},"rows":{rows},"sealed_ms":{sealed_ms:.3},"total_ms":{total_ms:.3},"base_rows":{},"catchup_rounds":{},"final_rows":{},"purged_rows":{}}}"#,
+            report.base_rows, report.catchup_rounds, report.final_rows, report.purged_rows
+        ));
+    }
+}
+
+/// E11b: catch-up convergence under a continuous pusher — the last dirty
+/// round must not exceed the base pass.
+fn catchup_convergence(rows: u64, results: &mut Vec<String>) {
+    bench::header("E11b: catch-up convergence under live pushes");
+    let f = fleet();
+    load(&f, rows);
+    let stop = Arc::new(AtomicBool::new(false));
+    let pusher = spawn_pusher(&f, rows, stop.clone());
+    let map = f.router.snapshot();
+    let slots = map.slots_of(3);
+    let mut t = SlotTransfer::new(&f.masters[3], &f.masters[1], &slots, UNIVERSE).unwrap();
+    t.run_catchup(&MigrationOpts { max_catchup_rounds: 8, catchup_threshold: 64 }).unwrap();
+    t.seal().unwrap();
+    t.final_sync().unwrap();
+    cutover(&f, &slots, 1);
+    let report = t.finish().unwrap();
+    stop.store(true, Ordering::Release);
+    pusher.join().unwrap();
+    assert!(report.base_rows > 0);
+    assert!(
+        report.last_round_rows <= report.base_rows,
+        "catch-up diverged: last round {} > base {}",
+        report.last_round_rows,
+        report.base_rows
+    );
+    bench::metric(
+        "catch-up",
+        format!(
+            "base {} rows -> {} rounds ({} rows total), last round {} rows, sealed window {} rows",
+            report.base_rows,
+            report.catchup_rounds,
+            report.catchup_rows,
+            report.last_round_rows,
+            report.final_rows
+        ),
+    );
+    results.push(format!(
+        r#"{{"bench":"reshard","stage":"catchup","rows":{rows},"base_rows":{},"rounds":{},"catchup_rows":{},"last_round_rows":{},"final_rows":{}}}"#,
+        report.base_rows,
+        report.catchup_rounds,
+        report.catchup_rows,
+        report.last_round_rows,
+        report.final_rows
+    ));
+}
+
+/// E11c: a full live migration produces a logical state byte-identical
+/// to a control run fed the same event stream with no migration.
+fn migrate_identity(results: &mut Vec<String>) {
+    bench::header("E11c: migrated state == control state (byte-identical)");
+    let control = fleet();
+    let live = fleet();
+    let ids: Vec<u64> = (0..2_000).collect();
+    let push = |f: &Fleet, scale: f32| {
+        for chunk in ids.chunks(512) {
+            let grads: Vec<f32> =
+                chunk.iter().map(|&id| (id % 7) as f32 * 0.1 + scale).collect();
+            f.client.sparse_push("w", chunk, &grads).unwrap();
+        }
+    };
+    push(&control, 0.5);
+    push(&live, 0.5);
+    let map = live.router.snapshot();
+    let slots = map.slots_of(3);
+    let mut t = SlotTransfer::new(&live.masters[3], &live.masters[1], &slots, UNIVERSE).unwrap();
+    t.run_catchup(&MigrationOpts::default()).unwrap();
+    // Dirty window between catch-up and seal: drained by the final delta.
+    push(&control, 0.25);
+    push(&live, 0.25);
+    t.seal().unwrap();
+    t.final_sync().unwrap();
+    cutover(&live, &slots, 1);
+    t.finish().unwrap();
+    // Post-cutover traffic routes to the recipient.
+    push(&control, 0.125);
+    push(&live, 0.125);
+    let identical = logical_state(&control) == logical_state(&live);
+    assert!(identical, "migrated cluster state != control state");
+    assert_eq!(live.masters[3].total_rows(), 0, "donor not drained");
+    bench::metric("byte identity", "migrated state == control state (values + metadata)");
+    results.push(format!(
+        r#"{{"bench":"reshard","stage":"migrate_identity","ids":{},"byte_identical":true,"donor_drained":true}}"#,
+        ids.len()
+    ));
+}
+
+/// E11d: routing-epoch determinism — plans are deterministic and
+/// minimal, maps round-trip bit-for-bit.
+fn routing_determinism(results: &mut Vec<String>) {
+    bench::header("E11d: routing-epoch determinism");
+    let map = SlotMap::uniform(UNIVERSE, MASTERS);
+    let moves = balance_moves(&map, MASTERS + 2);
+    let a = map.rebalanced(&moves).unwrap();
+    let b = map.rebalanced(&moves).unwrap();
+    let identical = a == b
+        && balance_moves(&map, MASTERS + 2) == moves
+        && SlotMap::from_bytes(&a.to_bytes()).unwrap() == a
+        && a.to_bytes() == b.to_bytes();
+    let changed =
+        (0..UNIVERSE as u16).filter(|&s| a.shard_of_slot(s) != map.shard_of_slot(s)).count();
+    let minimal = changed == moves.len();
+    assert!(identical, "rebalance not deterministic / round-trip unstable");
+    assert!(minimal, "rebalance disrupted unmoved slots");
+    let stats = bench::run("split 100k ids through the two-level map", 2, 20, || {
+        let r = Router::with_slots(MASTERS, UNIVERSE);
+        let ids: Vec<u64> = (0..100_000).collect();
+        std::hint::black_box(r.split_ids(&ids));
+    });
+    results.push(format!(
+        r#"{{"bench":"reshard","stage":"determinism","identical":true,"minimal_disruption":true,"moves":{},"split_100k_ms":{:.3}}}"#,
+        moves.len(),
+        stats.mean_ns / 1e6
+    ));
+}
+
+fn main() {
+    let rows = if smoke() { 20_000u64 } else { 100_000u64 };
+    let mut results = Vec::new();
+    migration_pause(rows, &mut results);
+    catchup_convergence(rows, &mut results);
+    migrate_identity(&mut results);
+    routing_determinism(&mut results);
+    let json = format!("[\n  {}\n]\n", results.join(",\n  "));
+    // Anchor to the workspace root (cargo runs benches with cwd = the
+    // package root, rust/), so CI finds the artifact at a fixed path.
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package has a parent dir")
+        .join("BENCH_reshard.json");
+    std::fs::write(&out, &json).expect("write BENCH_reshard.json");
+    println!("\nwrote {} ({} records)", out.display(), results.len());
+}

@@ -46,6 +46,9 @@ fn cluster_config(args: &Args) -> Result<ClusterConfig> {
     cfg.ckpt_base_every = args.get_u64("ckpt-base-every", cfg.ckpt_base_every)?.max(1);
     cfg.sync_threads = args.get_u64("sync-threads", cfg.sync_threads as u64)? as u32;
     cfg.rpc_threads = args.get_u64("rpc-threads", cfg.rpc_threads as u64)?.max(1) as u32;
+    cfg.reshard_slots =
+        args.get_u64("reshard-slots", cfg.reshard_slots as u64)?.clamp(1, 65536) as u32;
+    cfg.wal_sync_every = args.get_u64("wal-sync-every", cfg.wal_sync_every)?;
     Ok(cfg)
 }
 
@@ -61,10 +64,17 @@ fn block_forever() -> ! {
 }
 
 /// `weips local`: full in-process cluster on the synthetic CTR stream.
+/// `--reshard-at N` runs a live slot migration (`--reshard-from`,
+/// `--reshard-to`, `--reshard-count`) at step N, under the training
+/// traffic — the elastic-resharding demo.
 pub fn run_local(args: &Args) -> Result<()> {
     let steps = args.get_u64("steps", 300)?;
     let report = args.get_u64("report-every", 50)?.max(1);
     let serve_every = args.get_u64("serve-every", 25)?.max(1);
+    let reshard_at = args.get_u64("reshard-at", 0)?;
+    let reshard_from = args.get_u64("reshard-from", 0)? as u32;
+    let reshard_to = args.get_u64("reshard-to", 1)? as u32;
+    let reshard_count = args.get_u64("reshard-count", 0)? as usize;
     let cfg = cluster_config(args)?;
     println!(
         "weips local: model={:?} masters={} slaves={}x{} gather={:?} steps={steps}",
@@ -81,6 +91,28 @@ pub fn run_local(args: &Args) -> Result<()> {
     for step in 1..=steps {
         let loss = cluster.train_step()?;
         cluster.sync_tick()?;
+        if reshard_at != 0 && step == reshard_at {
+            let map = cluster.master_router.snapshot();
+            let count = if reshard_count == 0 {
+                map.slots_of(reshard_from).len() / 2
+            } else {
+                reshard_count
+            };
+            let slots = crate::reshard::pick_donor_slots(&map, reshard_from, count)?;
+            let r = cluster.migrate_slots(reshard_from, reshard_to, &slots)?;
+            println!(
+                "step {step:>6}  resharded: {} slots {reshard_from}->{reshard_to} \
+                 (base {} rows, {} catch-up rounds / {} rows, {} in the sealed window, \
+                 purged {}, routing epoch {})",
+                r.slots_moved,
+                r.base_rows,
+                r.catchup_rounds,
+                r.catchup_rows,
+                r.final_rows,
+                r.purged_rows,
+                cluster.master_router.epoch()
+            );
+        }
         if step % 10 == 0 {
             cluster.control_tick()?;
         }
@@ -163,7 +195,7 @@ pub fn run_master(args: &Args) -> Result<()> {
     // data dir never collide on manifests.
     let own_dir = data_dir.join(format!("master-{shard}"));
     let own_store = Arc::new(CheckpointStore::new(own_dir.join("chain"), None));
-    let wal = Arc::new(WalLog::open(own_dir.join("wal"), 1)?);
+    let wal = Arc::new(WalLog::open_with(own_dir.join("wal"), 1, cfg.wal_sync_every)?);
     if incremental_mode && args.get_or("warm-start", "1") != "0" {
         // A crash before the first seal leaves WAL records but no chain:
         // replay from offset 0 in that case instead of booting empty.
@@ -268,9 +300,12 @@ pub fn run_slave(args: &Args) -> Result<()> {
         tables,
         dense,
         transform,
-        Router::new(cfg.slave_shards),
+        Router::with_slots(cfg.slave_shards, cfg.reshard_slots as usize),
         cfg.table_stripes as usize,
     ));
+    // One shared pool for scatter applies and serving-pull prefetch.
+    let pool = cfg.sync_pool();
+    slave.set_sync_pool(pool.clone());
     let server = RpcServer::serve_with(
         &addr,
         Arc::new(SlaveService { shard: slave.clone() }),
@@ -289,8 +324,15 @@ pub fn run_slave(args: &Args) -> Result<()> {
         cfg.master_shards,
         cfg.slave_shards,
         Arc::new(SystemClock),
-        cfg.sync_pool(),
+        pool,
     );
+    // `--consume-all 1`: widen to every partition. Required when joining
+    // a cluster whose slot map was ever rebalanced (the reduced subset is
+    // only sound for the canonical uniform map); the automatic
+    // published-map bootstrap is a ROADMAP follow-up.
+    if args.get_or("consume-all", "0") != "0" {
+        scatter.subscribe_all()?;
+    }
     println!("consuming partitions {:?}", scatter.partitions());
     loop {
         if scatter.poll(Duration::from_millis(50))? == 0 {
@@ -313,10 +355,13 @@ pub fn run_trainer(args: &Args) -> Result<()> {
         .map(|a| Channel::remote(a.trim(), RPC_TIMEOUT))
         .collect();
     let monitor = Arc::new(crate::monitor::Monitor::new(4096));
+    // Route over the cluster's configured slot universe, not the default
+    // — a universe skew would push to the wrong masters.
+    let router = Router::with_slots(channels.len() as u32, cfg.reshard_slots as usize);
     let trainer = Trainer::new(
         engine,
         spec.clone(),
-        ShardedClient::new(&cfg.model_name, channels),
+        ShardedClient::with_router(&cfg.model_name, channels, router),
         monitor.clone(),
     );
     let mut workload = Workload::new(WorkloadConfig { fields: spec.fields, ..Default::default() });
@@ -352,10 +397,11 @@ pub fn run_predictor(args: &Args) -> Result<()> {
             Arc::new(ReplicaGroup::new(endpoints, BalancePolicy::RoundRobin))
         })
         .collect();
+    let router = Router::with_slots(groups.len() as u32, cfg.reshard_slots as usize);
     let predictor = Predictor::new(
         engine,
         spec.clone(),
-        SlaveClient::new(&cfg.model_name, groups),
+        SlaveClient::with_router(&cfg.model_name, groups, router),
     );
     let mut workload = Workload::new(WorkloadConfig { fields: spec.fields, ..Default::default() });
     let mut served = 0u64;

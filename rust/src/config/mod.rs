@@ -256,6 +256,17 @@ pub struct ClusterConfig {
     /// where available), `epoll`, or `peek`. `WEIPS_RPC_POLL` overrides
     /// the default.
     pub rpc_poll_mode: crate::net::PollMode,
+    /// Virtual routing slots in the two-level id→slot→shard map (elastic
+    /// resharding; ≥ the largest shard count the deployment will ever
+    /// grow to). The slot hash never changes, so this must stay constant
+    /// for a model's lifetime. `WEIPS_RESHARD_SLOTS` overrides the
+    /// default.
+    pub reshard_slots: u32,
+    /// WAL fsync cadence: fsync each partition file every n-th append
+    /// (power-loss durability); 0 = flush-only (append latency; a crash
+    /// of the *process* still loses nothing thanks to torn-tail
+    /// truncation). `WEIPS_WAL_SYNC_EVERY` overrides the default.
+    pub wal_sync_every: u64,
     /// Feature expire TTL in ms (0 = never).
     pub feature_ttl_ms: u64,
     /// Checkpoint every ~this many ms (randomly jittered, §4.2.1a).
@@ -293,6 +304,8 @@ impl Default for ClusterConfig {
             rpc_poll_min_ms: 1,
             rpc_poll_max_ms: 10,
             rpc_poll_mode: crate::net::default_poll_mode(),
+            reshard_slots: env_threads("WEIPS_RESHARD_SLOTS", 1024).clamp(1, 65536),
+            wal_sync_every: crate::queue::default_wal_sync_every(),
             feature_ttl_ms: 0,
             ckpt_interval_ms: 10_000,
             ckpt_mode: CkptMode::Incremental,
@@ -378,6 +391,14 @@ impl ClusterConfig {
         }
         if let Some(v) = doc.get_str("cluster", "rpc_poll_mode") {
             c.rpc_poll_mode = crate::net::PollMode::parse(v)?;
+        }
+        if let Some(v) = doc.get_int("cluster", "reshard_slots") {
+            // The slot universe is a u16 space; clamp hard so a typo can
+            // neither zero it nor overflow slot ids.
+            c.reshard_slots = v.clamp(1, u16::MAX as i64 + 1) as u32;
+        }
+        if let Some(v) = doc.get_int("cluster", "wal_sync_every") {
+            c.wal_sync_every = v.max(0) as u64;
         }
         if let Some(v) = doc.get_int("cluster", "feature_ttl_ms") {
             c.feature_ttl_ms = v as u64;
@@ -542,6 +563,32 @@ mod tests {
         assert_eq!(opts.poll_max_ms, 20);
         let bad = TomlDoc::parse("[cluster]\nrpc_poll_mode = \"select\"\n").unwrap();
         assert!(ClusterConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn reshard_and_wal_knobs_parse_and_clamp() {
+        let doc = TomlDoc::parse(
+            r#"
+            [cluster]
+            reshard_slots = 4096
+            wal_sync_every = 32
+            "#,
+        )
+        .unwrap();
+        let c = ClusterConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.reshard_slots, 4096);
+        assert_eq!(c.wal_sync_every, 32);
+        // Defaults: 1024-slot universe, flush-only WAL.
+        let d = ClusterConfig::default();
+        assert_eq!(d.reshard_slots, 1024);
+        assert_eq!(d.wal_sync_every, 0);
+        // The slot universe is a u16 space and never zero.
+        let bad = TomlDoc::parse("[cluster]\nreshard_slots = 0\nwal_sync_every = -5\n").unwrap();
+        let c = ClusterConfig::from_toml(&bad).unwrap();
+        assert_eq!(c.reshard_slots, 1);
+        assert_eq!(c.wal_sync_every, 0);
+        let big = TomlDoc::parse("[cluster]\nreshard_slots = 999999\n").unwrap();
+        assert_eq!(ClusterConfig::from_toml(&big).unwrap().reshard_slots, 65536);
     }
 
     #[test]

@@ -25,6 +25,7 @@ use crate::net::Channel;
 use crate::optim::Optimizer;
 use crate::queue::{Queue, Topic, WalLog};
 use crate::replica::{BalancePolicy, ReplicaGroup};
+use crate::reshard::{MigrationOpts, MigrationReport, SlotTransfer};
 use crate::runtime::Engine;
 use crate::sample::{Workload, WorkloadConfig};
 use crate::scheduler::{CkptPolicy, Scheduler};
@@ -80,6 +81,10 @@ pub struct LocalCluster {
     pub wal: Arc<WalLog>,
     journals: Vec<Mutex<WalJournal>>,
     pub scheduler: Scheduler,
+    /// Master-cluster slot router: one shared cell across trainer
+    /// clients, shard route guards and the migration driver, so a single
+    /// epoch install cuts everything over ([`Self::migrate_slots`]).
+    pub master_router: Router,
     pub masters: Vec<Arc<MasterShard>>,
     gathers: Vec<Mutex<Gather>>,
     pushers: Vec<Pusher>,
@@ -127,7 +132,11 @@ impl LocalCluster {
             data_dir.join("ckpt-local"),
             Some(data_dir.join("ckpt-remote")),
         ));
-        let wal = Arc::new(WalLog::open(data_dir.join("wal"), cfg.master_shards as usize)?);
+        let wal = Arc::new(WalLog::open_with(
+            data_dir.join("wal"),
+            cfg.master_shards as usize,
+            cfg.wal_sync_every,
+        )?);
         let journals: Vec<Mutex<WalJournal>> =
             (0..cfg.master_shards).map(|i| Mutex::new(WalJournal::new(i))).collect();
         let meta = MetaStore::new(clock.clone());
@@ -142,6 +151,7 @@ impl LocalCluster {
         // the sync stages parallelize across table stripes without each
         // shard paying for its own thread fleet.
         let sync_pool = cfg.sync_pool();
+        let master_router = Router::with_slots(cfg.master_shards, cfg.reshard_slots as usize);
         let mut masters = Vec::new();
         let mut gathers = Vec::new();
         let mut pushers = Vec::new();
@@ -154,6 +164,10 @@ impl LocalCluster {
                 cfg.table_stripes as usize,
                 clock.clone(),
             )?);
+            // Slot-route guard: stale-epoch pushes NACK back to the
+            // client's re-route loop instead of landing on the wrong
+            // shard during a live migration.
+            m.set_route_guard(master_router.clone());
             // Full mode has no delta consumer: skip tombstone tracking so
             // expired rows free all their memory.
             if cfg.ckpt_mode == CkptMode::Full {
@@ -179,7 +193,7 @@ impl LocalCluster {
             .iter()
             .map(|t| Ok((t.name.clone(), spec.optimizer_for(&t.name)?, t.dim)))
             .collect::<Result<Vec<_>>>()?;
-        let slave_router = Router::new(cfg.slave_shards);
+        let slave_router = Router::with_slots(cfg.slave_shards, cfg.reshard_slots as usize);
 
         let mut slaves = Vec::new();
         let mut scatters = Vec::new();
@@ -196,9 +210,12 @@ impl LocalCluster {
                     serving_tables.clone(),
                     dense_tables.clone(),
                     Arc::new(ServingWeights::new(transform_tables.clone())),
-                    slave_router,
+                    slave_router.clone(),
                     cfg.table_stripes as usize,
                 ));
+                // Large predict pulls prefetch their stripes on the
+                // shared sync pool.
+                shard.set_sync_pool(sync_pool.clone());
                 shard_scatters.push(Mutex::new(Scatter::with_pool(
                     topic.clone(),
                     shard.clone(),
@@ -230,13 +247,16 @@ impl LocalCluster {
         let trainer = Trainer::new(
             engine.clone(),
             spec.clone(),
-            ShardedClient::new(&cfg.model_name, master_channels),
+            ShardedClient::with_router(&cfg.model_name, master_channels, master_router.clone()),
             monitor.clone(),
         );
         let predictor = Predictor::new(
             engine.clone(),
             spec.clone(),
-            SlaveClient::new(&cfg.model_name, groups.clone()),
+            // Same universe as the slave shards' router — a predictor
+            // with a different `reshard_slots` would route pulls to
+            // shards that never held the ids.
+            SlaveClient::with_router(&cfg.model_name, groups.clone(), slave_router.clone()),
         );
 
         // -- control plane --------------------------------------------------------
@@ -281,6 +301,7 @@ impl LocalCluster {
             wal,
             journals,
             scheduler,
+            master_router,
             masters,
             gathers,
             pushers,
@@ -324,7 +345,12 @@ impl LocalCluster {
     pub fn sync_tick(&self) -> Result<(usize, usize)> {
         let mut pushed = 0;
         for (i, g) in self.gathers.iter().enumerate() {
-            let batches = g.lock().unwrap().poll();
+            // Hold the gather lock across the push: concurrent flushers
+            // (wall-clock pumps, the migration hand-off) must not be able
+            // to interleave a newer window into the partition before an
+            // already-polled older one.
+            let mut g = g.lock().unwrap();
+            let batches = g.poll();
             pushed += batches.len();
             self.pushers[i].push_all(&batches)?;
         }
@@ -355,7 +381,8 @@ impl LocalCluster {
     /// fully caught up.
     pub fn flush_sync(&self) -> Result<()> {
         for (i, g) in self.gathers.iter().enumerate() {
-            let batches = g.lock().unwrap().flush_now();
+            let mut g = g.lock().unwrap();
+            let batches = g.flush_now();
             self.pushers[i].push_all(&batches)?;
         }
         self.journal_wal()?;
@@ -528,6 +555,15 @@ impl LocalCluster {
             for m in &self.masters {
                 m.restore_chain(&self.store, plan.target_version, m.shard_id as usize)?;
             }
+            // Rollback across a reshard epoch: restored chains predate
+            // the slot moves, so re-apply current ownership before
+            // anything streams.
+            let map = self.master_router.snapshot();
+            if map.epoch > 0 {
+                for m in &self.masters {
+                    m.purge_foreign_rows(&map);
+                }
+            }
             // Slaves: clear + chain sync from the rolled-back lineage
             // (base + deltas), then skip the queue's poisoned tail (new
             // master state will stream from the current end). Chains are
@@ -645,6 +681,7 @@ impl LocalCluster {
             self.cfg.table_stripes as usize,
             self.clock.clone(),
         )?);
+        fresh.set_route_guard(self.master_router.clone());
         // Rewire: gather + trainer channels point at the new object.
         self.gathers[shard] = Mutex::new(Gather::with_pool(
             fresh.clone(),
@@ -677,6 +714,12 @@ impl LocalCluster {
             // also lifts the crash-time suspension.
             let cut = master.cut_epoch();
             self.journals[shard].lock().unwrap().resume(cut, master.dense_versions());
+            // Elastic-reshard hygiene: the restored chain predates any
+            // slot moves; drop rows the current map assigns elsewhere.
+            let map = self.master_router.snapshot();
+            if map.epoch > 0 {
+                master.purge_foreign_rows(&map);
+            }
             return Ok(version);
         }
         let version = self.scheduler.recover_shard(&self.masters[shard])?;
@@ -711,7 +754,209 @@ impl LocalCluster {
             }
             master.replay_sync_batches(&chunk)?;
         }
+        let map = self.master_router.snapshot();
+        if map.epoch > 0 {
+            master.purge_foreign_rows(&map);
+        }
         Ok(version)
+    }
+
+    // -- elastic resharding ------------------------------------------------------
+
+    /// Live slot migration: move `slots` from master `donor` to
+    /// `recipient` under full traffic, with zero dropped updates and
+    /// byte-identical moved state. The sequence (see `reshard` for the
+    /// protocol pieces):
+    ///
+    /// 1. widen every scatter to all partitions (moved ids' updates will
+    ///    originate from the recipient's partition after cutover);
+    /// 2. base copy + dirty-epoch catch-up while the donor keeps
+    ///    training;
+    /// 3. seal the moving slots (pushes NACK into the trainer client's
+    ///    retry loop), take the final hand-off delta;
+    /// 4. flush the donor's pending sync window and wait until every
+    ///    scatter has consumed past it — from here on, any newer value
+    ///    for a moved id can only arrive via the recipient's partition,
+    ///    so cross-partition ordering cannot regress a slave;
+    /// 5. durability: the drain journaled the recipient's migrated rows
+    ///    to its WAL (incremental mode); full mode backs them into the
+    ///    recipient's queue partition — either way the new ownership is
+    ///    recoverable before the routing changes or anything is deleted;
+    /// 6. cutover: install + publish the bumped slot map (trainer
+    ///    retries re-route to the recipient);
+    /// 7. release: purge the moved rows from the donor (silently — the
+    ///    recipient's lineage owns them) and lift the seal.
+    pub fn migrate_slots(
+        &self,
+        donor: u32,
+        recipient: u32,
+        slots: &[u16],
+    ) -> Result<MigrationReport> {
+        let map = self.master_router.snapshot();
+        if donor == recipient || donor >= map.shards || recipient >= map.shards {
+            return Err(Error::Routing(format!(
+                "migrate {donor} -> {recipient} in a {}-shard cluster",
+                map.shards
+            )));
+        }
+        for &s in slots {
+            if s as usize >= map.slots() || map.shard_of_slot(s) != donor {
+                return Err(Error::State(format!(
+                    "slot {s} not owned by donor {donor} at epoch {}",
+                    map.epoch
+                )));
+            }
+        }
+        // 1. Widen subscriptions before any routing changes.
+        for shard in &self.scatters {
+            for sc in shard {
+                sc.lock().unwrap().subscribe_all()?;
+            }
+        }
+        // 2. Online copy.
+        let mut transfer = SlotTransfer::new(
+            &self.masters[donor as usize],
+            &self.masters[recipient as usize],
+            slots,
+            map.slots(),
+        )?;
+        transfer.run_catchup(&MigrationOpts::default())?;
+        // 3. Hand-off window. Every fallible step between seal and
+        // cutover aborts the transfer on error (seal lifted, donor stays
+        // authoritative, map untouched) — a failed migration must never
+        // leave the slots sealed forever.
+        if let Err(e) = transfer.seal() {
+            // Nothing was sealed (another hand-off holds the donor) —
+            // plain error, no abort.
+            return Err(e);
+        }
+        let sealed_result =
+            transfer.final_sync().and_then(|()| self.flush_and_drain_donor(donor));
+        if let Err(e) = sealed_result {
+            transfer.abort();
+            return Err(e);
+        }
+        // 5. Durability before the cutover (so an error here can still
+        // abort cleanly). Incremental mode: the drain already journaled
+        // the recipient's (dirty) migrated rows to its WAL, so chain +
+        // WAL replay recovers them. Full mode has no journal — back the
+        // moved rows into the recipient's queue partition instead (the
+        // mode's own §4.2.1b incremental backup; a full-model snapshot
+        // here would hold the seal for minutes at scale): a recipient
+        // crash replays its partition and restores them, and slaves see
+        // idempotent re-upserts of values they already hold.
+        if self.cfg.ckpt_mode == CkptMode::Full {
+            if let Err(e) = self.backup_moved_rows_to_queue(recipient, transfer.slot_set()) {
+                transfer.abort();
+                return Err(e);
+            }
+        }
+        // 6. Cutover.
+        let moves: Vec<(u16, u32)> = slots.iter().map(|&s| (s, recipient)).collect();
+        let bumped = match map.rebalanced(&moves) {
+            Ok(b) => b,
+            Err(e) => {
+                transfer.abort();
+                return Err(e);
+            }
+        };
+        let installed = match self.master_router.install(bumped) {
+            Ok(m) => m,
+            Err(e) => {
+                transfer.abort();
+                return Err(e);
+            }
+        };
+        // The cutover is installed; from here the migration must complete
+        // (release the donor) even if the meta publish raced a newer
+        // epoch — surface that error after the release.
+        let published = self.scheduler.publish_slot_map(&installed);
+        // 7. Release the donor.
+        let report = transfer.finish()?;
+        published?;
+        Ok(report)
+    }
+
+    /// Full-mode migration durability: append the recipient's copy of
+    /// the moved rows to its queue partition as ordinary full-value sync
+    /// batches. [`Self::recover_master`]'s partition replay then
+    /// restores them after a recipient crash; slaves consuming the
+    /// partition apply idempotent re-upserts. Runs under the donor seal,
+    /// so the copied values are final.
+    fn backup_moved_rows_to_queue(
+        &self,
+        recipient: u32,
+        slots: &crate::reshard::SlotSet,
+    ) -> Result<()> {
+        let now = self.clock.now_ms();
+        let sections = self.masters[recipient as usize].collect_slot_delta(None, slots);
+        for (table, rows, _) in sections {
+            if rows.is_empty() {
+                continue;
+            }
+            let batch = crate::proto::SyncBatch {
+                model: self.cfg.model_name.clone(),
+                table,
+                shard: recipient,
+                seq: 0,
+                created_ms: now,
+                entries: rows
+                    .into_iter()
+                    .map(|r| crate::proto::SyncEntry {
+                        id: r.id,
+                        op: crate::proto::SyncOp::Upsert(r.values),
+                    })
+                    .collect(),
+                dense: Vec::new(),
+            };
+            self.pushers[recipient as usize].push(&batch)?;
+        }
+        Ok(())
+    }
+
+    /// Migration step 4: flush the donor's pending gather window (gather
+    /// lock held across the push so a concurrent sync pump cannot
+    /// interleave an older window behind it) and wait until every scatter
+    /// has consumed the donor partition past the flush point. Bounded: a
+    /// consumer that stops advancing fails the migration instead of
+    /// spinning forever, and empty rounds back off briefly instead of
+    /// busy-polling the scatter mutexes.
+    fn flush_and_drain_donor(&self, donor: u32) -> Result<()> {
+        {
+            let mut g = self.gathers[donor as usize].lock().unwrap();
+            let batches = g.flush_now();
+            self.pushers[donor as usize].push_all(&batches)?;
+        }
+        self.journal_wal()?;
+        let donor_partition = crate::sync::router::partition_of_shard(
+            donor,
+            self.topic.partition_count() as u32,
+        );
+        let drain_target = self.topic.partition(donor_partition as usize)?.latest_offset();
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        loop {
+            let mut behind = false;
+            for shard in &self.scatters {
+                for sc in shard {
+                    let mut sc = sc.lock().unwrap();
+                    sc.poll(Duration::ZERO)?;
+                    match sc.offset_for(donor_partition) {
+                        Some(o) if o >= drain_target => {}
+                        _ => behind = true,
+                    }
+                }
+            }
+            if !behind {
+                return Ok(());
+            }
+            if std::time::Instant::now() >= deadline {
+                return Err(Error::State(format!(
+                    "migration drain timed out: a scatter never consumed donor partition \
+                     {donor_partition} to offset {drain_target}"
+                )));
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
     }
 
     fn rewire_trainer(&mut self) {
@@ -728,7 +973,11 @@ impl LocalCluster {
         self.trainer = Trainer::new(
             self.engine.clone(),
             self.spec.clone(),
-            ShardedClient::new(&self.cfg.model_name, channels),
+            ShardedClient::with_router(
+                &self.cfg.model_name,
+                channels,
+                self.master_router.clone(),
+            ),
             self.monitor.clone(),
         );
     }

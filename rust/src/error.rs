@@ -30,6 +30,21 @@ pub enum Error {
     NotFound(String),
     /// Service deliberately rejecting load (backpressure / degraded).
     Unavailable(String),
+    /// Push routed with a stale slot-map epoch (the slot moved shards or
+    /// is sealed for a live migration hand-off). Never a data loss: the
+    /// server rejects *before* applying anything, and clients re-split by
+    /// the current slot map and retry.
+    StaleRoute(String),
+}
+
+impl Error {
+    /// True for routing-epoch rejections, which callers retry with a
+    /// refreshed slot map instead of surfacing. Typed end to end: the RPC
+    /// layer carries a dedicated status byte so remote callers see
+    /// [`Error::StaleRoute`] too, not a stringly [`Error::Rpc`].
+    pub fn is_stale_route(&self) -> bool {
+        matches!(self, Error::StaleRoute(_))
+    }
 }
 
 impl fmt::Display for Error {
@@ -47,6 +62,7 @@ impl fmt::Display for Error {
             Error::State(m) => write!(f, "illegal state: {m}"),
             Error::NotFound(m) => write!(f, "not found: {m}"),
             Error::Unavailable(m) => write!(f, "unavailable: {m}"),
+            Error::StaleRoute(m) => write!(f, "stale route: {m}"),
         }
     }
 }

@@ -41,6 +41,7 @@ pub mod optim;
 pub mod proto;
 pub mod queue;
 pub mod replica;
+pub mod reshard;
 pub mod runtime;
 pub mod sample;
 pub mod scheduler;

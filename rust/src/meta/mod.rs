@@ -17,6 +17,11 @@ use std::sync::{Arc, Mutex};
 use crate::util::clock::Clock;
 use crate::{Error, Result};
 
+/// Magic prefix distinguishing [`MetaStore::put_if_newer`] values from
+/// plain puts — without it, any 8+-byte plain value would be silently
+/// reinterpreted as an epoch tag.
+const EPOCH_TAG: &[u8; 4] = b"EPv1";
+
 /// A change notification delivered to watchers.
 #[derive(Debug, Clone, PartialEq)]
 pub enum WatchEvent {
@@ -113,6 +118,63 @@ impl MetaStore {
             .insert(key.to_string(), Entry { value: value.into(), version, ephemeral });
         Self::notify(&mut s, WatchEvent::Put { key: key.to_string(), version });
         Ok(version)
+    }
+
+    /// Epoch-guarded publish (the slot-map install primitive): store
+    /// `value` under `key` tagged with `epoch`, succeeding only when the
+    /// key is absent or its stored epoch is **smaller** — racing
+    /// publishers can never roll an assignment back. The stored value is
+    /// framed `[magic 4][epoch 8 LE][payload]`; an existing value
+    /// without the magic (e.g. written by a plain [`MetaStore::put`]) is
+    /// a conflict, never a bypass. Read back with
+    /// [`MetaStore::get_epochal`]. Returns the new store version.
+    pub fn put_if_newer(&self, key: &str, epoch: u64, value: impl Into<Vec<u8>>) -> Result<u64> {
+        let mut s = self.state.lock().unwrap();
+        if let Some(e) = s.entries.get(key) {
+            match Self::parse_epochal(&e.value) {
+                Some((current, _)) if current >= epoch => {
+                    return Err(Error::MetaConflict(format!(
+                        "{key}: epoch {current} >= published {epoch}"
+                    )));
+                }
+                Some(_) => {}
+                None => {
+                    return Err(Error::MetaConflict(format!(
+                        "{key}: existing value is not epoch-tagged"
+                    )));
+                }
+            }
+        }
+        let payload = value.into();
+        let mut tagged = Vec::with_capacity(12 + payload.len());
+        tagged.extend_from_slice(EPOCH_TAG);
+        tagged.extend_from_slice(&epoch.to_le_bytes());
+        tagged.extend(payload);
+        let version = s.next_version;
+        s.next_version += 1;
+        s.entries
+            .insert(key.to_string(), Entry { value: tagged, version, ephemeral: None });
+        Self::notify(&mut s, WatchEvent::Put { key: key.to_string(), version });
+        Ok(version)
+    }
+
+    /// Split an epoch-tagged value into `(epoch, payload)`; `None` when
+    /// the magic is absent (a plain value).
+    fn parse_epochal(value: &[u8]) -> Option<(u64, &[u8])> {
+        if value.len() < 12 || &value[..4] != EPOCH_TAG {
+            return None;
+        }
+        Some((u64::from_le_bytes(value[4..12].try_into().unwrap()), &value[12..]))
+    }
+
+    /// Read a key written by [`MetaStore::put_if_newer`]:
+    /// `(epoch, value, version)`. `None` for absent keys and for plain
+    /// (untagged) values.
+    pub fn get_epochal(&self, key: &str) -> Option<(u64, Vec<u8>, u64)> {
+        let s = self.state.lock().unwrap();
+        let e = s.entries.get(key)?;
+        let (epoch, payload) = Self::parse_epochal(&e.value)?;
+        Some((epoch, payload.to_vec(), e.version))
     }
 
     /// Read a key: `(value, version)`.
@@ -305,6 +367,29 @@ mod tests {
         assert!(v2 > v1);
         assert!(m.cas("/k", v1, b"z".to_vec()).is_err());
         assert_eq!(m.get("/k").unwrap().0, b"y");
+    }
+
+    #[test]
+    fn put_if_newer_is_epoch_guarded() {
+        let (m, _) = store();
+        m.put_if_newer("/map", 0, b"a".to_vec()).unwrap();
+        assert!(m.put_if_newer("/map", 0, b"b".to_vec()).is_err(), "same epoch accepted");
+        m.put_if_newer("/map", 3, b"c".to_vec()).unwrap();
+        assert!(m.put_if_newer("/map", 2, b"d".to_vec()).is_err(), "rollback accepted");
+        let (epoch, value, _) = m.get_epochal("/map").unwrap();
+        assert_eq!((epoch, value), (3, b"c".to_vec()));
+        assert!(m.get_epochal("/nope").is_none());
+        // A plain (untagged) value on the key is a conflict, not an
+        // unguarded overwrite — short or long.
+        m.put("/raw", b"x".to_vec());
+        assert!(m.put_if_newer("/raw", 5, b"y".to_vec()).is_err());
+        m.put("/raw8", b"hello world, twelve+".to_vec());
+        assert!(m.put_if_newer("/raw8", 5, b"y".to_vec()).is_err());
+        assert!(m.get_epochal("/raw8").is_none());
+        // Watchers see epochal puts like any other.
+        let rx = m.watch("/map");
+        m.put_if_newer("/map", 4, b"e".to_vec()).unwrap();
+        assert!(matches!(rx.recv().unwrap(), WatchEvent::Put { ref key, .. } if key == "/map"));
     }
 
     #[test]

@@ -51,6 +51,11 @@ pub const MAX_FRAME: usize = 256 << 20;
 /// Status byte on responses.
 const STATUS_OK: u8 = 0;
 const STATUS_ERR: u8 = 1;
+/// Routing-epoch rejection ([`Error::StaleRoute`]): carried as its own
+/// status so remote clients get the typed error back and can re-split by
+/// the current slot map and retry, instead of failing a stringly RPC
+/// error upward.
+const STATUS_STALE_ROUTE: u8 = 2;
 
 /// Handler threads per RPC server when no explicit count is given
 /// (`WEIPS_RPC_THREADS` overrides; the cluster config's `rpc_threads`
@@ -803,7 +808,7 @@ impl RpcServer {
                     wbuf.extend_from_slice(&body);
                 }
                 Err(e) => {
-                    wbuf.push(STATUS_ERR);
+                    wbuf.push(if e.is_stale_route() { STATUS_STALE_ROUTE } else { STATUS_ERR });
                     wbuf.extend_from_slice(e.to_string().as_bytes());
                 }
             }
@@ -917,10 +922,12 @@ impl RpcClient {
                         }
                         let status = resp[8];
                         let body = resp[9..].to_vec();
-                        return if status == STATUS_OK {
-                            Ok(body)
-                        } else {
-                            Err(Error::Rpc(String::from_utf8_lossy(&body).into_owned()))
+                        return match status {
+                            STATUS_OK => Ok(body),
+                            STATUS_STALE_ROUTE => Err(Error::StaleRoute(
+                                String::from_utf8_lossy(&body).into_owned(),
+                            )),
+                            _ => Err(Error::Rpc(String::from_utf8_lossy(&body).into_owned())),
                         };
                     }
                     Err(Error::Io(e))
@@ -1008,10 +1015,23 @@ mod tests {
             match method {
                 0 => Ok(payload.to_vec()),
                 1 => Ok(payload.iter().rev().copied().collect()),
+                5 => Err(Error::StaleRoute("slot 7 moved to shard 2".into())),
                 9 => Err(Error::Unavailable("degraded".into())),
                 _ => Err(Error::Rpc(format!("no method {method}"))),
             }
         }
+    }
+
+    #[test]
+    fn stale_route_errors_stay_typed_over_tcp() {
+        let server = RpcServer::serve("127.0.0.1:0", Arc::new(Echo)).unwrap();
+        let ch = Channel::remote(&server.addr().to_string(), timeout());
+        let err = ch.call(5, b"").unwrap_err();
+        assert!(err.is_stale_route(), "lost the typed status: {err}");
+        assert!(err.to_string().contains("slot 7 moved"), "{err}");
+        // Ordinary errors stay ordinary; the connection survives both.
+        assert!(!ch.call(9, b"").unwrap_err().is_stale_route());
+        assert_eq!(ch.call(0, b"still-up").unwrap(), b"still-up");
     }
 
     fn timeout() -> std::time::Duration {

@@ -298,6 +298,93 @@ impl Decode for CkptRequest {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Elastic resharding (slot migration + routing-epoch control)
+// ---------------------------------------------------------------------------
+
+/// Pull a slot-filtered chunk from a migration donor. `since = 0` is the
+/// full base pass; `since = cut + 1` collects rows stamped after `cut`.
+/// The response is the raw chunk (`MasterShard::encode_slot_chunk`
+/// bytes), fed verbatim to `MIGRATE_APPLY` on the recipient.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlotPull {
+    pub model: String,
+    /// 0 = full base pass, else `cut + 1`.
+    pub since: u64,
+    /// Slot universe size (must match the cluster's `reshard_slots`).
+    pub universe: u32,
+    pub slots: Vec<u16>,
+}
+
+impl Encode for SlotPull {
+    fn encode(&self, w: &mut Writer) {
+        w.put_str(&self.model);
+        w.put_varint(self.since);
+        w.put_u32(self.universe);
+        w.put_varint(self.slots.len() as u64);
+        for &s in &self.slots {
+            w.put_varint(s as u64);
+        }
+    }
+}
+
+/// Read a varint-framed slot list (shared by the reshard messages and
+/// the slot-chunk header): count, then one varint per slot, each
+/// validated into the u16 slot space.
+pub fn read_slot_list(r: &mut Reader) -> Result<Vec<u16>> {
+    let n = r.get_varint()? as usize;
+    let mut slots = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        let s = r.get_varint()?;
+        if s > u16::MAX as u64 {
+            return Err(Error::Codec(format!("slot {s} out of range")));
+        }
+        slots.push(s as u16);
+    }
+    Ok(slots)
+}
+
+impl Decode for SlotPull {
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(SlotPull {
+            model: r.get_str()?,
+            since: r.get_varint()?,
+            universe: r.get_u32()?,
+            slots: read_slot_list(r)?,
+        })
+    }
+}
+
+/// Seal (or, with an empty slot list, unseal) slots on a migration donor
+/// for the hand-off window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlotSeal {
+    pub model: String,
+    pub universe: u32,
+    pub slots: Vec<u16>,
+}
+
+impl Encode for SlotSeal {
+    fn encode(&self, w: &mut Writer) {
+        w.put_str(&self.model);
+        w.put_u32(self.universe);
+        w.put_varint(self.slots.len() as u64);
+        for &s in &self.slots {
+            w.put_varint(s as u64);
+        }
+    }
+}
+
+impl Decode for SlotSeal {
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(SlotSeal {
+            model: r.get_str()?,
+            universe: r.get_u32()?,
+            slots: read_slot_list(r)?,
+        })
+    }
+}
+
 /// Generic OK/metadata reply.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Ack {
@@ -352,6 +439,22 @@ mod tests {
             ids: vec![5, 6],
             grads: vec![0.25; 16],
         });
+    }
+
+    #[test]
+    fn reshard_messages_round_trip() {
+        round_trip(&SlotPull { model: "ctr".into(), since: 0, universe: 1024, slots: vec![] });
+        round_trip(&SlotPull {
+            model: "ctr".into(),
+            since: 17,
+            universe: 64,
+            slots: vec![0, 9, 63, u16::MAX],
+        });
+        round_trip(&SlotSeal { model: "ctr".into(), universe: 64, slots: vec![3, 7] });
+        // Truncation errors cleanly.
+        let bytes =
+            SlotPull { model: "m".into(), since: 1, universe: 8, slots: vec![1, 2, 3] }.to_bytes();
+        assert!(SlotPull::from_bytes(&bytes[..bytes.len() - 2]).is_err());
     }
 
     #[test]

@@ -21,7 +21,7 @@ pub mod wal;
 
 pub use log::SyncLog;
 pub use remote::{QueueService, RemoteLog};
-pub use wal::WalLog;
+pub use wal::{default_wal_sync_every, WalLog};
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex, RwLock};

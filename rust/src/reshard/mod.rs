@@ -1,0 +1,709 @@
+//! Elastic resharding: slot-based routing + live shard migration.
+//!
+//! The paper's router exists because "the resource requirements of the
+//! two situations is inconsistent" (§4.1.4a) and clusters migrate
+//! heterogeneously (§4.2.1d) — but a stateless `hash % N` router makes
+//! changing `N` a full-stop re-checkpoint of the entire model. This
+//! module replaces direct id→shard hashing with a **two-level slot map**
+//! (Monolith-style movable ownership units):
+//!
+//! ```text
+//!   id ──fxhash──► slot (fixed universe, e.g. 1024)
+//!   slot ──SlotMap (versioned, epoch-stamped)──► shard
+//! ```
+//!
+//! The slot hash never changes; only the small `slot → shard` table does,
+//! so a rebalance re-routes exactly the ids in the moved slots (the
+//! minimal-disruption property `it_reshard` proves) and every component
+//! cuts over by swapping one `Arc<SlotMap>` — the epoch bump the paper's
+//! second-level deployment story needs.
+//!
+//! **Live migration** ([`SlotTransfer`]): the donor streams a
+//! slot-filtered base snapshot while it keeps training (PR 4's
+//! dirty-epoch machinery, one stripe read lock at a time), catches the
+//! recipient up through dirty-epoch delta rounds, then seals the moving
+//! slots for a short hand-off window — sealed pushes are NACKed with a
+//! typed [`Error::StaleRoute`] the client retries against the bumped
+//! slot map, so updates are never silently dropped — takes one final
+//! delta, and releases the donor (silent purge, no tombstones: the
+//! recipient's checkpoint lineage owns the rows now, stamped dirty so its
+//! next delta chunk seals them).
+//!
+//! The authoritative map lives in the [`MetaStore`]
+//! (`/reshard/<model>/slotmap`, epoch-guarded publish) and is cached
+//! epoch-stamped in every [`crate::sync::Router`] through a shared
+//! [`SlotMapCell`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::codec::{Reader, Writer};
+use crate::meta::MetaStore;
+use crate::server::master::MasterShard;
+use crate::util::hash::fxhash64;
+use crate::{Error, Result};
+
+/// Default virtual-slot universe. Large enough that one slot is a fine
+/// rebalance quantum for any plausible shard count, small enough that a
+/// full map is a few KiB in the meta store. Must be ≥ the largest shard
+/// count the deployment will ever grow to (`reshard_slots` config knob).
+pub const DEFAULT_SLOTS: usize = 1024;
+
+/// Owning virtual slot for an id. Uses the *low* bits of `fxhash64(id)`
+/// like the pre-slot router did (table striping keys on the high bits, so
+/// slot choice stays independent of lock striping).
+#[inline]
+pub fn slot_of(id: u64, slots: usize) -> u16 {
+    (fxhash64(id) % slots.max(1) as u64) as u16
+}
+
+// ---------------------------------------------------------------------------
+// Slot sets
+// ---------------------------------------------------------------------------
+
+/// A set of virtual slots over a fixed universe (bitset; the migration
+/// filter and the donor's sealed-slot gate).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SlotSet {
+    universe: usize,
+    bits: Vec<u64>,
+    count: usize,
+}
+
+impl SlotSet {
+    /// Empty set over `universe` slots.
+    pub fn empty(universe: usize) -> SlotSet {
+        let universe = universe.max(1);
+        SlotSet { universe, bits: vec![0; (universe + 63) / 64], count: 0 }
+    }
+
+    /// Set holding `slots`; errors on a slot outside the universe.
+    pub fn from_slots(slots: &[u16], universe: usize) -> Result<SlotSet> {
+        let mut set = SlotSet::empty(universe);
+        for &s in slots {
+            if s as usize >= set.universe {
+                return Err(Error::Routing(format!("slot {s} outside universe {universe}")));
+            }
+            set.insert(s);
+        }
+        Ok(set)
+    }
+
+    /// Every slot of the universe (full-state collection filter).
+    pub fn full(universe: usize) -> SlotSet {
+        let mut set = SlotSet::empty(universe);
+        for s in 0..set.universe {
+            set.insert(s as u16);
+        }
+        set
+    }
+
+    /// Add a slot (must be inside the universe).
+    pub fn insert(&mut self, slot: u16) {
+        debug_assert!((slot as usize) < self.universe);
+        let (word, bit) = (slot as usize / 64, slot as usize % 64);
+        if self.bits[word] & (1 << bit) == 0 {
+            self.bits[word] |= 1 << bit;
+            self.count += 1;
+        }
+    }
+
+    /// Membership test.
+    #[inline]
+    pub fn contains(&self, slot: u16) -> bool {
+        let idx = slot as usize;
+        idx < self.universe && self.bits[idx / 64] & (1 << (idx % 64)) != 0
+    }
+
+    /// Slots in the set.
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    /// True when no slot is set.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Universe size.
+    pub fn universe(&self) -> usize {
+        self.universe
+    }
+
+    /// Member slots in ascending order.
+    pub fn slots(&self) -> Vec<u16> {
+        (0..self.universe).map(|s| s as u16).filter(|&s| self.contains(s)).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Slot map
+// ---------------------------------------------------------------------------
+
+/// Versioned slot→shard assignment. Epoch 0 is the canonical uniform map
+/// (`slot % shards`); every rebalance bumps the epoch by one.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SlotMap {
+    /// Routing epoch: strictly increasing across installs.
+    pub epoch: u64,
+    /// Shard count (max assignment + 1; grows when slots move to a new
+    /// shard id).
+    pub shards: u32,
+    assignment: Vec<u32>,
+}
+
+impl SlotMap {
+    /// The canonical epoch-0 map: `slot % shards`. With `shards` dividing
+    /// the universe this reproduces the historical `hash % shards` routes
+    /// exactly; either way the partition-subset optimization's modulo
+    /// structure holds (see `sync::router::partitions_for_slave`).
+    pub fn uniform(slots: usize, shards: u32) -> SlotMap {
+        assert!(shards >= 1, "cluster needs at least one shard");
+        let slots = slots.max(shards as usize).min(u16::MAX as usize + 1);
+        SlotMap {
+            epoch: 0,
+            shards,
+            assignment: (0..slots).map(|s| s as u32 % shards).collect(),
+        }
+    }
+
+    /// Universe size.
+    pub fn slots(&self) -> usize {
+        self.assignment.len()
+    }
+
+    /// Owning shard of a slot.
+    #[inline]
+    pub fn shard_of_slot(&self, slot: u16) -> u32 {
+        self.assignment[slot as usize % self.assignment.len()]
+    }
+
+    /// Owning slot of an id.
+    #[inline]
+    pub fn slot_of(&self, id: u64) -> u16 {
+        slot_of(id, self.assignment.len())
+    }
+
+    /// Owning shard of an id (the two-level route).
+    #[inline]
+    pub fn shard_of(&self, id: u64) -> u32 {
+        self.shard_of_slot(self.slot_of(id))
+    }
+
+    /// Slots owned by `shard`, ascending.
+    pub fn slots_of(&self, shard: u32) -> Vec<u16> {
+        (0..self.assignment.len())
+            .map(|s| s as u16)
+            .filter(|&s| self.shard_of_slot(s) == shard)
+            .collect()
+    }
+
+    /// Slots per shard (load view for the rebalance planner).
+    pub fn load(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.shards as usize];
+        for &a in &self.assignment {
+            counts[a as usize] += 1;
+        }
+        counts
+    }
+
+    /// True when this is still the canonical `slot % shards` layout (the
+    /// partition-subset read optimization is only sound then).
+    pub fn is_uniform(&self) -> bool {
+        self.assignment.iter().enumerate().all(|(s, &a)| a == s as u32 % self.shards)
+    }
+
+    /// The map after applying `moves` (`(slot, new owner)`): epoch + 1,
+    /// all other slots untouched (minimal disruption by construction).
+    /// Moving to a shard id ≥ `shards` grows the cluster.
+    pub fn rebalanced(&self, moves: &[(u16, u32)]) -> Result<SlotMap> {
+        let mut assignment = self.assignment.clone();
+        let mut shards = self.shards;
+        for &(slot, to) in moves {
+            if slot as usize >= assignment.len() {
+                return Err(Error::Routing(format!(
+                    "slot {slot} outside universe {}",
+                    assignment.len()
+                )));
+            }
+            assignment[slot as usize] = to;
+            shards = shards.max(to + 1);
+        }
+        Ok(SlotMap { epoch: self.epoch + 1, shards, assignment })
+    }
+
+    /// Serialize (meta-store / RPC payload).
+    pub fn encode(&self, w: &mut Writer) {
+        w.put_varint(self.epoch);
+        w.put_u32(self.shards);
+        w.put_varint(self.assignment.len() as u64);
+        for &a in &self.assignment {
+            w.put_varint(a as u64);
+        }
+    }
+
+    /// Deserialize; validates shape (assignments inside the shard count).
+    pub fn decode(r: &mut Reader) -> Result<SlotMap> {
+        let epoch = r.get_varint()?;
+        let shards = r.get_u32()?;
+        if shards == 0 {
+            return Err(Error::Codec("slot map with zero shards".into()));
+        }
+        let n = r.get_varint()? as usize;
+        if n == 0 || n > u16::MAX as usize + 1 {
+            return Err(Error::Codec(format!("slot map universe {n} out of range")));
+        }
+        let mut assignment = Vec::with_capacity(n);
+        for _ in 0..n {
+            let a = r.get_varint()?;
+            if a >= shards as u64 {
+                return Err(Error::Codec(format!("slot assigned to shard {a} of {shards}")));
+            }
+            assignment.push(a as u32);
+        }
+        Ok(SlotMap { epoch, shards, assignment })
+    }
+
+    /// Serialized bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        self.encode(&mut w);
+        w.into_bytes()
+    }
+
+    /// Parse serialized bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<SlotMap> {
+        SlotMap::decode(&mut Reader::new(bytes))
+    }
+}
+
+/// Shared, swappable slot-map cell: every [`crate::sync::Router`] clone
+/// holds one, so a single [`SlotMapCell::install`] re-routes trainer
+/// clients, pushers and shard guards mid-stream.
+pub struct SlotMapCell {
+    map: RwLock<Arc<SlotMap>>,
+    epoch: AtomicU64,
+}
+
+impl SlotMapCell {
+    /// Cell seeded with `map`.
+    pub fn new(map: SlotMap) -> SlotMapCell {
+        let epoch = map.epoch;
+        SlotMapCell { map: RwLock::new(Arc::new(map)), epoch: AtomicU64::new(epoch) }
+    }
+
+    /// Current map (cheap Arc clone; snapshot once per batch, not per id).
+    pub fn snapshot(&self) -> Arc<SlotMap> {
+        self.map.read().unwrap().clone()
+    }
+
+    /// Current routing epoch without taking the lock.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Swap in a newer map. Rejected unless the epoch strictly advances
+    /// and the universe is unchanged (the slot hash must stay stable).
+    pub fn install(&self, map: SlotMap) -> Result<Arc<SlotMap>> {
+        let mut cur = self.map.write().unwrap();
+        if map.epoch <= cur.epoch {
+            return Err(Error::MetaConflict(format!(
+                "slot-map epoch {} <= installed {}",
+                map.epoch, cur.epoch
+            )));
+        }
+        if map.slots() != cur.slots() {
+            return Err(Error::Routing(format!(
+                "slot universe changed: {} != {}",
+                map.slots(),
+                cur.slots()
+            )));
+        }
+        let next = Arc::new(map);
+        *cur = next.clone();
+        self.epoch.store(next.epoch, Ordering::Release);
+        Ok(next)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rebalance planning
+// ---------------------------------------------------------------------------
+
+/// The lowest-indexed `k` slots owned by `donor` (deterministic pick for
+/// a targeted donor→recipient move).
+pub fn pick_donor_slots(map: &SlotMap, donor: u32, k: usize) -> Result<Vec<u16>> {
+    let owned = map.slots_of(donor);
+    if owned.len() < k {
+        return Err(Error::State(format!(
+            "shard {donor} owns {} slots, cannot move {k}",
+            owned.len()
+        )));
+    }
+    Ok(owned[..k].to_vec())
+}
+
+/// Minimal-disruption rebalance toward `target_shards`: every surviving
+/// shard keeps its lowest-indexed slots up to its target share; only the
+/// surplus (and everything on shards being retired) moves, assigned to
+/// under-target shards in ascending order. Deterministic, and the move
+/// count equals the number of slots whose owner actually changes.
+pub fn balance_moves(map: &SlotMap, target_shards: u32) -> Vec<(u16, u32)> {
+    assert!(target_shards >= 1);
+    let slots = map.slots();
+    let base = slots / target_shards as usize;
+    let rem = slots % target_shards as usize;
+    let target_count =
+        |shard: u32| base + if (shard as usize) < rem { 1 } else { 0 };
+    let mut kept = vec![0usize; target_shards as usize];
+    let mut surplus: Vec<u16> = Vec::new();
+    for slot in (0..slots).map(|s| s as u16) {
+        let owner = map.shard_of_slot(slot);
+        if owner < target_shards && kept[owner as usize] < target_count(owner) {
+            kept[owner as usize] += 1;
+        } else {
+            surplus.push(slot);
+        }
+    }
+    let mut moves = Vec::with_capacity(surplus.len());
+    let mut next = surplus.into_iter();
+    for shard in 0..target_shards {
+        while kept[shard as usize] < target_count(shard) {
+            let slot = next.next().expect("surplus covers every deficit");
+            moves.push((slot, shard));
+            kept[shard as usize] += 1;
+        }
+    }
+    debug_assert!(next.next().is_none(), "surplus left unassigned");
+    moves
+}
+
+// ---------------------------------------------------------------------------
+// Meta-store publication
+// ---------------------------------------------------------------------------
+
+/// Meta key holding a model's authoritative slot map.
+pub fn meta_key(model: &str) -> String {
+    format!("/reshard/{model}/slotmap")
+}
+
+/// Publish `map` as the authoritative assignment (epoch-guarded: a stale
+/// epoch is rejected, so racing coordinators cannot roll the map back).
+pub fn publish(meta: &MetaStore, model: &str, map: &SlotMap) -> Result<u64> {
+    meta.put_if_newer(&meta_key(model), map.epoch, map.to_bytes())
+}
+
+/// Load the published map, if any.
+pub fn load(meta: &MetaStore, model: &str) -> Result<Option<SlotMap>> {
+    match meta.get_epochal(&meta_key(model)) {
+        Some((_, bytes, _)) => Ok(Some(SlotMap::from_bytes(&bytes)?)),
+        None => Ok(None),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Live migration
+// ---------------------------------------------------------------------------
+
+/// Catch-up loop knobs.
+#[derive(Debug, Clone)]
+pub struct MigrationOpts {
+    /// Dirty-epoch catch-up rounds before sealing regardless of
+    /// convergence.
+    pub max_catchup_rounds: usize,
+    /// Stop catching up once a round transfers at most this many rows
+    /// (the sealed hand-off window then only has to drain a tail this
+    /// small).
+    pub catchup_threshold: usize,
+}
+
+impl Default for MigrationOpts {
+    fn default() -> Self {
+        MigrationOpts { max_catchup_rounds: 6, catchup_threshold: 64 }
+    }
+}
+
+/// What a completed migration did.
+#[derive(Debug, Clone, Default)]
+pub struct MigrationReport {
+    pub slots_moved: usize,
+    /// Rows streamed by the slot-filtered base pass.
+    pub base_rows: usize,
+    pub catchup_rounds: usize,
+    /// Rows re-streamed by the catch-up rounds (dirty while copying).
+    pub catchup_rows: usize,
+    /// Rows of the last catch-up round — the convergence signal (how
+    /// much the sealed window will have to drain).
+    pub last_round_rows: usize,
+    /// Rows drained inside the sealed hand-off window.
+    pub final_rows: usize,
+    /// Rows silently purged from the donor after cutover.
+    pub purged_rows: usize,
+}
+
+/// One live donor→recipient slot transfer. Drive the stages in order:
+///
+/// ```text
+/// let mut t = SlotTransfer::new(donor, recipient, &slots, universe)?;
+/// t.run_catchup(&opts)?;          // base copy + dirty rounds, donor trains on
+/// t.seal()?;                      // moving slots NACK pushes from here
+/// t.final_sync()?;                // recipient now byte-identical
+/// /* caller: flush donor's sync window, drain consumers,
+///    install the bumped slot map, publish it */
+/// let report = t.finish()?;       // purge donor rows, lift the seal
+/// ```
+///
+/// The coordinator composes this with the streaming pipeline
+/// (`LocalCluster::migrate_slots`); the stages are separate so benches and
+/// a remote orchestrator (the `MIGRATE_*` RPCs) can drive the same
+/// protocol.
+pub struct SlotTransfer<'a> {
+    donor: &'a MasterShard,
+    recipient: &'a MasterShard,
+    set: SlotSet,
+    since: Option<u64>,
+    sealed: bool,
+    report: MigrationReport,
+}
+
+impl<'a> SlotTransfer<'a> {
+    /// Plan a transfer of `slots` (all currently on `donor`).
+    pub fn new(
+        donor: &'a MasterShard,
+        recipient: &'a MasterShard,
+        slots: &[u16],
+        universe: usize,
+    ) -> Result<SlotTransfer<'a>> {
+        let set = SlotSet::from_slots(slots, universe)?;
+        if set.is_empty() {
+            return Err(Error::State("no slots to migrate".into()));
+        }
+        let report = MigrationReport { slots_moved: set.len(), ..MigrationReport::default() };
+        Ok(SlotTransfer { donor, recipient, set, since: None, sealed: false, report })
+    }
+
+    /// Slots being moved.
+    pub fn slot_set(&self) -> &SlotSet {
+        &self.set
+    }
+
+    /// One copy round: cut the donor's epoch, stream everything in the
+    /// moved slots stamped after the previous cut (everything at all on
+    /// the first round), apply at the recipient (rows land dirty there so
+    /// its next delta checkpoint seals them). Writers racing the scan
+    /// stamp past the cut and are re-captured next round — duplicates,
+    /// never losses (the PR 4 dirty-epoch contract).
+    fn round(&mut self) -> Result<usize> {
+        let cut = self.donor.cut_epoch();
+        let chunk = self.donor.encode_slot_chunk(self.since, &self.set);
+        self.recipient.apply_slot_chunk(&chunk.bytes)?;
+        self.since = Some(cut);
+        Ok(chunk.upserts + chunk.deletes)
+    }
+
+    /// Base copy + dirty-epoch catch-up rounds. The donor keeps training
+    /// throughout: collection holds one stripe *read* lock at a time.
+    pub fn run_catchup(&mut self, opts: &MigrationOpts) -> Result<()> {
+        self.report.base_rows = self.round()?;
+        self.report.last_round_rows = self.report.base_rows;
+        for _ in 0..opts.max_catchup_rounds {
+            let rows = self.round()?;
+            self.report.catchup_rounds += 1;
+            self.report.catchup_rows += rows;
+            self.report.last_round_rows = rows;
+            if rows <= opts.catchup_threshold {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Seal the moving slots on the donor. Returns only after every
+    /// in-flight push has drained (the seal takes the write side of the
+    /// lock pushes hold in read mode across their apply), so everything
+    /// applied before this call is visible to [`Self::final_sync`] and
+    /// nothing can mutate the slots after it. Errors if another hand-off
+    /// already holds the donor's seal (nothing is changed then — do not
+    /// abort, that would lift the *other* migration's barrier).
+    pub fn seal(&mut self) -> Result<()> {
+        self.donor.seal_slots(self.set.clone())?;
+        self.sealed = true;
+        Ok(())
+    }
+
+    /// The final hand-off delta under the seal; afterwards the
+    /// recipient's copy of the moved slots is byte-identical to the
+    /// donor's (values *and* row metadata).
+    pub fn final_sync(&mut self) -> Result<()> {
+        debug_assert!(self.sealed, "final_sync before seal");
+        self.report.final_rows = self.round()?;
+        Ok(())
+    }
+
+    /// Release the donor: purge the moved rows silently (no tombstones,
+    /// no dirty stamps — the recipient's lineage owns them now) and lift
+    /// the seal. Call after the bumped slot map is installed **and** the
+    /// recipient's copy is durable (WAL-journaled or checkpointed — the
+    /// coordinator does this before releasing): after the purge, nothing
+    /// but the recipient holds the rows, so a recipient crash inside an
+    /// unjournaled window would otherwise lose them.
+    pub fn finish(mut self) -> Result<MigrationReport> {
+        self.report.purged_rows = self.donor.purge_slots(&self.set);
+        if self.sealed {
+            self.donor.unseal_slots();
+        }
+        Ok(self.report)
+    }
+
+    /// Abort a migration that failed mid-hand-off: lift the seal and keep
+    /// the donor authoritative (nothing is purged; the recipient's copy
+    /// is orphaned but harmless — it is never routed to, and a later
+    /// retry's **base pass first purges it** before re-copying, so even
+    /// rows the donor deleted in between cannot be resurrected). Safe to
+    /// call at any stage before the slot-map cutover.
+    pub fn abort(self) {
+        if self.sealed {
+            self.donor.unseal_slots();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::ManualClock;
+
+    #[test]
+    fn slot_set_basics() {
+        let mut s = SlotSet::empty(100);
+        assert!(s.is_empty());
+        s.insert(0);
+        s.insert(99);
+        s.insert(99); // idempotent
+        assert_eq!(s.len(), 2);
+        assert!(s.contains(0) && s.contains(99) && !s.contains(50));
+        assert_eq!(s.slots(), vec![0, 99]);
+        assert!(SlotSet::from_slots(&[100], 100).is_err());
+        assert_eq!(SlotSet::full(64).len(), 64);
+    }
+
+    #[test]
+    fn uniform_map_matches_modulo_and_balances() {
+        let m = SlotMap::uniform(1024, 4);
+        assert!(m.is_uniform());
+        assert_eq!(m.epoch, 0);
+        for id in 0..10_000u64 {
+            // With shards dividing the universe, two-level == one-level.
+            assert_eq!(m.shard_of(id), (fxhash64(id) % 4) as u32);
+        }
+        assert_eq!(m.load(), vec![256; 4]);
+        // Universe never smaller than the shard count.
+        assert_eq!(SlotMap::uniform(2, 8).slots(), 8);
+    }
+
+    #[test]
+    fn rebalanced_moves_only_named_slots_and_bumps_epoch() {
+        let m = SlotMap::uniform(64, 4);
+        let moved = m.slots_of(3);
+        let moves: Vec<(u16, u32)> = moved.iter().map(|&s| (s, 1)).collect();
+        let n = m.rebalanced(&moves).unwrap();
+        assert_eq!(n.epoch, 1);
+        assert!(!n.is_uniform());
+        for s in 0..64u16 {
+            if moved.contains(&s) {
+                assert_eq!(n.shard_of_slot(s), 1);
+            } else {
+                assert_eq!(n.shard_of_slot(s), m.shard_of_slot(s), "slot {s} disrupted");
+            }
+        }
+        assert!(n.slots_of(3).is_empty());
+        // Growing: a move to a new shard id extends the cluster.
+        let g = m.rebalanced(&[(0, 7)]).unwrap();
+        assert_eq!(g.shards, 8);
+        assert!(m.rebalanced(&[(200, 0)]).is_err());
+    }
+
+    #[test]
+    fn encode_decode_round_trip_and_validation() {
+        let m = SlotMap::uniform(128, 5).rebalanced(&[(3, 4), (9, 0)]).unwrap();
+        let bytes = m.to_bytes();
+        assert_eq!(SlotMap::from_bytes(&bytes).unwrap(), m);
+        // Truncation errors cleanly.
+        assert!(SlotMap::from_bytes(&bytes[..bytes.len() / 2]).is_err());
+        // Out-of-range assignment rejected.
+        let mut w = Writer::new();
+        w.put_varint(1);
+        w.put_u32(2);
+        w.put_varint(1);
+        w.put_varint(5); // shard 5 of 2
+        assert!(SlotMap::from_bytes(&w.into_bytes()).is_err());
+    }
+
+    #[test]
+    fn cell_installs_monotonically() {
+        let cell = SlotMapCell::new(SlotMap::uniform(64, 4));
+        assert_eq!(cell.epoch(), 0);
+        let next = cell.snapshot().rebalanced(&[(0, 1)]).unwrap();
+        cell.install(next.clone()).unwrap();
+        assert_eq!(cell.epoch(), 1);
+        assert_eq!(cell.snapshot().shard_of_slot(0), 1);
+        // Same or older epoch rejected.
+        assert!(cell.install(next).is_err());
+        assert!(cell.install(SlotMap::uniform(64, 4)).is_err());
+        // Universe change rejected.
+        let mut other = SlotMap::uniform(32, 4);
+        other.epoch = 9;
+        assert!(cell.install(other).is_err());
+    }
+
+    #[test]
+    fn balance_moves_is_minimal_and_even() {
+        // Shrink 4 -> 3 over 64 slots: only shard 3's slots move.
+        let m = SlotMap::uniform(64, 4);
+        let moves = balance_moves(&m, 3);
+        let n = m.rebalanced(&moves).unwrap();
+        let diff = (0..64u16).filter(|&s| n.shard_of_slot(s) != m.shard_of_slot(s)).count();
+        assert_eq!(diff, moves.len(), "a move re-assigned a slot to its current owner");
+        let load = n.load();
+        assert_eq!(load.iter().take(3).sum::<usize>(), 64);
+        for shard in 0..3 {
+            assert!((load[shard] as i64 - 64 / 3).abs() <= 1, "load {load:?}");
+        }
+        // Grow 4 -> 6: every new shard gets its share, survivors only
+        // shed surplus.
+        let moves = balance_moves(&m, 6);
+        let g = m.rebalanced(&moves).unwrap();
+        let load = g.load();
+        for shard in 0..6 {
+            assert!((load[shard] as i64 - 64 / 6).abs() <= 1, "load {load:?}");
+        }
+        // Determinism.
+        assert_eq!(balance_moves(&m, 6), moves);
+        // No-op when already balanced.
+        assert!(balance_moves(&m, 4).is_empty());
+    }
+
+    #[test]
+    fn pick_donor_slots_validates_ownership() {
+        let m = SlotMap::uniform(64, 4);
+        let picked = pick_donor_slots(&m, 2, 4).unwrap();
+        assert_eq!(picked.len(), 4);
+        assert!(picked.iter().all(|&s| m.shard_of_slot(s) == 2));
+        assert!(pick_donor_slots(&m, 2, 17).is_err()); // owns only 16
+    }
+
+    #[test]
+    fn meta_publish_is_epoch_guarded() {
+        let meta = MetaStore::new(Arc::new(ManualClock::new(0)));
+        let m0 = SlotMap::uniform(64, 2);
+        // Epoch 0 publishes only onto an absent key.
+        publish(&meta, "ctr", &m0).unwrap();
+        assert!(publish(&meta, "ctr", &m0).is_err(), "same epoch re-published");
+        let m1 = m0.rebalanced(&[(5, 1)]).unwrap();
+        publish(&meta, "ctr", &m1).unwrap();
+        assert!(publish(&meta, "ctr", &m0).is_err(), "rollback accepted");
+        let loaded = load(&meta, "ctr").unwrap().unwrap();
+        assert_eq!(loaded, m1);
+        assert_eq!(load(&meta, "other").unwrap(), None);
+    }
+}

@@ -333,6 +333,32 @@ impl Scheduler {
         self.store.latest_version(&self.model)
     }
 
+    // -- elastic resharding (slot-map stewardship) -----------------------------
+
+    /// Publish `map` as the model's authoritative slot assignment
+    /// (epoch-guarded through the coordination store: a stale epoch is
+    /// rejected, so racing coordinators cannot roll the routing back).
+    pub fn publish_slot_map(&self, map: &crate::reshard::SlotMap) -> Result<u64> {
+        crate::reshard::publish(&self.meta, &self.model, map)
+    }
+
+    /// The published slot map, if any — for orchestrators and bootstrap
+    /// tooling (automatic node-restart bootstrap is a ROADMAP follow-up;
+    /// `weips slave --consume-all` is the manual escape hatch meanwhile).
+    pub fn load_slot_map(&self) -> Option<crate::reshard::SlotMap> {
+        crate::reshard::load(&self.meta, &self.model).ok().flatten()
+    }
+
+    /// Minimal-disruption rebalance plan toward `target_shards`: only
+    /// surplus slots (and everything on retiring shards) move.
+    pub fn plan_rebalance(
+        &self,
+        map: &crate::reshard::SlotMap,
+        target_shards: u32,
+    ) -> Vec<(u16, u32)> {
+        crate::reshard::balance_moves(map, target_shards)
+    }
+
     /// Partial recovery (§4.2.1e): restore exactly one crashed shard from
     /// the newest checkpoint — "the entire cluster will not be restarted,
     /// and only this shard will recover". Chain-aware: a base restores
@@ -520,6 +546,25 @@ mod tests {
         let got = sched.recover_shard(&fresh2).unwrap();
         assert_eq!(got, 5);
         assert_eq!(fresh2.snapshot(), masters[0].snapshot());
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn slot_map_stewardship_publishes_and_plans() {
+        use crate::reshard::SlotMap;
+        let (sched, _, _, base) = setup(60_000);
+        assert!(sched.load_slot_map().is_none());
+        let m0 = SlotMap::uniform(64, 3);
+        sched.publish_slot_map(&m0).unwrap();
+        assert_eq!(sched.load_slot_map().unwrap(), m0);
+        // Plan a shrink to 2 shards, apply, publish the bumped epoch.
+        let moves = sched.plan_rebalance(&m0, 2);
+        assert!(!moves.is_empty());
+        let m1 = m0.rebalanced(&moves).unwrap();
+        sched.publish_slot_map(&m1).unwrap();
+        assert_eq!(sched.load_slot_map().unwrap().epoch, 1);
+        // Rollback to the stale epoch is rejected.
+        assert!(sched.publish_slot_map(&m0).is_err());
         std::fs::remove_dir_all(base).ok();
     }
 

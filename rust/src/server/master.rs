@@ -20,12 +20,19 @@ use crate::codec::{Decode, Encode, Reader, Writer};
 use crate::config::ModelSpec;
 use crate::net::Service;
 use crate::optim::BatchedFtrl;
-use crate::proto::{Ack, CkptRequest, DensePull, DenseValues, SparsePull, SparsePush, SparseValues};
+use crate::proto::{
+    Ack, CkptRequest, DensePull, DenseValues, SlotPull, SlotSeal, SparsePull, SparsePush,
+    SparseValues,
+};
 use crate::runtime::Engine;
 use crate::server::methods;
+use crate::reshard::{SlotMap, SlotSet};
 use crate::storage::{CheckpointStore, CkptKind, CkptManifest};
 use crate::sync::collector::Collector;
-use crate::table::{aggregate_grads, DenseOpt, DenseTable, SparseTable, StripedSparseTable};
+use crate::sync::router::Router;
+use crate::table::{
+    aggregate_grads, DeltaRow, DenseOpt, DenseTable, SparseTable, StripedSparseTable,
+};
 use crate::util::clock::Clock;
 use crate::{Error, Result};
 
@@ -82,6 +89,18 @@ pub struct MasterShard {
     /// Shard-level checkpoint epoch counter; all sparse tables' write
     /// epochs move in lockstep with it (see [`Self::cut_epoch`]).
     ckpt_epoch: AtomicU64,
+    /// Slot-route guard (elastic resharding): when installed, pushes for
+    /// ids this shard does not own under the current slot map are NACKed
+    /// with [`Error::StaleRoute`] *before* anything applies — a stale
+    /// client re-splits by the bumped map and retries, so updates are
+    /// never silently dropped or doubly applied. `None` (standalone
+    /// shards, unit tests) costs nothing.
+    route_guard: RwLock<Option<Router>>,
+    /// Slots sealed for a live-migration hand-off. Pushes hold the read
+    /// side across their apply, so [`Self::seal_slots`] (write side)
+    /// returns only after every in-flight push has drained — the
+    /// happens-before edge the final migration delta relies on.
+    sealed_slots: RwLock<Option<SlotSet>>,
     pub metrics: MasterMetrics,
 }
 
@@ -148,6 +167,8 @@ impl MasterShard {
             clock,
             frozen: AtomicBool::new(false),
             ckpt_epoch: AtomicU64::new(1),
+            route_guard: RwLock::new(None),
+            sealed_slots: RwLock::new(None),
             metrics: MasterMetrics::default(),
         })
     }
@@ -179,22 +200,58 @@ impl MasterShard {
 
     /// Pull one slot (or full rows with `slot == "*"`). Missing ids read 0.
     /// Takes the state lock in read mode; contention is per stripe.
+    ///
+    /// Route-guarded like pushes: once a migration cutover re-owns an
+    /// id, a pull still routed here by a stale map NACKs with
+    /// [`Error::StaleRoute`] instead of silently reading zeros off the
+    /// purged donor (the client re-splits and retries). The ownership
+    /// check runs **after** the value read: the donor purge strictly
+    /// follows the map install, so values read while still owned are
+    /// live, and a read that could have raced the purge fails the
+    /// post-read check and is discarded — no TOCTOU window. Sealed-but-
+    /// owned slots still serve; their rows are live until the cutover.
     pub fn sparse_pull(&self, req: &SparsePull) -> Result<SparseValues> {
         self.metrics.pulls.fetch_add(1, Ordering::Relaxed);
         let idx = self.table_index(&req.table)? as usize;
         let now = self.clock.now_ms();
         let state = self.state.read().unwrap();
         let table = &state.sparse[idx];
-        if req.slot == "*" {
+        let out = if req.slot == "*" {
             let width = table.optimizer().row_width(table.dim());
             let mut values = vec![0.0f32; req.ids.len() * width];
             table.pull_rows(&req.ids, &mut values);
-            return Ok(SparseValues { width: width as u32, values });
+            SparseValues { width: width as u32, values }
+        } else {
+            let dim = table.dim();
+            let mut values = vec![0.0f32; req.ids.len() * dim];
+            table.pull_slot(&req.ids, &req.slot, now, &mut values)?;
+            SparseValues { width: dim as u32, values }
+        };
+        drop(state);
+        self.check_owned(&req.ids, "pull")?;
+        Ok(out)
+    }
+
+    /// NACK with [`Error::StaleRoute`] unless every id is owned by this
+    /// shard under the guard's current slot map (no-op without a guard).
+    /// Shared by the push gate and the post-read pull check.
+    fn check_owned(&self, ids: &[u64], what: &str) -> Result<()> {
+        let guard = self.route_guard.read().unwrap().clone();
+        if let Some(router) = &guard {
+            let map = router.snapshot();
+            for &id in ids {
+                let slot = map.slot_of(id);
+                let owner = map.shard_of_slot(slot);
+                if owner != self.shard_id {
+                    return Err(Error::StaleRoute(format!(
+                        "shard {}: {what} of id {id} (slot {slot}) owned by shard {owner} at \
+                         routing epoch {}",
+                        self.shard_id, map.epoch
+                    )));
+                }
+            }
         }
-        let dim = table.dim();
-        let mut values = vec![0.0f32; req.ids.len() * dim];
-        table.pull_slot(&req.ids, &req.slot, now, &mut values)?;
-        Ok(SparseValues { width: dim as u32, values })
+        Ok(())
     }
 
     /// Apply a gradient push: aggregate duplicates, entry-filter, optimize
@@ -207,6 +264,13 @@ impl MasterShard {
         self.metrics.pushes.fetch_add(1, Ordering::Relaxed);
         let idx = self.table_index(&req.table)? as usize;
         let now = self.clock.now_ms();
+        // Slot-route gate, taken *before* the state lock (the one
+        // ordering rule between the two: sealed → state, shared with the
+        // expire path) and held in read mode across the whole apply, so
+        // a migration seal (write side) is a barrier — once `seal_slots`
+        // returns, no in-flight push can still be mutating the sealed
+        // slots.
+        let sealed = self.sealed_slots.read().unwrap();
         let state = self.state.read().unwrap();
         let table = &state.sparse[idx];
         let dim = table.dim();
@@ -218,6 +282,24 @@ impl MasterShard {
             )));
         }
         let (uids, ugrads) = aggregate_grads(&req.ids, &req.grads, dim);
+
+        // Rejection happens before anything applies, so a NACKed push
+        // retried by the client is applied exactly once. The sealed gate
+        // stands on its own (a remote `weips master` driven purely by
+        // the SEAL_SLOTS RPC has no route guard) — it hashes against the
+        // seal's own universe.
+        if let Some(set) = sealed.as_ref() {
+            for &id in &uids {
+                let slot = crate::reshard::slot_of(id, set.universe());
+                if set.contains(slot) {
+                    return Err(Error::StaleRoute(format!(
+                        "shard {}: slot {slot} sealed for migration hand-off",
+                        self.shard_id
+                    )));
+                }
+            }
+        }
+        self.check_owned(&uids, "push")?;
         self.metrics.push_rows.fetch_add(uids.len() as u64, Ordering::Relaxed);
 
         let touched: Vec<u64> = if let Some(kernel) = self.batched[idx].as_ref() {
@@ -308,6 +390,15 @@ impl MasterShard {
         if ttl_ms == 0 {
             return 0;
         }
+        // Hold the seal gate in read mode for the whole pass: an expire
+        // racing a migration hand-off could evict a moved row *after* the
+        // final delta and stream a delete that kills the recipient's live
+        // copy downstream. Sealed windows are milliseconds; skip and let
+        // the next control tick expire.
+        let sealed = self.sealed_slots.read().unwrap();
+        if sealed.is_some() {
+            return 0;
+        }
         let now = self.clock.now_ms();
         let state = self.state.read().unwrap();
         let mut total = 0;
@@ -364,14 +455,14 @@ impl MasterShard {
         for t in state.sparse.iter() {
             t.decode_rows(&mut r)?;
         }
-        // Dynamic routing: drop rows that no longer belong to this shard.
+        // Dynamic routing: drop rows that no longer belong to this shard
+        // (one map snapshot for the whole pass — per-id routes must not
+        // straddle a concurrent slot-map install).
         if let Some((router, my_shard)) = router {
+            let map = router.snapshot();
             for t in state.sparse.iter() {
-                let foreign: Vec<u64> = t
-                    .ids()
-                    .into_iter()
-                    .filter(|id| router.shard_of(*id) != my_shard)
-                    .collect();
+                let foreign: Vec<u64> =
+                    t.ids().into_iter().filter(|id| map.shard_of(*id) != my_shard).collect();
                 for id in foreign {
                     t.delete(id);
                 }
@@ -421,6 +512,201 @@ impl MasterShard {
         for t in &state.sparse {
             t.set_write_epoch(epoch);
         }
+    }
+
+    // -- elastic resharding (slot routing, live migration) ---------------------
+
+    /// Install the master cluster's shared router as this shard's
+    /// slot-route guard: pushes for ids the current slot map assigns
+    /// elsewhere NACK with [`Error::StaleRoute`].
+    pub fn set_route_guard(&self, router: Router) {
+        *self.route_guard.write().unwrap() = Some(router);
+    }
+
+    /// Current routing epoch seen by the guard (0 when no guard).
+    pub fn route_epoch(&self) -> u64 {
+        self.route_guard.read().unwrap().as_ref().map(|r| r.epoch()).unwrap_or(0)
+    }
+
+    /// Install a bumped slot map into the guard's shared cell (remote
+    /// cutover RPC). Errors without a guard or on a stale epoch.
+    pub fn install_slot_map(&self, map: SlotMap) -> Result<()> {
+        match self.route_guard.read().unwrap().as_ref() {
+            Some(router) => {
+                router.install(map)?;
+                Ok(())
+            }
+            None => Err(Error::State("no route guard installed".into())),
+        }
+    }
+
+    /// Validate a caller-supplied slot universe: it must fit the u16
+    /// slot space (larger values would alias through `slot_of`'s modulo
+    /// and select the wrong rows — on a purge, unrecoverably) and, when
+    /// a route guard is installed, match the guard's map (a mismatched
+    /// universe would filter rows by a *different* slot hash — silent
+    /// corruption, not an error). Guard-less shards accept any in-range
+    /// universe: the orchestrator is then the single source of truth.
+    pub fn check_universe(&self, universe: usize) -> Result<()> {
+        if universe == 0 || universe > u16::MAX as usize + 1 {
+            return Err(Error::Routing(format!(
+                "shard {}: slot universe {universe} out of range",
+                self.shard_id
+            )));
+        }
+        if let Some(router) = self.route_guard.read().unwrap().as_ref() {
+            let slots = router.snapshot().slots();
+            if slots != universe {
+                return Err(Error::Routing(format!(
+                    "shard {}: slot universe {universe} != routed {slots}",
+                    self.shard_id
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Seal `slots` for a migration hand-off: returns only after every
+    /// in-flight push has drained (pushes hold the read side across their
+    /// apply); afterwards pushes touching the slots NACK until the map
+    /// cutover re-routes them. Rejected while another seal is active —
+    /// overwriting would silently lift a concurrent migration's barrier
+    /// (one hand-off per donor at a time).
+    pub fn seal_slots(&self, slots: SlotSet) -> Result<()> {
+        let mut sealed = self.sealed_slots.write().unwrap();
+        if sealed.is_some() {
+            return Err(Error::State(format!(
+                "shard {}: a migration hand-off is already sealed",
+                self.shard_id
+            )));
+        }
+        *sealed = Some(slots);
+        Ok(())
+    }
+
+    /// Lift the migration seal.
+    pub fn unseal_slots(&self) {
+        *self.sealed_slots.write().unwrap() = None;
+    }
+
+    /// Encode everything in `slots` mutated since `since` (`None` = every
+    /// row regardless of epoch — the migration base pass) as a slot
+    /// chunk: header carrying the slot set, then per-table sections in
+    /// the delta wire shape; no dense tail (dense state is replicated, it
+    /// does not migrate). Collection holds one stripe *read* lock at a
+    /// time — the donor keeps training.
+    pub fn encode_slot_chunk(&self, since: Option<u64>, slots: &SlotSet) -> DeltaChunk {
+        let state = self.state.read().unwrap();
+        let mut w = Writer::with_capacity(1 << 12);
+        w.put_u32(self.shard_id);
+        w.put_varint(match since {
+            None => 0,
+            Some(cut) => cut + 1,
+        });
+        // The slot set travels with the chunk so the recipient can clear
+        // orphans (below) without out-of-band coordination.
+        w.put_varint(slots.universe() as u64);
+        let members = slots.slots();
+        w.put_varint(members.len() as u64);
+        for s in &members {
+            w.put_varint(*s as u64);
+        }
+        w.put_varint(state.sparse.len() as u64);
+        let mut upserts = 0;
+        let mut deletes = 0;
+        for t in &state.sparse {
+            let (u, d) = t.encode_slot_delta_rows(since, slots, &mut w);
+            upserts += u;
+            deletes += d;
+        }
+        DeltaChunk { bytes: w.into_bytes(), upserts, deletes }
+    }
+
+    /// Apply a slot chunk on the migration recipient. Rows land stamped
+    /// with each table's *current* write epoch (dirty), so the next WAL
+    /// journal tick or delta checkpoint seals the new ownership — the
+    /// coordinator establishes that durability *before* releasing the
+    /// donor, closing the crash window. A **base** chunk (`since = 0`)
+    /// first purges the recipient's copy of the slots: a retry after an
+    /// aborted earlier attempt must not resurrect rows the donor deleted
+    /// in between. Returns (rows upserted, deleted).
+    pub fn apply_slot_chunk(&self, bytes: &[u8]) -> Result<(usize, usize)> {
+        let mut r = Reader::new(bytes);
+        let _src_shard = r.get_u32()?;
+        let since = r.get_varint()?;
+        let universe = r.get_varint()? as usize;
+        if universe == 0 || universe > u16::MAX as usize + 1 {
+            return Err(Error::Checkpoint(format!("slot chunk universe {universe} invalid")));
+        }
+        // Same gate as the other migration RPCs: a chunk hashed over a
+        // different universe would purge/apply the wrong id set.
+        self.check_universe(universe)?;
+        let members = crate::proto::read_slot_list(&mut r)?;
+        let set = SlotSet::from_slots(&members, universe)?;
+        let n_sparse = r.get_varint()? as usize;
+        let state = self.state.read().unwrap();
+        if n_sparse != state.sparse.len() {
+            return Err(Error::Checkpoint(format!(
+                "slot chunk has {n_sparse} sparse tables, spec has {}",
+                state.sparse.len()
+            )));
+        }
+        if since == 0 {
+            for t in state.sparse.iter() {
+                t.purge_slots(&set);
+            }
+        }
+        let mut upserts = 0;
+        let mut deletes = 0;
+        for t in state.sparse.iter() {
+            let stamp = t.write_epoch();
+            let (u, d) = t.decode_delta_rows(&mut r, stamp)?;
+            upserts += u;
+            deletes += d;
+        }
+        Ok((upserts, deletes))
+    }
+
+    /// Slot-filtered row collection per table (`None` = all rows) —
+    /// migration sizing and the byte-identity drills.
+    pub fn collect_slot_delta(
+        &self,
+        since: Option<u64>,
+        slots: &SlotSet,
+    ) -> Vec<(String, Vec<DeltaRow>, Vec<u64>)> {
+        let state = self.state.read().unwrap();
+        state
+            .sparse
+            .iter()
+            .map(|t| {
+                let (up, del) = t.collect_slot_delta(since, slots);
+                (t.name().to_string(), up, del)
+            })
+            .collect()
+    }
+
+    /// Silently drop every row in `slots` across sparse tables — no
+    /// tombstones, no dirty stamps, no sync deletes (the migration
+    /// recipient's lineage owns the rows; a donor-side delete record
+    /// would wrongly evict them downstream). Returns rows removed.
+    pub fn purge_slots(&self, slots: &SlotSet) -> usize {
+        let state = self.state.read().unwrap();
+        state.sparse.iter().map(|t| t.purge_slots(slots)).sum()
+    }
+
+    /// Drop rows the current slot map assigns to other shards (post-
+    /// recovery hygiene: a restored chain predates slot moves).
+    pub fn purge_foreign_rows(&self, map: &SlotMap) -> usize {
+        let mut foreign = SlotSet::empty(map.slots());
+        for slot in (0..map.slots()).map(|s| s as u16) {
+            if map.shard_of_slot(slot) != self.shard_id {
+                foreign.insert(slot);
+            }
+        }
+        if foreign.is_empty() {
+            return 0;
+        }
+        self.purge_slots(&foreign)
     }
 
     /// Enable/disable tombstone tracking on every sparse table. Off for
@@ -571,13 +857,14 @@ impl MasterShard {
             return Err(Error::Checkpoint("table count mismatch".into()));
         }
         let now = self.clock.now_ms();
+        let map = router.snapshot();
         let mut absorbed = 0;
         for t in state.sparse.iter() {
             // Decode into a scratch table, then filter-copy.
             let mut scratch = SparseTable::new(t.name(), t.dim(), t.optimizer().clone(), 1);
             scratch.decode_rows(&mut r)?;
             for (id, row) in scratch.iter() {
-                if router.shard_of(*id) == my_shard {
+                if map.shard_of(*id) == my_shard {
                     t.upsert_row(*id, &row.values, now)?;
                     absorbed += 1;
                 }
@@ -804,6 +1091,45 @@ impl Service for MasterService {
             }
             methods::STATS => Ok(self.shard.stats_json().into_bytes()),
             methods::PING => Ok(Ack::ok().to_bytes()),
+            methods::MIGRATE_PULL => {
+                let req = SlotPull::from_bytes(payload)?;
+                self.shard.check_universe(req.universe as usize)?;
+                let set = SlotSet::from_slots(&req.slots, req.universe as usize)?;
+                let since = if req.since == 0 { None } else { Some(req.since - 1) };
+                Ok(self.shard.encode_slot_chunk(since, &set).bytes)
+            }
+            methods::MIGRATE_APPLY => {
+                self.shard.apply_slot_chunk(payload)?;
+                Ok(Ack::ok().to_bytes())
+            }
+            methods::SEAL_SLOTS => {
+                let req = SlotSeal::from_bytes(payload)?;
+                self.shard.check_universe(req.universe as usize)?;
+                if req.slots.is_empty() {
+                    self.shard.unseal_slots();
+                } else {
+                    self.shard
+                        .seal_slots(SlotSet::from_slots(&req.slots, req.universe as usize)?)?;
+                }
+                Ok(Ack::ok().to_bytes())
+            }
+            methods::RELEASE_SLOTS => {
+                // The remote release stage: purge the moved slots
+                // silently and lift the seal — call only after the new
+                // slot map is installed everywhere.
+                let req = SlotSeal::from_bytes(payload)?;
+                self.shard.check_universe(req.universe as usize)?;
+                let set = SlotSet::from_slots(&req.slots, req.universe as usize)?;
+                self.shard.purge_slots(&set);
+                self.shard.unseal_slots();
+                Ok(Ack::ok().to_bytes())
+            }
+            methods::ROUTE_EPOCH => Ok(self.shard.route_epoch().to_le_bytes().to_vec()),
+            methods::INSTALL_SLOT_MAP => {
+                let map = SlotMap::from_bytes(payload)?;
+                self.shard.install_slot_map(map)?;
+                Ok(Ack::ok().to_bytes())
+            }
             m => Err(Error::Rpc(format!("master: unknown method {m}"))),
         }
     }
@@ -1071,6 +1397,190 @@ mod tests {
         assert_eq!(m3.dirty_counts(0), (0, 0));
         m3.apply_delta(&chunk.bytes, true).unwrap();
         assert_eq!(m3.dirty_counts(0), (2, 0));
+    }
+
+    #[test]
+    fn route_guard_nacks_foreign_and_sealed_pushes() {
+        use crate::reshard::SlotSet;
+        use crate::sync::Router;
+        let (m, _) = shard(ModelKind::Lr); // shard_id 0
+        let router = Router::with_slots(2, 16);
+        m.set_route_guard(router.clone());
+        let map = router.snapshot();
+        let mine: u64 = (0..1000).find(|&i| map.shard_of(i) == 0).unwrap();
+        let foreign: u64 = (0..1000).find(|&i| map.shard_of(i) == 1).unwrap();
+        push(&m, "w", vec![mine], vec![1.0]);
+        let err = m
+            .sparse_push(&SparsePush {
+                model: "ctr".into(),
+                table: "w".into(),
+                ids: vec![foreign],
+                grads: vec![1.0],
+            })
+            .unwrap_err();
+        assert!(err.is_stale_route(), "{err}");
+        assert_eq!(m.total_rows(), 1, "NACKed push partially applied");
+        // Sealed slot: pushes NACK until unseal, nothing is dropped
+        // silently.
+        m.seal_slots(SlotSet::from_slots(&[map.slot_of(mine)], 16).unwrap()).unwrap();
+        assert!(m
+            .sparse_push(&SparsePush {
+                model: "ctr".into(),
+                table: "w".into(),
+                ids: vec![mine],
+                grads: vec![1.0],
+            })
+            .unwrap_err()
+            .is_stale_route());
+        m.unseal_slots();
+        push(&m, "w", vec![mine], vec![1.0]);
+        // Cutover: installing a map that moves `mine`'s slot away makes
+        // the shard NACK it permanently (client re-routes).
+        assert_eq!(m.route_epoch(), 0);
+        let bumped = map.rebalanced(&[(map.slot_of(mine), 1)]).unwrap();
+        m.install_slot_map(bumped).unwrap();
+        assert_eq!(m.route_epoch(), 1);
+        assert!(m
+            .sparse_push(&SparsePush {
+                model: "ctr".into(),
+                table: "w".into(),
+                ids: vec![mine],
+                grads: vec![1.0],
+            })
+            .unwrap_err()
+            .is_stale_route());
+        // Pulls NACK too after the cutover — never silent zeros off a
+        // (soon to be) purged donor.
+        assert!(m
+            .sparse_pull(&SparsePull {
+                model: "ctr".into(),
+                table: "w".into(),
+                ids: vec![mine],
+                slot: "w".into(),
+            })
+            .unwrap_err()
+            .is_stale_route());
+    }
+
+    #[test]
+    fn slot_chunks_move_rows_dirty_and_purge_is_silent() {
+        use crate::reshard::{SlotMap, SlotSet};
+        let (donor, _) = shard(ModelKind::Fm);
+        for i in 0..80u64 {
+            push(&donor, "w", vec![i], vec![0.5]);
+            push(&donor, "v", vec![i], vec![0.1, -0.1]);
+        }
+        let universe = 16usize;
+        let map = SlotMap::uniform(universe, 4);
+        let set = SlotSet::from_slots(&map.slots_of(3), universe).unwrap();
+        let (recip, _) = shard(ModelKind::Fm);
+        let cut = recip.cut_epoch();
+        let chunk = donor.encode_slot_chunk(None, &set);
+        assert!(chunk.upserts > 0 && chunk.deletes == 0);
+        let (up, del) = recip.apply_slot_chunk(&chunk.bytes).unwrap();
+        assert_eq!((up, del), (chunk.upserts, 0));
+        // Rows land dirty on the recipient: its next delta seals them.
+        assert_eq!(recip.dirty_counts(cut).0, chunk.upserts);
+        // Byte-identity, values *and* metadata.
+        assert_eq!(
+            recip.collect_slot_delta(None, &set),
+            donor.collect_slot_delta(None, &set)
+        );
+        // Hostile input: truncation errors cleanly.
+        assert!(recip.apply_slot_chunk(&chunk.bytes[..chunk.bytes.len() / 2]).is_err());
+        // Retry-after-abort: a row the donor deleted between attempts
+        // must not be resurrected — the base pass purges the recipient's
+        // orphaned copy before re-copying.
+        let dead = donor.collect_slot_delta(None, &set)[0].1[0].id;
+        // Silent removal stands in for expire/delete on the donor side.
+        donor.purge_slots(&SlotSet::from_slots(&[map.slot_of(dead)], universe).unwrap());
+        let survivors_lost = donor.collect_slot_delta(None, &set)[0].1.len();
+        let retry = donor.encode_slot_chunk(None, &set);
+        recip.apply_slot_chunk(&retry.bytes).unwrap();
+        let recip_rows = recip.collect_slot_delta(None, &set);
+        assert!(
+            recip_rows[0].1.iter().all(|r| r.id != dead),
+            "deleted id {dead} resurrected by the retry base pass"
+        );
+        assert_eq!(recip_rows[0].1.len(), survivors_lost);
+        // Purge sheds exactly the moved rows, leaving no tombstones.
+        let before = donor.total_rows();
+        let purged = donor.purge_slots(&set);
+        assert!(purged > 0);
+        assert_eq!(donor.total_rows(), before - purged);
+        assert!(donor
+            .collect_slot_delta(None, &set)
+            .iter()
+            .all(|(_, u, d)| u.is_empty() && d.is_empty()));
+        // purge_foreign_rows keeps only what the map assigns here.
+        let (other, _) = shard(ModelKind::Fm); // shard_id 0
+        for i in 0..80u64 {
+            push(&other, "w", vec![i], vec![0.5]);
+        }
+        let kept = (0..80u64).filter(|&i| map.shard_of(i) == 0).count();
+        other.purge_foreign_rows(&map);
+        assert_eq!(other.total_rows(), kept);
+    }
+
+    #[test]
+    fn migrate_rpcs_dispatch() {
+        let (donor, _) = shard(ModelKind::Lr);
+        let (recip, _) = shard(ModelKind::Lr);
+        for i in 0..50u64 {
+            push(&donor, "w", vec![i], vec![2.0]);
+        }
+        let donor_svc = MasterService { shard: donor.clone(), store: None };
+        let recip_svc = MasterService { shard: recip.clone(), store: None };
+        let universe = 8u32;
+        let slots: Vec<u16> = (0..8).collect();
+        let pull =
+            SlotPull { model: "ctr".into(), since: 0, universe, slots: slots.clone() }.to_bytes();
+        let chunk = donor_svc.call(methods::MIGRATE_PULL, &pull).unwrap();
+        let applied = recip_svc.call(methods::MIGRATE_APPLY, &chunk).unwrap();
+        assert!(Ack::from_bytes(&applied).unwrap().ok);
+        assert_eq!(recip.total_rows(), donor.total_rows());
+        // Seal via RPC: the gate stands on its own, with **no route
+        // guard installed** (the remote `weips master` shape) — a push
+        // into the sealed slot NACKs instead of silently applying.
+        let sealed_id = (0..1000u64)
+            .find(|&i| crate::reshard::slot_of(i, universe as usize) == 1)
+            .unwrap();
+        let seal = SlotSeal { model: "ctr".into(), universe, slots: vec![1] }.to_bytes();
+        donor_svc.call(methods::SEAL_SLOTS, &seal).unwrap();
+        assert!(donor
+            .sparse_push(&SparsePush {
+                model: "ctr".into(),
+                table: "w".into(),
+                ids: vec![sealed_id],
+                grads: vec![1.0],
+            })
+            .unwrap_err()
+            .is_stale_route());
+        let unseal = SlotSeal { model: "ctr".into(), universe, slots: vec![] }.to_bytes();
+        donor_svc.call(methods::SEAL_SLOTS, &unseal).unwrap();
+        push(&donor, "w", vec![sealed_id], vec![1.0]);
+        let epoch = donor_svc.call(methods::ROUTE_EPOCH, &[]).unwrap();
+        assert_eq!(u64::from_le_bytes(epoch.try_into().unwrap()), 0);
+        // The remote release stage: purge slot 1's rows + unseal.
+        let before = donor.total_rows();
+        let release = SlotSeal { model: "ctr".into(), universe, slots: vec![1] }.to_bytes();
+        donor_svc.call(methods::RELEASE_SLOTS, &release).unwrap();
+        assert!(donor.total_rows() < before, "release purged nothing");
+        // Install needs a guard; with one, the epoch advances — and a
+        // mismatched universe on the migration RPCs is then rejected
+        // instead of silently hashing by the wrong slot count.
+        let map = crate::reshard::SlotMap::uniform(8, 2).rebalanced(&[(1, 0)]).unwrap();
+        assert!(donor_svc.call(methods::INSTALL_SLOT_MAP, &map.to_bytes()).is_err());
+        donor.set_route_guard(crate::sync::Router::with_slots(2, 8));
+        donor_svc.call(methods::INSTALL_SLOT_MAP, &map.to_bytes()).unwrap();
+        assert_eq!(donor.route_epoch(), 1);
+        let wrong =
+            SlotPull { model: "ctr".into(), since: 0, universe: 16, slots: vec![1] }.to_bytes();
+        assert!(donor_svc.call(methods::MIGRATE_PULL, &wrong).is_err());
+        // Bad slot in a pull request errors cleanly.
+        let bad =
+            SlotPull { model: "ctr".into(), since: 0, universe: 4, slots: vec![9] }.to_bytes();
+        assert!(donor_svc.call(methods::MIGRATE_PULL, &bad).is_err());
     }
 
     #[test]

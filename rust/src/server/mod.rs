@@ -22,6 +22,19 @@ pub mod methods {
     pub const STATS: u16 = 7;
     /// health probe: `() -> Ack`
     pub const PING: u16 = 8;
+    /// `SlotPull -> raw slot-chunk bytes` (master only; migration donor)
+    pub const MIGRATE_PULL: u16 = 9;
+    /// `raw slot-chunk bytes -> Ack` (master only; migration recipient)
+    pub const MIGRATE_APPLY: u16 = 10;
+    /// `SlotSeal -> Ack` (master only; empty slot list = unseal)
+    pub const SEAL_SLOTS: u16 = 11;
+    /// `() -> u64 LE` current routing epoch (master only)
+    pub const ROUTE_EPOCH: u16 = 12;
+    /// `SlotMap bytes -> Ack` cutover install (master only)
+    pub const INSTALL_SLOT_MAP: u16 = 13;
+    /// `SlotSeal -> Ack` post-cutover release: purge moved slots + unseal
+    /// (master only)
+    pub const RELEASE_SLOTS: u16 = 14;
 }
 
 pub use master::MasterShard;

@@ -2,54 +2,131 @@
 //!
 //! Training traffic and inference traffic want different shard counts
 //! ("the resource requirements of the two situations is inconsistent"), so
-//! WeiPS lets every cluster pick its own count: ids hash-route onto M
-//! master shards, the pusher maps master shards onto P queue partitions,
-//! and each slave cluster with S shards routes the *same ids* onto its own
-//! S. The router also powers heterogeneous-cluster migration (§4.2.1d:
-//! "cluster A has 10 shards to cluster B has 20 shards").
+//! WeiPS lets every cluster pick its own count: ids route onto M master
+//! shards, the pusher maps master shards onto P queue partitions, and each
+//! slave cluster with S shards routes the *same ids* onto its own S. The
+//! router also powers heterogeneous-cluster migration (§4.2.1d: "cluster A
+//! has 10 shards to cluster B has 20 shards").
 //!
-//! When `S` divides `M` and `P == M`, a slave shard only needs the
-//! partition subset `{p : p mod S == s}` — the paper's "specify certain
-//! partitions for consuming ... reducing bandwidth pressure"; otherwise it
-//! falls back to consuming all partitions and filtering by id.
+//! Since the elastic-resharding subsystem ([`crate::reshard`]) the route
+//! is **two-level**: ids hash onto a fixed universe of virtual slots, and
+//! a versioned [`SlotMap`] assigns slots to shards. A [`Router`] is a
+//! cheap-to-clone handle on a shared [`SlotMapCell`]; installing a bumped
+//! map into the cell re-routes every holder (trainer clients, shard
+//! guards, coordinators) mid-stream — the live-migration cutover.
+//!
+//! When the map is still the canonical uniform layout, `S` divides `M`
+//! and `P == M`, a slave shard only needs the partition subset
+//! `{p : p mod S == s}` — the paper's "specify certain partitions for
+//! consuming ... reducing bandwidth pressure". Once a rebalance makes the
+//! master map non-uniform, an id's updates can originate from any shard,
+//! so scatters widen to every partition (`Scatter::subscribe_all`) before
+//! the cutover and the slave filters by id — the fallback path that was
+//! always there for incompatible topologies.
 
-use crate::util::hash::fxhash64;
+use std::sync::Arc;
 
-/// Stateless router over a cluster size.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+use crate::reshard::{SlotMap, SlotMapCell, DEFAULT_SLOTS};
+use crate::Result;
+
+/// Shared-slot-map router over a cluster. Clones share the underlying
+/// cell, so one epoch install re-routes every clone.
+#[derive(Clone)]
 pub struct Router {
-    shards: u32,
+    cell: Arc<SlotMapCell>,
 }
 
 impl Router {
-    /// Router for a cluster of `shards` (>= 1).
+    /// Router for a cluster of `shards` (>= 1) over the default slot
+    /// universe ([`DEFAULT_SLOTS`]), starting from the canonical uniform
+    /// map (epoch 0).
     pub fn new(shards: u32) -> Router {
+        Router::with_slots(shards, DEFAULT_SLOTS)
+    }
+
+    /// Router with an explicit slot universe (the `reshard_slots` knob;
+    /// clamped to at least the shard count so every shard owns a slot).
+    pub fn with_slots(shards: u32, slots: usize) -> Router {
         assert!(shards >= 1, "cluster needs at least one shard");
-        Router { shards }
+        Router { cell: Arc::new(SlotMapCell::new(SlotMap::uniform(slots, shards))) }
     }
 
-    /// Shard count.
+    /// Router over an existing shared cell (components wired by the
+    /// coordinator all observe the same installs).
+    pub fn shared(cell: Arc<SlotMapCell>) -> Router {
+        Router { cell }
+    }
+
+    /// The shared cell.
+    pub fn cell(&self) -> &Arc<SlotMapCell> {
+        &self.cell
+    }
+
+    /// Current slot map (snapshot once per batch, then route through it —
+    /// a snapshot is one `Arc` clone).
+    pub fn snapshot(&self) -> Arc<SlotMap> {
+        self.cell.snapshot()
+    }
+
+    /// Current routing epoch (0 = canonical uniform map).
+    pub fn epoch(&self) -> u64 {
+        self.cell.epoch()
+    }
+
+    /// Shard count under the current map.
     pub fn shards(&self) -> u32 {
-        self.shards
+        self.snapshot().shards
     }
 
-    /// Owning shard for a parameter id.
+    /// Slot universe size.
+    pub fn slots(&self) -> usize {
+        self.snapshot().slots()
+    }
+
+    /// Owning shard for a parameter id under the current map.
     #[inline]
     pub fn shard_of(&self, id: u64) -> u32 {
-        (fxhash64(id) % self.shards as u64) as u32
+        self.snapshot().shard_of(id)
+    }
+
+    /// Owning virtual slot for a parameter id.
+    #[inline]
+    pub fn slot_of(&self, id: u64) -> u16 {
+        self.snapshot().slot_of(id)
+    }
+
+    /// Install a bumped slot map (the migration cutover). Errors unless
+    /// the epoch strictly advances over the installed one.
+    pub fn install(&self, map: SlotMap) -> Result<Arc<SlotMap>> {
+        self.cell.install(map)
     }
 
     /// Split `ids` into per-shard buckets; returns `(shard -> (positions,
-    /// ids))` so callers can reassemble responses in request order.
+    /// ids))` so callers can reassemble responses in request order. Routes
+    /// through one consistent snapshot of the map.
     pub fn split_ids(&self, ids: &[u64]) -> Vec<(Vec<usize>, Vec<u64>)> {
+        let map = self.snapshot();
         let mut buckets: Vec<(Vec<usize>, Vec<u64>)> =
-            (0..self.shards).map(|_| (Vec::new(), Vec::new())).collect();
+            (0..map.shards).map(|_| (Vec::new(), Vec::new())).collect();
         for (pos, &id) in ids.iter().enumerate() {
-            let s = self.shard_of(id) as usize;
+            let s = map.shard_of(id) as usize;
             buckets[s].0.push(pos);
             buckets[s].1.push(id);
         }
         buckets
+    }
+}
+
+impl std::fmt::Debug for Router {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let map = self.snapshot();
+        write!(
+            f,
+            "Router {{ shards: {}, slots: {}, epoch: {} }}",
+            map.shards,
+            map.slots(),
+            map.epoch
+        )
     }
 }
 
@@ -63,6 +140,12 @@ pub fn partition_of_shard(master_shard: u32, partitions: u32) -> u32 {
 /// The partitions a slave shard must consume, given the master/partition/
 /// slave topology. Returns the reduced subset when the modulo structure
 /// allows it, else every partition (caller filters by id).
+///
+/// Sound only while both clusters run canonical uniform slot maps over
+/// the same universe: id → slot k lands on master `k % M`, hence
+/// partition `k % M` (P == M), and on slave `k % S`; `S | M` gives
+/// `(k % M) % S == k % S`. A rebalanced master map breaks the structure —
+/// scatters call `subscribe_all` before any cutover.
 pub fn partitions_for_slave(
     master_shards: u32,
     partitions: u32,
@@ -71,8 +154,6 @@ pub fn partitions_for_slave(
 ) -> Vec<u32> {
     debug_assert!(slave_shard < slave_shards);
     if partitions == master_shards && master_shards % slave_shards == 0 {
-        // h % M known per partition p (= p since P == M); slave s needs
-        // ids with h % S == s, and S | M means h % S == (h % M) % S.
         (0..partitions).filter(|p| p % slave_shards == slave_shard).collect()
     } else {
         (0..partitions).collect()
@@ -91,17 +172,10 @@ pub fn partition_subset_applies(master_shards: u32, partitions: u32, slave_shard
 /// used to parallelize the copy.
 pub fn migration_plan(src_shards: u32, dst_shards: u32) -> Vec<Vec<u32>> {
     // Any src shard may contain ids for any dst shard in general; with the
-    // fxhash modulo scheme the only exploitable structure is divisibility.
+    // slot-modulo scheme the only exploitable structure is divisibility.
     let mut plan = Vec::with_capacity(src_shards as usize);
     for _src in 0..src_shards {
-        if src_shards % dst_shards == 0 {
-            // Coarsening (e.g. 20 -> 10): each src maps into exactly one dst
-            // only when hashing is aligned, which per-id modulo does not
-            // guarantee; keep full fanout for correctness.
-            plan.push((0..dst_shards).collect());
-        } else {
-            plan.push((0..dst_shards).collect());
-        }
+        plan.push((0..dst_shards).collect());
     }
     plan
 }
@@ -173,7 +247,8 @@ mod tests {
     #[test]
     fn subset_routing_is_correct_not_just_covering() {
         // Ids routed to slave shard s must only appear in partitions the
-        // subset rule assigns to s.
+        // subset rule assigns to s — including for shard counts that do
+        // not divide the slot universe.
         let (m, p, s_cnt) = (12u32, 12u32, 4u32);
         let master = Router::new(m);
         let slave = Router::new(s_cnt);
@@ -186,6 +261,22 @@ mod tests {
                 "id {id}: partition {part} not in slave {s}'s subset {subset:?}"
             );
         }
+    }
+
+    #[test]
+    fn clones_share_the_map_and_installs_reroute() {
+        let a = Router::with_slots(4, 64);
+        let b = a.clone();
+        let map = a.snapshot();
+        let moved = map.slots_of(3);
+        let bumped = map.rebalanced(&moved.iter().map(|&s| (s, 0)).collect::<Vec<_>>()).unwrap();
+        a.install(bumped).unwrap();
+        assert_eq!(b.epoch(), 1, "clone missed the install");
+        for slot in moved {
+            assert_eq!(b.snapshot().shard_of_slot(slot), 0);
+        }
+        // Stale install through any clone is rejected.
+        assert!(b.install(SlotMap::uniform(64, 4)).is_err());
     }
 
     #[test]

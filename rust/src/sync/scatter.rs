@@ -110,6 +110,29 @@ impl Scatter {
         self.cursors.iter().map(|(_, o)| *o).collect()
     }
 
+    /// Current cursor for one partition (None = not subscribed).
+    pub fn offset_for(&self, partition: u32) -> Option<u64> {
+        self.cursors.iter().find(|(p, _)| *p == partition).map(|(_, o)| *o)
+    }
+
+    /// Widen the subscription to **every** partition. A slot-map
+    /// rebalance makes the master-shard → partition mapping of an id's
+    /// updates dynamic, so the reduced subset is no longer sound; the
+    /// slave's per-id filter handles the extra traffic. Existing cursors
+    /// keep their offsets; newly added partitions start at the current
+    /// log end — call this *before* the routing-epoch cutover, so no
+    /// post-cutover record on a new partition can be missed. Idempotent.
+    pub fn subscribe_all(&mut self) -> Result<()> {
+        for p in 0..self.log.partition_count() as u32 {
+            if self.cursors.iter().all(|(q, _)| *q != p) {
+                let end = self.log.latest_offset(p)?;
+                self.cursors.push((p, end));
+            }
+        }
+        self.cursors.sort_by_key(|(p, _)| *p);
+        Ok(())
+    }
+
     /// Seek all cursors (downgrade replay: offsets from the checkpoint
     /// manifest, §4.3.2). `offsets` must be parallel to `partitions()`.
     pub fn seek(&mut self, offsets: &[u64]) -> Result<()> {
@@ -327,6 +350,32 @@ mod tests {
         // coalesced its two queued batches into one apply run.
         assert_eq!(sc.stats.batches_applied.load(Ordering::Relaxed), 3);
         assert_eq!(sc.stats.coalesced_polls.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn subscribe_all_widens_from_log_end() {
+        let q = Queue::new(1 << 20);
+        let topic = q.create_topic("sync", 4).unwrap();
+        let clock = Arc::new(ManualClock::new(0));
+        let s = slave(0, 2);
+        let mut sc = Scatter::new(topic.clone(), s.clone(), 4, 2, clock);
+        assert_eq!(sc.partitions(), vec![0, 2]); // reduced subset
+        // History on an unsubscribed partition that must NOT replay.
+        let p1 = Pusher::new(topic.clone(), 1);
+        p1.push(&batch(1, &[2], 0)).unwrap();
+        sc.subscribe_all().unwrap();
+        assert_eq!(sc.partitions(), vec![0, 1, 2, 3]);
+        assert_eq!(sc.offset_for(1), Some(1), "new partition must start at log end");
+        assert_eq!(sc.offset_for(3), Some(0));
+        sc.subscribe_all().unwrap(); // idempotent
+        assert_eq!(sc.partitions(), vec![0, 1, 2, 3]);
+        assert_eq!(sc.poll(Duration::ZERO).unwrap(), 0);
+        // Post-widening records on the new partition are consumed.
+        let router = Router::new(2);
+        let mine: u64 = (0..100).find(|&i| router.shard_of(i) == 0).unwrap();
+        p1.push(&batch(1, &[mine], 0)).unwrap();
+        assert_eq!(sc.poll(Duration::ZERO).unwrap(), 1);
+        assert_eq!(s.total_rows(), 1);
     }
 
     #[test]

@@ -69,10 +69,17 @@ pub struct Row {
     pub values: Box<[f32]>,
     pub last_access_ms: u64,
     pub updates: u32,
-    /// Checkpoint epoch of the last mutation (see
+    /// Checkpoint epoch of the last **value** mutation (see
     /// [`StripedSparseTable::set_write_epoch`]). 0 = clean (restored from
     /// a checkpoint and untouched since). Not persisted in snapshots.
     pub epoch: u64,
+    /// Checkpoint epoch of the last **access-time** refresh
+    /// ([`StripedSparseTable::pull_slot`]). Kept separate from `epoch` so
+    /// durability deltas (which take `max(epoch, access_epoch)`) preserve
+    /// `last_access_ms` freshness across recovery, while migration
+    /// catch-up — which only needs value exactness — tracks `epoch` alone
+    /// and converges even under a pull-heavy working set.
+    pub access_epoch: u64,
 }
 
 /// One row captured by a dirty-epoch delta collection
@@ -202,6 +209,7 @@ impl SparseTable {
                         last_access_ms: now_ms,
                         updates: 0,
                         epoch: 0,
+                        access_epoch: 0,
                     },
                 );
             }
@@ -236,6 +244,7 @@ impl SparseTable {
                         last_access_ms: now_ms,
                         updates: 0,
                         epoch: 0,
+                        access_epoch: 0,
                     },
                 );
             }
@@ -306,6 +315,7 @@ impl SparseTable {
                         last_access_ms: now_ms,
                         updates: 0,
                         epoch: 0,
+                        access_epoch: 0,
                     },
                 );
             }
@@ -390,7 +400,13 @@ impl SparseTable {
             }
             self.rows.insert(
                 id,
-                Row { values: values.into_boxed_slice(), last_access_ms, updates, epoch: 0 },
+                Row {
+                    values: values.into_boxed_slice(),
+                    last_access_ms,
+                    updates,
+                    epoch: 0,
+                    access_epoch: 0,
+                },
             );
         }
         Ok(())
@@ -581,6 +597,14 @@ impl StripedSparseTable {
     /// Read one slot (by name) for `ids` into `out` (missing ids → 0.0),
     /// one stripe write-lock per touched stripe (access times refresh).
     /// `out.len() == ids.len() * dim`.
+    ///
+    /// Access refreshes stamp the row's *access* epoch (at most once per
+    /// row per checkpoint window; the stamp only moves when the coarse
+    /// millisecond clock actually changed), so `last_access_ms` freshness
+    /// survives incremental recovery and a post-recovery expire pass
+    /// evicts exactly what the uninterrupted run would have. The value
+    /// epoch is untouched: migration catch-up tracks values only and
+    /// converges even under a pull-heavy working set.
     pub fn pull_slot(&self, ids: &[u64], slot: &str, now_ms: u64, out: &mut [f32]) -> Result<()> {
         let dim = self.dim;
         debug_assert_eq!(out.len(), ids.len() * dim);
@@ -593,15 +617,26 @@ impl StripedSparseTable {
                 continue;
             }
             let mut s = self.stripes[stripe].write().unwrap();
+            let epoch = self.write_epoch.load(Ordering::Relaxed);
+            let mut access_dirty = false;
             for (&pos, id) in positions.iter().zip(&sids) {
                 let dst = &mut out[pos * dim..(pos + 1) * dim];
                 match s.rows.get_mut(id) {
                     Some(row) => {
-                        row.last_access_ms = now_ms;
+                        if row.last_access_ms != now_ms {
+                            row.last_access_ms = now_ms;
+                            if row.access_epoch < epoch {
+                                row.access_epoch = epoch;
+                            }
+                            access_dirty = true;
+                        }
                         dst.copy_from_slice(&row.values[slot_idx * dim..(slot_idx + 1) * dim]);
                     }
                     None => dst.fill(0.0),
                 }
+            }
+            if access_dirty {
+                s.max_epoch = s.max_epoch.max(epoch);
             }
         }
         Ok(())
@@ -670,6 +705,7 @@ impl StripedSparseTable {
                             last_access_ms: now_ms,
                             updates: 0,
                             epoch,
+                            access_epoch: 0,
                         },
                     );
                 }
@@ -744,6 +780,7 @@ impl StripedSparseTable {
                             last_access_ms: now_ms,
                             updates: 0,
                             epoch,
+                            access_epoch: 0,
                         },
                     );
                 }
@@ -848,6 +885,7 @@ impl StripedSparseTable {
                                         last_access_ms: now_ms,
                                         updates: 0,
                                         epoch,
+                                        access_epoch: 0,
                                     },
                                 );
                             }
@@ -900,6 +938,7 @@ impl StripedSparseTable {
                         last_access_ms: now_ms,
                         updates: 0,
                         epoch,
+                        access_epoch: 0,
                     },
                 );
             }
@@ -934,7 +973,13 @@ impl StripedSparseTable {
         s.graves.remove(&id);
         s.rows.insert(
             id,
-            Row { values: values.to_vec().into_boxed_slice(), last_access_ms, updates, epoch },
+            Row {
+                values: values.to_vec().into_boxed_slice(),
+                last_access_ms,
+                updates,
+                epoch,
+                access_epoch: 0,
+            },
         );
         Ok(())
     }
@@ -1118,7 +1163,9 @@ impl StripedSparseTable {
                 continue;
             }
             for (id, row) in &s.rows {
-                if row.epoch > since {
+                // Value *or* access-time mutations count: recovery must
+                // reproduce `last_access_ms` freshness (expire fidelity).
+                if row.epoch.max(row.access_epoch) > since {
                     upserts.push(DeltaRow {
                         id: *id,
                         last_access_ms: row.last_access_ms,
@@ -1148,7 +1195,7 @@ impl StripedSparseTable {
             if s.max_epoch <= since {
                 continue;
             }
-            rows += s.rows.values().filter(|r| r.epoch > since).count();
+            rows += s.rows.values().filter(|r| r.epoch.max(r.access_epoch) > since).count();
             graves += s.graves.values().filter(|&&e| e > since).count();
         }
         (rows, graves)
@@ -1164,26 +1211,125 @@ impl StripedSparseTable {
         }
     }
 
-    /// Serialize the dirty set since `since` as one table section of a
-    /// delta chunk: schema header, full dirty rows (with metadata, so a
-    /// restore is byte-identical to the uninterrupted state), then
-    /// tombstone ids. Returns (upserts, deletes) written.
-    pub fn encode_delta_rows(&self, since: u64, w: &mut Writer) -> (usize, usize) {
-        let (upserts, deletes) = self.collect_delta(since);
+    /// Slot-filtered variant of [`Self::collect_delta`] — the live-
+    /// migration copy path. `since = None` collects **every** row whose
+    /// id hashes into `slots` regardless of epoch (the base pass; clean
+    /// restored rows carry epoch 0 and must move too); `Some(cut)`
+    /// collects only rows/graves **value**-stamped after `cut` (catch-up
+    /// rounds; access-time-only refreshes are deliberately excluded so
+    /// catch-up converges under read-heavy load — each copied row still
+    /// carries the access time it had when copied). Results are sorted
+    /// by id (deterministic chunk bytes for any stripe count).
+    pub fn collect_slot_delta(
+        &self,
+        since: Option<u64>,
+        slots: &crate::reshard::SlotSet,
+    ) -> (Vec<DeltaRow>, Vec<u64>) {
+        let universe = slots.universe();
+        let mut upserts = Vec::new();
+        let mut deletes = Vec::new();
+        for stripe in &self.stripes {
+            let s = stripe.read().unwrap();
+            if let Some(cut) = since {
+                if s.max_epoch <= cut {
+                    continue;
+                }
+            }
+            for (id, row) in &s.rows {
+                if let Some(cut) = since {
+                    if row.epoch <= cut {
+                        continue;
+                    }
+                }
+                if !slots.contains(crate::reshard::slot_of(*id, universe)) {
+                    continue;
+                }
+                upserts.push(DeltaRow {
+                    id: *id,
+                    last_access_ms: row.last_access_ms,
+                    updates: row.updates,
+                    values: row.values.to_vec(),
+                });
+            }
+            if let Some(cut) = since {
+                for (id, &epoch) in &s.graves {
+                    if epoch > cut && slots.contains(crate::reshard::slot_of(*id, universe)) {
+                        deletes.push(*id);
+                    }
+                }
+            }
+        }
+        upserts.sort_unstable_by_key(|r| r.id);
+        deletes.sort_unstable();
+        (upserts, deletes)
+    }
+
+    /// Serialize one table delta section — the single wire shape shared
+    /// by checkpoint deltas and migration slot chunks (and decoded by
+    /// [`Self::decode_delta_rows`]): schema header, full rows with
+    /// metadata, then tombstone ids.
+    fn write_delta_section(&self, upserts: &[DeltaRow], deletes: &[u64], w: &mut Writer) {
         w.put_str(&self.name);
         w.put_u32(self.dim as u32);
         w.put_u32(self.row_width() as u32);
         w.put_varint(upserts.len() as u64);
-        for row in &upserts {
+        for row in upserts {
             w.put_varint(row.id);
             w.put_varint(row.last_access_ms);
             w.put_u32(row.updates);
             w.put_f32_slice(&row.values);
         }
         w.put_varint(deletes.len() as u64);
-        for id in &deletes {
+        for id in deletes {
             w.put_varint(*id);
         }
+    }
+
+    /// Serialize a slot-filtered delta section in the exact wire shape of
+    /// [`Self::encode_delta_rows`], so [`Self::decode_delta_rows`]
+    /// applies it on the migration recipient. Returns (upserts, deletes)
+    /// written.
+    pub fn encode_slot_delta_rows(
+        &self,
+        since: Option<u64>,
+        slots: &crate::reshard::SlotSet,
+        w: &mut Writer,
+    ) -> (usize, usize) {
+        let (upserts, deletes) = self.collect_slot_delta(since, slots);
+        self.write_delta_section(&upserts, &deletes, w);
+        (upserts.len(), deletes.len())
+    }
+
+    /// Silently remove every row, probation entry and tombstone whose id
+    /// hashes into `slots`: **no** graves are left and **no** epochs are
+    /// stamped — the migration hand-off, where the recipient's checkpoint
+    /// lineage owns the rows from now on and a donor-side tombstone would
+    /// wrongly propagate deletes for live rows. Returns rows removed.
+    pub fn purge_slots(&self, slots: &crate::reshard::SlotSet) -> usize {
+        let universe = slots.universe();
+        let mut removed = 0;
+        for stripe in &self.stripes {
+            let mut s = stripe.write().unwrap();
+            s.rows.retain(|id, _| {
+                let keep = !slots.contains(crate::reshard::slot_of(*id, universe));
+                if !keep {
+                    removed += 1;
+                }
+                keep
+            });
+            s.probation.retain(|id, _| !slots.contains(crate::reshard::slot_of(*id, universe)));
+            s.graves.retain(|id, _| !slots.contains(crate::reshard::slot_of(*id, universe)));
+        }
+        removed
+    }
+
+    /// Serialize the dirty set since `since` as one table section of a
+    /// delta chunk: schema header, full dirty rows (with metadata, so a
+    /// restore is byte-identical to the uninterrupted state), then
+    /// tombstone ids. Returns (upserts, deletes) written.
+    pub fn encode_delta_rows(&self, since: u64, w: &mut Writer) -> (usize, usize) {
+        let (upserts, deletes) = self.collect_delta(since);
+        self.write_delta_section(&upserts, &deletes, w);
         (upserts.len(), deletes.len())
     }
 
@@ -1300,7 +1446,13 @@ impl StripedSparseTable {
             }
             guards[self.stripe_of(id)].rows.insert(
                 id,
-                Row { values: values.into_boxed_slice(), last_access_ms, updates, epoch: 0 },
+                Row {
+                    values: values.into_boxed_slice(),
+                    last_access_ms,
+                    updates,
+                    epoch: 0,
+                    access_epoch: 0,
+                },
             );
         }
         Ok(())
@@ -2125,5 +2277,86 @@ mod tests {
         assert_eq!(up.iter().map(|r| r.id).collect::<Vec<_>>(), vec![10]);
         // Width mismatch errors cleanly.
         assert!(t.restore_row(11, &[0.0; 2], 0, 0, 0).is_err());
+    }
+
+    #[test]
+    fn pull_slot_access_refresh_is_epoch_stamped() {
+        let t = striped(1, 4);
+        let ids: Vec<u64> = (0..20).collect();
+        t.apply_batch(&ids, &vec![1.0f32; 40], 10);
+        // Seal the write window: nothing is dirty afterwards.
+        t.set_write_epoch(2);
+        assert_eq!(t.dirty_counts(1), (0, 0));
+        // A pull at a *new* timestamp refreshes access times and dirties
+        // exactly the touched rows, so the freshness survives recovery.
+        let mut out = vec![0.0f32; 4];
+        t.pull_slot(&[3, 7], "w", 99, &mut out).unwrap();
+        let (up, del) = t.collect_delta(1);
+        assert_eq!(up.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 7]);
+        assert!(del.is_empty());
+        assert!(up.iter().all(|r| r.last_access_ms == 99));
+        // Same-timestamp re-pull does not re-stamp (coarse dedup).
+        t.set_write_epoch(3);
+        t.pull_slot(&[3], "w", 99, &mut out[..2]).unwrap();
+        assert_eq!(t.dirty_counts(2), (0, 0));
+        // The refreshed access time round-trips through a delta restore,
+        // so expire fidelity is preserved after recovery.
+        let dst = striped(1, 8);
+        let mut w = Writer::new();
+        t.encode_delta_rows(0, &mut w);
+        dst.decode_delta_rows(&mut Reader::new(&w.into_bytes()), 0).unwrap();
+        assert_eq!(dst.get_row(3).unwrap().last_access_ms, 99);
+        let evicted = dst.expire(100, 50);
+        // Everything except the two refreshed rows ages out at ttl 50.
+        assert_eq!(evicted.len(), 18);
+        assert_eq!(dst.len(), 2);
+        // Migration catch-up tracks *values* only: access-time refreshes
+        // are never re-streamed (catch-up must converge under reads).
+        let full = crate::reshard::SlotSet::full(16);
+        let (up, del) = t.collect_slot_delta(Some(1), &full);
+        assert!(up.is_empty() && del.is_empty(), "access refresh leaked into slot delta");
+    }
+
+    #[test]
+    fn slot_delta_collects_filtered_and_purge_is_silent() {
+        use crate::reshard::{slot_of, SlotSet};
+        let t = striped(1, 4);
+        let ids: Vec<u64> = (0..200).collect();
+        t.apply_batch(&ids, &vec![1.0f32; 400], 5);
+        let universe = 16usize;
+        let moved = SlotSet::from_slots(&[1, 5, 9], universe).unwrap();
+        let expect: Vec<u64> =
+            ids.iter().copied().filter(|&id| moved.contains(slot_of(id, universe))).collect();
+        assert!(!expect.is_empty() && expect.len() < ids.len());
+        // Base pass (since = None) takes every row in the slots, even
+        // clean ones (epoch 0 after a restore).
+        t.restore_row(expect[0], &[9.0; 6], 1, 1, 0).unwrap();
+        let (up, del) = t.collect_slot_delta(None, &moved);
+        assert_eq!(up.len(), expect.len());
+        assert!(del.is_empty());
+        assert!(up.windows(2).all(|w| w[0].id < w[1].id), "not sorted");
+        // Catch-up pass: only post-cut mutations in the slots.
+        t.set_write_epoch(2);
+        t.apply_batch(&ids[..50], &vec![0.5f32; 100], 6);
+        t.delete(expect[1]);
+        let (up, del) = t.collect_slot_delta(Some(1), &moved);
+        assert!(up.iter().all(|r| moved.contains(slot_of(r.id, universe)) && r.id < 50));
+        assert_eq!(del, vec![expect[1]]);
+        // Wire shape matches decode_delta_rows.
+        let mut w = Writer::new();
+        let (nu, nd) = t.encode_slot_delta_rows(Some(1), &moved, &mut w);
+        assert_eq!((nu, nd), (up.len(), del.len()));
+        let dst = striped(1, 8);
+        let (au, _) = dst.decode_delta_rows(&mut Reader::new(&w.into_bytes()), 5).unwrap();
+        assert_eq!(au, nu);
+        // Purge: rows gone, no tombstones, nothing dirty left behind.
+        let before_graves = t.dirty_counts(0).1;
+        let purged = t.purge_slots(&moved);
+        assert_eq!(purged, expect.len() - 1); // one was deleted above
+        assert_eq!(t.len(), ids.len() - expect.len());
+        let (_, graves_after) = t.dirty_counts(0);
+        assert!(graves_after <= before_graves, "purge left tombstones");
+        let (up, del) = t.collect_slot_delta(None, &moved);
+        assert!(up.is_empty() && del.is_empty(), "purged slots still collect");
     }
 }

@@ -22,20 +22,48 @@ use crate::server::slave::SlaveShard;
 use crate::sync::router::Router;
 use crate::{Error, Result};
 
+/// Retry budget for routing-epoch NACKs: a push caught inside a
+/// migration hand-off window re-splits and retries until the slot-map
+/// epoch bump re-routes it. The budget (~40 s) deliberately outlasts
+/// the coordinator's 30 s sealed-window drain deadline
+/// (`LocalCluster::flush_and_drain_donor`) — a legal-but-slow migration
+/// must stall concurrent trainers, never fail them.
+const STALE_ROUTE_RETRIES: usize = 20_000;
+const STALE_ROUTE_BACKOFF: std::time::Duration = std::time::Duration::from_millis(2);
+/// Pulls retry wholesale (read-only, so restarting the whole split is
+/// the simple correct shape) — at a coarser cadence than pushes so a
+/// long hand-off window does not turn every stalled pull into a
+/// 500-RPC/s storm. Same ~40 s total budget.
+const STALE_PULL_RETRIES: usize = 2_000;
+const STALE_PULL_BACKOFF: std::time::Duration = std::time::Duration::from_millis(20);
+
 /// Trainer-profile client over the master cluster.
 pub struct ShardedClient {
     model: String,
     router: Router,
     shards: Vec<Channel>,
+    /// Stale-route NACKs absorbed by the retry loop (visibility for
+    /// migration drills; never user-facing unless the budget runs out).
+    pub stale_retries: std::sync::atomic::AtomicU64,
 }
 
 impl ShardedClient {
-    /// Client over `shards` (index = master shard id).
+    /// Client over `shards` (index = master shard id) with a private
+    /// uniform router.
     pub fn new(model: &str, shards: Vec<Channel>) -> ShardedClient {
+        let router = Router::new(shards.len() as u32);
+        Self::with_router(model, shards, router)
+    }
+
+    /// Client routing through a shared [`Router`] (the coordinator's
+    /// master-cluster cell): a slot-map install re-routes this client's
+    /// next split mid-stream — the elastic-resharding cutover.
+    pub fn with_router(model: &str, shards: Vec<Channel>, router: Router) -> ShardedClient {
         ShardedClient {
             model: model.to_string(),
-            router: Router::new(shards.len() as u32),
+            router,
             shards,
+            stale_retries: std::sync::atomic::AtomicU64::new(0),
         }
     }
 
@@ -45,14 +73,37 @@ impl ShardedClient {
     }
 
     /// Pull `slot` of `table` for `ids` (any length); returns values in
-    /// request order, `width` floats per id.
+    /// request order, `width` floats per id. A pull NACKed with
+    /// [`Error::StaleRoute`] (the split raced a migration cutover)
+    /// restarts against the refreshed slot map — pulls are read-only, so
+    /// wholesale retry is safe.
     pub fn sparse_pull(&self, table: &str, ids: &[u64], slot: &str) -> Result<(u32, Vec<f32>)> {
+        let mut attempts = 0;
+        loop {
+            match self.try_sparse_pull(table, ids, slot) {
+                Err(e) if e.is_stale_route() && attempts + 1 < STALE_PULL_RETRIES => {
+                    attempts += 1;
+                    self.stale_retries.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    std::thread::sleep(STALE_PULL_BACKOFF);
+                }
+                outcome => return outcome,
+            }
+        }
+    }
+
+    fn try_sparse_pull(&self, table: &str, ids: &[u64], slot: &str) -> Result<(u32, Vec<f32>)> {
         let buckets = self.router.split_ids(ids);
         let mut width = 0u32;
         let mut out: Vec<f32> = Vec::new();
         for (shard, (positions, shard_ids)) in buckets.iter().enumerate() {
             if shard_ids.is_empty() {
                 continue;
+            }
+            if shard >= self.shards.len() {
+                return Err(Error::Routing(format!(
+                    "slot map routes to shard {shard} but client holds {} channels",
+                    self.shards.len()
+                )));
             }
             let req = SparsePull {
                 model: self.model.clone(),
@@ -79,16 +130,30 @@ impl ShardedClient {
         Ok((width, out))
     }
 
-    /// Push gradients for `ids` (`grads.len() == ids.len() * dim`).
-    pub fn sparse_push(&self, table: &str, ids: &[u64], grads: &[f32]) -> Result<()> {
-        if ids.is_empty() {
-            return Ok(());
-        }
-        let dim = grads.len() / ids.len();
+    /// Split one (ids, grads) set by the current slot map and push each
+    /// bucket; NACKed buckets' ids + grads are appended to the retry
+    /// accumulators instead of erroring. The hot path allocates exactly
+    /// what the pre-reshard client did (per-bucket id/grad vectors) —
+    /// retry state materializes only when a NACK actually happens.
+    fn push_split(
+        &self,
+        table: &str,
+        ids: &[u64],
+        grads: &[f32],
+        dim: usize,
+        retry_ids: &mut Vec<u64>,
+        retry_grads: &mut Vec<f32>,
+    ) -> Result<()> {
         let buckets = self.router.split_ids(ids);
         for (shard, (positions, shard_ids)) in buckets.iter().enumerate() {
             if shard_ids.is_empty() {
                 continue;
+            }
+            if shard >= self.shards.len() {
+                return Err(Error::Routing(format!(
+                    "slot map routes to shard {shard} but client holds {} channels",
+                    self.shards.len()
+                )));
             }
             let mut shard_grads = Vec::with_capacity(shard_ids.len() * dim);
             for &pos in positions {
@@ -100,7 +165,56 @@ impl ShardedClient {
                 ids: shard_ids.clone(),
                 grads: shard_grads,
             };
-            self.shards[shard].call(methods::SPARSE_PUSH, &req.to_bytes())?;
+            match self.shards[shard].call(methods::SPARSE_PUSH, &req.to_bytes()) {
+                Ok(_) => {}
+                Err(e) if e.is_stale_route() => {
+                    self.stale_retries.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    retry_ids.extend_from_slice(shard_ids);
+                    for &pos in positions {
+                        retry_grads.extend_from_slice(&grads[pos * dim..(pos + 1) * dim]);
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+
+    /// Push gradients for `ids` (`grads.len() == ids.len() * dim`).
+    ///
+    /// Stale-route aware: a shard push NACKed with [`Error::StaleRoute`]
+    /// (the id's slot moved or is sealed for a live migration) was
+    /// rejected *before* anything applied, so the failed subset is
+    /// re-split by the then-current slot map and retried — each gradient
+    /// lands exactly once, on the current owner, and nothing is silently
+    /// dropped.
+    pub fn sparse_push(&self, table: &str, ids: &[u64], grads: &[f32]) -> Result<()> {
+        if ids.is_empty() {
+            return Ok(());
+        }
+        let dim = grads.len() / ids.len();
+        let mut pending_ids: Vec<u64> = Vec::new();
+        let mut pending_grads: Vec<f32> = Vec::new();
+        self.push_split(table, ids, grads, dim, &mut pending_ids, &mut pending_grads)?;
+        let mut attempts = 0;
+        while !pending_ids.is_empty() {
+            attempts += 1;
+            if attempts >= STALE_ROUTE_RETRIES {
+                return Err(Error::StaleRoute(format!(
+                    "push not accepted after {STALE_ROUTE_RETRIES} routing retries"
+                )));
+            }
+            std::thread::sleep(STALE_ROUTE_BACKOFF);
+            let again_ids = std::mem::take(&mut pending_ids);
+            let again_grads = std::mem::take(&mut pending_grads);
+            self.push_split(
+                table,
+                &again_ids,
+                &again_grads,
+                dim,
+                &mut pending_ids,
+                &mut pending_grads,
+            )?;
         }
         Ok(())
     }
@@ -164,14 +278,22 @@ pub struct SlaveClient {
 }
 
 impl SlaveClient {
-    /// Client over `groups` (index = slave shard id).
+    /// Client over `groups` (index = slave shard id) with a private
+    /// uniform router over the default slot universe.
     pub fn new(model: &str, groups: Vec<Arc<ReplicaGroup<SlaveEndpoint>>>) -> SlaveClient {
-        SlaveClient {
-            model: model.to_string(),
-            router: Router::new(groups.len() as u32),
-            groups,
-            attempts: 3,
-        }
+        let router = Router::new(groups.len() as u32);
+        Self::with_router(model, groups, router)
+    }
+
+    /// Client routing through an explicit [`Router`] — must share the
+    /// slave cluster's slot universe (`reshard_slots`) or pulls route to
+    /// shards that never held the ids.
+    pub fn with_router(
+        model: &str,
+        groups: Vec<Arc<ReplicaGroup<SlaveEndpoint>>>,
+        router: Router,
+    ) -> SlaveClient {
+        SlaveClient { model: model.to_string(), router, groups, attempts: 3 }
     }
 
     /// Slave shard count.
@@ -295,6 +417,49 @@ mod tests {
             .dense_pull(&DensePull { model: "ctr".into(), table: "bias".into() })
             .unwrap();
         assert_eq!(d1.values, vec![0.0]);
+    }
+
+    #[test]
+    fn stale_route_push_retries_to_new_owner() {
+        use crate::reshard::SlotSet;
+        use crate::server::master::MasterShard;
+        let spec = ModelSpec::derive("ctr", ModelKind::Fm, &model_cfg());
+        let clock = Arc::new(ManualClock::new(0));
+        let masters: Vec<Arc<MasterShard>> = (0..2)
+            .map(|i| Arc::new(MasterShard::new(i, spec.clone(), None, 1, clock.clone()).unwrap()))
+            .collect();
+        let router = crate::sync::Router::with_slots(2, 16);
+        for m in &masters {
+            m.set_route_guard(router.clone());
+        }
+        let channels: Vec<Channel> = masters
+            .iter()
+            .map(|m| Channel::local(Arc::new(MasterService { shard: m.clone(), store: None })))
+            .collect();
+        let client = Arc::new(ShardedClient::with_router("ctr", channels, router.clone()));
+        let map = router.snapshot();
+        let id: u64 = (0..1000).find(|&i| map.shard_of(i) == 0).unwrap();
+        let slot = map.slot_of(id);
+        // Seal the slot (migration hand-off window): the push NACKs and
+        // spins in the retry loop until the cutover re-routes it.
+        masters[0].seal_slots(SlotSet::from_slots(&[slot], 16).unwrap()).unwrap();
+        let pusher = {
+            let client = client.clone();
+            std::thread::spawn(move || client.sparse_push("w", &[id], &[2.0]).unwrap())
+        };
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        router.install(map.rebalanced(&[(slot, 1)]).unwrap()).unwrap();
+        masters[0].unseal_slots();
+        pusher.join().unwrap();
+        assert!(
+            client.stale_retries.load(std::sync::atomic::Ordering::Relaxed) > 0,
+            "push never hit the sealed window"
+        );
+        // Applied exactly once, at the new owner.
+        assert_eq!(masters[1].total_rows(), 1);
+        assert_eq!(masters[0].total_rows(), 0);
+        let (_, z) = client.sparse_pull("w", &[id], "z").unwrap();
+        assert_eq!(z, vec![2.0]);
     }
 
     fn slave_cluster(shards: u32, replicas: u32) -> (SlaveClient, Vec<Vec<Arc<SlaveShard>>>) {

@@ -1,0 +1,388 @@
+//! Integration: slot-based elastic resharding with live migration.
+//!
+//! A 4-master / 2-slave pipeline (manual assembly, no AOT artifacts) runs
+//! concurrent trainer pushes through a shared slot router while the main
+//! thread migrates **all of shard 3's slots** (1/4 of the universe) to
+//! shard 1 — base copy, dirty-epoch catch-up, sealed hand-off, epoch-bump
+//! cutover. Afterwards the logical model state (values *and* row
+//! metadata, i.e. update counts) must be **byte-identical** to a control
+//! cluster that ran the same deterministic event streams with no
+//! migration, on masters and on slaves — zero lost, duplicated or
+//! misrouted updates. A property test proves slot-map rebalances are
+//! minimal-disruption: only ids in moved slots ever change owners.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use weips::config::{GatherMode, ModelKind, ModelSpec};
+use weips::net::Channel;
+use weips::optim::{Ftrl, FtrlHyper, Optimizer};
+use weips::proto::SparsePull;
+use weips::queue::{Queue, Topic};
+use weips::reshard::{balance_moves, MigrationOpts, SlotMap, SlotSet, SlotTransfer};
+use weips::runtime::ModelConfig;
+use weips::server::master::{MasterService, MasterShard};
+use weips::server::slave::SlaveShard;
+use weips::sync::router::partition_of_shard;
+use weips::sync::{Gather, Pusher, Router, Scatter, ServingWeights};
+use weips::table::DeltaRow;
+use weips::util::clock::ManualClock;
+use weips::util::prop::{check, PairOf, U64Range, VecOf};
+use weips::worker::ShardedClient;
+
+const UNIVERSE: usize = 64;
+const MASTERS: u32 = 4;
+const SLAVES: u32 = 2;
+const IDS: u64 = 1024;
+const ROUNDS: u64 = 40;
+
+fn spec() -> ModelSpec {
+    let cfg = ModelConfig {
+        batch_train: 8,
+        batch_predict: 2,
+        fields: 4,
+        dim: 2,
+        hidden: 8,
+        ftrl_block_rows: 64,
+        ftrl_alpha: 0.05,
+        ftrl_beta: 1.0,
+        ftrl_l1: 1.0,
+        ftrl_l2: 1.0,
+    };
+    ModelSpec::derive("ctr", ModelKind::Fm, &cfg)
+}
+
+struct TestCluster {
+    _queue: Queue,
+    topic: Arc<Topic>,
+    router: Router,
+    masters: Vec<Arc<MasterShard>>,
+    gathers: Vec<Arc<Mutex<Gather>>>,
+    pushers: Vec<Arc<Pusher>>,
+    slaves: Vec<Arc<SlaveShard>>,
+    scatters: Vec<Arc<Mutex<Scatter>>>,
+    client: Arc<ShardedClient>,
+}
+
+fn build() -> TestCluster {
+    let clock = Arc::new(ManualClock::new(0));
+    let queue = Queue::new(1 << 26);
+    let topic = queue.create_topic("sync.ctr", MASTERS as usize).unwrap();
+    let router = Router::with_slots(MASTERS, UNIVERSE);
+
+    let mut masters = Vec::new();
+    let mut gathers = Vec::new();
+    let mut pushers = Vec::new();
+    for i in 0..MASTERS {
+        let m = Arc::new(MasterShard::with_stripes(i, spec(), None, 1, 4, clock.clone()).unwrap());
+        m.set_route_guard(router.clone());
+        gathers.push(Arc::new(Mutex::new(Gather::new(
+            m.clone(),
+            GatherMode::Threshold(256),
+            clock.clone(),
+        ))));
+        pushers.push(Arc::new(Pusher::new(topic.clone(), i)));
+        masters.push(m);
+    }
+
+    let ftrl: Arc<dyn Optimizer> = Arc::new(Ftrl::new(FtrlHyper::default()));
+    let transform = Arc::new(ServingWeights::new(vec![
+        ("w".into(), ftrl.clone(), 1),
+        ("v".into(), ftrl, 2),
+    ]));
+    let slave_router = Router::with_slots(SLAVES, UNIVERSE);
+    let mut slaves = Vec::new();
+    let mut scatters = Vec::new();
+    for s in 0..SLAVES {
+        let shard = Arc::new(SlaveShard::with_stripes(
+            s,
+            0,
+            "ctr",
+            vec![("w".into(), 1), ("v".into(), 2)],
+            vec![("bias".into(), 1)],
+            transform.clone(),
+            slave_router.clone(),
+            4,
+        ));
+        scatters.push(Arc::new(Mutex::new(Scatter::new(
+            topic.clone(),
+            shard.clone(),
+            MASTERS,
+            SLAVES,
+            clock.clone(),
+        ))));
+        slaves.push(shard);
+    }
+
+    let channels: Vec<Channel> = masters
+        .iter()
+        .map(|m| Channel::local(Arc::new(MasterService { shard: m.clone(), store: None })))
+        .collect();
+    let client = Arc::new(ShardedClient::with_router("ctr", channels, router.clone()));
+
+    TestCluster {
+        _queue: queue,
+        topic,
+        router,
+        masters,
+        gathers,
+        pushers,
+        slaves,
+        scatters,
+        client,
+    }
+}
+
+/// Flush every pending window and drain the queue dry.
+fn flush_all(c: &TestCluster) {
+    for (g, p) in c.gathers.iter().zip(&c.pushers) {
+        let mut g = g.lock().unwrap();
+        let batches = g.flush_now();
+        p.push_all(&batches).unwrap();
+    }
+    loop {
+        let mut lag = 0;
+        for sc in &c.scatters {
+            let mut sc = sc.lock().unwrap();
+            sc.poll(Duration::ZERO).unwrap();
+            lag += sc.lag();
+        }
+        if lag == 0 {
+            return;
+        }
+    }
+}
+
+/// Run the deterministic trainer streams: 4 threads over disjoint id
+/// ranges (per-id gradient sequences are identical regardless of thread
+/// interleaving), with the sync pump running concurrently. `migrate`
+/// runs on the caller thread while the traffic flows.
+fn run_traffic(c: &TestCluster, migrate: impl FnOnce(&TestCluster)) {
+    let stop = Arc::new(AtomicBool::new(false));
+    let pump = {
+        let stop = stop.clone();
+        let gathers = c.gathers.clone();
+        let pushers = c.pushers.clone();
+        let scatters = c.scatters.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Acquire) {
+                for (g, p) in gathers.iter().zip(&pushers) {
+                    // Gather lock held across the push: the migration
+                    // thread's donor flush must not interleave with an
+                    // already-polled older window.
+                    let mut g = g.lock().unwrap();
+                    let batches = g.poll();
+                    p.push_all(&batches).unwrap();
+                }
+                for sc in &scatters {
+                    sc.lock().unwrap().poll(Duration::ZERO).unwrap();
+                }
+            }
+        })
+    };
+    let mut workers = Vec::new();
+    for t in 0..4u64 {
+        let client = c.client.clone();
+        workers.push(std::thread::spawn(move || {
+            let per = IDS / 4;
+            let ids: Vec<u64> = (t * per..(t + 1) * per).collect();
+            for round in 0..ROUNDS {
+                let grad = 0.5 + t as f32 * 0.1 + round as f32 * 0.01;
+                let grads = vec![grad; ids.len()];
+                client.sparse_push("w", &ids, &grads).unwrap();
+            }
+        }));
+    }
+    migrate(c);
+    for w in workers {
+        w.join().unwrap();
+    }
+    stop.store(true, Ordering::Release);
+    pump.join().unwrap();
+    flush_all(c);
+}
+
+/// The logical model: every row of every shard, unioned and sorted by id
+/// per table — values *and* metadata (update counts), so equality means
+/// zero lost and zero duplicated updates.
+fn logical_state(c: &TestCluster) -> Vec<Vec<DeltaRow>> {
+    let full = SlotSet::full(UNIVERSE);
+    let mut per_table: Vec<Vec<DeltaRow>> = vec![Vec::new(); 2];
+    for m in &c.masters {
+        for (ti, (_, rows, dels)) in m.collect_slot_delta(None, &full).into_iter().enumerate() {
+            assert!(dels.is_empty());
+            per_table[ti].extend(rows);
+        }
+    }
+    for rows in &mut per_table {
+        rows.sort_by_key(|r| r.id);
+    }
+    per_table
+}
+
+#[test]
+fn live_migration_is_byte_identical_to_control() {
+    let control = build();
+    run_traffic(&control, |_| {});
+
+    let live = build();
+    let map = live.router.snapshot();
+    let moved = map.slots_of(3); // every slot of shard 3 = 1/4 of the universe
+    assert!(moved.len() * 4 >= UNIVERSE, "moving less than 1/4 of the slots");
+    run_traffic(&live, |c| {
+        // 1. Widen subscriptions before any routing change.
+        for sc in &c.scatters {
+            sc.lock().unwrap().subscribe_all().unwrap();
+        }
+        // 2. Online copy + catch-up while pushers hammer the donor.
+        // Recipient 0 on purpose: moved ids are served by slave 1 (odd
+        // slots), whose reduced subset {1, 3} does NOT cover partition 0
+        // — post-cutover updates reach it only through the widened
+        // subscription, so this run proves the widening is load-bearing.
+        let mut t =
+            SlotTransfer::new(&c.masters[3], &c.masters[0], &moved, UNIVERSE).unwrap();
+        t.run_catchup(&MigrationOpts::default()).unwrap();
+        // 3. Hand-off window.
+        t.seal().unwrap();
+        t.final_sync().unwrap();
+        // 4. Flush the donor's sync window (gather lock held across the
+        // push so the pump cannot interleave), drain consumers past it.
+        {
+            let mut g = c.gathers[3].lock().unwrap();
+            let batches = g.flush_now();
+            c.pushers[3].push_all(&batches).unwrap();
+        }
+        let donor_p = partition_of_shard(3, MASTERS);
+        let target = c.topic.partition(donor_p as usize).unwrap().latest_offset();
+        loop {
+            let mut behind = false;
+            for sc in &c.scatters {
+                let mut sc = sc.lock().unwrap();
+                sc.poll(Duration::ZERO).unwrap();
+                match sc.offset_for(donor_p) {
+                    Some(o) if o >= target => {}
+                    _ => behind = true,
+                }
+            }
+            if !behind {
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        // 5. Cutover: the epoch bump re-routes the live pushers.
+        let bumped = map
+            .rebalanced(&moved.iter().map(|&s| (s, 0)).collect::<Vec<_>>())
+            .unwrap();
+        c.router.install(bumped).unwrap();
+        // 6. Release the donor.
+        let report = t.finish().unwrap();
+        assert!(report.base_rows > 0, "base pass moved nothing");
+        assert!(report.purged_rows > 0, "donor kept the moved rows");
+    });
+
+    // The donor owned exactly the moved slots: it must now be empty.
+    assert_eq!(live.masters[3].total_rows(), 0, "donor still holds moved rows");
+    assert_eq!(live.router.epoch(), 1);
+
+    // Master state: byte-identical to the no-migration control (values
+    // and update counts — zero lost, duplicated or misrouted updates).
+    let control_state = logical_state(&control);
+    let live_state = logical_state(&live);
+    assert_eq!(control_state[0].len(), live_state[0].len(), "row count diverged");
+    assert_eq!(control_state, live_state, "migrated state != control state");
+    assert_eq!(control_state[0].len() as u64, IDS);
+    // Every update round-tripped: per-id update counts sum to the pushes.
+    let total_updates: u64 = live_state[0].iter().map(|r| r.updates as u64).sum();
+    assert_eq!(total_updates, IDS * ROUNDS, "lost or duplicated updates");
+
+    // Ownership exclusivity under the bumped map.
+    let bumped = live.router.snapshot();
+    for row in &live_state[0] {
+        let owner = bumped.shard_of(row.id);
+        assert_ne!(owner, 3, "id {} still routed to the drained donor", row.id);
+        let probe = live.masters[owner as usize].collect_slot_delta(
+            None,
+            &SlotSet::from_slots(&[bumped.slot_of(row.id)], UNIVERSE).unwrap(),
+        );
+        assert!(
+            probe[0].1.iter().any(|r| r.id == row.id),
+            "id {} not on its owner {owner}",
+            row.id
+        );
+    }
+
+    // Slave serving state matches the control byte for byte.
+    let all_ids: Vec<u64> = (0..IDS).collect();
+    for s in 0..SLAVES as usize {
+        let pull = |c: &TestCluster| {
+            c.slaves[s]
+                .sparse_pull(&SparsePull {
+                    model: "ctr".into(),
+                    table: "w".into(),
+                    ids: all_ids.clone(),
+                    slot: "w".into(),
+                })
+                .unwrap()
+        };
+        assert_eq!(pull(&control), pull(&live), "slave {s} serving state diverged");
+        assert_eq!(control.slaves[s].total_rows(), live.slaves[s].total_rows());
+    }
+}
+
+#[test]
+fn prop_rebalance_is_minimal_disruption() {
+    // For any (from, to) shard counts and id set: a planned rebalance
+    // changes owners for exactly the ids in moved slots; every other
+    // route is byte-stable across the epoch bump, and the new load is
+    // balanced within one slot.
+    check(
+        "rebalance-minimal-disruption",
+        &PairOf(PairOf(U64Range(1, 12), U64Range(1, 12)), VecOf(U64Range(0, 1 << 40), 80)),
+        60,
+        |((from, to), ids)| {
+            let map = SlotMap::uniform(128, *from as u32);
+            let moves = balance_moves(&map, *to as u32);
+            let new = map.rebalanced(&moves).map_err(|e| e.to_string())?;
+            if new.epoch != map.epoch + 1 {
+                return Err("epoch did not bump".into());
+            }
+            let moved: std::collections::HashSet<u16> =
+                moves.iter().map(|(s, _)| *s).collect();
+            for &id in ids {
+                if new.slot_of(id) != map.slot_of(id) {
+                    return Err(format!("slot hash changed for id {id}"));
+                }
+                if !moved.contains(&map.slot_of(id)) && new.shard_of(id) != map.shard_of(id) {
+                    return Err(format!("unmoved id {id} changed owner"));
+                }
+            }
+            // Minimality: every planned move changes an owner.
+            let diff = (0..128u16)
+                .filter(|&s| new.shard_of_slot(s) != map.shard_of_slot(s))
+                .count();
+            if diff != moves.len() {
+                return Err(format!("{} moves for {diff} ownership changes", moves.len()));
+            }
+            // Balance within one slot; nothing routed past the target.
+            let mut load = vec![0usize; *to as usize];
+            for slot in 0..128u16 {
+                let owner = new.shard_of_slot(slot) as usize;
+                if owner >= load.len() {
+                    return Err(format!("slot {slot} routed past target shard count"));
+                }
+                load[owner] += 1;
+            }
+            for (shard, &l) in load.iter().enumerate() {
+                if (l as i64 - (128 / *to) as i64).abs() > 1 {
+                    return Err(format!("shard {shard} load {l} unbalanced: {load:?}"));
+                }
+            }
+            // Encode/decode round trip preserves the routing bytes.
+            if SlotMap::from_bytes(&new.to_bytes()).map_err(|e| e.to_string())? != new {
+                return Err("encode/decode round trip diverged".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,11 +1,20 @@
 #!/usr/bin/env python3
-"""Gate CI on sync-pipeline bench regressions.
+"""Gate CI on bench regressions.
 
-Usage: check_bench_regression.py <baseline.json> <current.json> [tolerance]
+Usage: check_bench_regression.py [--kind KIND] <baseline.json> <current.json> [tolerance]
 
-Compares the current `bench_sync_pipeline` smoke run against the committed
-baseline and fails (exit 1) on a >tolerance (default 30%) regression in
-gather/scatter throughput or push->visible latency.
+Kinds:
+  sync_pipeline (default) — compares the current `bench_sync_pipeline`
+  smoke run against the committed baseline and fails (exit 1) on a
+  >tolerance (default 30%) regression in gather/scatter throughput or
+  push->visible latency.
+
+  reshard — checks the E11 intra-run invariants (migrated state
+  byte-identical to control, deterministic minimal-disruption rebalance,
+  migrations actually move rows) and, against a non-provisional
+  baseline, gates on host-independent shape regressions: the sealed
+  hand-off window as a fraction of total migration time per
+  slots_moved case, and the catch-up round count.
 
 Machine-speed normalization: absolute rows/s on a CI runner is not
 comparable to the machine that recorded the baseline, so every comparison
@@ -99,19 +108,115 @@ def check_against_baseline(baseline, current, tol):
     return failures
 
 
+RESHARD_STAGES = ("migration_pause", "catchup", "migrate_identity", "determinism")
+
+
+def _num(rec, field, ctx, failures):
+    """Numeric field accessor that reports schema drift as a gate failure
+    instead of crashing the gate with a traceback."""
+    v = rec.get(field)
+    if isinstance(v, (int, float)) and not isinstance(v, bool):
+        return v
+    failures.append(f"{ctx}: field {field} missing or non-numeric ({v!r})")
+    return None
+
+
+def check_reshard_intra(current):
+    """E11 invariants every reshard run must hold, baseline or not."""
+    failures = []
+    stages = {r.get("stage") for r in current}
+    for need in RESHARD_STAGES:
+        if need not in stages:
+            failures.append(f"stage {need}: no records")
+    for r in current:
+        if r.get("stage") == "migrate_identity" and not r.get("byte_identical"):
+            failures.append("migrate_identity record is not byte_identical")
+        if r.get("stage") == "determinism" and not (
+            r.get("identical") and r.get("minimal_disruption")
+        ):
+            failures.append("determinism record is not identical/minimal_disruption")
+        if r.get("stage") == "migration_pause":
+            if not r.get("purged_rows", 0) > 0:
+                failures.append("migration_pause record moved zero rows")
+            # Schema the armed gate depends on: refuse to promote (and
+            # flag at run time) if it drifts.
+            ctx = f"migration_pause slots_moved={r.get('slots_moved')}"
+            _num(r, "sealed_ms", ctx, failures)
+            _num(r, "total_ms", ctx, failures)
+        if r.get("stage") == "catchup":
+            _num(r, "rounds", "catchup", failures)
+    return failures
+
+
+def check_reshard_against_baseline(baseline, current, tol):
+    """Host-independent shape gates: sealed-window fraction of total
+    migration time per slots_moved case, and catch-up round count."""
+    failures = []
+    base = {r.get("slots_moved"): r for r in baseline if r.get("stage") == "migration_pause"}
+    cur = {r.get("slots_moved"): r for r in current if r.get("stage") == "migration_pause"}
+    for k, b in base.items():
+        c = cur.get(k)
+        if c is None:
+            failures.append(f"migration_pause slots_moved={k}: missing from current run")
+            continue
+        ctx = f"migration_pause slots_moved={k}"
+        fields = [
+            _num(b, "sealed_ms", f"baseline {ctx}", failures),
+            _num(b, "total_ms", f"baseline {ctx}", failures),
+            _num(c, "sealed_ms", ctx, failures),
+            _num(c, "total_ms", ctx, failures),
+        ]
+        if any(v is None for v in fields):
+            continue
+        b_sealed, b_total, c_sealed, c_total = fields
+        b_ratio = b_sealed / max(b_total, 1e-9)
+        c_ratio = c_sealed / max(c_total, 1e-9)
+        # Absolute 0.05 headroom: tiny smoke runs make the ratio noisy.
+        if c_ratio > (1.0 + tol) * b_ratio + 0.05:
+            failures.append(
+                f"{ctx}: sealed/total ratio "
+                f"{c_ratio:.3f} > {(1.0 + tol) * b_ratio + 0.05:.3f} "
+                f"(baseline {b_ratio:.3f})"
+            )
+    base_cat = [r for r in baseline if r.get("stage") == "catchup"]
+    cur_cat = [r for r in current if r.get("stage") == "catchup"]
+    if base_cat and cur_cat:
+        b_rounds = _num(base_cat[0], "rounds", "baseline catchup", failures)
+        c_rounds = _num(cur_cat[0], "rounds", "catchup", failures)
+        if b_rounds is not None and c_rounds is not None and c_rounds > b_rounds + 2:
+            failures.append(
+                f"catchup: {c_rounds} rounds > baseline "
+                f"{b_rounds} + 2 (convergence regressed)"
+            )
+    return failures
+
+
 def main():
-    if len(sys.argv) < 3:
+    args = sys.argv[1:]
+    kind = "sync_pipeline"
+    if args and args[0] == "--kind":
+        if len(args) < 2 or args[1] not in ("sync_pipeline", "reshard"):
+            print(__doc__)
+            return 2
+        kind = args[1]
+        args = args[2:]
+    if len(args) < 2:
         print(__doc__)
         return 2
-    baseline = load(sys.argv[1])
-    current = load(sys.argv[2])
-    tol = float(sys.argv[3]) if len(sys.argv) > 3 else 0.30
+    baseline = load(args[0])
+    current = load(args[1])
+    tol = float(args[2]) if len(args) > 2 else 0.30
 
-    failures = check_intra_run(current)
+    if kind == "reshard":
+        failures = check_reshard_intra(current)
+    else:
+        failures = check_intra_run(current)
     provisional = any(r.get("stage") == "meta" and r.get("provisional") for r in baseline)
     if provisional:
-        print("baseline is provisional: skipping cross-run comparison "
-              "(promote a CI artifact to ci/BENCH_sync_pipeline.baseline.json to arm it)")
+        print(f"baseline is provisional: skipping cross-run comparison "
+              f"(promote a CI artifact to {args[0]} to arm it)")
+    elif kind == "reshard":
+        failures += check_reshard_against_baseline(baseline, current, tol)
     else:
         failures += check_against_baseline(baseline, current, tol)
 

@@ -1,25 +1,32 @@
 #!/usr/bin/env python3
-"""Validate and promote a measured bench_sync_pipeline artifact to the
-committed regression baseline.
+"""Validate and promote a measured bench artifact to a committed baseline.
 
 Usage:
-  promote_bench_baseline.py <candidate.json> <baseline-path>
-      Validate <candidate.json> (a BENCH_sync_pipeline.json produced by a
-      trusted run) and install it at <baseline-path>, arming the
-      cross-run regression gate in tools/check_bench_regression.py.
+  promote_bench_baseline.py [--kind KIND] <candidate.json> <baseline-path>
+      Validate <candidate.json> (a BENCH_*.json produced by a trusted
+      run) and install it at <baseline-path>, arming the cross-run gate
+      (sync_pipeline) or pinning the known-good invariants run (reshard).
 
   promote_bench_baseline.py --provisional-check <baseline-path>
       Exit 0 iff the committed baseline is still the provisional seed
-      (i.e. promotion is wanted). CI uses this to self-arm the gate on
-      the first trusted main-branch run.
+      (i.e. promotion is wanted). CI uses this to self-arm on the first
+      trusted main-branch run.
 
-Validation before installing:
-  - parses as a JSON list of records;
-  - not itself provisional;
-  - every gated stage has its sequential reference case
-    (stripes=1, threads=0) — check_bench_regression normalizes by it;
-  - the intra-run invariants hold (determinism identical, coalescing
-    amortizes locks), so a broken run can never become the baseline.
+Kinds:
+  sync_pipeline (default) — validates the regression-gate shape:
+    - parses as a JSON list of records;
+    - not itself provisional;
+    - every gated stage has its sequential reference case
+      (stripes=1, threads=0) — check_bench_regression normalizes by it;
+    - the intra-run invariants hold (determinism identical, coalescing
+      amortizes locks), so a broken run can never become the baseline.
+
+  reshard — validates the E11 invariants run:
+    - every stage present (migration_pause, catchup, migrate_identity,
+      determinism);
+    - the identity record is byte_identical and the determinism record is
+      identical + minimal_disruption;
+    - not itself provisional.
 """
 
 import json
@@ -32,6 +39,7 @@ from check_bench_regression import (  # noqa: E402
     THROUGHPUT_STAGES,
     by_case,
     check_intra_run,
+    check_reshard_intra,
 )
 
 
@@ -39,10 +47,8 @@ def is_provisional(records):
     return any(r.get("stage") == "meta" and r.get("provisional") for r in records)
 
 
-def validate(candidate):
+def validate_sync_pipeline(candidate):
     errors = check_intra_run(candidate)
-    if is_provisional(candidate):
-        errors.append("candidate is itself a provisional seed")
     for stage in THROUGHPUT_STAGES + LATENCY_STAGES:
         cases = by_case(candidate, stage)
         if not cases:
@@ -52,8 +58,22 @@ def validate(candidate):
     return errors
 
 
+def validate_reshard(candidate):
+    return check_reshard_intra(candidate)
+
+
+VALIDATORS = {"sync_pipeline": validate_sync_pipeline, "reshard": validate_reshard}
+
+
 def main():
     args = sys.argv[1:]
+    kind = "sync_pipeline"
+    if args and args[0] == "--kind":
+        if len(args) < 2 or args[1] not in VALIDATORS:
+            print(__doc__)
+            return 2
+        kind = args[1]
+        args = args[2:]
     if len(args) == 2 and args[0] == "--provisional-check":
         with open(args[1]) as f:
             return 0 if is_provisional(json.load(f)) else 1
@@ -63,7 +83,9 @@ def main():
     candidate_path, baseline_path = args
     with open(candidate_path) as f:
         candidate = json.load(f)
-    errors = validate(candidate)
+    errors = VALIDATORS[kind](candidate)
+    if is_provisional(candidate):
+        errors.append("candidate is itself a provisional seed")
     if errors:
         print(f"candidate {candidate_path} rejected ({len(errors)} issue(s)):")
         for e in errors:
@@ -73,7 +95,7 @@ def main():
         json.dump(candidate, f, indent=1)
         f.write("\n")
     print(f"promoted {candidate_path} -> {baseline_path} "
-          f"({len(candidate)} records); the regression gate is armed")
+          f"({len(candidate)} records, kind={kind}); the baseline is armed")
     return 0
 
 
