@@ -28,6 +28,11 @@ COMMON FLAGS:
     --artifacts <dir>       AOT artifacts dir      [default: ./artifacts]
     --model <lr|fm|deepfm>  model kind             [default: fm]
     --config <file>         TOML config ([cluster] section)
+    --metrics-port <p>      Prometheus /metrics port (0 = ephemeral;
+                            bound address printed at startup)
+    --metrics-enabled <0|1> serve /metrics          [default: 1]
+    --metrics-targets a,b   host:port peers for the aggregated /cluster
+                            view on this role's metrics endpoint
 
 LOCAL MODE:
     weips local --steps 500 --masters 4 --slaves 2 --replicas 2 \

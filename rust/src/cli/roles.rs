@@ -49,7 +49,33 @@ fn cluster_config(args: &Args) -> Result<ClusterConfig> {
     cfg.reshard_slots =
         args.get_u64("reshard-slots", cfg.reshard_slots as u64)?.clamp(1, 65536) as u32;
     cfg.wal_sync_every = args.get_u64("wal-sync-every", cfg.wal_sync_every)?;
+    cfg.metrics_port = args.get_u64("metrics-port", cfg.metrics_port as u64)? as u16;
+    if let Some(v) = args.get("metrics-enabled") {
+        cfg.metrics_enabled = v != "0";
+    }
     Ok(cfg)
+}
+
+/// Start this role's Prometheus endpoint per the `metrics_enabled` /
+/// `metrics_port` knobs. `--metrics-targets a,b` additionally enables
+/// the aggregated `/cluster` view over those peers. Returns the server
+/// handle — bind it for the role's lifetime (dropping it stops the
+/// endpoint).
+fn serve_role_metrics(
+    args: &Args,
+    cfg: &ClusterConfig,
+) -> Result<Option<crate::metrics::http::MetricsServer>> {
+    if !cfg.metrics_enabled {
+        return Ok(None);
+    }
+    let targets: Vec<String> = args
+        .get("metrics-targets")
+        .map(|t| t.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect())
+        .unwrap_or_default();
+    let addr = format!("127.0.0.1:{}", cfg.metrics_port);
+    let server = crate::metrics::http::MetricsServer::serve_with_targets(&addr, targets)?;
+    println!("metrics on http://{}/metrics", server.addr());
+    Ok(Some(server))
 }
 
 fn load_engine(args: &Args) -> Result<Arc<Engine>> {
@@ -81,13 +107,14 @@ pub fn run_local(args: &Args) -> Result<()> {
         cfg.model_kind, cfg.master_shards, cfg.slave_shards, cfg.slave_replicas, cfg.gather_mode
     );
     let cluster = LocalCluster::new(ClusterOpts {
-        cluster: cfg,
+        cluster: cfg.clone(),
         artifacts_dir: args
             .get("artifacts")
             .map(Into::into)
             .unwrap_or_else(crate::runtime::default_artifacts_dir),
         ..Default::default()
     })?;
+    let _metrics = serve_role_metrics(args, &cfg)?;
     for step in 1..=steps {
         let loss = cluster.train_step()?;
         cluster.sync_tick()?;
@@ -153,6 +180,17 @@ pub fn run_broker(args: &Args) -> Result<()> {
     let cfg = cluster_config(args)?;
     let queue = Queue::default();
     let topic = queue.create_topic(&format!("sync.{model}"), partitions)?;
+    for p in 0..topic.partition_count() {
+        let weak = Arc::downgrade(&topic);
+        crate::metrics::register_fn(
+            "weips_queue_depth_records",
+            &[("role", "broker".to_string()), ("partition", p.to_string())],
+            Box::new(move || {
+                weak.upgrade().map(|t| t.partition(p).map(|part| part.len() as f64).unwrap_or(0.0))
+            }),
+        );
+    }
+    let _metrics = serve_role_metrics(args, &cfg)?;
     let server =
         RpcServer::serve_with(&addr, Arc::new(QueueService { topic }), cfg.rpc_options())?;
     println!("broker on {} ({partitions} partitions)", server.addr());
@@ -219,6 +257,8 @@ pub fn run_master(args: &Args) -> Result<()> {
         cfg.rpc_options(),
     )?;
     println!("master shard {shard} on {} (broker {broker})", server.addr());
+    master.register_metrics("master");
+    let _metrics = serve_role_metrics(args, &cfg)?;
 
     let mut scheduler = Scheduler::new(
         MetaStore::new(clock.clone()),
@@ -306,6 +346,7 @@ pub fn run_slave(args: &Args) -> Result<()> {
     // One shared pool for scatter applies and serving-pull prefetch.
     let pool = cfg.sync_pool();
     slave.set_sync_pool(pool.clone());
+    slave.register_metrics("slave");
     let server = RpcServer::serve_with(
         &addr,
         Arc::new(SlaveService { shard: slave.clone() }),
@@ -316,6 +357,7 @@ pub fn run_slave(args: &Args) -> Result<()> {
         server.addr(),
         cfg.slave_shards
     );
+    let _metrics = serve_role_metrics(args, &cfg)?;
     let log: Arc<dyn SyncLog> =
         Arc::new(RemoteLog::connect(Channel::remote(&broker, RPC_TIMEOUT))?);
     let mut scatter = Scatter::with_pool(
@@ -355,6 +397,8 @@ pub fn run_trainer(args: &Args) -> Result<()> {
         .map(|a| Channel::remote(a.trim(), RPC_TIMEOUT))
         .collect();
     let monitor = Arc::new(crate::monitor::Monitor::new(4096));
+    monitor.register_metrics("trainer");
+    let _metrics = serve_role_metrics(args, &cfg)?;
     // Route over the cluster's configured slot universe, not the default
     // — a universe skew would push to the wrong masters.
     let router = Router::with_slots(channels.len() as u32, cfg.reshard_slots as usize);
@@ -397,6 +441,7 @@ pub fn run_predictor(args: &Args) -> Result<()> {
             Arc::new(ReplicaGroup::new(endpoints, BalancePolicy::RoundRobin))
         })
         .collect();
+    let _metrics = serve_role_metrics(args, &cfg)?;
     let router = Router::with_slots(groups.len() as u32, cfg.reshard_slots as usize);
     let predictor = Predictor::new(
         engine,

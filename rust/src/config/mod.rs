@@ -284,6 +284,11 @@ pub struct ClusterConfig {
     pub remote_every: u64,
     /// Node heartbeat session TTL.
     pub session_ttl_ms: u64,
+    /// Serve the Prometheus `/metrics` endpoint from each role process.
+    pub metrics_enabled: bool,
+    /// Port for the `/metrics` endpoint (0 = ephemeral; the bound
+    /// address is printed at startup either way).
+    pub metrics_port: u16,
 }
 
 impl Default for ClusterConfig {
@@ -313,6 +318,8 @@ impl Default for ClusterConfig {
             ckpt_keep: 5,
             remote_every: 4,
             session_ttl_ms: 3_000,
+            metrics_enabled: true,
+            metrics_port: 0,
         }
     }
 }
@@ -417,6 +424,12 @@ impl ClusterConfig {
         }
         if let Some(v) = doc.get_int("cluster", "session_ttl_ms") {
             c.session_ttl_ms = v as u64;
+        }
+        if let Some(v) = doc.get_bool("cluster", "metrics_enabled") {
+            c.metrics_enabled = v;
+        }
+        if let Some(v) = doc.get_int("cluster", "metrics_port") {
+            c.metrics_port = v as u16;
         }
         Ok(c)
     }

@@ -88,7 +88,7 @@ pub struct LocalCluster {
     pub masters: Vec<Arc<MasterShard>>,
     gathers: Vec<Mutex<Gather>>,
     pushers: Vec<Pusher>,
-    /// slaves[shard][replica]
+    /// `slaves[shard][replica]`
     pub slaves: Vec<Vec<Arc<SlaveShard>>>,
     scatters: Vec<Vec<Mutex<Scatter>>>,
     pub groups: Vec<Arc<ReplicaGroup<SlaveEndpoint>>>,
@@ -289,6 +289,35 @@ impl LocalCluster {
             fields: spec.fields,
             ..opts.workload
         }));
+
+        // -- observability -----------------------------------------------------
+        // Seal the live slot map into every checkpoint manifest (cold-start
+        // routing recovery, see `recover_routing`) and register every
+        // component's series with the process-global metrics registry. All
+        // samplers hold Weak refs: tearing the cluster down removes its
+        // series from the next scrape.
+        scheduler.set_route_source(master_router.clone());
+        for m in &masters {
+            m.register_metrics("master");
+        }
+        for replicas in &slaves {
+            for s in replicas {
+                s.register_metrics("slave");
+            }
+        }
+        monitor.register_metrics("trainer");
+        master_router.register_metrics("master");
+        for p in 0..topic.partition_count() {
+            let weak = Arc::downgrade(&topic);
+            crate::metrics::register_fn(
+                "weips_queue_depth_records",
+                &[("role", "broker".to_string()), ("partition", p.to_string())],
+                Box::new(move || {
+                    weak.upgrade()
+                        .map(|t| t.partition(p).map(|part| part.len() as f64).unwrap_or(0.0))
+                }),
+            );
+        }
 
         Ok(LocalCluster {
             engine,
@@ -694,11 +723,35 @@ impl LocalCluster {
         Ok(rows)
     }
 
+    /// Cold-start routing recovery: restore the slot map sealed into the
+    /// newest checkpoint manifest when it is ahead of the live router.
+    /// A cluster restarted from disk has no scheduler metadata, so
+    /// without this the post-restore foreign-row purge (and every routed
+    /// push) would run against the implicit uniform map — wrong the
+    /// moment any slot had migrated. Returns the routing epoch in
+    /// effect afterwards. No-op when the live router is already at or
+    /// past the manifest's epoch (a scrape-fed cluster wins).
+    pub fn recover_routing(&self) -> Result<u64> {
+        let version = match self.store.latest_version(&self.cfg.model_name) {
+            Some(v) => v,
+            None => return Ok(self.master_router.epoch()),
+        };
+        let manifest = self.store.load_manifest(&self.cfg.model_name, version)?;
+        if manifest.route_epoch > self.master_router.epoch() && !manifest.slot_map.is_empty() {
+            let map = crate::reshard::SlotMap::from_bytes(&manifest.slot_map)?;
+            self.master_router.install(map)?;
+        }
+        Ok(self.master_router.epoch())
+    }
+
     /// Partial recovery of one master shard. Incremental mode: base →
     /// delta chain → WAL-tail replay (byte-identical, including row
     /// metadata — the chunks carry it). Full mode: newest checkpoint +
     /// replay of the shard's own sync partition (§4.2.1b/e).
     pub fn recover_master(&self, shard: usize) -> Result<u64> {
+        // Routing first: the foreign-row purges below must see the slot
+        // map the checkpoint was cut under, not the boot-time default.
+        self.recover_routing()?;
         if self.cfg.ckpt_mode == CkptMode::Incremental {
             let version = self
                 .store
@@ -874,6 +927,13 @@ impl LocalCluster {
         // 7. Release the donor.
         let report = transfer.finish()?;
         published?;
+        let labels = [("role", "master".to_string())];
+        let rows = (report.base_rows + report.catchup_rows + report.final_rows) as u64;
+        crate::metrics::counter("weips_migrations_total", &labels).fetch_add(1, Ordering::Relaxed);
+        crate::metrics::counter("weips_migration_slots_moved_total", &labels)
+            .fetch_add(report.slots_moved as u64, Ordering::Relaxed);
+        crate::metrics::counter("weips_migration_rows_moved_total", &labels)
+            .fetch_add(rows, Ordering::Relaxed);
         Ok(report)
     }
 
@@ -1030,6 +1090,14 @@ impl LocalCluster {
         for h in self.pump_handles.lock().unwrap().drain(..) {
             let _ = h.join();
         }
+    }
+
+    /// Serve this process's `/metrics` endpoint (all in-process roles
+    /// share the global registry, so one endpoint exposes the whole
+    /// local cluster). Keep the returned server alive for as long as
+    /// scrapes should succeed; use port 0 for an ephemeral port.
+    pub fn serve_metrics(&self, addr: &str) -> Result<crate::metrics::http::MetricsServer> {
+        Ok(crate::metrics::http::MetricsServer::serve(addr)?)
     }
 }
 

@@ -224,6 +224,8 @@ mod tests {
                     parent: 0,
                     epochs: vec![*v],
                     wal_offsets: vec![],
+                    route_epoch: 0,
+                    slot_map: vec![],
                 })
                 .unwrap();
         }

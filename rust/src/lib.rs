@@ -35,6 +35,7 @@ pub mod downgrade;
 pub mod error;
 pub mod joiner;
 pub mod meta;
+pub mod metrics;
 pub mod monitor;
 pub mod net;
 pub mod optim;

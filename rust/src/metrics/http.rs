@@ -1,0 +1,350 @@
+//! The `/metrics` exposition endpoint: a tiny single-threaded HTTP/1.0
+//! server on the same epoll substrate the RPC layer uses
+//! ([`crate::util::sys`]), plus the blocking [`http_get`] client the
+//! scheduler's cluster aggregation and the tests scrape with.
+//!
+//! Scrapes are rare (seconds apart) and tiny (one rendered registry), so
+//! unlike [`crate::net::RpcServer`] there is no handler pool: the poll
+//! thread accepts, reads the request head, writes the response and closes.
+//! Between scrapes the thread sleeps in `epoll_wait` on the listener plus
+//! an eventfd shutdown waker — zero wakeups while idle, matching the
+//! event-driven ingest design (DESIGN.md §4). On targets without epoll it
+//! degrades to a 25 ms non-blocking accept sweep.
+//!
+//! Routes:
+//! * `GET /metrics` — Prometheus text exposition of the global registry.
+//! * `GET /healthz` — liveness probe (`ok`).
+//! * `GET /cluster` — scrape every configured peer target and merge the
+//!   expositions with per-`instance` labels ([`super::aggregate`]); the
+//!   scheduler serves the cluster-wide view this way. A target that is
+//!   this server itself is rendered in-process (scraping yourself over a
+//!   single-threaded loop would deadlock).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::sys;
+
+/// How long one scrape connection may take to send its request head or
+/// absorb the response before the server gives up on it.
+const IO_TIMEOUT: Duration = Duration::from_millis(1000);
+
+/// Running metrics endpoint; dropping it stops and joins the serve thread.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    waker: Option<Arc<sys::EventFd>>,
+    targets: Arc<Mutex<Vec<String>>>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (port 0 = ephemeral) and serve the global registry.
+    pub fn serve(addr: &str) -> std::io::Result<MetricsServer> {
+        Self::serve_with_targets(addr, Vec::new())
+    }
+
+    /// [`Self::serve`] with peer `host:port` targets for `/cluster`
+    /// aggregation (the scheduler role passes every role's endpoint).
+    pub fn serve_with_targets(
+        addr: &str,
+        targets: Vec<String>,
+    ) -> std::io::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let targets = Arc::new(Mutex::new(targets));
+        // Event-driven idle needs both an epoll instance and a waker;
+        // anything short of that falls back to the portable sweep.
+        let (epoll, waker) = match (sys::Epoll::new(), sys::EventFd::new()) {
+            (Ok(e), Ok(w)) => (Some(e), Some(Arc::new(w))),
+            _ => (None, None),
+        };
+        let thread = {
+            let stop = stop.clone();
+            let targets = targets.clone();
+            let waker = waker.clone();
+            std::thread::Builder::new()
+                .name(format!("metrics-{}", local.port()))
+                .spawn(move || match (epoll, waker) {
+                    (Some(e), Some(w)) => Self::event_loop(listener, local, stop, targets, e, w),
+                    _ => Self::sweep_loop(listener, local, stop, targets),
+                })?
+        };
+        Ok(MetricsServer { addr: local, stop, waker, targets, thread: Some(thread) })
+    }
+
+    /// Bound address (resolves ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Replace the `/cluster` aggregation targets.
+    pub fn set_targets(&self, targets: Vec<String>) {
+        *self.targets.lock().unwrap() = targets;
+    }
+
+    fn event_loop(
+        listener: TcpListener,
+        local: SocketAddr,
+        stop: Arc<AtomicBool>,
+        targets: Arc<Mutex<Vec<String>>>,
+        epoll: sys::Epoll,
+        waker: Arc<sys::EventFd>,
+    ) {
+        const TOKEN_ACCEPT: u64 = u64::MAX;
+        const TOKEN_WAKE: u64 = u64::MAX - 1;
+        if epoll.add(listener.as_raw_fd(), TOKEN_ACCEPT).is_err() {
+            return Self::sweep_loop(listener, local, stop, targets);
+        }
+        let _ = epoll.add(waker.raw_fd(), TOKEN_WAKE);
+        let mut events = [sys::EpollEvent::default(); 8];
+        while !stop.load(Ordering::Acquire) {
+            // The waker bounds shutdown latency; the timeout is a belt-and-
+            // suspenders backstop against a lost signal.
+            let n = match epoll.wait(&mut events, 1000) {
+                Ok(n) => n,
+                Err(_) => break,
+            };
+            let mut accept = false;
+            for ev in events.iter().take(n) {
+                match ev.token() {
+                    TOKEN_WAKE => waker.drain(),
+                    _ => accept = true,
+                }
+            }
+            if accept {
+                Self::accept_ready(&listener, local, &targets);
+            }
+        }
+    }
+
+    fn sweep_loop(
+        listener: TcpListener,
+        local: SocketAddr,
+        stop: Arc<AtomicBool>,
+        targets: Arc<Mutex<Vec<String>>>,
+    ) {
+        while !stop.load(Ordering::Acquire) {
+            if !Self::accept_ready(&listener, local, &targets) {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+    }
+
+    /// Accept and serve everything currently pending; false when the
+    /// backlog was empty.
+    fn accept_ready(
+        listener: &TcpListener,
+        local: SocketAddr,
+        targets: &Mutex<Vec<String>>,
+    ) -> bool {
+        let mut any = false;
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    any = true;
+                    Self::handle(stream, local, targets);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+        any
+    }
+
+    fn handle(mut stream: TcpStream, local: SocketAddr, targets: &Mutex<Vec<String>>) {
+        let _ = stream.set_nonblocking(false);
+        let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+        let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+        let _ = stream.set_nodelay(true);
+        let mut head = Vec::with_capacity(512);
+        let mut buf = [0u8; 1024];
+        loop {
+            match stream.read(&mut buf) {
+                Ok(0) => break,
+                Ok(n) => {
+                    head.extend_from_slice(&buf[..n]);
+                    if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > 16 * 1024 {
+                        break;
+                    }
+                }
+                Err(_) => return,
+            }
+        }
+        let request = String::from_utf8_lossy(&head);
+        let path = request
+            .lines()
+            .next()
+            .and_then(|l| l.split_whitespace().nth(1))
+            .map(|p| p.split('?').next().unwrap_or(p).to_string())
+            .unwrap_or_default();
+        let (status, body) = match path.as_str() {
+            "/metrics" => ("200 OK", super::render()),
+            "/healthz" => ("200 OK", "ok\n".to_string()),
+            "/cluster" => {
+                let targets = targets.lock().unwrap().clone();
+                if targets.is_empty() {
+                    ("404 Not Found", "no cluster targets configured\n".to_string())
+                } else {
+                    ("200 OK", scrape_targets(&targets, local))
+                }
+            }
+            _ => ("404 Not Found", "not found\n".to_string()),
+        };
+        let response = format!(
+            "HTTP/1.0 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        );
+        let _ = stream.write_all(response.as_bytes());
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(w) = &self.waker {
+            w.signal();
+        }
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Scrape every target's `/metrics` and merge them with `instance`
+/// labels. A target that resolves to the serving endpoint itself is
+/// rendered in-process instead of scraped over the loopback (the serve
+/// loop is single-threaded, so a self-scrape would wait on itself).
+fn scrape_targets(targets: &[String], local: SocketAddr) -> String {
+    let mut scrapes = Vec::with_capacity(targets.len());
+    for t in targets {
+        let body = if is_self(t, local) {
+            super::render()
+        } else {
+            match http_get(t, "/metrics", IO_TIMEOUT) {
+                Ok(b) => b,
+                // Keep the merged view useful when one role is down: the
+                // dead instance simply contributes no samples.
+                Err(_) => String::new(),
+            }
+        };
+        scrapes.push((t.clone(), body));
+    }
+    super::aggregate(&scrapes)
+}
+
+fn is_self(target: &str, local: SocketAddr) -> bool {
+    target
+        .to_socket_addrs()
+        .map(|mut addrs| {
+            addrs.any(|a| {
+                a.port() == local.port()
+                    && (a.ip() == local.ip() || local.ip().is_unspecified())
+            })
+        })
+        .unwrap_or(false)
+}
+
+/// Minimal blocking HTTP/1.0 GET returning the response body; errors on
+/// connect/read failure or any non-200 status.
+pub fn http_get(addr: &str, path: &str, timeout: Duration) -> std::io::Result<String> {
+    let sock = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::NotFound, "unresolvable addr"))?;
+    let mut stream = TcpStream::connect_timeout(&sock, timeout)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    stream.write_all(
+        format!("GET {path} HTTP/1.0\r\nHost: {addr}\r\nConnection: close\r\n\r\n").as_bytes(),
+    )?;
+    let mut response = String::new();
+    stream.read_to_string(&mut response)?;
+    let (head, body) = response
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "no header end"))?;
+    let status = head.lines().next().unwrap_or("");
+    if !status.contains(" 200") {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("{addr}{path}: {status}"),
+        ));
+    }
+    Ok(body.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn serve_and_scrape_roundtrip() {
+        let c = crate::metrics::counter(
+            "weips_master_pulls_total",
+            &[("role", "http-test".into()), ("shard", "0".into())],
+        );
+        c.fetch_add(3, Ordering::Relaxed);
+        let server = MetricsServer::serve("127.0.0.1:0").unwrap();
+        let addr = server.addr().to_string();
+        let body = http_get(&addr, "/metrics", Duration::from_secs(2)).unwrap();
+        assert!(body.contains("# TYPE weips_master_pulls_total counter"), "{body}");
+        assert!(body.contains("weips_master_pulls_total{role=\"http-test\",shard=\"0\"}"));
+        crate::metrics::parse_exposition(&body).expect("scrape parses");
+        assert_eq!(http_get(&addr, "/healthz", Duration::from_secs(2)).unwrap(), "ok\n");
+        assert!(http_get(&addr, "/nope", Duration::from_secs(2)).is_err(), "404 errors");
+    }
+
+    #[test]
+    fn sequential_scrapes_reuse_the_endpoint() {
+        let server = MetricsServer::serve("127.0.0.1:0").unwrap();
+        let addr = server.addr().to_string();
+        for _ in 0..3 {
+            let body = http_get(&addr, "/metrics", Duration::from_secs(2)).unwrap();
+            assert!(body.contains("# TYPE weips_routing_epoch gauge"));
+        }
+    }
+
+    #[test]
+    fn cluster_view_merges_with_instance_labels_and_self_scrape() {
+        crate::metrics::counter(
+            "weips_wal_appends_total",
+            &[("role", "http-cluster-test".into())],
+        )
+        .fetch_add(1, Ordering::Relaxed);
+        let peer = MetricsServer::serve("127.0.0.1:0").unwrap();
+        let agg = MetricsServer::serve("127.0.0.1:0").unwrap();
+        // Targets include the aggregator itself: exercised via the
+        // in-process self-scrape path, not a loopback connection.
+        agg.set_targets(vec![peer.addr().to_string(), agg.addr().to_string()]);
+        let body =
+            http_get(&agg.addr().to_string(), "/cluster", Duration::from_secs(4)).unwrap();
+        let samples = crate::metrics::parse_exposition(&body).unwrap();
+        let instances: std::collections::BTreeSet<_> = samples
+            .iter()
+            .filter(|s| s.name == "weips_wal_appends_total")
+            .filter_map(|s| s.label("instance").map(str::to_string))
+            .collect();
+        assert!(
+            instances.contains(&peer.addr().to_string())
+                && instances.contains(&agg.addr().to_string()),
+            "both instances present: {instances:?}"
+        );
+        assert_eq!(body.matches("# TYPE weips_wal_appends_total counter").count(), 1);
+    }
+
+    #[test]
+    fn cluster_without_targets_is_404() {
+        let server = MetricsServer::serve("127.0.0.1:0").unwrap();
+        assert!(
+            http_get(&server.addr().to_string(), "/cluster", Duration::from_secs(2)).is_err()
+        );
+    }
+}

@@ -1,0 +1,885 @@
+//! Zero-dependency observability (ROADMAP item 4): a process-global
+//! metrics registry exported in Prometheus text format by a tiny HTTP
+//! endpoint on every role ([`http::MetricsServer`]).
+//!
+//! The build has no crates.io access, so instead of `prometheus` +
+//! `hyper` this is the minimal in-tree form WeiPS needs:
+//!
+//! * **Declared series.** Every exported family is declared up front in
+//!   [`DESCRIPTORS`] — name, type, label set, help. Registration against
+//!   an undeclared family (or with the wrong label names) panics, which
+//!   keeps the registry's label scheme *designed* rather than ad hoc and
+//!   lets a test diff `docs/METRICS.md` against the declaration table.
+//! * **Three instrument shapes.** Owned counters
+//!   ([`counter`]: an `Arc<AtomicU64>` handle fetched once, recorded
+//!   lock-free on the hot path), sampled values ([`register_fn`]: a
+//!   closure over a `Weak` to an existing atomic/struct, read only at
+//!   scrape time, silently dropped once the owner dies), and histograms
+//!   ([`histogram`]: the existing log-bucketed [`crate::util::Histogram`]
+//!   recording **nanoseconds**, exposed as cumulative seconds buckets).
+//! * **Label scheme.** `role` (master / slave / scheduler / trainer /
+//!   broker) on everything role-scoped; `shard`, `replica`, `table`,
+//!   `partition`, `server` where the unit demands it; `slot_bucket` for
+//!   the per-slot heat series that feed the future load-aware rebalancer
+//!   (ROADMAP item 1). Aggregation adds `instance` (see [`aggregate`]).
+//!
+//! Re-registering the same (family, labels) replaces the previous entry,
+//! so rebuilding a [`crate::coordinator::LocalCluster`] in one process
+//! (tests, benches) never leaks stale sampled closures: dead `Weak`s are
+//! pruned at render time, duplicates are overwritten at registration.
+
+pub mod http;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::Histogram;
+
+/// Prometheus metric type of a declared family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Monotonically increasing count.
+    Counter,
+    /// Point-in-time value, sampled at scrape.
+    Gauge,
+    /// Latency distribution (recorded in ns, exported in seconds).
+    Histogram,
+}
+
+impl Kind {
+    fn as_str(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+/// Compile-time declaration of one exported series family.
+#[derive(Debug)]
+pub struct Desc {
+    /// Family name (`weips_*`; counters end in `_total`, histograms in
+    /// `_seconds`).
+    pub name: &'static str,
+    /// Prometheus type.
+    pub kind: Kind,
+    /// `# HELP` text.
+    pub help: &'static str,
+    /// Label names, in the order every registration must supply them.
+    pub labels: &'static [&'static str],
+}
+
+/// Every series family this build can export, in exposition order.
+/// `docs/METRICS.md` documents exactly this list (a test enforces it).
+pub static DESCRIPTORS: &[Desc] = &[
+    // -- master shard hot path ------------------------------------------
+    Desc {
+        name: "weips_master_pulls_total",
+        kind: Kind::Counter,
+        help: "Sparse pull requests handled by a master shard.",
+        labels: &["role", "shard"],
+    },
+    Desc {
+        name: "weips_master_pushes_total",
+        kind: Kind::Counter,
+        help: "Sparse push (gradient) requests handled by a master shard.",
+        labels: &["role", "shard"],
+    },
+    Desc {
+        name: "weips_master_push_rows_total",
+        kind: Kind::Counter,
+        help: "Parameter rows updated by sparse pushes on a master shard.",
+        labels: &["role", "shard"],
+    },
+    Desc {
+        name: "weips_master_rows",
+        kind: Kind::Gauge,
+        help: "Live sparse parameter rows resident in a master shard.",
+        labels: &["role", "shard"],
+    },
+    Desc {
+        name: "weips_master_table_rows",
+        kind: Kind::Gauge,
+        help: "Live sparse parameter rows per table in a master shard.",
+        labels: &["role", "shard", "table"],
+    },
+    // -- slave serving path ---------------------------------------------
+    Desc {
+        name: "weips_slave_pulls_total",
+        kind: Kind::Counter,
+        help: "Serving pull requests handled by a slave replica.",
+        labels: &["role", "shard", "replica"],
+    },
+    Desc {
+        name: "weips_slave_applied_entries_total",
+        kind: Kind::Counter,
+        help: "Sync entries applied to a slave replica's serving tables.",
+        labels: &["role", "shard", "replica"],
+    },
+    Desc {
+        name: "weips_slave_filtered_entries_total",
+        kind: Kind::Counter,
+        help: "Sync entries skipped because their id routes to another slave shard.",
+        labels: &["role", "shard", "replica"],
+    },
+    Desc {
+        name: "weips_slave_rows",
+        kind: Kind::Gauge,
+        help: "Live serving rows resident in a slave replica.",
+        labels: &["role", "shard", "replica"],
+    },
+    Desc {
+        name: "weips_stripe_lock_acquisitions_total",
+        kind: Kind::Counter,
+        help: "Serving-table stripe write-locks taken by streaming applies \
+               (coalescing makes this grow sub-linearly in batch count).",
+        labels: &["role", "shard", "replica"],
+    },
+    // -- sync pipeline stages (gather -> queue -> scatter) ---------------
+    Desc {
+        name: "weips_gather_raw_events_total",
+        kind: Kind::Counter,
+        help: "Raw dirty events drained from the update collector by the gather stage.",
+        labels: &["role", "shard"],
+    },
+    Desc {
+        name: "weips_gather_emitted_entries_total",
+        kind: Kind::Counter,
+        help: "Entries emitted into sync batches after windowed dedup.",
+        labels: &["role", "shard"],
+    },
+    Desc {
+        name: "weips_gather_batches_total",
+        kind: Kind::Counter,
+        help: "Sync batches emitted by the gather stage.",
+        labels: &["role", "shard"],
+    },
+    Desc {
+        name: "weips_gather_empty_polls_total",
+        kind: Kind::Counter,
+        help: "Gather flush polls that found no dirty updates.",
+        labels: &["role", "shard"],
+    },
+    Desc {
+        name: "weips_queue_depth_records",
+        kind: Kind::Gauge,
+        help: "Records currently retained in one sync-queue partition.",
+        labels: &["role", "partition"],
+    },
+    Desc {
+        name: "weips_scatter_batches_applied_total",
+        kind: Kind::Counter,
+        help: "Sync batches consumed from the queue and applied by a scatter worker.",
+        labels: &["role", "shard", "replica"],
+    },
+    Desc {
+        name: "weips_scatter_decode_errors_total",
+        kind: Kind::Counter,
+        help: "Queue records a scatter worker failed to decompress or decode.",
+        labels: &["role", "shard", "replica"],
+    },
+    Desc {
+        name: "weips_scatter_lag_records",
+        kind: Kind::Gauge,
+        help: "Records between a scatter worker's cursors and the queue log end \
+               (sampled after each poll).",
+        labels: &["role", "shard", "replica"],
+    },
+    Desc {
+        name: "weips_push_visible_latency_seconds",
+        kind: Kind::Histogram,
+        help: "Latency from a sync batch's creation on the master to its rows \
+               becoming visible in a slave replica's serving tables.",
+        labels: &["role", "shard", "replica"],
+    },
+    // -- durability (WAL + checkpoints) ----------------------------------
+    Desc {
+        name: "weips_wal_appends_total",
+        kind: Kind::Counter,
+        help: "Records appended to the write-ahead log.",
+        labels: &["role"],
+    },
+    Desc {
+        name: "weips_wal_fsyncs_total",
+        kind: Kind::Counter,
+        help: "fsync(2) calls issued by the WAL (cadence = wal_sync_every).",
+        labels: &["role"],
+    },
+    Desc {
+        name: "weips_wal_unsynced_appends",
+        kind: Kind::Gauge,
+        help: "WAL appends since the last fsync — the fsync lag a power loss could lose \
+               (flush-only mode grows without bound by design).",
+        labels: &["role"],
+    },
+    Desc {
+        name: "weips_wal_fsync_duration_seconds",
+        kind: Kind::Histogram,
+        help: "Wall time of WAL fsync(2) calls.",
+        labels: &["role"],
+    },
+    Desc {
+        name: "weips_checkpoints_total",
+        kind: Kind::Counter,
+        help: "Checkpoints sealed by the scheduler (base + incremental).",
+        labels: &["role"],
+    },
+    // -- RPC substrate ---------------------------------------------------
+    Desc {
+        name: "weips_rpc_dispatches_total",
+        kind: Kind::Counter,
+        help: "Worker dispatches submitted by an RPC server's poll thread \
+               (ready-set batching makes this grow slower than connections).",
+        labels: &["server"],
+    },
+    Desc {
+        name: "weips_rpc_dispatched_connections_total",
+        kind: Kind::Counter,
+        help: "Ready connections handed to RPC worker threads.",
+        labels: &["server"],
+    },
+    Desc {
+        name: "weips_rpc_parked_connections",
+        kind: Kind::Gauge,
+        help: "Idle connections currently parked in an RPC server's event loop.",
+        labels: &["server"],
+    },
+    // -- routing / elastic resharding ------------------------------------
+    Desc {
+        name: "weips_routing_epoch",
+        kind: Kind::Gauge,
+        help: "Current slot-map epoch observed by this role's router (0 = canonical \
+               uniform map).",
+        labels: &["role"],
+    },
+    Desc {
+        name: "weips_slot_pushes_total",
+        kind: Kind::Counter,
+        help: "Push rows per virtual-slot bucket — the write-heat input for the \
+               load-aware rebalancer.",
+        labels: &["role", "slot_bucket"],
+    },
+    Desc {
+        name: "weips_slot_pulls_total",
+        kind: Kind::Counter,
+        help: "Pulled ids per virtual-slot bucket — the read-heat input for the \
+               load-aware rebalancer.",
+        labels: &["role", "slot_bucket"],
+    },
+    Desc {
+        name: "weips_migrations_total",
+        kind: Kind::Counter,
+        help: "Completed live slot migrations.",
+        labels: &["role"],
+    },
+    Desc {
+        name: "weips_migration_slots_moved_total",
+        kind: Kind::Counter,
+        help: "Virtual slots re-assigned by completed migrations.",
+        labels: &["role"],
+    },
+    Desc {
+        name: "weips_migration_rows_moved_total",
+        kind: Kind::Counter,
+        help: "Parameter rows copied by completed migrations (base + catch-up + final).",
+        labels: &["role"],
+    },
+    // -- model quality (progressive validation) --------------------------
+    Desc {
+        name: "weips_model_auc",
+        kind: Kind::Gauge,
+        help: "Cumulative progressive-validation AUC.",
+        labels: &["role"],
+    },
+    Desc {
+        name: "weips_model_window_auc",
+        kind: Kind::Gauge,
+        help: "Sliding-window progressive-validation AUC (the downgrade-trigger input).",
+        labels: &["role"],
+    },
+    Desc {
+        name: "weips_model_logloss",
+        kind: Kind::Gauge,
+        help: "Cumulative mean logloss of pre-update predictions.",
+        labels: &["role"],
+    },
+    Desc {
+        name: "weips_model_calibration",
+        kind: Kind::Gauge,
+        help: "Mean prediction / mean label (1.0 = perfectly calibrated).",
+        labels: &["role"],
+    },
+    Desc {
+        name: "weips_model_samples",
+        kind: Kind::Gauge,
+        help: "Training samples observed by the progressive-validation monitor.",
+        labels: &["role"],
+    },
+];
+
+/// Histogram bucket bounds: exposition label (seconds) paired with the
+/// recorded-nanosecond bound. Chosen to straddle both fsync (µs..ms) and
+/// push→visible (ms..s) latencies.
+pub const LATENCY_LE_NS: &[(&str, u64)] = &[
+    ("0.000001", 1_000),
+    ("0.00001", 10_000),
+    ("0.0001", 100_000),
+    ("0.001", 1_000_000),
+    ("0.01", 10_000_000),
+    ("0.05", 50_000_000),
+    ("0.1", 100_000_000),
+    ("0.5", 500_000_000),
+    ("1", 1_000_000_000),
+    ("5", 5_000_000_000),
+    ("10", 10_000_000_000),
+];
+
+/// A scrape-time sampler: returns the current value, or `None` once the
+/// owning component is gone (the entry is then pruned).
+pub type SampleFn = Box<dyn Fn() -> Option<f64> + Send + Sync>;
+
+enum Instrument {
+    Counter(Arc<AtomicU64>),
+    Sampled(SampleFn),
+    Histogram(Arc<Histogram>),
+}
+
+/// The metrics registry: family name → label-set → instrument.
+pub struct Registry {
+    families: Mutex<BTreeMap<&'static str, BTreeMap<String, Instrument>>>,
+}
+
+impl Registry {
+    fn new() -> Registry {
+        Registry { families: Mutex::new(BTreeMap::new()) }
+    }
+
+    fn desc(name: &str) -> &'static Desc {
+        DESCRIPTORS
+            .iter()
+            .find(|d| d.name == name)
+            .unwrap_or_else(|| panic!("metrics: series {name} is not declared in DESCRIPTORS"))
+    }
+
+    /// Validate the label names against the declaration and render the
+    /// stable `k="v",...` key.
+    fn label_key(desc: &Desc, labels: &[(&'static str, String)]) -> String {
+        assert_eq!(
+            labels.iter().map(|(k, _)| *k).collect::<Vec<_>>(),
+            desc.labels,
+            "metrics: {} registered with wrong label names",
+            desc.name
+        );
+        labels
+            .iter()
+            .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Get-or-create an owned counter handle. The returned `Arc` is the
+    /// live instrument: record with `fetch_add` on the hot path.
+    pub fn counter(&self, name: &'static str, labels: &[(&'static str, String)]) -> Arc<AtomicU64> {
+        let desc = Self::desc(name);
+        debug_assert_eq!(desc.kind, Kind::Counter, "{name} is not a counter");
+        let key = Self::label_key(desc, labels);
+        let mut fams = self.families.lock().unwrap();
+        let fam = fams.entry(desc.name).or_default();
+        if let Some(Instrument::Counter(c)) = fam.get(&key) {
+            return c.clone();
+        }
+        let c = Arc::new(AtomicU64::new(0));
+        fam.insert(key, Instrument::Counter(c.clone()));
+        c
+    }
+
+    /// Get-or-create a histogram handle. Record **nanoseconds**; the
+    /// exposition converts to seconds.
+    pub fn histogram(
+        &self,
+        name: &'static str,
+        labels: &[(&'static str, String)],
+    ) -> Arc<Histogram> {
+        let desc = Self::desc(name);
+        debug_assert_eq!(desc.kind, Kind::Histogram, "{name} is not a histogram");
+        let key = Self::label_key(desc, labels);
+        let mut fams = self.families.lock().unwrap();
+        let fam = fams.entry(desc.name).or_default();
+        if let Some(Instrument::Histogram(h)) = fam.get(&key) {
+            return h.clone();
+        }
+        let h = Arc::new(Histogram::new());
+        fam.insert(key, Instrument::Histogram(h.clone()));
+        h
+    }
+
+    /// Register (or replace) a scrape-time sampler for a counter or gauge
+    /// family. The closure should capture a `Weak` to its owner and
+    /// return `None` once the owner is dropped.
+    pub fn register_fn(
+        &self,
+        name: &'static str,
+        labels: &[(&'static str, String)],
+        f: SampleFn,
+    ) {
+        let desc = Self::desc(name);
+        debug_assert_ne!(desc.kind, Kind::Histogram, "{name}: use histogram() instead");
+        let key = Self::label_key(desc, labels);
+        let mut fams = self.families.lock().unwrap();
+        fams.entry(desc.name).or_default().insert(key, Instrument::Sampled(f));
+    }
+
+    /// Render the full Prometheus text exposition. Every declared family
+    /// gets its `# HELP`/`# TYPE` header even when it has no samples yet,
+    /// so the series reference stays diffable against any scrape. Dead
+    /// samplers (owner dropped) are pruned here.
+    pub fn render(&self) -> String {
+        let mut out = String::with_capacity(16 * 1024);
+        let mut fams = self.families.lock().unwrap();
+        for desc in DESCRIPTORS {
+            out.push_str("# HELP ");
+            out.push_str(desc.name);
+            out.push(' ');
+            out.push_str(&desc.help.split_whitespace().collect::<Vec<_>>().join(" "));
+            out.push('\n');
+            out.push_str("# TYPE ");
+            out.push_str(desc.name);
+            out.push(' ');
+            out.push_str(desc.kind.as_str());
+            out.push('\n');
+            let Some(fam) = fams.get_mut(desc.name) else { continue };
+            let mut dead = Vec::new();
+            for (key, inst) in fam.iter() {
+                match inst {
+                    Instrument::Counter(c) => {
+                        sample_line(&mut out, desc.name, key, c.load(Ordering::Relaxed) as f64);
+                    }
+                    Instrument::Sampled(f) => match f() {
+                        Some(v) => sample_line(&mut out, desc.name, key, v),
+                        None => dead.push(key.clone()),
+                    },
+                    Instrument::Histogram(h) => render_histogram(&mut out, desc.name, key, h),
+                }
+            }
+            for key in dead {
+                fam.remove(&key);
+            }
+        }
+        out
+    }
+}
+
+/// Append `name{key} value\n` (omitting the braces for an empty key).
+fn sample_line(out: &mut String, name: &str, key: &str, value: f64) {
+    out.push_str(name);
+    if !key.is_empty() {
+        out.push('{');
+        out.push_str(key);
+        out.push('}');
+    }
+    out.push(' ');
+    out.push_str(&fmt_value(value));
+    out.push('\n');
+}
+
+fn render_histogram(out: &mut String, name: &str, key: &str, h: &Histogram) {
+    let bounds: Vec<u64> = LATENCY_LE_NS.iter().map(|(_, b)| *b).collect();
+    let cum = h.cumulative(&bounds);
+    let total = h.count();
+    for ((le, _), c) in LATENCY_LE_NS.iter().zip(&cum) {
+        out.push_str(name);
+        out.push_str("_bucket{");
+        if !key.is_empty() {
+            out.push_str(key);
+            out.push(',');
+        }
+        out.push_str("le=\"");
+        out.push_str(le);
+        out.push_str("\"} ");
+        // A record between the bucket sweep and the count read can make a
+        // bucket momentarily exceed the total; clamp for monotonicity.
+        out.push_str(&(*c).min(total).to_string());
+        out.push('\n');
+    }
+    out.push_str(name);
+    out.push_str("_bucket{");
+    if !key.is_empty() {
+        out.push_str(key);
+        out.push(',');
+    }
+    out.push_str("le=\"+Inf\"} ");
+    out.push_str(&total.to_string());
+    out.push('\n');
+    sample_line(out, &format!("{name}_sum"), key, h.sum() as f64 / 1e9);
+    sample_line(out, &format!("{name}_count"), key, total as f64);
+}
+
+/// Prometheus-friendly float formatting: integral values print without a
+/// fractional part.
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// The process-global registry all convenience functions below use.
+pub fn default() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::new)
+}
+
+/// [`Registry::counter`] on the global registry.
+pub fn counter(name: &'static str, labels: &[(&'static str, String)]) -> Arc<AtomicU64> {
+    default().counter(name, labels)
+}
+
+/// [`Registry::histogram`] on the global registry.
+pub fn histogram(name: &'static str, labels: &[(&'static str, String)]) -> Arc<Histogram> {
+    default().histogram(name, labels)
+}
+
+/// [`Registry::register_fn`] on the global registry.
+pub fn register_fn(name: &'static str, labels: &[(&'static str, String)], f: SampleFn) {
+    default().register_fn(name, labels, f)
+}
+
+/// [`Registry::render`] on the global registry.
+pub fn render() -> String {
+    default().render()
+}
+
+// ---------------------------------------------------------------------------
+// Exposition parsing + cluster aggregation
+// ---------------------------------------------------------------------------
+
+/// One parsed sample line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+impl Sample {
+    /// Value of one label (None when absent).
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Parse a Prometheus text exposition into samples. Comment (`#`) and
+/// blank lines are skipped; any other malformed line is an error — the
+/// integration tests use this to assert every scrape parses.
+pub fn parse_exposition(text: &str) -> std::result::Result<Vec<Sample>, String> {
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        out.push(parse_sample(line).map_err(|e| format!("line {}: {e}: {line}", ln + 1))?);
+    }
+    Ok(out)
+}
+
+fn parse_sample(line: &str) -> std::result::Result<Sample, String> {
+    let (name_part, rest) = match line.find('{') {
+        Some(brace) => {
+            let close = line.rfind('}').ok_or("unterminated label set")?;
+            if close < brace {
+                return Err("mismatched braces".into());
+            }
+            (&line[..brace], &line[close + 1..])
+        }
+        None => {
+            let sp = line.find(char::is_whitespace).ok_or("no value")?;
+            (&line[..sp], &line[sp..])
+        }
+    };
+    let name = name_part.trim().to_string();
+    if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    {
+        return Err(format!("bad metric name {name:?}"));
+    }
+    let labels = match line.find('{') {
+        Some(brace) => parse_labels(&line[brace + 1..brace + (line.rfind('}').unwrap() - brace)])?,
+        None => Vec::new(),
+    };
+    let vs = rest.trim();
+    let value = match vs {
+        "+Inf" => f64::INFINITY,
+        "-Inf" => f64::NEG_INFINITY,
+        _ => vs.parse::<f64>().map_err(|_| format!("bad value {vs:?}"))?,
+    };
+    Ok(Sample { name, labels, value })
+}
+
+fn parse_labels(body: &str) -> std::result::Result<Vec<(String, String)>, String> {
+    let mut labels = Vec::new();
+    let mut chars = body.chars().peekable();
+    loop {
+        while matches!(chars.peek(), Some(c) if c.is_whitespace() || *c == ',') {
+            chars.next();
+        }
+        if chars.peek().is_none() {
+            return Ok(labels);
+        }
+        let mut key = String::new();
+        for c in chars.by_ref() {
+            if c == '=' {
+                break;
+            }
+            key.push(c);
+        }
+        if chars.next() != Some('"') {
+            return Err(format!("label {key}: expected opening quote"));
+        }
+        let mut value = String::new();
+        let mut closed = false;
+        while let Some(c) = chars.next() {
+            match c {
+                '\\' => match chars.next() {
+                    Some('n') => value.push('\n'),
+                    Some(other) => value.push(other),
+                    None => return Err("dangling escape".into()),
+                },
+                '"' => {
+                    closed = true;
+                    break;
+                }
+                _ => value.push(c),
+            }
+        }
+        if !closed {
+            return Err(format!("label {key}: unterminated value"));
+        }
+        labels.push((key.trim().to_string(), value));
+    }
+}
+
+/// Merge per-role scrapes into one cluster-wide exposition: each sample
+/// line gains an `instance="<addr>"` label; `# HELP`/`# TYPE` headers are
+/// emitted once per family from [`DESCRIPTORS`]. Sample names that don't
+/// belong to any declared family are dropped (a scrape from a newer build
+/// degrades gracefully instead of corrupting the merged view).
+pub fn aggregate(scrapes: &[(String, String)]) -> String {
+    // sample name -> descriptor index (histograms expose three suffixes).
+    let mut index: BTreeMap<String, usize> = BTreeMap::new();
+    for (i, d) in DESCRIPTORS.iter().enumerate() {
+        index.insert(d.name.to_string(), i);
+        if d.kind == Kind::Histogram {
+            index.insert(format!("{}_bucket", d.name), i);
+            index.insert(format!("{}_sum", d.name), i);
+            index.insert(format!("{}_count", d.name), i);
+        }
+    }
+    let mut per_family: Vec<Vec<String>> = vec![Vec::new(); DESCRIPTORS.len()];
+    for (instance, body) in scrapes {
+        for line in body.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let name_end = line.find(|c: char| c == '{' || c.is_whitespace()).unwrap_or(0);
+            let Some(&fam) = index.get(&line[..name_end]) else { continue };
+            let tagged = match line.find('{') {
+                Some(brace) => {
+                    let empty = line[brace + 1..].trim_start().starts_with('}');
+                    format!(
+                        "{}{{instance=\"{}\"{}{}",
+                        &line[..brace],
+                        escape_label(instance),
+                        if empty { "" } else { "," },
+                        &line[brace + 1..]
+                    )
+                }
+                None => format!(
+                    "{}{{instance=\"{}\"}}{}",
+                    &line[..name_end],
+                    escape_label(instance),
+                    &line[name_end..]
+                ),
+            };
+            per_family[fam].push(tagged);
+        }
+    }
+    let mut out = String::with_capacity(32 * 1024);
+    for (desc, lines) in DESCRIPTORS.iter().zip(&per_family) {
+        out.push_str("# HELP ");
+        out.push_str(desc.name);
+        out.push(' ');
+        out.push_str(&desc.help.split_whitespace().collect::<Vec<_>>().join(" "));
+        out.push('\n');
+        out.push_str("# TYPE ");
+        out.push_str(desc.name);
+        out.push(' ');
+        out.push_str(desc.kind.as_str());
+        out.push('\n');
+        for l in lines {
+            out.push_str(l);
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn descriptor_names_unique_and_well_formed() {
+        let mut seen = std::collections::BTreeSet::new();
+        for d in DESCRIPTORS {
+            assert!(seen.insert(d.name), "duplicate family {}", d.name);
+            assert!(d.name.starts_with("weips_"), "{} must be weips_-prefixed", d.name);
+            match d.kind {
+                Kind::Counter => assert!(d.name.ends_with("_total"), "{}", d.name),
+                Kind::Histogram => assert!(d.name.ends_with("_seconds"), "{}", d.name),
+                Kind::Gauge => {
+                    assert!(!d.name.ends_with("_total"), "{} gauge ends in _total", d.name)
+                }
+            }
+            assert!(!d.labels.contains(&"instance"), "{}: instance is reserved", d.name);
+        }
+    }
+
+    #[test]
+    fn counter_roundtrip_and_render() {
+        let c = counter(
+            "weips_master_pulls_total",
+            &[("role", "unit-test".into()), ("shard", "77".into())],
+        );
+        c.fetch_add(41, Ordering::Relaxed);
+        // Get-or-create returns the same instrument.
+        counter(
+            "weips_master_pulls_total",
+            &[("role", "unit-test".into()), ("shard", "77".into())],
+        )
+        .fetch_add(1, Ordering::Relaxed);
+        let text = render();
+        assert!(text.contains("# TYPE weips_master_pulls_total counter"));
+        assert!(
+            text.contains("weips_master_pulls_total{role=\"unit-test\",shard=\"77\"} 42"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn sampler_prunes_after_owner_drops() {
+        let owner = Arc::new(AtomicU64::new(7));
+        let weak = Arc::downgrade(&owner);
+        register_fn(
+            "weips_routing_epoch",
+            &[("role", "unit-test-prune".into())],
+            Box::new(move || weak.upgrade().map(|a| a.load(Ordering::Relaxed) as f64)),
+        );
+        assert!(render().contains("weips_routing_epoch{role=\"unit-test-prune\"} 7"));
+        drop(owner);
+        assert!(!render().contains("role=\"unit-test-prune\""));
+    }
+
+    #[test]
+    fn histogram_renders_cumulative_seconds_buckets() {
+        let h = histogram(
+            "weips_wal_fsync_duration_seconds",
+            &[("role", "unit-test-hist".into())],
+        );
+        h.record(500);            // 0.5µs
+        h.record(2_000_000);      // 2ms
+        h.record(2_000_000_000);  // 2s
+        let text = render();
+        let line = |le: &str| {
+            format!("weips_wal_fsync_duration_seconds_bucket{{role=\"unit-test-hist\",le=\"{le}\"}}")
+        };
+        let bucket = |le: &str| -> u64 {
+            text.lines()
+                .find(|l| l.starts_with(&line(le)))
+                .unwrap_or_else(|| panic!("missing bucket {le}"))
+                .rsplit(' ')
+                .next()
+                .unwrap()
+                .parse()
+                .unwrap()
+        };
+        assert_eq!(bucket("0.000001"), 1);
+        assert_eq!(bucket("0.01"), 2); // log-bucket midpoint keeps 2ms under 10ms
+        assert_eq!(bucket("+Inf"), 3);
+        assert!(bucket("0.001") <= bucket("0.01"), "cumulative monotone");
+        assert!(text
+            .contains("weips_wal_fsync_duration_seconds_count{role=\"unit-test-hist\"} 3"));
+    }
+
+    #[test]
+    fn render_emits_every_declared_family_header() {
+        let text = render();
+        for d in DESCRIPTORS {
+            assert!(
+                text.contains(&format!("# TYPE {} {}", d.name, d.kind.as_str())),
+                "family {} missing from render",
+                d.name
+            );
+        }
+    }
+
+    #[test]
+    fn parse_roundtrips_own_render() {
+        counter(
+            "weips_master_pushes_total",
+            &[("role", "unit-test-parse".into()), ("shard", "3".into())],
+        )
+        .fetch_add(5, Ordering::Relaxed);
+        let samples = parse_exposition(&render()).expect("own exposition must parse");
+        let s = samples
+            .iter()
+            .find(|s| {
+                s.name == "weips_master_pushes_total" && s.label("role") == Some("unit-test-parse")
+            })
+            .expect("sample present");
+        assert_eq!(s.label("shard"), Some("3"));
+        assert_eq!(s.value, 5.0);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_exposition("weips_x{role=\"a\" 1").is_err());
+        assert!(parse_exposition("no value here").is_err());
+        assert!(parse_exposition("m 1.5\n# comment\n\nm2{a=\"b\"} 2").is_ok());
+    }
+
+    #[test]
+    fn parse_handles_escapes() {
+        let s = parse_sample(r#"m{a="x\"y\\z"} 1"#).unwrap();
+        assert_eq!(s.label("a"), Some("x\"y\\z"));
+    }
+
+    #[test]
+    fn aggregate_tags_instances_and_keeps_headers_unique() {
+        let a = concat!(
+            "# HELP weips_wal_appends_total x\n",
+            "# TYPE weips_wal_appends_total counter\n",
+            "weips_wal_appends_total{role=\"master\"} 10\n"
+        );
+        let b = "weips_wal_appends_total{role=\"master\"} 20\nweips_bogus_total 5\n";
+        let merged = aggregate(&[
+            ("127.0.0.1:9001".to_string(), a.to_string()),
+            ("127.0.0.1:9002".to_string(), b.to_string()),
+        ]);
+        assert_eq!(merged.matches("# TYPE weips_wal_appends_total counter").count(), 1);
+        assert!(merged
+            .contains("weips_wal_appends_total{instance=\"127.0.0.1:9001\",role=\"master\"} 10"));
+        assert!(merged
+            .contains("weips_wal_appends_total{instance=\"127.0.0.1:9002\",role=\"master\"} 20"));
+        assert!(!merged.contains("weips_bogus_total"), "undeclared series dropped");
+        let samples = parse_exposition(&merged).unwrap();
+        assert!(samples.iter().all(|s| s.label("instance").is_some()));
+    }
+}

@@ -162,6 +162,28 @@ impl Monitor {
         }
     }
 
+    /// Register the progressive-validation gauges (`weips_model_*`) under
+    /// `role` on the global metrics registry. Each sampler takes one
+    /// [`Monitor::snapshot`] at scrape time and holds only a `Weak`, so a
+    /// dropped monitor's series disappear from scrapes.
+    pub fn register_metrics(self: &std::sync::Arc<Self>, role: &str) {
+        let gauges: [(&'static str, fn(&MonitorSnapshot) -> f64); 5] = [
+            ("weips_model_auc", |s| s.auc),
+            ("weips_model_window_auc", |s| s.window_auc),
+            ("weips_model_logloss", |s| s.logloss),
+            ("weips_model_calibration", |s| s.calibration),
+            ("weips_model_samples", |s| s.samples as f64),
+        ];
+        for (name, get) in gauges {
+            let weak = std::sync::Arc::downgrade(self);
+            crate::metrics::register_fn(
+                name,
+                &[("role", role.to_string())],
+                Box::new(move || weak.upgrade().map(|m| get(&m.snapshot()))),
+            );
+        }
+    }
+
     /// Current metrics.
     pub fn snapshot(&self) -> MonitorSnapshot {
         let s = self.state.lock().unwrap();

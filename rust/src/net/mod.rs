@@ -455,6 +455,35 @@ impl RpcServer {
             dispatches: AtomicU64::new(0),
             dispatched_conns: AtomicU64::new(0),
         });
+        // Dispatch stats surface on /metrics keyed by the bound address;
+        // samplers hold a Weak so a dropped server vanishes from scrapes.
+        {
+            let labels = [("server", local.to_string())];
+            let weak = Arc::downgrade(&park);
+            crate::metrics::register_fn(
+                "weips_rpc_dispatches_total",
+                &labels,
+                Box::new(move || {
+                    weak.upgrade().map(|p| p.dispatches.load(Ordering::Relaxed) as f64)
+                }),
+            );
+            let weak = Arc::downgrade(&park);
+            crate::metrics::register_fn(
+                "weips_rpc_dispatched_connections_total",
+                &labels,
+                Box::new(move || {
+                    weak.upgrade().map(|p| p.dispatched_conns.load(Ordering::Relaxed) as f64)
+                }),
+            );
+            let weak = Arc::downgrade(&park);
+            crate::metrics::register_fn(
+                "weips_rpc_parked_connections",
+                &labels,
+                Box::new(move || {
+                    weak.upgrade().map(|p| p.count.load(Ordering::Acquire) as f64)
+                }),
+            );
+        }
         let opts = Arc::new(RpcOptions { mode, ..opts });
         let accept_thread = {
             let stop = stop.clone();

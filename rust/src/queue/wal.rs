@@ -25,12 +25,14 @@
 use std::fs::{File, OpenOptions};
 use std::io::Write;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::codec::{frame, unframe};
 use crate::queue::log::SyncLog;
 use crate::queue::Record;
+use crate::util::{mono_ns, Histogram};
 use crate::{Error, Result};
 
 const MAGIC: &[u8; 4] = b"WAL1";
@@ -132,17 +134,26 @@ impl WalPartition {
 
     /// Append one record. `sync_every > 0` fsyncs the file on every
     /// n-th append — the power-loss durability knob; 0 keeps the
-    /// flush-only fast path.
-    fn append(&mut self, ts_ms: u64, payload: Vec<u8>, sync_every: u64) -> Result<u64> {
+    /// flush-only fast path. Returns the record offset and, when this
+    /// append fsynced, the fsync wall time in ns (metrics input).
+    fn append(
+        &mut self,
+        ts_ms: u64,
+        payload: Vec<u8>,
+        sync_every: u64,
+    ) -> Result<(u64, Option<u64>)> {
         self.file.write_all(&Self::record_frame(ts_ms, &payload))?;
         self.file.flush()?;
         self.appends += 1;
+        let mut fsync_ns = None;
         if sync_every > 0 && self.appends % sync_every == 0 {
+            let start = mono_ns();
             self.file.sync_data()?;
+            fsync_ns = Some(mono_ns().saturating_sub(start));
         }
         let offset = self.base_offset + self.records.len() as u64;
         self.records.push(Record { offset, ts_ms, payload: Arc::new(payload) });
-        Ok(offset)
+        Ok((offset, fsync_ns))
     }
 
     fn fetch(&self, offset: u64, max: usize) -> Result<Vec<Record>> {
@@ -187,11 +198,26 @@ impl WalPartition {
     }
 }
 
+/// Scrape-facing WAL accounting: the metrics samplers hold a `Weak` on
+/// this, so the series die with the log.
+#[derive(Default)]
+struct WalStats {
+    appends: AtomicU64,
+    fsyncs: AtomicU64,
+    /// Appends since the last fsync — the fsync lag a power loss could
+    /// lose. Grows without bound in flush-only mode (by design).
+    unsynced: AtomicU64,
+}
+
 /// Durable partitioned WAL (one file per partition under `dir`).
 pub struct WalLog {
     partitions: Vec<Mutex<WalPartition>>,
     /// fsync cadence: sync every n-th append (0 = flush-only).
     sync_every: u64,
+    stats: Arc<WalStats>,
+    /// Registry histogram (shared across WAL instances with the same
+    /// labels); records fsync wall time in ns.
+    fsync_hist: Arc<Histogram>,
 }
 
 impl WalLog {
@@ -217,7 +243,38 @@ impl WalLog {
         for p in 0..partitions.max(1) {
             parts.push(Mutex::new(WalPartition::open(dir.join(format!("p{p}.wal")))?));
         }
-        Ok(WalLog { partitions: parts, sync_every })
+        let stats = Arc::new(WalStats::default());
+        // The WAL journals master-shard update windows, so its durability
+        // series live under the master role. Re-opening a WAL (recovery,
+        // tests) replaces the samplers with the live instance's.
+        let labels = [("role", "master".to_string())];
+        let counters: [(&'static str, fn(&WalStats) -> &AtomicU64); 3] = [
+            ("weips_wal_appends_total", |s| &s.appends),
+            ("weips_wal_fsyncs_total", |s| &s.fsyncs),
+            ("weips_wal_unsynced_appends", |s| &s.unsynced),
+        ];
+        for (name, get) in counters {
+            let weak = Arc::downgrade(&stats);
+            crate::metrics::register_fn(
+                name,
+                &labels,
+                Box::new(move || {
+                    weak.upgrade().map(|s| get(&s).load(Ordering::Relaxed) as f64)
+                }),
+            );
+        }
+        let fsync_hist = crate::metrics::histogram("weips_wal_fsync_duration_seconds", &labels);
+        Ok(WalLog { partitions: parts, sync_every, stats, fsync_hist })
+    }
+
+    /// (appends, fsyncs, appends-since-last-fsync) — the counters behind
+    /// the `weips_wal_*` series, readable without a scrape.
+    pub fn sync_counters(&self) -> (u64, u64, u64) {
+        (
+            self.stats.appends.load(Ordering::Relaxed),
+            self.stats.fsyncs.load(Ordering::Relaxed),
+            self.stats.unsynced.load(Ordering::Relaxed),
+        )
     }
 
     fn partition(&self, idx: u32) -> Result<&Mutex<WalPartition>> {
@@ -252,7 +309,20 @@ impl SyncLog for WalLog {
     }
 
     fn append(&self, partition: u32, ts_ms: u64, payload: Vec<u8>) -> Result<u64> {
-        self.partition(partition)?.lock().unwrap().append(ts_ms, payload, self.sync_every)
+        let (offset, fsync_ns) =
+            self.partition(partition)?.lock().unwrap().append(ts_ms, payload, self.sync_every)?;
+        self.stats.appends.fetch_add(1, Ordering::Relaxed);
+        match fsync_ns {
+            Some(ns) => {
+                self.stats.fsyncs.fetch_add(1, Ordering::Relaxed);
+                self.stats.unsynced.store(0, Ordering::Relaxed);
+                self.fsync_hist.record(ns);
+            }
+            None => {
+                self.stats.unsynced.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Ok(offset)
     }
 
     fn fetch(
@@ -287,6 +357,20 @@ mod tests {
         ));
         std::fs::create_dir_all(&d).unwrap();
         d
+    }
+
+    #[test]
+    fn fsync_cadence_counters() {
+        let dir = tmp_dir();
+        let wal = WalLog::open_with(&dir, 1, 2).unwrap();
+        for i in 0..5u64 {
+            wal.append(0, i, vec![1]).unwrap();
+        }
+        let (appends, fsyncs, unsynced) = wal.sync_counters();
+        assert_eq!(appends, 5);
+        assert_eq!(fsyncs, 2, "cadence 2 fsyncs on appends 2 and 4");
+        assert_eq!(unsynced, 1, "one append since the last fsync");
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

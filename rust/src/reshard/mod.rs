@@ -49,6 +49,12 @@ use crate::{Error, Result};
 /// count the deployment will ever grow to (`reshard_slots` config knob).
 pub const DEFAULT_SLOTS: usize = 1024;
 
+/// Exposition granularity for per-slot heat: [`SlotHeat`] counters are
+/// summed into at most this many `slot_bucket` series per direction, so
+/// the scrape size stays fixed while the full-resolution counters remain
+/// available to the rebalancer in-process.
+pub const HEAT_BUCKETS: usize = 64;
+
 /// Owning virtual slot for an id. Uses the *low* bits of `fxhash64(id)`
 /// like the pre-slot router did (table striping keys on the high bits, so
 /// slot choice stays independent of lock striping).
@@ -283,13 +289,22 @@ impl SlotMap {
 pub struct SlotMapCell {
     map: RwLock<Arc<SlotMap>>,
     epoch: AtomicU64,
+    /// Per-slot access heat shared by every router clone (installs keep
+    /// the universe, so the arrays never resize).
+    heat: SlotHeat,
 }
 
 impl SlotMapCell {
     /// Cell seeded with `map`.
     pub fn new(map: SlotMap) -> SlotMapCell {
         let epoch = map.epoch;
-        SlotMapCell { map: RwLock::new(Arc::new(map)), epoch: AtomicU64::new(epoch) }
+        let heat = SlotHeat::new(map.slots());
+        SlotMapCell { map: RwLock::new(Arc::new(map)), epoch: AtomicU64::new(epoch), heat }
+    }
+
+    /// Per-slot push/pull heat counters.
+    pub fn heat(&self) -> &SlotHeat {
+        &self.heat
     }
 
     /// Current map (cheap Arc clone; snapshot once per batch, not per id).
@@ -323,6 +338,77 @@ impl SlotMapCell {
         *cur = next.clone();
         self.epoch.store(next.epoch, Ordering::Release);
         Ok(next)
+    }
+}
+
+/// Per-virtual-slot access counters: lock-free push/pull heat recorded by
+/// the master's request path and exported (bucketed) through the metrics
+/// registry. This is the designated input signal for the load-aware
+/// rebalancer (ROADMAP item 1): hot slots show up here long before shard
+/// row counts skew.
+#[derive(Debug)]
+pub struct SlotHeat {
+    push: Vec<AtomicU64>,
+    pull: Vec<AtomicU64>,
+}
+
+impl SlotHeat {
+    fn new(slots: usize) -> SlotHeat {
+        let mut push = Vec::with_capacity(slots);
+        push.resize_with(slots, || AtomicU64::new(0));
+        let mut pull = Vec::with_capacity(slots);
+        pull.resize_with(slots, || AtomicU64::new(0));
+        SlotHeat { push, pull }
+    }
+
+    /// Slot universe size the counters cover.
+    pub fn slots(&self) -> usize {
+        self.push.len()
+    }
+
+    /// Count one pushed row landing in `slot`.
+    #[inline]
+    pub fn record_push(&self, slot: u16) {
+        if let Some(c) = self.push.get(slot as usize) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Count one pulled id served from `slot`.
+    #[inline]
+    pub fn record_pull(&self, slot: u16) {
+        if let Some(c) = self.pull.get(slot as usize) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Pushed rows recorded for `slot`.
+    pub fn pushes(&self, slot: u16) -> u64 {
+        self.push.get(slot as usize).map(|c| c.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+
+    /// Pulled ids recorded for `slot`.
+    pub fn pulls(&self, slot: u16) -> u64 {
+        self.pull.get(slot as usize).map(|c| c.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+
+    /// Total (push, pull) heat summed over the bucket of slots `{s :
+    /// s*buckets/slots == bucket}` — the exposition granularity: a fixed
+    /// number of `slot_bucket` series regardless of universe size, while
+    /// the full-resolution counters stay available programmatically for
+    /// the rebalancer.
+    pub fn bucket(&self, bucket: usize, buckets: usize) -> (u64, u64) {
+        let slots = self.push.len();
+        let buckets = buckets.clamp(1, slots.max(1));
+        let mut push = 0u64;
+        let mut pull = 0u64;
+        for s in 0..slots {
+            if s * buckets / slots == bucket {
+                push += self.push[s].load(Ordering::Relaxed);
+                pull += self.pull[s].load(Ordering::Relaxed);
+            }
+        }
+        (push, pull)
     }
 }
 
@@ -572,6 +658,27 @@ impl<'a> SlotTransfer<'a> {
 mod tests {
     use super::*;
     use crate::util::clock::ManualClock;
+
+    #[test]
+    fn slot_heat_counts_and_buckets() {
+        let cell = SlotMapCell::new(SlotMap::uniform(128, 4));
+        let heat = cell.heat();
+        assert_eq!(heat.slots(), 128);
+        heat.record_push(5);
+        heat.record_push(5);
+        heat.record_pull(5);
+        heat.record_push(127);
+        heat.record_push(9999); // out of universe: ignored, not a panic
+        assert_eq!(heat.pushes(5), 2);
+        assert_eq!(heat.pulls(5), 1);
+        assert_eq!(heat.pushes(9999), 0);
+        // 64 buckets over 128 slots: slot 5 -> bucket 2, slot 127 -> 63.
+        assert_eq!(heat.bucket(5 * 64 / 128, 64), (2, 1));
+        assert_eq!(heat.bucket(63, 64), (1, 0));
+        // Every record lands in exactly one bucket.
+        let total: u64 = (0..64).map(|b| heat.bucket(b, 64).0).sum();
+        assert_eq!(total, 3);
+    }
 
     #[test]
     fn slot_set_basics() {

@@ -70,6 +70,9 @@ pub struct Scheduler {
     /// a downgrade: the rolled-back state has no delta lineage).
     force_base: AtomicBool,
     pub checkpoints_taken: AtomicU64,
+    /// Router whose slot map gets sealed into every manifest
+    /// ([`Self::set_route_source`]); `None` seals epoch 0 (uniform map).
+    route_source: Mutex<Option<crate::sync::Router>>,
 }
 
 impl Scheduler {
@@ -98,6 +101,7 @@ impl Scheduler {
             incr: IncrPolicy::default(),
             force_base: AtomicBool::new(false),
             checkpoints_taken: AtomicU64::new(0),
+            route_source: Mutex::new(None),
         };
         s.schedule_next(now);
         s
@@ -113,6 +117,30 @@ impl Scheduler {
     /// delta against).
     pub fn force_base_next(&self) {
         self.force_base.store(true, Ordering::SeqCst);
+    }
+
+    /// Seal this router's slot map into every future manifest, so a
+    /// cold-started cluster (no live scheduler metadata) can restore the
+    /// routing it was checkpointed under before replaying state.
+    pub fn set_route_source(&self, router: crate::sync::Router) {
+        *self.route_source.lock().unwrap() = Some(router);
+    }
+
+    /// (routing epoch, encoded slot map) for the next manifest. Epoch 0
+    /// (the implicit uniform map) seals an empty payload — recovery
+    /// rebuilds it from the shard count alone.
+    fn route_snapshot(&self) -> (u64, Vec<u8>) {
+        match self.route_source.lock().unwrap().as_ref() {
+            Some(r) => {
+                let map = r.snapshot();
+                if map.epoch > 0 {
+                    (map.epoch, map.to_bytes())
+                } else {
+                    (0, Vec::new())
+                }
+            }
+            None => (0, Vec::new()),
+        }
     }
 
     // -- node registry --------------------------------------------------------
@@ -203,6 +231,7 @@ impl Scheduler {
             return Err(Error::Checkpoint(format!("shard saves failed: {}", errs.join("; "))));
         }
         drop(errs);
+        let (route_epoch, slot_map) = self.route_snapshot();
         self.store.write_manifest(&CkptManifest {
             model: self.model.clone(),
             version,
@@ -214,6 +243,8 @@ impl Scheduler {
             parent: 0,
             epochs: cuts.clone(),
             wal_offsets: Vec::new(),
+            route_epoch,
+            slot_map,
         })?;
         for (m, cut) in masters.iter().zip(&cuts) {
             m.prune_dirty(*cut);
@@ -289,6 +320,7 @@ impl Scheduler {
             return Err(Error::Checkpoint(format!("chunk saves failed: {}", errs.join("; "))));
         }
         drop(errs);
+        let (route_epoch, slot_map) = self.route_snapshot();
         self.store.write_manifest(&CkptManifest {
             model: self.model.clone(),
             version,
@@ -300,6 +332,8 @@ impl Scheduler {
             parent: parent_version,
             epochs: cuts.clone(),
             wal_offsets,
+            route_epoch,
+            slot_map,
         })?;
         // Tombstones sealed through the cut can never be collected again
         // (every future delta's `since` is >= the cut).
@@ -326,6 +360,9 @@ impl Scheduler {
         self.last_ckpt_ms.store(now, Ordering::Release);
         self.schedule_next(now);
         self.checkpoints_taken.fetch_add(1, Ordering::Relaxed);
+        // Rare event, so the registry lookup per checkpoint is fine.
+        crate::metrics::counter("weips_checkpoints_total", &[("role", "scheduler".to_string())])
+            .fetch_add(1, Ordering::Relaxed);
     }
 
     /// Latest finalized version.

@@ -229,6 +229,9 @@ impl MasterShard {
         };
         drop(state);
         self.check_owned(&req.ids, "pull")?;
+        if let Some(router) = self.route_guard.read().unwrap().as_ref() {
+            router.record_pull_heat(&req.ids);
+        }
         Ok(out)
     }
 
@@ -300,6 +303,9 @@ impl MasterShard {
             }
         }
         self.check_owned(&uids, "push")?;
+        if let Some(router) = self.route_guard.read().unwrap().as_ref() {
+            router.record_push_heat(&uids);
+        }
         self.metrics.push_rows.fetch_add(uids.len() as u64, Ordering::Relaxed);
 
         let touched: Vec<u64> = if let Some(kernel) = self.batched[idx].as_ref() {
@@ -1016,6 +1022,67 @@ impl MasterShard {
     pub fn total_rows(&self) -> usize {
         let state = self.state.read().unwrap();
         state.sparse.iter().map(|t| t.len()).sum()
+    }
+
+    /// Materialized rows per sparse table, in spec order.
+    pub fn table_rows(&self) -> Vec<(String, usize)> {
+        let state = self.state.read().unwrap();
+        self.spec
+            .sparse
+            .iter()
+            .zip(&state.sparse)
+            .map(|(spec, t)| (spec.name.clone(), t.len()))
+            .collect()
+    }
+
+    /// Register this shard's observability series (request counters, row
+    /// gauges) under `role`/`shard` — and a per-`table` row gauge, the
+    /// registry's table-granularity series. Samplers hold a `Weak`, so a
+    /// dropped shard's series disappear from scrapes; re-registering the
+    /// same shard id replaces the previous entry.
+    pub fn register_metrics(self: &Arc<Self>, role: &str) {
+        use crate::metrics::register_fn;
+        let labels =
+            [("role", role.to_string()), ("shard", self.shard_id.to_string())];
+        let counters: [(&'static str, fn(&MasterMetrics) -> &AtomicU64); 3] = [
+            ("weips_master_pulls_total", |m| &m.pulls),
+            ("weips_master_pushes_total", |m| &m.pushes),
+            ("weips_master_push_rows_total", |m| &m.push_rows),
+        ];
+        for (name, get) in counters {
+            let weak = Arc::downgrade(self);
+            register_fn(
+                name,
+                &labels,
+                Box::new(move || {
+                    weak.upgrade().map(|s| get(&s.metrics).load(Ordering::Relaxed) as f64)
+                }),
+            );
+        }
+        let weak = Arc::downgrade(self);
+        register_fn(
+            "weips_master_rows",
+            &labels,
+            Box::new(move || weak.upgrade().map(|s| s.total_rows() as f64)),
+        );
+        for table in self.spec.sparse.iter().map(|t| t.name.clone()) {
+            let weak = Arc::downgrade(self);
+            let tname = table.clone();
+            register_fn(
+                "weips_master_table_rows",
+                &[
+                    ("role", role.to_string()),
+                    ("shard", self.shard_id.to_string()),
+                    ("table", table),
+                ],
+                Box::new(move || {
+                    let s = weak.upgrade()?;
+                    let rows =
+                        s.table_rows().into_iter().find(|(n, _)| *n == tname)?.1;
+                    Some(rows as f64)
+                }),
+            );
+        }
     }
 
     /// Save this shard into `store` as `version`.

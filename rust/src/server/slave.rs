@@ -687,6 +687,41 @@ impl SlaveShard {
         self.tables.iter().map(|(_, t)| t.len()).sum()
     }
 
+    /// Register this replica's observability series (serving counters,
+    /// row gauge, stripe-lock counter) under `role`/`shard`/`replica`.
+    /// Samplers hold a `Weak`, so a dropped replica's series disappear
+    /// from scrapes.
+    pub fn register_metrics(self: &Arc<Self>, role: &str) {
+        use crate::metrics::register_fn;
+        let labels = [
+            ("role", role.to_string()),
+            ("shard", self.shard_id.to_string()),
+            ("replica", self.replica_id.to_string()),
+        ];
+        let counters: [(&'static str, fn(&SlaveMetrics) -> &AtomicU64); 4] = [
+            ("weips_slave_pulls_total", |m| &m.pulls),
+            ("weips_slave_applied_entries_total", |m| &m.applied_entries),
+            ("weips_slave_filtered_entries_total", |m| &m.filtered_entries),
+            ("weips_stripe_lock_acquisitions_total", |m| &m.stripe_lock_acquisitions),
+        ];
+        for (name, get) in counters {
+            let weak = Arc::downgrade(self);
+            register_fn(
+                name,
+                &labels,
+                Box::new(move || {
+                    weak.upgrade().map(|s| get(&s.metrics).load(Ordering::Relaxed) as f64)
+                }),
+            );
+        }
+        let weak = Arc::downgrade(self);
+        register_fn(
+            "weips_slave_rows",
+            &labels,
+            Box::new(move || weak.upgrade().map(|s| s.total_rows() as f64)),
+        );
+    }
+
     fn stats_json(&self) -> String {
         format!(
             r#"{{"shard":{},"replica":{},"rows":{},"version":{},"pulls":{},"applied":{},"filtered":{},"healthy":{}}}"#,

@@ -277,6 +277,8 @@ mod tests {
             parent,
             epochs: vec![v],
             wal_offsets: vec![],
+            route_epoch: 0,
+            slot_map: vec![],
         }
     }
 

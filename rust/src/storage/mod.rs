@@ -74,6 +74,14 @@ pub struct CkptManifest {
     /// Write-ahead-log offset per WAL partition at seal time — recovery
     /// replays the WAL tail from here (empty when no WAL is attached).
     pub wal_offsets: Vec<u64>,
+    /// Routing epoch at seal time (0 = still on the implicit uniform
+    /// map). Lets a cold-started cluster know which slot map its shard
+    /// chunks were cut under without a live scheduler.
+    pub route_epoch: u64,
+    /// Encoded [`crate::reshard::SlotMap`] at seal time (empty when
+    /// `route_epoch` is 0) — recovery installs it before replay so
+    /// foreign-row purges see the right ownership.
+    pub slot_map: Vec<u8>,
 }
 
 impl CkptManifest {
@@ -90,6 +98,10 @@ impl CkptManifest {
         m.insert("parent".into(), Json::Num(self.parent as f64));
         m.insert("epochs".into(), nums(&self.epochs));
         m.insert("wal_offsets".into(), nums(&self.wal_offsets));
+        m.insert("route_epoch".into(), Json::Num(self.route_epoch as f64));
+        if !self.slot_map.is_empty() {
+            m.insert("slot_map".into(), Json::Str(to_hex(&self.slot_map)));
+        }
         Json::Obj(m)
     }
 
@@ -128,8 +140,40 @@ impl CkptManifest {
             parent: j.get("parent").and_then(|v| v.as_i64()).unwrap_or(0) as u64,
             epochs: nums("epochs"),
             wal_offsets: nums("wal_offsets"),
+            route_epoch: j.get("route_epoch").and_then(|v| v.as_i64()).unwrap_or(0) as u64,
+            slot_map: j
+                .get("slot_map")
+                .and_then(|v| v.as_str())
+                .map(from_hex)
+                .unwrap_or_default(),
         })
     }
+}
+
+/// Lowercase hex for opaque manifest payloads (the slot map).
+fn to_hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+/// Inverse of [`to_hex`]; malformed input yields the readable prefix
+/// (manifest loading stays tolerant, the epoch guard catches the rest).
+fn from_hex(s: &str) -> Vec<u8> {
+    let digits: Vec<u8> = s.bytes().collect();
+    digits
+        .chunks(2)
+        .map_while(|pair| match pair {
+            [hi, lo] => {
+                let h = (*hi as char).to_digit(16)?;
+                let l = (*lo as char).to_digit(16)?;
+                Some((h * 16 + l) as u8)
+            }
+            _ => None,
+        })
+        .collect()
 }
 
 /// Two-tier checkpoint store.
@@ -352,6 +396,8 @@ mod tests {
             parent: 0,
             epochs: vec![7],
             wal_offsets: vec![1, 2],
+            route_epoch: 3,
+            slot_map: vec![0xAB, 0xCD, 0x01],
         }
     }
 

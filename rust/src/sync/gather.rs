@@ -88,7 +88,9 @@ pub struct Gather {
     last_flush_ms: u64,
     scratch: Vec<Vec<DirtyEvent>>,
     seq: u64,
-    pub stats: GatherStats,
+    /// Shared with the metrics registry (scrape-time samplers hold a
+    /// Weak); callers keep reading fields through the `Arc` deref.
+    pub stats: Arc<GatherStats>,
 }
 
 impl Gather {
@@ -106,6 +108,29 @@ impl Gather {
         pool: Option<Arc<ThreadPool>>,
     ) -> Gather {
         let now = clock.now_ms();
+        let stats = Arc::new(GatherStats::default());
+        // Per-shard sync-pipeline occupancy on /metrics. Weak-held: a
+        // rebuilt gather (e.g. after resharding) replaces its series.
+        {
+            let labels =
+                [("role", "master".to_string()), ("shard", master.shard_id.to_string())];
+            let counters: [(&'static str, fn(&GatherStats) -> &AtomicU64); 4] = [
+                ("weips_gather_raw_events_total", |s| &s.raw_events),
+                ("weips_gather_emitted_entries_total", |s| &s.emitted_entries),
+                ("weips_gather_batches_total", |s| &s.batches),
+                ("weips_gather_empty_polls_total", |s| &s.empty_polls),
+            ];
+            for (name, get) in counters {
+                let weak = Arc::downgrade(&stats);
+                crate::metrics::register_fn(
+                    name,
+                    &labels,
+                    Box::new(move || {
+                        weak.upgrade().map(|s| get(&s).load(Ordering::Relaxed) as f64)
+                    }),
+                );
+            }
+        }
         Gather {
             master,
             mode,
@@ -116,7 +141,7 @@ impl Gather {
             last_flush_ms: now,
             scratch: Vec::new(),
             seq: 0,
-            stats: GatherStats::default(),
+            stats,
         }
     }
 

@@ -26,7 +26,7 @@
 
 use std::sync::Arc;
 
-use crate::reshard::{SlotMap, SlotMapCell, DEFAULT_SLOTS};
+use crate::reshard::{SlotMap, SlotMapCell, DEFAULT_SLOTS, HEAT_BUCKETS};
 use crate::Result;
 
 /// Shared-slot-map router over a cluster. Clones share the underlying
@@ -99,6 +99,63 @@ impl Router {
     /// the epoch strictly advances over the installed one.
     pub fn install(&self, map: SlotMap) -> Result<Arc<SlotMap>> {
         self.cell.install(map)
+    }
+
+    /// Record one pushed row per id into the shared per-slot heat
+    /// counters (routes through one snapshot of the map).
+    pub fn record_push_heat(&self, ids: &[u64]) {
+        let map = self.snapshot();
+        let heat = self.cell.heat();
+        for &id in ids {
+            heat.record_push(map.slot_of(id));
+        }
+    }
+
+    /// Record one pulled id per id into the shared per-slot heat counters.
+    pub fn record_pull_heat(&self, ids: &[u64]) {
+        let map = self.snapshot();
+        let heat = self.cell.heat();
+        for &id in ids {
+            heat.record_pull(map.slot_of(id));
+        }
+    }
+
+    /// Register this router's observability series under `role`: the
+    /// routing-epoch gauge plus the bucketed per-slot push/pull heat
+    /// counters (`slot_bucket` label, [`HEAT_BUCKETS`] buckets max) that
+    /// feed the future load-aware rebalancer. Samplers hold a `Weak` on
+    /// the cell, so a dropped cluster's series disappear from scrapes.
+    pub fn register_metrics(&self, role: &str) {
+        let cell = Arc::downgrade(&self.cell);
+        crate::metrics::register_fn(
+            "weips_routing_epoch",
+            &[("role", role.to_string())],
+            Box::new({
+                let cell = cell.clone();
+                move || cell.upgrade().map(|c| c.epoch() as f64)
+            }),
+        );
+        let slots = self.slots();
+        let buckets = HEAT_BUCKETS.min(slots.max(1));
+        for b in 0..buckets {
+            let labels = [("role", role.to_string()), ("slot_bucket", b.to_string())];
+            crate::metrics::register_fn(
+                "weips_slot_pushes_total",
+                &labels,
+                Box::new({
+                    let cell = cell.clone();
+                    move || cell.upgrade().map(|c| c.heat().bucket(b, buckets).0 as f64)
+                }),
+            );
+            crate::metrics::register_fn(
+                "weips_slot_pulls_total",
+                &labels,
+                Box::new({
+                    let cell = cell.clone();
+                    move || cell.upgrade().map(|c| c.heat().bucket(b, buckets).1 as f64)
+                }),
+            );
+        }
     }
 
     /// Split `ids` into per-shard buckets; returns `(shard -> (positions,

@@ -38,6 +38,8 @@ pub struct ScatterStats {
     pub coalesced_polls: AtomicU64,
     /// created_ms -> applied latency distribution (ms).
     pub latency_ms: Histogram,
+    /// Records behind log end as of the last poll (gauge input).
+    pub lag_records: AtomicU64,
 }
 
 /// The scatter worker for one slave replica.
@@ -54,7 +56,12 @@ pub struct Scatter {
     raw_scratch: Vec<u8>,
     /// Batches decoded by the current poll, applied as one coalesced run.
     pending: Vec<SyncBatch>,
-    pub stats: ScatterStats,
+    /// Shared with the metrics registry (scrape-time samplers hold a
+    /// Weak); callers keep reading fields through the `Arc` deref.
+    pub stats: Arc<ScatterStats>,
+    /// Registry histogram behind `weips_push_visible_latency_seconds`
+    /// for this replica; records created_ms -> applied latency in ns.
+    visible_hist: Arc<Histogram>,
 }
 
 impl Scatter {
@@ -88,6 +95,32 @@ impl Scatter {
             slave.shard_id,
         );
         let cursors = parts.into_iter().map(|p| (p, 0u64)).collect();
+        let stats = Arc::new(ScatterStats::default());
+        // Per-replica apply/lag series plus the push→visible latency
+        // histogram — the fusion pipeline's end-to-end freshness signal.
+        let labels = [
+            ("role", "slave".to_string()),
+            ("shard", slave.shard_id.to_string()),
+            ("replica", slave.replica_id.to_string()),
+        ];
+        {
+            let counters: [(&'static str, fn(&ScatterStats) -> &AtomicU64); 3] = [
+                ("weips_scatter_batches_applied_total", |s| &s.batches_applied),
+                ("weips_scatter_decode_errors_total", |s| &s.decode_errors),
+                ("weips_scatter_lag_records", |s| &s.lag_records),
+            ];
+            for (name, get) in counters {
+                let weak = Arc::downgrade(&stats);
+                crate::metrics::register_fn(
+                    name,
+                    &labels,
+                    Box::new(move || {
+                        weak.upgrade().map(|s| get(&s).load(Ordering::Relaxed) as f64)
+                    }),
+                );
+            }
+        }
+        let visible_hist = crate::metrics::histogram("weips_push_visible_latency_seconds", &labels);
         Scatter {
             log,
             slave,
@@ -96,7 +129,8 @@ impl Scatter {
             cursors,
             raw_scratch: Vec::new(),
             pending: Vec::new(),
-            stats: ScatterStats::default(),
+            stats,
+            visible_hist,
         }
     }
 
@@ -212,11 +246,14 @@ impl Scatter {
         let outcome = self.slave.apply_batches_pooled(&self.pending, self.pool.as_deref());
         let now = self.clock.now_ms();
         for b in &self.pending {
-            self.stats.latency_ms.record(now.saturating_sub(b.created_ms));
+            let lat_ms = now.saturating_sub(b.created_ms);
+            self.stats.latency_ms.record(lat_ms);
+            self.visible_hist.record(lat_ms.saturating_mul(1_000_000));
         }
         self.pending.clear();
         self.stats.batches_applied.fetch_add(applied as u64, Ordering::Relaxed);
         self.stats.coalesced_polls.fetch_add(1, Ordering::Relaxed);
+        self.stats.lag_records.store(self.lag(), Ordering::Relaxed);
         outcome?;
         Ok(applied)
     }

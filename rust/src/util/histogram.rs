@@ -91,6 +91,32 @@ impl Histogram {
         }
     }
 
+    /// Sum of recorded values (exact).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative counts at the given ascending `bounds`: `out[i]` is the
+    /// number of recorded values whose bucket representative is `<=
+    /// bounds[i]` (Prometheus `le` semantics, with the histogram's ≤3.1%
+    /// bucket-width error).
+    pub fn cumulative(&self, bounds: &[u64]) -> Vec<u64> {
+        let mut out = vec![0u64; bounds.len()];
+        for (i, c) in self.counts.iter().enumerate() {
+            let n = c.load(Ordering::Relaxed);
+            if n == 0 {
+                continue;
+            }
+            let v = Self::slot_mid(i);
+            for (o, &bound) in out.iter_mut().zip(bounds) {
+                if v <= bound {
+                    *o += n;
+                }
+            }
+        }
+        out
+    }
+
     /// Maximum recorded value (exact).
     pub fn max(&self) -> u64 {
         self.max.load(Ordering::Relaxed)
@@ -226,6 +252,23 @@ mod tests {
             hd.join().unwrap();
         }
         assert_eq!(h.count(), 40_000);
+    }
+
+    #[test]
+    fn cumulative_bounds_are_monotone_and_cover() {
+        let h = Histogram::new();
+        for v in [10u64, 1_000, 100_000, 10_000_000] {
+            h.record(v);
+        }
+        let bounds = [100u64, 10_000, 1_000_000, 100_000_000];
+        let cum = h.cumulative(&bounds);
+        assert_eq!(cum.len(), 4);
+        for w in cum.windows(2) {
+            assert!(w[0] <= w[1], "cumulative must be monotone: {cum:?}");
+        }
+        assert_eq!(cum[0], 1, "only 10 fits under 100");
+        assert_eq!(cum[3], 4, "everything fits under 1e8");
+        assert_eq!(h.sum(), 10 + 1_000 + 100_000 + 10_000_000);
     }
 
     #[test]

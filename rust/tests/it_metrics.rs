@@ -1,0 +1,473 @@
+//! Integration: first-class observability (`/metrics` on every role).
+//!
+//! The artifact-free tests build the real streaming pipeline (master →
+//! gather → queue → scatter → slave) plus a WAL and a router, register
+//! everything with the global registry, and scrape it over HTTP exactly
+//! like Prometheus would: the exposition must parse, carry the expected
+//! role/shard labels, and the push→visible latency histogram must
+//! advance after a push/sync/pull round-trip. `docs/METRICS.md` is
+//! diffed against the declared series so the reference cannot rot. The
+//! `LocalCluster` tests additionally scrape a fully wired cluster and
+//! exercise cold-start routing recovery; they skip without AOT
+//! artifacts (same gate as the other cluster integration tests).
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use weips::config::{GatherMode, ModelKind, ModelSpec};
+use weips::metrics::http::{http_get, MetricsServer};
+use weips::metrics::{parse_exposition, Sample, DESCRIPTORS};
+use weips::optim::{Ftrl, FtrlHyper, Optimizer};
+use weips::proto::{SparsePull, SparsePush};
+use weips::queue::Queue;
+use weips::runtime::ModelConfig;
+use weips::server::master::MasterShard;
+use weips::server::slave::SlaveShard;
+use weips::sync::{Gather, Pusher, Router, Scatter, ServingWeights};
+use weips::util::clock::ManualClock;
+
+const GET_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// The registry is process-global and several tests register series
+/// under the same labels (WAL, routing); serialize them so a scrape
+/// only ever observes the running test's instruments.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn artifacts_ready() -> bool {
+    weips::runtime::default_artifacts_dir().join("manifest.json").exists()
+}
+
+fn spec() -> ModelSpec {
+    let cfg = ModelConfig {
+        batch_train: 8,
+        batch_predict: 2,
+        fields: 4,
+        dim: 2,
+        hidden: 8,
+        ftrl_block_rows: 64,
+        ftrl_alpha: 0.05,
+        ftrl_beta: 1.0,
+        ftrl_l1: 1.0,
+        ftrl_l2: 1.0,
+    };
+    ModelSpec::derive("ctr", ModelKind::Fm, &cfg)
+}
+
+fn slave(shard: u32, replica: u32) -> Arc<SlaveShard> {
+    let ftrl: Arc<dyn Optimizer> = Arc::new(Ftrl::new(FtrlHyper::default()));
+    Arc::new(SlaveShard::with_stripes(
+        shard,
+        replica,
+        "ctr",
+        vec![("w".into(), 1), ("v".into(), 2)],
+        vec![("bias".into(), 1)],
+        Arc::new(ServingWeights::new(vec![
+            ("w".into(), ftrl.clone(), 1),
+            ("v".into(), ftrl, 2),
+        ])),
+        Router::new(1),
+        4,
+    ))
+}
+
+fn scrape(server: &MetricsServer) -> (String, Vec<Sample>) {
+    let addr = server.addr().to_string();
+    let body = http_get(&addr, "/metrics", GET_TIMEOUT).expect("scrape");
+    let samples = parse_exposition(&body).expect("exposition parses");
+    (body, samples)
+}
+
+fn sample_value(samples: &[Sample], name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+    samples
+        .iter()
+        .find(|s| s.name == name && labels.iter().all(|(k, v)| s.label(k) == Some(*v)))
+        .map(|s| s.value)
+}
+
+/// CI smoke target: every declared family is exposed (HELP + TYPE) even
+/// before any component records a sample, `/healthz` answers, and the
+/// whole exposition parses. Runs without artifacts.
+#[test]
+fn scrape_smoke_serves_every_declared_family() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let server = MetricsServer::serve("127.0.0.1:0").expect("bind metrics");
+    let addr = server.addr().to_string();
+    assert_eq!(http_get(&addr, "/healthz", GET_TIMEOUT).unwrap(), "ok\n");
+    let (body, _samples) = scrape(&server);
+    for d in DESCRIPTORS {
+        assert!(
+            body.contains(&format!("# TYPE {} ", d.name)),
+            "family {} missing from the exposition",
+            d.name
+        );
+    }
+    // Unknown paths 404 without killing the endpoint.
+    assert!(http_get(&addr, "/nope", GET_TIMEOUT).is_err());
+    assert_eq!(http_get(&addr, "/healthz", GET_TIMEOUT).unwrap(), "ok\n");
+}
+
+/// `docs/METRICS.md` must document exactly the declared series: every
+/// backticked `weips_*` family in the doc exists, and every descriptor
+/// appears in the doc. Suffix forms (`_bucket`, `_sum`, `_count`) fold
+/// onto their histogram family.
+#[test]
+fn docs_metrics_reference_matches_descriptors() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("repo root")
+        .join("docs/METRICS.md");
+    let doc = std::fs::read_to_string(&path).expect("docs/METRICS.md");
+    let declared: std::collections::BTreeSet<&str> =
+        DESCRIPTORS.iter().map(|d| d.name).collect();
+    let mut documented = std::collections::BTreeSet::new();
+    for part in doc.split('`').skip(1).step_by(2) {
+        let name = part.trim();
+        let well_formed = name.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'_');
+        if !name.starts_with("weips_") || !well_formed {
+            continue;
+        }
+        let family = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|suf| {
+                let base = name.strip_suffix(suf)?;
+                declared.contains(base).then_some(base)
+            })
+            .unwrap_or(name);
+        documented.insert(family.to_string());
+    }
+    for d in &declared {
+        assert!(documented.contains(*d), "series {d} is not documented in docs/METRICS.md");
+    }
+    for name in &documented {
+        assert!(
+            declared.contains(name.as_str()),
+            "docs/METRICS.md documents unknown series {name}"
+        );
+    }
+}
+
+/// End-to-end over the real pipeline: master pushes move the master
+/// counters and slot heat, the sync round-trip advances the push→visible
+/// histogram, and a WAL append surfaces fsync accounting — all read back
+/// through an HTTP scrape with the designed labels.
+#[test]
+fn pipeline_round_trip_moves_labeled_series() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let clock = Arc::new(ManualClock::new(1_000));
+    let master =
+        Arc::new(MasterShard::with_stripes(7, spec(), None, 1, 4, clock.clone()).unwrap());
+    let router = Router::new(1);
+    master.set_route_guard(router.clone());
+    master.register_metrics("master");
+    router.register_metrics("master");
+    let serving = slave(0, 3);
+    serving.register_metrics("slave");
+
+    let queue = Queue::new(1 << 22);
+    let topic = queue.create_topic("sync.ctr", 1).unwrap();
+    let mut gather =
+        Gather::with_pool(master.clone(), GatherMode::Realtime, clock.clone(), None);
+    let pusher = Pusher::new(topic.clone(), 7);
+    let mut scatter = Scatter::with_pool(topic, serving.clone(), 1, 1, clock.clone(), None);
+
+    let wal_dir = std::env::temp_dir().join(format!(
+        "weips-it-metrics-{}-{:x}",
+        std::process::id(),
+        weips::util::mono_ns()
+    ));
+    let wal = weips::queue::WalLog::open_with(&wal_dir, 1, 1).unwrap();
+
+    let server = MetricsServer::serve("127.0.0.1:0").expect("bind metrics");
+    let (_, before) = scrape(&server);
+    let visible_before = sample_value(
+        &before,
+        "weips_push_visible_latency_seconds_count",
+        &[("role", "slave"), ("shard", "0"), ("replica", "3")],
+    )
+    .unwrap_or(0.0);
+
+    // Push → gather → queue → scatter → pull round-trip.
+    let ids: Vec<u64> = (0..256).collect();
+    master
+        .sparse_push(&SparsePush {
+            model: "ctr".into(),
+            table: "w".into(),
+            ids: ids.clone(),
+            grads: vec![1.0; ids.len()],
+        })
+        .unwrap();
+    clock.advance(25);
+    pusher.push_all(&gather.flush_now()).unwrap();
+    clock.advance(25);
+    while scatter.lag() > 0 {
+        scatter.poll(Duration::ZERO).unwrap();
+    }
+    serving
+        .sparse_pull(&SparsePull {
+            model: "ctr".into(),
+            table: "w".into(),
+            ids: ids.clone(),
+            slot: "w".into(),
+        })
+        .unwrap();
+    use weips::queue::SyncLog;
+    wal.append(0, clock.now_ms(), vec![1, 2, 3]).unwrap();
+
+    let (_, after) = scrape(&server);
+    let master_labels = [("role", "master"), ("shard", "7")];
+    assert!(sample_value(&after, "weips_master_pushes_total", &master_labels).unwrap() >= 1.0);
+    assert!(
+        sample_value(&after, "weips_master_push_rows_total", &master_labels).unwrap() >= 256.0
+    );
+    assert!(sample_value(&after, "weips_master_rows", &master_labels).unwrap() >= 256.0);
+    assert!(
+        sample_value(
+            &after,
+            "weips_master_table_rows",
+            &[("role", "master"), ("shard", "7"), ("table", "w")],
+        )
+        .unwrap()
+            >= 256.0
+    );
+    // Slot heat: 256 pushed ids must land in the per-bucket counters.
+    let heat: f64 = after
+        .iter()
+        .filter(|s| s.name == "weips_slot_pushes_total" && s.label("role") == Some("master"))
+        .map(|s| s.value)
+        .sum();
+    assert!(heat >= 256.0, "slot push heat {heat} < 256");
+    assert_eq!(
+        sample_value(&after, "weips_routing_epoch", &[("role", "master")]).unwrap(),
+        0.0
+    );
+    // Sync pipeline occupancy + freshness.
+    let gather_labels = [("role", "master"), ("shard", "7")];
+    assert!(
+        sample_value(&after, "weips_gather_emitted_entries_total", &gather_labels).unwrap()
+            >= 256.0
+    );
+    let scatter_labels = [("role", "slave"), ("shard", "0"), ("replica", "3")];
+    assert!(
+        sample_value(&after, "weips_scatter_batches_applied_total", &scatter_labels).unwrap()
+            >= 1.0
+    );
+    let visible_after = sample_value(
+        &after,
+        "weips_push_visible_latency_seconds_count",
+        &scatter_labels,
+    )
+    .unwrap();
+    assert!(
+        visible_after > visible_before,
+        "push→visible histogram did not advance ({visible_before} -> {visible_after})"
+    );
+    // 50 simulated ms of latency must land in a bucket whose bound
+    // covers it but not in the 1ms bucket.
+    let le = |bound: &str| {
+        sample_value(
+            &after,
+            "weips_push_visible_latency_seconds_bucket",
+            &[("role", "slave"), ("shard", "0"), ("replica", "3"), ("le", bound)],
+        )
+        .unwrap()
+    };
+    assert!(le("1") >= visible_after, "1s bucket must hold every sample");
+    assert!(le("0.001") < visible_after, "50ms of latency cannot sit in the 1ms bucket");
+    // Slave-side serving + stripe lock accounting.
+    assert!(sample_value(&after, "weips_slave_pulls_total", &scatter_labels).unwrap() >= 1.0);
+    assert!(
+        sample_value(&after, "weips_stripe_lock_acquisitions_total", &scatter_labels).unwrap()
+            >= 1.0
+    );
+    // WAL durability lag: cadence 1 fsyncs every append.
+    let wal_labels = [("role", "master")];
+    assert!(sample_value(&after, "weips_wal_appends_total", &wal_labels).unwrap() >= 1.0);
+    assert!(sample_value(&after, "weips_wal_fsyncs_total", &wal_labels).unwrap() >= 1.0);
+    assert!(
+        sample_value(&after, "weips_wal_fsync_duration_seconds_count", &wal_labels).unwrap()
+            >= 1.0
+    );
+    drop(wal);
+    std::fs::remove_dir_all(&wal_dir).ok();
+}
+
+/// Checkpoint manifests seal the live routing (the PR-5 follow-up): a
+/// scheduler wired to a router at a bumped epoch writes `route_epoch` +
+/// the encoded slot map, and the manifest round-trips both. Runs
+/// without artifacts.
+#[test]
+fn checkpoint_manifest_seals_routing_epoch() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    use weips::meta::MetaStore;
+    use weips::scheduler::{CkptPolicy, Scheduler};
+    use weips::storage::CheckpointStore;
+
+    let clock = Arc::new(ManualClock::new(0));
+    let dir = std::env::temp_dir().join(format!(
+        "weips-it-metrics-ckpt-{}-{:x}",
+        std::process::id(),
+        weips::util::mono_ns()
+    ));
+    let store = Arc::new(CheckpointStore::new(dir.join("local"), None));
+    let scheduler = Scheduler::new(
+        MetaStore::new(clock.clone()),
+        store.clone(),
+        "ctr",
+        CkptPolicy::default(),
+        clock.clone(),
+    );
+    let master =
+        Arc::new(MasterShard::with_stripes(0, spec(), None, 1, 4, clock.clone()).unwrap());
+    let masters = [master];
+
+    // Epoch 0 (uniform map): manifest seals no payload.
+    scheduler.set_route_source(Router::with_slots(2, 64));
+    let v0 = scheduler.checkpoint_now(&masters, vec![0], 0.5).unwrap();
+    let m0 = store.load_manifest("ctr", v0).unwrap();
+    assert_eq!((m0.route_epoch, m0.slot_map.len()), (0, 0));
+
+    // Bump the routing, checkpoint again: the sealed map round-trips.
+    let router = Router::with_slots(2, 64);
+    let mut moved = router.snapshot().as_ref().clone();
+    moved.epoch = 9;
+    router.install(moved).unwrap();
+    scheduler.set_route_source(router.clone());
+    let v1 = scheduler.checkpoint_now(&masters, vec![0], 0.5).unwrap();
+    let m1 = store.load_manifest("ctr", v1).unwrap();
+    assert_eq!(m1.route_epoch, 9);
+    let restored = weips::reshard::SlotMap::from_bytes(&m1.slot_map).unwrap();
+    assert_eq!(restored.epoch, 9);
+    assert_eq!(restored.slots(), 64);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Scrape a fully wired `LocalCluster` after real training traffic and
+/// verify the aggregated `/cluster` view. Needs AOT artifacts.
+#[test]
+fn local_cluster_scrape_and_cluster_view() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use weips::config::ClusterConfig;
+    use weips::coordinator::{ClusterOpts, LocalCluster};
+
+    let cluster = LocalCluster::new(ClusterOpts {
+        cluster: ClusterConfig {
+            model_kind: ModelKind::Lr,
+            master_shards: 2,
+            slave_shards: 1,
+            slave_replicas: 2,
+            queue_partitions: 2,
+            gather_mode: GatherMode::Realtime,
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .expect("cluster");
+    for _ in 0..20 {
+        cluster.train_step().unwrap();
+        cluster.sync_tick().unwrap();
+    }
+    cluster.flush_sync().unwrap();
+    cluster.checkpoint().unwrap();
+
+    let server = cluster.serve_metrics("127.0.0.1:0").expect("metrics endpoint");
+    let (_, samples) = scrape(&server);
+    for shard in ["0", "1"] {
+        assert!(
+            sample_value(
+                &samples,
+                "weips_master_pushes_total",
+                &[("role", "master"), ("shard", shard)],
+            )
+            .unwrap()
+                >= 1.0
+        );
+    }
+    assert!(
+        sample_value(&samples, "weips_checkpoints_total", &[("role", "scheduler")]).unwrap()
+            >= 1.0
+    );
+    assert!(
+        sample_value(&samples, "weips_model_samples", &[("role", "trainer")]).unwrap() >= 1.0
+    );
+    let visible: f64 = samples
+        .iter()
+        .filter(|s| {
+            s.name == "weips_push_visible_latency_seconds_count"
+                && s.label("role") == Some("slave")
+        })
+        .map(|s| s.value)
+        .sum();
+    assert!(visible >= 1.0, "no push→visible samples after training traffic");
+
+    // The aggregated view tags every sample with its instance.
+    let self_addr = server.addr().to_string();
+    server.set_targets(vec![self_addr.clone()]);
+    let merged = http_get(&self_addr, "/cluster", GET_TIMEOUT).expect("cluster view");
+    let merged_samples = parse_exposition(&merged).expect("aggregated exposition parses");
+    assert!(merged_samples
+        .iter()
+        .any(|s| s.label("instance") == Some(self_addr.as_str())));
+}
+
+/// Cold-start routing recovery (the PR-5 follow-up, end to end): after
+/// a live slot migration and a checkpoint, a cluster rebuilt on the
+/// same data dir boots at epoch 0 — `recover_master` must restore the
+/// sealed slot map from the manifest before purging foreign rows.
+/// Needs AOT artifacts.
+#[test]
+fn cold_start_recovers_routing_from_manifest() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use weips::config::ClusterConfig;
+    use weips::coordinator::{ClusterOpts, LocalCluster};
+
+    let data_dir = std::env::temp_dir().join(format!(
+        "weips-it-metrics-cold-{}-{:x}",
+        std::process::id(),
+        weips::util::mono_ns()
+    ));
+    let opts = || ClusterOpts {
+        cluster: ClusterConfig {
+            model_kind: ModelKind::Lr,
+            master_shards: 2,
+            slave_shards: 1,
+            slave_replicas: 1,
+            queue_partitions: 2,
+            gather_mode: GatherMode::Realtime,
+            ..Default::default()
+        },
+        data_dir: Some(data_dir.clone()),
+        ..Default::default()
+    };
+    let (epoch, version) = {
+        let cluster = LocalCluster::new(opts()).expect("cluster");
+        for _ in 0..10 {
+            cluster.train_step().unwrap();
+            cluster.sync_tick().unwrap();
+        }
+        let map = cluster.master_router.snapshot();
+        let slots = weips::reshard::pick_donor_slots(&map, 0, 4).unwrap();
+        cluster.migrate_slots(0, 1, &slots).unwrap();
+        let epoch = cluster.master_router.epoch();
+        assert!(epoch > 0);
+        cluster.flush_sync().unwrap();
+        let version = cluster.checkpoint().unwrap();
+        (epoch, version)
+    };
+    // Fresh process: router boots at epoch 0, recovery restores it.
+    let cluster = LocalCluster::new(opts()).expect("cold cluster");
+    assert_eq!(cluster.master_router.epoch(), 0);
+    let recovered = cluster.recover_master(0).expect("recover shard 0");
+    assert_eq!(recovered, version);
+    assert_eq!(cluster.master_router.epoch(), epoch, "sealed slot map not restored");
+    std::fs::remove_dir_all(&data_dir).ok();
+}
+
