@@ -297,7 +297,7 @@ fn cluster_drill() {
         for replica in shard {
             replica.clear();
             for chain in &chains {
-                LocalCluster::apply_chain_chunks(replica, chain).unwrap();
+                LocalCluster::apply_chain_chunks(replica, chain, None).unwrap();
             }
         }
     }

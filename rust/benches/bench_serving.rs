@@ -1,0 +1,267 @@
+//! E12 — serving read path: hot-id cache latency and throughput, and
+//! the coherence guarantee that makes the cache safe to run in
+//! production. Artifact-free (runs everywhere); `--smoke` /
+//! `WEIPS_BENCH_SMOKE=1` shrinks sizes for the CI stage.
+//!
+//! Asserted invariants (CI fails if they break):
+//! - cached pulls are **byte-identical** to uncached pulls over the same
+//!   request stream;
+//! - at a cumulative hit rate >= 50%, the cached p99 pull latency is at
+//!   least 2x better than the uncached path on the same hot batches;
+//! - one-tick freshness: an update applied to the serving tables and
+//!   announced through the scatter tap is visible to the very next
+//!   cached pull — no TTL window, ever.
+//!
+//! Writes `BENCH_serving.json` (CI uploads it per commit; the committed
+//! baseline self-arms via tools/promote_bench_baseline.py --kind serving).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use weips::net::Channel;
+use weips::optim::{Ftrl, FtrlHyper, Optimizer};
+use weips::proto::{SyncBatch, SyncEntry, SyncOp};
+use weips::replica::{BalancePolicy, ReplicaGroup};
+use weips::server::slave::{SlaveService, SlaveShard};
+use weips::sync::{Router, ScatterTap, ServingWeights};
+use weips::util::bench;
+use weips::worker::{HotIdCache, SlaveClient, SlaveEndpoint};
+
+const SHARDS: u32 = 2;
+const REPLICAS: u32 = 2;
+const BATCH: usize = 64;
+const HOT_SET: u64 = 512;
+
+fn smoke() -> bool {
+    std::env::var("WEIPS_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false)
+        || std::env::args().any(|a| a == "--smoke")
+}
+
+fn fleet() -> (SlaveClient, Vec<Vec<Arc<SlaveShard>>>) {
+    let ftrl: Arc<dyn Optimizer> = Arc::new(Ftrl::new(FtrlHyper::default()));
+    let mut groups = Vec::new();
+    let mut all = Vec::new();
+    for s in 0..SHARDS {
+        let mut eps = Vec::new();
+        let mut reps = Vec::new();
+        for r in 0..REPLICAS {
+            let shard = Arc::new(SlaveShard::new(
+                s,
+                r,
+                "ctr",
+                vec![("w".into(), 1)],
+                vec![("bias".into(), 1)],
+                Arc::new(ServingWeights::new(vec![("w".into(), ftrl.clone(), 1)])),
+                Router::new(SHARDS),
+            ));
+            let ch = Channel::local(Arc::new(SlaveService { shard: shard.clone() }));
+            eps.push(Arc::new(SlaveEndpoint::local(ch, shard.clone())));
+            reps.push(shard);
+        }
+        groups.push(Arc::new(ReplicaGroup::new(eps, BalancePolicy::RoundRobin)));
+        all.push(reps);
+    }
+    (SlaveClient::new("ctr", groups), all)
+}
+
+/// Seed `rows` serving rows (value = id as f32) into every replica.
+fn seed(slaves: &[Vec<Arc<SlaveShard>>], rows: u64) {
+    let router = Router::new(slaves.len() as u32);
+    let mut buckets: Vec<Vec<SyncEntry>> = vec![Vec::new(); slaves.len()];
+    for id in 0..rows {
+        buckets[router.shard_of(id) as usize]
+            .push(SyncEntry { id, op: SyncOp::Upsert(vec![2.0, 1.0, id as f32]) });
+    }
+    for (s, entries) in buckets.into_iter().enumerate() {
+        for chunk in entries.chunks(4096) {
+            let batch = SyncBatch {
+                model: "ctr".into(),
+                table: "w".into(),
+                shard: 0,
+                seq: 0,
+                created_ms: 0,
+                entries: chunk.to_vec(),
+                dense: vec![],
+            };
+            for replica in &slaves[s] {
+                replica.apply_batch(&batch).unwrap();
+            }
+        }
+    }
+}
+
+/// Rotating window over the hot set: request `i` pulls `BATCH` hot ids.
+fn hot_batch(i: usize) -> Vec<u64> {
+    (0..BATCH as u64).map(|j| (i as u64 * 7 + j) % HOT_SET).collect()
+}
+
+fn pctl(sorted: &[u64], q: f64) -> u64 {
+    sorted[((sorted.len() - 1) as f64 * q).round() as usize]
+}
+
+/// Per-pull latencies in ns, sorted ascending.
+fn measure(client: &SlaveClient, reqs: usize) -> Vec<u64> {
+    let mut samples = Vec::with_capacity(reqs);
+    for i in 0..reqs {
+        let ids = hot_batch(i);
+        let t = Instant::now();
+        std::hint::black_box(client.sparse_pull("w", &ids).unwrap());
+        samples.push(t.elapsed().as_nanos() as u64);
+    }
+    samples.sort_unstable();
+    samples
+}
+
+/// E12a: cached vs uncached p50/p99 on identical hot-batch streams, with
+/// the byte-identity and the 2x-p99 acceptance gates.
+fn pull_latency(rows: u64, reqs: usize, results: &mut Vec<String>) {
+    bench::header("E12a: cached vs uncached pull latency");
+    let (uncached, slaves_u) = fleet();
+    seed(&slaves_u, rows);
+    let (mut cached, slaves_c) = fleet();
+    seed(&slaves_c, rows);
+    let cache = HotIdCache::new(1 << 20);
+    cached.set_cache(cache.clone());
+
+    // Byte identity over a mixed probe (hot + tail ids).
+    let probe: Vec<u64> = (0..BATCH as u64).map(|j| j * (rows / BATCH as u64).max(1)).collect();
+    let a = uncached.sparse_pull("w", &probe).unwrap();
+    let b = cached.sparse_pull("w", &probe).unwrap(); // fill
+    let c = cached.sparse_pull("w", &probe).unwrap(); // hits
+    assert_eq!(a, b, "cached fill path must be byte-identical");
+    assert_eq!(a, c, "cached hit path must be byte-identical");
+
+    let base = measure(&uncached, reqs);
+    // Warm the hot set, then measure the steady state.
+    for i in 0..(HOT_SET as usize / BATCH + 1) {
+        cached.sparse_pull("w", &hot_batch(i)).unwrap();
+    }
+    let hot = measure(&cached, reqs);
+
+    let (u50, u99) = (pctl(&base, 0.50), pctl(&base, 0.99));
+    let (c50, c99) = (pctl(&hot, 0.50), pctl(&hot, 0.99));
+    let hit_rate = cache.hit_rate();
+    assert!(hit_rate >= 0.5, "hot-set hit rate only {hit_rate:.3}");
+    assert!(
+        c99 * 2 <= u99,
+        "cached p99 {c99} ns not 2x better than uncached {u99} ns at hit rate {hit_rate:.3}"
+    );
+    bench::metric(
+        &format!("uncached ({rows} rows)"),
+        format!("p50 {:.1} us, p99 {:.1} us", u50 as f64 / 1e3, u99 as f64 / 1e3),
+    );
+    bench::metric(
+        &format!("cached (hit rate {hit_rate:.3})"),
+        format!(
+            "p50 {:.1} us, p99 {:.1} us ({:.1}x at p99)",
+            c50 as f64 / 1e3,
+            c99 as f64 / 1e3,
+            u99 as f64 / c99.max(1) as f64
+        ),
+    );
+    results.push(format!(
+        r#"{{"bench":"serving","stage":"pull_latency","rows":{rows},"requests":{reqs},"batch":{BATCH},"uncached_p50_us":{:.3},"uncached_p99_us":{:.3},"cached_p50_us":{:.3},"cached_p99_us":{:.3},"hit_rate":{hit_rate:.4},"p99_speedup":{:.3},"byte_identical":true}}"#,
+        u50 as f64 / 1e3,
+        u99 as f64 / 1e3,
+        c50 as f64 / 1e3,
+        c99 as f64 / 1e3,
+        u99 as f64 / c99.max(1) as f64
+    ));
+}
+
+/// E12b: pull throughput vs concurrent predictor threads, cached off/on.
+fn throughput(rows: u64, per_thread: usize, results: &mut Vec<String>) {
+    bench::header("E12b: throughput vs concurrent predictors");
+    for cached_on in [false, true] {
+        let (mut client, slaves) = fleet();
+        seed(&slaves, rows);
+        let cache = HotIdCache::new(1 << 20);
+        if cached_on {
+            client.set_cache(cache.clone());
+            for i in 0..(HOT_SET as usize / BATCH + 1) {
+                client.sparse_pull("w", &hot_batch(i)).unwrap();
+            }
+        }
+        let client = Arc::new(client);
+        for threads in [1usize, 2, 4] {
+            let t0 = Instant::now();
+            let handles: Vec<_> = (0..threads)
+                .map(|t| {
+                    let client = client.clone();
+                    std::thread::spawn(move || {
+                        for i in 0..per_thread {
+                            std::hint::black_box(
+                                client.sparse_pull("w", &hot_batch(t * per_thread + i)).unwrap(),
+                            );
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            let pulls_per_sec = (threads * per_thread) as f64 / secs;
+            bench::metric(
+                &format!("{threads} thread(s), cache {}", if cached_on { "on" } else { "off" }),
+                format!("{:.0} pulls/s ({:.0} ids/s)", pulls_per_sec, pulls_per_sec * BATCH as f64),
+            );
+            results.push(format!(
+                r#"{{"bench":"serving","stage":"throughput","threads":{threads},"cached":{cached_on},"pulls_per_sec":{pulls_per_sec:.1},"hit_rate":{:.4}}}"#,
+                cache.hit_rate()
+            ));
+        }
+    }
+}
+
+/// E12c: one-tick freshness — an update applied to the replicas and
+/// announced through the scatter tap is visible to the next cached pull.
+fn freshness(results: &mut Vec<String>) {
+    bench::header("E12c: one-tick freshness under the cache");
+    let (mut client, slaves) = fleet();
+    seed(&slaves, HOT_SET);
+    let cache = HotIdCache::new(1 << 16);
+    client.set_cache(cache.clone());
+    let ids = hot_batch(0);
+    client.sparse_pull("w", &ids).unwrap(); // fill
+    let hot = ids[0];
+    let shard = Router::new(SHARDS).shard_of(hot) as usize;
+    let update = SyncBatch {
+        model: "ctr".into(),
+        table: "w".into(),
+        shard: 0,
+        seq: 1,
+        created_ms: 0,
+        entries: vec![SyncEntry { id: hot, op: SyncOp::Upsert(vec![2.0, 1.0, 1e6]) }],
+        dense: vec![],
+    };
+    for replica in &slaves[shard] {
+        replica.apply_batch(&update).unwrap();
+    }
+    cache.on_applied(std::slice::from_ref(&update));
+    let (_, vals) = client.sparse_pull("w", &ids).unwrap();
+    assert_eq!(vals[0], 1e6, "update not visible within one tick");
+    assert!(cache.stats.invalidations.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+    bench::metric("freshness", "streamed update visible on the next cached pull");
+    results.push(
+        r#"{"bench":"serving","stage":"freshness","one_tick":true}"#.to_string(),
+    );
+}
+
+fn main() {
+    let (rows, reqs, per_thread) =
+        if smoke() { (20_000u64, 2_000usize, 500usize) } else { (200_000u64, 10_000usize, 2_500usize) };
+    let mut results = Vec::new();
+    pull_latency(rows, reqs, &mut results);
+    throughput(rows, per_thread, &mut results);
+    freshness(&mut results);
+    let json = format!("[\n  {}\n]\n", results.join(",\n  "));
+    // Anchor to the workspace root (cargo runs benches with cwd = the
+    // package root, rust/), so CI finds the artifact at a fixed path.
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package has a parent dir")
+        .join("BENCH_serving.json");
+    std::fs::write(&out, &json).expect("write BENCH_serving.json");
+    println!("\nwrote {} ({} records)", out.display(), results.len());
+}

@@ -136,7 +136,7 @@ fn main() {
             for replica in shard {
                 replica.clear();
                 for chain in &chains {
-                    LocalCluster::apply_chain_chunks(replica, chain).unwrap();
+                    LocalCluster::apply_chain_chunks(replica, chain, None).unwrap();
                 }
             }
         }

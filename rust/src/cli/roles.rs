@@ -89,6 +89,37 @@ fn block_forever() -> ! {
     }
 }
 
+/// Fetch the published slot map from the first master in `channels`
+/// that answers [`methods::FETCH_SLOT_MAP`]. `None` when no channel is
+/// reachable or no master has a route guard installed (a cold cluster
+/// routes by the canonical uniform map and publishes nothing).
+fn fetch_slot_map(channels: &[Channel]) -> Option<crate::reshard::SlotMap> {
+    for ch in channels {
+        if let Ok(bytes) = ch.call(crate::server::methods::FETCH_SLOT_MAP, &[]) {
+            if let Ok(map) = crate::reshard::SlotMap::from_bytes(&bytes) {
+                return Some(map);
+            }
+        }
+    }
+    None
+}
+
+/// Build a [`crate::worker::client::RouteRefresher`] over the master
+/// `channels`: invoked by clients on a [`Error::StaleRoute`] NACK, it
+/// re-fetches the published slot map and installs it when the routing
+/// epoch advanced — remote workers converge on a live migration without
+/// a restart. Maps from a different slot universe are ignored (a skewed
+/// universe would route through the wrong slot hash).
+pub fn route_refresher(channels: Vec<Channel>) -> crate::worker::client::RouteRefresher {
+    Arc::new(move |router: &Router| {
+        if let Some(map) = fetch_slot_map(&channels) {
+            if map.epoch > router.epoch() && map.slots() == router.snapshot().slots() {
+                let _ = router.install(map);
+            }
+        }
+    })
+}
+
 /// `weips local`: full in-process cluster on the synthetic CTR stream.
 /// `--reshard-at N` runs a live slot migration (`--reshard-from`,
 /// `--reshard-to`, `--reshard-count`) at step N, under the training
@@ -368,11 +399,24 @@ pub fn run_slave(args: &Args) -> Result<()> {
         Arc::new(SystemClock),
         pool,
     );
-    // `--consume-all 1`: widen to every partition. Required when joining
-    // a cluster whose slot map was ever rebalanced (the reduced subset is
-    // only sound for the canonical uniform map); the automatic
-    // published-map bootstrap is a ROADMAP follow-up.
-    if args.get_or("consume-all", "0") != "0" {
+    // Bootstrap from the published slot map when `--masters-at` is
+    // given: a cluster whose map was ever rebalanced (epoch > 0)
+    // invalidates the reduced partition subset — it is only sound for
+    // the canonical uniform map — so widen to every partition
+    // automatically. `--consume-all 1` forces widening by hand (e.g.
+    // when no master is reachable at boot).
+    let master_channels: Vec<Channel> = args
+        .get("masters-at")
+        .map(|s| s.split(',').map(|a| Channel::remote(a.trim(), RPC_TIMEOUT)).collect())
+        .unwrap_or_default();
+    let rebalanced = match fetch_slot_map(&master_channels) {
+        Some(map) if map.epoch > 0 => {
+            println!("published slot map at routing epoch {}: consuming all partitions", map.epoch);
+            true
+        }
+        _ => false,
+    };
+    if rebalanced || args.get_or("consume-all", "0") != "0" {
         scatter.subscribe_all()?;
     }
     println!("consuming partitions {:?}", scatter.partitions());
@@ -402,12 +446,18 @@ pub fn run_trainer(args: &Args) -> Result<()> {
     // Route over the cluster's configured slot universe, not the default
     // — a universe skew would push to the wrong masters.
     let router = Router::with_slots(channels.len() as u32, cfg.reshard_slots as usize);
-    let trainer = Trainer::new(
-        engine,
-        spec.clone(),
-        ShardedClient::with_router(&cfg.model_name, channels, router),
-        monitor.clone(),
-    );
+    // Bootstrap from the published slot map: a trainer joining after a
+    // live migration would otherwise push through the stale uniform map
+    // and burn a StaleRoute round-trip per batch until the first NACK.
+    if let Some(map) = fetch_slot_map(&channels) {
+        if map.epoch > 0 && map.slots() == cfg.reshard_slots as usize {
+            println!("bootstrapped slot map at routing epoch {}", map.epoch);
+            let _ = router.install(map);
+        }
+    }
+    let mut client = ShardedClient::with_router(&cfg.model_name, channels.clone(), router);
+    client.set_route_refresher(route_refresher(channels));
+    let trainer = Trainer::new(engine, spec.clone(), client, monitor.clone());
     let mut workload = Workload::new(WorkloadConfig { fields: spec.fields, ..Default::default() });
     for step in 1..=steps {
         let samples = workload.batch(step * 100, spec.batch_train);
@@ -435,7 +485,13 @@ pub fn run_predictor(args: &Args) -> Result<()> {
             let endpoints: Vec<Arc<SlaveEndpoint>> = group
                 .split(',')
                 .map(|a| {
-                    Arc::new(SlaveEndpoint::remote(Channel::remote(a.trim(), RPC_TIMEOUT)))
+                    // Warm connection pool per slave: concurrent predict
+                    // batches fan out without serializing on one socket.
+                    Arc::new(SlaveEndpoint::remote(Channel::pooled(
+                        a.trim(),
+                        RPC_TIMEOUT,
+                        cfg.pull_pool_connections as usize,
+                    )))
                 })
                 .collect();
             Arc::new(ReplicaGroup::new(endpoints, BalancePolicy::RoundRobin))
@@ -443,11 +499,13 @@ pub fn run_predictor(args: &Args) -> Result<()> {
         .collect();
     let _metrics = serve_role_metrics(args, &cfg)?;
     let router = Router::with_slots(groups.len() as u32, cfg.reshard_slots as usize);
-    let predictor = Predictor::new(
-        engine,
-        spec.clone(),
-        SlaveClient::with_router(&cfg.model_name, groups, router),
-    );
+    // No hot-id cache here: the standalone predictor does not consume
+    // the scatter stream, so there is no invalidation source and a
+    // cache would violate the one-tick freshness guarantee. Caching is
+    // wired where the scatter runs in-process (LocalCluster).
+    let mut client = SlaveClient::with_router(&cfg.model_name, groups, router);
+    client.register_metrics("predictor");
+    let predictor = Predictor::new(engine, spec.clone(), client);
     let mut workload = Workload::new(WorkloadConfig { fields: spec.fields, ..Default::default() });
     let mut served = 0u64;
     while served < requests {

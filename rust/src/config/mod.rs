@@ -256,6 +256,22 @@ pub struct ClusterConfig {
     /// where available), `epoll`, or `peek`. `WEIPS_RPC_POLL` overrides
     /// the default.
     pub rpc_poll_mode: crate::net::PollMode,
+    /// QoS admission control on role RPC servers: requests classify into
+    /// predict/bulk/control classes, and bulk bursts (migration pulls,
+    /// checkpoint replication) over their in-flight cap are shed with a
+    /// typed NACK so predict pulls are never starved.
+    pub rpc_qos: bool,
+    /// In-flight cap for bulk-class requests; 0 = half the RPC handler
+    /// pool (at least 1), so predict/control always keep handlers.
+    pub rpc_bulk_inflight_max: u32,
+    /// Hot-id serving-cache capacity in rows per predictor process
+    /// (0 disables the cache; invalidation is driven by the streaming
+    /// scatter, so there is no TTL to tune).
+    pub serving_cache_rows: u64,
+    /// Warm connections per slave endpoint in a predictor's pull pool
+    /// (concurrent predict threads to one slave share this many TCP
+    /// connections instead of serializing on one).
+    pub pull_pool_connections: u32,
     /// Virtual routing slots in the two-level id→slot→shard map (elastic
     /// resharding; ≥ the largest shard count the deployment will ever
     /// grow to). The slot hash never changes, so this must stay constant
@@ -309,6 +325,10 @@ impl Default for ClusterConfig {
             rpc_poll_min_ms: 1,
             rpc_poll_max_ms: 10,
             rpc_poll_mode: crate::net::default_poll_mode(),
+            rpc_qos: true,
+            rpc_bulk_inflight_max: 0,
+            serving_cache_rows: 1 << 20,
+            pull_pool_connections: 4,
             reshard_slots: env_threads("WEIPS_RESHARD_SLOTS", 1024).clamp(1, 65536),
             wal_sync_every: crate::queue::default_wal_sync_every(),
             feature_ttl_ms: 0,
@@ -346,6 +366,9 @@ impl ClusterConfig {
             poll_max_ms: self.rpc_poll_max_ms.max(self.rpc_poll_min_ms.max(1)),
             scratch_cap: crate::net::default_scratch_cap(),
             mode: self.rpc_poll_mode,
+            qos: self
+                .rpc_qos
+                .then(|| crate::server::default_qos_policy(self.rpc_bulk_inflight_max as usize)),
         }
     }
 
@@ -398,6 +421,18 @@ impl ClusterConfig {
         }
         if let Some(v) = doc.get_str("cluster", "rpc_poll_mode") {
             c.rpc_poll_mode = crate::net::PollMode::parse(v)?;
+        }
+        if let Some(v) = doc.get_bool("cluster", "rpc_qos") {
+            c.rpc_qos = v;
+        }
+        if let Some(v) = doc.get_int("cluster", "rpc_bulk_inflight_max") {
+            c.rpc_bulk_inflight_max = v.clamp(0, u32::MAX as i64) as u32;
+        }
+        if let Some(v) = doc.get_int("cluster", "serving_cache_rows") {
+            c.serving_cache_rows = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_int("cluster", "pull_pool_connections") {
+            c.pull_pool_connections = v.clamp(1, 1024) as u32;
         }
         if let Some(v) = doc.get_int("cluster", "reshard_slots") {
             // The slot universe is a u16 space; clamp hard so a typo can
@@ -602,6 +637,37 @@ mod tests {
         assert_eq!(c.wal_sync_every, 0);
         let big = TomlDoc::parse("[cluster]\nreshard_slots = 999999\n").unwrap();
         assert_eq!(ClusterConfig::from_toml(&big).unwrap().reshard_slots, 65536);
+    }
+
+    #[test]
+    fn serving_knobs_parse_clamp_and_resolve() {
+        // Defaults: QoS on with auto bulk cap, cache on, 4-way pull pool.
+        let d = ClusterConfig::default();
+        assert!(d.rpc_qos);
+        assert_eq!(d.rpc_bulk_inflight_max, 0);
+        assert!(d.serving_cache_rows > 0);
+        assert_eq!(d.pull_pool_connections, 4);
+        let qos = d.rpc_options().qos.expect("qos on by default");
+        assert!(qos.predict_methods.contains(&crate::server::methods::SPARSE_PULL));
+        assert!(qos.bulk_methods.contains(&crate::server::methods::MIGRATE_PULL));
+        let doc = TomlDoc::parse(
+            r#"
+            [cluster]
+            rpc_qos = false
+            rpc_bulk_inflight_max = 3
+            serving_cache_rows = 4096
+            pull_pool_connections = -2
+            "#,
+        )
+        .unwrap();
+        let c = ClusterConfig::from_toml(&doc).unwrap();
+        assert!(!c.rpc_qos);
+        assert!(c.rpc_options().qos.is_none());
+        assert_eq!(c.rpc_bulk_inflight_max, 3);
+        assert_eq!(c.serving_cache_rows, 4096);
+        assert_eq!(c.pull_pool_connections, 1); // clamped: pool never empty
+        let off = TomlDoc::parse("[cluster]\nserving_cache_rows = -1\n").unwrap();
+        assert_eq!(ClusterConfig::from_toml(&off).unwrap().serving_cache_rows, 0);
     }
 
     #[test]

@@ -100,6 +100,9 @@ pub struct LocalCluster {
     pub domino: Mutex<Domino>,
     pub trainer: Trainer,
     pub predictor: Predictor,
+    /// Predictor-side hot-id cache; scatter taps keep it coherent.
+    /// Exposed for the serving bench/tests (hit-rate and stats probes).
+    pub serving_cache: Arc<crate::worker::HotIdCache>,
     workload: Mutex<Workload>,
     clock: Arc<dyn Clock>,
     data_dir: std::path::PathBuf,
@@ -198,6 +201,9 @@ impl LocalCluster {
         let mut slaves = Vec::new();
         let mut scatters = Vec::new();
         let mut groups = Vec::new();
+        // Serving hot-id cache, invalidated by the scatter taps below
+        // (capacity 0 disables caching without touching the read path).
+        let serving_cache = crate::worker::HotIdCache::new(cfg.serving_cache_rows);
         for s in 0..cfg.slave_shards {
             let mut replicas = Vec::new();
             let mut shard_scatters = Vec::new();
@@ -216,14 +222,20 @@ impl LocalCluster {
                 // Large predict pulls prefetch their stripes on the
                 // shared sync pool.
                 shard.set_sync_pool(sync_pool.clone());
-                shard_scatters.push(Mutex::new(Scatter::with_pool(
+                let mut scatter = Scatter::with_pool(
                     topic.clone(),
                     shard.clone(),
                     cfg.master_shards,
                     cfg.slave_shards,
                     clock.clone(),
                     sync_pool.clone(),
-                )));
+                );
+                // Every replica's apply invalidates the serving cache:
+                // the predictor may refill from any replica, so a
+                // cached row is only trustworthy once the *last* apply
+                // of the tick has stamped its stripe.
+                scatter.add_tap(serving_cache.clone());
+                shard_scatters.push(Mutex::new(scatter));
                 let ch = Channel::local(Arc::new(SlaveService { shard: shard.clone() }));
                 endpoints.push(Arc::new(SlaveEndpoint::local(ch, shard.clone())));
                 replicas.push(shard);
@@ -250,14 +262,14 @@ impl LocalCluster {
             ShardedClient::with_router(&cfg.model_name, master_channels, master_router.clone()),
             monitor.clone(),
         );
-        let predictor = Predictor::new(
-            engine.clone(),
-            spec.clone(),
-            // Same universe as the slave shards' router — a predictor
-            // with a different `reshard_slots` would route pulls to
-            // shards that never held the ids.
-            SlaveClient::with_router(&cfg.model_name, groups.clone(), slave_router.clone()),
-        );
+        // Same universe as the slave shards' router — a predictor
+        // with a different `reshard_slots` would route pulls to
+        // shards that never held the ids.
+        let mut slave_client =
+            SlaveClient::with_router(&cfg.model_name, groups.clone(), slave_router.clone());
+        slave_client.set_cache(serving_cache.clone());
+        slave_client.register_metrics("predictor");
+        let predictor = Predictor::new(engine.clone(), spec.clone(), slave_client);
 
         // -- control plane --------------------------------------------------------
         let mut scheduler = Scheduler::new(
@@ -343,6 +355,7 @@ impl LocalCluster {
             domino,
             trainer,
             predictor,
+            serving_cache,
             workload,
             clock,
             data_dir,
@@ -511,30 +524,41 @@ impl LocalCluster {
 
     /// Rebuild one slave replica's state from a master shard's chain:
     /// base full sync, then each delta chunk in order. Call once per
-    /// master shard (the replica's router filters foreign ids). Callers
-    /// syncing many replicas should load via [`Self::shard_chain`] once
-    /// and use [`Self::apply_chain_chunks`] per replica instead.
+    /// master shard (the replica's router filters foreign ids; the
+    /// master slot map filters rows the source shard no longer owns).
+    /// Callers syncing many replicas should load via
+    /// [`Self::shard_chain`] once and use [`Self::apply_chain_chunks`]
+    /// per replica instead.
     pub fn slave_sync_chain(
         &self,
         replica: &Arc<SlaveShard>,
         version: u64,
         shard: u32,
     ) -> Result<()> {
-        Self::apply_chain_chunks(replica, &self.shard_chain(version, shard)?)
+        let map = self.master_router.snapshot();
+        Self::apply_chain_chunks(replica, &self.shard_chain(version, shard)?, Some((&map, shard)))
     }
 
     /// Apply pre-loaded chain chunks to one replica (base → deltas).
+    ///
+    /// `owner` = (current *master* slot map, the chain's source shard).
+    /// Chunks sealed before a live migration still carry moved rows at
+    /// pre-move values; without the filter, replaying the donor's chain
+    /// after the recipient's resurrects the stale copy — the moved row
+    /// silently rolls back. Pass `None` only when no reshard can have
+    /// happened (uniform map from epoch 0).
     pub fn apply_chain_chunks(
         replica: &Arc<SlaveShard>,
         chain: &[(CkptKind, Vec<u8>)],
+        owner: Option<(&crate::reshard::SlotMap, u32)>,
     ) -> Result<()> {
         for (kind, bytes) in chain {
             match kind {
                 CkptKind::Base => {
-                    replica.full_sync_from_snapshot(bytes)?;
+                    replica.full_sync_from_snapshot_owned(bytes, owner)?;
                 }
                 CkptKind::Delta => {
-                    replica.apply_delta_snapshot(bytes)?;
+                    replica.apply_delta_snapshot_owned(bytes, owner)?;
                 }
             }
         }
@@ -606,8 +630,8 @@ impl LocalCluster {
             for (sidx, shard) in self.slaves.iter().enumerate() {
                 for (ridx, replica) in shard.iter().enumerate() {
                     replica.clear();
-                    for chain in &chains {
-                        Self::apply_chain_chunks(replica, chain)?;
+                    for (m, chain) in self.masters.iter().zip(&chains) {
+                        Self::apply_chain_chunks(replica, chain, Some((&map, m.shard_id)))?;
                     }
                     replica.set_version(plan.target_version);
                     self.scatters[sidx][ridx].lock().unwrap().seek_to_latest()?;
@@ -636,6 +660,9 @@ impl LocalCluster {
             m.set_frozen(false);
         }
         result?;
+        // The rollback rewrote slave state outside the scatter stream, so
+        // cached rows have no invalidation signal: drop them wholesale.
+        self.serving_cache.clear();
         self.vm.commit(plan);
         Ok(())
     }
@@ -690,6 +717,10 @@ impl LocalCluster {
         }
         target.set_healthy(true);
         self.groups[shard].reset_failures();
+        // Chain restore bypassed the scatter taps; cached rows for this
+        // shard may predate the recovered state. Dropping everything is
+        // cheaper than tracking which stripes the chain touched.
+        self.serving_cache.clear();
         Ok(())
     }
 

@@ -35,6 +35,11 @@ pub enum Error {
     /// server rejects *before* applying anything, and clients re-split by
     /// the current slot map and retry.
     StaleRoute(String),
+    /// QoS admission control shed this request: the request's class is at
+    /// its in-flight cap and the server chose to reject rather than queue.
+    /// Rejected *before* any state change; bulk callers back off and
+    /// retry, predict callers fail over to a replica.
+    Overloaded(String),
 }
 
 impl Error {
@@ -44,6 +49,14 @@ impl Error {
     /// [`Error::StaleRoute`] too, not a stringly [`Error::Rpc`].
     pub fn is_stale_route(&self) -> bool {
         matches!(self, Error::StaleRoute(_))
+    }
+
+    /// True for QoS admission-control sheds. Typed end to end like
+    /// [`Error::StaleRoute`]: the RPC layer carries a dedicated status
+    /// byte so remote callers can distinguish "server is shedding my
+    /// class" (back off / fail over) from a real fault.
+    pub fn is_overloaded(&self) -> bool {
+        matches!(self, Error::Overloaded(_))
     }
 }
 
@@ -63,6 +76,7 @@ impl fmt::Display for Error {
             Error::NotFound(m) => write!(f, "not found: {m}"),
             Error::Unavailable(m) => write!(f, "unavailable: {m}"),
             Error::StaleRoute(m) => write!(f, "stale route: {m}"),
+            Error::Overloaded(m) => write!(f, "overloaded: {m}"),
         }
     }
 }

@@ -246,6 +246,47 @@ pub static DESCRIPTORS: &[Desc] = &[
         help: "Idle connections currently parked in an RPC server's event loop.",
         labels: &["server"],
     },
+    Desc {
+        name: "weips_rpc_class_dispatches_total",
+        kind: Kind::Counter,
+        help: "Requests admitted per QoS class (predict/bulk/control) by an RPC \
+               server's admission gate.",
+        labels: &["server", "class"],
+    },
+    Desc {
+        name: "weips_rpc_class_shed_total",
+        kind: Kind::Counter,
+        help: "Requests shed with the typed overload NACK because their QoS class \
+               was at its in-flight cap.",
+        labels: &["server", "class"],
+    },
+    // -- serving read path (hot-id cache + replica fan-out) ---------------
+    Desc {
+        name: "weips_cache_hits_total",
+        kind: Kind::Counter,
+        help: "Pulled ids served from the predictor's hot-id cache.",
+        labels: &["role"],
+    },
+    Desc {
+        name: "weips_cache_misses_total",
+        kind: Kind::Counter,
+        help: "Pulled ids that missed the hot-id cache and were fetched remotely.",
+        labels: &["role"],
+    },
+    Desc {
+        name: "weips_cache_invalidations_total",
+        kind: Kind::Counter,
+        help: "Cache rows invalidated by the streaming scatter tap (the epoch-based \
+               coherence channel — no TTL).",
+        labels: &["role"],
+    },
+    Desc {
+        name: "weips_pull_fanout_latency_seconds",
+        kind: Kind::Histogram,
+        help: "Per-shard remote pull latency observed by the replica-aware fan-out \
+               (cache misses only; hits never leave the process).",
+        labels: &["role"],
+    },
     // -- routing / elastic resharding ------------------------------------
     Desc {
         name: "weips_routing_epoch",

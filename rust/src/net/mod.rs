@@ -56,6 +56,10 @@ const STATUS_ERR: u8 = 1;
 /// the current slot map and retry, instead of failing a stringly RPC
 /// error upward.
 const STATUS_STALE_ROUTE: u8 = 2;
+/// QoS admission-control shed ([`Error::Overloaded`]): its own status so
+/// remote bulk callers can back off and retry while predict callers fail
+/// over to a replica, instead of treating a deliberate shed as a fault.
+const STATUS_OVERLOADED: u8 = 3;
 
 /// Handler threads per RPC server when no explicit count is given
 /// (`WEIPS_RPC_THREADS` overrides; the cluster config's `rpc_threads`
@@ -156,6 +160,127 @@ pub fn default_poll_mode() -> PollMode {
     })
 }
 
+/// QoS class a request is admitted under. Classification is by method id
+/// (see [`QosPolicy`]); the class decides which in-flight cap applies and
+/// which dispatch/shed counters move.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QosClass {
+    /// Latency-sensitive serving reads (sparse/dense pulls, pings).
+    /// Never shed: this is the class the caps exist to protect.
+    Predict = 0,
+    /// Throughput bulk transfers (migration pulls/applies, checkpoint
+    /// save/load) — capped so a burst cannot occupy every handler.
+    Bulk = 1,
+    /// Everything else (training pushes, admin, routing control).
+    Control = 2,
+}
+
+impl QosClass {
+    /// All classes, in counter-index order.
+    pub const ALL: [QosClass; 3] = [QosClass::Predict, QosClass::Bulk, QosClass::Control];
+
+    /// Stable label value for metrics and NACK messages.
+    pub fn name(self) -> &'static str {
+        match self {
+            QosClass::Predict => "predict",
+            QosClass::Bulk => "bulk",
+            QosClass::Control => "control",
+        }
+    }
+}
+
+/// Admission-control policy for one RPC server: which method ids belong
+/// to which class, and the per-class in-flight caps. The substrate stays
+/// protocol-agnostic — the WeiPS method-id classification lives with the
+/// method table (`server::default_qos_policy`).
+#[derive(Debug, Clone)]
+pub struct QosPolicy {
+    /// Method ids in the predict class (uncapped, protected).
+    pub predict_methods: Vec<u16>,
+    /// Method ids in the bulk class.
+    pub bulk_methods: Vec<u16>,
+    /// In-flight cap for bulk requests; 0 resolves to
+    /// `max(1, threads / 2)` so at least half the handler pool always
+    /// remains available to predict/control traffic.
+    pub bulk_inflight_max: usize,
+    /// In-flight cap for control requests; 0 = unlimited.
+    pub control_inflight_max: usize,
+}
+
+/// Runtime admission state for one server (shared through the park queue
+/// so pool workers and metrics samplers see the same counters).
+struct QosGate {
+    policy: QosPolicy,
+    /// Resolved caps, indexed by class (u64::MAX = unlimited).
+    caps: [u64; 3],
+    inflight: [AtomicU64; 3],
+    dispatched: [AtomicU64; 3],
+    shed: [AtomicU64; 3],
+}
+
+impl QosGate {
+    fn new(policy: QosPolicy, threads: usize) -> QosGate {
+        let bulk = if policy.bulk_inflight_max == 0 {
+            (threads / 2).max(1) as u64
+        } else {
+            policy.bulk_inflight_max as u64
+        };
+        let control = if policy.control_inflight_max == 0 {
+            u64::MAX
+        } else {
+            policy.control_inflight_max as u64
+        };
+        QosGate {
+            policy,
+            caps: [u64::MAX, bulk, control],
+            inflight: Default::default(),
+            dispatched: Default::default(),
+            shed: Default::default(),
+        }
+    }
+
+    fn class_of(&self, method: u16) -> QosClass {
+        if self.policy.predict_methods.contains(&method) {
+            QosClass::Predict
+        } else if self.policy.bulk_methods.contains(&method) {
+            QosClass::Bulk
+        } else {
+            QosClass::Control
+        }
+    }
+
+    /// Admit or shed. `Ok(class)` reserves an in-flight slot the caller
+    /// must [`QosGate::release`]; `Err(class)` means the class is at its
+    /// cap and the request must be NACKed without touching the service.
+    fn admit(&self, method: u16) -> std::result::Result<QosClass, QosClass> {
+        let class = self.class_of(method);
+        let i = class as usize;
+        let cap = self.caps[i];
+        let mut cur = self.inflight[i].load(Ordering::Relaxed);
+        loop {
+            if cur >= cap {
+                self.shed[i].fetch_add(1, Ordering::Relaxed);
+                return Err(class);
+            }
+            match self.inflight[i].compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(now) => cur = now,
+            }
+        }
+        self.dispatched[i].fetch_add(1, Ordering::Relaxed);
+        Ok(class)
+    }
+
+    fn release(&self, class: QosClass) {
+        self.inflight[class as usize].fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
 /// Tunables for one RPC server (the cluster config's RPC knobs resolve to
 /// this — see `ClusterConfig::rpc_options`).
 #[derive(Debug, Clone)]
@@ -176,6 +301,8 @@ pub struct RpcOptions {
     pub scratch_cap: usize,
     /// Readiness mechanism.
     pub mode: PollMode,
+    /// QoS admission control; `None` disables classification and caps.
+    pub qos: Option<QosPolicy>,
 }
 
 impl Default for RpcOptions {
@@ -187,6 +314,7 @@ impl Default for RpcOptions {
             poll_max_ms: 10,
             scratch_cap: default_scratch_cap(),
             mode: default_poll_mode(),
+            qos: None,
         }
     }
 }
@@ -371,6 +499,8 @@ struct ParkQueue {
     dispatches: AtomicU64,
     /// Ready connections handed to workers.
     dispatched_conns: AtomicU64,
+    /// QoS admission state (`None` when the server runs without caps).
+    qos: Option<QosGate>,
 }
 
 impl ParkQueue {
@@ -454,6 +584,7 @@ impl RpcServer {
             waker,
             dispatches: AtomicU64::new(0),
             dispatched_conns: AtomicU64::new(0),
+            qos: opts.qos.clone().map(|p| QosGate::new(p, opts.threads.max(1))),
         });
         // Dispatch stats surface on /metrics keyed by the bound address;
         // samplers hold a Weak so a dropped server vanishes from scrapes.
@@ -483,6 +614,36 @@ impl RpcServer {
                     weak.upgrade().map(|p| p.count.load(Ordering::Acquire) as f64)
                 }),
             );
+            if park.qos.is_some() {
+                for class in QosClass::ALL {
+                    let labels =
+                        [("server", local.to_string()), ("class", class.name().to_string())];
+                    let weak = Arc::downgrade(&park);
+                    crate::metrics::register_fn(
+                        "weips_rpc_class_dispatches_total",
+                        &labels,
+                        Box::new(move || {
+                            weak.upgrade().and_then(|p| {
+                                p.qos.as_ref().map(|g| {
+                                    g.dispatched[class as usize].load(Ordering::Relaxed) as f64
+                                })
+                            })
+                        }),
+                    );
+                    let weak = Arc::downgrade(&park);
+                    crate::metrics::register_fn(
+                        "weips_rpc_class_shed_total",
+                        &labels,
+                        Box::new(move || {
+                            weak.upgrade().and_then(|p| {
+                                p.qos.as_ref().map(|g| {
+                                    g.shed[class as usize].load(Ordering::Relaxed) as f64
+                                })
+                            })
+                        }),
+                    );
+                }
+            }
         }
         let opts = Arc::new(RpcOptions { mode, ..opts });
         let accept_thread = {
@@ -522,6 +683,22 @@ impl RpcServer {
     /// Idle connections currently parked (excludes ones being serviced).
     pub fn parked_connections(&self) -> usize {
         self.park.count.load(Ordering::Acquire)
+    }
+
+    /// Per-class `(dispatched, shed)` counters in [`QosClass::ALL`] order,
+    /// or `None` when the server runs without admission control.
+    pub fn qos_stats(&self) -> Option<[(u64, u64); 3]> {
+        self.park.qos.as_ref().map(|g| {
+            let mut out = [(0u64, 0u64); 3];
+            for class in QosClass::ALL {
+                let i = class as usize;
+                out[i] = (
+                    g.dispatched[i].load(Ordering::Relaxed),
+                    g.shed[i].load(Ordering::Relaxed),
+                );
+            }
+            out
+        })
     }
 
     /// (worker dispatches, ready connections handed over). With ready-set
@@ -831,14 +1008,41 @@ impl RpcServer {
             wbuf.clear();
             wbuf.extend_from_slice(&[0u8; 8]);
             wbuf.extend_from_slice(&req_id.to_le_bytes());
-            match service.call(method, payload) {
-                Ok(body) => {
-                    wbuf.push(STATUS_OK);
-                    wbuf.extend_from_slice(&body);
+            // QoS admission: classify by method and, when the class is at
+            // its in-flight cap, shed with the typed overload NACK before
+            // the service sees the request — a shed costs one response
+            // frame, never a handler-occupying service call.
+            let admitted = match &park.qos {
+                Some(gate) => gate.admit(method).map(Some),
+                None => Ok(None),
+            };
+            match admitted {
+                Err(class) => {
+                    wbuf.push(STATUS_OVERLOADED);
+                    let msg = format!("{} class at in-flight cap, request shed", class.name());
+                    wbuf.extend_from_slice(msg.as_bytes());
                 }
-                Err(e) => {
-                    wbuf.push(if e.is_stale_route() { STATUS_STALE_ROUTE } else { STATUS_ERR });
-                    wbuf.extend_from_slice(e.to_string().as_bytes());
+                Ok(class) => {
+                    let out = service.call(method, payload);
+                    if let (Some(gate), Some(class)) = (&park.qos, class) {
+                        gate.release(class);
+                    }
+                    match out {
+                        Ok(body) => {
+                            wbuf.push(STATUS_OK);
+                            wbuf.extend_from_slice(&body);
+                        }
+                        Err(e) => {
+                            wbuf.push(if e.is_stale_route() {
+                                STATUS_STALE_ROUTE
+                            } else if e.is_overloaded() {
+                                STATUS_OVERLOADED
+                            } else {
+                                STATUS_ERR
+                            });
+                            wbuf.extend_from_slice(e.to_string().as_bytes());
+                        }
+                    }
                 }
             }
             finish_frame(wbuf);
@@ -904,6 +1108,14 @@ impl RpcClient {
         }
     }
 
+    /// Best-effort "no request in flight" probe, used by [`ClientPool`]
+    /// to prefer a warm idle connection. Racy by design: a stale answer
+    /// only means the caller blocks on this client's mutex, exactly like
+    /// the unpooled path always did.
+    pub fn is_idle(&self) -> bool {
+        !matches!(self.inner.try_lock(), Err(std::sync::TryLockError::WouldBlock))
+    }
+
     fn ensure_conn(&self, inner: &mut ClientInner) -> Result<()> {
         if inner.stream.is_none() {
             let stream = TcpStream::connect(&self.addr)
@@ -956,6 +1168,9 @@ impl RpcClient {
                             STATUS_STALE_ROUTE => Err(Error::StaleRoute(
                                 String::from_utf8_lossy(&body).into_owned(),
                             )),
+                            STATUS_OVERLOADED => Err(Error::Overloaded(
+                                String::from_utf8_lossy(&body).into_owned(),
+                            )),
                             _ => Err(Error::Rpc(String::from_utf8_lossy(&body).into_owned())),
                         };
                     }
@@ -991,6 +1206,45 @@ impl RpcClient {
     }
 }
 
+/// Warm connection pool to one endpoint: `size` persistent clients, one
+/// TCP connection each, picked idle-first from a rotating start index. Up
+/// to `size` requests to the endpoint proceed in parallel with no per-call
+/// dial, and a caller never head-of-line-blocks behind another caller's
+/// in-flight request while an idle warm connection exists.
+pub struct ClientPool {
+    clients: Vec<RpcClient>,
+    next: AtomicUsize,
+}
+
+impl ClientPool {
+    /// Pool of `size` (min 1) lazily-connected clients for `addr`.
+    pub fn new(addr: &str, timeout: std::time::Duration, size: usize) -> ClientPool {
+        ClientPool {
+            clients: (0..size.max(1)).map(|_| RpcClient::new(addr, timeout)).collect(),
+            next: AtomicUsize::new(0),
+        }
+    }
+
+    /// Issue one request on an idle pooled connection, falling back to
+    /// round-robin blocking when every connection is busy.
+    pub fn call(&self, method: u16, payload: &[u8]) -> Result<Vec<u8>> {
+        let n = self.clients.len();
+        let start = self.next.fetch_add(1, Ordering::Relaxed);
+        for i in 0..n {
+            let c = &self.clients[(start + i) % n];
+            if c.is_idle() {
+                return c.call(method, payload);
+            }
+        }
+        self.clients[start % n].call(method, payload)
+    }
+
+    /// Number of pooled connections.
+    pub fn size(&self) -> usize {
+        self.clients.len()
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Channel: local or remote
 // ---------------------------------------------------------------------------
@@ -1000,8 +1254,11 @@ impl RpcClient {
 pub enum Channel {
     /// Direct dispatch into the service object.
     Local(Arc<dyn Service>),
-    /// TCP RPC.
+    /// TCP RPC, one connection.
     Remote(Arc<RpcClient>),
+    /// TCP RPC over a warm connection pool (concurrent callers to one
+    /// endpoint — the serving read path).
+    Pooled(Arc<ClientPool>),
 }
 
 impl Channel {
@@ -1015,11 +1272,17 @@ impl Channel {
         Channel::Remote(Arc::new(RpcClient::new(addr, timeout)))
     }
 
+    /// Pooled remote channel to `addr` with `size` warm connections.
+    pub fn pooled(addr: &str, timeout: std::time::Duration, size: usize) -> Channel {
+        Channel::Pooled(Arc::new(ClientPool::new(addr, timeout, size)))
+    }
+
     /// Issue a request.
     pub fn call(&self, method: u16, payload: &[u8]) -> Result<Vec<u8>> {
         match self {
             Channel::Local(svc) => svc.call(method, payload),
             Channel::Remote(client) => client.call(method, payload),
+            Channel::Pooled(pool) => pool.call(method, payload),
         }
     }
 }
@@ -1029,6 +1292,7 @@ impl std::fmt::Debug for Channel {
         match self {
             Channel::Local(_) => write!(f, "Channel::Local"),
             Channel::Remote(_) => write!(f, "Channel::Remote"),
+            Channel::Pooled(p) => write!(f, "Channel::Pooled({})", p.size()),
         }
     }
 }
@@ -1323,5 +1587,95 @@ mod tests {
         std::thread::sleep(Duration::from_millis(250)); // > stall
         let client = RpcClient::new(&addr, timeout());
         assert_eq!(client.call(0, b"after-wedge").unwrap(), b"after-wedge");
+    }
+
+    /// Echo plus a deliberately slow bulk method, for admission tests.
+    struct SlowBulk;
+
+    impl Service for SlowBulk {
+        fn call(&self, method: u16, payload: &[u8]) -> Result<Vec<u8>> {
+            match method {
+                0 => Ok(payload.to_vec()),
+                2 => {
+                    std::thread::sleep(Duration::from_millis(300));
+                    Ok(payload.to_vec())
+                }
+                _ => Err(Error::Rpc(format!("no method {method}"))),
+            }
+        }
+    }
+
+    fn qos_policy_for_test() -> QosPolicy {
+        QosPolicy {
+            predict_methods: vec![0],
+            bulk_methods: vec![2],
+            bulk_inflight_max: 1,
+            control_inflight_max: 0,
+        }
+    }
+
+    #[test]
+    fn qos_sheds_bulk_over_cap_with_typed_nack() {
+        let server = RpcServer::serve_with(
+            "127.0.0.1:0",
+            Arc::new(SlowBulk),
+            RpcOptions { threads: 4, qos: Some(qos_policy_for_test()), ..RpcOptions::default() },
+        )
+        .unwrap();
+        let addr = server.addr().to_string();
+        // One bulk call occupies the only bulk slot for ~300 ms...
+        let holder = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let c = RpcClient::new(&addr, timeout());
+                c.call(2, b"bulk").unwrap()
+            })
+        };
+        std::thread::sleep(Duration::from_millis(80));
+        // ...so a second bulk call is shed with the typed status, while
+        // predict traffic on the same server keeps flowing.
+        let c = RpcClient::new(&addr, timeout());
+        let err = c.call(2, b"burst").unwrap_err();
+        assert!(err.is_overloaded(), "expected typed overload, got: {err}");
+        assert_eq!(c.call(0, b"predict").unwrap(), b"predict");
+        assert_eq!(holder.join().unwrap(), b"bulk");
+        // The slot frees once the holder finishes.
+        assert_eq!(c.call(2, b"later").unwrap(), b"later");
+        let stats = server.qos_stats().expect("qos enabled");
+        assert!(stats[QosClass::Bulk as usize].1 >= 1, "shed counter never moved: {stats:?}");
+        assert!(stats[QosClass::Predict as usize].1 == 0, "predict must never shed: {stats:?}");
+    }
+
+    #[test]
+    fn local_service_overload_stays_typed_over_tcp() {
+        struct Shedding;
+        impl Service for Shedding {
+            fn call(&self, _m: u16, _p: &[u8]) -> Result<Vec<u8>> {
+                Err(Error::Overloaded("queue full".into()))
+            }
+        }
+        let server = RpcServer::serve("127.0.0.1:0", Arc::new(Shedding)).unwrap();
+        let ch = Channel::remote(&server.addr().to_string(), timeout());
+        let err = ch.call(0, b"").unwrap_err();
+        assert!(err.is_overloaded(), "lost the typed status: {err}");
+    }
+
+    #[test]
+    fn client_pool_serves_concurrent_callers() {
+        let server = RpcServer::serve("127.0.0.1:0", Arc::new(Echo)).unwrap();
+        let pool = ClientPool::new(&server.addr().to_string(), timeout(), 4);
+        std::thread::scope(|s| {
+            for t in 0..8u8 {
+                let pool = &pool;
+                s.spawn(move || {
+                    for i in 0..25u8 {
+                        assert_eq!(pool.call(1, &[t, i]).unwrap(), [i, t]);
+                    }
+                });
+            }
+        });
+        // Pooled channel round-trips like any other.
+        let ch = Channel::pooled(&server.addr().to_string(), timeout(), 2);
+        assert_eq!(ch.call(0, b"pooled").unwrap(), b"pooled");
     }
 }

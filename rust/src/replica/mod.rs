@@ -31,6 +31,10 @@ struct Slot<E> {
     inflight: AtomicU64,
     /// Consecutive failures observed by `report_result`.
     failures: AtomicU64,
+    /// Requests this replica answered successfully.
+    served: AtomicU64,
+    /// Total service time across served requests, nanoseconds.
+    lat_ns: AtomicU64,
 }
 
 /// A group of replicas serving the same slave shard.
@@ -82,6 +86,8 @@ impl<E: Endpoint> ReplicaGroup<E> {
                             endpoint,
                             inflight: AtomicU64::new(0),
                             failures: AtomicU64::new(0),
+                            served: AtomicU64::new(0),
+                            lat_ns: AtomicU64::new(0),
                         })
                     })
                     .collect(),
@@ -99,6 +105,8 @@ impl<E: Endpoint> ReplicaGroup<E> {
             endpoint,
             inflight: AtomicU64::new(0),
             failures: AtomicU64::new(0),
+            served: AtomicU64::new(0),
+            lat_ns: AtomicU64::new(0),
         }));
     }
 
@@ -157,6 +165,8 @@ impl<E: Endpoint> ReplicaGroup<E> {
 
     /// Pick with failover: try up to `attempts` distinct replicas through
     /// `f`, counting failovers. This is the client-side hot-backup path.
+    /// Each successful call is timed and charged to the replica that served
+    /// it, so the balancer's spread is observable (`served_counts`).
     pub fn call_with_failover<T>(
         &self,
         attempts: usize,
@@ -171,8 +181,12 @@ impl<E: Endpoint> ReplicaGroup<E> {
                     break;
                 }
             };
+            let start = std::time::Instant::now();
             match f(lease.endpoint()) {
                 Ok(v) => {
+                    let elapsed = start.elapsed().as_nanos() as u64;
+                    lease.slot.served.fetch_add(1, Ordering::Relaxed);
+                    lease.slot.lat_ns.fetch_add(elapsed, Ordering::Relaxed);
                     lease.report(true);
                     return Ok(v);
                 }
@@ -186,6 +200,37 @@ impl<E: Endpoint> ReplicaGroup<E> {
             }
         }
         Err(last_err.unwrap_or_else(|| Error::Unavailable("no replicas".into())))
+    }
+
+    /// Successful requests served per replica, in slot order. An even
+    /// spread under RoundRobin (or load-proportional under LeastLoaded)
+    /// is the fan-out working; a single hot slot means failover is
+    /// carrying the group.
+    pub fn served_counts(&self) -> Vec<u64> {
+        self.slots
+            .read()
+            .unwrap()
+            .iter()
+            .map(|s| s.served.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Mean service latency per replica in nanoseconds (0 when unserved),
+    /// in slot order. Feeds operator dashboards and the serving bench.
+    pub fn mean_latency_ns(&self) -> Vec<u64> {
+        self.slots
+            .read()
+            .unwrap()
+            .iter()
+            .map(|s| {
+                let n = s.served.load(Ordering::Relaxed);
+                if n == 0 {
+                    0
+                } else {
+                    s.lat_ns.load(Ordering::Relaxed) / n
+                }
+            })
+            .collect()
     }
 
     /// Clear failure counters (after recovery).
@@ -327,6 +372,19 @@ mod tests {
             .call_with_failover::<()>(2, |_| Err(Error::Rpc("down".into())))
             .unwrap_err();
         assert!(err.to_string().contains("down"));
+    }
+
+    #[test]
+    fn served_counts_track_successful_calls() {
+        let (g, _) = group(2, BalancePolicy::RoundRobin);
+        for _ in 0..6 {
+            g.call_with_failover(1, |e| Ok(e.id)).unwrap();
+        }
+        assert_eq!(g.served_counts(), vec![3, 3]);
+        // Failures are not charged as served work.
+        let _ = g.call_with_failover::<()>(1, |_| Err(Error::Rpc("down".into())));
+        assert_eq!(g.served_counts().iter().sum::<u64>(), 6);
+        assert_eq!(g.mean_latency_ns().len(), 2);
     }
 
     #[test]

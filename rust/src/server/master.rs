@@ -546,6 +546,18 @@ impl MasterShard {
         }
     }
 
+    /// Published slot map, encoded for the wire: fresh slaves and remote
+    /// trainers bootstrap their routers from it instead of assuming the
+    /// seed layout, and clients re-fetch it on [`Error::StaleRoute`].
+    /// Errors when no route guard is installed — a guard-less shard has
+    /// no authoritative map to publish.
+    pub fn slot_map_bytes(&self) -> Result<Vec<u8>> {
+        match self.route_guard.read().unwrap().as_ref() {
+            Some(router) => Ok(router.snapshot().to_bytes()),
+            None => Err(Error::State("no route guard installed".into())),
+        }
+    }
+
     /// Validate a caller-supplied slot universe: it must fit the u16
     /// slot space (larger values would alias through `slot_of`'s modulo
     /// and select the wrong rows — on a purge, unrecoverably) and, when
@@ -742,6 +754,80 @@ impl MasterShard {
             graves += g;
         }
         (rows, graves)
+    }
+
+    /// Split dirty census across sparse tables since `since`:
+    /// (value-dirty rows, tombstones, access-only rows). The WAL journal
+    /// uses it to pick between a full delta record and a metadata-only
+    /// access-stamp record.
+    pub fn dirty_counts_split(&self, since: u64) -> (usize, usize, usize) {
+        let state = self.state.read().unwrap();
+        let mut rows = 0;
+        let mut graves = 0;
+        let mut access = 0;
+        for t in &state.sparse {
+            let (r, g, a) = t.dirty_counts_split(since);
+            rows += r;
+            graves += g;
+            access += a;
+        }
+        (rows, graves, access)
+    }
+
+    /// Encode a metadata-only micro-delta: per sparse table, the
+    /// `(id, last_access_ms)` stamps of rows whose only dirt since
+    /// `since` is an access-time refresh. Orders of magnitude smaller
+    /// than a full delta for read-heavy windows, and enough to keep
+    /// feature-expiry fidelity across recovery.
+    pub fn encode_access_delta(&self, since: u64) -> Vec<u8> {
+        let state = self.state.read().unwrap();
+        let mut w = Writer::with_capacity(1 << 8);
+        w.put_u32(self.shard_id);
+        w.put_varint(since);
+        w.put_varint(state.sparse.len() as u64);
+        for t in &state.sparse {
+            let stamps = t.collect_access_stamps(since);
+            w.put_str(t.name());
+            w.put_varint(stamps.len() as u64);
+            for (id, last_access_ms) in stamps {
+                w.put_varint(id);
+                w.put_varint(last_access_ms);
+            }
+        }
+        w.into_bytes()
+    }
+
+    /// Apply a metadata-only micro-delta written by
+    /// [`Self::encode_access_delta`] (WAL replay). Unknown table names
+    /// and ids without rows are skipped — the record is advisory
+    /// metadata and hostile or stale payloads must degrade to a no-op,
+    /// never a panic. Returns rows refreshed.
+    pub fn apply_access_delta(&self, bytes: &[u8]) -> Result<usize> {
+        let mut r = Reader::new(bytes);
+        let _src_shard = r.get_u32()?;
+        let _since = r.get_varint()?;
+        let n_tables = r.get_varint()? as usize;
+        let state = self.state.read().unwrap();
+        if n_tables > crate::storage::incremental::MAX_CHAIN {
+            return Err(Error::Checkpoint(format!(
+                "access delta claims {n_tables} tables"
+            )));
+        }
+        let mut refreshed = 0usize;
+        for _ in 0..n_tables {
+            let name = r.get_str()?;
+            let count = r.get_varint()? as usize;
+            let mut stamps = Vec::with_capacity(count.min(1 << 16));
+            for _ in 0..count {
+                let id = r.get_varint()?;
+                let last_access_ms = r.get_varint()?;
+                stamps.push((id, last_access_ms));
+            }
+            if let Some(t) = state.sparse.iter().find(|t| t.name() == name) {
+                refreshed += t.apply_access_stamps(&stamps);
+            }
+        }
+        Ok(refreshed)
     }
 
     /// Drop tombstones sealed through `through` (call after the
@@ -1192,6 +1278,7 @@ impl Service for MasterService {
                 Ok(Ack::ok().to_bytes())
             }
             methods::ROUTE_EPOCH => Ok(self.shard.route_epoch().to_le_bytes().to_vec()),
+            methods::FETCH_SLOT_MAP => self.shard.slot_map_bytes(),
             methods::INSTALL_SLOT_MAP => {
                 let map = SlotMap::from_bytes(payload)?;
                 self.shard.install_slot_map(map)?;

@@ -35,6 +35,28 @@ pub mod methods {
     /// `SlotSeal -> Ack` post-cutover release: purge moved slots + unseal
     /// (master only)
     pub const RELEASE_SLOTS: u16 = 14;
+    /// `() -> SlotMap bytes` published routing table (master only; fresh
+    /// slaves and remote trainers bootstrap from it, and refresh it on a
+    /// `StaleRoute` NACK instead of restarting)
+    pub const FETCH_SLOT_MAP: u16 = 15;
+}
+
+/// Default QoS admission-control policy for WeiPS parameter servers:
+/// serving reads are the protected class, migration/checkpoint transfers
+/// are capped bulk, training pushes and admin stay control. `bulk_cap`
+/// of 0 resolves to half the handler pool (see [`crate::net::QosPolicy`]).
+pub fn default_qos_policy(bulk_cap: usize) -> crate::net::QosPolicy {
+    crate::net::QosPolicy {
+        predict_methods: vec![methods::SPARSE_PULL, methods::DENSE_PULL, methods::PING],
+        bulk_methods: vec![
+            methods::MIGRATE_PULL,
+            methods::MIGRATE_APPLY,
+            methods::SAVE_CKPT,
+            methods::LOAD_CKPT,
+        ],
+        bulk_inflight_max: bulk_cap,
+        control_inflight_max: 0,
+    }
 }
 
 pub use master::MasterShard;

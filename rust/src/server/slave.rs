@@ -553,6 +553,20 @@ impl SlaveShard {
     /// master-shard checkpoint snapshot — filter ids to this slave shard,
     /// transform each row. Call once per master shard snapshot.
     pub fn full_sync_from_snapshot(&self, snapshot: &[u8]) -> Result<usize> {
+        self.full_sync_from_snapshot_owned(snapshot, None)
+    }
+
+    /// Like [`Self::full_sync_from_snapshot`] with a master-side owner
+    /// filter: `owner` = (current master slot map, chunk's source shard).
+    /// Checkpoint chunks sealed *before* a slot migration still carry the
+    /// moved rows at pre-move values; skipping rows the source shard no
+    /// longer owns stops a chain rebuild from resurrecting them over the
+    /// new owner's authoritative copy.
+    pub fn full_sync_from_snapshot_owned(
+        &self,
+        snapshot: &[u8],
+        owner: Option<(&crate::reshard::SlotMap, u32)>,
+    ) -> Result<usize> {
         let route = self.router.snapshot();
         let mut r = Reader::new(snapshot);
         let _src_shard = r.get_u32()?;
@@ -574,6 +588,11 @@ impl SlaveShard {
                 if values.len() != width {
                     return Err(Error::Checkpoint(format!("row {id} width {}", values.len())));
                 }
+                if let Some((map, src)) = owner {
+                    if map.shard_of(id) != src {
+                        continue;
+                    }
+                }
                 if self.sync_row(&route, tbl_idx, serving, &name, id, &values)? {
                     loaded += 1;
                 }
@@ -589,6 +608,19 @@ impl SlaveShard {
     /// serving form, apply tombstones, take dense state wholesale.
     /// Returns rows upserted + deleted here.
     pub fn apply_delta_snapshot(&self, chunk: &[u8]) -> Result<usize> {
+        self.apply_delta_snapshot_owned(chunk, None)
+    }
+
+    /// Like [`Self::apply_delta_snapshot`] with the same master-side
+    /// owner filter as [`Self::full_sync_from_snapshot_owned`]: upserts
+    /// *and tombstones* from a source shard that lost the slot are
+    /// skipped (a stale tombstone deleting the new owner's live row is
+    /// just as wrong as a stale upsert).
+    pub fn apply_delta_snapshot_owned(
+        &self,
+        chunk: &[u8],
+        owner: Option<(&crate::reshard::SlotMap, u32)>,
+    ) -> Result<usize> {
         let route = self.router.snapshot();
         let mut r = Reader::new(chunk);
         let _src_shard = r.get_u32()?;
@@ -613,6 +645,11 @@ impl SlaveShard {
                         values.len()
                     )));
                 }
+                if let Some((map, src)) = owner {
+                    if map.shard_of(id) != src {
+                        continue;
+                    }
+                }
                 if self.sync_row(&route, tbl_idx, serving, &name, id, &values)? {
                     applied += 1;
                 }
@@ -622,6 +659,11 @@ impl SlaveShard {
                 let id = r.get_varint()?;
                 if route.shard_of(id) != self.shard_id {
                     continue;
+                }
+                if let Some((map, src)) = owner {
+                    if map.shard_of(id) != src {
+                        continue;
+                    }
                 }
                 if let Some(idx) = tbl_idx {
                     if self.tables[idx].1.remove(id) {

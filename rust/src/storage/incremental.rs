@@ -28,6 +28,17 @@ use crate::{Error, Result};
 /// policy reseeds a base every few checkpoints), not a legitimate chain.
 pub const MAX_CHAIN: usize = 1024;
 
+/// WAL record envelope tag: payload after the tag byte is a full delta
+/// chunk ([`MasterShard::encode_delta`] format).
+pub const WAL_TAG_FULL: u8 = 0xD1;
+
+/// WAL record envelope tag: payload after the tag byte is a
+/// metadata-only access-stamp micro-delta
+/// ([`MasterShard::encode_access_delta`] format) — written for windows
+/// where the only dirt is read-path access-time refreshes, at a fraction
+/// of a full chunk's size.
+pub const WAL_TAG_META: u8 = 0xD2;
+
 /// Incremental checkpoint policy knobs.
 #[derive(Debug, Clone)]
 pub struct IncrPolicy {
@@ -193,15 +204,31 @@ impl WalJournal {
             return Ok(None);
         }
         let dense = master.dense_versions();
-        let (rows, graves) = master.dirty_counts(self.last_cut);
-        if rows + graves == 0 && dense == self.last_dense {
+        let (rows, graves, access_only) = master.dirty_counts_split(self.last_cut);
+        if rows + graves + access_only == 0 && dense == self.last_dense {
             return Ok(None);
         }
         let cut = master.cut_epoch();
-        let chunk = master.encode_delta(self.last_cut);
+        let payload = if rows + graves == 0 && dense == self.last_dense {
+            // Access-time-only window (pure read traffic): a metadata
+            // micro-record carries just the (id, last_access_ms) stamps,
+            // keeping feature-expiry fidelity across recovery without
+            // paying for full row payloads.
+            let body = master.encode_access_delta(self.last_cut);
+            let mut rec = Vec::with_capacity(body.len() + 1);
+            rec.push(WAL_TAG_META);
+            rec.extend_from_slice(&body);
+            rec
+        } else {
+            let chunk = master.encode_delta(self.last_cut);
+            let mut rec = Vec::with_capacity(chunk.bytes.len() + 1);
+            rec.push(WAL_TAG_FULL);
+            rec.extend_from_slice(&chunk.bytes);
+            rec
+        };
         self.last_cut = cut;
         self.last_dense = dense;
-        let offset = crate::queue::SyncLog::append(wal, self.partition, now_ms, chunk.bytes)?;
+        let offset = crate::queue::SyncLog::append(wal, self.partition, now_ms, payload)?;
         Ok(Some(offset))
     }
 
@@ -223,10 +250,14 @@ impl WalJournal {
     }
 }
 
-/// Replay a WAL partition's tail into a master shard: every record is a
-/// micro-delta chunk; rows are stamped with the shard's *current* write
-/// epoch so the next checkpoint delta captures them. Returns records
-/// replayed.
+/// Replay a WAL partition's tail into a master shard. Records carry a
+/// one-byte envelope tag: [`WAL_TAG_FULL`] wraps a micro-delta chunk
+/// (rows stamped with the shard's *current* write epoch so the next
+/// checkpoint delta captures them), [`WAL_TAG_META`] wraps an
+/// access-stamp record. Any other leading byte is treated as a legacy
+/// untagged full chunk from a pre-envelope WAL (ambiguous only for
+/// legacy shards whose id ≡ 0xD1/0xD2 mod 256, i.e. deployments with
+/// 210+ shards journaled before the upgrade). Returns records replayed.
 pub fn replay_wal(
     master: &MasterShard,
     wal: &WalLog,
@@ -244,7 +275,17 @@ pub fn replay_wal(
         }
         for rec in &records {
             offset = rec.offset + 1;
-            master.apply_delta(&rec.payload, true)?;
+            match rec.payload.split_first() {
+                Some((&WAL_TAG_META, body)) => {
+                    master.apply_access_delta(body)?;
+                }
+                Some((&WAL_TAG_FULL, body)) => {
+                    master.apply_delta(body, true)?;
+                }
+                _ => {
+                    master.apply_delta(&rec.payload, true)?;
+                }
+            }
             replayed += 1;
         }
     }
@@ -356,6 +397,164 @@ mod tests {
         seal(&s, 4, CkptKind::Delta, 99);
         assert_eq!(plan_next(&s, "ctr", &policy).0, CkptKind::Base);
         std::fs::remove_dir_all(base).ok();
+    }
+
+    fn shard(clock: crate::util::clock::ManualClock) -> MasterShard {
+        use crate::config::{ModelKind, ModelSpec};
+        use crate::runtime::ModelConfig;
+        let cfg = ModelConfig {
+            batch_train: 8,
+            batch_predict: 2,
+            fields: 4,
+            dim: 2,
+            hidden: 8,
+            ftrl_block_rows: 64,
+            ftrl_alpha: 0.05,
+            ftrl_beta: 1.0,
+            ftrl_l1: 1.0,
+            ftrl_l2: 1.0,
+        };
+        let spec = ModelSpec::derive("ctr", ModelKind::Fm, &cfg);
+        MasterShard::new(0, spec, None, 1, std::sync::Arc::new(clock)).unwrap()
+    }
+
+    fn tmp_wal() -> (WalLog, std::path::PathBuf) {
+        let dir = std::env::temp_dir().join(format!(
+            "weips-incr-wal-{}-{:x}",
+            std::process::id(),
+            crate::util::mono_ns()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        (WalLog::open(&dir, 1).unwrap(), dir)
+    }
+
+    #[test]
+    fn access_only_window_journals_meta_record_and_replays() {
+        use crate::proto::{SparsePull, SparsePush};
+        use crate::util::clock::ManualClock;
+
+        let clock = ManualClock::new(0);
+        let src = shard(clock.clone());
+        for i in 0..20u64 {
+            src.sparse_push(&SparsePush {
+                model: "ctr".into(),
+                table: "w".into(),
+                ids: vec![i],
+                grads: vec![2.0],
+            })
+            .unwrap();
+        }
+        let (wal, dir) = tmp_wal();
+        let mut journal = WalJournal::new(0);
+        // Value-dirty window: full chunk under the FULL tag.
+        journal.poll(&src, &wal, 1).unwrap().unwrap();
+
+        // Pure read window: pulls refresh access times only.
+        clock.set(10_000);
+        src.sparse_pull(&SparsePull {
+            model: "ctr".into(),
+            table: "w".into(),
+            ids: (0..5).collect(),
+            slot: "w".into(),
+        })
+        .unwrap();
+        journal.poll(&src, &wal, 2).unwrap().unwrap();
+        // Nothing since: no record.
+        assert!(journal.poll(&src, &wal, 3).unwrap().is_none());
+
+        let recs = wal.fetch(0, 0, 16, std::time::Duration::ZERO).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].payload[0], WAL_TAG_FULL);
+        assert_eq!(recs[1].payload[0], WAL_TAG_META);
+        assert!(
+            recs[1].payload.len() < recs[0].payload.len() / 2,
+            "meta record should be far smaller than the full chunk"
+        );
+
+        // Replay into a blank shard: values land, and the access stamps
+        // keep the refreshed rows alive through a feature-expire pass.
+        let dst = shard(ManualClock::new(15_000));
+        assert_eq!(replay_wal(&dst, &wal, 0, 0).unwrap(), 2);
+        let evicted = dst.expire_features(6_000);
+        assert_eq!(evicted, 15, "unrefreshed rows expire, stamped rows survive");
+        let sv = dst
+            .sparse_pull(&SparsePull {
+                model: "ctr".into(),
+                table: "w".into(),
+                ids: vec![1],
+                slot: "w".into(),
+            })
+            .unwrap();
+        let expect = src
+            .sparse_pull(&SparsePull {
+                model: "ctr".into(),
+                table: "w".into(),
+                ids: vec![1],
+                slot: "w".into(),
+            })
+            .unwrap();
+        assert_eq!(sv.values, expect.values);
+        assert!(sv.values[0] != 0.0);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn access_delta_decode_survives_hostile_input() {
+        use crate::proto::{SparsePull, SparsePush};
+        use crate::util::clock::ManualClock;
+
+        let clock = ManualClock::new(0);
+        let src = shard(clock.clone());
+        for i in 0..8u64 {
+            src.sparse_push(&SparsePush {
+                model: "ctr".into(),
+                table: "w".into(),
+                ids: vec![i],
+                grads: vec![2.0],
+            })
+            .unwrap();
+        }
+        let cut = src.cut_epoch();
+        clock.set(500);
+        src.sparse_pull(&SparsePull {
+            model: "ctr".into(),
+            table: "w".into(),
+            ids: (0..8).collect(),
+            slot: "w".into(),
+        })
+        .unwrap();
+        let body = src.encode_access_delta(cut);
+        let dst = shard(ManualClock::new(0));
+        assert_eq!(dst.apply_access_delta(&body).unwrap(), 0, "no rows yet: skipped, not error");
+
+        // Every truncation and every single-byte corruption must return
+        // (Ok or Err) — never panic or allocate unboundedly.
+        for n in 0..body.len() {
+            let _ = dst.apply_access_delta(&body[..n]);
+        }
+        for i in 0..body.len() {
+            let mut mutated = body.clone();
+            mutated[i] ^= 0xFF;
+            let _ = dst.apply_access_delta(&mutated);
+        }
+
+        // A record claiming absurd table counts errors cleanly.
+        let mut w = crate::codec::Writer::with_capacity(16);
+        w.put_u32(0);
+        w.put_varint(0);
+        w.put_varint(u32::MAX as u64);
+        assert!(dst.apply_access_delta(&w.into_bytes()).is_err());
+
+        // Unknown table names are advisory no-ops.
+        let mut w = crate::codec::Writer::with_capacity(32);
+        w.put_u32(0);
+        w.put_varint(0);
+        w.put_varint(1);
+        w.put_str("no-such-table");
+        w.put_varint(1);
+        w.put_varint(7);
+        w.put_varint(123);
+        assert_eq!(dst.apply_access_delta(&w.into_bytes()).unwrap(), 0);
     }
 
     #[test]

@@ -24,5 +24,5 @@ pub use collector::{Collector, DirtyEvent, DirtyOp};
 pub use gather::{Gather, GatherStats};
 pub use pusher::{Pusher, PusherStats};
 pub use router::Router;
-pub use scatter::{Scatter, ScatterStats};
+pub use scatter::{Scatter, ScatterStats, ScatterTap};
 pub use transform::{EmbeddingOnly, FullRows, ServingWeights, Transform};

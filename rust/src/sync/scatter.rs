@@ -27,6 +27,18 @@ use crate::util::clock::Clock;
 use crate::util::{Histogram, ThreadPool};
 use crate::{Error, Result};
 
+/// Observer of applied sync batches — the coherence channel for any
+/// read-side cache layered over the slave (the worker's hot-id cache
+/// registers one). Taps run inside [`Scatter::poll`] *after* the run is
+/// applied to the serving tables and *before* the poll returns, which is
+/// what makes the cache freshness guarantee hard: a pushed update is
+/// invalidated out of every tap-subscribed cache within the same sync
+/// tick that made it pull-visible — no TTL involved.
+pub trait ScatterTap: Send + Sync {
+    /// Called once per applying poll with the batches just applied.
+    fn on_applied(&self, batches: &[SyncBatch]);
+}
+
 /// Scatter-side accounting (E1: sync latency lives here).
 #[derive(Debug, Default)]
 pub struct ScatterStats {
@@ -62,6 +74,8 @@ pub struct Scatter {
     /// Registry histogram behind `weips_push_visible_latency_seconds`
     /// for this replica; records created_ms -> applied latency in ns.
     visible_hist: Arc<Histogram>,
+    /// Applied-batch observers (read-side cache invalidation).
+    taps: Vec<Arc<dyn ScatterTap>>,
 }
 
 impl Scatter {
@@ -131,7 +145,15 @@ impl Scatter {
             pending: Vec::new(),
             stats,
             visible_hist,
+            taps: Vec::new(),
         }
+    }
+
+    /// Register an applied-batch observer (e.g. a hot-id cache's
+    /// invalidation hook). Taps see every batch this scatter applies,
+    /// within the applying poll.
+    pub fn add_tap(&mut self, tap: Arc<dyn ScatterTap>) {
+        self.taps.push(tap);
     }
 
     /// Partitions this scatter consumes.
@@ -244,6 +266,11 @@ impl Scatter {
         }
         let applied = self.pending.len();
         let outcome = self.slave.apply_batches_pooled(&self.pending, self.pool.as_deref());
+        // Taps fire after the serving tables hold the new rows and before
+        // this poll returns — the one-tick cache-coherence window.
+        for tap in &self.taps {
+            tap.on_applied(&self.pending);
+        }
         let now = self.clock.now_ms();
         for b in &self.pending {
             let lat_ms = now.saturating_sub(b.created_ms);

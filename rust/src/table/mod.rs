@@ -1201,6 +1201,90 @@ impl StripedSparseTable {
         (rows, graves)
     }
 
+    /// Split dirty census since `since`: (value-dirty rows, tombstones,
+    /// access-only rows). A row is access-only when a pull refreshed its
+    /// `last_access_ms` after the cut but no value mutation did — the
+    /// case the WAL can journal as a metadata-only record instead of
+    /// shipping full rows.
+    pub fn dirty_counts_split(&self, since: u64) -> (usize, usize, usize) {
+        let mut rows = 0;
+        let mut graves = 0;
+        let mut access = 0;
+        for stripe in &self.stripes {
+            let s = stripe.read().unwrap();
+            if s.max_epoch <= since {
+                continue;
+            }
+            for r in s.rows.values() {
+                if r.epoch > since {
+                    rows += 1;
+                } else if r.access_epoch > since {
+                    access += 1;
+                }
+            }
+            graves += s.graves.values().filter(|&&e| e > since).count();
+        }
+        (rows, graves, access)
+    }
+
+    /// Collect `(id, last_access_ms)` for access-only rows since `since`
+    /// — the payload of a metadata-only WAL record. Sorted by id
+    /// (deterministic bytes for any stripe count); takes stripe read
+    /// locks only.
+    pub fn collect_access_stamps(&self, since: u64) -> Vec<(u64, u64)> {
+        let mut stamps = Vec::new();
+        for stripe in &self.stripes {
+            let s = stripe.read().unwrap();
+            if s.max_epoch <= since {
+                continue;
+            }
+            for (id, r) in &s.rows {
+                if r.epoch <= since && r.access_epoch > since {
+                    stamps.push((*id, r.last_access_ms));
+                }
+            }
+        }
+        stamps.sort_unstable_by_key(|&(id, _)| id);
+        stamps
+    }
+
+    /// Apply access stamps from a metadata-only WAL record: move each
+    /// surviving row's `last_access_ms` forward (never backward —
+    /// replays are idempotent and may interleave with fresher traffic)
+    /// and re-stamp its `access_epoch` with the current write epoch so
+    /// the next checkpoint delta captures the freshness. Ids with no row
+    /// are skipped: the stamp is advisory metadata, not a value. Returns
+    /// rows refreshed.
+    pub fn apply_access_stamps(&self, stamps: &[(u64, u64)]) -> usize {
+        let mut refreshed = 0usize;
+        let ids: Vec<u64> = stamps.iter().map(|&(id, _)| id).collect();
+        for (stripe, (positions, sids)) in self.group_by_stripe(&ids).into_iter().enumerate() {
+            if sids.is_empty() {
+                continue;
+            }
+            let mut s = self.stripes[stripe].write().unwrap();
+            let epoch = self.write_epoch.load(Ordering::Relaxed);
+            let mut touched = false;
+            for (&pos, id) in positions.iter().zip(&sids) {
+                let last_access_ms = stamps[pos].1;
+                if let Some(row) = s.rows.get_mut(id) {
+                    if row.last_access_ms < last_access_ms {
+                        row.last_access_ms = last_access_ms;
+                        if row.access_epoch < epoch {
+                            row.access_epoch = epoch;
+                        }
+                        touched = true;
+                        refreshed += 1;
+                    }
+                }
+            }
+            if touched {
+                s.max_epoch = s.max_epoch.max(epoch);
+            }
+        }
+        refreshed
+    }
+
     /// Drop tombstones stamped `<= through`. Called after the checkpoint
     /// that sealed them: every future delta's `since` is at least
     /// `through`, so those graves can never be collected again.

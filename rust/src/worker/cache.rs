@@ -1,0 +1,438 @@
+//! Predictor-side hot-id cache with epoch-based invalidation (§3.1).
+//!
+//! Online-serving reads are extremely skewed: a small set of hot ids
+//! (fresh users, trending items) dominates the pull stream. Caching them
+//! at the worker removes the RPC round-trip — but a TTL cache would
+//! reintroduce exactly the staleness the streaming channel exists to
+//! eliminate. Instead the cache *subscribes* to the same update stream
+//! that keeps slaves fresh: it is registered as a [`ScatterTap`] on the
+//! local scatter, and every applied [`SyncBatch`] invalidates the touched
+//! ids before the scatter's poll returns. The coherence guarantee is
+//! therefore structural, not temporal: a pushed update is visible to
+//! cached reads within one sync tick, the same bound the serving tables
+//! themselves have. No clock is involved anywhere.
+//!
+//! Fill race: a reader may capture a value from a slave, lose the CPU,
+//! and insert it *after* the scatter invalidated that id — resurrecting
+//! the stale row with no future invalidation to evict it (the stream
+//! only carries each update once). The cache closes this with a global
+//! invalidation tick: readers snapshot the tick before fetching
+//! ([`HotIdCache::fill_tick`]) and the insert is dropped when the id's
+//! stripe was invalidated after the snapshot. Skip-on-doubt: a dropped
+//! insert only costs the next read a miss, never correctness.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock, Weak};
+
+use crate::proto::SyncBatch;
+use crate::sync::ScatterTap;
+use crate::util::fxhash64;
+
+/// Stripe count for both the per-table maps and the invalidation ticks.
+/// Power of two; bounds writer contention between the scatter thread and
+/// concurrent predictor reads.
+const STRIPES: usize = 64;
+
+#[inline]
+fn stripe_of(id: u64) -> usize {
+    (fxhash64(id) as usize) & (STRIPES - 1)
+}
+
+/// Hit/miss/invalidation accounting, sampled into the metrics registry
+/// via [`HotIdCache::register_metrics`].
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub invalidations: AtomicU64,
+    pub inserts: AtomicU64,
+    /// Inserts dropped by the fill-race guard or the capacity cap.
+    pub rejected_inserts: AtomicU64,
+}
+
+/// One sparse table's cached rows. Width is learned from the first
+/// filled row and is stable per table (serving width is fixed by the
+/// slave's transform config).
+struct TableCache {
+    width: AtomicU32,
+    stripes: Vec<RwLock<HashMap<u64, Box<[f32]>>>>,
+}
+
+impl TableCache {
+    fn new() -> Arc<TableCache> {
+        Arc::new(TableCache {
+            width: AtomicU32::new(0),
+            stripes: (0..STRIPES).map(|_| RwLock::new(HashMap::new())).collect(),
+        })
+    }
+}
+
+/// The worker-side hot-id cache. Shared between the serving client
+/// (reads + fills) and the scatter (invalidations via [`ScatterTap`]).
+pub struct HotIdCache {
+    tables: RwLock<HashMap<String, Arc<TableCache>>>,
+    /// Dense tables cached wholesale (they sync as full snapshots).
+    dense: RwLock<HashMap<String, Arc<[f32]>>>,
+    /// Per-stripe last-invalidation tick, shared across tables so the
+    /// fill-race guard holds even for a table's very first fill (the
+    /// stripe tick exists before the table map does).
+    stripe_ticks: Vec<AtomicU64>,
+    /// Tick guarding dense snapshots (dense tables have no stripes).
+    dense_tick: AtomicU64,
+    /// Global invalidation tick; bumped once per applied batch set.
+    tick: AtomicU64,
+    /// Soft cap on cached sparse rows across all tables; inserts beyond
+    /// it are dropped (the working set keeps itself hot via misses).
+    capacity_rows: u64,
+    rows: AtomicU64,
+    pub stats: CacheStats,
+}
+
+impl HotIdCache {
+    /// New cache bounded to `capacity_rows` sparse rows (0 = cache
+    /// nothing sparse; dense snapshots are always cached).
+    pub fn new(capacity_rows: u64) -> Arc<HotIdCache> {
+        Arc::new(HotIdCache {
+            tables: RwLock::new(HashMap::new()),
+            dense: RwLock::new(HashMap::new()),
+            stripe_ticks: (0..STRIPES).map(|_| AtomicU64::new(0)).collect(),
+            dense_tick: AtomicU64::new(0),
+            tick: AtomicU64::new(0),
+            capacity_rows,
+            rows: AtomicU64::new(0),
+            stats: CacheStats::default(),
+        })
+    }
+
+    /// Expose hit/miss/invalidation counters under the given role label.
+    /// Samplers hold a `Weak`; dropping the cache prunes them.
+    pub fn register_metrics(self: &Arc<Self>, role: &str) {
+        type Get = fn(&HotIdCache) -> u64;
+        let series: [(&'static str, Get); 3] = [
+            ("weips_cache_hits_total", |c| c.stats.hits.load(Ordering::Relaxed)),
+            ("weips_cache_misses_total", |c| c.stats.misses.load(Ordering::Relaxed)),
+            ("weips_cache_invalidations_total", |c| {
+                c.stats.invalidations.load(Ordering::Relaxed)
+            }),
+        ];
+        for (name, get) in series {
+            let weak: Weak<HotIdCache> = Arc::downgrade(self);
+            crate::metrics::register_fn(
+                name,
+                &[("role", role.to_string())],
+                Box::new(move || weak.upgrade().map(|c| get(&c) as f64)),
+            );
+        }
+    }
+
+    /// Snapshot the invalidation tick *before* probing/fetching a fill
+    /// round; pass it back to [`insert`](Self::insert) so racing
+    /// invalidations win over the fill.
+    pub fn fill_tick(&self) -> u64 {
+        self.tick.load(Ordering::SeqCst)
+    }
+
+    /// Serving width for `table`, if any row was ever cached for it.
+    pub fn width(&self, table: &str) -> Option<u32> {
+        let tc = self.tables.read().unwrap().get(table).cloned()?;
+        match tc.width.load(Ordering::Relaxed) {
+            0 => None,
+            w => Some(w),
+        }
+    }
+
+    /// Copy the cached row for `(table, id)` into `out`; false on miss
+    /// (including width mismatch, which never happens in practice).
+    pub fn copy_into(&self, table: &str, id: u64, out: &mut [f32]) -> bool {
+        let Some(tc) = self.tables.read().unwrap().get(table).cloned() else {
+            self.stats.misses.fetch_add(1, Ordering::Relaxed);
+            return false;
+        };
+        let map = tc.stripes[stripe_of(id)].read().unwrap();
+        match map.get(&id) {
+            Some(row) if row.len() == out.len() => {
+                out.copy_from_slice(row);
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            _ => {
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                false
+            }
+        }
+    }
+
+    /// Insert a freshly fetched row. `fill_tick` must predate the remote
+    /// fetch; the insert is dropped when the id's stripe was invalidated
+    /// since (the fetched bytes may predate the invalidating update) or
+    /// when the cache is at capacity.
+    pub fn insert(&self, table: &str, id: u64, values: &[f32], fill_tick: u64) {
+        if self.capacity_rows == 0 || values.is_empty() {
+            return;
+        }
+        let stripe = stripe_of(id);
+        if self.stripe_ticks[stripe].load(Ordering::SeqCst) > fill_tick {
+            self.stats.rejected_inserts.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let tc = {
+            let tables = self.tables.read().unwrap();
+            match tables.get(table) {
+                Some(tc) => tc.clone(),
+                None => {
+                    drop(tables);
+                    self.tables
+                        .write()
+                        .unwrap()
+                        .entry(table.to_string())
+                        .or_insert_with(TableCache::new)
+                        .clone()
+                }
+            }
+        };
+        tc.width.store(values.len() as u32, Ordering::Relaxed);
+        let mut map = tc.stripes[stripe].write().unwrap();
+        // Re-check under the stripe write lock: an invalidation that ran
+        // between the guard check and lock acquisition must still win.
+        if self.stripe_ticks[stripe].load(Ordering::SeqCst) > fill_tick {
+            self.stats.rejected_inserts.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        match map.entry(id) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                e.insert(values.into());
+                self.stats.inserts.fetch_add(1, Ordering::Relaxed);
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                if self.rows.load(Ordering::Relaxed) >= self.capacity_rows {
+                    self.stats.rejected_inserts.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                self.rows.fetch_add(1, Ordering::Relaxed);
+                e.insert(values.into());
+                self.stats.inserts.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Cached dense snapshot for `table`.
+    pub fn dense_get(&self, table: &str) -> Option<Arc<[f32]>> {
+        let hit = self.dense.read().unwrap().get(table).cloned();
+        match hit {
+            Some(v) => {
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            None => {
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Cache a dense snapshot fetched after `fill_tick` was captured.
+    pub fn dense_insert(&self, table: &str, values: Vec<f32>, fill_tick: u64) {
+        if self.dense_tick.load(Ordering::SeqCst) > fill_tick {
+            self.stats.rejected_inserts.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let mut dense = self.dense.write().unwrap();
+        if self.dense_tick.load(Ordering::SeqCst) > fill_tick {
+            self.stats.rejected_inserts.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        dense.insert(table.to_string(), values.into());
+        self.stats.inserts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Cached sparse rows across all tables (approximate under races).
+    pub fn len(&self) -> u64 {
+        self.rows.load(Ordering::Relaxed)
+    }
+
+    /// True when no sparse row is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop everything (tests; also useful after a full resync).
+    pub fn clear(&self) {
+        let tick = self.tick.fetch_add(1, Ordering::SeqCst) + 1;
+        for t in &self.stripe_ticks {
+            t.store(tick, Ordering::SeqCst);
+        }
+        self.dense_tick.store(tick, Ordering::SeqCst);
+        for tc in self.tables.read().unwrap().values() {
+            for s in &tc.stripes {
+                s.write().unwrap().clear();
+            }
+        }
+        self.dense.write().unwrap().clear();
+        self.rows.store(0, Ordering::Relaxed);
+    }
+
+    /// Cumulative hit rate in `[0, 1]` (0 when nothing was probed).
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.stats.hits.load(Ordering::Relaxed) as f64;
+        let m = self.stats.misses.load(Ordering::Relaxed) as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+}
+
+impl ScatterTap for HotIdCache {
+    /// Invalidate every id the scatter just applied. Runs on the scatter
+    /// thread inside `poll()` — *before* the poll returns — which is what
+    /// makes "visible within one sync tick" a hard guarantee rather than
+    /// a TTL hope. Tick ordering: the global tick and the touched stripe
+    /// ticks are bumped first, so any in-flight fill that fetched
+    /// pre-apply bytes fails its guard check.
+    fn on_applied(&self, batches: &[SyncBatch]) {
+        if batches.is_empty() {
+            return;
+        }
+        let tick = self.tick.fetch_add(1, Ordering::SeqCst) + 1;
+        let tables = self.tables.read().unwrap();
+        for batch in batches {
+            if !batch.dense.is_empty() {
+                self.dense_tick.store(tick, Ordering::SeqCst);
+                if self.dense.write().unwrap().remove(&batch.table).is_some() {
+                    self.stats.invalidations.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            if batch.entries.is_empty() {
+                continue;
+            }
+            let tc = tables.get(&batch.table);
+            for entry in &batch.entries {
+                let stripe = stripe_of(entry.id);
+                self.stripe_ticks[stripe].store(tick, Ordering::SeqCst);
+                if let Some(tc) = tc {
+                    if tc.stripes[stripe].write().unwrap().remove(&entry.id).is_some() {
+                        self.rows.fetch_sub(1, Ordering::Relaxed);
+                        self.stats.invalidations.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::{SyncEntry, SyncOp};
+
+    fn batch(table: &str, ids: &[u64]) -> SyncBatch {
+        SyncBatch {
+            model: "m".into(),
+            table: table.into(),
+            shard: 0,
+            seq: 1,
+            created_ms: 0,
+            entries: ids
+                .iter()
+                .map(|&id| SyncEntry { id, op: SyncOp::Upsert(vec![1.0]) })
+                .collect(),
+            dense: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn hit_after_insert_miss_after_invalidate() {
+        let cache = HotIdCache::new(1024);
+        let tick = cache.fill_tick();
+        cache.insert("w", 7, &[0.5, 0.25], tick);
+        let mut out = [0.0f32; 2];
+        assert!(cache.copy_into("w", 7, &mut out));
+        assert_eq!(out, [0.5, 0.25]);
+        assert_eq!(cache.width("w"), Some(2));
+
+        cache.on_applied(&[batch("w", &[7])]);
+        assert!(!cache.copy_into("w", 7, &mut out));
+        assert_eq!(cache.stats.invalidations.load(Ordering::Relaxed), 1);
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn racing_invalidation_beats_stale_fill() {
+        let cache = HotIdCache::new(1024);
+        // Reader snapshots the tick, then the scatter applies an update
+        // for the id before the reader's insert lands.
+        let stale_tick = cache.fill_tick();
+        cache.on_applied(&[batch("w", &[7])]);
+        cache.insert("w", 7, &[9.0], stale_tick);
+        let mut out = [0.0f32];
+        assert!(!cache.copy_into("w", 7, &mut out), "stale fill must not stick");
+        assert_eq!(cache.stats.rejected_inserts.load(Ordering::Relaxed), 1);
+        // A fill that starts after the invalidation is fine.
+        cache.insert("w", 7, &[2.0], cache.fill_tick());
+        assert!(cache.copy_into("w", 7, &mut out));
+        assert_eq!(out, [2.0]);
+    }
+
+    #[test]
+    fn invalidation_guards_table_never_filled_yet() {
+        let cache = HotIdCache::new(1024);
+        // First-ever fill for table "v" races an invalidation for the
+        // same id: the stripe tick exists independently of the table map,
+        // so the guard still rejects the insert.
+        let stale_tick = cache.fill_tick();
+        cache.on_applied(&[batch("v", &[42])]);
+        cache.insert("v", 42, &[1.0], stale_tick);
+        let mut out = [0.0f32];
+        assert!(!cache.copy_into("v", 42, &mut out));
+    }
+
+    #[test]
+    fn capacity_caps_new_rows_but_allows_updates() {
+        let cache = HotIdCache::new(2);
+        let t = cache.fill_tick();
+        cache.insert("w", 1, &[1.0], t);
+        cache.insert("w", 2, &[2.0], t);
+        cache.insert("w", 3, &[3.0], t); // over cap: dropped
+        assert_eq!(cache.len(), 2);
+        let mut out = [0.0f32];
+        assert!(!cache.copy_into("w", 3, &mut out));
+        // Overwriting an existing row is not growth.
+        cache.insert("w", 1, &[1.5], cache.fill_tick());
+        assert!(cache.copy_into("w", 1, &mut out));
+        assert_eq!(out, [1.5]);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn dense_snapshot_invalidated_by_dense_batch() {
+        let cache = HotIdCache::new(16);
+        let t = cache.fill_tick();
+        cache.dense_insert("bias", vec![0.1, 0.2], t);
+        assert_eq!(cache.dense_get("bias").unwrap().as_ref(), &[0.1, 0.2]);
+        let dense_batch = SyncBatch {
+            model: "m".into(),
+            table: "bias".into(),
+            shard: 0,
+            seq: 2,
+            created_ms: 0,
+            entries: Vec::new(),
+            dense: vec![0.3, 0.4],
+        };
+        cache.on_applied(&[dense_batch]);
+        assert!(cache.dense_get("bias").is_none());
+        // Stale dense fill captured before the invalidation is rejected.
+        cache.dense_insert("bias", vec![0.1, 0.2], t);
+        assert!(cache.dense_get("bias").is_none());
+    }
+
+    #[test]
+    fn zero_capacity_disables_sparse_caching() {
+        let cache = HotIdCache::new(0);
+        cache.insert("w", 1, &[1.0], cache.fill_tick());
+        let mut out = [0.0f32];
+        assert!(!cache.copy_into("w", 1, &mut out));
+        assert_eq!(cache.len(), 0);
+    }
+}

@@ -20,7 +20,16 @@ use crate::replica::{Endpoint, ReplicaGroup};
 use crate::server::methods;
 use crate::server::slave::SlaveShard;
 use crate::sync::router::Router;
+use crate::worker::cache::HotIdCache;
 use crate::{Error, Result};
+
+/// Hook invoked on a stale-route NACK before the retry re-splits: given
+/// the client's router, refresh it from the authoritative published slot
+/// map (a `FETCH_SLOT_MAP` RPC + `Router::install`, see
+/// `cli::roles::route_refresher`). A callback keeps the client
+/// transport-agnostic: in-process clients share the coordinator's router
+/// cell and need no refresher at all.
+pub type RouteRefresher = Arc<dyn Fn(&Router) + Send + Sync>;
 
 /// Retry budget for routing-epoch NACKs: a push caught inside a
 /// migration hand-off window re-splits and retries until the slot-map
@@ -45,6 +54,9 @@ pub struct ShardedClient {
     /// Stale-route NACKs absorbed by the retry loop (visibility for
     /// migration drills; never user-facing unless the budget runs out).
     pub stale_retries: std::sync::atomic::AtomicU64,
+    /// Re-fetches the published slot map on stale-route NACKs, so remote
+    /// trainers converge on a cutover without waiting out the window.
+    refresher: Option<RouteRefresher>,
 }
 
 impl ShardedClient {
@@ -64,12 +76,23 @@ impl ShardedClient {
             router,
             shards,
             stale_retries: std::sync::atomic::AtomicU64::new(0),
+            refresher: None,
         }
     }
 
     /// Master shard count.
     pub fn shard_count(&self) -> usize {
         self.shards.len()
+    }
+
+    /// The client's routing view (shared cell when built `with_router`).
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Install the stale-route refresh hook (see [`RouteRefresher`]).
+    pub fn set_route_refresher(&mut self, refresher: RouteRefresher) {
+        self.refresher = Some(refresher);
     }
 
     /// Pull `slot` of `table` for `ids` (any length); returns values in
@@ -84,6 +107,9 @@ impl ShardedClient {
                 Err(e) if e.is_stale_route() && attempts + 1 < STALE_PULL_RETRIES => {
                     attempts += 1;
                     self.stale_retries.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if let Some(refresh) = &self.refresher {
+                        refresh(&self.router);
+                    }
                     std::thread::sleep(STALE_PULL_BACKOFF);
                 }
                 outcome => return outcome,
@@ -204,6 +230,15 @@ impl ShardedClient {
                     "push not accepted after {STALE_ROUTE_RETRIES} routing retries"
                 )));
             }
+            // Throttled refresh: a 2 ms retry cadence would hammer the
+            // publisher with 500 map fetches a second for a window the
+            // epoch bump resolves anyway; every 50th retry (~100 ms) is
+            // plenty for a remote trainer to catch the cutover.
+            if attempts % 50 == 1 {
+                if let Some(refresh) = &self.refresher {
+                    refresh(&self.router);
+                }
+            }
             std::thread::sleep(STALE_ROUTE_BACKOFF);
             let again_ids = std::mem::take(&mut pending_ids);
             let again_grads = std::mem::take(&mut pending_grads);
@@ -268,13 +303,24 @@ impl Endpoint for SlaveEndpoint {
 }
 
 /// Predictor-profile client over the slave cluster: one replica group per
-/// slave shard, failover on every read.
+/// slave shard, failover on every read, and (when attached) a hot-id
+/// cache that short-circuits the RPC entirely for ids the streaming
+/// scatter has not invalidated since they were fetched.
 pub struct SlaveClient {
     model: String,
     router: Router,
     groups: Vec<Arc<ReplicaGroup<SlaveEndpoint>>>,
     /// Failover attempts per read.
     attempts: usize,
+    /// Hot-id cache, coherent via the scatter tap (see [`HotIdCache`]).
+    cache: Option<Arc<HotIdCache>>,
+    /// Per-shard remote pull latency (cache misses only).
+    fanout_hist: Option<Arc<crate::util::Histogram>>,
+    /// Refreshes the router from the published slot map on stale-route
+    /// NACKs (remote predictors; in-process clients share the cell).
+    refresher: Option<RouteRefresher>,
+    /// Stale-route NACKs absorbed by the pull retry loop.
+    pub stale_retries: std::sync::atomic::AtomicU64,
 }
 
 impl SlaveClient {
@@ -293,7 +339,16 @@ impl SlaveClient {
         groups: Vec<Arc<ReplicaGroup<SlaveEndpoint>>>,
         router: Router,
     ) -> SlaveClient {
-        SlaveClient { model: model.to_string(), router, groups, attempts: 3 }
+        SlaveClient {
+            model: model.to_string(),
+            router,
+            groups,
+            attempts: 3,
+            cache: None,
+            fanout_hist: None,
+            refresher: None,
+            stale_retries: std::sync::atomic::AtomicU64::new(0),
+        }
     }
 
     /// Slave shard count.
@@ -306,14 +361,131 @@ impl SlaveClient {
         &self.groups[shard]
     }
 
-    /// Pull serving values for `ids` in request order.
+    /// The client's routing view (shared cell when built `with_router`).
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Attach a hot-id cache. The caller is responsible for also
+    /// registering the same cache as a scatter tap
+    /// ([`crate::sync::Scatter::add_tap`]) — an untapped cache would
+    /// serve stale rows forever, which is worse than no cache.
+    pub fn set_cache(&mut self, cache: Arc<HotIdCache>) {
+        self.cache = Some(cache);
+    }
+
+    /// The attached cache, if any (stats access in benches/tests).
+    pub fn cache(&self) -> Option<&Arc<HotIdCache>> {
+        self.cache.as_ref()
+    }
+
+    /// Install the stale-route refresh hook (see [`RouteRefresher`]).
+    pub fn set_route_refresher(&mut self, refresher: RouteRefresher) {
+        self.refresher = Some(refresher);
+    }
+
+    /// Export read-path series (fan-out latency histogram + the attached
+    /// cache's counters) under the given role label.
+    pub fn register_metrics(&mut self, role: &str) {
+        self.fanout_hist = Some(crate::metrics::histogram(
+            "weips_pull_fanout_latency_seconds",
+            &[("role", role.to_string())],
+        ));
+        if let Some(cache) = &self.cache {
+            cache.register_metrics(role);
+        }
+    }
+
+    /// Pull serving values for `ids` in request order. Cached ids are
+    /// served locally; only misses fan out to the replica groups. A
+    /// stale-route NACK (pull raced a serving-side cutover) refreshes
+    /// the route (when a refresher is installed) and retries wholesale.
     pub fn sparse_pull(&self, table: &str, ids: &[u64]) -> Result<(u32, Vec<f32>)> {
+        let mut attempts = 0;
+        loop {
+            let outcome = match &self.cache {
+                Some(cache) => self.pull_through_cache(cache, table, ids),
+                None => self.pull_remote(table, ids),
+            };
+            match outcome {
+                Err(e) if e.is_stale_route() && attempts + 1 < STALE_PULL_RETRIES => {
+                    attempts += 1;
+                    self.stale_retries.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if let Some(refresh) = &self.refresher {
+                        refresh(&self.router);
+                    }
+                    std::thread::sleep(STALE_PULL_BACKOFF);
+                }
+                outcome => return outcome,
+            }
+        }
+    }
+
+    /// Cache-aware pull: probe everything first (against a pre-captured
+    /// invalidation tick), then fetch only the misses remotely and fill
+    /// them back. Output is byte-identical to the uncached path — the
+    /// cache stores exactly the serving rows the slaves return.
+    fn pull_through_cache(
+        &self,
+        cache: &Arc<HotIdCache>,
+        table: &str,
+        ids: &[u64],
+    ) -> Result<(u32, Vec<f32>)> {
+        let fill_tick = cache.fill_tick();
+        let mut width = cache.width(table).unwrap_or(0) as usize;
+        let mut out = vec![0.0f32; ids.len() * width];
+        let mut missing: Vec<(usize, u64)> = Vec::new();
+        if width == 0 {
+            // Nothing ever cached for this table: everything misses.
+            missing.extend(ids.iter().copied().enumerate());
+            cache
+                .stats
+                .misses
+                .fetch_add(ids.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        } else {
+            for (pos, &id) in ids.iter().enumerate() {
+                if !cache.copy_into(table, id, &mut out[pos * width..(pos + 1) * width]) {
+                    missing.push((pos, id));
+                }
+            }
+        }
+        if missing.is_empty() {
+            return Ok((width as u32, out));
+        }
+        let miss_ids: Vec<u64> = missing.iter().map(|&(_, id)| id).collect();
+        let (remote_width, fetched) = self.pull_remote(table, &miss_ids)?;
+        let rw = remote_width as usize;
+        if width == 0 {
+            width = rw;
+            out = vec![0.0f32; ids.len() * width];
+        } else if rw != width {
+            return Err(Error::Rpc(format!(
+                "serving width changed under the cache: cached {width} vs remote {rw}"
+            )));
+        }
+        for (i, &(pos, id)) in missing.iter().enumerate() {
+            let row = &fetched[i * width..(i + 1) * width];
+            out[pos * width..(pos + 1) * width].copy_from_slice(row);
+            cache.insert(table, id, row, fill_tick);
+        }
+        Ok((width as u32, out))
+    }
+
+    /// The replica fan-out proper: split by slot map, one timed
+    /// failover call per touched shard.
+    fn pull_remote(&self, table: &str, ids: &[u64]) -> Result<(u32, Vec<f32>)> {
         let buckets = self.router.split_ids(ids);
         let mut width = 0u32;
         let mut out: Vec<f32> = Vec::new();
         for (shard, (positions, shard_ids)) in buckets.iter().enumerate() {
             if shard_ids.is_empty() {
                 continue;
+            }
+            if shard >= self.groups.len() {
+                return Err(Error::Routing(format!(
+                    "slot map routes to slave shard {shard} but client holds {} groups",
+                    self.groups.len()
+                )));
             }
             let req = SparsePull {
                 model: self.model.clone(),
@@ -322,8 +494,12 @@ impl SlaveClient {
                 slot: "w".to_string(),
             }
             .to_bytes();
+            let start = std::time::Instant::now();
             let resp_bytes = self.groups[shard]
                 .call_with_failover(self.attempts, |ep| ep.channel.call(methods::SPARSE_PULL, &req))?;
+            if let Some(hist) = &self.fanout_hist {
+                hist.record(start.elapsed().as_nanos() as u64);
+            }
             let resp = SparseValues::from_bytes(&resp_bytes)?;
             if width == 0 {
                 width = resp.width;
@@ -337,12 +513,28 @@ impl SlaveClient {
         Ok((width, out))
     }
 
-    /// Pull a dense table from any shard-0 replica.
+    /// Pull a dense table from any shard-0 replica (cached wholesale —
+    /// dense sync batches carry full snapshots, so invalidation is
+    /// per-table, not per-id).
     pub fn dense_pull(&self, table: &str) -> Result<Vec<f32>> {
+        let fill_tick = self.cache.as_ref().map(|c| c.fill_tick());
+        if let Some(cache) = &self.cache {
+            if let Some(hit) = cache.dense_get(table) {
+                return Ok(hit.to_vec());
+            }
+        }
         let req = DensePull { model: self.model.clone(), table: table.to_string() }.to_bytes();
+        let start = std::time::Instant::now();
         let resp = self.groups[0]
             .call_with_failover(self.attempts, |ep| ep.channel.call(methods::DENSE_PULL, &req))?;
-        Ok(DenseValues::from_bytes(&resp)?.values)
+        if let Some(hist) = &self.fanout_hist {
+            hist.record(start.elapsed().as_nanos() as u64);
+        }
+        let values = DenseValues::from_bytes(&resp)?.values;
+        if let (Some(cache), Some(tick)) = (&self.cache, fill_tick) {
+            cache.dense_insert(table, values.clone(), tick);
+        }
+        Ok(values)
     }
 }
 
@@ -520,6 +712,46 @@ mod tests {
         for (i, &id) in ids.iter().enumerate() {
             assert_eq!(vals[i], id as f32, "id {id}");
         }
+    }
+
+    #[test]
+    fn cached_pull_identical_and_invalidated_by_tap() {
+        use crate::proto::{SyncBatch, SyncEntry, SyncOp};
+        use crate::sync::ScatterTap;
+        use std::sync::atomic::Ordering;
+        let (mut client, slaves) = slave_cluster(2, 2);
+        let ids: Vec<u64> = (10..30).collect();
+        seed_slaves(&slaves, &ids);
+        let (uw, uncached) = client.sparse_pull("w", &ids).unwrap();
+
+        let cache = HotIdCache::new(1 << 16);
+        client.set_cache(cache.clone());
+        let (w1, first) = client.sparse_pull("w", &ids).unwrap(); // fill
+        let (w2, second) = client.sparse_pull("w", &ids).unwrap(); // all hits
+        assert_eq!((uw, &uncached), (w1, &first), "cache must be byte-identical");
+        assert_eq!(first, second);
+        assert!(cache.stats.hits.load(Ordering::Relaxed) >= ids.len() as u64);
+
+        // A streamed update applies to the serving tables, then hits the
+        // tap (same order as Scatter::poll): the next pull re-fetches.
+        let hot = ids[0];
+        let shard = Router::new(2).shard_of(hot) as usize;
+        let batch = SyncBatch {
+            model: "ctr".into(),
+            table: "w".into(),
+            shard: 0,
+            seq: 1,
+            created_ms: 0,
+            entries: vec![SyncEntry { id: hot, op: SyncOp::Upsert(vec![2.0, 1.0, 777.0]) }],
+            dense: vec![],
+        };
+        for replica in &slaves[shard] {
+            replica.apply_batch(&batch).unwrap();
+        }
+        cache.on_applied(std::slice::from_ref(&batch));
+        let (_, third) = client.sparse_pull("w", &ids).unwrap();
+        assert_eq!(third[0], 777.0, "update must be visible within one tick");
+        assert_eq!(&third[1..], &second[1..], "untouched ids still served");
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! Worker role (§3.1): trainer and predictor, plus the WeiPS-client.
 
+pub mod cache;
 pub mod client;
 pub mod predictor;
 pub mod trainer;
 
+pub use cache::HotIdCache;
 pub use client::{ShardedClient, SlaveClient, SlaveEndpoint};
 pub use predictor::Predictor;
 pub use trainer::Trainer;

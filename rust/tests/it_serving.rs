@@ -1,0 +1,363 @@
+//! Integration: the serving read path — hot-id cache coherence,
+//! replica-aware pull fan-out, and QoS admission control.
+//!
+//! Manual assembly, no AOT artifacts. Covers the four serving-path
+//! invariants end to end:
+//! - cached pulls are byte-identical to uncached pulls over the same
+//!   slave state, before and after streamed updates;
+//! - one-tick freshness through the *real* scatter: an update pushed to
+//!   a master and drained through gather -> queue -> scatter is visible
+//!   to the next cached pull, because the cache is invalidated inside
+//!   `Scatter::poll` before it returns;
+//! - the replica fan-out spreads serving load across a group's healthy
+//!   replicas (round-robin lease accounting);
+//! - QoS admission sheds over-cap bulk traffic with a typed NACK while
+//!   concurrent predict pulls keep flowing, uncorrupted.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use weips::config::{GatherMode, ModelKind, ModelSpec};
+use weips::net::{Channel, RpcOptions, RpcServer, Service};
+use weips::optim::{Ftrl, FtrlHyper, Optimizer};
+use weips::proto::{SparsePull, SyncBatch, SyncEntry, SyncOp};
+use weips::queue::Queue;
+use weips::replica::{BalancePolicy, ReplicaGroup};
+use weips::runtime::ModelConfig;
+use weips::server::master::{MasterService, MasterShard};
+use weips::server::slave::{SlaveService, SlaveShard};
+use weips::server::{default_qos_policy, methods};
+use weips::sync::{Gather, Pusher, Router, Scatter, ScatterTap, ServingWeights};
+use weips::util::clock::ManualClock;
+use weips::worker::{HotIdCache, ShardedClient, SlaveClient, SlaveEndpoint};
+use weips::Result;
+
+fn spec() -> ModelSpec {
+    let cfg = ModelConfig {
+        batch_train: 8,
+        batch_predict: 2,
+        fields: 4,
+        dim: 2,
+        hidden: 8,
+        ftrl_block_rows: 64,
+        ftrl_alpha: 0.05,
+        ftrl_beta: 1.0,
+        ftrl_l1: 1.0,
+        ftrl_l2: 1.0,
+    };
+    ModelSpec::derive("ctr", ModelKind::Fm, &cfg)
+}
+
+fn transform() -> Arc<ServingWeights> {
+    let ftrl: Arc<dyn Optimizer> = Arc::new(Ftrl::new(FtrlHyper::default()));
+    Arc::new(ServingWeights::new(vec![("w".into(), ftrl.clone(), 1), ("v".into(), ftrl, 2)]))
+}
+
+fn slave_shard(s: u32, r: u32, shards: u32) -> Arc<SlaveShard> {
+    Arc::new(SlaveShard::new(
+        s,
+        r,
+        "ctr",
+        vec![("w".into(), 1), ("v".into(), 2)],
+        vec![("bias".into(), 1)],
+        transform(),
+        Router::new(shards),
+    ))
+}
+
+/// Build `shards x replicas` slaves behind local channels.
+fn slave_fleet(
+    shards: u32,
+    replicas: u32,
+) -> (Vec<Arc<ReplicaGroup<SlaveEndpoint>>>, Vec<Vec<Arc<SlaveShard>>>) {
+    let mut groups = Vec::new();
+    let mut all = Vec::new();
+    for s in 0..shards {
+        let mut eps = Vec::new();
+        let mut reps = Vec::new();
+        for r in 0..replicas {
+            let shard = slave_shard(s, r, shards);
+            let ch = Channel::local(Arc::new(SlaveService { shard: shard.clone() }));
+            eps.push(Arc::new(SlaveEndpoint::local(ch, shard.clone())));
+            reps.push(shard);
+        }
+        groups.push(Arc::new(ReplicaGroup::new(eps, BalancePolicy::RoundRobin)));
+        all.push(reps);
+    }
+    (groups, all)
+}
+
+/// Apply one serving upsert to every replica of the owning shard.
+fn apply_row(slaves: &[Vec<Arc<SlaveShard>>], id: u64, value: f32) -> SyncBatch {
+    let router = Router::new(slaves.len() as u32);
+    let batch = SyncBatch {
+        model: "ctr".into(),
+        table: "w".into(),
+        shard: 0,
+        seq: 0,
+        created_ms: 0,
+        entries: vec![SyncEntry { id, op: SyncOp::Upsert(vec![2.0, 1.0, value]) }],
+        dense: vec![],
+    };
+    for replica in &slaves[router.shard_of(id) as usize] {
+        replica.apply_batch(&batch).unwrap();
+    }
+    batch
+}
+
+#[test]
+fn cached_pulls_byte_identical_to_uncached() {
+    let (groups, slaves) = slave_fleet(2, 2);
+    for id in 0..400u64 {
+        apply_row(&slaves, id, id as f32);
+    }
+    let uncached = SlaveClient::new("ctr", groups.clone());
+    let mut cached = SlaveClient::new("ctr", groups);
+    let cache = HotIdCache::new(1 << 16);
+    cached.set_cache(cache.clone());
+
+    // Several overlapping batches: fills, then hits, always identical.
+    for round in 0..5u64 {
+        let ids: Vec<u64> = (0..64).map(|j| (round * 37 + j * 3) % 400).collect();
+        assert_eq!(
+            uncached.sparse_pull("w", &ids).unwrap(),
+            cached.sparse_pull("w", &ids).unwrap(),
+            "round {round}"
+        );
+    }
+    assert!(cache.stats.hits.load(Ordering::Relaxed) > 0, "cache never hit");
+
+    // Streamed updates invalidate; identity must hold afterwards too.
+    for id in (0..400u64).step_by(5) {
+        let batch = apply_row(&slaves, id, id as f32 + 1000.0);
+        cache.on_applied(std::slice::from_ref(&batch));
+    }
+    let ids: Vec<u64> = (0..400).collect();
+    assert_eq!(
+        uncached.sparse_pull("w", &ids).unwrap(),
+        cached.sparse_pull("w", &ids).unwrap(),
+        "identity broken after invalidation round"
+    );
+}
+
+/// The real pipeline: master -> gather -> queue -> scatter(-> tap) ->
+/// slave, with the cache registered exactly as the coordinator wires it.
+#[test]
+fn one_tick_freshness_through_real_scatter() {
+    const MASTERS: u32 = 2;
+    let clock = Arc::new(ManualClock::new(0));
+    let queue = Queue::new(1 << 24);
+    let topic = queue.create_topic("sync.ctr", MASTERS as usize).unwrap();
+    let master_router = Router::new(MASTERS);
+
+    let mut masters = Vec::new();
+    let mut gathers = Vec::new();
+    let mut pushers = Vec::new();
+    for i in 0..MASTERS {
+        let m = Arc::new(MasterShard::new(i, spec(), None, 1, clock.clone()).unwrap());
+        gathers.push(Mutex::new(Gather::new(m.clone(), GatherMode::Realtime, clock.clone())));
+        pushers.push(Pusher::new(topic.clone(), i));
+        masters.push(m);
+    }
+    let shard = slave_shard(0, 0, 1);
+    let cache = HotIdCache::new(1 << 16);
+    let mut scatter = Scatter::new(topic.clone(), shard.clone(), MASTERS, 1, clock.clone());
+    scatter.add_tap(cache.clone());
+
+    let channels: Vec<Channel> = masters
+        .iter()
+        .map(|m| Channel::local(Arc::new(MasterService { shard: m.clone(), store: None })))
+        .collect();
+    let trainer = ShardedClient::with_router("ctr", channels, master_router);
+    let ch = Channel::local(Arc::new(SlaveService { shard: shard.clone() }));
+    let group = Arc::new(ReplicaGroup::new(
+        vec![Arc::new(SlaveEndpoint::local(ch, shard.clone()))],
+        BalancePolicy::RoundRobin,
+    ));
+    let mut serving = SlaveClient::new("ctr", vec![group]);
+    serving.set_cache(cache.clone());
+
+    let drain = |scatter: &mut Scatter| loop {
+        scatter.poll(Duration::ZERO).unwrap();
+        if scatter.lag() == 0 {
+            break;
+        }
+    };
+    let sync_tick = |scatter: &mut Scatter| {
+        for (g, p) in gathers.iter().zip(&pushers) {
+            let batches = g.lock().unwrap().flush_now();
+            p.push_all(&batches).unwrap();
+        }
+        drain(scatter);
+    };
+
+    let ids: Vec<u64> = (0..32).collect();
+    let grads = vec![2.0f32; ids.len()];
+    trainer.sparse_push("w", &ids, &grads).unwrap();
+    sync_tick(&mut scatter);
+
+    let (_, first) = serving.sparse_pull("w", &ids).unwrap(); // fill
+    let (_, second) = serving.sparse_pull("w", &ids).unwrap(); // hits
+    assert_eq!(first, second);
+    assert!(cache.stats.hits.load(Ordering::Relaxed) >= ids.len() as u64);
+
+    // Another gradient lands on the masters; until the scatter drains,
+    // cache and slave agree on the old value (both lag together)...
+    let grads = vec![1.0f32; ids.len()];
+    trainer.sparse_push("w", &ids, &grads).unwrap();
+    let (_, before_tick) = serving.sparse_pull("w", &ids).unwrap();
+    assert_eq!(before_tick, second, "cache must not outrun the slave");
+
+    // ...and one sync tick later the cached read serves the new value,
+    // byte-identical to reading the slave table directly.
+    sync_tick(&mut scatter);
+    let (_, after) = serving.sparse_pull("w", &ids).unwrap();
+    assert_ne!(after, second, "update never became visible");
+    let direct = shard
+        .sparse_pull(&SparsePull {
+            model: "ctr".into(),
+            table: "w".into(),
+            ids: ids.clone(),
+            slot: "w".into(),
+        })
+        .unwrap();
+    assert_eq!(after, direct.values, "cached read != slave truth after tick");
+    assert!(cache.stats.invalidations.load(Ordering::Relaxed) >= ids.len() as u64);
+}
+
+#[test]
+fn replica_fanout_splits_load() {
+    let (groups, slaves) = slave_fleet(1, 3);
+    for id in 0..32u64 {
+        apply_row(&slaves, id, id as f32);
+    }
+    let client = SlaveClient::new("ctr", groups);
+    for i in 0..30u64 {
+        let ids: Vec<u64> = (0..8).map(|j| (i + j) % 32).collect();
+        client.sparse_pull("w", &ids).unwrap();
+    }
+    let served = client.group(0).served_counts();
+    assert_eq!(served.iter().sum::<u64>(), 30);
+    assert!(
+        served.iter().all(|&c| c >= 9),
+        "round-robin fan-out skewed: {served:?}"
+    );
+    assert_eq!(client.group(0).mean_latency_ns().len(), 3);
+
+    // A dead replica's share fails over to the survivors.
+    slaves[0][0].set_healthy(false);
+    for i in 0..12u64 {
+        let ids: Vec<u64> = (0..8).map(|j| (i + j) % 32).collect();
+        client.sparse_pull("w", &ids).unwrap();
+    }
+    let after = client.group(0).served_counts();
+    assert_eq!(after[0], served[0], "dead replica kept serving");
+    assert_eq!(after.iter().sum::<u64>(), 42);
+}
+
+/// Delegates predict traffic to a real slave; bulk methods park the
+/// handler long enough to hold their admission slot.
+struct SlowBulkSlave {
+    inner: SlaveService,
+    bulk_calls: AtomicU64,
+}
+
+impl Service for SlowBulkSlave {
+    fn call(&self, method: u16, payload: &[u8]) -> Result<Vec<u8>> {
+        if method == methods::MIGRATE_PULL {
+            self.bulk_calls.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(250));
+            return Ok(Vec::new());
+        }
+        self.inner.call(method, payload)
+    }
+}
+
+#[test]
+fn qos_sheds_bulk_with_typed_nack_while_pulls_flow() {
+    let shard = slave_shard(0, 0, 1);
+    for id in 0..64u64 {
+        let batch = SyncBatch {
+            model: "ctr".into(),
+            table: "w".into(),
+            shard: 0,
+            seq: 0,
+            created_ms: 0,
+            entries: vec![SyncEntry { id, op: SyncOp::Upsert(vec![2.0, 1.0, id as f32]) }],
+            dense: vec![],
+        };
+        shard.apply_batch(&batch).unwrap();
+    }
+    let svc = Arc::new(SlowBulkSlave {
+        inner: SlaveService { shard: shard.clone() },
+        bulk_calls: AtomicU64::new(0),
+    });
+    let server = RpcServer::serve_with(
+        "127.0.0.1:0",
+        svc.clone(),
+        RpcOptions { threads: 4, qos: Some(default_qos_policy(1)), ..RpcOptions::default() },
+    )
+    .unwrap();
+    let addr = server.addr().to_string();
+
+    // A bulk migration hammers the server from two threads; with a
+    // bulk cap of 1, at least one call must shed with the typed NACK.
+    let flood: Vec<_> = (0..2)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let ch = Channel::remote(&addr, Duration::from_secs(5));
+                let mut ok = 0u32;
+                let mut shed = 0u32;
+                for _ in 0..3 {
+                    match ch.call(methods::MIGRATE_PULL, &[]) {
+                        Ok(_) => ok += 1,
+                        Err(e) if e.is_overloaded() => shed += 1,
+                        Err(e) => panic!("bulk flood saw a non-typed error: {e}"),
+                    }
+                }
+                (ok, shed)
+            })
+        })
+        .collect();
+
+    // Meanwhile predict pulls keep flowing through the same server and
+    // stay byte-correct throughout the flood.
+    let ch = Channel::remote(&addr, Duration::from_secs(5));
+    let group = Arc::new(ReplicaGroup::new(
+        vec![Arc::new(SlaveEndpoint::remote(ch))],
+        BalancePolicy::RoundRobin,
+    ));
+    let client = SlaveClient::new("ctr", vec![group]);
+    let ids: Vec<u64> = (0..64).collect();
+    let expect: Vec<f32> = {
+        let direct = shard
+            .sparse_pull(&SparsePull {
+                model: "ctr".into(),
+                table: "w".into(),
+                ids: ids.clone(),
+                slot: "w".into(),
+            })
+            .unwrap();
+        direct.values
+    };
+    for _ in 0..40 {
+        let (_, vals) = client.sparse_pull("w", &ids).unwrap();
+        assert_eq!(vals, expect, "in-flight pull corrupted during bulk flood");
+    }
+
+    let (mut ok, mut shed) = (0u32, 0u32);
+    for h in flood {
+        let (o, s) = h.join().unwrap();
+        ok += o;
+        shed += s;
+    }
+    assert!(ok >= 1, "no bulk call ever ran");
+    assert!(shed >= 1, "bulk over cap was never shed");
+    assert_eq!(svc.bulk_calls.load(Ordering::Relaxed) as u32, ok, "shed call reached the service");
+    let stats = server.qos_stats().expect("qos enabled");
+    use weips::net::QosClass;
+    assert_eq!(stats[QosClass::Predict as usize].1, 0, "predict was shed: {stats:?}");
+    assert!(stats[QosClass::Bulk as usize].1 >= 1);
+}

@@ -16,6 +16,13 @@ Kinds:
   hand-off window as a fraction of total migration time per
   slots_moved case, and the catch-up round count.
 
+  serving — checks the E12 intra-run invariants (cached pulls
+  byte-identical to uncached, hot-set hit rate >= 0.5, cached p99 at
+  least 2x better than uncached, one-tick freshness) and, against a
+  non-provisional baseline, gates on the already host-normalized
+  shapes: the cached-vs-uncached p99 speedup, the hit rate, and the
+  cached/uncached throughput ratio per thread count.
+
 Machine-speed normalization: absolute rows/s on a CI runner is not
 comparable to the machine that recorded the baseline, so every comparison
 is normalized by the sequential case (stripes=1, threads=0) of the same
@@ -191,11 +198,79 @@ def check_reshard_against_baseline(baseline, current, tol):
     return failures
 
 
+SERVING_STAGES = ("pull_latency", "throughput", "freshness")
+
+
+def check_serving_intra(current):
+    """E12 invariants every serving run must hold, baseline or not."""
+    failures = []
+    stages = {r.get("stage") for r in current}
+    for need in SERVING_STAGES:
+        if need not in stages:
+            failures.append(f"stage {need}: no records")
+    for r in current:
+        if r.get("stage") == "pull_latency":
+            if not r.get("byte_identical"):
+                failures.append("pull_latency record is not byte_identical")
+            hit = _num(r, "hit_rate", "pull_latency", failures)
+            if hit is not None and hit < 0.5:
+                failures.append(f"pull_latency: hit rate {hit:.3f} < 0.5")
+            speedup = _num(r, "p99_speedup", "pull_latency", failures)
+            if speedup is not None and speedup < 2.0:
+                failures.append(f"pull_latency: cached p99 speedup {speedup:.2f}x < 2x")
+        if r.get("stage") == "freshness" and not r.get("one_tick"):
+            failures.append("freshness record lost the one-tick guarantee")
+        if r.get("stage") == "throughput":
+            _num(r, "pulls_per_sec", f"throughput threads={r.get('threads')}", failures)
+    return failures
+
+
+def check_serving_against_baseline(baseline, current, tol):
+    """The serving shapes are ratios of two same-host measurements, so
+    they compare across hosts without a sequential-case normalizer."""
+    failures = []
+    base = [r for r in baseline if r.get("stage") == "pull_latency"]
+    cur = [r for r in current if r.get("stage") == "pull_latency"]
+    if base and cur:
+        for field, floor_tag in (("p99_speedup", "speedup"), ("hit_rate", "hit rate")):
+            b = _num(base[0], field, "baseline pull_latency", failures)
+            c = _num(cur[0], field, "pull_latency", failures)
+            if b is None or c is None:
+                continue
+            if c < (1.0 - tol) * b:
+                failures.append(
+                    f"pull_latency: {floor_tag} {c:.3f} < "
+                    f"{(1.0 - tol) * b:.3f} (baseline {b:.3f})"
+                )
+    def ratios(records):
+        on = {r.get("threads"): r for r in records
+              if r.get("stage") == "throughput" and r.get("cached")}
+        off = {r.get("threads"): r for r in records
+               if r.get("stage") == "throughput" and not r.get("cached")}
+        out = {}
+        for t, r in on.items():
+            o = off.get(t)
+            if o and o.get("pulls_per_sec"):
+                out[t] = r.get("pulls_per_sec", 0) / o["pulls_per_sec"]
+        return out
+    b_ratio, c_ratio = ratios(baseline), ratios(current)
+    for t, b in b_ratio.items():
+        c = c_ratio.get(t)
+        if c is None:
+            failures.append(f"throughput threads={t}: missing from current run")
+        elif c < (1.0 - tol) * b:
+            failures.append(
+                f"throughput threads={t}: cached/uncached ratio "
+                f"{c:.2f} < {(1.0 - tol) * b:.2f} (baseline {b:.2f})"
+            )
+    return failures
+
+
 def main():
     args = sys.argv[1:]
     kind = "sync_pipeline"
     if args and args[0] == "--kind":
-        if len(args) < 2 or args[1] not in ("sync_pipeline", "reshard"):
+        if len(args) < 2 or args[1] not in ("sync_pipeline", "reshard", "serving"):
             print(__doc__)
             return 2
         kind = args[1]
@@ -209,6 +284,8 @@ def main():
 
     if kind == "reshard":
         failures = check_reshard_intra(current)
+    elif kind == "serving":
+        failures = check_serving_intra(current)
     else:
         failures = check_intra_run(current)
     provisional = any(r.get("stage") == "meta" and r.get("provisional") for r in baseline)
@@ -217,6 +294,8 @@ def main():
               f"(promote a CI artifact to {args[0]} to arm it)")
     elif kind == "reshard":
         failures += check_reshard_against_baseline(baseline, current, tol)
+    elif kind == "serving":
+        failures += check_serving_against_baseline(baseline, current, tol)
     else:
         failures += check_against_baseline(baseline, current, tol)
 

@@ -27,6 +27,12 @@ Kinds:
     - the identity record is byte_identical and the determinism record is
       identical + minimal_disruption;
     - not itself provisional.
+
+  serving — validates the E12 invariants run:
+    - every stage present (pull_latency, throughput, freshness);
+    - cached pulls byte-identical, hit rate >= 0.5, p99 speedup >= 2x,
+      one-tick freshness held;
+    - not itself provisional.
 """
 
 import json
@@ -40,6 +46,7 @@ from check_bench_regression import (  # noqa: E402
     by_case,
     check_intra_run,
     check_reshard_intra,
+    check_serving_intra,
 )
 
 
@@ -62,7 +69,15 @@ def validate_reshard(candidate):
     return check_reshard_intra(candidate)
 
 
-VALIDATORS = {"sync_pipeline": validate_sync_pipeline, "reshard": validate_reshard}
+def validate_serving(candidate):
+    return check_serving_intra(candidate)
+
+
+VALIDATORS = {
+    "sync_pipeline": validate_sync_pipeline,
+    "reshard": validate_reshard,
+    "serving": validate_serving,
+}
 
 
 def main():
