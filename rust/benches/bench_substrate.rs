@@ -1,19 +1,46 @@
 //! E9 — substrate micro-benchmarks supporting the E1/E3 analysis: queue
 //! append/fetch, sparse-table pull/push scaling, codec + compression, RPC
 //! round-trip (local and TCP).
+//!
+//! E13 — zero-copy substrate stages (the CI gate; `--smoke` /
+//! `WEIPS_BENCH_SMOKE=1` shrinks sizes and skips the E9 sweeps):
+//! - `framing`: vectored (`writev`-style) header+body emission vs the
+//!   scratch-buffer copy path, over a drained loopback socket;
+//! - `mmap_load`: mmap-backed checkpoint chunk loads vs streamed
+//!   `fs::read`, pages touched so the fault cost is paid;
+//! - `arena_pull`: full-row gathers against the per-stripe bump arena vs
+//!   the historical boxed row store;
+//! - `uring_identity`: RPC responses under `rpc_poll_mode=uring` vs the
+//!   epoll backend (byte identity + availability flag).
+//!
+//! Every stage asserts byte identity between its zero-copy path and the
+//! portable fallback — CI fails if they ever diverge. Writes
+//! `BENCH_substrate.json` (CI uploads it per commit; the committed
+//! baseline self-arms via tools/promote_bench_baseline.py --kind
+//! substrate).
 
+use std::io::{IoSlice, Read as _, Write as _};
+use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use weips::codec::{maybe_compress, Decode, Encode};
-use weips::net::{Channel, RpcServer, Service};
+use weips::codec::{self, maybe_compress, Decode, Encode, Writer};
+use weips::net::{Channel, PollMode, RpcOptions, RpcServer, Service};
+use weips::optim::{Ftrl, Optimizer};
 use weips::proto::{SparsePush, SyncBatch, SyncEntry, SyncOp};
 use weips::queue::Queue;
-use weips::table::SparseTable;
+use weips::storage::{CheckpointStore, CkptKind};
+use weips::table::{RowStore, SparseTable, StripedSparseTable};
 use weips::util::bench;
 use weips::Result;
 
-fn main() {
+fn smoke() -> bool {
+    std::env::var("WEIPS_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false)
+        || std::env::args().any(|a| a == "--smoke")
+}
+
+/// E9 sweeps, unchanged: context numbers for the E13 gate, full mode only.
+fn classic() {
     // -- queue ---------------------------------------------------------------
     bench::header("E9a: partitioned queue");
     let q = Queue::new(1 << 30);
@@ -123,4 +150,287 @@ fn main() {
     bench::run("tcp channel (loopback)", 10, 1_000, || {
         remote.call(2, &push).unwrap();
     });
+    server.shutdown();
+}
+
+/// Write `[head][body]` as one logical frame without assembling it: a
+/// vectored write first, plain writes for any partial-progress tail.
+fn write_frame_vectored(s: &mut TcpStream, head: &[u8], body: &[u8]) -> std::io::Result<()> {
+    let mut off = 0usize;
+    let total = head.len() + body.len();
+    while off < total {
+        let n = if off < head.len() {
+            s.write_vectored(&[IoSlice::new(&head[off..]), IoSlice::new(body)])?
+        } else {
+            s.write(&body[off - head.len()..])?
+        };
+        if n == 0 {
+            return Err(std::io::ErrorKind::WriteZero.into());
+        }
+        off += n;
+    }
+    Ok(())
+}
+
+/// E13a: scratch-copy framing vs vectored header+body emission over a
+/// drained loopback socket. The reader verifies the first on-wire frame
+/// byte-for-byte against `codec::frame` of the same payload.
+fn framing(results: &mut Vec<String>) {
+    bench::header("E13a: vectored vs scratch response framing");
+    let payload_bytes: usize = if smoke() { 64 << 10 } else { 256 << 10 };
+    let frames: usize = if smoke() { 400 } else { 2_000 };
+    let payload: Vec<u8> = (0..payload_bytes).map(|i| (i.wrapping_mul(31) >> 3) as u8).collect();
+
+    // The vectored path's header, computed once (both loops below reuse
+    // it, isolating the copy cost — the CRC is identical work either way).
+    let mut head = [0u8; 8];
+    head[..4].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    head[4..].copy_from_slice(&codec::crc32(&payload).to_le_bytes());
+    let scratch_frame = codec::frame(&payload);
+    assert_eq!(&scratch_frame[..8], &head[..], "vectored header must match scratch framing");
+    assert_eq!(&scratch_frame[8..], &payload[..], "frame body must be the payload verbatim");
+
+    let frame_len = 8 + payload.len();
+    let total = 2 * frames * frame_len;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let reader = std::thread::spawn(move || {
+        let (mut conn, _) = listener.accept().unwrap();
+        let mut first = vec![0u8; frame_len];
+        conn.read_exact(&mut first).unwrap();
+        let mut seen = frame_len;
+        let mut buf = vec![0u8; 1 << 20];
+        while seen < total {
+            let n = conn.read(&mut buf).unwrap();
+            if n == 0 {
+                break;
+            }
+            seen += n;
+        }
+        (first, seen)
+    });
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+
+    // Scratch path: assemble header+body in a reused buffer, one write —
+    // exactly what the portable `finish_frame` server path does.
+    let mut buf: Vec<u8> = Vec::with_capacity(frame_len);
+    let t = Instant::now();
+    for _ in 0..frames {
+        buf.clear();
+        buf.extend_from_slice(&head);
+        buf.extend_from_slice(&payload);
+        stream.write_all(&buf).unwrap();
+    }
+    let scratch_s = t.elapsed().as_secs_f64();
+
+    // Vectored path: the same bytes, no assembly.
+    let t = Instant::now();
+    for _ in 0..frames {
+        write_frame_vectored(&mut stream, &head, &payload).unwrap();
+    }
+    let vectored_s = t.elapsed().as_secs_f64();
+    drop(stream);
+
+    let (first, seen) = reader.join().unwrap();
+    assert_eq!(seen, total, "reader must drain every framed byte");
+    assert_eq!(first, scratch_frame, "on-wire frame must be byte-identical to scratch framing");
+
+    let mb = (frames * frame_len) as f64 / 1e6;
+    let (scratch_mb_s, vectored_mb_s) = (mb / scratch_s, mb / vectored_s);
+    let win = vectored_mb_s / scratch_mb_s;
+    bench::metric("scratch framing", format!("{scratch_mb_s:.0} MB/s"));
+    bench::metric("vectored framing", format!("{vectored_mb_s:.0} MB/s ({win:.2}x)"));
+    results.push(format!(
+        r#"{{"bench":"substrate","stage":"framing","payload_bytes":{payload_bytes},"frames":{frames},"scratch_mb_s":{scratch_mb_s:.1},"vectored_mb_s":{vectored_mb_s:.1},"win":{win:.3},"byte_identical":true}}"#
+    ));
+}
+
+/// E13b: mmap-backed chunk loads vs streamed `fs::read`, every page
+/// touched (recovery decodes front-to-back, so the fault cost is real).
+fn mmap_load(results: &mut Vec<String>) {
+    bench::header("E13b: mmap vs streamed checkpoint chunk load");
+    let chunk_bytes: usize = if smoke() { 4 << 20 } else { 64 << 20 };
+    let iters: usize = if smoke() { 20 } else { 50 };
+    let dir = std::env::temp_dir().join(format!("weips-bench-substrate-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut store = CheckpointStore::new(&dir, None);
+    let payload: Vec<u8> =
+        (0..chunk_bytes).map(|i| (i.wrapping_mul(2_654_435_761) >> 16) as u8).collect();
+    store.save_chunk("bench", 1, 0, CkptKind::Base, &payload).unwrap();
+
+    // Touch one byte per half-page: pays every fault without turning the
+    // measurement into a pure memory-bandwidth race.
+    fn touch(bytes: &[u8]) -> u64 {
+        bytes.iter().step_by(2048).fold(0u64, |a, &b| a.wrapping_add(b as u64))
+    }
+
+    store.set_mmap_load(false);
+    let mut streamed_sum = 0u64;
+    let t = Instant::now();
+    for _ in 0..iters {
+        let chunk = store.load_chunk("bench", 1, 0, CkptKind::Base).unwrap();
+        streamed_sum = streamed_sum.wrapping_add(touch(&chunk));
+    }
+    let streamed_s = t.elapsed().as_secs_f64();
+
+    store.set_mmap_load(true);
+    let mut mmap_sum = 0u64;
+    let t = Instant::now();
+    for _ in 0..iters {
+        let chunk = store.load_chunk("bench", 1, 0, CkptKind::Base).unwrap();
+        mmap_sum = mmap_sum.wrapping_add(touch(&chunk));
+    }
+    let mmap_s = t.elapsed().as_secs_f64();
+    assert_eq!(streamed_sum, mmap_sum, "page-touch sums must agree across load paths");
+
+    store.set_mmap_load(false);
+    let a = store.load_chunk("bench", 1, 0, CkptKind::Base).unwrap();
+    store.set_mmap_load(true);
+    let b = store.load_chunk("bench", 1, 0, CkptKind::Base).unwrap();
+    assert_eq!(&a[..], &b[..], "mmap'd chunk must be byte-identical to the streamed read");
+    assert_eq!(&a[..], &payload[..], "loaded chunk must round-trip the saved payload");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mb = (iters * chunk_bytes) as f64 / 1e6;
+    let (streamed_mb_s, mmap_mb_s) = (mb / streamed_s, mb / mmap_s);
+    let win = mmap_mb_s / streamed_mb_s;
+    let mmap_supported = weips::util::sys::supported();
+    bench::metric("streamed load", format!("{streamed_mb_s:.0} MB/s"));
+    bench::metric(
+        "mmap load",
+        format!("{mmap_mb_s:.0} MB/s ({win:.2}x, supported={mmap_supported})"),
+    );
+    results.push(format!(
+        r#"{{"bench":"substrate","stage":"mmap_load","chunk_bytes":{chunk_bytes},"iters":{iters},"streamed_mb_s":{streamed_mb_s:.1},"mmap_mb_s":{mmap_mb_s:.1},"win":{win:.3},"mmap_supported":{mmap_supported},"byte_identical":true}}"#
+    ));
+}
+
+/// E13c: full-row gathers against the per-stripe bump arena vs the boxed
+/// row store, after asserting both encode byte-identical checkpoints.
+fn arena_pull(results: &mut Vec<String>) {
+    bench::header("E13c: arena vs boxed row store (full-row gather)");
+    let rows: u64 = if smoke() { 50_000 } else { 400_000 };
+    let iters: usize = if smoke() { 100 } else { 400 };
+    const BATCH: usize = 4096;
+    let ftrl: Arc<dyn Optimizer> = Arc::new(Ftrl::new(Default::default()));
+    let build = |rs: RowStore| {
+        let t = StripedSparseTable::with_row_store("w", 8, ftrl.clone(), 1, 8, rs);
+        let ids: Vec<u64> = (0..rows).collect();
+        for chunk in ids.chunks(BATCH) {
+            let g = vec![0.05f32; chunk.len() * 8];
+            t.apply_batch(chunk, &g, 0);
+        }
+        t
+    };
+    let arena = build(RowStore::Arena);
+    let boxed = build(RowStore::Boxed);
+
+    let mut wa = Writer::new();
+    arena.encode_rows(&mut wa);
+    let mut wb = Writer::new();
+    boxed.encode_rows(&mut wb);
+    assert_eq!(wa.as_bytes(), wb.as_bytes(), "arena and boxed checkpoints must be byte-identical");
+
+    let width = arena.get_row(0).expect("row 0 seeded").values.len();
+    let batches: Vec<Vec<u64>> =
+        (0..16u64).map(|k| (0..BATCH as u64).map(|j| (k * 2_503 + j * 3) % rows).collect()).collect();
+
+    let mut oa = vec![0.0f32; BATCH * 8];
+    let mut ob = vec![0.0f32; BATCH * 8];
+    arena.pull_slot(&batches[0], "w", 1, &mut oa).unwrap();
+    boxed.pull_slot(&batches[0], "w", 1, &mut ob).unwrap();
+    assert_eq!(oa, ob, "slot pulls must agree across row stores");
+
+    let mut out = vec![0.0f32; BATCH * width];
+    let mut time = |t: &StripedSparseTable| {
+        for ids in &batches {
+            t.pull_rows(ids, &mut out);
+        }
+        let t0 = Instant::now();
+        for i in 0..iters {
+            t.pull_rows(&batches[i % batches.len()], &mut out);
+            std::hint::black_box(&out);
+        }
+        t0.elapsed().as_secs_f64()
+    };
+    let boxed_s = time(&boxed);
+    let arena_s = time(&arena);
+    let ids_per_s = |secs: f64| (iters * BATCH) as f64 / secs;
+    let (boxed_ids_s, arena_ids_s) = (ids_per_s(boxed_s), ids_per_s(arena_s));
+    let win = arena_ids_s / boxed_ids_s;
+    let waste = arena.arena_waste_floats();
+    bench::metric("boxed gather", format!("{:.2} M ids/s", boxed_ids_s / 1e6));
+    bench::metric("arena gather", format!("{:.2} M ids/s ({win:.2}x, waste {waste} floats)", arena_ids_s / 1e6));
+    results.push(format!(
+        r#"{{"bench":"substrate","stage":"arena_pull","rows":{rows},"batch":{BATCH},"boxed_ids_s":{boxed_ids_s:.0},"arena_ids_s":{arena_ids_s:.0},"win":{win:.3},"arena_waste_floats":{waste},"byte_identical":true}}"#
+    ));
+}
+
+/// E13d: the io_uring RPC backend answers byte-for-byte what the epoll
+/// backend answers; records whether the kernel actually granted a ring.
+fn uring_identity(results: &mut Vec<String>) {
+    bench::header("E13d: io_uring vs epoll response identity");
+    struct Echo;
+    impl Service for Echo {
+        fn call(&self, m: u16, payload: &[u8]) -> Result<Vec<u8>> {
+            let mut v = Vec::with_capacity(payload.len() + 2);
+            v.extend_from_slice(&m.to_le_bytes());
+            v.extend_from_slice(payload);
+            Ok(v)
+        }
+    }
+    let payloads: Vec<Vec<u8>> = (0..8u8).map(|k| vec![k ^ 0x5a; 1 << (k as usize + 4)]).collect();
+    let timed_calls: usize = if smoke() { 200 } else { 1_000 };
+    let probe = vec![0x11u8; 4 << 10];
+    let run_mode = |mode: PollMode| {
+        let server = RpcServer::serve_with(
+            "127.0.0.1:0",
+            Arc::new(Echo),
+            RpcOptions { mode, ..RpcOptions::default() },
+        )
+        .unwrap();
+        let ch = Channel::remote(&server.addr().to_string(), Duration::from_secs(5));
+        let replies: Vec<Vec<u8>> = payloads.iter().map(|p| ch.call(7, p).unwrap()).collect();
+        let t = Instant::now();
+        for _ in 0..timed_calls {
+            std::hint::black_box(ch.call(9, &probe).unwrap());
+        }
+        let calls_s = timed_calls as f64 / t.elapsed().as_secs_f64();
+        let resolved = server.poll_mode();
+        server.shutdown();
+        (resolved, replies, calls_s)
+    };
+    let (_, epoll_replies, epoll_calls_s) = run_mode(PollMode::Event);
+    let (uring_mode, uring_replies, uring_calls_s) = run_mode(PollMode::Uring);
+    assert_eq!(epoll_replies, uring_replies, "uring and epoll responses must be byte-identical");
+    let uring_available = uring_mode == PollMode::Uring;
+    bench::metric("epoll", format!("{epoll_calls_s:.0} calls/s"));
+    bench::metric(
+        "uring",
+        format!("{uring_calls_s:.0} calls/s (ring granted: {uring_available})"),
+    );
+    results.push(format!(
+        r#"{{"bench":"substrate","stage":"uring_identity","uring_available":{uring_available},"epoll_calls_s":{epoll_calls_s:.1},"uring_calls_s":{uring_calls_s:.1},"byte_identical":true}}"#
+    ));
+}
+
+fn main() {
+    if !smoke() {
+        classic();
+    }
+    let mut results = Vec::new();
+    framing(&mut results);
+    mmap_load(&mut results);
+    arena_pull(&mut results);
+    uring_identity(&mut results);
+    let json = format!("[\n  {}\n]\n", results.join(",\n  "));
+    // Anchor to the workspace root (cargo runs benches with cwd = the
+    // package root, rust/), so CI finds the artifact at a fixed path.
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package has a parent dir")
+        .join("BENCH_substrate.json");
+    std::fs::write(&out, &json).expect("write BENCH_substrate.json");
+    println!("\nwrote {} ({} records)", out.display(), results.len());
 }

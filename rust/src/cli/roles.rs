@@ -53,6 +53,18 @@ fn cluster_config(args: &Args) -> Result<ClusterConfig> {
     if let Some(v) = args.get("metrics-enabled") {
         cfg.metrics_enabled = v != "0";
     }
+    if let Some(b) = args.get("balance") {
+        cfg.replica_balance = BalancePolicy::parse(b)?;
+    }
+    if let Some(v) = args.get("ckpt-mmap") {
+        cfg.ckpt_mmap_load = v != "0";
+    }
+    if let Some(rs) = args.get("row-store") {
+        cfg.table_row_store = crate::table::RowStore::parse(rs)?;
+    }
+    if let Some(p) = args.get("poll-mode") {
+        cfg.rpc_poll_mode = crate::net::PollMode::parse(p)?;
+    }
     Ok(cfg)
 }
 
@@ -242,16 +254,19 @@ pub fn run_master(args: &Args) -> Result<()> {
     let engine = load_engine(args)?;
     let spec = ModelSpec::derive(&cfg.model_name, cfg.model_kind, engine.config());
     let clock = Arc::new(SystemClock);
-    let master = Arc::new(MasterShard::with_stripes(
+    let master = Arc::new(MasterShard::with_row_store(
         shard,
         spec,
         Some(engine),
         cfg.entry_threshold,
         cfg.table_stripes as usize,
+        cfg.table_row_store,
         clock.clone(),
     )?);
     let data_dir: std::path::PathBuf = args.get_or("data-dir", "/tmp/weips-data").into();
-    let store = Arc::new(CheckpointStore::new(data_dir.clone(), None));
+    let mut store = CheckpointStore::new(data_dir.clone(), None);
+    store.set_mmap_load(cfg.ckpt_mmap_load);
+    let store = Arc::new(store);
     let incremental_mode = cfg.ckpt_mode == CkptMode::Incremental;
     if !incremental_mode {
         // No delta consumer: skip tombstone tracking (expired rows free
@@ -263,7 +278,9 @@ pub fn run_master(args: &Args) -> Result<()> {
     // beside the shared store, so concurrent shard processes sharing a
     // data dir never collide on manifests.
     let own_dir = data_dir.join(format!("master-{shard}"));
-    let own_store = Arc::new(CheckpointStore::new(own_dir.join("chain"), None));
+    let mut own_store = CheckpointStore::new(own_dir.join("chain"), None);
+    own_store.set_mmap_load(cfg.ckpt_mmap_load);
+    let own_store = Arc::new(own_store);
     let wal = Arc::new(WalLog::open_with(own_dir.join("wal"), 1, cfg.wal_sync_every)?);
     if incremental_mode && args.get_or("warm-start", "1") != "0" {
         // A crash before the first seal leaves WAL records but no chain:
@@ -494,7 +511,7 @@ pub fn run_predictor(args: &Args) -> Result<()> {
                     )))
                 })
                 .collect();
-            Arc::new(ReplicaGroup::new(endpoints, BalancePolicy::RoundRobin))
+            Arc::new(ReplicaGroup::new(endpoints, cfg.replica_balance))
         })
         .collect();
     let _metrics = serve_role_metrics(args, &cfg)?;

@@ -307,12 +307,10 @@ pub trait Decode: Sized {
     }
 }
 
-/// CRC-32 (IEEE 802.3 polynomial, the `crc32fast::hash` contract) over a
-/// byte slice. Table-driven; the table is built once per process.
-pub fn crc32(data: &[u8]) -> u32 {
+fn crc32_table() -> &'static [u32; 256] {
     use std::sync::OnceLock;
     static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
-    let table = TABLE.get_or_init(|| {
+    TABLE.get_or_init(|| {
         let mut t = [0u32; 256];
         for (i, entry) in t.iter_mut().enumerate() {
             let mut c = i as u32;
@@ -322,10 +320,26 @@ pub fn crc32(data: &[u8]) -> u32 {
             *entry = c;
         }
         t
-    });
+    })
+}
+
+/// CRC-32 (IEEE 802.3 polynomial, the `crc32fast::hash` contract) over a
+/// byte slice. Table-driven; the table is built once per process.
+pub fn crc32(data: &[u8]) -> u32 {
+    crc32_parts(&[data])
+}
+
+/// CRC-32 over the logical concatenation of `parts`, without ever
+/// materializing it. Exactly equals `crc32` of the joined bytes, so the
+/// vectored RPC write path can checksum `[response head, body]` while the
+/// receiver verifies the contiguous frame it reassembled.
+pub fn crc32_parts(parts: &[&[u8]]) -> u32 {
+    let table = crc32_table();
     let mut c = 0xFFFF_FFFFu32;
-    for &b in data {
-        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    for part in parts {
+        for &b in *part {
+            c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
     }
     !c
 }
@@ -461,6 +475,40 @@ mod tests {
         // The canonical IEEE CRC-32 check value.
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
         assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn prop_crc32_parts_equals_crc32_of_concatenation() {
+        // The vectored write path checksums [head, body] as separate
+        // segments; the receiver checksums the reassembled frame. Any
+        // split of any buffer must agree, including empty segments.
+        struct Splits;
+        impl Strategy for Splits {
+            type Value = (Vec<u8>, Vec<usize>);
+            fn gen(&self, rng: &mut Rng) -> (Vec<u8>, Vec<usize>) {
+                let n = rng.gen_range(256) as usize;
+                let data: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+                let cuts = (0..rng.gen_range(5)).map(|_| rng.gen_range(n as u64 + 1) as usize);
+                let mut cuts: Vec<usize> = cuts.collect();
+                cuts.sort_unstable();
+                (data, cuts)
+            }
+        }
+        check("crc32-parts", &Splits, 300, |(data, cuts)| {
+            let mut parts: Vec<&[u8]> = Vec::new();
+            let mut at = 0usize;
+            for &cut in cuts {
+                parts.push(&data[at..cut]);
+                at = cut;
+            }
+            parts.push(&data[at..]);
+            let split = crc32_parts(&parts);
+            let whole = crc32(data);
+            if split != whole {
+                return Err(format!("{split:#010x} != {whole:#010x} cuts={cuts:?}"));
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -264,6 +264,19 @@ pub struct ClusterConfig {
     /// In-flight cap for bulk-class requests; 0 = half the RPC handler
     /// pool (at least 1), so predict/control always keep handlers.
     pub rpc_bulk_inflight_max: u32,
+    /// Replica balance policy for predictor pull fan-out: `round_robin`,
+    /// `least_loaded`, or `latency` (score replicas by observed mean
+    /// service latency × queue depth, probing cold replicas first).
+    pub replica_balance: crate::replica::BalancePolicy,
+    /// mmap checkpoint/delta chunks on load instead of streaming them
+    /// through a read+copy (recovery and slot-migration snapshot loads
+    /// decode straight over the page cache). Platforms without the raw
+    /// mmap binding fall back to streamed reads regardless.
+    pub ckpt_mmap_load: bool,
+    /// Sparse-table row storage: `arena` (per-stripe bump arenas,
+    /// compacted during expire sweeps — pull gathers walk contiguous
+    /// memory) or `boxed` (one heap allocation per row).
+    pub table_row_store: crate::table::RowStore,
     /// Hot-id serving-cache capacity in rows per predictor process
     /// (0 disables the cache; invalidation is driven by the streaming
     /// scatter, so there is no TTL to tune).
@@ -327,6 +340,9 @@ impl Default for ClusterConfig {
             rpc_poll_mode: crate::net::default_poll_mode(),
             rpc_qos: true,
             rpc_bulk_inflight_max: 0,
+            replica_balance: crate::replica::BalancePolicy::RoundRobin,
+            ckpt_mmap_load: true,
+            table_row_store: crate::table::RowStore::Arena,
             serving_cache_rows: 1 << 20,
             pull_pool_connections: 4,
             reshard_slots: env_threads("WEIPS_RESHARD_SLOTS", 1024).clamp(1, 65536),
@@ -427,6 +443,15 @@ impl ClusterConfig {
         }
         if let Some(v) = doc.get_int("cluster", "rpc_bulk_inflight_max") {
             c.rpc_bulk_inflight_max = v.clamp(0, u32::MAX as i64) as u32;
+        }
+        if let Some(v) = doc.get_str("cluster", "replica_balance") {
+            c.replica_balance = crate::replica::BalancePolicy::parse(v)?;
+        }
+        if let Some(v) = doc.get_bool("cluster", "ckpt_mmap_load") {
+            c.ckpt_mmap_load = v;
+        }
+        if let Some(v) = doc.get_str("cluster", "table_row_store") {
+            c.table_row_store = crate::table::RowStore::parse(v)?;
         }
         if let Some(v) = doc.get_int("cluster", "serving_cache_rows") {
             c.serving_cache_rows = v.max(0) as u64;
@@ -668,6 +693,34 @@ mod tests {
         assert_eq!(c.pull_pool_connections, 1); // clamped: pool never empty
         let off = TomlDoc::parse("[cluster]\nserving_cache_rows = -1\n").unwrap();
         assert_eq!(ClusterConfig::from_toml(&off).unwrap().serving_cache_rows, 0);
+    }
+
+    #[test]
+    fn substrate_knobs_parse_and_reject_bad_values() {
+        // Defaults: arena rows, mmap loads, round-robin balance.
+        let d = ClusterConfig::default();
+        assert_eq!(d.replica_balance, crate::replica::BalancePolicy::RoundRobin);
+        assert!(d.ckpt_mmap_load);
+        assert_eq!(d.table_row_store, crate::table::RowStore::Arena);
+        let doc = TomlDoc::parse(
+            r#"
+            [cluster]
+            replica_balance = "latency"
+            ckpt_mmap_load = false
+            table_row_store = "boxed"
+            rpc_poll_mode = "uring"
+            "#,
+        )
+        .unwrap();
+        let c = ClusterConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.replica_balance, crate::replica::BalancePolicy::LatencyAware);
+        assert!(!c.ckpt_mmap_load);
+        assert_eq!(c.table_row_store, crate::table::RowStore::Boxed);
+        assert_eq!(c.rpc_poll_mode, crate::net::PollMode::Uring);
+        let bad = TomlDoc::parse("[cluster]\nreplica_balance = \"fastest\"\n").unwrap();
+        assert!(ClusterConfig::from_toml(&bad).is_err());
+        let bad = TomlDoc::parse("[cluster]\ntable_row_store = \"slab\"\n").unwrap();
+        assert!(ClusterConfig::from_toml(&bad).is_err());
     }
 
     #[test]

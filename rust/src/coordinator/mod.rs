@@ -32,7 +32,7 @@ use crate::scheduler::{CkptPolicy, Scheduler};
 use crate::server::master::{MasterService, MasterShard};
 use crate::server::slave::{SlaveService, SlaveShard};
 use crate::storage::incremental::{self, IncrPolicy, WalJournal};
-use crate::storage::{CheckpointStore, CkptKind};
+use crate::storage::{CheckpointStore, ChunkData, CkptKind};
 use crate::sync::{Gather, Pusher, Router, Scatter, ServingWeights};
 use crate::util::clock::{Clock, SystemClock};
 use crate::util::ThreadPool;
@@ -131,10 +131,12 @@ impl LocalCluster {
                 (d, true)
             }
         };
-        let store = Arc::new(CheckpointStore::new(
+        let mut store = CheckpointStore::new(
             data_dir.join("ckpt-local"),
             Some(data_dir.join("ckpt-remote")),
-        ));
+        );
+        store.set_mmap_load(cfg.ckpt_mmap_load);
+        let store = Arc::new(store);
         let wal = Arc::new(WalLog::open_with(
             data_dir.join("wal"),
             cfg.master_shards as usize,
@@ -159,12 +161,13 @@ impl LocalCluster {
         let mut gathers = Vec::new();
         let mut pushers = Vec::new();
         for i in 0..cfg.master_shards {
-            let m = Arc::new(MasterShard::with_stripes(
+            let m = Arc::new(MasterShard::with_row_store(
                 i,
                 spec.clone(),
                 Some(engine.clone()),
                 cfg.entry_threshold,
                 cfg.table_stripes as usize,
+                cfg.table_row_store,
                 clock.clone(),
             )?);
             // Slot-route guard: stale-epoch pushes NACK back to the
@@ -240,7 +243,7 @@ impl LocalCluster {
                 endpoints.push(Arc::new(SlaveEndpoint::local(ch, shard.clone())));
                 replicas.push(shard);
             }
-            groups.push(Arc::new(ReplicaGroup::new(endpoints, BalancePolicy::RoundRobin)));
+            groups.push(Arc::new(ReplicaGroup::new(endpoints, cfg.replica_balance)));
             slaves.push(replicas);
             scatters.push(shard_scatters);
         }
@@ -407,15 +410,21 @@ impl LocalCluster {
     }
 
     /// Journal every master's dirty window as a WAL micro-delta (no-op
-    /// in full checkpoint mode and for clean windows).
+    /// in full checkpoint mode and for clean windows). The micro-delta
+    /// encodes fan out across the sync pool; appends stay sequential in
+    /// shard order so per-partition offsets match a sequential tick.
     fn journal_wal(&self) -> Result<()> {
         if self.cfg.ckpt_mode != CkptMode::Incremental {
             return Ok(());
         }
         let now = self.clock.now_ms();
-        for (i, m) in self.masters.iter().enumerate() {
-            self.journals[i].lock().unwrap().poll(m, &self.wal, now)?;
-        }
+        incremental::journal_tick(
+            &self.journals,
+            &self.masters,
+            &self.wal,
+            now,
+            self.sync_pool.as_deref(),
+        )?;
         Ok(())
     }
 
@@ -512,7 +521,7 @@ impl LocalCluster {
     /// snapshot first, then each delta chunk (a pre-incremental full
     /// checkpoint is a chain of one). Slave bootstrap and the benches
     /// consume this instead of assuming every version has full shards.
-    pub fn shard_chain(&self, version: u64, shard: u32) -> Result<Vec<(CkptKind, Vec<u8>)>> {
+    pub fn shard_chain(&self, version: u64, shard: u32) -> Result<Vec<(CkptKind, ChunkData)>> {
         let chain = incremental::resolve_chain(&self.store, &self.cfg.model_name, version)?;
         chain
             .iter()
@@ -549,7 +558,7 @@ impl LocalCluster {
     /// happened (uniform map from epoch 0).
     pub fn apply_chain_chunks(
         replica: &Arc<SlaveShard>,
-        chain: &[(CkptKind, Vec<u8>)],
+        chain: &[(CkptKind, ChunkData)],
         owner: Option<(&crate::reshard::SlotMap, u32)>,
     ) -> Result<()> {
         for (kind, bytes) in chain {
@@ -622,7 +631,7 @@ impl LocalCluster {
             // master state will stream from the current end). Chains are
             // loaded once per master and shared across replicas — this
             // is the latency-critical rollback path.
-            let chains: Vec<Vec<(CkptKind, Vec<u8>)>> = self
+            let chains: Vec<Vec<(CkptKind, ChunkData)>> = self
                 .masters
                 .iter()
                 .map(|m| self.shard_chain(plan.target_version, m.shard_id))
@@ -733,12 +742,13 @@ impl LocalCluster {
         // recovery would replay it over the restored rows. recover_master
         // re-arms the journal.
         self.journals[shard].lock().unwrap().suspend();
-        let fresh = Arc::new(MasterShard::with_stripes(
+        let fresh = Arc::new(MasterShard::with_row_store(
             shard as u32,
             self.spec.clone(),
             Some(self.engine.clone()),
             self.cfg.entry_threshold,
             self.cfg.table_stripes as usize,
+            self.cfg.table_row_store,
             self.clock.clone(),
         )?);
         fresh.set_route_guard(self.master_router.clone());

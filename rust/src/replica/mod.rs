@@ -18,6 +18,25 @@ pub enum BalancePolicy {
     RoundRobin,
     /// Pick the replica with the fewest in-flight requests.
     LeastLoaded,
+    /// Weight replicas by observed mean service latency × queue depth:
+    /// score = `mean_latency_ns × (inflight + 1)`, lowest wins. Replicas
+    /// with no samples yet are probed first so a cold slot earns a
+    /// latency profile instead of being starved by warmed-up peers.
+    LatencyAware,
+}
+
+impl BalancePolicy {
+    /// Parse the config-string form (`replica_balance` knob).
+    pub fn parse(s: &str) -> Result<BalancePolicy> {
+        match s {
+            "round_robin" => Ok(BalancePolicy::RoundRobin),
+            "least_loaded" => Ok(BalancePolicy::LeastLoaded),
+            "latency" => Ok(BalancePolicy::LatencyAware),
+            other => Err(Error::Config(format!(
+                "replica_balance: unknown policy {other:?} (round_robin | least_loaded | latency)"
+            ))),
+        }
+    }
 }
 
 /// A replica endpoint: something that can serve and report health.
@@ -153,6 +172,23 @@ impl<E: Endpoint> ReplicaGroup<E> {
                 .iter()
                 .filter(|s| self.usable(s))
                 .min_by_key(|s| s.inflight.load(Ordering::Relaxed)),
+            BalancePolicy::LatencyAware => {
+                // Unserved slots first (cold-start probing), then lowest
+                // expected wait: mean latency scaled by queue depth.
+                let usable: Vec<&Arc<Slot<E>>> =
+                    slots.iter().filter(|s| self.usable(s)).collect();
+                usable
+                    .iter()
+                    .find(|s| s.served.load(Ordering::Relaxed) == 0)
+                    .or_else(|| {
+                        usable.iter().min_by_key(|s| {
+                            let n = s.served.load(Ordering::Relaxed).max(1);
+                            let mean = s.lat_ns.load(Ordering::Relaxed) / n;
+                            mean.saturating_mul(s.inflight.load(Ordering::Relaxed) + 1)
+                        })
+                    })
+                    .copied()
+            }
         };
         match chosen {
             Some(slot) => {
@@ -385,6 +421,64 @@ mod tests {
         let _ = g.call_with_failover::<()>(1, |_| Err(Error::Rpc("down".into())));
         assert_eq!(g.served_counts().iter().sum::<u64>(), 6);
         assert_eq!(g.mean_latency_ns().len(), 2);
+    }
+
+    #[test]
+    fn balance_policy_parses_config_strings() {
+        assert_eq!(BalancePolicy::parse("round_robin").unwrap(), BalancePolicy::RoundRobin);
+        assert_eq!(BalancePolicy::parse("least_loaded").unwrap(), BalancePolicy::LeastLoaded);
+        assert_eq!(BalancePolicy::parse("latency").unwrap(), BalancePolicy::LatencyAware);
+        assert!(BalancePolicy::parse("fastest").is_err());
+    }
+
+    #[test]
+    fn latency_aware_probes_cold_slots_then_prefers_fast_ones() {
+        let (g, _) = group(3, BalancePolicy::LatencyAware);
+        // Seed latency profiles by hand: replica 0 slow, 1 fast, 2 cold.
+        {
+            let slots = g.slots.read().unwrap();
+            slots[0].served.store(10, Ordering::Relaxed);
+            slots[0].lat_ns.store(10 * 9_000_000, Ordering::Relaxed); // 9 ms mean
+            slots[1].served.store(10, Ordering::Relaxed);
+            slots[1].lat_ns.store(10 * 1_000_000, Ordering::Relaxed); // 1 ms mean
+        }
+        // The unserved replica is probed first.
+        let probe = g.pick().unwrap();
+        assert_eq!(probe.endpoint().id, 2);
+        probe.slot.served.store(10, Ordering::Relaxed);
+        probe.slot.lat_ns.store(10 * 5_000_000, Ordering::Relaxed); // 5 ms mean
+        drop(probe);
+        // With all profiles warm, the fastest replica wins.
+        for _ in 0..3 {
+            assert_eq!(g.pick().unwrap().endpoint().id, 1);
+        }
+        // Queue depth scales the score: holding leases on the fast
+        // replica pushes traffic to the next-cheapest expected wait
+        // (1 ms × 6 > 5 ms × 1).
+        let holds: Vec<_> = (0..5).map(|_| g.pick().unwrap()).collect();
+        assert!(holds.iter().all(|l| l.endpoint().id == 1));
+        assert_eq!(g.pick().unwrap().endpoint().id, 2);
+        drop(holds);
+    }
+
+    #[test]
+    fn latency_aware_skips_unhealthy_and_tripped() {
+        let (g, eps) = group(2, BalancePolicy::LatencyAware);
+        {
+            let slots = g.slots.read().unwrap();
+            for s in slots.iter() {
+                s.served.store(5, Ordering::Relaxed);
+                s.lat_ns.store(5_000_000, Ordering::Relaxed);
+            }
+            // Replica 0 is much faster — it would win on latency alone.
+            slots[0].lat_ns.store(500, Ordering::Relaxed);
+        }
+        eps[0].up.store(false, Ordering::Relaxed);
+        for _ in 0..3 {
+            assert_eq!(g.pick().unwrap().endpoint().id, 1);
+        }
+        eps[0].up.store(true, Ordering::Relaxed);
+        assert_eq!(g.pick().unwrap().endpoint().id, 0);
     }
 
     #[test]

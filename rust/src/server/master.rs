@@ -127,7 +127,8 @@ impl MasterShard {
     }
 
     /// Build a shard with an explicit per-table lock-stripe count (the
-    /// cluster config's `table_stripes` knob).
+    /// cluster config's `table_stripes` knob) and the default arena row
+    /// store.
     pub fn with_stripes(
         shard_id: u32,
         spec: ModelSpec,
@@ -136,11 +137,40 @@ impl MasterShard {
         stripes: usize,
         clock: Arc<dyn Clock>,
     ) -> Result<MasterShard> {
+        Self::with_row_store(
+            shard_id,
+            spec,
+            engine,
+            entry_threshold,
+            stripes,
+            crate::table::RowStore::Arena,
+            clock,
+        )
+    }
+
+    /// [`Self::with_stripes`] with an explicit row-value backing (the
+    /// cluster config's `table_row_store` knob).
+    pub fn with_row_store(
+        shard_id: u32,
+        spec: ModelSpec,
+        engine: Option<Arc<Engine>>,
+        entry_threshold: u32,
+        stripes: usize,
+        row_store: crate::table::RowStore,
+        clock: Arc<dyn Clock>,
+    ) -> Result<MasterShard> {
         let mut sparse = Vec::new();
         let mut batched = Vec::new();
         for t in &spec.sparse {
             let opt = spec.optimizer_for(&t.name)?;
-            sparse.push(StripedSparseTable::new(&t.name, t.dim, opt, entry_threshold, stripes));
+            sparse.push(StripedSparseTable::with_row_store(
+                &t.name,
+                t.dim,
+                opt,
+                entry_threshold,
+                stripes,
+                row_store,
+            ));
             let b = match (&engine, t.optimizer.as_str()) {
                 (Some(eng), "ftrl") => BatchedFtrl::new(eng.clone(), t.dim).ok(),
                 _ => None,

@@ -200,13 +200,29 @@ impl WalJournal {
         wal: &WalLog,
         now_ms: u64,
     ) -> Result<Option<u64>> {
+        match self.encode_window(master) {
+            Some(payload) => {
+                let offset = crate::queue::SyncLog::append(wal, self.partition, now_ms, payload)?;
+                Ok(Some(offset))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// The encode half of [`Self::poll`]: cut the write epoch, encode the
+    /// dirty window as a tagged envelope and advance the frontier —
+    /// without touching the log. Encoding dominates the journal cost, so
+    /// [`journal_tick`] fans these out across the sync pool; the appends
+    /// themselves must stay in tick order and are issued sequentially by
+    /// whoever called this.
+    pub fn encode_window(&mut self, master: &MasterShard) -> Option<Vec<u8>> {
         if self.suspended {
-            return Ok(None);
+            return None;
         }
         let dense = master.dense_versions();
         let (rows, graves, access_only) = master.dirty_counts_split(self.last_cut);
         if rows + graves + access_only == 0 && dense == self.last_dense {
-            return Ok(None);
+            return None;
         }
         let cut = master.cut_epoch();
         let payload = if rows + graves == 0 && dense == self.last_dense {
@@ -228,8 +244,7 @@ impl WalJournal {
         };
         self.last_cut = cut;
         self.last_dense = dense;
-        let offset = crate::queue::SyncLog::append(wal, self.partition, now_ms, payload)?;
-        Ok(Some(offset))
+        Some(payload)
     }
 
     /// Re-arm the journal frontier after a checkpoint seal: subsequent
@@ -248,6 +263,51 @@ impl WalJournal {
         self.reset(cut, dense_versions);
         self.suspended = false;
     }
+}
+
+/// Journal one sync tick across every shard: the micro-delta *encodes*
+/// (the expensive half) run concurrently on `pool` when one is given,
+/// while the *appends* are issued sequentially afterwards in shard order
+/// — each partition sees exactly the offsets a sequential tick would
+/// have produced, so replay bounds and checkpoint `wal_offsets` are
+/// unaffected by the offload. Returns the number of records appended.
+///
+/// Callers are the sync-tick / pump threads, never the pool's own
+/// workers (`run_borrowed` from inside a task would deadlock a full
+/// pool).
+pub fn journal_tick(
+    journals: &[std::sync::Mutex<WalJournal>],
+    masters: &[std::sync::Arc<MasterShard>],
+    wal: &WalLog,
+    now_ms: u64,
+    pool: Option<&crate::util::ThreadPool>,
+) -> Result<usize> {
+    let n = journals.len().min(masters.len());
+    let payloads: Vec<Option<Vec<u8>>> = match pool {
+        Some(pool) if n > 1 => {
+            let slots: Vec<std::sync::Mutex<Option<Vec<u8>>>> =
+                (0..n).map(|_| std::sync::Mutex::new(None)).collect();
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(n);
+            for i in 0..n {
+                let (journal, master, slot) = (&journals[i], &masters[i], &slots[i]);
+                tasks.push(Box::new(move || {
+                    *slot.lock().unwrap() = journal.lock().unwrap().encode_window(master);
+                }));
+            }
+            pool.run_borrowed(tasks);
+            slots.into_iter().map(|s| s.into_inner().unwrap()).collect()
+        }
+        _ => (0..n).map(|i| journals[i].lock().unwrap().encode_window(&masters[i])).collect(),
+    };
+    let mut appended = 0;
+    for (i, payload) in payloads.into_iter().enumerate() {
+        if let Some(payload) = payload {
+            let partition = journals[i].lock().unwrap().partition();
+            crate::queue::SyncLog::append(wal, partition, now_ms, payload)?;
+            appended += 1;
+        }
+    }
+    Ok(appended)
 }
 
 /// Replay a WAL partition's tail into a master shard. Records carry a
@@ -555,6 +615,94 @@ mod tests {
         w.put_varint(7);
         w.put_varint(123);
         assert_eq!(dst.apply_access_delta(&w.into_bytes()).unwrap(), 0);
+    }
+
+    #[test]
+    fn pooled_journal_tick_is_byte_identical_to_sequential_polls() {
+        use crate::proto::SparsePush;
+        use crate::util::clock::ManualClock;
+        use std::sync::{Arc, Mutex};
+
+        // Two identical 3-shard worlds: one journaled through the pooled
+        // tick, one through plain sequential polls. Same WAL bytes, same
+        // offsets — the offload moves work, never content.
+        let build = || -> Vec<Arc<MasterShard>> {
+            (0..3u32)
+                .map(|_| {
+                    let m = Arc::new(shard(ManualClock::new(0)));
+                    for i in 0..40u64 {
+                        m.sparse_push(&SparsePush {
+                            model: "ctr".into(),
+                            table: "w".into(),
+                            ids: vec![i * 7 + 1],
+                            grads: vec![0.5 + i as f32],
+                        })
+                        .unwrap();
+                    }
+                    m
+                })
+                .collect()
+        };
+        let pooled_masters = build();
+        let seq_masters = build();
+
+        let dir = std::env::temp_dir().join(format!(
+            "weips-jtick-{}-{:x}",
+            std::process::id(),
+            crate::util::mono_ns()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let pooled_wal = WalLog::open(dir.join("pooled"), 3).unwrap();
+        let seq_wal = WalLog::open(dir.join("seq"), 3).unwrap();
+
+        let journals: Vec<Mutex<WalJournal>> =
+            (0..3).map(|i| Mutex::new(WalJournal::new(i))).collect();
+        let pool = crate::util::ThreadPool::new(2, "jtick-test");
+        // Two dirty windows with more pushes in between.
+        let appended =
+            journal_tick(&journals, &pooled_masters, &pooled_wal, 1, Some(&pool)).unwrap();
+        assert_eq!(appended, 3);
+        for m in &pooled_masters {
+            m.sparse_push(&SparsePush {
+                model: "ctr".into(),
+                table: "w".into(),
+                ids: vec![999],
+                grads: vec![1.0],
+            })
+            .unwrap();
+        }
+        assert_eq!(journal_tick(&journals, &pooled_masters, &pooled_wal, 2, Some(&pool)).unwrap(), 3);
+        // Clean window: nothing appended, pooled or not.
+        assert_eq!(journal_tick(&journals, &pooled_masters, &pooled_wal, 3, Some(&pool)).unwrap(), 0);
+
+        let mut seq_journals: Vec<WalJournal> = (0..3).map(WalJournal::new).collect();
+        for (j, m) in seq_journals.iter_mut().zip(&seq_masters) {
+            j.poll(m, &seq_wal, 1).unwrap().unwrap();
+        }
+        for m in &seq_masters {
+            m.sparse_push(&SparsePush {
+                model: "ctr".into(),
+                table: "w".into(),
+                ids: vec![999],
+                grads: vec![1.0],
+            })
+            .unwrap();
+        }
+        for (j, m) in seq_journals.iter_mut().zip(&seq_masters) {
+            j.poll(m, &seq_wal, 2).unwrap().unwrap();
+        }
+
+        for p in 0..3u32 {
+            let a = pooled_wal.fetch(p, 0, 16, std::time::Duration::ZERO).unwrap();
+            let b = seq_wal.fetch(p, 0, 16, std::time::Duration::ZERO).unwrap();
+            assert_eq!(a.len(), 2, "partition {p}");
+            assert_eq!(a.len(), b.len());
+            for (ra, rb) in a.iter().zip(&b) {
+                assert_eq!(ra.offset, rb.offset);
+                assert_eq!(ra.payload, rb.payload, "partition {p} diverged");
+            }
+        }
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

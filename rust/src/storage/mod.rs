@@ -20,7 +20,54 @@ use std::path::{Path, PathBuf};
 
 use crate::codec::{frame, unframe};
 use crate::util::json::Json;
+use crate::util::sys;
 use crate::{Error, Result};
+
+/// One shard chunk's verified payload, borrowing either a heap buffer or
+/// an mmap'd file region. Decoders walk it through `Deref<Target = [u8]>`
+/// — with a mapped backing, recovery decodes straight out of the page
+/// cache with no intermediate copy of the chunk.
+pub struct ChunkData {
+    backing: Backing,
+    start: usize,
+    end: usize,
+}
+
+enum Backing {
+    Owned(Vec<u8>),
+    Mapped(sys::Mmap),
+}
+
+impl ChunkData {
+    /// The CRC-verified payload bytes.
+    pub fn as_slice(&self) -> &[u8] {
+        match &self.backing {
+            Backing::Owned(v) => &v[self.start..self.end],
+            Backing::Mapped(m) => &m[self.start..self.end],
+        }
+    }
+
+    /// True when the payload is served from a mapped file region rather
+    /// than a heap copy (observability for tests and benches).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.backing, Backing::Mapped(_))
+    }
+
+    /// Detach into an owned buffer (copies only if mapped or framed).
+    pub fn into_vec(self) -> Vec<u8> {
+        match self.backing {
+            Backing::Owned(v) if self.start == 0 && self.end == v.len() => v,
+            _ => self.as_slice().to_vec(),
+        }
+    }
+}
+
+impl std::ops::Deref for ChunkData {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
 
 /// What a checkpoint version's shard chunks contain.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -180,12 +227,20 @@ fn from_hex(s: &str) -> Vec<u8> {
 pub struct CheckpointStore {
     local: PathBuf,
     remote: Option<PathBuf>,
+    mmap_load: bool,
 }
 
 impl CheckpointStore {
     /// Store rooted at `local`, optionally replicating to `remote`.
     pub fn new(local: impl Into<PathBuf>, remote: Option<PathBuf>) -> CheckpointStore {
-        CheckpointStore { local: local.into(), remote }
+        CheckpointStore { local: local.into(), remote, mmap_load: true }
+    }
+
+    /// Toggle mmap-backed chunk loads (`ckpt_mmap_load` knob). On by
+    /// default; platforms without the raw mmap binding fall back to
+    /// streamed reads regardless.
+    pub fn set_mmap_load(&mut self, on: bool) {
+        self.mmap_load = on;
     }
 
     fn version_dir(root: &Path, model: &str, version: u64) -> PathBuf {
@@ -223,19 +278,20 @@ impl CheckpointStore {
     }
 
     /// Load one shard's full-snapshot chunk (CRC-verified).
-    pub fn load_shard(&self, model: &str, version: u64, shard: u32) -> Result<Vec<u8>> {
+    pub fn load_shard(&self, model: &str, version: u64, shard: u32) -> Result<ChunkData> {
         self.load_chunk(model, version, shard, CkptKind::Base)
     }
 
     /// Load one shard's chunk of the given kind (CRC-verified, remote
-    /// fallback).
+    /// fallback). The chunk is mmap'd when the platform allows it, so
+    /// callers decode over the page cache instead of a heap copy.
     pub fn load_chunk(
         &self,
         model: &str,
         version: u64,
         shard: u32,
         kind: CkptKind,
-    ) -> Result<Vec<u8>> {
+    ) -> Result<ChunkData> {
         self.load_chunk_from(&self.local, model, version, shard, kind)
             .or_else(|e| match &self.remote {
                 Some(remote) => self.load_chunk_from(remote, model, version, shard, kind),
@@ -250,14 +306,35 @@ impl CheckpointStore {
         version: u64,
         shard: u32,
         kind: CkptKind,
-    ) -> Result<Vec<u8>> {
+    ) -> Result<ChunkData> {
         let path = Self::shard_path(root, model, version, shard, kind);
+        if self.mmap_load && sys::supported() {
+            if let Ok(file) = std::fs::File::open(&path) {
+                if let Ok(map) = sys::Mmap::map(&file) {
+                    // Recovery walks the chunk front-to-back exactly once.
+                    map.advise(sys::MADV_SEQUENTIAL);
+                    let (start, end) = match unframe(&map)? {
+                        Some((payload, used)) if used == map.len() => (8, 8 + payload.len()),
+                        _ => {
+                            return Err(Error::Checkpoint(format!(
+                                "{}: truncated",
+                                path.display()
+                            )))
+                        }
+                    };
+                    return Ok(ChunkData { backing: Backing::Mapped(map), start, end });
+                }
+            }
+            // Open/map failure (missing file, empty file, exotic fs):
+            // the streamed path below produces the error — or the bytes.
+        }
         let bytes = std::fs::read(&path)
             .map_err(|e| Error::Checkpoint(format!("{}: {e}", path.display())))?;
-        match unframe(&bytes)? {
-            Some((payload, used)) if used == bytes.len() => Ok(payload.to_vec()),
-            _ => Err(Error::Checkpoint(format!("{}: truncated", path.display()))),
-        }
+        let (start, end) = match unframe(&bytes)? {
+            Some((payload, used)) if used == bytes.len() => (8, 8 + payload.len()),
+            _ => return Err(Error::Checkpoint(format!("{}: truncated", path.display()))),
+        };
+        Ok(ChunkData { backing: Backing::Owned(bytes), start, end })
     }
 
     /// Finalize a checkpoint: write its manifest (makes it visible).
@@ -407,8 +484,8 @@ mod tests {
         s.save_shard("ctr", 1, 0, b"shard-zero").unwrap();
         s.save_shard("ctr", 1, 1, b"shard-one").unwrap();
         s.write_manifest(&manifest(1, 2)).unwrap();
-        assert_eq!(s.load_shard("ctr", 1, 0).unwrap(), b"shard-zero");
-        assert_eq!(s.load_shard("ctr", 1, 1).unwrap(), b"shard-one");
+        assert_eq!(s.load_shard("ctr", 1, 0).unwrap().as_slice(), b"shard-zero");
+        assert_eq!(s.load_shard("ctr", 1, 1).unwrap().as_slice(), b"shard-one");
         let m = s.load_manifest("ctr", 1).unwrap();
         assert_eq!(m, manifest(1, 2));
         std::fs::remove_dir_all(base).ok();
@@ -426,6 +503,59 @@ mod tests {
         bytes[last] ^= 0xFF;
         std::fs::write(&path, bytes).unwrap();
         assert!(s.load_shard("ctr", 1, 0).is_err());
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn mmap_and_streamed_loads_are_byte_identical() {
+        let (mut s, base) = tmp_store(false);
+        let payload: Vec<u8> = (0..60_000u32).map(|i| (i * 2654435761) as u8).collect();
+        s.save_shard("ctr", 1, 0, &payload).unwrap();
+        let mapped = s.load_shard("ctr", 1, 0).unwrap();
+        s.set_mmap_load(false);
+        let streamed = s.load_shard("ctr", 1, 0).unwrap();
+        assert!(!streamed.is_mapped());
+        assert_eq!(mapped.as_slice(), streamed.as_slice());
+        assert_eq!(streamed.as_slice(), payload.as_slice());
+        if sys::supported() {
+            assert!(mapped.is_mapped(), "mmap path should engage on this platform");
+            assert_eq!(mapped.into_vec(), payload);
+        }
+        std::fs::remove_dir_all(base).ok();
+    }
+
+    #[test]
+    fn truncated_and_bitflipped_mapped_chunks_error_cleanly() {
+        let (s, base) = tmp_store(false);
+        let payload: Vec<u8> = (0..10_000u32).map(|i| i as u8).collect();
+        s.save_shard("ctr", 1, 0, &payload).unwrap();
+        let path = base.join("local/ctr/v0000000001/shard_0.ckpt");
+        let good = std::fs::read(&path).unwrap();
+
+        // Torn tail: the frame header promises more bytes than the file
+        // holds — a clean truncation error, no hang, no UB.
+        for cut in [good.len() - 1, good.len() / 2, 7, 1] {
+            std::fs::write(&path, &good[..cut]).unwrap();
+            let err = s.load_shard("ctr", 1, 0).unwrap_err();
+            assert!(!err.to_string().is_empty(), "cut={cut}");
+        }
+
+        // Empty file: mmap of zero bytes is rejected before the decode.
+        std::fs::write(&path, b"").unwrap();
+        assert!(s.load_shard("ctr", 1, 0).is_err());
+
+        // Bit flips anywhere — header, length, body — fail the CRC (or
+        // the length sanity check), never crash.
+        for at in [0usize, 3, 5, 8, good.len() / 2, good.len() - 1] {
+            let mut bad = good.clone();
+            bad[at] ^= 0x40;
+            std::fs::write(&path, &bad).unwrap();
+            assert!(s.load_shard("ctr", 1, 0).is_err(), "flip at {at}");
+        }
+
+        // Restoring the original bytes restores the load.
+        std::fs::write(&path, &good).unwrap();
+        assert_eq!(s.load_shard("ctr", 1, 0).unwrap().as_slice(), payload.as_slice());
         std::fs::remove_dir_all(base).ok();
     }
 
@@ -452,7 +582,7 @@ mod tests {
         s.replicate_to_remote("ctr", 1).unwrap();
         // Simulate local disk loss.
         std::fs::remove_dir_all(base.join("local/ctr")).unwrap();
-        assert_eq!(s.load_shard("ctr", 1, 0).unwrap(), b"payload");
+        assert_eq!(s.load_shard("ctr", 1, 0).unwrap().as_slice(), b"payload");
         assert_eq!(s.load_manifest("ctr", 1).unwrap().version, 1);
         assert_eq!(s.list_versions("ctr"), vec![1]);
         std::fs::remove_dir_all(base).ok();
@@ -470,7 +600,7 @@ mod tests {
         assert_eq!(removed, vec![1, 2, 3]);
         // Remote still has everything -> versions remain visible.
         assert_eq!(s.list_versions("ctr"), vec![1, 2, 3, 4, 5]);
-        assert_eq!(s.load_shard("ctr", 1, 0).unwrap(), b"d");
+        assert_eq!(s.load_shard("ctr", 1, 0).unwrap().as_slice(), b"d");
         std::fs::remove_dir_all(base).ok();
     }
 
@@ -512,12 +642,12 @@ mod tests {
     fn delta_chunks_live_beside_base_chunks() {
         let (s, base) = tmp_store(false);
         s.save_chunk("ctr", 2, 0, CkptKind::Delta, b"delta-bytes").unwrap();
-        assert_eq!(s.load_chunk("ctr", 2, 0, CkptKind::Delta).unwrap(), b"delta-bytes");
+        assert_eq!(s.load_chunk("ctr", 2, 0, CkptKind::Delta).unwrap().as_slice(), b"delta-bytes");
         // The base chunk of the same version is a distinct artifact.
         assert!(s.load_shard("ctr", 2, 0).is_err());
         s.save_shard("ctr", 2, 0, b"base-bytes").unwrap();
-        assert_eq!(s.load_shard("ctr", 2, 0).unwrap(), b"base-bytes");
-        assert_eq!(s.load_chunk("ctr", 2, 0, CkptKind::Delta).unwrap(), b"delta-bytes");
+        assert_eq!(s.load_shard("ctr", 2, 0).unwrap().as_slice(), b"base-bytes");
+        assert_eq!(s.load_chunk("ctr", 2, 0, CkptKind::Delta).unwrap().as_slice(), b"delta-bytes");
         std::fs::remove_dir_all(base).ok();
     }
 

@@ -20,12 +20,21 @@
 //! acquire stripe guards in ascending stripe index; batch operations hold
 //! at most one stripe lock at a time. See `DESIGN.md` §"Lock-striped
 //! tables".
+//!
+//! Row value storage is pluggable ([`RowStore`]): the default per-stripe
+//! bump **arena** keeps a stripe's rows in a few large chunks so batched
+//! gathers walk contiguous memory (dead space from evictions is measured
+//! as [`StripedSparseTable::arena_waste_floats`] and reclaimed when the
+//! expire sweep compacts the stripe); `boxed` keeps the historical
+//! one-heap-allocation-per-row layout. Both backings produce byte-
+//! identical checkpoints and deltas.
 
 use crate::codec::{Encode, Reader, Writer};
 use crate::optim::Optimizer;
 use crate::util::hash::{fxhash64, FxHashMap};
 use crate::util::ThreadPool;
 use crate::{Error, Result};
+use std::ptr::NonNull;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
@@ -63,10 +72,192 @@ pub type RowSnapshot = Vec<(u64, Option<Vec<f32>>)>;
 /// `(id, None)` deletes, in arrival order.
 pub type RowOps<'a> = Vec<(u64, Option<&'a [f32]>)>;
 
+// ---------------------------------------------------------------------------
+// Row storage: owned boxes or per-stripe bump arenas
+// ---------------------------------------------------------------------------
+
+/// Backing storage for sparse row values (the `table_row_store` knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RowStore {
+    /// Rows bump-allocate out of per-stripe arenas: pull-path gathers
+    /// walk a few large contiguous chunks instead of one heap box per
+    /// row, and allocation is a cursor bump under the stripe lock the
+    /// caller already holds. Space stranded by evictions/overwrites is
+    /// reclaimed when the expire sweep compacts the stripe.
+    Arena,
+    /// One heap allocation per row (the historical layout). Frees row
+    /// memory eagerly on delete/expire; useful when the working set
+    /// churns much faster than the expire cadence.
+    Boxed,
+}
+
+impl RowStore {
+    /// Parse a config string: `arena` | `boxed`.
+    pub fn parse(s: &str) -> Result<RowStore> {
+        match s {
+            "arena" => Ok(RowStore::Arena),
+            "boxed" => Ok(RowStore::Boxed),
+            other => Err(Error::Config(format!(
+                "unknown table_row_store '{other}' (expected arena|boxed)"
+            ))),
+        }
+    }
+}
+
+/// A row's value storage: an owned heap allocation or a slice of a stripe
+/// arena chunk. Behaves as `[f32]` via `Deref`/`DerefMut`; arena-backed
+/// values do **not** free on drop — their memory belongs to the stripe's
+/// [`Arena`] and is reclaimed wholesale by compaction or reset.
+///
+/// Safety discipline: an arena-backed `RowValues` is only reachable
+/// through the `Stripe` that owns its arena, and every access happens
+/// under that stripe's `RwLock` — the same lock that guards the arena's
+/// chunk list — so the pointed-to memory cannot be freed or compacted
+/// away while any reference exists. [`Clone`] always produces an owned
+/// copy, so rows escaping the lock (e.g.
+/// [`StripedSparseTable::get_row`]) never alias arena memory.
+pub struct RowValues {
+    ptr: NonNull<f32>,
+    len: u32,
+    owned: bool,
+}
+
+// Plain f32 payload; aliasing is governed by the owning stripe's lock
+// (arena-backed) or by unique ownership (owned).
+unsafe impl Send for RowValues {}
+unsafe impl Sync for RowValues {}
+
+impl RowValues {
+    /// Take ownership of a heap allocation (freed on drop).
+    pub fn owned(v: Vec<f32>) -> RowValues {
+        let boxed = v.into_boxed_slice();
+        let len = boxed.len() as u32;
+        let ptr = NonNull::new(Box::into_raw(boxed) as *mut f32).expect("box is non-null");
+        RowValues { ptr, len, owned: true }
+    }
+
+    /// Wrap an arena slice (not freed on drop).
+    ///
+    /// # Safety
+    /// `ptr..ptr + len` must stay valid for as long as this value is
+    /// used — upheld by the stripe-lock discipline described on the type.
+    unsafe fn arena(ptr: NonNull<f32>, len: usize) -> RowValues {
+        RowValues { ptr, len: len as u32, owned: false }
+    }
+
+    /// True when backed by a stripe arena (diagnostics and tests).
+    pub fn is_arena_backed(&self) -> bool {
+        !self.owned
+    }
+}
+
+impl std::ops::Deref for RowValues {
+    type Target = [f32];
+    #[inline]
+    fn deref(&self) -> &[f32] {
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len as usize) }
+    }
+}
+
+impl std::ops::DerefMut for RowValues {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [f32] {
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len as usize) }
+    }
+}
+
+impl Drop for RowValues {
+    fn drop(&mut self) {
+        if self.owned {
+            unsafe {
+                drop(Box::from_raw(std::ptr::slice_from_raw_parts_mut(
+                    self.ptr.as_ptr(),
+                    self.len as usize,
+                )));
+            }
+        }
+    }
+}
+
+impl Clone for RowValues {
+    fn clone(&self) -> RowValues {
+        RowValues::owned(self.to_vec())
+    }
+}
+
+impl PartialEq for RowValues {
+    fn eq(&self, other: &RowValues) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl std::fmt::Debug for RowValues {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(&self[..], f)
+    }
+}
+
+/// Floats per arena chunk (256 KiB). Chunks are boxed slices whose heap
+/// addresses never move when the chunk *list* grows, so handed-out row
+/// pointers stay stable for the arena's lifetime.
+const ARENA_CHUNK_FLOATS: usize = 64 * 1024;
+
+/// Per-stripe bump allocator for row values. Rows allocate by advancing
+/// a cursor in the newest chunk; nothing is freed individually — dead
+/// space (evicted or re-allocated rows) is `allocated` minus live floats
+/// and is reclaimed by [`Stripe::compact_arena`].
+#[derive(Default)]
+struct Arena {
+    chunks: Vec<Box<[f32]>>,
+    /// Bump cursor into the last chunk.
+    used: usize,
+    /// Total floats ever handed out (live rows + dead space).
+    allocated: usize,
+}
+
+impl Arena {
+    /// Bump-allocate `n` floats, opening a new chunk when the current
+    /// one cannot fit the row.
+    fn bump(&mut self, n: usize) -> &mut [f32] {
+        let fits = self.chunks.last().map_or(false, |c| self.used + n <= c.len());
+        if !fits {
+            self.chunks.push(vec![0.0f32; ARENA_CHUNK_FLOATS.max(n)].into_boxed_slice());
+            self.used = 0;
+        }
+        let start = self.used;
+        self.used += n;
+        self.allocated += n;
+        let chunk = self.chunks.last_mut().expect("chunk just ensured");
+        &mut chunk[start..start + n]
+    }
+
+    fn alloc_zeroed(&mut self, n: usize) -> RowValues {
+        let slot = self.bump(n);
+        slot.fill(0.0);
+        let ptr = NonNull::new(slot.as_mut_ptr()).expect("arena slice is non-null");
+        unsafe { RowValues::arena(ptr, n) }
+    }
+
+    fn alloc(&mut self, src: &[f32]) -> RowValues {
+        let slot = self.bump(src.len());
+        slot.copy_from_slice(src);
+        let ptr = NonNull::new(slot.as_mut_ptr()).expect("arena slice is non-null");
+        unsafe { RowValues::arena(ptr, src.len()) }
+    }
+
+    /// Drop every chunk. Only sound when no live row points into them
+    /// (callers clear the row map first).
+    fn reset(&mut self) {
+        self.chunks.clear();
+        self.used = 0;
+        self.allocated = 0;
+    }
+}
+
 /// One sparse row.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Row {
-    pub values: Box<[f32]>,
+    pub values: RowValues,
     pub last_access_ms: u64,
     pub updates: u32,
     /// Checkpoint epoch of the last **value** mutation (see
@@ -205,7 +396,7 @@ impl SparseTable {
                 self.rows.insert(
                     id,
                     Row {
-                        values: vec![0.0; width].into_boxed_slice(),
+                        values: RowValues::owned(vec![0.0; width]),
                         last_access_ms: now_ms,
                         updates: 0,
                         epoch: 0,
@@ -240,7 +431,7 @@ impl SparseTable {
                 self.rows.insert(
                     id,
                     Row {
-                        values: vec![0.0; width].into_boxed_slice(),
+                        values: RowValues::owned(vec![0.0; width]),
                         last_access_ms: now_ms,
                         updates: 0,
                         epoch: 0,
@@ -311,7 +502,7 @@ impl SparseTable {
                 self.rows.insert(
                     id,
                     Row {
-                        values: values.to_vec().into_boxed_slice(),
+                        values: RowValues::owned(values.to_vec()),
                         last_access_ms: now_ms,
                         updates: 0,
                         epoch: 0,
@@ -401,7 +592,7 @@ impl SparseTable {
             self.rows.insert(
                 id,
                 Row {
-                    values: values.into_boxed_slice(),
+                    values: RowValues::owned(values),
                     last_access_ms,
                     updates,
                     epoch: 0,
@@ -460,6 +651,46 @@ struct Stripe {
     /// stripe; lets [`StripedSparseTable::collect_delta`] skip stripes
     /// untouched since the cut.
     max_epoch: u64,
+    /// Bump arena backing this stripe's row values in
+    /// [`RowStore::Arena`] mode (empty and unused in `Boxed` mode).
+    arena: Arena,
+}
+
+impl Stripe {
+    /// Allocate zeroed row values in the configured backing.
+    fn alloc_zeroed(&mut self, store: RowStore, n: usize) -> RowValues {
+        match store {
+            RowStore::Arena => self.arena.alloc_zeroed(n),
+            RowStore::Boxed => RowValues::owned(vec![0.0; n]),
+        }
+    }
+
+    /// Allocate row values initialized from `src`.
+    fn alloc_values(&mut self, store: RowStore, src: &[f32]) -> RowValues {
+        match store {
+            RowStore::Arena => self.arena.alloc(src),
+            RowStore::Boxed => RowValues::owned(src.to_vec()),
+        }
+    }
+
+    /// Adopt an already-owned vector (avoids the copy in boxed mode).
+    fn adopt_values(&mut self, store: RowStore, v: Vec<f32>) -> RowValues {
+        match store {
+            RowStore::Arena => self.arena.alloc(&v),
+            RowStore::Boxed => RowValues::owned(v),
+        }
+    }
+
+    /// Rebuild the arena from live rows, dropping dead space. Row
+    /// pointers are rewritten in place; runs under the stripe's write
+    /// lock, so no reader can observe the old addresses.
+    fn compact_arena(&mut self) {
+        let mut fresh = Arena::default();
+        for row in self.rows.values_mut() {
+            row.values = fresh.alloc(&row.values);
+        }
+        self.arena = fresh;
+    }
 }
 
 /// Sparse parameter table partitioned into N lock stripes.
@@ -489,17 +720,33 @@ pub struct StripedSparseTable {
     /// serving — turn this off so expired ids free *all* their memory
     /// instead of leaving grave entries no prune pass will ever drop.
     track_graves: std::sync::atomic::AtomicBool,
+    /// Row value backing (fixed at construction; see [`RowStore`]).
+    row_store: RowStore,
 }
 
 impl StripedSparseTable {
-    /// New table with `stripes` lock stripes (min 1);
-    /// `entry_threshold = 1` materializes rows immediately.
+    /// New table with `stripes` lock stripes (min 1) and the default
+    /// [`RowStore::Arena`] backing; `entry_threshold = 1` materializes
+    /// rows immediately.
     pub fn new(
         name: impl Into<String>,
         dim: usize,
         optimizer: Arc<dyn Optimizer>,
         entry_threshold: u32,
         stripes: usize,
+    ) -> StripedSparseTable {
+        Self::with_row_store(name, dim, optimizer, entry_threshold, stripes, RowStore::Arena)
+    }
+
+    /// [`Self::new`] with an explicit row-value backing (the cluster
+    /// config's `table_row_store` knob).
+    pub fn with_row_store(
+        name: impl Into<String>,
+        dim: usize,
+        optimizer: Arc<dyn Optimizer>,
+        entry_threshold: u32,
+        stripes: usize,
+        row_store: RowStore,
     ) -> StripedSparseTable {
         let stripes = stripes.max(1);
         StripedSparseTable {
@@ -510,7 +757,27 @@ impl StripedSparseTable {
             stripes: (0..stripes).map(|_| RwLock::new(Stripe::default())).collect(),
             write_epoch: AtomicU64::new(1),
             track_graves: std::sync::atomic::AtomicBool::new(true),
+            row_store,
         }
+    }
+
+    /// Row value backing this table was built with.
+    pub fn row_store(&self) -> RowStore {
+        self.row_store
+    }
+
+    /// Floats resident in stripe arenas but no longer referenced by any
+    /// live row (evicted or overwritten rows awaiting the next expire
+    /// sweep's compaction). Always 0 in [`RowStore::Boxed`] mode.
+    pub fn arena_waste_floats(&self) -> usize {
+        let width = self.row_width();
+        self.stripes
+            .iter()
+            .map(|s| {
+                let s = s.read().unwrap();
+                s.arena.allocated.saturating_sub(s.rows.len() * width)
+            })
+            .sum()
     }
 
     /// Enable/disable tombstone recording (see the field docs; delta
@@ -698,10 +965,11 @@ impl StripedSparseTable {
                     }
                     s.probation.remove(&id);
                     s.graves.remove(&id);
+                    let values = s.alloc_zeroed(self.row_store, width);
                     s.rows.insert(
                         id,
                         Row {
-                            values: vec![0.0; width].into_boxed_slice(),
+                            values,
                             last_access_ms: now_ms,
                             updates: 0,
                             epoch,
@@ -773,10 +1041,11 @@ impl StripedSparseTable {
                     }
                     s.probation.remove(&id);
                     s.graves.remove(&id);
+                    let values = s.alloc_zeroed(self.row_store, width);
                     s.rows.insert(
                         id,
                         Row {
-                            values: vec![0.0; width].into_boxed_slice(),
+                            values,
                             last_access_ms: now_ms,
                             updates: 0,
                             epoch,
@@ -878,10 +1147,11 @@ impl StripedSparseTable {
                                 row.epoch = epoch;
                             }
                             None => {
+                                let values = s.alloc_values(self.row_store, values);
                                 s.rows.insert(
                                     id,
                                     Row {
-                                        values: values.to_vec().into_boxed_slice(),
+                                        values,
                                         last_access_ms: now_ms,
                                         updates: 0,
                                         epoch,
@@ -931,10 +1201,11 @@ impl StripedSparseTable {
                 row.epoch = epoch;
             }
             None => {
+                let values = s.alloc_values(self.row_store, values);
                 s.rows.insert(
                     id,
                     Row {
-                        values: values.to_vec().into_boxed_slice(),
+                        values,
                         last_access_ms: now_ms,
                         updates: 0,
                         epoch,
@@ -971,16 +1242,24 @@ impl StripedSparseTable {
         s.max_epoch = s.max_epoch.max(epoch);
         s.probation.remove(&id);
         s.graves.remove(&id);
-        s.rows.insert(
-            id,
-            Row {
-                values: values.to_vec().into_boxed_slice(),
-                last_access_ms,
-                updates,
-                epoch,
-                access_epoch: 0,
-            },
-        );
+        match s.rows.get_mut(&id) {
+            // Overwrite in place: replay/restore of an existing row must
+            // not strand a fresh arena allocation per record.
+            Some(row) => {
+                row.values.copy_from_slice(values);
+                row.last_access_ms = last_access_ms;
+                row.updates = updates;
+                row.epoch = epoch;
+                row.access_epoch = 0;
+            }
+            None => {
+                let values = s.alloc_values(self.row_store, values);
+                s.rows.insert(
+                    id,
+                    Row { values, last_access_ms, updates, epoch, access_epoch: 0 },
+                );
+            }
+        }
         Ok(())
     }
 
@@ -1016,6 +1295,8 @@ impl StripedSparseTable {
     pub fn expire_pooled(&self, now_ms: u64, ttl_ms: u64, pool: Option<&ThreadPool>) -> Vec<u64> {
         let write_epoch = &self.write_epoch;
         let track_graves = &self.track_graves;
+        let row_store = self.row_store;
+        let width = self.row_width();
         let expire_stripe = |stripe: &RwLock<Stripe>| -> Vec<u64> {
             let mut s = stripe.write().unwrap();
             let epoch = write_epoch.load(Ordering::Relaxed);
@@ -1036,6 +1317,18 @@ impl StripedSparseTable {
                 s.max_epoch = s.max_epoch.max(epoch);
             }
             s.probation.clear();
+            // Arena compaction rides the sweep: once at least a quarter
+            // of the stripe's arena is dead (evicted / overwritten rows),
+            // rebuild it from the live rows so pull-path gathers keep
+            // walking dense memory. Cost is O(live floats), the same
+            // order as the scan that just ran.
+            if row_store == RowStore::Arena {
+                let live = s.rows.len() * width;
+                let dead = s.arena.allocated.saturating_sub(live);
+                if dead > 0 && (s.rows.is_empty() || dead * 4 >= s.arena.allocated) {
+                    s.compact_arena();
+                }
+            }
             stripe_dead
         };
         let mut per_stripe: Vec<Vec<u64>> = (0..self.stripes.len()).map(|_| Vec::new()).collect();
@@ -1513,9 +1806,12 @@ impl StripedSparseTable {
             g.rows.clear();
             g.probation.clear();
             // A full restore replaces everything: restored rows are clean
-            // (epoch 0) and pre-restore tombstones are meaningless.
+            // (epoch 0) and pre-restore tombstones are meaningless. The
+            // arena resets with the rows (safe: the row map was cleared
+            // first, so nothing points into the dropped chunks).
             g.graves.clear();
             g.max_epoch = 0;
+            g.arena.reset();
         }
         for _ in 0..count {
             let id = r.get_varint()?;
@@ -1528,10 +1824,12 @@ impl StripedSparseTable {
                     values.len()
                 )));
             }
-            guards[self.stripe_of(id)].rows.insert(
+            let g = &mut guards[self.stripe_of(id)];
+            let values = g.adopt_values(self.row_store, values);
+            g.rows.insert(
                 id,
                 Row {
-                    values: values.into_boxed_slice(),
+                    values,
                     last_access_ms,
                     updates,
                     epoch: 0,
@@ -2442,5 +2740,171 @@ mod tests {
         assert!(graves_after <= before_graves, "purge left tombstones");
         let (up, del) = t.collect_slot_delta(None, &moved);
         assert!(up.is_empty() && del.is_empty(), "purged slots still collect");
+    }
+
+    // -- row-store backends ---------------------------------------------------
+
+    fn striped_store(store: RowStore, threshold: u32, stripes: usize) -> StripedSparseTable {
+        StripedSparseTable::with_row_store(
+            "w",
+            2,
+            Arc::new(Ftrl::new(FtrlHyper::default())),
+            threshold,
+            stripes,
+            store,
+        )
+    }
+
+    #[test]
+    fn row_store_parses_config_strings() {
+        assert_eq!(RowStore::parse("arena").unwrap(), RowStore::Arena);
+        assert_eq!(RowStore::parse("boxed").unwrap(), RowStore::Boxed);
+        assert!(RowStore::parse("slab").is_err());
+        assert_eq!(striped(1, 4).row_store(), RowStore::Arena); // default
+    }
+
+    #[test]
+    fn arena_and_boxed_tables_are_byte_identical() {
+        // The same op sequence through both backings — pushes through the
+        // entry filter, upserts, restores, deletes, access-stamping pulls
+        // — must produce byte-identical snapshots and delta chunks.
+        let run = |store: RowStore| {
+            let t = striped_store(store, 2, 8);
+            let ids: Vec<u64> = (0..300).collect();
+            let grads: Vec<f32> = (0..600).map(|i| (i as f32 * 0.37).sin()).collect();
+            t.apply_batch(&ids, &grads, 10);
+            t.apply_batch(&ids, &grads, 11); // second pass clears probation
+            t.apply_batch(&ids[..90], &grads[..180], 12);
+            for id in 0..40u64 {
+                t.upsert_row(id * 3, &[id as f32; 6], 13).unwrap();
+            }
+            t.restore_row(7_000, &[1., 2., 3., 4., 5., 6.], 20, 4, 0).unwrap();
+            for id in 0..30u64 {
+                t.delete(id * 5);
+            }
+            let mut out = vec![0.0f32; 100 * 2];
+            t.pull_slot(&ids[..100], "w", 99, &mut out).unwrap();
+            t.set_write_epoch(2);
+            t.apply_batch(&ids[40..80], &grads[80..160], 100);
+            t
+        };
+        let arena = run(RowStore::Arena);
+        let boxed = run(RowStore::Boxed);
+        assert_eq!(arena.len(), boxed.len());
+        let mut a = Writer::new();
+        arena.encode_rows(&mut a);
+        let mut b = Writer::new();
+        boxed.encode_rows(&mut b);
+        let snapshot = a.into_bytes();
+        assert_eq!(snapshot, b.into_bytes(), "snapshot bytes diverge across row stores");
+        let mut da = Writer::new();
+        arena.encode_delta_rows(1, &mut da);
+        let mut db = Writer::new();
+        boxed.encode_delta_rows(1, &mut db);
+        assert_eq!(da.into_bytes(), db.into_bytes(), "delta bytes diverge across row stores");
+        // Pull outputs agree too.
+        let ids: Vec<u64> = (0..300).collect();
+        let mut pa = vec![0.0f32; 600];
+        let mut pb = vec![0.0f32; 600];
+        arena.pull_slot(&ids, "z", 200, &mut pa).unwrap();
+        boxed.pull_slot(&ids, "z", 200, &mut pb).unwrap();
+        assert_eq!(pa, pb);
+        // Arena rows really live in the arena; clones escaping the lock
+        // are always owned.
+        let s = arena.stripes[arena.stripe_of(1)].read().unwrap();
+        assert!(s.rows.get(&1).unwrap().values.is_arena_backed());
+        drop(s);
+        assert!(!arena.get_row(1).unwrap().values.is_arena_backed());
+        // The bytes decode into either backing and re-encode identically.
+        for store in [RowStore::Arena, RowStore::Boxed] {
+            let t = striped_store(store, 2, 4);
+            t.decode_rows(&mut Reader::new(&snapshot)).unwrap();
+            let mut rw = Writer::new();
+            t.encode_rows(&mut rw);
+            assert_eq!(rw.into_bytes(), snapshot, "{store:?} re-encode diverged");
+        }
+    }
+
+    #[test]
+    fn arena_compaction_reclaims_waste_and_preserves_state() {
+        // One stripe so the waste ratio is deterministic.
+        let t = striped_store(RowStore::Arena, 1, 1);
+        let ids: Vec<u64> = (0..400).collect();
+        t.apply_batch(&ids, &vec![1.0f32; 800], 1_000);
+        assert_eq!(t.arena_waste_floats(), 0);
+        for id in 0..200u64 {
+            t.delete(id);
+        }
+        let waste = t.arena_waste_floats();
+        assert_eq!(waste, 200 * 6, "deletes left unexpected waste: {waste}");
+        let mut before = Writer::new();
+        t.encode_rows(&mut before);
+        let before = before.into_bytes();
+        // Expire evicts nothing (everything is fresh) but the sweep still
+        // compacts the stranded half of the arena.
+        let dead = t.expire(1_500, 10_000);
+        assert!(dead.is_empty());
+        assert_eq!(t.arena_waste_floats(), 0, "expire sweep did not compact");
+        let mut after = Writer::new();
+        t.encode_rows(&mut after);
+        assert_eq!(after.into_bytes(), before, "compaction changed table bytes");
+        // Rows still read correctly after the pointer rewrite.
+        let live: Vec<u64> = (200..400).collect();
+        let mut out = vec![0.0f32; live.len() * 2];
+        t.pull_slot(&live, "z", 1_001, &mut out).unwrap();
+        for pair in out.chunks(2) {
+            assert_eq!(pair, &[1.0, 1.0]); // z = g on first update
+        }
+        // Eviction-driven waste is reclaimed in the same sweep.
+        let dead = t.expire(20_000, 5_000);
+        assert_eq!(dead.len(), live.len());
+        assert_eq!(t.len(), 0);
+        assert_eq!(t.arena_waste_floats(), 0, "post-eviction arena not reclaimed");
+    }
+
+    #[test]
+    fn prop_arena_and_boxed_stay_byte_identical_under_random_ops() {
+        use crate::util::prop::{check, PairOf, U64Range, VecOf};
+        check(
+            "arena-boxed-identity",
+            &VecOf(PairOf(U64Range(0, 5), U64Range(0, 60)), 80),
+            40,
+            |ops| {
+                let arena = striped_store(RowStore::Arena, 1, 4);
+                let boxed = striped_store(RowStore::Boxed, 1, 4);
+                for (i, &(kind, id)) in ops.iter().enumerate() {
+                    let now = 1 + i as u64;
+                    let g = [(id as f32) * 0.1 - 1.0, (i as f32) * 0.01];
+                    for t in [&arena, &boxed] {
+                        match kind {
+                            0 | 1 => {
+                                t.apply_batch(&[id], &g, now);
+                            }
+                            2 => {
+                                t.upsert_row(id, &[g[0]; 6], now).unwrap();
+                            }
+                            3 => {
+                                t.delete(id);
+                            }
+                            4 => {
+                                let mut out = [0.0f32; 2];
+                                t.pull_slot(&[id], "w", now, &mut out).unwrap();
+                            }
+                            _ => {
+                                let _ = t.expire(now, 20);
+                            }
+                        }
+                    }
+                }
+                let mut a = Writer::new();
+                arena.encode_rows(&mut a);
+                let mut b = Writer::new();
+                boxed.encode_rows(&mut b);
+                if a.into_bytes() != b.into_bytes() {
+                    return Err("snapshot bytes diverged across row stores".into());
+                }
+                Ok(())
+            },
+        );
     }
 }

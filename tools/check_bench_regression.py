@@ -23,6 +23,14 @@ Kinds:
   shapes: the cached-vs-uncached p99 speedup, the hit rate, and the
   cached/uncached throughput ratio per thread count.
 
+  substrate — checks the E13 zero-copy invariants (every stage present
+  and byte_identical; the vectored-framing, mmap-load, and arena-pull
+  wins are each >= 1.0x on at least 2 of the 3 stages; arena waste is
+  zero after a pure-insert run) and, against a non-provisional
+  baseline, gates on the per-stage win ratios — already same-host
+  ratios of two measurements, so they compare across hosts without a
+  sequential-case normalizer.
+
 Machine-speed normalization: absolute rows/s on a CI runner is not
 comparable to the machine that recorded the baseline, so every comparison
 is normalized by the sequential case (stripes=1, threads=0) of the same
@@ -266,11 +274,73 @@ def check_serving_against_baseline(baseline, current, tol):
     return failures
 
 
+SUBSTRATE_STAGES = ("framing", "mmap_load", "arena_pull", "uring_identity")
+SUBSTRATE_WIN_STAGES = ("framing", "mmap_load", "arena_pull")
+
+
+def check_substrate_intra(current):
+    """E13 invariants every substrate run must hold, baseline or not."""
+    failures = []
+    stages = {r.get("stage") for r in current}
+    for need in SUBSTRATE_STAGES:
+        if need not in stages:
+            failures.append(f"stage {need}: no records")
+    wins = {}
+    for r in current:
+        stage = r.get("stage")
+        if stage in SUBSTRATE_STAGES and not r.get("byte_identical"):
+            failures.append(f"{stage} record is not byte_identical")
+        if stage in SUBSTRATE_WIN_STAGES:
+            w = _num(r, "win", stage, failures)
+            if w is not None:
+                wins[stage] = w
+        if stage == "arena_pull":
+            waste = _num(r, "arena_waste_floats", "arena_pull", failures)
+            if waste is not None and waste != 0:
+                failures.append(f"arena_pull: {waste} wasted floats after pure inserts")
+        if stage == "uring_identity":
+            # Availability is informational (sandboxes may deny rings),
+            # but the field itself must be present and boolean.
+            if not isinstance(r.get("uring_available"), bool):
+                failures.append("uring_identity: uring_available missing or non-boolean")
+    winning = sum(1 for w in wins.values() if w >= 1.0)
+    if len(wins) == len(SUBSTRATE_WIN_STAGES) and winning < 2:
+        failures.append(
+            "zero-copy wins on only "
+            f"{winning}/3 stages ({', '.join(f'{s}={w:.2f}x' for s, w in sorted(wins.items()))})"
+        )
+    return failures
+
+
+def check_substrate_against_baseline(baseline, current, tol):
+    """Win ratios are same-host measurement pairs, so they compare
+    across hosts directly."""
+    failures = []
+    base = {r.get("stage"): r for r in baseline if r.get("stage") in SUBSTRATE_WIN_STAGES}
+    cur = {r.get("stage"): r for r in current if r.get("stage") in SUBSTRATE_WIN_STAGES}
+    for stage, b in base.items():
+        c = cur.get(stage)
+        if c is None:
+            failures.append(f"{stage}: missing from current run")
+            continue
+        b_win = _num(b, "win", f"baseline {stage}", failures)
+        c_win = _num(c, "win", stage, failures)
+        if b_win is None or c_win is None:
+            continue
+        # Absolute 0.05 headroom: wins near 1.0x are noisy on small runs.
+        if c_win < (1.0 - tol) * b_win - 0.05:
+            failures.append(
+                f"{stage}: win {c_win:.3f}x < "
+                f"{(1.0 - tol) * b_win - 0.05:.3f}x (baseline {b_win:.3f}x)"
+            )
+    return failures
+
+
 def main():
     args = sys.argv[1:]
     kind = "sync_pipeline"
     if args and args[0] == "--kind":
-        if len(args) < 2 or args[1] not in ("sync_pipeline", "reshard", "serving"):
+        if len(args) < 2 or args[1] not in ("sync_pipeline", "reshard", "serving", "substrate"):
             print(__doc__)
             return 2
         kind = args[1]
@@ -286,6 +356,8 @@ def main():
         failures = check_reshard_intra(current)
     elif kind == "serving":
         failures = check_serving_intra(current)
+    elif kind == "substrate":
+        failures = check_substrate_intra(current)
     else:
         failures = check_intra_run(current)
     provisional = any(r.get("stage") == "meta" and r.get("provisional") for r in baseline)
@@ -296,6 +368,8 @@ def main():
         failures += check_reshard_against_baseline(baseline, current, tol)
     elif kind == "serving":
         failures += check_serving_against_baseline(baseline, current, tol)
+    elif kind == "substrate":
+        failures += check_substrate_against_baseline(baseline, current, tol)
     else:
         failures += check_against_baseline(baseline, current, tol)
 

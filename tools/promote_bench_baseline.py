@@ -33,6 +33,13 @@ Kinds:
     - cached pulls byte-identical, hit rate >= 0.5, p99 speedup >= 2x,
       one-tick freshness held;
     - not itself provisional.
+
+  substrate — validates the E13 zero-copy invariants run:
+    - every stage present (framing, mmap_load, arena_pull,
+      uring_identity), each byte_identical;
+    - zero-copy win >= 1.0x on at least 2 of the 3 measured stages and
+      zero arena waste;
+    - not itself provisional.
 """
 
 import json
@@ -47,6 +54,7 @@ from check_bench_regression import (  # noqa: E402
     check_intra_run,
     check_reshard_intra,
     check_serving_intra,
+    check_substrate_intra,
 )
 
 
@@ -73,10 +81,15 @@ def validate_serving(candidate):
     return check_serving_intra(candidate)
 
 
+def validate_substrate(candidate):
+    return check_substrate_intra(candidate)
+
+
 VALIDATORS = {
     "sync_pipeline": validate_sync_pipeline,
     "reshard": validate_reshard,
     "serving": validate_serving,
+    "substrate": validate_substrate,
 }
 
 
