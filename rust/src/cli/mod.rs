@@ -4,6 +4,7 @@
 
 mod args;
 mod roles;
+mod top;
 
 pub use args::Args;
 
@@ -22,6 +23,7 @@ ROLES:
     slave       one slave PS replica (serving-facing)
     trainer     training worker loop
     predictor   serving worker loop
+    top         live one-screen ops dashboard over a metrics endpoint
     help        this text
 
 COMMON FLAGS:
@@ -47,6 +49,17 @@ DISTRIBUTED (one process per role, same machine or not):
     weips trainer   --masters-at 127.0.0.1:7200,127.0.0.1:7201,... --steps 1000
     weips predictor --slaves-at "127.0.0.1:7300,127.0.0.1:7301;127.0.0.1:7302" \
                     --requests 1000
+
+OPS:
+    weips top --endpoint 127.0.0.1:9100 [--interval-ms 1000] [--once 1]
+              live dashboard: push→visible p50/p99, queue depth, scatter
+              lag, WAL fsync lag, slot-heat sparkline, QoS sheds, engaged
+              degradation modes, trace-stage breakdown. Prefers the
+              endpoint's aggregated /cluster view, falls back to /metrics.
+    Tracing:  every role accepts --trace-sample-every N (sample every
+              n-th sync batch into GET /trace; 0 = off) plus
+              --health-scatter-lag-max / --health-wal-unsynced-max
+              readiness bounds for /healthz.
 "#;
 
 /// CLI entry point.
@@ -63,6 +76,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "slave" => roles::run_slave(&args),
         "trainer" => roles::run_trainer(&args),
         "predictor" => roles::run_predictor(&args),
+        "top" => top::run_top(&args),
         "help" | "--help" | "-h" => {
             println!("{HELP}");
             Ok(())

@@ -65,6 +65,11 @@ fn cluster_config(args: &Args) -> Result<ClusterConfig> {
     if let Some(p) = args.get("poll-mode") {
         cfg.rpc_poll_mode = crate::net::PollMode::parse(p)?;
     }
+    cfg.trace_sample_every = args.get_u64("trace-sample-every", cfg.trace_sample_every)?;
+    cfg.health_scatter_lag_max =
+        args.get_u64("health-scatter-lag-max", cfg.health_scatter_lag_max)?;
+    cfg.health_wal_unsynced_max =
+        args.get_u64("health-wal-unsynced-max", cfg.health_wal_unsynced_max)?;
     Ok(cfg)
 }
 
@@ -77,6 +82,18 @@ fn serve_role_metrics(
     args: &Args,
     cfg: &ClusterConfig,
 ) -> Result<Option<crate::metrics::http::MetricsServer>> {
+    // Process-global observability knobs: the trace sampling cadence and
+    // the /healthz readiness bounds apply whether or not this role serves
+    // the endpoint (another process may scrape it via --metrics-targets).
+    crate::trace::configure(cfg.trace_sample_every);
+    crate::metrics::set_health_bound(
+        "scatter_lag_records",
+        Some(cfg.health_scatter_lag_max as f64),
+    );
+    crate::metrics::set_health_bound(
+        "wal_unsynced_appends",
+        Some(cfg.health_wal_unsynced_max as f64),
+    );
     if !cfg.metrics_enabled {
         return Ok(None);
     }
@@ -267,6 +284,7 @@ pub fn run_master(args: &Args) -> Result<()> {
     let mut store = CheckpointStore::new(data_dir.clone(), None);
     store.set_mmap_load(cfg.ckpt_mmap_load);
     let store = Arc::new(store);
+    store.register_metrics("master");
     let incremental_mode = cfg.ckpt_mode == CkptMode::Incremental;
     if !incremental_mode {
         // No delta consumer: skip tombstone tracking (expired rows free

@@ -1,0 +1,366 @@
+//! `weips top`: one-screen live ops dashboard over the metrics feed.
+//!
+//! Polls a role's metrics endpoint — preferring the aggregated
+//! `/cluster` view when the endpoint has targets configured, falling
+//! back to its own `/metrics` otherwise — and renders the streaming-sync
+//! health picture the runbook cares about: push→visible p50/p99, queue
+//! depth, scatter lag, WAL fsync lag, per-slot heat as a sparkline, QoS
+//! sheds, engaged degradation modes and the update-journey trace-stage
+//! breakdown. Everything is computed from parsed exposition samples by
+//! [`render`], a pure function the unit tests drive directly.
+
+use std::time::Duration;
+
+use super::Args;
+use crate::metrics::http::http_get;
+use crate::metrics::{parse_exposition, Sample};
+use crate::{Error, Result};
+
+const FETCH_TIMEOUT: Duration = Duration::from_secs(4);
+const SPARK: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+/// Slot-heat buckets shown in the sparkline (matches the exporter's
+/// `HEAT_BUCKETS` ceiling).
+const HEAT_BUCKETS: usize = 64;
+
+/// `weips top --endpoint host:port [--interval-ms 1000] [--once 1]`.
+pub fn run_top(args: &Args) -> Result<()> {
+    let endpoint = args
+        .get("endpoint")
+        .ok_or_else(|| {
+            Error::Config("top needs --endpoint host:port (a role's metrics address)".into())
+        })?
+        .to_string();
+    let interval = Duration::from_millis(args.get_u64("interval-ms", 1000)?.max(100));
+    let once = args.get_or("once", "0") != "0";
+    loop {
+        let (source, body) = fetch(&endpoint)?;
+        let samples = parse_exposition(&body)
+            .map_err(|e| Error::State(format!("bad exposition from {endpoint}: {e}")))?;
+        let screen = render(&samples);
+        if once {
+            println!("weips top — {endpoint} ({source})\n{screen}");
+            return Ok(());
+        }
+        // ANSI clear + home: a one-screen live view, not a scrolling log.
+        print!("\x1b[2J\x1b[H");
+        println!(
+            "weips top — {endpoint} ({source}, every {}ms, ctrl-c quits)\n{screen}",
+            interval.as_millis()
+        );
+        std::thread::sleep(interval);
+    }
+}
+
+/// Fetch the freshest feed: `/cluster` (fleet-merged) when the endpoint
+/// aggregates, else its own `/metrics`.
+fn fetch(endpoint: &str) -> Result<(&'static str, String)> {
+    if let Ok(body) = http_get(endpoint, "/cluster", FETCH_TIMEOUT) {
+        return Ok(("/cluster", body));
+    }
+    let body = http_get(endpoint, "/metrics", FETCH_TIMEOUT)
+        .map_err(|e| Error::State(format!("scrape {endpoint} failed: {e}")))?;
+    Ok(("/metrics", body))
+}
+
+/// Sum of every sample of `name` (across shards/replicas/instances).
+fn sum_of(samples: &[Sample], name: &str) -> f64 {
+    samples.iter().filter(|s| s.name == name).map(|s| s.value).sum()
+}
+
+/// Cumulative histogram buckets of `name` merged across instances:
+/// sorted `(le_seconds, cumulative_count)` pairs (`+Inf` last).
+fn buckets_of(samples: &[Sample], name: &str) -> Vec<(f64, f64)> {
+    let bucket_name = format!("{name}_bucket");
+    let mut acc: Vec<(f64, f64)> = Vec::new();
+    for s in samples.iter().filter(|s| s.name == bucket_name) {
+        let le = match s.label("le") {
+            Some("+Inf") => f64::INFINITY,
+            Some(v) => match v.parse::<f64>() {
+                Ok(x) => x,
+                Err(_) => continue,
+            },
+            None => continue,
+        };
+        match acc.iter_mut().find(|(b, _)| *b == le) {
+            Some((_, c)) => *c += s.value,
+            None => acc.push((le, s.value)),
+        }
+    }
+    acc.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    acc
+}
+
+/// Quantile (0..1) from cumulative buckets, interpolated within the
+/// landing bucket. 0 when the histogram is empty.
+fn quantile(buckets: &[(f64, f64)], q: f64) -> f64 {
+    let total = buckets.last().map(|(_, c)| *c).unwrap_or(0.0);
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let target = q * total;
+    let mut prev_le = 0.0;
+    let mut prev_count = 0.0;
+    for &(le, count) in buckets {
+        if count >= target {
+            if le.is_infinite() {
+                return prev_le; // best lower bound for the open bucket
+            }
+            let in_bucket = count - prev_count;
+            let frac = if in_bucket > 0.0 { (target - prev_count) / in_bucket } else { 1.0 };
+            return prev_le + (le - prev_le) * frac;
+        }
+        prev_le = le;
+        prev_count = count;
+    }
+    prev_le
+}
+
+/// Unicode sparkline scaled to the slice max (all-blank when flat zero).
+fn sparkline(values: &[f64]) -> String {
+    let max = values.iter().cloned().fold(0.0_f64, f64::max);
+    values
+        .iter()
+        .map(|v| {
+            if max <= 0.0 {
+                SPARK[0]
+            } else {
+                SPARK[((v / max) * 7.0).round().clamp(0.0, 7.0) as usize]
+            }
+        })
+        .collect()
+}
+
+/// Human latency: ns under a µs, µs under a ms, ms under a s.
+fn fmt_latency(seconds: f64) -> String {
+    if seconds >= 1.0 {
+        format!("{seconds:.2}s")
+    } else if seconds >= 1e-3 {
+        format!("{:.1}ms", seconds * 1e3)
+    } else if seconds >= 1e-6 {
+        format!("{:.1}µs", seconds * 1e6)
+    } else {
+        format!("{:.0}ns", seconds * 1e9)
+    }
+}
+
+/// Distinct values of `label` on `name` samples, sorted.
+fn label_values(samples: &[Sample], name: &str, label: &str) -> Vec<String> {
+    let mut vals: Vec<String> = samples
+        .iter()
+        .filter(|s| s.name == name && s.value != 0.0)
+        .filter_map(|s| s.label(label).map(|v| v.to_string()))
+        .collect();
+    vals.sort();
+    vals.dedup();
+    vals
+}
+
+/// Render the dashboard from parsed exposition samples (pure; the unit
+/// tests feed synthetic samples straight in).
+pub fn render(samples: &[Sample]) -> String {
+    let mut out = String::new();
+
+    // -- streaming sync: the second-level deployment headline ------------
+    let visible = buckets_of(samples, "weips_push_visible_latency_seconds");
+    let applied = sum_of(samples, "weips_scatter_batches_applied_total");
+    out.push_str(&format!(
+        "sync    push→visible p50 {}  p99 {}  ({} batches applied)\n",
+        fmt_latency(quantile(&visible, 0.5)),
+        fmt_latency(quantile(&visible, 0.99)),
+        applied as u64,
+    ));
+    out.push_str(&format!(
+        "        queue depth {:>8}   scatter lag {:>8}   WAL unsynced {:>6}   fsync p99 {}\n",
+        sum_of(samples, "weips_queue_depth_records") as u64,
+        sum_of(samples, "weips_scatter_lag_records") as u64,
+        sum_of(samples, "weips_wal_unsynced_appends") as u64,
+        fmt_latency(quantile(&buckets_of(samples, "weips_wal_fsync_duration_seconds"), 0.99)),
+    ));
+
+    // -- per-slot write heat ---------------------------------------------
+    let mut heat = vec![0.0; HEAT_BUCKETS];
+    let mut seen_heat = false;
+    for s in samples.iter().filter(|s| s.name == "weips_slot_pushes_total") {
+        if let Some(b) = s.label("slot_bucket").and_then(|v| v.parse::<usize>().ok()) {
+            if b < HEAT_BUCKETS {
+                heat[b] += s.value;
+                seen_heat = true;
+            }
+        }
+    }
+    if seen_heat {
+        let top = heat.iter().cloned().fold(0.0_f64, f64::max);
+        out.push_str(&format!("heat    {}  (max bucket {})\n", sparkline(&heat), top as u64));
+    }
+
+    // -- admission control ------------------------------------------------
+    let shed = sum_of(samples, "weips_rpc_class_shed_total");
+    let dispatched = sum_of(samples, "weips_rpc_class_dispatches_total");
+    if shed > 0.0 || dispatched > 0.0 {
+        out.push_str(&format!(
+            "qos     dispatched {}   shed {}\n",
+            dispatched as u64, shed as u64
+        ));
+    }
+
+    // -- engaged degradation state ---------------------------------------
+    let polls = label_values(samples, "weips_rpc_engaged_poll_mode", "mode");
+    let stores = label_values(samples, "weips_table_row_store_info", "store");
+    let mmap_series: Vec<&Sample> =
+        samples.iter().filter(|s| s.name == "weips_ckpt_mmap_engaged").collect();
+    if !polls.is_empty() || !stores.is_empty() || !mmap_series.is_empty() {
+        let mmap = if mmap_series.is_empty() {
+            "-".to_string()
+        } else if mmap_series.iter().all(|s| s.value >= 1.0) {
+            "on".to_string()
+        } else {
+            "off".to_string()
+        };
+        out.push_str(&format!(
+            "engaged rpc poll [{}]   row store [{}]   ckpt mmap {}\n",
+            if polls.is_empty() { "-".to_string() } else { polls.join(",") },
+            if stores.is_empty() { "-".to_string() } else { stores.join(",") },
+            mmap,
+        ));
+    }
+
+    // -- update-journey stage breakdown ----------------------------------
+    let mut stage_lines = Vec::new();
+    for stage in crate::trace::STAGES {
+        let (mut sum, mut count) = (0.0, 0.0);
+        for s in samples.iter().filter(|s| s.label("stage") == Some(stage)) {
+            if s.name == "weips_trace_stage_duration_seconds_sum" {
+                sum += s.value;
+            } else if s.name == "weips_trace_stage_duration_seconds_count" {
+                count += s.value;
+            }
+        }
+        if count > 0.0 {
+            stage_lines.push(format!("{stage} {}", fmt_latency(sum / count)));
+        }
+    }
+    if !stage_lines.is_empty() {
+        out.push_str(&format!("trace   mean/stage: {}\n", stage_lines.join("  ")));
+    }
+
+    // -- model quality -----------------------------------------------------
+    let auc = samples.iter().find(|s| s.name == "weips_model_auc").map(|s| s.value);
+    if let Some(auc) = auc {
+        out.push_str(&format!("model   auc {auc:.4}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(name: &str, labels: &[(&str, &str)], value: f64) -> Sample {
+        Sample {
+            name: name.into(),
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+            value,
+        }
+    }
+
+    #[test]
+    fn quantile_interpolates_and_handles_empty() {
+        assert_eq!(quantile(&[], 0.5), 0.0);
+        // 100 obs: 50 in (0, 0.01], 50 in (0.01, 0.1].
+        let b = vec![(0.01, 50.0), (0.1, 100.0), (f64::INFINITY, 100.0)];
+        let p50 = quantile(&b, 0.5);
+        assert!((p50 - 0.01).abs() < 1e-9, "p50 {p50}");
+        let p75 = quantile(&b, 0.75);
+        assert!(p75 > 0.01 && p75 < 0.1, "p75 {p75}");
+        // Everything in the +Inf bucket reports the highest finite bound.
+        let open = vec![(0.01, 0.0), (f64::INFINITY, 10.0)];
+        assert_eq!(quantile(&open, 0.99), 0.01);
+    }
+
+    #[test]
+    fn sparkline_scales_to_max() {
+        let line = sparkline(&[0.0, 1.0, 4.0, 8.0]);
+        assert_eq!(line.chars().count(), 4);
+        assert!(line.starts_with('▁'));
+        assert!(line.ends_with('█'));
+        assert_eq!(sparkline(&[0.0, 0.0]), "▁▁");
+    }
+
+    #[test]
+    fn render_covers_every_dashboard_section() {
+        let mut s = vec![
+            // push→visible histogram: 2 obs ≤ 10ms, 2 more ≤ 100ms.
+            sample(
+                "weips_push_visible_latency_seconds_bucket",
+                &[("role", "slave"), ("shard", "0"), ("replica", "0"), ("le", "0.01")],
+                2.0,
+            ),
+            sample(
+                "weips_push_visible_latency_seconds_bucket",
+                &[("role", "slave"), ("shard", "0"), ("replica", "0"), ("le", "0.1")],
+                4.0,
+            ),
+            sample(
+                "weips_push_visible_latency_seconds_bucket",
+                &[("role", "slave"), ("shard", "0"), ("replica", "0"), ("le", "+Inf")],
+                4.0,
+            ),
+            sample("weips_scatter_batches_applied_total", &[("role", "slave")], 4.0),
+            sample("weips_queue_depth_records", &[("partition", "0")], 7.0),
+            sample("weips_scatter_lag_records", &[("shard", "0")], 3.0),
+            sample("weips_wal_unsynced_appends", &[("role", "master")], 2.0),
+            sample("weips_rpc_class_shed_total", &[("class", "bulk")], 5.0),
+            sample("weips_rpc_engaged_poll_mode", &[("server", "a"), ("mode", "epoll")], 1.0),
+            sample("weips_table_row_store_info", &[("shard", "0"), ("store", "arena")], 1.0),
+            sample("weips_ckpt_mmap_engaged", &[("role", "master")], 1.0),
+            sample(
+                "weips_trace_stage_duration_seconds_sum",
+                &[("role", "master"), ("stage", "gather_emit")],
+                0.004,
+            ),
+            sample(
+                "weips_trace_stage_duration_seconds_count",
+                &[("role", "master"), ("stage", "gather_emit")],
+                2.0,
+            ),
+            sample("weips_model_auc", &[("role", "trainer")], 0.75),
+        ];
+        for b in 0..4 {
+            let bucket = b.to_string();
+            s.push(sample(
+                "weips_slot_pushes_total",
+                &[("role", "master"), ("slot_bucket", bucket.as_str())],
+                b as f64,
+            ));
+        }
+        let screen = render(&s);
+        assert!(screen.contains("push→visible p50 10.0ms"), "{screen}");
+        assert!(screen.contains("queue depth        7"), "{screen}");
+        assert!(screen.contains("scatter lag        3"), "{screen}");
+        assert!(screen.contains("WAL unsynced      2"), "{screen}");
+        assert!(screen.contains("heat    "), "{screen}");
+        assert!(screen.contains("shed 5"), "{screen}");
+        assert!(screen.contains("rpc poll [epoll]"), "{screen}");
+        assert!(screen.contains("row store [arena]"), "{screen}");
+        assert!(screen.contains("ckpt mmap on"), "{screen}");
+        assert!(screen.contains("gather_emit 2.0ms"), "{screen}");
+        assert!(screen.contains("auc 0.7500"), "{screen}");
+    }
+
+    #[test]
+    fn render_is_quiet_on_an_empty_scrape() {
+        let screen = render(&[]);
+        // The sync headline always prints; optional sections stay out.
+        assert!(screen.contains("push→visible"));
+        assert!(!screen.contains("engaged"));
+        assert!(!screen.contains("trace"));
+    }
+
+    #[test]
+    fn fmt_latency_picks_sane_units() {
+        assert_eq!(fmt_latency(2.5), "2.50s");
+        assert_eq!(fmt_latency(0.0123), "12.3ms");
+        assert_eq!(fmt_latency(42e-6), "42.0µs");
+        assert_eq!(fmt_latency(5e-9), "5ns");
+    }
+}

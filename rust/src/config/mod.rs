@@ -318,6 +318,19 @@ pub struct ClusterConfig {
     /// Port for the `/metrics` endpoint (0 = ephemeral; the bound
     /// address is printed at startup either way).
     pub metrics_port: u16,
+    /// Update-journey tracing: sample every n-th sync batch per shard
+    /// into the `/trace` span ring (0 = off; the hot-path cost is then
+    /// one relaxed atomic load + branch per stage). Sync-batch bytes are
+    /// identical regardless — the trace context is derived from envelope
+    /// fields, never carried on the wire.
+    pub trace_sample_every: u64,
+    /// `/healthz` degrades (`degraded: ...` body) when a replica's
+    /// scatter lag exceeds this many records (0 = never degrade on lag).
+    pub health_scatter_lag_max: u64,
+    /// `/healthz` degrades when WAL appends since the last fsync exceed
+    /// this bound (0 = never degrade on WAL lag; flush-only WALs never
+    /// register the probe).
+    pub health_wal_unsynced_max: u64,
 }
 
 impl Default for ClusterConfig {
@@ -356,6 +369,9 @@ impl Default for ClusterConfig {
             session_ttl_ms: 3_000,
             metrics_enabled: true,
             metrics_port: 0,
+            trace_sample_every: 0,
+            health_scatter_lag_max: 1_000_000,
+            health_wal_unsynced_max: 1_000_000,
         }
     }
 }
@@ -491,6 +507,15 @@ impl ClusterConfig {
         if let Some(v) = doc.get_int("cluster", "metrics_port") {
             c.metrics_port = v as u16;
         }
+        if let Some(v) = doc.get_int("cluster", "trace_sample_every") {
+            c.trace_sample_every = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_int("cluster", "health_scatter_lag_max") {
+            c.health_scatter_lag_max = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_int("cluster", "health_wal_unsynced_max") {
+            c.health_wal_unsynced_max = v.max(0) as u64;
+        }
         Ok(c)
     }
 }
@@ -615,6 +640,23 @@ mod tests {
         assert_eq!(opts.poll_min_ms, 2);
         assert_eq!(opts.poll_max_ms, 40);
         assert_eq!(opts.mode, crate::net::PollMode::Peek);
+    }
+
+    #[test]
+    fn trace_and_health_knobs_parse() {
+        let doc = TomlDoc::parse(
+            "[cluster]\ntrace_sample_every = 64\nhealth_scatter_lag_max = 5000\nhealth_wal_unsynced_max = 0\n",
+        )
+        .unwrap();
+        let c = ClusterConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.trace_sample_every, 64);
+        assert_eq!(c.health_scatter_lag_max, 5000);
+        assert_eq!(c.health_wal_unsynced_max, 0);
+        // Defaults: tracing off, generous (but finite) health bounds.
+        let d = ClusterConfig::default();
+        assert_eq!(d.trace_sample_every, 0);
+        assert!(d.health_scatter_lag_max > 0);
+        assert!(d.health_wal_unsynced_max > 0);
     }
 
     #[test]

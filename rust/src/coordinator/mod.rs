@@ -112,6 +112,38 @@ pub struct LocalCluster {
     pub sim_time_ms: std::sync::atomic::AtomicU64,
 }
 
+/// (model, table, shard, seq, created_ms) of a sampled batch in a sync
+/// tick — the envelope context needed to attribute the tick's WAL append
+/// to the batch's update-journey trace.
+type SampledMeta = (String, String, u32, u64, u64);
+
+fn collect_sampled(batches: &[crate::proto::SyncBatch], out: &mut Vec<SampledMeta>) {
+    for b in batches {
+        if crate::trace::sampled(b.seq) {
+            out.push((b.model.clone(), b.table.clone(), b.shard, b.seq, b.created_ms));
+        }
+    }
+}
+
+/// The WAL journals the whole tick's dirty windows in one pass, so the
+/// tick-level append timing is attributed to every sampled batch pushed
+/// this tick.
+fn record_wal_spans(sampled: &[SampledMeta], start_ns: u64, dur_ns: u64) {
+    for (model, table, shard, seq, created_ms) in sampled {
+        crate::trace::record_stage(
+            crate::trace::trace_id(model, table, *shard, *seq),
+            "wal_append",
+            "master",
+            format!("shard={shard}"),
+            start_ns,
+            dur_ns,
+            *created_ms,
+            *seq,
+            *shard,
+        );
+    }
+}
+
 impl LocalCluster {
     /// Build and wire the whole cluster.
     pub fn new(opts: ClusterOpts) -> Result<LocalCluster> {
@@ -119,6 +151,18 @@ impl LocalCluster {
         let cfg = opts.cluster.clone();
         let spec = ModelSpec::derive(&cfg.model_name, cfg.model_kind, engine.config());
         let clock: Arc<dyn Clock> = Arc::new(SystemClock);
+        // Update-journey tracing + readiness bounds are process-global
+        // (the trace sink and health registry are), configured from the
+        // cluster knobs at bring-up.
+        crate::trace::configure(cfg.trace_sample_every);
+        crate::metrics::set_health_bound(
+            "scatter_lag_records",
+            Some(cfg.health_scatter_lag_max as f64),
+        );
+        crate::metrics::set_health_bound(
+            "wal_unsynced_appends",
+            Some(cfg.health_wal_unsynced_max as f64),
+        );
 
         let (data_dir, owns_data_dir) = match opts.data_dir {
             Some(d) => (d, false),
@@ -137,6 +181,7 @@ impl LocalCluster {
         );
         store.set_mmap_load(cfg.ckpt_mmap_load);
         let store = Arc::new(store);
+        store.register_metrics("master");
         let wal = Arc::new(WalLog::open_with(
             data_dir.join("wal"),
             cfg.master_shards as usize,
@@ -388,6 +433,8 @@ impl LocalCluster {
     /// journal each master's dirty window to the WAL, then scatter on
     /// every slave replica. Returns (batches pushed, applied).
     pub fn sync_tick(&self) -> Result<(usize, usize)> {
+        let tracing = crate::trace::enabled();
+        let mut sampled = Vec::new();
         let mut pushed = 0;
         for (i, g) in self.gathers.iter().enumerate() {
             // Hold the gather lock across the push: concurrent flushers
@@ -397,9 +444,17 @@ impl LocalCluster {
             let mut g = g.lock().unwrap();
             let batches = g.poll();
             pushed += batches.len();
+            if tracing {
+                collect_sampled(&batches, &mut sampled);
+            }
             self.pushers[i].push_all(&batches)?;
         }
+        let wal_start = if tracing { crate::util::mono_ns() } else { 0 };
         self.journal_wal()?;
+        if !sampled.is_empty() {
+            let wal_ns = crate::util::mono_ns().saturating_sub(wal_start);
+            record_wal_spans(&sampled, wal_start, wal_ns);
+        }
         let mut applied = 0;
         for shard in &self.scatters {
             for sc in shard {
@@ -431,12 +486,22 @@ impl LocalCluster {
     /// Force every pending update through the pipeline until slaves are
     /// fully caught up.
     pub fn flush_sync(&self) -> Result<()> {
+        let tracing = crate::trace::enabled();
+        let mut sampled = Vec::new();
         for (i, g) in self.gathers.iter().enumerate() {
             let mut g = g.lock().unwrap();
             let batches = g.flush_now();
+            if tracing {
+                collect_sampled(&batches, &mut sampled);
+            }
             self.pushers[i].push_all(&batches)?;
         }
+        let wal_start = if tracing { crate::util::mono_ns() } else { 0 };
         self.journal_wal()?;
+        if !sampled.is_empty() {
+            let wal_ns = crate::util::mono_ns().saturating_sub(wal_start);
+            record_wal_spans(&sampled, wal_start, wal_ns);
+        }
         loop {
             let mut lag = 0;
             for shard in &self.scatters {

@@ -50,6 +50,7 @@ pub mod server;
 pub mod storage;
 pub mod sync;
 pub mod table;
+pub mod trace;
 pub mod util;
 pub mod worker;
 

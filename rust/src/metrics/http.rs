@@ -13,12 +13,16 @@
 //!
 //! Routes:
 //! * `GET /metrics` — Prometheus text exposition of the global registry.
-//! * `GET /healthz` — liveness probe (`ok`).
+//! * `GET /healthz` — readiness probe: `ok`, or `degraded: <reasons>`
+//!   when a bounded probe trips ([`super::health_body`]). Always HTTP
+//!   200, so status-code liveness checks still pass on a stale replica.
 //! * `GET /cluster` — scrape every configured peer target and merge the
 //!   expositions with per-`instance` labels ([`super::aggregate`]); the
 //!   scheduler serves the cluster-wide view this way. A target that is
 //!   this server itself is rendered in-process (scraping yourself over a
 //!   single-threaded loop would deadlock).
+//! * `GET /trace` / `GET /trace/<hex id>` — recent sampled update-journey
+//!   trace chains as JSON ([`crate::trace`]).
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
@@ -184,21 +188,38 @@ impl MetricsServer {
             .and_then(|l| l.split_whitespace().nth(1))
             .map(|p| p.split('?').next().unwrap_or(p).to_string())
             .unwrap_or_default();
-        let (status, body) = match path.as_str() {
-            "/metrics" => ("200 OK", super::render()),
-            "/healthz" => ("200 OK", "ok\n".to_string()),
+        let (status, body, json) = match path.as_str() {
+            "/metrics" => ("200 OK", super::render(), false),
+            // Readiness: stays HTTP 200 either way (liveness probes keep
+            // passing); the body distinguishes `ok` from `degraded: ...`
+            // when a bounded probe (scatter lag, WAL unsynced) trips.
+            "/healthz" => ("200 OK", super::health_body(), false),
             "/cluster" => {
                 let targets = targets.lock().unwrap().clone();
                 if targets.is_empty() {
-                    ("404 Not Found", "no cluster targets configured\n".to_string())
+                    ("404 Not Found", "no cluster targets configured\n".to_string(), false)
                 } else {
-                    ("200 OK", scrape_targets(&targets, local))
+                    ("200 OK", scrape_targets(&targets, local), false)
                 }
             }
-            _ => ("404 Not Found", "not found\n".to_string()),
+            "/trace" => ("200 OK", crate::trace::render_recent_json(32), true),
+            p if p.starts_with("/trace/") => {
+                match crate::trace::parse_id(&p["/trace/".len()..])
+                    .and_then(crate::trace::render_trace_json)
+                {
+                    Some(body) => ("200 OK", body, true),
+                    None => ("404 Not Found", "trace not found\n".to_string(), false),
+                }
+            }
+            _ => ("404 Not Found", "not found\n".to_string(), false),
+        };
+        let content_type = if json {
+            "application/json; charset=utf-8"
+        } else {
+            "text/plain; version=0.0.4; charset=utf-8"
         };
         let response = format!(
-            "HTTP/1.0 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+            "HTTP/1.0 {status}\r\nContent-Type: {content_type}\r\n\
              Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
             body.len()
         );
@@ -338,6 +359,46 @@ mod tests {
             "both instances present: {instances:?}"
         );
         assert_eq!(body.matches("# TYPE weips_wal_appends_total counter").count(), 1);
+    }
+
+    #[test]
+    fn trace_routes_serve_recent_chains_and_404_unknown_ids() {
+        let _g = crate::trace::test_lock().lock().unwrap();
+        let id = crate::trace::trace_id("http-trace-test", "emb", 0, 8);
+        crate::trace::record_stage(
+            id,
+            "queue_append",
+            "master",
+            "shard=0".into(),
+            10,
+            500,
+            1234,
+            8,
+            0,
+        );
+        let server = MetricsServer::serve("127.0.0.1:0").unwrap();
+        let addr = server.addr().to_string();
+        let listing = http_get(&addr, "/trace", Duration::from_secs(2)).unwrap();
+        let j = crate::util::json::Json::parse(&listing).expect("listing is JSON");
+        assert!(j.get("traces").unwrap().as_arr().is_some());
+        let one = http_get(
+            &addr,
+            &format!("/trace/{}", crate::trace::format_id(id)),
+            Duration::from_secs(2),
+        )
+        .unwrap();
+        let j = crate::util::json::Json::parse(&one).expect("chain is JSON");
+        assert_eq!(
+            j.get("trace_id").unwrap().as_str(),
+            Some(crate::trace::format_id(id).as_str())
+        );
+        assert_eq!(
+            j.get("spans").unwrap().as_arr().unwrap()[0].get("stage").unwrap().as_str(),
+            Some("queue_append")
+        );
+        // Unknown and malformed ids 404 (http_get errors on non-200).
+        assert!(http_get(&addr, "/trace/ffffffffffffffff", Duration::from_secs(2)).is_err());
+        assert!(http_get(&addr, "/trace/not-hex", Duration::from_secs(2)).is_err());
     }
 
     #[test]

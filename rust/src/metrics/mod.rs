@@ -105,6 +105,13 @@ pub static DESCRIPTORS: &[Desc] = &[
         help: "Live sparse parameter rows per table in a master shard.",
         labels: &["role", "shard", "table"],
     },
+    Desc {
+        name: "weips_table_row_store_info",
+        kind: Kind::Gauge,
+        help: "Info gauge (constant 1): the row-value backing actually engaged by a \
+               master shard's tables (store = arena | boxed).",
+        labels: &["role", "shard", "store"],
+    },
     // -- slave serving path ---------------------------------------------
     Desc {
         name: "weips_slave_pulls_total",
@@ -194,6 +201,13 @@ pub static DESCRIPTORS: &[Desc] = &[
                becoming visible in a slave replica's serving tables.",
         labels: &["role", "shard", "replica"],
     },
+    Desc {
+        name: "weips_trace_stage_duration_seconds",
+        kind: Kind::Histogram,
+        help: "Per-stage duration of sampled update-journey traces (stage names are \
+               declared in trace::STAGES; populated only when trace_sample_every > 0).",
+        labels: &["role", "stage"],
+    },
     // -- durability (WAL + checkpoints) ----------------------------------
     Desc {
         name: "weips_wal_appends_total",
@@ -226,6 +240,13 @@ pub static DESCRIPTORS: &[Desc] = &[
         help: "Checkpoints sealed by the scheduler (base + incremental).",
         labels: &["role"],
     },
+    Desc {
+        name: "weips_ckpt_mmap_engaged",
+        kind: Kind::Gauge,
+        help: "Whether checkpoint/delta chunk loads actually use the mmap fast path \
+               (1) or the streamed read fallback (0).",
+        labels: &["role"],
+    },
     // -- RPC substrate ---------------------------------------------------
     Desc {
         name: "weips_rpc_dispatches_total",
@@ -245,6 +266,14 @@ pub static DESCRIPTORS: &[Desc] = &[
         kind: Kind::Gauge,
         help: "Idle connections currently parked in an RPC server's event loop.",
         labels: &["server"],
+    },
+    Desc {
+        name: "weips_rpc_engaged_poll_mode",
+        kind: Kind::Gauge,
+        help: "Info gauge (constant 1): the readiness backend an RPC server actually \
+               engaged after degradation (mode = uring | event | peek) — may differ \
+               from the configured rpc_poll_mode.",
+        labels: &["server", "mode"],
     },
     Desc {
         name: "weips_rpc_class_dispatches_total",
@@ -529,7 +558,21 @@ fn render_histogram(out: &mut String, name: &str, key: &str, h: &Histogram) {
     let bounds: Vec<u64> = LATENCY_LE_NS.iter().map(|(_, b)| *b).collect();
     let cum = h.cumulative(&bounds);
     let total = h.count();
-    for ((le, _), c) in LATENCY_LE_NS.iter().zip(&cum) {
+    // A linked trace exemplar attaches to the first bucket that holds its
+    // observation (LATENCY_LE_NS.len() = the +Inf bucket).
+    let exemplar = exemplar_for(name, key);
+    let exemplar_bucket = exemplar.map(|(_, v)| {
+        bounds.iter().position(|b| v * 1e9 <= *b as f64).unwrap_or(LATENCY_LE_NS.len())
+    });
+    let push_exemplar = |out: &mut String| {
+        if let Some((id, v)) = exemplar {
+            out.push_str(" # {trace_id=\"");
+            out.push_str(&format!("{id:016x}"));
+            out.push_str("\"} ");
+            out.push_str(&fmt_value(v));
+        }
+    };
+    for (i, ((le, _), c)) in LATENCY_LE_NS.iter().zip(&cum).enumerate() {
         out.push_str(name);
         out.push_str("_bucket{");
         if !key.is_empty() {
@@ -542,6 +585,9 @@ fn render_histogram(out: &mut String, name: &str, key: &str, h: &Histogram) {
         // A record between the bucket sweep and the count read can make a
         // bucket momentarily exceed the total; clamp for monotonicity.
         out.push_str(&(*c).min(total).to_string());
+        if exemplar_bucket == Some(i) {
+            push_exemplar(out);
+        }
         out.push('\n');
     }
     out.push_str(name);
@@ -552,6 +598,9 @@ fn render_histogram(out: &mut String, name: &str, key: &str, h: &Histogram) {
     }
     out.push_str("le=\"+Inf\"} ");
     out.push_str(&total.to_string());
+    if exemplar_bucket == Some(LATENCY_LE_NS.len()) {
+        push_exemplar(out);
+    }
     out.push('\n');
     sample_line(out, &format!("{name}_sum"), key, h.sum() as f64 / 1e9);
     sample_line(out, &format!("{name}_count"), key, total as f64);
@@ -598,6 +647,138 @@ pub fn render() -> String {
 }
 
 // ---------------------------------------------------------------------------
+// OpenMetrics exemplars (trace linkage)
+// ---------------------------------------------------------------------------
+
+/// Last sampled exemplar per histogram series: (family, label key) →
+/// (trace id, observed value in seconds).
+fn exemplars() -> &'static Mutex<BTreeMap<(String, String), (u64, f64)>> {
+    static EX: OnceLock<Mutex<BTreeMap<(String, String), (u64, f64)>>> = OnceLock::new();
+    EX.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Link a sampled trace to a histogram series as an OpenMetrics exemplar:
+/// the exposition appends ``# {trace_id="<hex>"} <value>`` to the bucket
+/// the observation falls in, so a dashboard can jump from a latency
+/// bucket straight to `/trace/<hex>`. The newest exemplar per series
+/// wins. Panics if `name` is not a declared histogram family.
+pub fn set_exemplar(
+    name: &'static str,
+    labels: &[(&'static str, String)],
+    trace_id: u64,
+    value_seconds: f64,
+) {
+    let desc = Registry::desc(name);
+    debug_assert_eq!(desc.kind, Kind::Histogram, "{name}: exemplars attach to histograms");
+    let key = Registry::label_key(desc, labels);
+    exemplars().lock().unwrap().insert((name.to_string(), key), (trace_id, value_seconds));
+}
+
+fn exemplar_for(name: &str, key: &str) -> Option<(u64, f64)> {
+    exemplars().lock().unwrap().get(&(name.to_string(), key.to_string())).copied()
+}
+
+/// Drop the ``# {...}`` exemplar suffix from one exposition line (the
+/// parser and the `/cluster` aggregator both work on plain samples).
+fn strip_exemplar(line: &str) -> &str {
+    match line.find(" # ") {
+        Some(p) => line[..p].trim_end(),
+        None => line,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Readiness probes (/healthz degraded levels)
+// ---------------------------------------------------------------------------
+
+/// Every readiness probe this build can evaluate: (name, display text).
+/// Like [`DESCRIPTORS`], registering an undeclared probe panics. Bounds
+/// come from the `health_*` cluster knobs via [`set_health_bound`].
+pub static HEALTH_PROBES: &[(&str, &str)] = &[
+    ("scatter_lag_records", "scatter lag"),
+    ("wal_unsynced_appends", "WAL unsynced appends"),
+];
+
+struct HealthState {
+    bounds: BTreeMap<&'static str, f64>,
+    probes: BTreeMap<&'static str, Vec<(String, SampleFn)>>,
+}
+
+fn health() -> &'static Mutex<HealthState> {
+    static H: OnceLock<Mutex<HealthState>> = OnceLock::new();
+    H.get_or_init(|| {
+        Mutex::new(HealthState { bounds: BTreeMap::new(), probes: BTreeMap::new() })
+    })
+}
+
+fn health_what(name: &str) -> &'static str {
+    HEALTH_PROBES
+        .iter()
+        .find(|(n, _)| *n == name)
+        .map(|(_, what)| *what)
+        .unwrap_or_else(|| panic!("metrics: health probe {name} is not declared in HEALTH_PROBES"))
+}
+
+/// Register (or replace) a readiness probe. `detail` locates the owner
+/// (e.g. `shard=0 replica=1`); the closure follows the [`SampleFn`]
+/// contract — `None` once the owner is dropped prunes the entry.
+pub fn register_health(name: &'static str, detail: String, f: SampleFn) {
+    health_what(name);
+    let mut h = health().lock().unwrap();
+    let probes = h.probes.entry(name).or_default();
+    probes.retain(|(d, _)| *d != detail);
+    probes.push((detail, f));
+}
+
+/// Set (or clear) the degradation bound for a declared probe. `None` or
+/// a non-positive bound disables the check; the probe keeps sampling.
+pub fn set_health_bound(name: &'static str, bound: Option<f64>) {
+    health_what(name);
+    let mut h = health().lock().unwrap();
+    match bound.filter(|b| *b > 0.0) {
+        Some(b) => {
+            h.bounds.insert(name, b);
+        }
+        None => {
+            h.bounds.remove(name);
+        }
+    }
+}
+
+/// `/healthz` body: `ok` while every bounded probe is under its bound,
+/// else `degraded: <reasons>`. Always served with HTTP 200 — fleet
+/// probes that only check the status code keep treating a degraded
+/// (alive-but-stale) role as alive; readiness checks match on the body.
+pub fn health_body() -> String {
+    let mut h = health().lock().unwrap();
+    let mut reasons = Vec::new();
+    for (name, what) in HEALTH_PROBES {
+        let bound = h.bounds.get(name).copied();
+        let Some(probes) = h.probes.get_mut(name) else { continue };
+        probes.retain(|(detail, f)| match f() {
+            Some(v) => {
+                if let Some(b) = bound {
+                    if v > b {
+                        reasons.push(format!(
+                            "{what} {} > {} ({detail})",
+                            fmt_value(v),
+                            fmt_value(b)
+                        ));
+                    }
+                }
+                true
+            }
+            None => false,
+        });
+    }
+    if reasons.is_empty() {
+        "ok\n".to_string()
+    } else {
+        format!("degraded: {}\n", reasons.join("; "))
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Exposition parsing + cluster aggregation
 // ---------------------------------------------------------------------------
 
@@ -626,6 +807,9 @@ pub fn parse_exposition(text: &str) -> std::result::Result<Vec<Sample>, String> 
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
+        // Exemplar suffixes carry braces of their own; strip before the
+        // brace-matching sample parse.
+        let line = strip_exemplar(line);
         out.push(parse_sample(line).map_err(|e| format!("line {}: {e}: {line}", ln + 1))?);
     }
     Ok(out)
@@ -729,6 +913,9 @@ pub fn aggregate(scrapes: &[(String, String)]) -> String {
             if line.is_empty() || line.starts_with('#') {
                 continue;
             }
+            // Exemplars are per-process detail; the merged view carries
+            // plain samples only (and stays parseable).
+            let line = strip_exemplar(line);
             let name_end = line.find(|c: char| c == '{' || c.is_whitespace()).unwrap_or(0);
             let Some(&fam) = index.get(&line[..name_end]) else { continue };
             let tagged = match line.find('{') {
@@ -900,6 +1087,78 @@ mod tests {
     fn parse_handles_escapes() {
         let s = parse_sample(r#"m{a="x\"y\\z"} 1"#).unwrap();
         assert_eq!(s.label("a"), Some("x\"y\\z"));
+    }
+
+    #[test]
+    fn exemplar_attaches_to_bucket_and_stays_parseable() {
+        let h = histogram(
+            "weips_push_visible_latency_seconds",
+            &[
+                ("role", "unit-test-ex".into()),
+                ("shard", "0".into()),
+                ("replica", "0".into()),
+            ],
+        );
+        h.record(2_000_000); // 2ms
+        set_exemplar(
+            "weips_push_visible_latency_seconds",
+            &[
+                ("role", "unit-test-ex".into()),
+                ("shard", "0".into()),
+                ("replica", "0".into()),
+            ],
+            0xabcd,
+            0.002,
+        );
+        let text = render();
+        let line = text
+            .lines()
+            .find(|l| l.contains("role=\"unit-test-ex\"") && l.contains(" # {trace_id="))
+            .expect("exemplar rendered");
+        // Attached to the first bucket that holds 2ms (the 10ms bound).
+        assert!(line.contains("le=\"0.01\""), "{line}");
+        assert!(line.contains("trace_id=\"000000000000abcd\""), "{line}");
+        // The exposition still parses and the exemplar never leaks into
+        // the aggregated cluster view.
+        let samples = parse_exposition(&text).expect("exposition with exemplars parses");
+        assert!(samples.iter().any(|s| s.label("role") == Some("unit-test-ex")));
+        let merged = aggregate(&[("127.0.0.1:1".to_string(), text)]);
+        assert!(!merged.contains("trace_id="), "exemplar leaked into /cluster");
+        parse_exposition(&merged).expect("merged view parses");
+    }
+
+    #[test]
+    fn health_body_degrades_on_bound_and_prunes_dead_probes() {
+        // A deliberately huge value + bound so concurrently running tests
+        // with real (small) scatter lags can never trip this bound.
+        let owner = Arc::new(AtomicU64::new(3_000_000_000_000));
+        let weak = Arc::downgrade(&owner);
+        register_health(
+            "scatter_lag_records",
+            "unit-test shard=9".into(),
+            Box::new(move || weak.upgrade().map(|a| a.load(Ordering::Relaxed) as f64)),
+        );
+        // No bound configured: this probe cannot degrade health.
+        set_health_bound("scatter_lag_records", None);
+        assert!(!health_body().contains("unit-test shard=9"));
+        // Bound below the probe's value: degraded, with the reason.
+        set_health_bound("scatter_lag_records", Some(2_000_000_000_000.0));
+        let body = health_body();
+        assert!(body.starts_with("degraded: "), "{body}");
+        assert!(
+            body.contains("scatter lag 3000000000000 > 2000000000000 (unit-test shard=9)"),
+            "{body}"
+        );
+        // Owner drops: the probe prunes and its reason disappears.
+        drop(owner);
+        assert!(!health_body().contains("unit-test shard=9"));
+        set_health_bound("scatter_lag_records", None);
+    }
+
+    #[test]
+    #[should_panic(expected = "not declared in HEALTH_PROBES")]
+    fn undeclared_health_probe_panics() {
+        register_health("made_up_probe", String::new(), Box::new(|| None));
     }
 
     #[test]

@@ -146,6 +146,17 @@ impl PollMode {
         }
     }
 
+    /// Stable label value for the `weips_rpc_engaged_poll_mode` info
+    /// gauge (and `weips top`'s engaged line).
+    pub fn name(self) -> &'static str {
+        match self {
+            PollMode::Auto => "auto",
+            PollMode::Event => "event",
+            PollMode::Uring => "uring",
+            PollMode::Peek => "peek",
+        }
+    }
+
     fn resolve(self) -> PollMode {
         match self {
             PollMode::Auto => {
@@ -808,6 +819,16 @@ impl RpcServer {
                 Box::new(move || {
                     weak.upgrade().map(|p| p.count.load(Ordering::Acquire) as f64)
                 }),
+            );
+            // Info-style gauge: the *engaged* readiness mechanism after
+            // the uring→event→peek degradation resolved, not the
+            // configured one — what the domino-degradation story needs a
+            // scrape to see.
+            let weak = Arc::downgrade(&park);
+            crate::metrics::register_fn(
+                "weips_rpc_engaged_poll_mode",
+                &[("server", local.to_string()), ("mode", mode.name().to_string())],
+                Box::new(move || weak.upgrade().map(|_| 1.0)),
             );
             if park.qos.is_some() {
                 for class in QosClass::ALL {

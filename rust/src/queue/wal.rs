@@ -264,6 +264,20 @@ impl WalLog {
             );
         }
         let fsync_hist = crate::metrics::histogram("weips_wal_fsync_duration_seconds", &labels);
+        // Readiness probe: /healthz reports `degraded` when unsynced
+        // appends exceed the configured bound. Only meaningful with a
+        // periodic fsync cadence — in flush-only mode (`sync_every == 0`)
+        // the counter grows without bound by design.
+        if sync_every > 0 {
+            let weak = Arc::downgrade(&stats);
+            crate::metrics::register_health(
+                "wal_unsynced_appends",
+                format!("sync_every={sync_every}"),
+                Box::new(move || {
+                    weak.upgrade().map(|s| s.unsynced.load(Ordering::Relaxed) as f64)
+                }),
+            );
+        }
         Ok(WalLog { partitions: parts, sync_every, stats, fsync_hist })
     }
 

@@ -101,6 +101,10 @@ pub struct MasterShard {
     /// returns only after every in-flight push has drained — the
     /// happens-before edge the final migration delta relies on.
     sealed_slots: RwLock<Option<SlotSet>>,
+    /// Nanoseconds spent applying sparse pushes since the gather last
+    /// drained it ([`Self::take_push_apply_ns`]) — the `push_apply` stage
+    /// of the update-journey trace. Only accumulated while tracing is on.
+    push_apply_ns: AtomicU64,
     pub metrics: MasterMetrics,
 }
 
@@ -199,8 +203,16 @@ impl MasterShard {
             ckpt_epoch: AtomicU64::new(1),
             route_guard: RwLock::new(None),
             sealed_slots: RwLock::new(None),
+            push_apply_ns: AtomicU64::new(0),
             metrics: MasterMetrics::default(),
         })
+    }
+
+    /// Drain the accumulated push-apply nanoseconds (see
+    /// `push_apply_ns`). Called by the gather when it attributes the
+    /// `push_apply` trace stage to a sampled flush.
+    pub fn take_push_apply_ns(&self) -> u64 {
+        self.push_apply_ns.swap(0, Ordering::Relaxed)
     }
 
     /// The sync collector fed by this shard's pushes.
@@ -295,6 +307,10 @@ impl MasterShard {
             return Err(Error::Unavailable("master frozen for version switch".into()));
         }
         self.metrics.pushes.fetch_add(1, Ordering::Relaxed);
+        // Update-journey trace: one relaxed load + branch when tracing is
+        // off; the apply time is attributed to the sampled batch that
+        // eventually flushes this window (see `Gather`).
+        let trace_start = crate::trace::enabled().then(crate::util::mono_ns);
         let idx = self.table_index(&req.table)? as usize;
         let now = self.clock.now_ms();
         // Slot-route gate, taken *before* the state lock (the one
@@ -375,6 +391,10 @@ impl MasterShard {
         };
         drop(state);
         self.collector.record_updates(idx as u16, &touched);
+        if let Some(t0) = trace_start {
+            self.push_apply_ns
+                .fetch_add(crate::util::mono_ns().saturating_sub(t0), Ordering::Relaxed);
+        }
         Ok(())
     }
 
@@ -1197,6 +1217,25 @@ impl MasterShard {
                         s.table_rows().into_iter().find(|(n, _)| *n == tname)?.1;
                     Some(rows as f64)
                 }),
+            );
+        }
+        // Engaged row-store backing as an info-style gauge (value 1, the
+        // backing in the `store` label): the degradation story needs the
+        // *engaged* mode scrapeable, not just the configured knob.
+        let store = {
+            let state = self.state.read().unwrap();
+            state.sparse.first().map(|t| t.row_store().name())
+        };
+        if let Some(store) = store {
+            let weak = Arc::downgrade(self);
+            register_fn(
+                "weips_table_row_store_info",
+                &[
+                    ("role", role.to_string()),
+                    ("shard", self.shard_id.to_string()),
+                    ("store", store.to_string()),
+                ],
+                Box::new(move || weak.upgrade().map(|_| 1.0)),
             );
         }
     }

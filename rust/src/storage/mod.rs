@@ -17,6 +17,7 @@
 pub mod incremental;
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::codec::{frame, unframe};
 use crate::util::json::Json;
@@ -241,6 +242,26 @@ impl CheckpointStore {
     /// streamed reads regardless.
     pub fn set_mmap_load(&mut self, on: bool) {
         self.mmap_load = on;
+    }
+
+    /// Whether mmap-backed chunk loads are actually engaged: configured on
+    /// *and* supported by the platform's raw mmap binding.
+    pub fn mmap_load_engaged(&self) -> bool {
+        self.mmap_load && sys::supported()
+    }
+
+    /// Register the engaged-mmap info gauge (`weips_ckpt_mmap_engaged`)
+    /// under `role`. Weak-held like every sampler: a dropped store's
+    /// series disappears from scrapes.
+    pub fn register_metrics(self: &Arc<Self>, role: &str) {
+        let weak = Arc::downgrade(self);
+        crate::metrics::register_fn(
+            "weips_ckpt_mmap_engaged",
+            &[("role", role.to_string())],
+            Box::new(move || {
+                weak.upgrade().map(|s| if s.mmap_load_engaged() { 1.0 } else { 0.0 })
+            }),
+        );
     }
 
     fn version_dir(root: &Path, model: &str, version: u64) -> PathBuf {

@@ -228,9 +228,14 @@ impl Gather {
     /// Poll once: absorb events and flush if the mode says so. Returns the
     /// emitted batches (possibly empty).
     pub fn poll(&mut self) -> Vec<SyncBatch> {
+        let tracing = crate::trace::enabled();
+        let absorb_start = if tracing { crate::util::mono_ns() } else { 0 };
         self.absorb();
+        let absorb_ns =
+            if tracing { crate::util::mono_ns().saturating_sub(absorb_start) } else { 0 };
         let now = self.clock.now_ms();
         let mut out = Vec::new();
+        let flush_start = if tracing { crate::util::mono_ns() } else { 0 };
         if self.should_flush(now) {
             out = self.flush(now);
         } else {
@@ -256,15 +261,28 @@ impl Gather {
                 });
             }
         }
+        if tracing {
+            let flush_ns = crate::util::mono_ns().saturating_sub(flush_start);
+            self.record_spans(&out, absorb_start, absorb_ns, flush_start, flush_ns);
+        }
         out
     }
 
     /// Force a flush regardless of mode (used at shutdown / tests).
     pub fn flush_now(&mut self) -> Vec<SyncBatch> {
+        let tracing = crate::trace::enabled();
+        let absorb_start = if tracing { crate::util::mono_ns() } else { 0 };
         self.absorb();
+        let absorb_ns =
+            if tracing { crate::util::mono_ns().saturating_sub(absorb_start) } else { 0 };
         let now = self.clock.now_ms();
+        let flush_start = if tracing { crate::util::mono_ns() } else { 0 };
         let mut out = self.flush(now);
         if self.master.shard_id != 0 {
+            if tracing {
+                let flush_ns = crate::util::mono_ns().saturating_sub(flush_start);
+                self.record_spans(&out, absorb_start, absorb_ns, flush_start, flush_ns);
+            }
             return out;
         }
         for (_, name, values) in self.master.dense_changed_since_sync() {
@@ -279,7 +297,73 @@ impl Gather {
                 dense: values,
             });
         }
+        if tracing {
+            let flush_ns = crate::util::mono_ns().saturating_sub(flush_start);
+            self.record_spans(&out, absorb_start, absorb_ns, flush_start, flush_ns);
+        }
         out
+    }
+
+    /// Record the master-side stages of the update journey for every
+    /// sampled batch this poll emitted. A batch is a deduped *window* of
+    /// pushes, so the window-level stage timings (push apply since the
+    /// last sampled flush, this poll's collector drain and flush) are
+    /// attributed to each sampled batch of the flush.
+    fn record_spans(
+        &self,
+        batches: &[SyncBatch],
+        absorb_start: u64,
+        absorb_ns: u64,
+        flush_start: u64,
+        flush_ns: u64,
+    ) {
+        let mut apply_ns = None;
+        for b in batches {
+            if !crate::trace::sampled(b.seq) {
+                continue;
+            }
+            // Drain the master's apply accumulator once per poll, and only
+            // when something is sampled — otherwise it keeps accumulating
+            // toward the next sampled flush of this window.
+            let apply = *apply_ns.get_or_insert_with(|| self.master.take_push_apply_ns());
+            let id = crate::trace::trace_id(&b.model, &b.table, b.shard, b.seq);
+            let detail = format!("shard={}", b.shard);
+            if apply > 0 {
+                crate::trace::record_stage(
+                    id,
+                    "push_apply",
+                    "master",
+                    detail.clone(),
+                    absorb_start.saturating_sub(apply),
+                    apply,
+                    b.created_ms,
+                    b.seq,
+                    b.shard,
+                );
+            }
+            crate::trace::record_stage(
+                id,
+                "collector_drain",
+                "master",
+                detail.clone(),
+                absorb_start,
+                absorb_ns,
+                b.created_ms,
+                b.seq,
+                b.shard,
+            );
+            crate::trace::record_stage(
+                id,
+                "gather_emit",
+                "master",
+                detail,
+                flush_start,
+                flush_ns,
+                b.created_ms,
+                b.seq,
+                b.shard,
+            );
+        }
     }
 
     fn flush(&mut self, now: u64) -> Vec<SyncBatch> {

@@ -88,6 +88,9 @@ impl Pusher {
     /// tower, so a single-partition dense record would never reach some
     /// shards.
     pub fn push(&self, batch: &SyncBatch) -> Result<u64> {
+        // Update-journey trace: serialize + compress + append is the
+        // `queue_append` stage for a sampled batch.
+        let trace_start = crate::trace::sampled(batch.seq).then(crate::util::mono_ns);
         // Serialize + compress in the pooled scratch buffers; only the
         // final owned payload handed to the queue is allocated.
         let mut s = self.scratch.lock().unwrap();
@@ -105,16 +108,34 @@ impl Pusher {
         }
         self.stats.batches.fetch_add(1, Ordering::Relaxed);
         self.stats.bytes_raw.fetch_add(raw_len as u64, Ordering::Relaxed);
-        if batch.dense.is_empty() {
+        let result = if batch.dense.is_empty() {
             self.stats.bytes_on_wire.fetch_add(wire.len() as u64, Ordering::Relaxed);
-            return self.log.append(self.partition, batch.created_ms, wire.clone());
+            self.log.append(self.partition, batch.created_ms, wire.clone())
+        } else {
+            let mut last = Ok(0);
+            for p in 0..self.log.partition_count() as u32 {
+                self.stats.bytes_on_wire.fetch_add(wire.len() as u64, Ordering::Relaxed);
+                last = self.log.append(p, batch.created_ms, wire.clone());
+                if last.is_err() {
+                    break;
+                }
+            }
+            last
+        };
+        if let (Some(t0), Ok(_)) = (trace_start, &result) {
+            crate::trace::record_stage(
+                crate::trace::trace_id(&batch.model, &batch.table, batch.shard, batch.seq),
+                "queue_append",
+                "master",
+                format!("partition={}", self.partition),
+                t0,
+                crate::util::mono_ns().saturating_sub(t0),
+                batch.created_ms,
+                batch.seq,
+                batch.shard,
+            );
         }
-        let mut last = 0;
-        for p in 0..self.log.partition_count() as u32 {
-            self.stats.bytes_on_wire.fetch_add(wire.len() as u64, Ordering::Relaxed);
-            last = self.log.append(p, batch.created_ms, wire.clone())?;
-        }
-        Ok(last)
+        result
     }
 
     /// Push a set of batches; returns the last offset written.

@@ -135,6 +135,20 @@ impl Scatter {
             }
         }
         let visible_hist = crate::metrics::histogram("weips_push_visible_latency_seconds", &labels);
+        // Readiness probe: /healthz reports `degraded` when this replica's
+        // scatter lag exceeds the configured bound (see
+        // `metrics::set_health_bound`). Weak-held like the samplers, so a
+        // rebuilt scatter replaces its probe.
+        {
+            let weak = Arc::downgrade(&stats);
+            crate::metrics::register_health(
+                "scatter_lag_records",
+                format!("shard={} replica={}", slave.shard_id, slave.replica_id),
+                Box::new(move || {
+                    weak.upgrade().map(|s| s.lag_records.load(Ordering::Relaxed) as f64)
+                }),
+            );
+        }
         Scatter {
             log,
             slave,
@@ -227,6 +241,7 @@ impl Scatter {
     /// stall therefore pays lock traffic proportional to the stripes it
     /// touches, not to the queue depth.
     pub fn poll(&mut self, timeout: Duration) -> Result<usize> {
+        let tracing = crate::trace::enabled();
         self.pending.clear();
         for (p, cursor) in self.cursors.iter_mut() {
             loop {
@@ -245,12 +260,32 @@ impl Scatter {
                 }
                 for rec in &records {
                     *cursor = rec.offset + 1;
+                    // `scatter_decode`: fetch payload -> decoded batch.
+                    // Whether the record is sampled is only known after
+                    // decoding (the seq lives inside), so time every
+                    // record while tracing is on.
+                    let t0 = if tracing { crate::util::mono_ns() } else { 0 };
                     if decompress_into(&rec.payload, &mut self.raw_scratch).is_err() {
                         self.stats.decode_errors.fetch_add(1, Ordering::Relaxed);
                         continue;
                     }
                     match SyncBatch::from_bytes(&self.raw_scratch) {
-                        Ok(b) => self.pending.push(b),
+                        Ok(b) => {
+                            if tracing && crate::trace::sampled(b.seq) {
+                                crate::trace::record_stage(
+                                    crate::trace::trace_id(&b.model, &b.table, b.shard, b.seq),
+                                    "scatter_decode",
+                                    "slave",
+                                    self.trace_detail(),
+                                    t0,
+                                    crate::util::mono_ns().saturating_sub(t0),
+                                    b.created_ms,
+                                    b.seq,
+                                    b.shard,
+                                );
+                            }
+                            self.pending.push(b)
+                        }
                         Err(_) => {
                             self.stats.decode_errors.fetch_add(1, Ordering::Relaxed);
                         }
@@ -265,17 +300,61 @@ impl Scatter {
             return Ok(0);
         }
         let applied = self.pending.len();
+        let apply_start = if tracing { crate::util::mono_ns() } else { 0 };
         let outcome = self.slave.apply_batches_pooled(&self.pending, self.pool.as_deref());
+        let apply_ns =
+            if tracing { crate::util::mono_ns().saturating_sub(apply_start) } else { 0 };
         // Taps fire after the serving tables hold the new rows and before
         // this poll returns — the one-tick cache-coherence window.
+        let tap_start = if tracing { crate::util::mono_ns() } else { 0 };
         for tap in &self.taps {
             tap.on_applied(&self.pending);
         }
+        let tap_ns = if tracing { crate::util::mono_ns().saturating_sub(tap_start) } else { 0 };
         let now = self.clock.now_ms();
         for b in &self.pending {
             let lat_ms = now.saturating_sub(b.created_ms);
             self.stats.latency_ms.record(lat_ms);
             self.visible_hist.record(lat_ms.saturating_mul(1_000_000));
+            if tracing && crate::trace::sampled(b.seq) {
+                // The run-level apply + invalidate timings are attributed
+                // to every sampled batch of the coalesced run, and the
+                // sampled batch becomes the push→visible histogram's
+                // exemplar for this replica.
+                let id = crate::trace::trace_id(&b.model, &b.table, b.shard, b.seq);
+                crate::trace::record_stage(
+                    id,
+                    "scatter_apply",
+                    "slave",
+                    self.trace_detail(),
+                    apply_start,
+                    apply_ns,
+                    b.created_ms,
+                    b.seq,
+                    b.shard,
+                );
+                crate::trace::record_stage(
+                    id,
+                    "cache_invalidate",
+                    "slave",
+                    self.trace_detail(),
+                    tap_start,
+                    tap_ns,
+                    b.created_ms,
+                    b.seq,
+                    b.shard,
+                );
+                crate::metrics::set_exemplar(
+                    "weips_push_visible_latency_seconds",
+                    &[
+                        ("role", "slave".to_string()),
+                        ("shard", self.slave.shard_id.to_string()),
+                        ("replica", self.slave.replica_id.to_string()),
+                    ],
+                    id,
+                    lat_ms as f64 / 1e3,
+                );
+            }
         }
         self.pending.clear();
         self.stats.batches_applied.fetch_add(applied as u64, Ordering::Relaxed);
@@ -283,6 +362,11 @@ impl Scatter {
         self.stats.lag_records.store(self.lag(), Ordering::Relaxed);
         outcome?;
         Ok(applied)
+    }
+
+    /// Span-detail locator for this replica's trace spans.
+    fn trace_detail(&self) -> String {
+        format!("shard={} replica={}", self.slave.shard_id, self.slave.replica_id)
     }
 
     /// Total lag (records behind log end) across subscribed partitions.

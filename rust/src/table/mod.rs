@@ -92,6 +92,15 @@ pub enum RowStore {
 }
 
 impl RowStore {
+    /// The config-string name (`arena` / `boxed`) — the `store` label of
+    /// the `weips_table_row_store_info` gauge.
+    pub fn name(self) -> &'static str {
+        match self {
+            RowStore::Arena => "arena",
+            RowStore::Boxed => "boxed",
+        }
+    }
+
     /// Parse a config string: `arena` | `boxed`.
     pub fn parse(s: &str) -> Result<RowStore> {
         match s {

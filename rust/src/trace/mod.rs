@@ -1,0 +1,406 @@
+//! Update-journey tracing for the streaming sync path.
+//!
+//! The push→visible histogram (PR 6) says *how long* deployment takes in
+//! aggregate; this module says *where one batch's time went*. A sampled
+//! sync batch gets a **derived trace context**: its trace id is computed
+//! with [`trace_id`] from fields every stage already carries in the
+//! [`crate::proto::SyncBatch`] envelope (model, table, shard, seq), so
+//! the context "rides" the existing envelopes **without adding a single
+//! wire byte** — sync-batch bytes are identical with tracing off, on or
+//! sampled, by construction (asserted by `tests/it_tracing.rs`). Each
+//! pipeline stage re-derives the id independently, times itself, and
+//! records a nanosecond [`Span`] into a process-global lock-striped ring
+//! buffer.
+//!
+//! The module follows the `metrics` registry discipline: stage names are
+//! declared up front in [`STAGES`] and recording an undeclared stage
+//! panics. Sampled spans additionally feed the
+//! `weips_trace_stage_duration_seconds{role,stage}` histogram, so the
+//! per-stage breakdown is scrapeable fleet-wide (and rendered by
+//! `weips top`), and the scatter links each sampled batch to the
+//! push→visible histogram as an OpenMetrics exemplar.
+//!
+//! Sampling is controlled by the `trace_sample_every` cluster knob
+//! ([`configure`]): `0` (default) disables tracing — the hot-path cost
+//! is then exactly one relaxed atomic load and branch per stage — and
+//! `N` samples every batch whose envelope `seq % N == 0`. Because the
+//! decision is a pure function of the envelope, every stage agrees on
+//! which batches are sampled without coordination.
+//!
+//! Recent traces are served as JSON by the metrics endpoint:
+//! `GET /trace` (most recent chains) and `GET /trace/<hex id>`.
+
+use std::hash::Hasher;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::hash::FxHasher;
+use crate::util::json::Json;
+
+/// Every pipeline stage this build can record, in update-journey order.
+/// Recording an undeclared stage panics (same discipline as
+/// [`crate::metrics::DESCRIPTORS`]); `docs/METRICS.md` documents the
+/// journey in exactly these terms.
+pub static STAGES: &[&str] = &[
+    // Master applies trainer gradients (accumulated across the window
+    // that produced the sampled batch).
+    "push_apply",
+    // Gather drains the collector's per-stripe dirty queues.
+    "collector_drain",
+    // Gather dedups the window and snapshots row values into a batch.
+    "gather_emit",
+    // The tick's dirty window is journaled to the write-ahead log.
+    "wal_append",
+    // Pusher encodes + compresses the batch and appends it to the queue.
+    "queue_append",
+    // Scatter fetches the record and decompresses + decodes it.
+    "scatter_decode",
+    // Scatter applies the batch to the replica's serving tables.
+    "scatter_apply",
+    // `ScatterTap`s invalidate the hot-id cache for the applied rows.
+    "cache_invalidate",
+];
+
+/// Index of a declared stage; panics on an undeclared name.
+pub fn stage_index(stage: &str) -> usize {
+    STAGES
+        .iter()
+        .position(|s| *s == stage)
+        .unwrap_or_else(|| panic!("trace: stage {stage} is not declared in STAGES"))
+}
+
+/// One recorded stage timing for one sampled sync batch.
+#[derive(Debug, Clone)]
+pub struct Span {
+    /// Derived trace id ([`trace_id`]) shared by every stage of the chain.
+    pub trace_id: u64,
+    /// Declared stage name (see [`STAGES`]).
+    pub stage: &'static str,
+    /// Role that recorded the span (`master` / `slave` / `broker`).
+    pub role: &'static str,
+    /// Free-form locator within the role, e.g. `shard=0 replica=1`.
+    pub detail: String,
+    /// Monotonic start ([`crate::util::mono_ns`]).
+    pub start_ns: u64,
+    /// Stage duration in nanoseconds.
+    pub dur_ns: u64,
+    /// The batch's `created_ms` origin timestamp (wall clock).
+    pub origin_ms: u64,
+    /// The batch's envelope sequence number.
+    pub seq: u64,
+    /// The originating master shard.
+    pub shard: u32,
+}
+
+const STRIPES: usize = 16;
+/// Spans retained per stripe; a chain is ~8 spans, so the sink holds a
+/// few hundred recent traces before the ring overwrites.
+const PER_STRIPE: usize = 512;
+
+struct Stripe {
+    ring: Vec<Span>,
+    next: usize,
+}
+
+/// Process-global trace sink: a sampling switch plus a lock-striped ring
+/// buffer of recent spans. All spans of one trace land in one stripe
+/// (striped by trace id), so eviction drops whole chains, not arbitrary
+/// middles.
+pub struct TraceSink {
+    sample_every: AtomicU64,
+    stripes: Vec<Mutex<Stripe>>,
+}
+
+impl TraceSink {
+    fn new() -> TraceSink {
+        TraceSink {
+            sample_every: AtomicU64::new(0),
+            stripes: (0..STRIPES)
+                .map(|_| Mutex::new(Stripe { ring: Vec::new(), next: 0 }))
+                .collect(),
+        }
+    }
+}
+
+/// The process-global sink used by every free function below.
+pub fn default() -> &'static TraceSink {
+    static SINK: OnceLock<TraceSink> = OnceLock::new();
+    SINK.get_or_init(TraceSink::new)
+}
+
+/// Set the sampling cadence: `0` disables tracing, `n` samples every
+/// batch whose envelope seq is a multiple of `n`. Mirrors the
+/// `trace_sample_every` cluster knob.
+pub fn configure(sample_every: u64) {
+    default().sample_every.store(sample_every, Ordering::Relaxed);
+}
+
+/// Current sampling cadence (`0` = off).
+pub fn sample_every() -> u64 {
+    default().sample_every.load(Ordering::Relaxed)
+}
+
+/// Whether tracing is on at all. This is the *entire* hot-path cost with
+/// tracing disabled: one relaxed load + branch.
+#[inline]
+pub fn enabled() -> bool {
+    sample_every() != 0
+}
+
+/// Whether the batch with envelope sequence `seq` is sampled. Pure
+/// function of the envelope + the configured cadence, so every stage
+/// agrees without any wire bytes.
+#[inline]
+pub fn sampled(seq: u64) -> bool {
+    let n = sample_every();
+    n != 0 && seq % n == 0
+}
+
+/// Derive the trace id from envelope fields every stage already has.
+/// Deterministic: master, broker and every replica compute the same id
+/// for the same batch independently.
+pub fn trace_id(model: &str, table: &str, shard: u32, seq: u64) -> u64 {
+    let mut h = FxHasher::default();
+    h.write(model.as_bytes());
+    h.write(table.as_bytes());
+    h.write_u32(shard);
+    h.write_u64(seq);
+    h.finish()
+}
+
+/// Record one stage span into the ring buffer and the
+/// `weips_trace_stage_duration_seconds` histogram. Panics if
+/// `span.stage` is not declared in [`STAGES`].
+pub fn record(span: Span) {
+    stage_index(span.stage); // declared-stage discipline
+    crate::metrics::histogram(
+        "weips_trace_stage_duration_seconds",
+        &[("role", span.role.to_string()), ("stage", span.stage.to_string())],
+    )
+    .record(span.dur_ns);
+    let sink = default();
+    let mut s = sink.stripes[(span.trace_id % STRIPES as u64) as usize].lock().unwrap();
+    if s.ring.len() < PER_STRIPE {
+        s.ring.push(span);
+    } else {
+        let i = s.next;
+        s.ring[i] = span;
+        s.next = (i + 1) % PER_STRIPE;
+    }
+}
+
+/// Convenience: build + [`record`] a span in one call.
+#[allow(clippy::too_many_arguments)]
+pub fn record_stage(
+    trace_id: u64,
+    stage: &'static str,
+    role: &'static str,
+    detail: String,
+    start_ns: u64,
+    dur_ns: u64,
+    origin_ms: u64,
+    seq: u64,
+    shard: u32,
+) {
+    record(Span { trace_id, stage, role, detail, start_ns, dur_ns, origin_ms, seq, shard });
+}
+
+/// All recorded spans for one trace id, in journey order.
+pub fn spans_for(id: u64) -> Vec<Span> {
+    let sink = default();
+    let s = sink.stripes[(id % STRIPES as u64) as usize].lock().unwrap();
+    let mut spans: Vec<Span> = s.ring.iter().filter(|sp| sp.trace_id == id).cloned().collect();
+    spans.sort_by_key(|sp| (stage_index(sp.stage), sp.start_ns));
+    spans
+}
+
+/// The most recent `limit` trace chains (newest first, by the latest
+/// span start in each chain).
+pub fn recent(limit: usize) -> Vec<(u64, Vec<Span>)> {
+    let sink = default();
+    let mut by_id: std::collections::BTreeMap<u64, Vec<Span>> = std::collections::BTreeMap::new();
+    for stripe in &sink.stripes {
+        let s = stripe.lock().unwrap();
+        for sp in &s.ring {
+            by_id.entry(sp.trace_id).or_default().push(sp.clone());
+        }
+    }
+    let mut chains: Vec<(u64, Vec<Span>)> = by_id.into_iter().collect();
+    for (_, spans) in chains.iter_mut() {
+        spans.sort_by_key(|sp| (stage_index(sp.stage), sp.start_ns));
+    }
+    chains.sort_by_key(|(_, spans)| {
+        std::cmp::Reverse(spans.iter().map(|sp| sp.start_ns).max().unwrap_or(0))
+    });
+    chains.truncate(limit);
+    chains
+}
+
+/// Drop every recorded span (tests and benches; sampling cadence is
+/// untouched).
+pub fn clear() {
+    let sink = default();
+    for stripe in &sink.stripes {
+        let mut s = stripe.lock().unwrap();
+        s.ring.clear();
+        s.next = 0;
+    }
+}
+
+/// Canonical text form of a trace id (16 hex digits, as served in URLs
+/// and exemplar labels).
+pub fn format_id(id: u64) -> String {
+    format!("{id:016x}")
+}
+
+/// Parse [`format_id`] output (also accepts shorter hex).
+pub fn parse_id(s: &str) -> Option<u64> {
+    u64::from_str_radix(s.trim(), 16).ok()
+}
+
+fn chain_json(id: u64, spans: &[Span]) -> Json {
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("trace_id".to_string(), Json::Str(format_id(id)));
+    if let Some(first) = spans.first() {
+        obj.insert("origin_ms".to_string(), Json::Num(first.origin_ms as f64));
+        obj.insert("seq".to_string(), Json::Num(first.seq as f64));
+        obj.insert("shard".to_string(), Json::Num(first.shard as f64));
+    }
+    obj.insert(
+        "total_ns".to_string(),
+        Json::Num(spans.iter().map(|s| s.dur_ns).sum::<u64>() as f64),
+    );
+    obj.insert(
+        "spans".to_string(),
+        Json::Arr(
+            spans
+                .iter()
+                .map(|s| {
+                    let mut sp = std::collections::BTreeMap::new();
+                    sp.insert("stage".to_string(), Json::Str(s.stage.to_string()));
+                    sp.insert("role".to_string(), Json::Str(s.role.to_string()));
+                    sp.insert("detail".to_string(), Json::Str(s.detail.clone()));
+                    sp.insert("start_ns".to_string(), Json::Num(s.start_ns as f64));
+                    sp.insert("dur_ns".to_string(), Json::Num(s.dur_ns as f64));
+                    Json::Obj(sp)
+                })
+                .collect(),
+        ),
+    );
+    Json::Obj(obj)
+}
+
+/// JSON body of `GET /trace`: the most recent chains, newest first.
+pub fn render_recent_json(limit: usize) -> String {
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("sample_every".to_string(), Json::Num(sample_every() as f64));
+    obj.insert("stages".to_string(), {
+        Json::Arr(STAGES.iter().map(|s| Json::Str(s.to_string())).collect())
+    });
+    obj.insert(
+        "traces".to_string(),
+        Json::Arr(recent(limit).iter().map(|(id, spans)| chain_json(*id, spans)).collect()),
+    );
+    Json::Obj(obj).to_string()
+}
+
+/// JSON body of `GET /trace/<id>`, or `None` when the id has aged out
+/// of the ring (or never existed).
+pub fn render_trace_json(id: u64) -> Option<String> {
+    let spans = spans_for(id);
+    if spans.is_empty() {
+        return None;
+    }
+    Some(chain_json(id, &spans).to_string())
+}
+
+/// Serializes lib-internal tests that mutate the process-global sink or
+/// sampling cadence (the trace module's own tests plus the HTTP route
+/// tests share one process).
+#[cfg(test)]
+pub fn test_lock() -> &'static Mutex<()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    L.get_or_init(|| Mutex::new(()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(id: u64, stage: &'static str, start_ns: u64, dur_ns: u64) -> Span {
+        Span {
+            trace_id: id,
+            stage,
+            role: "master",
+            detail: "shard=0".into(),
+            start_ns,
+            dur_ns,
+            origin_ms: 1000,
+            seq: 8,
+            shard: 0,
+        }
+    }
+
+    #[test]
+    fn derived_ids_are_deterministic_and_distinct() {
+        let a = trace_id("ctr", "emb", 0, 8);
+        assert_eq!(a, trace_id("ctr", "emb", 0, 8));
+        assert_ne!(a, trace_id("ctr", "emb", 0, 9));
+        assert_ne!(a, trace_id("ctr", "emb", 1, 8));
+        assert_ne!(a, trace_id("ctr", "wide", 0, 8));
+        assert_eq!(parse_id(&format_id(a)), Some(a));
+    }
+
+    #[test]
+    fn sampling_is_a_pure_function_of_seq() {
+        let _g = test_lock().lock().unwrap();
+        configure(0);
+        assert!(!enabled());
+        assert!(!sampled(0));
+        configure(4);
+        assert!(sampled(0) && sampled(8) && !sampled(3));
+        configure(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not declared in STAGES")]
+    fn undeclared_stage_panics() {
+        record(span(1, "made_up_stage", 0, 1));
+    }
+
+    #[test]
+    fn chains_round_trip_through_json() {
+        let _g = test_lock().lock().unwrap();
+        clear();
+        let id = trace_id("ctr-json", "emb", 0, 8);
+        record(span(id, "gather_emit", 100, 40));
+        record(span(id, "push_apply", 10, 50));
+        let spans = spans_for(id);
+        assert_eq!(spans.len(), 2);
+        // Journey order, not insertion order.
+        assert_eq!(spans[0].stage, "push_apply");
+        let body = render_trace_json(id).expect("chain present");
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("trace_id").unwrap().as_str(), Some(format_id(id).as_str()));
+        assert_eq!(j.get("total_ns").unwrap().as_f64(), Some(90.0));
+        assert_eq!(j.get("spans").unwrap().as_arr().unwrap().len(), 2);
+        assert!(render_trace_json(id ^ 1).is_none(), "unknown id must 404");
+        let listing = Json::parse(&render_recent_json(8)).unwrap();
+        assert!(!listing.get("traces").unwrap().as_arr().unwrap().is_empty());
+        clear();
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_without_growing() {
+        let _g = test_lock().lock().unwrap();
+        clear();
+        // Saturate one stripe: ids congruent mod STRIPES land together.
+        for i in 0..(2 * super::PER_STRIPE as u64) {
+            record(span(i * super::STRIPES as u64, "queue_append", i, 1));
+        }
+        let total: usize =
+            default().stripes.iter().map(|s| s.lock().unwrap().ring.len()).sum();
+        assert!(total <= super::PER_STRIPE * super::STRIPES);
+        clear();
+    }
+}

@@ -1,0 +1,263 @@
+//! Integration: update-journey tracing over the real sync pipeline.
+//!
+//! A sampled push travels gather → queue → scatter and must leave one
+//! complete span chain (≥ 6 declared stages) retrievable over
+//! `GET /trace/<id>`, with stage durations bounded by the pipeline's
+//! wall-clock drive time. With tracing off, on, or sampled the bytes on
+//! the queue must be identical — the trace context is derived from
+//! envelope fields, never carried on the wire. Finally the `/healthz`
+//! readiness endpoint must flip to `degraded` when scatter lag exceeds
+//! its configured bound.
+//!
+//! The trace sink and health registry are process globals, so every test
+//! here serialises on one file-local lock (the lib's `test_lock` is
+//! `#[cfg(test)]`-only and invisible to integration binaries).
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use weips::config::{GatherMode, ModelKind, ModelSpec};
+use weips::metrics::http::{http_get, MetricsServer};
+use weips::optim::{Ftrl, FtrlHyper, Optimizer};
+use weips::proto::{SparsePush, SyncBatch};
+use weips::queue::Queue;
+use weips::runtime::ModelConfig;
+use weips::server::master::MasterShard;
+use weips::server::slave::SlaveShard;
+use weips::sync::{Gather, Pusher, Router, Scatter, ServingWeights};
+use weips::trace;
+use weips::util::clock::ManualClock;
+
+fn lock() -> &'static Mutex<()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+}
+
+fn spec() -> ModelSpec {
+    let cfg = ModelConfig {
+        batch_train: 8,
+        batch_predict: 2,
+        fields: 4,
+        dim: 2,
+        hidden: 8,
+        ftrl_block_rows: 64,
+        ftrl_alpha: 0.05,
+        ftrl_beta: 1.0,
+        ftrl_l1: 1.0,
+        ftrl_l2: 1.0,
+    };
+    ModelSpec::derive("ctr", ModelKind::Fm, &cfg)
+}
+
+fn slave(stripes: usize) -> Arc<SlaveShard> {
+    let ftrl: Arc<dyn Optimizer> = Arc::new(Ftrl::new(FtrlHyper::default()));
+    Arc::new(SlaveShard::with_stripes(
+        0,
+        0,
+        "ctr",
+        vec![("w".into(), 1), ("v".into(), 2)],
+        vec![("bias".into(), 1)],
+        Arc::new(ServingWeights::new(vec![
+            ("w".into(), ftrl.clone(), 1),
+            ("v".into(), ftrl, 2),
+        ])),
+        Router::new(1),
+        stripes,
+    ))
+}
+
+struct Pipeline {
+    clock: Arc<ManualClock>,
+    master: Arc<MasterShard>,
+    gather: Gather,
+    pusher: Pusher,
+    scatter: Scatter,
+}
+
+fn pipeline() -> Pipeline {
+    let clock = Arc::new(ManualClock::new(0));
+    let master =
+        Arc::new(MasterShard::with_stripes(0, spec(), None, 1, 8, clock.clone()).unwrap());
+    let queue = Queue::new(1 << 26);
+    let topic = queue.create_topic("sync.ctr", 1).unwrap();
+    let gather = Gather::with_pool(
+        master.clone(),
+        GatherMode::Threshold(1_000_000),
+        clock.clone(),
+        None,
+    );
+    let pusher = Pusher::new(topic.clone(), 0);
+    let scatter = Scatter::with_pool(topic, slave(8), 1, 1, clock.clone(), None);
+    Pipeline { clock, master, gather, pusher, scatter }
+}
+
+fn push_rounds(master: &MasterShard, rounds: u64) {
+    for round in 0..rounds {
+        let ids: Vec<u64> = (0..300).map(|i| (i * 13 + round) % 900).collect();
+        let grads = vec![1.5f32; ids.len()];
+        master
+            .sparse_push(&SparsePush { model: "ctr".into(), table: "w".into(), ids, grads })
+            .unwrap();
+    }
+}
+
+#[test]
+fn sampled_push_yields_a_complete_retrievable_span_chain() {
+    let _g = lock().lock().unwrap();
+    trace::configure(1);
+    trace::clear();
+
+    let mut p = pipeline();
+    let drive_start = weips::util::mono_ns();
+    push_rounds(&p.master, 3);
+    p.clock.advance(25);
+    let batches: Vec<SyncBatch> = p.gather.flush_now();
+    let sparse = batches.iter().find(|b| b.table == "w").expect("no sparse batch emitted");
+    let id = trace::trace_id(&sparse.model, &sparse.table, sparse.shard, sparse.seq);
+    let created_ms = sparse.created_ms;
+    p.pusher.push_all(&batches).unwrap();
+    p.clock.advance(25);
+    p.scatter.poll(Duration::ZERO).unwrap();
+    let drive_ns = weips::util::mono_ns().saturating_sub(drive_start);
+
+    // One chain, ≥ 6 distinct declared stages, all tied to this batch.
+    let spans = trace::spans_for(id);
+    let mut stages: Vec<&str> = spans.iter().map(|s| s.stage).collect();
+    stages.sort_unstable();
+    stages.dedup();
+    assert!(
+        stages.len() >= 6,
+        "expected >= 6 distinct stages, got {}: {stages:?}",
+        stages.len()
+    );
+    let expected = [
+        "collector_drain",
+        "gather_emit",
+        "queue_append",
+        "scatter_decode",
+        "scatter_apply",
+        "cache_invalidate",
+    ];
+    for want in expected {
+        assert!(stages.contains(&want), "missing stage {want}: {stages:?}");
+    }
+    for s in &spans {
+        assert_eq!(s.trace_id, id);
+        assert_eq!(s.seq, sparse.seq);
+        assert_eq!(s.origin_ms, created_ms);
+    }
+
+    // Stage starts follow the declared pipeline order, and the summed
+    // stage time is bounded by the wall clock spent driving the pipeline
+    // (the push→visible latency as the histogram would observe it, plus
+    // the pre-flush push phase).
+    let mut ordered: Vec<&weips::trace::Span> = spans.iter().collect();
+    ordered.sort_by_key(|s| (trace::stage_index(s.stage), s.start_ns));
+    for pair in ordered.windows(2) {
+        assert!(
+            pair[0].start_ns <= pair[1].start_ns,
+            "stage {} started after {}",
+            pair[0].stage,
+            pair[1].stage
+        );
+    }
+    let stage_sum_ns: u64 = spans.iter().map(|s| s.dur_ns).sum();
+    assert!(stage_sum_ns > 0, "stage durations all zero");
+    assert!(
+        stage_sum_ns <= drive_ns,
+        "stage sum {stage_sum_ns}ns exceeds pipeline wall time {drive_ns}ns"
+    );
+
+    // The scatter observed the manual-clock push→visible latency (50ms
+    // advanced between push and apply, 25ms of it after batch creation).
+    assert!(p.scatter.stats.latency_ms.count() >= 1);
+    assert!(p.scatter.stats.latency_ms.max() <= 50);
+
+    // The chain is retrievable over HTTP, both in the recent index and
+    // by id; unknown ids 404.
+    let server = MetricsServer::serve("127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+    let index = http_get(&addr, "/trace", Duration::from_secs(2)).unwrap();
+    assert!(index.contains(&trace::format_id(id)), "trace index missing chain: {index}");
+    let chain =
+        http_get(&addr, &format!("/trace/{}", trace::format_id(id)), Duration::from_secs(2))
+            .unwrap();
+    for want in ["collector_drain", "gather_emit", "queue_append", "scatter_apply"] {
+        assert!(chain.contains(want), "chain body missing {want}: {chain}");
+    }
+    assert!(http_get(&addr, "/trace/ffffffffffffffff", Duration::from_secs(2)).is_err());
+
+    trace::configure(0);
+    trace::clear();
+}
+
+#[test]
+fn sync_bytes_are_identical_with_tracing_off_on_and_sampled() {
+    let _g = lock().lock().unwrap();
+
+    // The trace context is derived from envelope fields already on the
+    // wire, so the queued bytes must not change with the sample rate.
+    let run = |sample_every: u64| -> Vec<Vec<u8>> {
+        trace::configure(sample_every);
+        trace::clear();
+        let clock = Arc::new(ManualClock::new(0));
+        let master =
+            Arc::new(MasterShard::with_stripes(0, spec(), None, 1, 8, clock.clone()).unwrap());
+        let queue = Queue::new(1 << 26);
+        let topic = queue.create_topic("sync.ctr", 1).unwrap();
+        let mut gather = Gather::with_pool(
+            master.clone(),
+            GatherMode::Threshold(1_000_000),
+            clock.clone(),
+            None,
+        );
+        let pusher = Pusher::new(topic.clone(), 0);
+        push_rounds(&master, 5);
+        clock.advance(7);
+        pusher.push_all(&gather.flush_now()).unwrap();
+        topic
+            .partition(0)
+            .unwrap()
+            .fetch(0, 4096, Duration::ZERO)
+            .unwrap()
+            .into_iter()
+            .map(|r| r.payload.as_ref().clone())
+            .collect()
+    };
+
+    let off = run(0);
+    let every = run(1);
+    let sampled = run(7);
+    assert!(!off.is_empty(), "workload produced no sync records");
+    assert_eq!(off, every, "queued bytes changed with tracing on");
+    assert_eq!(off, sampled, "queued bytes changed with sampled tracing");
+
+    trace::configure(0);
+    trace::clear();
+}
+
+#[test]
+fn healthz_flips_to_degraded_when_scatter_lag_exceeds_its_bound() {
+    let _g = lock().lock().unwrap();
+    trace::configure(0);
+
+    // The scatter registers a scatter_lag_records readiness probe at
+    // construction; a bound plus an excessive lag must degrade /healthz
+    // with a reason, and recovery must restore plain `ok`.
+    let p = pipeline();
+    weips::metrics::set_health_bound("scatter_lag_records", Some(1_000.0));
+    p.scatter.stats.lag_records.store(5_000_000, Ordering::Relaxed);
+
+    let server = MetricsServer::serve("127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+    let degraded = http_get(&addr, "/healthz", Duration::from_secs(2)).unwrap();
+    assert!(degraded.starts_with("degraded"), "expected degraded, got: {degraded}");
+    assert!(degraded.contains("scatter lag"), "missing reason: {degraded}");
+
+    p.scatter.stats.lag_records.store(0, Ordering::Relaxed);
+    let ok = http_get(&addr, "/healthz", Duration::from_secs(2)).unwrap();
+    assert_eq!(ok.trim(), "ok");
+
+    weips::metrics::set_health_bound("scatter_lag_records", None);
+}

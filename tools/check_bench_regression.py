@@ -31,6 +31,14 @@ Kinds:
   ratios of two measurements, so they compare across hosts without a
   sequential-case normalizer.
 
+  tracing — checks the E14 update-journey tracing invariants (a
+  fully-sampled push leaves a complete span chain of >= 6 distinct
+  stages; sync-batch bytes identical with tracing off/sampled/on; the
+  sampled-tracing overhead_frac on gather→scatter throughput is
+  <= 0.05, i.e. at most 5%) and, against a non-provisional baseline,
+  gates on the sampled/off throughput ratio — a same-host measurement
+  pair that compares across hosts directly.
+
 Machine-speed normalization: absolute rows/s on a CI runner is not
 comparable to the machine that recorded the baseline, so every comparison
 is normalized by the sequential case (stripes=1, threads=0) of the same
@@ -336,11 +344,74 @@ def check_substrate_against_baseline(baseline, current, tol):
     return failures
 
 
+TRACING_STAGES = ("pipeline_throughput", "overhead", "chain", "byte_identity")
+TRACING_MAX_OVERHEAD = 0.05
+
+
+def check_tracing_intra(current):
+    """E14 invariants every tracing run must hold, baseline or not."""
+    failures = []
+    stages = {r.get("stage") for r in current}
+    for need in TRACING_STAGES:
+        if need not in stages:
+            failures.append(f"stage {need}: no records")
+    for r in current:
+        if r.get("stage") == "chain":
+            if not r.get("complete"):
+                failures.append("chain record is not complete")
+            n = _num(r, "distinct_stages", "chain", failures)
+            if n is not None and n < 6:
+                failures.append(f"chain: only {n} distinct stages (< 6)")
+        if r.get("stage") == "byte_identity" and not r.get("identical"):
+            failures.append("byte_identity record is not identical")
+        if r.get("stage") == "overhead":
+            frac = _num(r, "overhead_frac", "overhead", failures)
+            if frac is not None and frac > TRACING_MAX_OVERHEAD:
+                failures.append(
+                    f"overhead: sampled tracing costs {frac:.1%} of "
+                    f"gather/scatter throughput (> {TRACING_MAX_OVERHEAD:.0%})"
+                )
+    return failures
+
+
+def check_tracing_against_baseline(baseline, current, tol):
+    """The sampled/off throughput ratio is a same-host measurement pair,
+    so it compares across hosts directly."""
+    failures = []
+    base = [r for r in baseline if r.get("stage") == "overhead"]
+    cur = [r for r in current if r.get("stage") == "overhead"]
+    if base and cur:
+        fields = [
+            _num(base[0], "off_rows_per_sec", "baseline overhead", failures),
+            _num(base[0], "sampled_rows_per_sec", "baseline overhead", failures),
+            _num(cur[0], "off_rows_per_sec", "overhead", failures),
+            _num(cur[0], "sampled_rows_per_sec", "overhead", failures),
+        ]
+        if not any(v is None for v in fields):
+            b_off, b_on, c_off, c_on = fields
+            b_ratio = b_on / max(b_off, 1e-9)
+            c_ratio = c_on / max(c_off, 1e-9)
+            # Absolute 0.05 headroom: ratios near 1.0 are noisy on small
+            # smoke runs.
+            if c_ratio < (1.0 - tol) * b_ratio - 0.05:
+                failures.append(
+                    f"overhead: sampled/off ratio {c_ratio:.3f} < "
+                    f"{(1.0 - tol) * b_ratio - 0.05:.3f} (baseline {b_ratio:.3f})"
+                )
+    return failures
+
+
 def main():
     args = sys.argv[1:]
     kind = "sync_pipeline"
     if args and args[0] == "--kind":
-        if len(args) < 2 or args[1] not in ("sync_pipeline", "reshard", "serving", "substrate"):
+        if len(args) < 2 or args[1] not in (
+            "sync_pipeline",
+            "reshard",
+            "serving",
+            "substrate",
+            "tracing",
+        ):
             print(__doc__)
             return 2
         kind = args[1]
@@ -358,6 +429,8 @@ def main():
         failures = check_serving_intra(current)
     elif kind == "substrate":
         failures = check_substrate_intra(current)
+    elif kind == "tracing":
+        failures = check_tracing_intra(current)
     else:
         failures = check_intra_run(current)
     provisional = any(r.get("stage") == "meta" and r.get("provisional") for r in baseline)
@@ -370,6 +443,8 @@ def main():
         failures += check_serving_against_baseline(baseline, current, tol)
     elif kind == "substrate":
         failures += check_substrate_against_baseline(baseline, current, tol)
+    elif kind == "tracing":
+        failures += check_tracing_against_baseline(baseline, current, tol)
     else:
         failures += check_against_baseline(baseline, current, tol)
 

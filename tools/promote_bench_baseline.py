@@ -40,6 +40,14 @@ Kinds:
     - zero-copy win >= 1.0x on at least 2 of the 3 measured stages and
       zero arena waste;
     - not itself provisional.
+
+  tracing — validates the E14 update-journey tracing run:
+    - every stage present (pipeline_throughput, overhead, chain,
+      byte_identity);
+    - the sampled span chain is complete with >= 6 distinct stages,
+      sync-batch bytes identical across sample rates, and the sampled
+      overhead_frac <= 0.05;
+    - not itself provisional.
 """
 
 import json
@@ -55,6 +63,7 @@ from check_bench_regression import (  # noqa: E402
     check_reshard_intra,
     check_serving_intra,
     check_substrate_intra,
+    check_tracing_intra,
 )
 
 
@@ -85,11 +94,16 @@ def validate_substrate(candidate):
     return check_substrate_intra(candidate)
 
 
+def validate_tracing(candidate):
+    return check_tracing_intra(candidate)
+
+
 VALIDATORS = {
     "sync_pipeline": validate_sync_pipeline,
     "reshard": validate_reshard,
     "serving": validate_serving,
     "substrate": validate_substrate,
+    "tracing": validate_tracing,
 }
 
 
