@@ -1,0 +1,1039 @@
+//! Cluster health engine: declared alert rules, a pending→firing→resolved
+//! evaluator, and a structured event journal (WeiPS §4.3 — the decision
+//! layer of "multi-level fault tolerance and real-time domino
+//! degradation" made observable).
+//!
+//! Mirrors the registry discipline of [`crate::metrics`] and
+//! [`crate::trace`]:
+//!
+//! * **Declared rules.** Every alert this build can raise is declared up
+//!   front in [`RULES`] — name, severity, query over existing metric
+//!   families or registered [`SOURCES`], default bound, and a
+//!   `for`-duration (in evaluator ticks) of hysteresis. `docs/METRICS.md`
+//!   documents exactly this table (a doc-diff test enforces it).
+//! * **Declared sources.** Gauge-shaped inputs that rules and the
+//!   `/healthz` readiness probes share ([`SOURCES`]): registering an
+//!   undeclared source panics, and the PR 9 `HEALTH_PROBES` bounds now
+//!   live here — [`crate::metrics::set_health_bound`] delegates to
+//!   [`set_source_bound`], so readiness and alerting can never drift.
+//! * **Declared event kinds.** The journal ([`journal`]) only accepts
+//!   kinds from [`KINDS`]; every rule-state transition, degradation
+//!   engagement (poll-mode fallback, QoS sheds, cache clears, domino
+//!   downgrades) and checkpoint/reshard/recovery lifecycle event lands
+//!   in a lock-striped ring, optionally persisted to a WAL-style
+//!   append-only file ([`set_journal_dir`]), with trace-id correlation
+//!   where a sampled batch is implicated.
+//!
+//! The evaluator ([`evaluate`]) runs on every role — a [`Ticker`] thread
+//! on remote roles, the coordinator's control tick locally — and only
+//! *reads* registry state, so sync-batch wire bytes are identical with
+//! the evaluator on or off (`tests/it_alerts.rs` asserts this;
+//! `bench_alerts` gates its cost at ≤1% of pipeline throughput).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+use crate::metrics::{self, SampleFn};
+use crate::util::json::Json;
+use crate::util::{mono_ns, now_ms};
+
+/// Alert severity, ordered least to most urgent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Informational — no operator action expected.
+    Info,
+    /// Needs attention soon; the system is still serving correctly.
+    Warning,
+    /// Quality or availability is actively degraded.
+    Critical,
+}
+
+impl Severity {
+    /// Lower-case label used in series labels, JSON, and docs.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warning => "warning",
+            Severity::Critical => "critical",
+        }
+    }
+}
+
+/// What a rule measures each evaluator tick.
+#[derive(Debug, Clone, Copy)]
+pub enum Query {
+    /// Max across live registered [`SOURCES`] values; breaches when
+    /// `value > bound`.
+    SourceAbove(&'static str),
+    /// Min across live registered [`SOURCES`] values; breaches when
+    /// `value < bound`.
+    SourceBelow(&'static str),
+    /// Per-second increase of a counter family (summed over series);
+    /// breaches when `rate > bound`. The first evaluation only arms the
+    /// baseline and never breaches.
+    RateAbove(&'static str),
+    /// p99 of a histogram family (merged over series, in seconds);
+    /// breaches when `p99 > bound`.
+    P99Above(&'static str),
+}
+
+/// Compile-time declaration of one alert rule.
+#[derive(Debug)]
+pub struct Rule {
+    /// Stable rule name (`snake_case`; the `rule` label of
+    /// `weips_alert_state` and the journal event name).
+    pub name: &'static str,
+    /// Severity exported as the `severity` label.
+    pub severity: Severity,
+    /// What the rule measures.
+    pub query: Query,
+    /// Default bound; [`set_rule_bound`] / [`set_source_bound`] override
+    /// it at runtime (the `health_*` and trigger knobs flow in here).
+    pub bound: f64,
+    /// Hysteresis: consecutive breaching evaluations spent *pending*
+    /// before the rule fires (0 = fire on the first breach).
+    pub for_ticks: u64,
+    /// One-line operator help (doc-diff-tested into `docs/METRICS.md`).
+    pub help: &'static str,
+}
+
+/// Every alert rule this build can evaluate, in exposition order.
+/// `docs/METRICS.md` documents exactly this list (a test enforces it).
+pub static RULES: &[Rule] = &[
+    Rule {
+        name: "push_visible_p99_high",
+        severity: Severity::Warning,
+        query: Query::P99Above("weips_push_visible_latency_seconds"),
+        bound: 0.5,
+        for_ticks: 3,
+        help: "p99 push-to-visible sync latency above bound (seconds).",
+    },
+    Rule {
+        name: "scatter_lag_high",
+        severity: Severity::Warning,
+        query: Query::SourceAbove("scatter_lag_records"),
+        bound: 1_000_000.0,
+        for_ticks: 2,
+        help: "A scatter consumer is falling behind the sync queue (records).",
+    },
+    Rule {
+        name: "wal_unsynced_high",
+        severity: Severity::Warning,
+        query: Query::SourceAbove("wal_unsynced_appends"),
+        bound: 1_000_000.0,
+        for_ticks: 2,
+        help: "WAL appends since the last fsync exceed the durability bound.",
+    },
+    Rule {
+        name: "qos_shed_rate_high",
+        severity: Severity::Warning,
+        query: Query::RateAbove("weips_rpc_class_shed_total"),
+        bound: 100.0,
+        for_ticks: 2,
+        help: "QoS admission is shedding requests faster than bound per second.",
+    },
+    Rule {
+        name: "window_auc_low",
+        severity: Severity::Critical,
+        query: Query::SourceBelow("model_window_auc"),
+        bound: 0.55,
+        for_ticks: 0,
+        help: "Sliding-window AUC collapsed below the domino trigger threshold.",
+    },
+];
+
+/// Every gauge-shaped input rules (and the `/healthz` readiness probes)
+/// can read: (name, display text). Like [`RULES`], registering an
+/// undeclared source panics.
+pub static SOURCES: &[(&str, &str)] = &[
+    ("scatter_lag_records", "scatter lag"),
+    ("wal_unsynced_appends", "WAL unsynced appends"),
+    ("model_window_auc", "window AUC"),
+];
+
+/// Every event kind the journal accepts. Undeclared kinds panic — the
+/// journal's vocabulary is designed, not ad hoc.
+pub static KINDS: &[&str] = &[
+    "alert_pending",
+    "alert_firing",
+    "alert_resolved",
+    "degradation",
+    "checkpoint",
+    "reshard",
+    "recovery",
+];
+
+fn kind_index(kind: &str) -> usize {
+    KINDS
+        .iter()
+        .position(|k| *k == kind)
+        .unwrap_or_else(|| panic!("alerts: event kind {kind} is not declared in KINDS"))
+}
+
+fn source_what(name: &str) -> &'static str {
+    SOURCES
+        .iter()
+        .find(|(n, _)| *n == name)
+        .map(|(_, what)| *what)
+        .unwrap_or_else(|| panic!("alerts: source {name} is not declared in SOURCES"))
+}
+
+fn rule_by_name(name: &str) -> &'static Rule {
+    RULES
+        .iter()
+        .find(|r| r.name == name)
+        .unwrap_or_else(|| panic!("alerts: rule {name} is not declared in RULES"))
+}
+
+// ---------------------------------------------------------------------------
+// Sources and bounds (shared with /healthz readiness)
+// ---------------------------------------------------------------------------
+
+struct SourceState {
+    sources: BTreeMap<&'static str, Vec<(String, SampleFn)>>,
+    /// Explicit per-source bounds (the `health_*` knobs land here).
+    source_bounds: BTreeMap<&'static str, f64>,
+    /// Explicit per-rule bound overrides (e.g. the domino trigger
+    /// threshold for `window_auc_low`).
+    rule_bounds: BTreeMap<&'static str, f64>,
+}
+
+fn sources() -> &'static Mutex<SourceState> {
+    static S: OnceLock<Mutex<SourceState>> = OnceLock::new();
+    S.get_or_init(|| {
+        Mutex::new(SourceState {
+            sources: BTreeMap::new(),
+            source_bounds: BTreeMap::new(),
+            rule_bounds: BTreeMap::new(),
+        })
+    })
+}
+
+/// Register (or replace, keyed by `detail`) a sampled input source. The
+/// closure follows the [`SampleFn`] contract — `None` once the owner is
+/// dropped prunes the entry. Panics if `name` is not declared in
+/// [`SOURCES`].
+pub fn register_source(name: &'static str, detail: String, f: SampleFn) {
+    source_what(name);
+    let mut s = sources().lock().unwrap();
+    let entries = s.sources.entry(name).or_default();
+    entries.retain(|(d, _)| *d != detail);
+    entries.push((detail, f));
+}
+
+/// Set (or clear) the explicit bound for a declared source. `None` or a
+/// non-positive bound clears it: readiness then stops checking the
+/// probe, and rules fall back to their declared default bound.
+pub fn set_source_bound(name: &'static str, bound: Option<f64>) {
+    source_what(name);
+    let mut s = sources().lock().unwrap();
+    match bound.filter(|b| *b > 0.0) {
+        Some(b) => {
+            s.source_bounds.insert(name, b);
+        }
+        None => {
+            s.source_bounds.remove(name);
+        }
+    }
+}
+
+/// Override (or clear, with `None`) one rule's bound — e.g. the
+/// coordinator pins `window_auc_low` to its domino trigger threshold so
+/// the alert and the trigger read one number.
+pub fn set_rule_bound(name: &str, bound: Option<f64>) {
+    let rule = rule_by_name(name);
+    let mut s = sources().lock().unwrap();
+    match bound {
+        Some(b) => {
+            s.rule_bounds.insert(rule.name, b);
+        }
+        None => {
+            s.rule_bounds.remove(rule.name);
+        }
+    }
+}
+
+/// Explicit bound for a source, if one was set ([`set_source_bound`]).
+/// The `/healthz` readiness path only degrades on explicit bounds.
+pub fn source_bound(name: &str) -> Option<f64> {
+    sources().lock().unwrap().source_bounds.get(name).copied()
+}
+
+/// Sample every live registration of one source, pruning dead ones.
+/// Returns `(detail, value)` pairs. Panics on an undeclared source.
+pub fn sample_source(name: &str) -> Vec<(String, f64)> {
+    source_what(name);
+    let mut s = sources().lock().unwrap();
+    let Some(entries) = s.sources.get_mut(name) else { return Vec::new() };
+    let mut out = Vec::new();
+    entries.retain(|(detail, f)| match f() {
+        Some(v) => {
+            out.push((detail.clone(), v));
+            true
+        }
+        None => false,
+    });
+    out
+}
+
+fn effective_bound(rule: &Rule) -> f64 {
+    let s = sources().lock().unwrap();
+    if let Some(b) = s.rule_bounds.get(rule.name) {
+        return *b;
+    }
+    if let Query::SourceAbove(src) | Query::SourceBelow(src) = rule.query {
+        if let Some(b) = s.source_bounds.get(src) {
+            return *b;
+        }
+    }
+    rule.bound
+}
+
+// ---------------------------------------------------------------------------
+// Rule evaluator (pending -> firing -> resolved)
+// ---------------------------------------------------------------------------
+
+/// Lifecycle state of one rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum State {
+    /// Not breaching.
+    Ok,
+    /// Breaching, but for fewer than `for_ticks` evaluations.
+    Pending,
+    /// Breaching past the hysteresis window.
+    Firing,
+}
+
+impl State {
+    /// Lower-case label used in JSON and the gauge value (0/1/2).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            State::Ok => "ok",
+            State::Pending => "pending",
+            State::Firing => "firing",
+        }
+    }
+
+    fn gauge(self) -> u64 {
+        match self {
+            State::Ok => 0,
+            State::Pending => 1,
+            State::Firing => 2,
+        }
+    }
+}
+
+/// One rule's status after an evaluation ([`evaluate`]).
+#[derive(Debug, Clone)]
+pub struct RuleStatus {
+    /// Declared rule name.
+    pub rule: &'static str,
+    /// Declared severity.
+    pub severity: Severity,
+    /// Current lifecycle state.
+    pub state: State,
+    /// Last measured value (`None` when the input has no live samples
+    /// yet — e.g. a rate rule's baseline tick).
+    pub value: Option<f64>,
+    /// Effective bound (explicit override or declared default).
+    pub bound: f64,
+    /// Consecutive breaching evaluations.
+    pub breaches: u64,
+}
+
+struct RuleRuntime {
+    /// Exported as `weips_alert_state{rule,severity}` (0/1/2).
+    gauge: Arc<AtomicU64>,
+    breaches: u64,
+    state: State,
+    /// `(counter total, mono_ns)` of the previous rate sample.
+    prev_rate: Option<(f64, u64)>,
+}
+
+struct EngineState {
+    rules: Vec<RuleRuntime>,
+    /// Last evaluation's statuses, for `/alerts` rendering (GET does not
+    /// re-evaluate; cadence is owned by the ticker / control tick).
+    snapshot: Vec<RuleStatus>,
+    evals: u64,
+    last_eval_ms: u64,
+}
+
+fn engine() -> &'static Mutex<EngineState> {
+    static E: OnceLock<Mutex<EngineState>> = OnceLock::new();
+    E.get_or_init(|| {
+        let rules: Vec<RuleRuntime> = RULES
+            .iter()
+            .map(|rule| {
+                let gauge = Arc::new(AtomicU64::new(0));
+                let reader = gauge.clone();
+                metrics::register_fn(
+                    "weips_alert_state",
+                    &[
+                        ("rule", rule.name.to_string()),
+                        ("severity", rule.severity.as_str().to_string()),
+                    ],
+                    Box::new(move || Some(reader.load(Ordering::Relaxed) as f64)),
+                );
+                RuleRuntime { gauge, breaches: 0, state: State::Ok, prev_rate: None }
+            })
+            .collect();
+        Mutex::new(EngineState { rules, snapshot: Vec::new(), evals: 0, last_eval_ms: 0 })
+    })
+}
+
+/// Evaluate every declared rule once, journaling state transitions and
+/// recording the evaluator's own cost in
+/// `weips_alert_eval_duration_seconds{role}`. Read-only against the
+/// pipeline: wire bytes are identical with the evaluator on or off.
+pub fn evaluate(role: &str) -> Vec<RuleStatus> {
+    let start = mono_ns();
+    let mut transitions: Vec<(&'static str, &'static str, String, u64)> = Vec::new();
+    let statuses = {
+        let mut eng = engine().lock().unwrap();
+        let mut statuses = Vec::with_capacity(RULES.len());
+        for (rule, rt) in RULES.iter().zip(eng.rules.iter_mut()) {
+            let value = measure(rule, rt);
+            let bound = effective_bound(rule);
+            let breach = match (rule.query, value) {
+                (Query::SourceBelow(_), Some(v)) => v < bound,
+                (_, Some(v)) => v > bound,
+                (_, None) => false,
+            };
+            let prev = rt.state;
+            if breach {
+                rt.breaches += 1;
+                rt.state =
+                    if rt.breaches > rule.for_ticks { State::Firing } else { State::Pending };
+            } else {
+                rt.breaches = 0;
+                rt.state = State::Ok;
+            }
+            rt.gauge.store(rt.state.gauge(), Ordering::Relaxed);
+            if rt.state != prev {
+                let kind = match rt.state {
+                    State::Pending => "alert_pending",
+                    State::Firing => "alert_firing",
+                    State::Ok => "alert_resolved",
+                };
+                let detail = format!(
+                    "role={role} state={} value={} bound={} breaches={}",
+                    rt.state.as_str(),
+                    value.map_or("none".to_string(), fmt_num),
+                    fmt_num(bound),
+                    rt.breaches,
+                );
+                // Latency alerts cite the most recent sampled batch via
+                // the histogram's exemplar — the journal entry links
+                // straight to /trace/<id>.
+                let trace_id = match rule.query {
+                    Query::P99Above(fam) => metrics::exemplar_trace_id(fam).unwrap_or(0),
+                    _ => 0,
+                };
+                transitions.push((kind, rule.name, detail, trace_id));
+            }
+            statuses.push(RuleStatus {
+                rule: rule.name,
+                severity: rule.severity,
+                state: rt.state,
+                value,
+                bound,
+                breaches: rt.breaches,
+            });
+        }
+        eng.snapshot = statuses.clone();
+        eng.evals += 1;
+        eng.last_eval_ms = now_ms();
+        statuses
+    };
+    // Journal outside the engine lock: journal() takes ring + file locks.
+    for (kind, name, detail, trace_id) in transitions {
+        journal(kind, name, &detail, trace_id);
+    }
+    metrics::histogram("weips_alert_eval_duration_seconds", &[("role", role.to_string())])
+        .record(mono_ns().saturating_sub(start));
+    statuses
+}
+
+fn measure(rule: &Rule, rt: &mut RuleRuntime) -> Option<f64> {
+    match rule.query {
+        Query::SourceAbove(src) => {
+            sample_source(src).into_iter().map(|(_, v)| v).fold(None, |acc: Option<f64>, v| {
+                Some(acc.map_or(v, |m| m.max(v)))
+            })
+        }
+        Query::SourceBelow(src) => {
+            sample_source(src).into_iter().map(|(_, v)| v).fold(None, |acc: Option<f64>, v| {
+                Some(acc.map_or(v, |m| m.min(v)))
+            })
+        }
+        Query::RateAbove(fam) => {
+            let total = metrics::family_total(fam);
+            let now = mono_ns();
+            let prev = rt.prev_rate;
+            rt.prev_rate = total.map(|t| (t, now));
+            match (prev, total) {
+                (Some((pt, pn)), Some(t)) if now > pn => {
+                    Some((t - pt).max(0.0) / ((now - pn) as f64 / 1e9))
+                }
+                _ => None,
+            }
+        }
+        Query::P99Above(fam) => metrics::family_quantile(fam, 0.99),
+    }
+}
+
+/// Prometheus-style number formatting for journal details.
+fn fmt_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.6}")
+    }
+}
+
+/// Render the last evaluation as the `/alerts` JSON body.
+pub fn render_alerts_json() -> String {
+    let eng = engine().lock().unwrap();
+    let mut out = String::with_capacity(1024);
+    out.push_str(&format!(
+        "{{\"ts_ms\":{},\"evals\":{},\"rules\":[",
+        eng.last_eval_ms, eng.evals
+    ));
+    for (i, s) in eng.snapshot.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let value = match s.value {
+            Some(v) if v.is_finite() => format!("{v}"),
+            _ => "null".to_string(),
+        };
+        out.push_str(&format!(
+            "{{\"rule\":\"{}\",\"severity\":\"{}\",\"state\":\"{}\",\"value\":{},\
+             \"bound\":{},\"breaches\":{}}}",
+            s.rule,
+            s.severity.as_str(),
+            s.state.as_str(),
+            value,
+            s.bound,
+            s.breaches,
+        ));
+    }
+    out.push_str("]}");
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Structured event journal (lock-striped ring + optional WAL file)
+// ---------------------------------------------------------------------------
+
+/// One journaled event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Monotonic sequence number (global order across stripes).
+    pub seq: u64,
+    /// Wall-clock time of the event.
+    pub ts_ms: u64,
+    /// Declared kind ([`KINDS`]).
+    pub kind: &'static str,
+    /// Event name (rule name, subsystem, or lifecycle step).
+    pub name: String,
+    /// Free-form context (`k=v` pairs by convention).
+    pub detail: String,
+    /// Correlated trace id (0 = none; see [`crate::trace`]).
+    pub trace_id: u64,
+}
+
+const STRIPES: usize = 8;
+const PER_STRIPE: usize = 256;
+
+struct JournalState {
+    stripes: Vec<Mutex<VecDeque<Event>>>,
+    seq: AtomicU64,
+    /// Optional WAL-style persistence: events append to
+    /// `<dir>/events.wal` as JSON lines, replayed on [`set_journal_dir`].
+    file: Mutex<Option<File>>,
+}
+
+fn journal_state() -> &'static JournalState {
+    static J: OnceLock<JournalState> = OnceLock::new();
+    J.get_or_init(|| JournalState {
+        stripes: (0..STRIPES).map(|_| Mutex::new(VecDeque::new())).collect(),
+        seq: AtomicU64::new(0),
+        file: Mutex::new(None),
+    })
+}
+
+/// Record one event. `kind` must be declared in [`KINDS`]; `trace_id` 0
+/// means no correlated trace.
+pub fn journal(kind: &'static str, name: &str, detail: &str, trace_id: u64) {
+    kind_index(kind);
+    let js = journal_state();
+    let seq = js.seq.fetch_add(1, Ordering::Relaxed);
+    let ev = Event {
+        seq,
+        ts_ms: now_ms(),
+        kind,
+        name: name.to_string(),
+        detail: detail.to_string(),
+        trace_id,
+    };
+    if let Some(f) = js.file.lock().unwrap().as_mut() {
+        // Best-effort durability: a full disk must not take down the
+        // data path, so write errors are swallowed (the ring still has
+        // the event).
+        let line = format!("{}\n", event_json(&ev));
+        let _ = f.write_all(line.as_bytes()).and_then(|_| f.flush());
+    }
+    let mut stripe = js.stripes[(seq % STRIPES as u64) as usize].lock().unwrap();
+    if stripe.len() == PER_STRIPE {
+        stripe.pop_front();
+    }
+    stripe.push_back(ev);
+}
+
+/// The most recent `limit` events, newest first.
+pub fn recent_events(limit: usize) -> Vec<Event> {
+    let js = journal_state();
+    let mut all: Vec<Event> = Vec::new();
+    for stripe in &js.stripes {
+        all.extend(stripe.lock().unwrap().iter().cloned());
+    }
+    all.sort_by(|a, b| b.seq.cmp(&a.seq));
+    all.truncate(limit);
+    all
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\")
+        .replace('"', "\\\"")
+        .replace('\n', "\\n")
+        .replace('\r', "\\r")
+        .replace('\t', "\\t")
+}
+
+fn event_json(ev: &Event) -> String {
+    let mut out = format!(
+        "{{\"seq\":{},\"ts_ms\":{},\"kind\":\"{}\",\"name\":\"{}\",\"detail\":\"{}\"",
+        ev.seq,
+        ev.ts_ms,
+        ev.kind,
+        esc(&ev.name),
+        esc(&ev.detail),
+    );
+    if ev.trace_id != 0 {
+        out.push_str(&format!(",\"trace_id\":\"{}\"", crate::trace::format_id(ev.trace_id)));
+    }
+    out.push('}');
+    out
+}
+
+/// Render the newest `limit` events as the `/events` JSON body.
+pub fn render_events_json(limit: usize) -> String {
+    let events = recent_events(limit);
+    let body: Vec<String> = events.iter().map(event_json).collect();
+    format!("{{\"events\":[{}]}}", body.join(","))
+}
+
+/// Enable (`Some(dir)`) or disable (`None`) WAL-backed journal
+/// persistence. Existing events in `<dir>/events.wal` are replayed into
+/// the ring (torn tails — partial last lines — are skipped) and the seq
+/// counter resumes past them, so a restarted role keeps its history.
+pub fn set_journal_dir(dir: Option<&Path>) -> std::io::Result<()> {
+    let js = journal_state();
+    let Some(dir) = dir else {
+        *js.file.lock().unwrap() = None;
+        return Ok(());
+    };
+    std::fs::create_dir_all(dir)?;
+    let path: PathBuf = dir.join("events.wal");
+    let mut existing = String::new();
+    if let Ok(mut f) = File::open(&path) {
+        // Invalid UTF-8 (torn multi-byte tail) degrades to an empty
+        // replay rather than an error.
+        let mut bytes = Vec::new();
+        f.read_to_end(&mut bytes)?;
+        existing = String::from_utf8_lossy(&bytes).into_owned();
+    }
+    let mut max_seq = 0u64;
+    for line in existing.lines() {
+        let Some(ev) = parse_event(line) else { continue };
+        max_seq = max_seq.max(ev.seq + 1);
+        let mut stripe = js.stripes[(ev.seq % STRIPES as u64) as usize].lock().unwrap();
+        if stripe.len() == PER_STRIPE {
+            stripe.pop_front();
+        }
+        stripe.push_back(ev);
+    }
+    js.seq.fetch_max(max_seq, Ordering::Relaxed);
+    let file = OpenOptions::new().create(true).append(true).open(&path)?;
+    *js.file.lock().unwrap() = Some(file);
+    Ok(())
+}
+
+fn parse_event(line: &str) -> Option<Event> {
+    let doc = Json::parse(line).ok()?;
+    let kind = doc.get("kind")?.as_str()?;
+    // Unknown kinds (a newer build's journal) are skipped, not a panic.
+    let kind = *KINDS.iter().find(|k| **k == kind)?;
+    Some(Event {
+        seq: doc.get("seq")?.as_f64()? as u64,
+        ts_ms: doc.get("ts_ms")?.as_f64()? as u64,
+        kind,
+        name: doc.get("name")?.as_str()?.to_string(),
+        detail: doc.get("detail")?.as_str()?.to_string(),
+        trace_id: doc
+            .get("trace_id")
+            .and_then(|t| t.as_str())
+            .and_then(crate::trace::parse_id)
+            .unwrap_or(0),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Evaluator ticker (remote roles)
+// ---------------------------------------------------------------------------
+
+/// Background evaluator thread handle; dropping it stops and joins the
+/// thread. The local coordinator evaluates from its control tick
+/// instead.
+pub struct Ticker {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Drop for Ticker {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Start a background evaluator ticking every `every_ms` (0 disables —
+/// returns `None`).
+pub fn spawn_ticker(role: &str, every_ms: u64) -> Option<Ticker> {
+    if every_ms == 0 {
+        return None;
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let flag = stop.clone();
+    let role = role.to_string();
+    let handle = std::thread::Builder::new()
+        .name("weips-alerts".to_string())
+        .spawn(move || {
+            while !flag.load(Ordering::Relaxed) {
+                evaluate(&role);
+                // Sleep in short slices so Drop joins promptly.
+                let mut slept = 0u64;
+                while slept < every_ms && !flag.load(Ordering::Relaxed) {
+                    let step = (every_ms - slept).min(25);
+                    std::thread::sleep(std::time::Duration::from_millis(step));
+                    slept += step;
+                }
+            }
+        })
+        .expect("spawn alerts ticker");
+    Some(Ticker { stop, handle: Some(handle) })
+}
+
+// ---------------------------------------------------------------------------
+// Test support
+// ---------------------------------------------------------------------------
+
+/// Reset the engine, journal ring, sources, and bound overrides —
+/// rebuilding a cluster in one process (tests, benches) starts clean.
+/// Persistence stays configured.
+pub fn clear() {
+    let mut eng = engine().lock().unwrap();
+    for rt in &mut eng.rules {
+        rt.breaches = 0;
+        rt.state = State::Ok;
+        rt.prev_rate = None;
+        rt.gauge.store(0, Ordering::Relaxed);
+    }
+    eng.snapshot.clear();
+    eng.evals = 0;
+    eng.last_eval_ms = 0;
+    drop(eng);
+    let mut s = sources().lock().unwrap();
+    s.sources.clear();
+    s.source_bounds.clear();
+    s.rule_bounds.clear();
+    drop(s);
+    let js = journal_state();
+    for stripe in &js.stripes {
+        stripe.lock().unwrap().clear();
+    }
+}
+
+/// Serialize tests that touch the global engine/journal/sources.
+#[cfg(test)]
+pub fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    L.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state_of<'a>(statuses: &'a [RuleStatus], rule: &str) -> &'a RuleStatus {
+        statuses.iter().find(|s| s.rule == rule).unwrap()
+    }
+
+    /// Satellite: readiness and alerting share one declaration — every
+    /// `/healthz` probe must be a declared source AND have a rule
+    /// reading it, so the two bound sets cannot drift.
+    #[test]
+    fn health_probes_and_rules_share_declarations() {
+        for (name, what) in crate::metrics::HEALTH_PROBES {
+            assert_eq!(
+                source_what(name),
+                *what,
+                "health probe {name} must be declared in alerts::SOURCES with the same text"
+            );
+            assert!(
+                RULES.iter().any(|r| matches!(
+                    r.query,
+                    Query::SourceAbove(s) | Query::SourceBelow(s) if s == *name
+                )),
+                "health probe {name} has no alert rule reading it"
+            );
+        }
+    }
+
+    #[test]
+    fn rule_names_unique_and_families_declared() {
+        for (i, r) in RULES.iter().enumerate() {
+            assert!(
+                !RULES[..i].iter().any(|o| o.name == r.name),
+                "duplicate rule {}",
+                r.name
+            );
+            match r.query {
+                Query::SourceAbove(s) | Query::SourceBelow(s) => {
+                    source_what(s);
+                }
+                Query::RateAbove(f) | Query::P99Above(f) => {
+                    assert!(
+                        metrics::DESCRIPTORS.iter().any(|d| d.name == f),
+                        "rule {} reads undeclared family {f}",
+                        r.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not declared in SOURCES")]
+    fn undeclared_source_panics() {
+        register_source("made_up_source", "x".to_string(), Box::new(|| Some(1.0)));
+    }
+
+    #[test]
+    #[should_panic(expected = "not declared in KINDS")]
+    fn undeclared_event_kind_panics() {
+        journal("made_up_kind", "x", "y", 0);
+    }
+
+    #[test]
+    fn source_rule_walks_pending_firing_resolved() {
+        let _g = test_lock();
+        clear();
+        let lag = Arc::new(AtomicU64::new(5_000_000_000));
+        let weak = Arc::downgrade(&lag);
+        register_source(
+            "scatter_lag_records",
+            "unit-test".to_string(),
+            Box::new(move || weak.upgrade().map(|v| v.load(Ordering::Relaxed) as f64)),
+        );
+        set_source_bound("scatter_lag_records", Some(1e9));
+        // for_ticks = 2: two pending evaluations, firing on the third.
+        let s1 = evaluate("test");
+        assert_eq!(state_of(&s1, "scatter_lag_high").state, State::Pending);
+        let s2 = evaluate("test");
+        assert_eq!(state_of(&s2, "scatter_lag_high").state, State::Pending);
+        let s3 = evaluate("test");
+        assert_eq!(state_of(&s3, "scatter_lag_high").state, State::Firing);
+        assert_eq!(state_of(&s3, "scatter_lag_high").value, Some(5e9));
+        // The exported gauge tracks the state machine.
+        let text = metrics::render();
+        assert!(
+            text.contains("weips_alert_state{rule=\"scatter_lag_high\",severity=\"warning\"} 2"),
+            "missing firing gauge in:\n{text}"
+        );
+        // Recovery resolves and journals the full lifecycle.
+        lag.store(0, Ordering::Relaxed);
+        let s4 = evaluate("test");
+        assert_eq!(state_of(&s4, "scatter_lag_high").state, State::Ok);
+        let kinds: Vec<&str> = recent_events(64)
+            .into_iter()
+            .filter(|e| e.name == "scatter_lag_high")
+            .map(|e| e.kind)
+            .collect();
+        // Newest first.
+        assert_eq!(kinds, vec!["alert_resolved", "alert_firing", "alert_pending"]);
+        clear();
+    }
+
+    #[test]
+    fn window_auc_rule_fires_on_first_breach_and_ignores_empty_monitor() {
+        let _g = test_lock();
+        clear();
+        let auc = Arc::new(Mutex::new(None::<f64>));
+        let reader = auc.clone();
+        register_source(
+            "model_window_auc",
+            "unit-test".to_string(),
+            Box::new(move || *reader.lock().unwrap()),
+        );
+        set_rule_bound("window_auc_low", Some(0.6));
+        // No samples yet: the source reports nothing, the rule stays Ok
+        // (a cold monitor must not fire a critical alert at startup).
+        let s = evaluate("test");
+        assert_eq!(state_of(&s, "window_auc_low").state, State::Ok);
+        assert_eq!(state_of(&s, "window_auc_low").value, None);
+        // AUC collapse: for_ticks = 0 fires on the first breach.
+        *auc.lock().unwrap() = Some(0.41);
+        let s = evaluate("test");
+        assert_eq!(state_of(&s, "window_auc_low").state, State::Firing);
+        assert_eq!(state_of(&s, "window_auc_low").bound, 0.6);
+        clear();
+    }
+
+    #[test]
+    fn rate_rule_arms_baseline_on_first_eval() {
+        let _g = test_lock();
+        clear();
+        let c = metrics::counter(
+            "weips_rpc_class_shed_total",
+            &[("server", "alerts-ut".to_string()), ("class", "bulk".to_string())],
+        );
+        let s1 = evaluate("test");
+        assert_eq!(
+            state_of(&s1, "qos_shed_rate_high").value,
+            None,
+            "first eval is the baseline"
+        );
+        c.fetch_add(10_000, Ordering::Relaxed);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let s2 = evaluate("test");
+        let rate = state_of(&s2, "qos_shed_rate_high").value.unwrap();
+        assert!(rate > 0.0, "rate should be positive, got {rate}");
+        clear();
+    }
+
+    #[test]
+    fn explicit_bounds_override_defaults_and_clear_back() {
+        let _g = test_lock();
+        clear();
+        let rule = rule_by_name("wal_unsynced_high");
+        assert_eq!(effective_bound(rule), 1_000_000.0);
+        set_source_bound("wal_unsynced_appends", Some(42.0));
+        assert_eq!(effective_bound(rule), 42.0);
+        // Rule-level override beats the source bound.
+        set_rule_bound("wal_unsynced_high", Some(7.0));
+        assert_eq!(effective_bound(rule), 7.0);
+        set_rule_bound("wal_unsynced_high", None);
+        set_source_bound("wal_unsynced_appends", None);
+        assert_eq!(effective_bound(rule), 1_000_000.0);
+        clear();
+    }
+
+    #[test]
+    fn journal_ring_overwrites_oldest_without_growing() {
+        let _g = test_lock();
+        clear();
+        for i in 0..(STRIPES * PER_STRIPE + 500) {
+            journal("checkpoint", "ring-test", &format!("i={i}"), 0);
+        }
+        let all = recent_events(usize::MAX);
+        assert!(all.len() <= STRIPES * PER_STRIPE);
+        // Newest first, contiguous seqs at the top.
+        assert!(all[0].seq > all[1].seq);
+        assert_eq!(all[0].detail, format!("i={}", STRIPES * PER_STRIPE + 499));
+        clear();
+    }
+
+    #[test]
+    fn events_render_and_reparse_with_trace_ids() {
+        let _g = test_lock();
+        clear();
+        journal("degradation", "rpc_poll_mode", "requested=uring engaged=event", 0x2a);
+        let body = render_events_json(4);
+        let doc = Json::parse(&body).unwrap();
+        let events = doc.get("events").unwrap().as_arr().unwrap();
+        let ev = &events[0];
+        assert_eq!(ev.get("kind").unwrap().as_str(), Some("degradation"));
+        assert_eq!(ev.get("name").unwrap().as_str(), Some("rpc_poll_mode"));
+        assert_eq!(ev.get("trace_id").unwrap().as_str(), Some("000000000000002a"));
+        clear();
+    }
+
+    #[test]
+    fn journal_persists_and_replays_across_reopen() {
+        let _g = test_lock();
+        clear();
+        let dir = std::env::temp_dir()
+            .join(format!("weips-alerts-persist-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        set_journal_dir(Some(dir.as_path())).unwrap();
+        journal("recovery", "slave_restart", "shard=0 replica=1", 0);
+        journal("reshard", "migrate_slots", "moved=16", 7);
+        set_journal_dir(None).unwrap();
+        clear();
+        assert!(recent_events(8).is_empty());
+        // Reopen: the WAL file replays into the ring, seq resumes past it.
+        set_journal_dir(Some(dir.as_path())).unwrap();
+        let replayed = recent_events(8);
+        assert_eq!(replayed.len(), 2);
+        assert_eq!(replayed[0].name, "migrate_slots");
+        assert_eq!(replayed[0].trace_id, 7);
+        assert_eq!(replayed[1].detail, "shard=0 replica=1");
+        journal("checkpoint", "after-replay", "", 0);
+        assert!(recent_events(1)[0].seq > replayed[0].seq);
+        set_journal_dir(None).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        clear();
+    }
+
+    #[test]
+    fn alerts_json_reports_last_evaluation() {
+        let _g = test_lock();
+        clear();
+        evaluate("test");
+        let doc = Json::parse(&render_alerts_json()).unwrap();
+        assert!(doc.get("evals").unwrap().as_f64().unwrap() >= 1.0);
+        let rules = doc.get("rules").unwrap().as_arr().unwrap();
+        assert_eq!(rules.len(), RULES.len());
+        for (r, decl) in rules.iter().zip(RULES) {
+            assert_eq!(r.get("rule").unwrap().as_str(), Some(decl.name));
+            assert_eq!(r.get("severity").unwrap().as_str(), Some(decl.severity.as_str()));
+        }
+        clear();
+    }
+
+    #[test]
+    fn ticker_evaluates_and_stops_on_drop() {
+        let _g = test_lock();
+        clear();
+        assert!(spawn_ticker("test", 0).is_none());
+        let before = engine().lock().unwrap().evals;
+        let t = spawn_ticker("test", 1).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        drop(t);
+        let after = engine().lock().unwrap().evals;
+        assert!(after > before, "ticker never evaluated");
+        clear();
+    }
+}

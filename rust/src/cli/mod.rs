@@ -60,6 +60,13 @@ OPS:
               n-th sync batch into GET /trace; 0 = off) plus
               --health-scatter-lag-max / --health-wal-unsynced-max
               readiness bounds for /healthz.
+    Alerts:   every role evaluates the declared alert rules (GET /alerts,
+              gauge weips_alert_state) on an --alert-eval-ms cadence
+              (default 1000; 0 = coordinator/control-tick only) and logs
+              state transitions, degradations, checkpoints, reshards and
+              recoveries to the structured event journal (GET /events;
+              --alert-journal-dir <dir> persists it across restarts).
+              Firing quality rules drive the domino rollback machinery.
 "#;
 
 /// CLI entry point.

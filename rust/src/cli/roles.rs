@@ -70,21 +70,28 @@ fn cluster_config(args: &Args) -> Result<ClusterConfig> {
         args.get_u64("health-scatter-lag-max", cfg.health_scatter_lag_max)?;
     cfg.health_wal_unsynced_max =
         args.get_u64("health-wal-unsynced-max", cfg.health_wal_unsynced_max)?;
+    cfg.alert_eval_ms = args.get_u64("alert-eval-ms", cfg.alert_eval_ms)?;
+    if let Some(d) = args.get("alert-journal-dir") {
+        cfg.alert_journal_dir = d.to_string();
+    }
     Ok(cfg)
 }
 
 /// Start this role's Prometheus endpoint per the `metrics_enabled` /
-/// `metrics_port` knobs. `--metrics-targets a,b` additionally enables
-/// the aggregated `/cluster` view over those peers. Returns the server
-/// handle — bind it for the role's lifetime (dropping it stops the
-/// endpoint).
+/// `metrics_port` knobs, plus the background alert-rule evaluator
+/// (`alert_eval_ms`). `--metrics-targets a,b` additionally enables the
+/// aggregated `/cluster` view over those peers. Returns the server and
+/// ticker handles — bind them for the role's lifetime (dropping them
+/// stops the endpoint and the evaluator thread).
 fn serve_role_metrics(
     args: &Args,
+    role: &str,
     cfg: &ClusterConfig,
-) -> Result<Option<crate::metrics::http::MetricsServer>> {
-    // Process-global observability knobs: the trace sampling cadence and
-    // the /healthz readiness bounds apply whether or not this role serves
-    // the endpoint (another process may scrape it via --metrics-targets).
+) -> Result<(Option<crate::metrics::http::MetricsServer>, Option<crate::alerts::Ticker>)> {
+    // Process-global observability knobs: the trace sampling cadence, the
+    // /healthz readiness bounds, and the event-journal persistence apply
+    // whether or not this role serves the endpoint (another process may
+    // scrape it via --metrics-targets).
     crate::trace::configure(cfg.trace_sample_every);
     crate::metrics::set_health_bound(
         "scatter_lag_records",
@@ -94,8 +101,18 @@ fn serve_role_metrics(
         "wal_unsynced_appends",
         Some(cfg.health_wal_unsynced_max as f64),
     );
+    if !cfg.alert_journal_dir.is_empty() {
+        crate::alerts::set_journal_dir(Some(std::path::Path::new(&cfg.alert_journal_dir)))
+            .map_err(|e| {
+                Error::Config(format!("alert_journal_dir {}: {e}", cfg.alert_journal_dir))
+            })?;
+    }
+    // The evaluator runs even without the HTTP endpoint: it still drives
+    // the alert-state gauges and the persisted event journal for this
+    // process.
+    let ticker = crate::alerts::spawn_ticker(role, cfg.alert_eval_ms);
     if !cfg.metrics_enabled {
-        return Ok(None);
+        return Ok((None, ticker));
     }
     let targets: Vec<String> = args
         .get("metrics-targets")
@@ -104,7 +121,7 @@ fn serve_role_metrics(
     let addr = format!("127.0.0.1:{}", cfg.metrics_port);
     let server = crate::metrics::http::MetricsServer::serve_with_targets(&addr, targets)?;
     println!("metrics on http://{}/metrics", server.addr());
-    Ok(Some(server))
+    Ok((Some(server), ticker))
 }
 
 fn load_engine(args: &Args) -> Result<Arc<Engine>> {
@@ -174,7 +191,7 @@ pub fn run_local(args: &Args) -> Result<()> {
             .unwrap_or_else(crate::runtime::default_artifacts_dir),
         ..Default::default()
     })?;
-    let _metrics = serve_role_metrics(args, &cfg)?;
+    let _metrics = serve_role_metrics(args, "coordinator", &cfg)?;
     for step in 1..=steps {
         let loss = cluster.train_step()?;
         cluster.sync_tick()?;
@@ -250,7 +267,7 @@ pub fn run_broker(args: &Args) -> Result<()> {
             }),
         );
     }
-    let _metrics = serve_role_metrics(args, &cfg)?;
+    let _metrics = serve_role_metrics(args, "broker", &cfg)?;
     let server =
         RpcServer::serve_with(&addr, Arc::new(QueueService { topic }), cfg.rpc_options())?;
     println!("broker on {} ({partitions} partitions)", server.addr());
@@ -324,7 +341,7 @@ pub fn run_master(args: &Args) -> Result<()> {
     )?;
     println!("master shard {shard} on {} (broker {broker})", server.addr());
     master.register_metrics("master");
-    let _metrics = serve_role_metrics(args, &cfg)?;
+    let _metrics = serve_role_metrics(args, "master", &cfg)?;
 
     let mut scheduler = Scheduler::new(
         MetaStore::new(clock.clone()),
@@ -423,7 +440,7 @@ pub fn run_slave(args: &Args) -> Result<()> {
         server.addr(),
         cfg.slave_shards
     );
-    let _metrics = serve_role_metrics(args, &cfg)?;
+    let _metrics = serve_role_metrics(args, "slave", &cfg)?;
     let log: Arc<dyn SyncLog> =
         Arc::new(RemoteLog::connect(Channel::remote(&broker, RPC_TIMEOUT))?);
     let mut scatter = Scatter::with_pool(
@@ -477,7 +494,7 @@ pub fn run_trainer(args: &Args) -> Result<()> {
         .collect();
     let monitor = Arc::new(crate::monitor::Monitor::new(4096));
     monitor.register_metrics("trainer");
-    let _metrics = serve_role_metrics(args, &cfg)?;
+    let _metrics = serve_role_metrics(args, "trainer", &cfg)?;
     // Route over the cluster's configured slot universe, not the default
     // — a universe skew would push to the wrong masters.
     let router = Router::with_slots(channels.len() as u32, cfg.reshard_slots as usize);
@@ -532,7 +549,7 @@ pub fn run_predictor(args: &Args) -> Result<()> {
             Arc::new(ReplicaGroup::new(endpoints, cfg.replica_balance))
         })
         .collect();
-    let _metrics = serve_role_metrics(args, &cfg)?;
+    let _metrics = serve_role_metrics(args, "predictor", &cfg)?;
     let router = Router::with_slots(groups.len() as u32, cfg.reshard_slots as usize);
     // No hot-id cache here: the standalone predictor does not consume
     // the scatter stream, so there is no invalidation source and a

@@ -17,6 +17,8 @@ use crate::metrics::{parse_exposition, Sample};
 use crate::{Error, Result};
 
 const FETCH_TIMEOUT: Duration = Duration::from_secs(4);
+/// Journal entries shown in the events pane.
+const EVENT_LINES: usize = 10;
 const SPARK: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
 /// Slot-heat buckets shown in the sparkline (matches the exporter's
 /// `HEAT_BUCKETS` ceiling).
@@ -36,7 +38,8 @@ pub fn run_top(args: &Args) -> Result<()> {
         let (source, body) = fetch(&endpoint)?;
         let samples = parse_exposition(&body)
             .map_err(|e| Error::State(format!("bad exposition from {endpoint}: {e}")))?;
-        let screen = render(&samples);
+        let mut screen = render(&samples);
+        screen.push_str(&render_events(&fetch_events(&endpoint), EVENT_LINES));
         if once {
             println!("weips top — {endpoint} ({source})\n{screen}");
             return Ok(());
@@ -60,6 +63,16 @@ fn fetch(endpoint: &str) -> Result<(&'static str, String)> {
     let body = http_get(endpoint, "/metrics", FETCH_TIMEOUT)
         .map_err(|e| Error::State(format!("scrape {endpoint} failed: {e}")))?;
     Ok(("/metrics", body))
+}
+
+/// Journal feed: fleet-merged `/cluster/events` when the endpoint
+/// aggregates, else its own `/events`. Empty body when neither answers
+/// (an older endpoint) — the pane just stays out of the screen.
+fn fetch_events(endpoint: &str) -> String {
+    if let Ok(body) = http_get(endpoint, "/cluster/events", FETCH_TIMEOUT) {
+        return body;
+    }
+    http_get(endpoint, "/events", FETCH_TIMEOUT).unwrap_or_default()
 }
 
 /// Sum of every sample of `name` (across shards/replicas/instances).
@@ -248,6 +261,73 @@ pub fn render(samples: &[Sample]) -> String {
     if let Some(auc) = auc {
         out.push_str(&format!("model   auc {auc:.4}\n"));
     }
+
+    // -- active alerts -----------------------------------------------------
+    // `weips_alert_state` gauges: 1 = pending, 2 = firing. Quiet when
+    // every rule is Ok; /cluster duplicates per instance dedupe away.
+    let mut alert_lines: Vec<String> = samples
+        .iter()
+        .filter(|s| s.name == "weips_alert_state" && s.value > 0.0)
+        .map(|s| {
+            let rule = s.label("rule").unwrap_or("?");
+            let severity = s.label("severity").unwrap_or("info");
+            let color = match severity {
+                "critical" => "\x1b[31m",
+                "warning" => "\x1b[33m",
+                _ => "",
+            };
+            let state = if s.value >= 2.0 { "FIRING" } else { "pending" };
+            format!("{color}{state} {rule} ({severity})\x1b[0m")
+        })
+        .collect();
+    alert_lines.sort();
+    alert_lines.dedup();
+    if !alert_lines.is_empty() {
+        out.push_str(&format!("alerts  {}\n", alert_lines.join("   ")));
+    }
+    out
+}
+
+/// Events pane from a `/events` (or fleet-merged `/cluster/events`) JSON
+/// body: the newest `limit` journal entries, one per line. Empty string
+/// on an empty or unparsable body, so the pane vanishes rather than
+/// printing noise.
+pub fn render_events(body: &str, limit: usize) -> String {
+    let Ok(doc) = crate::util::json::Json::parse(body) else {
+        return String::new();
+    };
+    let mut events: Vec<(i64, String)> = Vec::new();
+    let mut collect = |doc: &crate::util::json::Json| {
+        let Some(arr) = doc.get("events").and_then(|e| e.as_arr()) else {
+            return;
+        };
+        for ev in arr {
+            let seq = ev.get("seq").and_then(|v| v.as_i64()).unwrap_or(0);
+            let kind = ev.get("kind").and_then(|v| v.as_str()).unwrap_or("?");
+            let name = ev.get("name").and_then(|v| v.as_str()).unwrap_or("?");
+            let detail = ev.get("detail").and_then(|v| v.as_str()).unwrap_or("");
+            events.push((seq, format!("  [{kind}] {name}  {detail}\n")));
+        }
+    };
+    match doc.get("instances").and_then(|i| i.as_arr()) {
+        Some(instances) => {
+            for inst in instances {
+                if let Some(data) = inst.get("data") {
+                    collect(data);
+                }
+            }
+        }
+        None => collect(&doc),
+    }
+    if events.is_empty() {
+        return String::new();
+    }
+    events.sort_by_key(|(seq, _)| std::cmp::Reverse(*seq));
+    events.truncate(limit);
+    let mut out = String::from("events\n");
+    for (_, line) in events {
+        out.push_str(&line);
+    }
     out
 }
 
@@ -354,6 +434,48 @@ mod tests {
         assert!(screen.contains("push→visible"));
         assert!(!screen.contains("engaged"));
         assert!(!screen.contains("trace"));
+        assert!(!screen.contains("alerts"));
+    }
+
+    #[test]
+    fn alerts_pane_colors_by_severity_and_dedupes_instances() {
+        // The same firing rule from two /cluster instances plus a pending
+        // warning; Ok rules (value 0) stay off the pane.
+        let s = vec![
+            sample("weips_alert_state", &[("rule", "window_auc_low"), ("severity", "critical")], 2.0),
+            sample("weips_alert_state", &[("rule", "window_auc_low"), ("severity", "critical")], 2.0),
+            sample("weips_alert_state", &[("rule", "scatter_lag_high"), ("severity", "warning")], 1.0),
+            sample("weips_alert_state", &[("rule", "wal_unsynced_high"), ("severity", "warning")], 0.0),
+        ];
+        let screen = render(&s);
+        assert!(screen.contains("\x1b[31mFIRING window_auc_low (critical)\x1b[0m"), "{screen}");
+        assert!(screen.contains("\x1b[33mpending scatter_lag_high (warning)\x1b[0m"), "{screen}");
+        assert!(!screen.contains("wal_unsynced_high"), "{screen}");
+        assert_eq!(screen.matches("window_auc_low").count(), 1, "{screen}");
+    }
+
+    #[test]
+    fn events_pane_renders_flat_and_cluster_bodies_newest_first() {
+        let flat = r#"{"events":[
+            {"seq":2,"ts_ms":5,"kind":"alert_firing","name":"scatter_lag_high","detail":"role=slave"},
+            {"seq":1,"ts_ms":4,"kind":"checkpoint","name":"checkpoint_finalized","detail":"v3"}]}"#;
+        let pane = render_events(flat, 10);
+        assert!(pane.starts_with("events\n"), "{pane}");
+        let firing = pane.find("alert_firing").unwrap();
+        let ckpt = pane.find("checkpoint_finalized").unwrap();
+        assert!(firing < ckpt, "newest first: {pane}");
+
+        let merged = format!(
+            r#"{{"instances":[{{"instance":"a","data":{flat}}},{{"instance":"b","data":{{"events":[{{"seq":9,"kind":"degradation","name":"qos_shed_engaged","detail":"class bulk"}}]}}}}]}}"#
+        );
+        let pane = render_events(&merged, 2);
+        assert!(pane.contains("qos_shed_engaged"), "{pane}");
+        assert!(pane.contains("alert_firing"), "{pane}");
+        assert!(!pane.contains("checkpoint_finalized"), "limit 2 keeps newest: {pane}");
+
+        // Unparsable / empty feeds keep the pane out entirely.
+        assert_eq!(render_events("", 10), "");
+        assert_eq!(render_events("{\"events\":[]}", 10), "");
     }
 
     #[test]

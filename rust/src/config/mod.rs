@@ -331,6 +331,13 @@ pub struct ClusterConfig {
     /// this bound (0 = never degrade on WAL lag; flush-only WALs never
     /// register the probe).
     pub health_wal_unsynced_max: u64,
+    /// Alert-evaluator tick interval for the role's background ticker
+    /// (0 = no ticker; rules still evaluate on the coordinator's control
+    /// tick and on demand via `GET /alerts`).
+    pub alert_eval_ms: u64,
+    /// Directory for the structured event journal's `events.wal`
+    /// persistence (empty = ring-buffer only, no file).
+    pub alert_journal_dir: String,
 }
 
 impl Default for ClusterConfig {
@@ -372,6 +379,8 @@ impl Default for ClusterConfig {
             trace_sample_every: 0,
             health_scatter_lag_max: 1_000_000,
             health_wal_unsynced_max: 1_000_000,
+            alert_eval_ms: 1_000,
+            alert_journal_dir: String::new(),
         }
     }
 }
@@ -516,6 +525,12 @@ impl ClusterConfig {
         if let Some(v) = doc.get_int("cluster", "health_wal_unsynced_max") {
             c.health_wal_unsynced_max = v.max(0) as u64;
         }
+        if let Some(v) = doc.get_int("cluster", "alert_eval_ms") {
+            c.alert_eval_ms = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_str("cluster", "alert_journal_dir") {
+            c.alert_journal_dir = v.to_string();
+        }
         Ok(c)
     }
 }
@@ -657,6 +672,21 @@ mod tests {
         assert_eq!(d.trace_sample_every, 0);
         assert!(d.health_scatter_lag_max > 0);
         assert!(d.health_wal_unsynced_max > 0);
+    }
+
+    #[test]
+    fn alert_knobs_parse_and_default() {
+        let doc = TomlDoc::parse(
+            "[cluster]\nalert_eval_ms = 250\nalert_journal_dir = \"/tmp/weips-events\"\n",
+        )
+        .unwrap();
+        let c = ClusterConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.alert_eval_ms, 250);
+        assert_eq!(c.alert_journal_dir, "/tmp/weips-events");
+        // Defaults: evaluator on at 1s, journal persistence off.
+        let d = ClusterConfig::default();
+        assert_eq!(d.alert_eval_ms, 1_000);
+        assert!(d.alert_journal_dir.is_empty());
     }
 
     #[test]

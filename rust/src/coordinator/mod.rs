@@ -163,6 +163,10 @@ impl LocalCluster {
             "wal_unsynced_appends",
             Some(cfg.health_wal_unsynced_max as f64),
         );
+        // The alert evaluator's AUC rule and the domino trigger read the
+        // same knob: a firing `window_auc_low` is the declared face of the
+        // quality dip the domino acts on.
+        crate::alerts::set_rule_bound("window_auc_low", Some(opts.trigger_threshold));
 
         let (data_dir, owns_data_dir) = match opts.data_dir {
             Some(d) => (d, false),
@@ -651,6 +655,11 @@ impl LocalCluster {
                 m.expire_features_pooled(self.cfg.feature_ttl_ms, self.sync_pool.as_deref());
             }
         }
+        // Evaluate the declared alert rules on the coordinator's cadence:
+        // the same tick that feeds the domino also walks `window_auc_low`
+        // (and the lag/WAL rules) through pending→firing, so a triggered
+        // rollback always has a firing rule and journal trail behind it.
+        crate::alerts::evaluate("coordinator");
         let snap = self.monitor.snapshot();
         let fire = {
             let mut domino = self.domino.lock().unwrap();
@@ -661,6 +670,15 @@ impl LocalCluster {
             match self.vm.plan(&self.store, strategy) {
                 Ok(plan) => {
                     self.execute_downgrade(&plan)?;
+                    crate::alerts::journal(
+                        "degradation",
+                        "window_auc_low",
+                        &format!(
+                            "domino rollback v{} -> v{} (window_auc {:.6}, strategy {:?})",
+                            plan.from_version, plan.target_version, snap.window_auc, strategy
+                        ),
+                        0,
+                    );
                     return Ok(Some(plan));
                 }
                 Err(Error::State(_)) => return Ok(None), // nothing to roll to
@@ -737,6 +755,12 @@ impl LocalCluster {
         // The rollback rewrote slave state outside the scatter stream, so
         // cached rows have no invalidation signal: drop them wholesale.
         self.serving_cache.clear();
+        crate::alerts::journal(
+            "degradation",
+            "serving_cache_clear",
+            &format!("rollback to v{} dropped the hot-id cache", plan.target_version),
+            0,
+        );
         self.vm.commit(plan);
         Ok(())
     }
@@ -795,6 +819,12 @@ impl LocalCluster {
         // shard may predate the recovered state. Dropping everything is
         // cheaper than tracking which stripes the chain touched.
         self.serving_cache.clear();
+        crate::alerts::journal(
+            "recovery",
+            "slave_recovered",
+            &format!("shard {shard} replica {replica} rebuilt from v{version}"),
+            0,
+        );
         Ok(())
     }
 
@@ -1040,6 +1070,15 @@ impl LocalCluster {
             .fetch_add(report.slots_moved as u64, Ordering::Relaxed);
         crate::metrics::counter("weips_migration_rows_moved_total", &labels)
             .fetch_add(rows, Ordering::Relaxed);
+        crate::alerts::journal(
+            "reshard",
+            "slots_migrated",
+            &format!(
+                "donor {donor} -> recipient {recipient}: {} slots, {rows} rows",
+                report.slots_moved
+            ),
+            0,
+        );
         Ok(report)
     }
 

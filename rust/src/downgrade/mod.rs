@@ -319,4 +319,75 @@ mod tests {
         assert!(!d.observe(0.59));
         assert!(d.observe(0.58));
     }
+
+    #[test]
+    fn domino_cooldown_keeps_smoothed_window_warm() {
+        // Cooldown observations still feed the trigger, so the smoothed
+        // window is already full when the cooldown expires: a sustained
+        // regression re-fires on the very first armed observation.
+        let mut d = Domino::new(
+            Box::new(SmoothedThreshold::new(0.7, 3)),
+            SwitchStrategy::LatestStable,
+            2,
+        );
+        for v in [0.6, 0.59, 0.58] {
+            let fired = d.observe(v);
+            assert_eq!(fired, v == 0.58, "fires exactly on the 3rd dip");
+        }
+        assert!(!d.observe(0.57)); // cooldown 1
+        assert!(!d.observe(0.56)); // cooldown 2
+        assert!(d.observe(0.55), "window stayed warm through cooldown");
+        assert_eq!(d.fires, 2);
+    }
+
+    #[test]
+    fn domino_cooldown_rearms_clean_after_recovery() {
+        // Recovery during cooldown must not leave a stale dip window
+        // that fires spuriously once the cooldown expires.
+        let mut d = Domino::new(
+            Box::new(SmoothedThreshold::new(0.7, 3)),
+            SwitchStrategy::LatestStable,
+            2,
+        );
+        for v in [0.6, 0.59, 0.58] {
+            let _ = d.observe(v);
+        }
+        assert_eq!(d.fires, 1);
+        assert!(!d.observe(0.9)); // cooldown 1, metric recovered
+        assert!(!d.observe(0.9)); // cooldown 2
+        assert!(!d.observe(0.6), "recovered points inside window veto a fire");
+        assert!(!d.observe(0.6));
+        assert!(d.observe(0.6), "fires only after k fresh consecutive dips");
+    }
+
+    #[test]
+    fn domino_ignores_nan_metric_points() {
+        let mut d = Domino::new(
+            Box::new(PlainThreshold { threshold: 0.7 }),
+            SwitchStrategy::LatestStable,
+            0,
+        );
+        assert!(!d.observe(f64::NAN), "NaN never fires a rollback");
+        assert_eq!(d.fires, 0);
+        assert!(d.observe(0.1), "trigger still live after NaN");
+    }
+
+    #[test]
+    fn repeat_fire_cascades_quarantine_down_the_version_chain() {
+        // The domino cascade: committing onto v2 and firing again while
+        // still serving v2 condemns v2 itself and falls through to v1.
+        let (store, base) = store_with_versions(&[(1, 0.70), (2, 0.74)]);
+        let vm = VersionManager::new("ctr", 3);
+        let plan = vm.plan(&store, SwitchStrategy::LatestStable).unwrap();
+        assert_eq!(plan.target_version, 2);
+        vm.commit(&plan);
+        let plan2 = vm.plan(&store, SwitchStrategy::LatestStable).unwrap();
+        assert_eq!(plan2.target_version, 1, "re-fire skips the quarantined v2");
+        assert!(vm.is_quarantined(2));
+        vm.commit(&plan2);
+        // Nothing older than v1: a third fire is a clean error, and v1
+        // (now quarantined by the cascade) is never re-offered.
+        assert!(vm.plan(&store, SwitchStrategy::LatestStable).is_err());
+        std::fs::remove_dir_all(base).ok();
+    }
 }

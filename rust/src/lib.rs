@@ -27,6 +27,7 @@
     clippy::result_large_err
 )]
 
+pub mod alerts;
 pub mod cli;
 pub mod codec;
 pub mod config;

@@ -23,6 +23,12 @@
 //!   single-threaded loop would deadlock).
 //! * `GET /trace` / `GET /trace/<hex id>` — recent sampled update-journey
 //!   trace chains as JSON ([`crate::trace`]).
+//! * `GET /alerts` / `GET /events` — the alert engine's last evaluation
+//!   and the newest structured journal events as JSON
+//!   ([`crate::alerts`]).
+//! * `GET /cluster/alerts` / `GET /cluster/events` — the same, fetched
+//!   from every configured peer target and merged per-`instance` (the
+//!   `/cluster`-style fleet view `weips top` renders).
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
@@ -202,6 +208,17 @@ impl MetricsServer {
                     ("200 OK", scrape_targets(&targets, local), false)
                 }
             }
+            "/alerts" => ("200 OK", crate::alerts::render_alerts_json(), true),
+            "/events" => ("200 OK", crate::alerts::render_events_json(EVENTS_LIMIT), true),
+            "/cluster/alerts" | "/cluster/events" => {
+                let targets = targets.lock().unwrap().clone();
+                if targets.is_empty() {
+                    ("404 Not Found", "no cluster targets configured\n".to_string(), false)
+                } else {
+                    let sub = &path["/cluster".len()..];
+                    ("200 OK", merge_json_targets(&targets, local, sub), true)
+                }
+            }
             "/trace" => ("200 OK", crate::trace::render_recent_json(32), true),
             p if p.starts_with("/trace/") => {
                 match crate::trace::parse_id(&p["/trace/".len()..])
@@ -259,6 +276,37 @@ fn scrape_targets(targets: &[String], local: SocketAddr) -> String {
         scrapes.push((t.clone(), body));
     }
     super::aggregate(&scrapes)
+}
+
+/// How many journal events `/events` returns per instance.
+const EVENTS_LIMIT: usize = 64;
+
+/// Fleet merge for the JSON endpoints: fetch `path` (`/alerts` or
+/// `/events`) from every target and wrap the bodies per instance as
+/// `{"instances":[{"instance":"host:port","data":{...}}, ...]}`. Like
+/// [`scrape_targets`], a self target renders in-process and a dead
+/// target is skipped rather than failing the whole view.
+fn merge_json_targets(targets: &[String], local: SocketAddr, path: &str) -> String {
+    let mut parts = Vec::with_capacity(targets.len());
+    for t in targets {
+        let body = if is_self(t, local) {
+            match path {
+                "/alerts" => crate::alerts::render_alerts_json(),
+                _ => crate::alerts::render_events_json(EVENTS_LIMIT),
+            }
+        } else {
+            match http_get(t, path, IO_TIMEOUT) {
+                Ok(b) => b,
+                Err(_) => continue,
+            }
+        };
+        parts.push(format!(
+            "{{\"instance\":\"{}\",\"data\":{}}}",
+            t.replace('"', ""),
+            body.trim()
+        ));
+    }
+    format!("{{\"instances\":[{}]}}", parts.join(","))
 }
 
 fn is_self(target: &str, local: SocketAddr) -> bool {
@@ -404,8 +452,46 @@ mod tests {
     #[test]
     fn cluster_without_targets_is_404() {
         let server = MetricsServer::serve("127.0.0.1:0").unwrap();
+        let addr = server.addr().to_string();
+        assert!(http_get(&addr, "/cluster", Duration::from_secs(2)).is_err());
+        assert!(http_get(&addr, "/cluster/alerts", Duration::from_secs(2)).is_err());
+        assert!(http_get(&addr, "/cluster/events", Duration::from_secs(2)).is_err());
+    }
+
+    #[test]
+    fn alert_and_event_routes_serve_json_and_cluster_merge() {
+        let _g = crate::alerts::test_lock();
+        crate::alerts::clear();
+        crate::alerts::evaluate("http-test");
+        crate::alerts::journal("checkpoint", "http-test-ckpt", "v=1", 0);
+        let peer = MetricsServer::serve("127.0.0.1:0").unwrap();
+        let agg = MetricsServer::serve("127.0.0.1:0").unwrap();
+        agg.set_targets(vec![peer.addr().to_string(), agg.addr().to_string()]);
+        let addr = agg.addr().to_string();
+
+        let alerts = http_get(&addr, "/alerts", Duration::from_secs(2)).unwrap();
+        let j = crate::util::json::Json::parse(&alerts).expect("alerts is JSON");
+        let rules = j.get("rules").unwrap().as_arr().unwrap();
+        assert_eq!(rules.len(), crate::alerts::RULES.len());
+
+        let events = http_get(&addr, "/events", Duration::from_secs(2)).unwrap();
+        let j = crate::util::json::Json::parse(&events).expect("events is JSON");
+        let evs = j.get("events").unwrap().as_arr().unwrap();
         assert!(
-            http_get(&server.addr().to_string(), "/cluster", Duration::from_secs(2)).is_err()
+            evs.iter().any(|e| e.get("name").unwrap().as_str() == Some("http-test-ckpt")),
+            "journaled event served: {events}"
         );
+
+        // Fleet merge: one entry per live target (self via in-process).
+        for sub in ["/cluster/alerts", "/cluster/events"] {
+            let merged = http_get(&addr, sub, Duration::from_secs(4)).unwrap();
+            let j = crate::util::json::Json::parse(&merged).expect("merge is JSON");
+            let instances = j.get("instances").unwrap().as_arr().unwrap();
+            assert_eq!(instances.len(), 2, "{sub}: {merged}");
+            assert!(instances
+                .iter()
+                .all(|i| i.get("data").unwrap().as_obj().is_some()));
+        }
+        crate::alerts::clear();
     }
 }

@@ -387,6 +387,20 @@ pub static DESCRIPTORS: &[Desc] = &[
         help: "Training samples observed by the progressive-validation monitor.",
         labels: &["role"],
     },
+    // -- alerting / event journal -----------------------------------------
+    Desc {
+        name: "weips_alert_state",
+        kind: Kind::Gauge,
+        help: "Lifecycle state of a declared alert rule (0 = ok, 1 = pending, \
+               2 = firing); rules are declared in alerts::RULES.",
+        labels: &["rule", "severity"],
+    },
+    Desc {
+        name: "weips_alert_eval_duration_seconds",
+        kind: Kind::Histogram,
+        help: "Wall time of one alert-evaluator tick over every declared rule.",
+        labels: &["role"],
+    },
 ];
 
 /// Histogram bucket bounds: exposition label (seconds) paired with the
@@ -539,6 +553,75 @@ impl Registry {
         }
         out
     }
+
+    /// Sum a family's current value across every live series (counter
+    /// loads, sampled reads, histogram counts). Dead samplers are pruned;
+    /// `None` when the family has no live series yet — the alert
+    /// evaluator's rate queries use this as their input.
+    pub fn family_total(&self, name: &'static str) -> Option<f64> {
+        let desc = Self::desc(name);
+        let mut fams = self.families.lock().unwrap();
+        let fam = fams.get_mut(desc.name)?;
+        let mut sum = 0.0;
+        let mut live = 0usize;
+        let mut dead = Vec::new();
+        for (key, inst) in fam.iter() {
+            match inst {
+                Instrument::Counter(c) => {
+                    sum += c.load(Ordering::Relaxed) as f64;
+                    live += 1;
+                }
+                Instrument::Sampled(f) => match f() {
+                    Some(v) => {
+                        sum += v;
+                        live += 1;
+                    }
+                    None => dead.push(key.clone()),
+                },
+                Instrument::Histogram(h) => {
+                    sum += h.count() as f64;
+                    live += 1;
+                }
+            }
+        }
+        for key in dead {
+            fam.remove(&key);
+        }
+        (live > 0).then_some(sum)
+    }
+
+    /// Approximate quantile (in seconds) of a histogram family, merging
+    /// the cumulative buckets of every series. Returns the upper bound of
+    /// the bucket holding the rank — the same resolution the exposition
+    /// offers a dashboard — or `f64::INFINITY` past the largest bound;
+    /// `None` while the family has no observations.
+    pub fn family_quantile(&self, name: &'static str, q: f64) -> Option<f64> {
+        let desc = Self::desc(name);
+        debug_assert_eq!(desc.kind, Kind::Histogram, "{name} is not a histogram");
+        let fams = self.families.lock().unwrap();
+        let fam = fams.get(desc.name)?;
+        let bounds: Vec<u64> = LATENCY_LE_NS.iter().map(|(_, b)| *b).collect();
+        let mut cum = vec![0u64; bounds.len()];
+        let mut total = 0u64;
+        for inst in fam.values() {
+            if let Instrument::Histogram(h) = inst {
+                for (i, c) in h.cumulative(&bounds).iter().enumerate() {
+                    cum[i] += c;
+                }
+                total += h.count();
+            }
+        }
+        if total == 0 {
+            return None;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        for (i, c) in cum.iter().enumerate() {
+            if *c >= rank {
+                return Some(bounds[i] as f64 / 1e9);
+            }
+        }
+        Some(f64::INFINITY)
+    }
 }
 
 /// Append `name{key} value\n` (omitting the braces for an empty key).
@@ -646,6 +729,16 @@ pub fn render() -> String {
     default().render()
 }
 
+/// [`Registry::family_total`] on the global registry.
+pub fn family_total(name: &'static str) -> Option<f64> {
+    default().family_total(name)
+}
+
+/// [`Registry::family_quantile`] on the global registry.
+pub fn family_quantile(name: &'static str, q: f64) -> Option<f64> {
+    default().family_quantile(name, q)
+}
+
 // ---------------------------------------------------------------------------
 // OpenMetrics exemplars (trace linkage)
 // ---------------------------------------------------------------------------
@@ -678,6 +771,19 @@ fn exemplar_for(name: &str, key: &str) -> Option<(u64, f64)> {
     exemplars().lock().unwrap().get(&(name.to_string(), key.to_string())).copied()
 }
 
+/// Most recent exemplar trace id attached to any series of one histogram
+/// family — the alert evaluator cites it when a latency rule transitions,
+/// correlating the journal entry with a sampled batch.
+pub fn exemplar_trace_id(name: &str) -> Option<u64> {
+    exemplars()
+        .lock()
+        .unwrap()
+        .iter()
+        .filter(|((n, _), _)| n.as_str() == name)
+        .map(|(_, (id, _))| *id)
+        .next_back()
+}
+
 /// Drop the ``# {...}`` exemplar suffix from one exposition line (the
 /// parser and the `/cluster` aggregator both work on plain samples).
 fn strip_exemplar(line: &str) -> &str {
@@ -691,25 +797,16 @@ fn strip_exemplar(line: &str) -> &str {
 // Readiness probes (/healthz degraded levels)
 // ---------------------------------------------------------------------------
 
-/// Every readiness probe this build can evaluate: (name, display text).
-/// Like [`DESCRIPTORS`], registering an undeclared probe panics. Bounds
-/// come from the `health_*` cluster knobs via [`set_health_bound`].
+/// Every readiness probe `/healthz` evaluates: (name, display text).
+/// Like [`DESCRIPTORS`], registering an undeclared probe panics. Since
+/// PR 10 the probe values and bounds live in the alert engine's source
+/// registry ([`crate::alerts::SOURCES`]) — readiness and the declared
+/// alert rules share one registration and one bound store, so the two
+/// can never drift (an `alerts` test pins every probe to a rule).
 pub static HEALTH_PROBES: &[(&str, &str)] = &[
     ("scatter_lag_records", "scatter lag"),
     ("wal_unsynced_appends", "WAL unsynced appends"),
 ];
-
-struct HealthState {
-    bounds: BTreeMap<&'static str, f64>,
-    probes: BTreeMap<&'static str, Vec<(String, SampleFn)>>,
-}
-
-fn health() -> &'static Mutex<HealthState> {
-    static H: OnceLock<Mutex<HealthState>> = OnceLock::new();
-    H.get_or_init(|| {
-        Mutex::new(HealthState { bounds: BTreeMap::new(), probes: BTreeMap::new() })
-    })
-}
 
 fn health_what(name: &str) -> &'static str {
     HEALTH_PROBES
@@ -722,27 +819,20 @@ fn health_what(name: &str) -> &'static str {
 /// Register (or replace) a readiness probe. `detail` locates the owner
 /// (e.g. `shard=0 replica=1`); the closure follows the [`SampleFn`]
 /// contract — `None` once the owner is dropped prunes the entry.
+/// Delegates to [`crate::alerts::register_source`]: the same sample
+/// feeds `/healthz` and the declared alert rules.
 pub fn register_health(name: &'static str, detail: String, f: SampleFn) {
     health_what(name);
-    let mut h = health().lock().unwrap();
-    let probes = h.probes.entry(name).or_default();
-    probes.retain(|(d, _)| *d != detail);
-    probes.push((detail, f));
+    crate::alerts::register_source(name, detail, f);
 }
 
 /// Set (or clear) the degradation bound for a declared probe. `None` or
-/// a non-positive bound disables the check; the probe keeps sampling.
+/// a non-positive bound disables the readiness check; the probe keeps
+/// sampling. Delegates to [`crate::alerts::set_source_bound`], the one
+/// bound store readiness and alerting share.
 pub fn set_health_bound(name: &'static str, bound: Option<f64>) {
     health_what(name);
-    let mut h = health().lock().unwrap();
-    match bound.filter(|b| *b > 0.0) {
-        Some(b) => {
-            h.bounds.insert(name, b);
-        }
-        None => {
-            h.bounds.remove(name);
-        }
-    }
+    crate::alerts::set_source_bound(name, bound);
 }
 
 /// `/healthz` body: `ok` while every bounded probe is under its bound,
@@ -750,26 +840,22 @@ pub fn set_health_bound(name: &'static str, bound: Option<f64>) {
 /// probes that only check the status code keep treating a degraded
 /// (alive-but-stale) role as alive; readiness checks match on the body.
 pub fn health_body() -> String {
-    let mut h = health().lock().unwrap();
     let mut reasons = Vec::new();
     for (name, what) in HEALTH_PROBES {
-        let bound = h.bounds.get(name).copied();
-        let Some(probes) = h.probes.get_mut(name) else { continue };
-        probes.retain(|(detail, f)| match f() {
-            Some(v) => {
-                if let Some(b) = bound {
-                    if v > b {
-                        reasons.push(format!(
-                            "{what} {} > {} ({detail})",
-                            fmt_value(v),
-                            fmt_value(b)
-                        ));
-                    }
-                }
-                true
+        let Some(bound) = crate::alerts::source_bound(name) else {
+            // Unbounded probes still sample (pruning dead owners).
+            crate::alerts::sample_source(name);
+            continue;
+        };
+        for (detail, v) in crate::alerts::sample_source(name) {
+            if v > bound {
+                reasons.push(format!(
+                    "{what} {} > {} ({detail})",
+                    fmt_value(v),
+                    fmt_value(bound)
+                ));
             }
-            None => false,
-        });
+        }
     }
     if reasons.is_empty() {
         "ok\n".to_string()
@@ -1129,6 +1215,9 @@ mod tests {
 
     #[test]
     fn health_body_degrades_on_bound_and_prunes_dead_probes() {
+        // The probes live in the alert engine's source registry now;
+        // serialize against the alerts tests that clear() it.
+        let _g = crate::alerts::test_lock();
         // A deliberately huge value + bound so concurrently running tests
         // with real (small) scatter lags can never trip this bound.
         let owner = Arc::new(AtomicU64::new(3_000_000_000_000));

@@ -182,6 +182,20 @@ impl Monitor {
                 Box::new(move || weak.upgrade().map(|m| get(&m.snapshot()))),
             );
         }
+        // The window AUC also feeds the `window_auc_low` alert rule. A
+        // cold monitor (no samples) reports nothing so a critical alert
+        // can't fire at startup, matching the domino's samples > 0 guard.
+        let weak = std::sync::Arc::downgrade(self);
+        crate::alerts::register_source(
+            "model_window_auc",
+            format!("role={role}"),
+            Box::new(move || {
+                weak.upgrade().and_then(|m| {
+                    let s = m.snapshot();
+                    (s.samples > 0).then_some(s.window_auc)
+                })
+            }),
+        );
     }
 
     /// Current metrics.
@@ -380,5 +394,50 @@ mod tests {
             assert!(!t.observe(0.1)); // not enough contrast points yet
         }
         assert!(t.observe(0.1));
+    }
+
+    #[test]
+    fn plain_trigger_never_fires_on_nan() {
+        // NaN compares false against any threshold: a poisoned metric
+        // must not roll the model back.
+        let mut t = PlainThreshold { threshold: 0.7 };
+        assert!(!t.observe(f64::NAN));
+        assert!(t.observe(0.1), "recovers after the NaN point");
+    }
+
+    #[test]
+    fn smoothed_trigger_suppresses_nan_windows() {
+        let mut t = SmoothedThreshold::new(0.7, 3);
+        // A NaN inside the window poisons both the mean and the all-dip
+        // check to false — no fire until k clean dips follow it.
+        assert!(!t.observe(0.1));
+        assert!(!t.observe(f64::NAN));
+        assert!(!t.observe(0.1), "NaN poisons the window mean");
+        assert!(!t.observe(0.1), "NaN still inside the k=3 window");
+        // NaN has rolled out: [0.1, 0.1, 0.1] is the first clean window.
+        assert!(t.observe(0.1));
+    }
+
+    #[test]
+    fn smoothed_trigger_clamps_zero_k_to_one() {
+        // smooth_k = 0 would make every window "complete" vacuously;
+        // the constructor clamps it to 1 (plain-threshold behavior).
+        let mut t = SmoothedThreshold::new(0.7, 0);
+        assert_eq!(t.smooth_k, 1);
+        assert!(!t.observe(0.8));
+        assert!(t.observe(0.6));
+    }
+
+    #[test]
+    fn smoothed_trigger_mean_guard_blocks_mixed_windows() {
+        // Every point below threshold is required, not just the mean:
+        // one recovered point inside the window vetoes the fire.
+        let mut t = SmoothedThreshold::new(0.7, 3);
+        assert!(!t.observe(0.1));
+        assert!(!t.observe(0.1));
+        assert!(!t.observe(0.9), "window mean 0.36 < 0.7 but 0.9 recovered");
+        assert!(!t.observe(0.1), "0.9 still in window");
+        assert!(!t.observe(0.1), "0.9 still in window");
+        assert!(t.observe(0.1), "three consecutive dips fire");
     }
 }

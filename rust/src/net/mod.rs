@@ -285,7 +285,17 @@ impl QosGate {
         let mut cur = self.inflight[i].load(Ordering::Relaxed);
         loop {
             if cur >= cap {
-                self.shed[i].fetch_add(1, Ordering::Relaxed);
+                // Journal the *first* shed per class per gate: the event log
+                // marks "this server started shedding", the rate lives in
+                // `weips_rpc_class_shed_total` (and the qos alert rule).
+                if self.shed[i].fetch_add(1, Ordering::Relaxed) == 0 {
+                    crate::alerts::journal(
+                        "degradation",
+                        "qos_shed_engaged",
+                        &format!("class {} hit inflight cap {cap}", class.name()),
+                        0,
+                    );
+                }
                 return Err(class);
             }
             match self.inflight[i].compare_exchange_weak(
@@ -758,7 +768,8 @@ impl RpcServer {
         let stop = Arc::new(AtomicBool::new(false));
         let pool =
             Arc::new(ThreadPool::new(opts.threads.max(1), &format!("rpc-{}", local.port())));
-        let mut mode = opts.mode.resolve();
+        let requested = opts.mode.resolve();
+        let mut mode = requested;
         // Uring mode needs a live ring and a waker; a kernel or sandbox
         // without io_uring downgrades to the epoll path.
         let mut uring = None;
@@ -783,6 +794,16 @@ impl RpcServer {
                 }
                 _ => mode = PollMode::Peek,
             }
+        }
+        if mode != requested {
+            // The uring→event→peek ladder silently degrades at bind time;
+            // journal it so the event log explains the engaged-mode gauge.
+            crate::alerts::journal(
+                "degradation",
+                "poll_mode_fallback",
+                &format!("{addr}: requested {} engaged {}", requested.name(), mode.name()),
+                0,
+            );
         }
         let park = Arc::new(ParkQueue {
             queue: Mutex::new(Vec::new()),

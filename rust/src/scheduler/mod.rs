@@ -363,6 +363,12 @@ impl Scheduler {
         // Rare event, so the registry lookup per checkpoint is fine.
         crate::metrics::counter("weips_checkpoints_total", &[("role", "scheduler".to_string())])
             .fetch_add(1, Ordering::Relaxed);
+        crate::alerts::journal(
+            "checkpoint",
+            "checkpoint_finalized",
+            &format!("model {} version v{version}", self.model),
+            0,
+        );
     }
 
     /// Latest finalized version.

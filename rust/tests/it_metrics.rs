@@ -147,6 +147,82 @@ fn docs_metrics_reference_matches_descriptors() {
     }
 }
 
+/// CI smoke target: the alert/journal routes answer with parseable JSON
+/// — `/alerts` reports every declared rule after one evaluation, and a
+/// journaled event comes back out of `/events`. Runs without artifacts.
+#[test]
+fn scrape_smoke_alerts_and_events_routes() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let server = MetricsServer::serve("127.0.0.1:0").expect("bind metrics");
+    let addr = server.addr().to_string();
+
+    weips::alerts::evaluate("smoke");
+    weips::alerts::journal("checkpoint", "smoke_event", "scrape smoke marker", 0);
+
+    let alerts = http_get(&addr, "/alerts", GET_TIMEOUT).expect("GET /alerts");
+    let doc = weips::util::json::Json::parse(&alerts).expect("alerts JSON parses");
+    let rules = doc.get("rules").and_then(|r| r.as_arr()).expect("rules array");
+    assert_eq!(rules.len(), weips::alerts::RULES.len(), "{alerts}");
+    for r in rules {
+        assert!(r.get("rule").and_then(|v| v.as_str()).is_some(), "{alerts}");
+        assert!(r.get("state").and_then(|v| v.as_str()).is_some(), "{alerts}");
+    }
+
+    let events = http_get(&addr, "/events", GET_TIMEOUT).expect("GET /events");
+    let doc = weips::util::json::Json::parse(&events).expect("events JSON parses");
+    let listed = doc.get("events").and_then(|e| e.as_arr()).expect("events array");
+    assert!(
+        listed.iter().any(|e| e.get("name").and_then(|v| v.as_str()) == Some("smoke_event")),
+        "{events}"
+    );
+
+    // The alert-state gauges ride the ordinary exposition too.
+    let (body, _samples) = scrape(&server);
+    assert!(body.contains("weips_alert_state{"), "gauges missing from /metrics");
+}
+
+/// `docs/METRICS.md`'s alert-rules table must document exactly the
+/// declared `alerts::RULES` — same no-rot discipline as the series
+/// reference above: every rule appears with its severity, and no unknown
+/// rule is documented.
+#[test]
+fn docs_metrics_alert_rules_reference_matches_rules() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("repo root")
+        .join("docs/METRICS.md");
+    let doc = std::fs::read_to_string(&path).expect("docs/METRICS.md");
+    let section = doc
+        .split("## Alert rules")
+        .nth(1)
+        .expect("docs/METRICS.md has an '## Alert rules' section");
+    let section = section.split("\n## ").next().unwrap();
+    let documented: std::collections::BTreeSet<&str> = section
+        .lines()
+        .filter_map(|l| l.strip_prefix("| `")?.split('`').next())
+        .collect();
+    for r in weips::alerts::RULES {
+        assert!(
+            documented.contains(r.name),
+            "rule {} is not documented in docs/METRICS.md",
+            r.name
+        );
+        assert!(
+            section.contains(&format!("| `{}` | {} |", r.name, r.severity.as_str())),
+            "rule {} row must carry severity {}",
+            r.name,
+            r.severity.as_str()
+        );
+    }
+    for name in &documented {
+        assert!(
+            weips::alerts::RULES.iter().any(|r| r.name == *name),
+            "docs/METRICS.md documents unknown alert rule {name}"
+        );
+    }
+}
+
 /// End-to-end over the real pipeline: master pushes move the master
 /// counters and slot heat, the sync round-trip advances the push→visible
 /// histogram, and a WAL append surfaces fsync accounting — all read back

@@ -39,6 +39,14 @@ Kinds:
   gates on the sampled/off throughput ratio — a same-host measurement
   pair that compares across hosts directly.
 
+  alerts — checks the E15 cluster-health-engine invariants (the
+  pending -> firing lifecycle engages against a breaching source and
+  is journaled; sync-batch bytes identical with the evaluator off vs
+  ticking; the evaluator overhead_frac on gather→scatter throughput is
+  <= 0.01, i.e. at most 1%) and, against a non-provisional baseline,
+  gates on the ticking/off throughput ratio — a same-host measurement
+  pair that compares across hosts directly.
+
 Machine-speed normalization: absolute rows/s on a CI runner is not
 comparable to the machine that recorded the baseline, so every comparison
 is normalized by the sequential case (stripes=1, threads=0) of the same
@@ -401,6 +409,68 @@ def check_tracing_against_baseline(baseline, current, tol):
     return failures
 
 
+ALERTS_STAGES = (
+    "pipeline_throughput",
+    "overhead",
+    "eval_cost",
+    "lifecycle",
+    "byte_identity",
+)
+ALERTS_MAX_OVERHEAD = 0.01
+
+
+def check_alerts_intra(current):
+    """E15 invariants every alerts run must hold, baseline or not."""
+    failures = []
+    stages = {r.get("stage") for r in current}
+    for need in ALERTS_STAGES:
+        if need not in stages:
+            failures.append(f"stage {need}: no records")
+    for r in current:
+        if r.get("stage") == "lifecycle":
+            if not r.get("fired"):
+                failures.append("lifecycle record never reached firing")
+            if not r.get("journaled"):
+                failures.append("lifecycle record missing from the journal")
+        if r.get("stage") == "byte_identity" and not r.get("identical"):
+            failures.append("byte_identity record is not identical")
+        if r.get("stage") == "overhead":
+            frac = _num(r, "overhead_frac", "overhead", failures)
+            if frac is not None and frac > ALERTS_MAX_OVERHEAD:
+                failures.append(
+                    f"overhead: alert evaluator costs {frac:.1%} of "
+                    f"gather/scatter throughput (> {ALERTS_MAX_OVERHEAD:.0%})"
+                )
+    return failures
+
+
+def check_alerts_against_baseline(baseline, current, tol):
+    """The ticking/off throughput ratio is a same-host measurement pair,
+    so it compares across hosts directly."""
+    failures = []
+    base = [r for r in baseline if r.get("stage") == "overhead"]
+    cur = [r for r in current if r.get("stage") == "overhead"]
+    if base and cur:
+        fields = [
+            _num(base[0], "off_rows_per_sec", "baseline overhead", failures),
+            _num(base[0], "ticking_rows_per_sec", "baseline overhead", failures),
+            _num(cur[0], "off_rows_per_sec", "overhead", failures),
+            _num(cur[0], "ticking_rows_per_sec", "overhead", failures),
+        ]
+        if not any(v is None for v in fields):
+            b_off, b_on, c_off, c_on = fields
+            b_ratio = b_on / max(b_off, 1e-9)
+            c_ratio = c_on / max(c_off, 1e-9)
+            # Absolute 0.05 headroom: ratios near 1.0 are noisy on small
+            # smoke runs.
+            if c_ratio < (1.0 - tol) * b_ratio - 0.05:
+                failures.append(
+                    f"overhead: ticking/off ratio {c_ratio:.3f} < "
+                    f"{(1.0 - tol) * b_ratio - 0.05:.3f} (baseline {b_ratio:.3f})"
+                )
+    return failures
+
+
 def main():
     args = sys.argv[1:]
     kind = "sync_pipeline"
@@ -411,6 +481,7 @@ def main():
             "serving",
             "substrate",
             "tracing",
+            "alerts",
         ):
             print(__doc__)
             return 2
@@ -431,6 +502,8 @@ def main():
         failures = check_substrate_intra(current)
     elif kind == "tracing":
         failures = check_tracing_intra(current)
+    elif kind == "alerts":
+        failures = check_alerts_intra(current)
     else:
         failures = check_intra_run(current)
     provisional = any(r.get("stage") == "meta" and r.get("provisional") for r in baseline)
@@ -445,6 +518,8 @@ def main():
         failures += check_substrate_against_baseline(baseline, current, tol)
     elif kind == "tracing":
         failures += check_tracing_against_baseline(baseline, current, tol)
+    elif kind == "alerts":
+        failures += check_alerts_against_baseline(baseline, current, tol)
     else:
         failures += check_against_baseline(baseline, current, tol)
 

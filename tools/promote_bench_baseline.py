@@ -48,6 +48,14 @@ Kinds:
       sync-batch bytes identical across sample rates, and the sampled
       overhead_frac <= 0.05;
     - not itself provisional.
+
+  alerts — validates the E15 cluster-health-engine run:
+    - every stage present (pipeline_throughput, overhead, eval_cost,
+      lifecycle, byte_identity);
+    - the pending -> firing lifecycle engaged and was journaled,
+      sync-batch bytes identical with the evaluator off vs ticking, and
+      the evaluator overhead_frac <= 0.01;
+    - not itself provisional.
 """
 
 import json
@@ -62,6 +70,7 @@ from check_bench_regression import (  # noqa: E402
     check_intra_run,
     check_reshard_intra,
     check_serving_intra,
+    check_alerts_intra,
     check_substrate_intra,
     check_tracing_intra,
 )
@@ -98,12 +107,17 @@ def validate_tracing(candidate):
     return check_tracing_intra(candidate)
 
 
+def validate_alerts(candidate):
+    return check_alerts_intra(candidate)
+
+
 VALIDATORS = {
     "sync_pipeline": validate_sync_pipeline,
     "reshard": validate_reshard,
     "serving": validate_serving,
     "substrate": validate_substrate,
     "tracing": validate_tracing,
+    "alerts": validate_alerts,
 }
 
 
